@@ -1,0 +1,68 @@
+//! AMG multigrid-level communication analysis (the paper's §IV-B):
+//! per-level bytes (Fig 2) and source-rank fan-in (Fig 3) on both systems.
+//!
+//! ```bash
+//! cargo run --release --example amg_levels [-- --full]
+//! ```
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::thicket::{stats, Thicket};
+use commscope::util::cli::Args;
+use commscope::util::table::{sci, Align, TextTable};
+
+fn main() {
+    let args = Args::from_env();
+    let opts = if args.has("full") {
+        RunOptions::default()
+    } else {
+        RunOptions::smoke()
+    };
+
+    let mut runs = Vec::new();
+    for (system, scales) in [
+        (SystemId::Dane, vec![64, 256, 512]),
+        (SystemId::Tioga, vec![8, 32, 64]),
+    ] {
+        for nranks in scales {
+            let spec = ExperimentSpec {
+                app: AppKind::Amg2023,
+                system,
+                scaling: Scaling::Weak,
+                nranks,
+            };
+            eprintln!("running {} …", spec.id());
+            runs.push(run_cell(&spec, &opts).expect("cell"));
+        }
+    }
+    let thicket = Thicket::new(runs);
+
+    for system in ["dane", "tioga"] {
+        let group = thicket.filter(&[("system", system)]);
+        let mut t = TextTable::new(&["ranks", "level", "max bytes/proc", "avg src ranks"])
+            .title(&format!(
+                "AMG2023 per-level communication on {} (Figs 2–3)",
+                system
+            ))
+            .align(0, Align::Right);
+        for run in group.by_ranks() {
+            let bytes = stats::amg_per_level(run, |r| r.bytes_sent.max());
+            let srcs = stats::amg_per_level(run, |r| r.src_ranks.avg());
+            for ((level, b), (_, s)) in bytes.iter().zip(&srcs) {
+                t.row(vec![
+                    run.meta["ranks"].clone(),
+                    level.to_string(),
+                    sci(*b),
+                    format!("{:.1}", s),
+                ]);
+            }
+        }
+        println!("{}", t.render());
+    }
+    println!(
+        "Expected shapes (paper §IV-B): fine levels carry the most bytes;\n\
+         on dane the coarse-level source-rank fan-in explodes (>100 at 512\n\
+         ranks, level ≥6) while tioga's stays bounded by balanced coarsening."
+    );
+}

@@ -1,0 +1,177 @@
+//! End-to-end driver: proves all layers compose on a real (small) workload.
+//!
+//! 1. starts the PJRT compute service over the AOT artifacts
+//!    (`make artifacts` first) — L1 Pallas kernels inside L2 JAX models,
+//!    executed from the Rust hot path;
+//! 2. runs all three benchmark analogs with the **PJRT backend** at the
+//!    canonical tile sizes, on simulated 8-rank jobs, logging solver
+//!    progress (AMG residual curve, Kripke flux norms, Laghos dt curve);
+//! 3. re-runs with the native backend and asserts the numerics agree
+//!    (<1e-3 relative) — L1/L2/L3 consistency;
+//! 4. runs a reduced experiment campaign and renders every paper table
+//!    and figure into `results/e2e/`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_campaign
+//! ```
+
+use commscope::apps::amg::{run_amg, AmgConfig, CoarseStrategy};
+use commscope::apps::common::ComputeBackend;
+use commscope::apps::kripke::{run_kripke, KripkeConfig};
+use commscope::apps::laghos::{run_laghos, LaghosConfig};
+use commscope::benchpark::runner::RunOptions;
+use commscope::benchpark::system::SystemId;
+use commscope::coordinator::campaign::{run_campaign, CampaignOptions};
+use commscope::coordinator::figures;
+use commscope::mpisim::WorldConfig;
+use commscope::runtime::ComputeService;
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+}
+
+fn main() {
+    let t_start = std::time::Instant::now();
+
+    // ---- 1. PJRT service over the artifacts ------------------------------
+    let svc = match ComputeService::start("artifacts") {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("e2e: artifacts unavailable ({e:#}); run `make artifacts` first");
+            std::process::exit(2);
+        }
+    };
+    let handle = svc.handle();
+    println!(
+        "[1/4] PJRT service up on platform '{}'",
+        handle.platform().unwrap_or_default()
+    );
+
+    let machine = SystemId::Tioga.machine();
+
+    // ---- 2. all three apps through the PJRT backend ----------------------
+    // AMG: canonical 16³ tile per rank, 2×2×2 ranks.
+    let amg_cfg = |backend: ComputeBackend| AmgConfig {
+        pdims: [2, 2, 2],
+        local: [16, 16, 16],
+        niter: 6,
+        exchanges_per_level: 3,
+        strategy: CoarseStrategy::GpuBalanced,
+        backend,
+        seed: 42,
+    };
+    let amg_pjrt = run_amg(
+        WorldConfig::new(8, machine.clone()),
+        &amg_cfg(ComputeBackend::Pjrt(handle.clone())),
+    );
+    println!(
+        "[2/4] AMG (pjrt): residuals {}",
+        amg_pjrt
+            .residuals
+            .iter()
+            .map(|r| format!("{:.3e}", r))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+    assert!(
+        amg_pjrt.residuals.last().unwrap() < &amg_pjrt.residuals[0],
+        "AMG residual must decrease"
+    );
+
+    // Kripke: canonical 8³ zones, 8 groups × 8 dirs.
+    let kripke_cfg = |backend: ComputeBackend| KripkeConfig {
+        niter: 3,
+        ..KripkeConfig::canonical_pjrt([2, 2, 2], backend)
+    };
+    let kripke_pjrt = run_kripke(
+        WorldConfig::new(8, machine.clone()),
+        &kripke_cfg(ComputeBackend::Pjrt(handle.clone())),
+    );
+    println!(
+        "      Kripke (pjrt): ϕ-norms {}",
+        kripke_pjrt
+            .phi_norms
+            .iter()
+            .map(|r| format!("{:.5e}", r))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+
+    // Laghos: canonical 64-element patches (8×8 per rank on a 2×2 grid).
+    let laghos_cfg = |backend: ComputeBackend| LaghosConfig::canonical_pjrt([2, 2], backend);
+    let laghos_pjrt = run_laghos(
+        WorldConfig::new(4, machine.clone()),
+        &laghos_cfg(ComputeBackend::Pjrt(handle.clone())),
+    );
+    println!(
+        "      Laghos (pjrt): dt curve {}",
+        laghos_pjrt
+            .dts
+            .iter()
+            .map(|d| format!("{:.4}", d))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+
+    // ---- 3. native backends must agree -----------------------------------
+    let amg_native = run_amg(
+        WorldConfig::new(8, machine.clone()),
+        &amg_cfg(ComputeBackend::Native),
+    );
+    let kripke_native = run_kripke(
+        WorldConfig::new(8, machine.clone()),
+        &kripke_cfg(ComputeBackend::Native),
+    );
+    let laghos_native = run_laghos(
+        WorldConfig::new(4, machine.clone()),
+        &laghos_cfg(ComputeBackend::Native),
+    );
+    let mut worst: f64 = 0.0;
+    for (a, b) in amg_pjrt.residuals.iter().zip(&amg_native.residuals) {
+        worst = worst.max(rel_diff(*a, *b));
+    }
+    for (a, b) in kripke_pjrt.phi_norms.iter().zip(&kripke_native.phi_norms) {
+        worst = worst.max(rel_diff(*a, *b));
+    }
+    for (a, b) in laghos_pjrt.dts.iter().zip(&laghos_native.dts) {
+        worst = worst.max(rel_diff(*a, *b));
+    }
+    println!(
+        "[3/4] PJRT vs native agreement: worst relative diff {:.3e} (f32 artifacts vs f64 native)",
+        worst
+    );
+    assert!(worst < 1e-3, "backends diverged: {}", worst);
+
+    // ---- 4. reduced campaign + all figures --------------------------------
+    let mut opts = CampaignOptions::new("results/e2e");
+    opts.run = RunOptions::smoke();
+    opts.max_ranks = Some(128);
+    opts.verbose = true;
+    let thicket = run_campaign(&opts, true).expect("campaign");
+    let dir = std::path::Path::new("results/e2e");
+    let mut report = String::new();
+    report.push_str(&figures::table1());
+    report.push_str(&figures::table2());
+    report.push_str(&figures::table3());
+    report.push_str(&figures::table4(&thicket));
+    for f in [
+        figures::fig1(&thicket, Some(dir)).unwrap(),
+        figures::fig2(&thicket, Some(dir)).unwrap(),
+        figures::fig3(&thicket, Some(dir)).unwrap(),
+        figures::fig4(&thicket, Some(dir)).unwrap(),
+        figures::fig5(&thicket, Some(dir)).unwrap(),
+        figures::fig6(&thicket, Some(dir)).unwrap(),
+    ] {
+        report.push_str(&f);
+    }
+    std::fs::write(dir.join("report.txt"), &report).unwrap();
+    println!(
+        "[4/4] campaign: {} profiles, report at results/e2e/report.txt",
+        thicket.len()
+    );
+    println!(
+        "e2e OK — full stack (Pallas→JAX→HLO→PJRT→Rust coordinator→Caliper→\n\
+         Benchpark→Thicket) composed in {:.1}s",
+        t_start.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,76 @@
+//! Kripke sweep-region study (the paper's §IV-A): run the weak-scaling
+//! series on both machine models at reduced size and show how `solve`
+//! and `sweep_comm` times evolve — the content of Fig 1.
+//!
+//! ```bash
+//! cargo run --release --example kripke_sweep_study [-- --full]
+//! ```
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::thicket::{stats, Thicket};
+use commscope::util::cli::Args;
+use commscope::util::table::{Align, TextTable};
+
+fn main() {
+    let args = Args::from_env();
+    let opts = if args.has("full") {
+        RunOptions::default()
+    } else {
+        RunOptions::smoke()
+    };
+
+    let mut runs = Vec::new();
+    for system in [SystemId::Dane, SystemId::Tioga] {
+        let scales = if system == SystemId::Dane {
+            [64, 128, 256, 512]
+        } else {
+            [8, 16, 32, 64]
+        };
+        for nranks in scales {
+            let spec = ExperimentSpec {
+                app: AppKind::Kripke,
+                system,
+                scaling: Scaling::Weak,
+                nranks,
+            };
+            eprintln!("running {} …", spec.id());
+            runs.push(run_cell(&spec, &opts).expect("cell"));
+        }
+    }
+    let thicket = Thicket::new(runs);
+
+    for system in ["dane", "tioga"] {
+        let group = thicket.filter(&[("system", system)]);
+        let mut t = TextTable::new(&[
+            "ranks",
+            "main (s)",
+            "solve (s)",
+            "sweep_comm (s)",
+            "comm/main %",
+        ])
+        .title(&format!(
+            "Kripke weak scaling on {} — avg time per rank (Fig 1)",
+            system
+        ))
+        .align(0, Align::Right);
+        for run in group.by_ranks() {
+            let main = stats::region_time_avg(run, "main").unwrap_or(0.0);
+            let solve = stats::region_time_avg(run, "solve").unwrap_or(0.0);
+            let comm = stats::region_time_avg(run, "sweep_comm").unwrap_or(0.0);
+            t.row(vec![
+                run.meta["ranks"].clone(),
+                format!("{:.4}", main),
+                format!("{:.4}", solve),
+                format!("{:.4}", comm),
+                format!("{:.1}", 100.0 * comm / main.max(1e-12)),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!(
+        "Expected shapes (paper §IV-A): solve dominates; the sweep_comm share\n\
+         of main is higher on Dane (CPU) than on Tioga (GPU)."
+    );
+}

@@ -1,0 +1,2 @@
+# Build-time compile path (L1 Pallas kernels + L2 JAX models + AOT lowering).
+# Python runs ONCE at `make artifacts`; it is never on the Rust request path.

@@ -1,0 +1,72 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas) → HLO text artifacts.
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` crate) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out ../artifacts
+Writes one `<name>.hlo.txt` per model plus `manifest.json` describing
+input/output shapes for the Rust loader.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, spec in model.CANONICAL.items():
+        lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # Output shapes via abstract eval (stable across jax versions).
+        out_shapes = [
+            shape_entry(s) for s in jax.eval_shape(spec["fn"], *spec["args"])
+        ]
+        manifest[name] = {
+            "file": fname,
+            "inputs": [shape_entry(s) for s in spec["args"]],
+            "outputs": out_shapes,
+        }
+        print(f"  {name}: {len(text)} chars, {len(manifest[name]['inputs'])} in, "
+              f"{len(out_shapes)} out")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    print(f"AOT-lowering {len(model.CANONICAL)} models to {args.out}")
+    lower_all(args.out)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# L1: Pallas kernels (interpret=True — CPU PJRT cannot execute Mosaic
+# custom-calls; see DESIGN.md §Hardware-Adaptation).

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: batched corner-force contraction (Laghos analog).
+
+Laghos' `ForceMult` applies per-element force matrices; the FLOP core is a
+batch of small dense contractions F[e] = B[e]^T · S[e]. The TPU adaptation
+shapes this for the MXU: the pallas_call grid walks element blocks and each
+program instance contracts a (BE, Q, N) × (BE, Q, DIM) block as a batched
+matmul with `jax.lax.dot_general` over the Q (quadrature) dimension —
+exactly the systolic-array-friendly contraction layout.
+
+VMEM per instance (block of BE elements): BE·Q·(N+DIM)·4B + BE·N·DIM·4B.
+For BE=16, Q=N=16, DIM=2: ~20 KiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _force_block_kernel(b_ref, s_ref, o_ref):
+    b = b_ref[...]  # (BE, Q, N)
+    s = s_ref[...]  # (BE, Q, DIM)
+    # F[e,n,d] = sum_q B[e,q,n] * S[e,q,d] — batch dim e, contract q.
+    o_ref[...] = jax.lax.dot_general(
+        b,
+        s,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def corner_forces(bmat, stress, block_e=16):
+    """Pallas-backed corner forces; contract of `ref.corner_forces_ref`.
+
+    bmat: (E, Q, N); stress: (E, Q, DIM) → (E, N, DIM).
+    E must be divisible by block_e (callers use the canonical shapes).
+    """
+    e, q, n = bmat.shape
+    _, _, dim = stress.shape
+    if e % block_e != 0:
+        block_e = e  # single block fallback for odd test sizes
+    grid = (e // block_e,)
+    return pl.pallas_call(
+        _force_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_e, q, dim), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_e, n, dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, n, dim), bmat.dtype),
+        interpret=True,
+    )(bmat, stress)
+
+
+def vmem_footprint_bytes(block_e, q, n, dim, dtype_bytes=4):
+    """Estimated VMEM bytes per program instance (DESIGN.md §Perf)."""
+    return block_e * (q * n + q * dim + n * dim) * dtype_bytes

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for the three Pallas kernels.
+
+These define the numerical schemes of the benchmark analogs; the Pallas
+kernels in this package must agree with them to float tolerance (pytest +
+hypothesis enforce this). The Rust compute backends mirror the same schemes,
+so L1 (Pallas), L2 (JAX model) and L3 (Rust fallback math) are mutually
+consistent.
+"""
+
+import jax.numpy as jnp
+
+
+def jacobi_step_ref(u_halo, f, omega, h2):
+    """Weighted-Jacobi relaxation of the 7-point Poisson stencil.
+
+    The hot loop of the AMG2023 analog's smoother and residual path.
+
+    Args:
+      u_halo: (nx+2, ny+2, nz+2) current iterate including one halo layer
+        (filled by the L3 halo exchange — the paper's MatVecComm region).
+      f: (nx, ny, nz) right-hand side.
+      omega: relaxation weight.
+      h2: grid spacing squared.
+
+    Returns:
+      (nx, ny, nz) updated interior.
+    """
+    c = u_halo[1:-1, 1:-1, 1:-1]
+    nbr = (
+        u_halo[:-2, 1:-1, 1:-1]
+        + u_halo[2:, 1:-1, 1:-1]
+        + u_halo[1:-1, :-2, 1:-1]
+        + u_halo[1:-1, 2:, 1:-1]
+        + u_halo[1:-1, 1:-1, :-2]
+        + u_halo[1:-1, 1:-1, 2:]
+    )
+    jac = (nbr + h2 * f) / 6.0
+    return (1.0 - omega) * c + omega * jac
+
+
+def residual_ref(u_halo, f, h2):
+    """Residual r = f - A u of the 7-point operator (A = -Δ_h)."""
+    c = u_halo[1:-1, 1:-1, 1:-1]
+    nbr = (
+        u_halo[:-2, 1:-1, 1:-1]
+        + u_halo[2:, 1:-1, 1:-1]
+        + u_halo[1:-1, :-2, 1:-1]
+        + u_halo[1:-1, 2:, 1:-1]
+        + u_halo[1:-1, 1:-1, :-2]
+        + u_halo[1:-1, 1:-1, 2:]
+    )
+    au = (6.0 * c - nbr) / h2
+    return f - au
+
+
+def sweep_plane_ref(psi_in_x, psi_in_y, psi_in_z, sigt_plane, q, dx, dy, dz):
+    """Diamond-difference cell solve for one x-plane of the Kripke analog.
+
+    Plane-lagged upwind closure (DESIGN.md §Hardware-Adaptation): the
+    in-plane upwind fluxes (y, z) are taken from the upstream plane's
+    outgoing fluxes, turning the KBA hyperplane recurrence into a dense
+    plane-parallel update suited to a VMEM-resident Pallas block.
+
+    Args:
+      psi_in_x/y/z: (ny, nz, G, D) incoming angular flux through the
+        upstream x/y/z faces.
+      sigt_plane: (ny, nz) total cross-section in this plane.
+      q: scalar isotropic source.
+      dx, dy, dz: cell widths.
+
+    Returns:
+      (psi_out_x, psi_out_y, psi_out_z, phi_plane):
+        outgoing face fluxes, each (ny, nz, G, D), and the plane's scalar
+        flux (ny, nz, G) = mean over directions.
+    """
+    two_dx, two_dy, two_dz = 2.0 / dx, 2.0 / dy, 2.0 / dz
+    sig = sigt_plane[:, :, None, None]
+    num = q + two_dx * psi_in_x + two_dy * psi_in_y + two_dz * psi_in_z
+    den = sig + two_dx + two_dy + two_dz
+    psi = num / den
+    psi_out_x = 2.0 * psi - psi_in_x
+    psi_out_y = 2.0 * psi - psi_in_y
+    psi_out_z = 2.0 * psi - psi_in_z
+    phi = jnp.mean(psi, axis=-1)
+    return psi_out_x, psi_out_y, psi_out_z, phi
+
+
+def corner_forces_ref(bmat, stress):
+    """Batched corner-force contraction of the Laghos analog.
+
+    F[e] = B[e]^T @ stress[e]: per-element gradient-matrix transpose applied
+    to the quadrature-weighted stress, the FLOP-dominant step of Laghos'
+    force evaluation (its `ForceMult`).
+
+    Args:
+      bmat: (E, Q, N) per-element B matrices (Q quadrature points, N dofs).
+      stress: (E, Q, DIM) weighted stress at quadrature points.
+
+    Returns:
+      (E, N, DIM) corner forces.
+    """
+    return jnp.einsum("eqn,eqd->end", bmat, stress)
+
+
+def max_wavespeed_ref(stress):
+    """Max characteristic speed estimate used for the dt reduction."""
+    return jnp.max(jnp.abs(stress))

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: weighted-Jacobi 7-point stencil plane update (AMG).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): hypre's smoother loop is
+re-tiled plane-at-a-time — the pallas_call grid walks the x dimension and
+each program instance updates one (ny, nz) interior plane from the three
+x-planes it depends on. The per-rank AMG tiles are small (16^3..32^3), so
+the whole tile is VMEM-resident (34·34·18·4B ≈ 83 KiB ≪ 16 MiB VMEM) and
+the plane windows are cut with `pl.dynamic_slice` inside the kernel; on a
+real TPU the same structure maps to a double-buffered HBM→VMEM plane
+pipeline via a windowed BlockSpec.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _plane_neighborhood(u3):
+    """Split a (3, ny+2, nz+2) window into center and 6-neighbor sum."""
+    lo = u3[0, 1:-1, 1:-1]
+    c = u3[1, 1:-1, 1:-1]
+    hi = u3[2, 1:-1, 1:-1]
+    north = u3[1, :-2, 1:-1]
+    south = u3[1, 2:, 1:-1]
+    west = u3[1, 1:-1, :-2]
+    east = u3[1, 1:-1, 2:]
+    return c, lo + hi + north + south + west + east
+
+
+def _jacobi_plane_kernel(u_ref, f_ref, o_ref, *, omega, h2):
+    i = pl.program_id(0)
+    u3 = pl.load(u_ref, (pl.ds(i, 3), slice(None), slice(None)))
+    fpl = pl.load(f_ref, (pl.ds(i, 1), slice(None), slice(None)))[0]
+    c, nbr = _plane_neighborhood(u3)
+    jac = (nbr + h2 * fpl) / 6.0
+    out = (1.0 - omega) * c + omega * jac
+    pl.store(o_ref, (pl.ds(i, 1), slice(None), slice(None)), out[None])
+
+
+def _residual_plane_kernel(u_ref, f_ref, o_ref, *, h2):
+    i = pl.program_id(0)
+    u3 = pl.load(u_ref, (pl.ds(i, 3), slice(None), slice(None)))
+    fpl = pl.load(f_ref, (pl.ds(i, 1), slice(None), slice(None)))[0]
+    c, nbr = _plane_neighborhood(u3)
+    out = fpl - (6.0 * c - nbr) / h2
+    pl.store(o_ref, (pl.ds(i, 1), slice(None), slice(None)), out[None])
+
+
+def _plane_call(kernel, u_halo, f):
+    nx, ny, nz = f.shape
+    whole_u = pl.BlockSpec(u_halo.shape, lambda i: (0, 0, 0))
+    whole_f = pl.BlockSpec(f.shape, lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nx,),
+        in_specs=[whole_u, whole_f],
+        out_specs=pl.BlockSpec((nx, ny, nz), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nz), u_halo.dtype),
+        interpret=True,
+    )(u_halo, f)
+
+
+def jacobi_step(u_halo, f, omega=0.8, h2=1.0):
+    """Pallas-backed weighted-Jacobi step; contract of `ref.jacobi_step_ref`.
+
+    u_halo: (nx+2, ny+2, nz+2); f: (nx, ny, nz) → (nx, ny, nz).
+    """
+    return _plane_call(
+        functools.partial(_jacobi_plane_kernel, omega=omega, h2=h2), u_halo, f
+    )
+
+
+def residual(u_halo, f, h2=1.0):
+    """Pallas-backed residual r = f - A u; contract of `ref.residual_ref`."""
+    return _plane_call(functools.partial(_residual_plane_kernel, h2=h2), u_halo, f)
+
+
+def vmem_footprint_bytes(nx, ny, nz, dtype_bytes=4):
+    """Estimated VMEM bytes per program instance (DESIGN.md §Perf):
+    full tile + RHS + output resident."""
+    u = (nx + 2) * (ny + 2) * (nz + 2) * dtype_bytes
+    f = nx * ny * nz * dtype_bytes
+    return u + 2 * f

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: diamond-difference plane solve (Kripke analog).
+
+The Kripke sweep's hot spot solves every cell of a wavefront for all
+(group, direction) pairs. GPU Kripke tiles this over threadblocks; the TPU
+adaptation (DESIGN.md §Hardware-Adaptation) processes one full (ny, nz)
+plane per program instance with the (G, D) lanes vectorized — the natural
+VPU/MXU-friendly layout — using the plane-lagged upwind closure defined by
+`ref.sweep_plane_ref`. The x recurrence lives one level up in the L2 model
+(`model.kripke_sweep_local`, a lax.scan), mirroring how the real code walks
+hyperplanes.
+
+VMEM per instance: 4 face-flux blocks + σ_t plane + output, i.e.
+~5·ny·nz·G·D·4B. For the canonical (8, 8, 8, 8) configuration that is
+~655 KiB — VMEM-resident with room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sweep_plane_kernel(inx_ref, iny_ref, inz_ref, sig_ref, outx_ref, outy_ref, outz_ref, phi_ref, *, q, dx, dy, dz):
+    two_dx, two_dy, two_dz = 2.0 / dx, 2.0 / dy, 2.0 / dz
+    psi_in_x = inx_ref[...]
+    psi_in_y = iny_ref[...]
+    psi_in_z = inz_ref[...]
+    sig = sig_ref[...][:, :, None, None]
+    num = q + two_dx * psi_in_x + two_dy * psi_in_y + two_dz * psi_in_z
+    den = sig + two_dx + two_dy + two_dz
+    psi = num / den
+    outx_ref[...] = 2.0 * psi - psi_in_x
+    outy_ref[...] = 2.0 * psi - psi_in_y
+    outz_ref[...] = 2.0 * psi - psi_in_z
+    phi_ref[...] = jnp.mean(psi, axis=-1)
+
+
+def sweep_plane(psi_in_x, psi_in_y, psi_in_z, sigt_plane, q=1.0, dx=1.0, dy=1.0, dz=1.0):
+    """Pallas-backed plane solve; contract of `ref.sweep_plane_ref`.
+
+    psi_in_*: (ny, nz, G, D); sigt_plane: (ny, nz).
+    Returns (psi_out_x, psi_out_y, psi_out_z, phi) with phi (ny, nz, G).
+    """
+    ny, nz, g, d = psi_in_x.shape
+    dt = psi_in_x.dtype
+    kernel = functools.partial(_sweep_plane_kernel, q=q, dx=dx, dy=dy, dz=dz)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((ny, nz, g, d), dt),
+            jax.ShapeDtypeStruct((ny, nz, g, d), dt),
+            jax.ShapeDtypeStruct((ny, nz, g, d), dt),
+            jax.ShapeDtypeStruct((ny, nz, g), dt),
+        ),
+        interpret=True,
+    )(psi_in_x, psi_in_y, psi_in_z, sigt_plane)
+
+
+def vmem_footprint_bytes(ny, nz, g, d, dtype_bytes=4):
+    """Estimated VMEM bytes per program instance (DESIGN.md §Perf)."""
+    flux = ny * nz * g * d * dtype_bytes
+    return 6 * flux + ny * nz * dtype_bytes + ny * nz * g * dtype_bytes

@@ -1,0 +1,120 @@
+"""L2: JAX compute graphs of the three benchmark analogs.
+
+Each function composes the L1 Pallas kernels into the per-rank compute an
+application performs between communication phases. `aot.py` lowers these
+once to HLO text; the Rust coordinator executes them through PJRT on its
+hot path (runtime::executor), so Python never runs at simulation time.
+
+Canonical AOT shapes (kept moderate so interpret-mode Pallas stays fast;
+the Rust fallback backend handles arbitrary sizes with identical schemes):
+
+  amg_jacobi      u_halo (18,18,18) f32, f (16,16,16) f32
+  amg_residual    same
+  kripke_sweep    local zones (8,8,8), G=8, D=8
+  laghos_forces   E=64 elements, Q=16, N=16, DIM=2
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hydro, stencil, sweep
+
+# ---------------------------------------------------------------------------
+# AMG2023 analog: smoother + residual (called per level between MatVecComm
+# halo exchanges).
+# ---------------------------------------------------------------------------
+
+
+def amg_jacobi(u_halo, f):
+    """One weighted-Jacobi sweep (ω = 0.8, unit h). Returns the updated
+    interior; the L3 side re-inserts it and refreshes halos."""
+    return (stencil.jacobi_step(u_halo, f, omega=0.8, h2=1.0),)
+
+
+def amg_residual(u_halo, f):
+    """Residual f - A u plus its squared norm (one fused artifact so the L3
+    CG/V-cycle driver gets both without a second execution)."""
+    r = stencil.residual(u_halo, f, h2=1.0)
+    return r, jnp.sum(r * r)
+
+
+# ---------------------------------------------------------------------------
+# Kripke analog: sweep the local cube for one (octant, groupset, dirset)
+# pipeline step. lax.scan walks x-planes; each step applies the L1 plane
+# kernel with plane-lagged y/z upwind closure.
+# ---------------------------------------------------------------------------
+
+
+def kripke_sweep_local(psi_bc_x, psi_bc_y, psi_bc_z, sigt):
+    """Sweep the local subdomain.
+
+    Args:
+      psi_bc_x: (ny, nz, G, D) incoming x-face flux (from the upstream rank).
+      psi_bc_y: (ny, nz, G, D) incoming y-face flux, plane-lagged layout.
+      psi_bc_z: (ny, nz, G, D) incoming z-face flux, plane-lagged layout.
+      sigt: (nx, ny, nz) total cross-section.
+
+    Returns:
+      (psi_out_x, psi_out_y, psi_out_z, phi):
+        outgoing face fluxes (ny, nz, G, D) for the three downstream ranks
+        and the local scalar flux (nx, ny, nz, G).
+    """
+
+    def step(carry, sig_plane):
+        px, py, pz = carry
+        ox, oy, oz, phi = sweep.sweep_plane(px, py, pz, sig_plane)
+        return (ox, oy, oz), phi
+
+    (ox, oy, oz), phis = jax.lax.scan(step, (psi_bc_x, psi_bc_y, psi_bc_z), sigt)
+    return ox, oy, oz, phis
+
+
+# ---------------------------------------------------------------------------
+# Laghos analog: corner forces + wave-speed estimate for the dt reduction.
+# ---------------------------------------------------------------------------
+
+
+def laghos_forces(bmat, stress):
+    """Per-element corner forces and the local max wave speed (the value the
+    timestep loop all-reduces — the paper's Reduction phase in Fig 4)."""
+    forces = hydro.corner_forces(bmat, stress)
+    wavespeed = jnp.max(jnp.abs(stress))
+    return forces, wavespeed
+
+
+# ---------------------------------------------------------------------------
+# Canonical example inputs for AOT lowering.
+# ---------------------------------------------------------------------------
+
+CANONICAL = {
+    "amg_jacobi": dict(
+        fn=amg_jacobi,
+        args=(
+            jax.ShapeDtypeStruct((18, 18, 18), jnp.float32),
+            jax.ShapeDtypeStruct((16, 16, 16), jnp.float32),
+        ),
+    ),
+    "amg_residual": dict(
+        fn=amg_residual,
+        args=(
+            jax.ShapeDtypeStruct((18, 18, 18), jnp.float32),
+            jax.ShapeDtypeStruct((16, 16, 16), jnp.float32),
+        ),
+    ),
+    "kripke_sweep": dict(
+        fn=kripke_sweep_local,
+        args=(
+            jax.ShapeDtypeStruct((8, 8, 8, 8), jnp.float32),
+            jax.ShapeDtypeStruct((8, 8, 8, 8), jnp.float32),
+            jax.ShapeDtypeStruct((8, 8, 8, 8), jnp.float32),
+            jax.ShapeDtypeStruct((8, 8, 8), jnp.float32),
+        ),
+    ),
+    "laghos_forces": dict(
+        fn=laghos_forces,
+        args=(
+            jax.ShapeDtypeStruct((64, 16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((64, 16, 2), jnp.float32),
+        ),
+    ),
+}

@@ -1,0 +1,74 @@
+"""L1 correctness: Pallas corner-force kernel vs einsum oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import hydro, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_elems(seed, e, q, n, dim):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    b = jax.random.normal(k1, (e, q, n), jnp.float32)
+    s = jax.random.normal(k2, (e, q, dim), jnp.float32)
+    return b, s
+
+
+class TestCornerForces:
+    def test_matches_ref_canonical(self):
+        b, s = rand_elems(0, 64, 16, 16, 2)
+        got = hydro.corner_forces(b, s)
+        want = ref.corner_forces_ref(b, s)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_block(self):
+        b, s = rand_elems(1, 8, 4, 6, 3)
+        got = hydro.corner_forces(b, s, block_e=8)
+        want = ref.corner_forces_ref(b, s)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_non_divisible_block_falls_back(self):
+        b, s = rand_elems(2, 10, 4, 4, 2)
+        got = hydro.corner_forces(b, s, block_e=16)
+        want = ref.corner_forces_ref(b, s)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_identity_bmat(self):
+        # With B = I (Q == N), F = stress.
+        e, q = 4, 6
+        b = jnp.tile(jnp.eye(q, dtype=jnp.float32)[None], (e, 1, 1))
+        s = jax.random.normal(jax.random.PRNGKey(3), (e, q, 2), jnp.float32)
+        got = hydro.corner_forces(b, s, block_e=4)
+        np.testing.assert_allclose(got, s, rtol=1e-6)
+
+    def test_linearity(self):
+        b, s = rand_elems(4, 16, 8, 8, 2)
+        f1 = hydro.corner_forces(b, s)
+        f2 = hydro.corner_forces(b, 2.0 * s)
+        np.testing.assert_allclose(f2, 2.0 * f1, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    e=st.sampled_from([1, 2, 4, 8, 16]),
+    q=st.integers(1, 8),
+    n=st.integers(1, 8),
+    dim=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**16),
+)
+def test_forces_hypothesis(e, q, n, dim, seed):
+    b, s = rand_elems(seed, e, q, n, dim)
+    got = hydro.corner_forces(b, s, block_e=max(1, e // 2))
+    want = ref.corner_forces_ref(b, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_model_laghos_forces_wavespeed():
+    b, s = rand_elems(5, 64, 16, 16, 2)
+    forces, ws = model.laghos_forces(b, s)
+    assert forces.shape == (64, 16, 2)
+    np.testing.assert_allclose(ws, ref.max_wavespeed_ref(s), rtol=1e-6)

@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas stencil kernels vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stencil
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_problem(key, nx, ny, nz, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    u = jax.random.normal(k1, (nx + 2, ny + 2, nz + 2), dtype)
+    f = jax.random.normal(k2, (nx, ny, nz), dtype)
+    return u, f
+
+
+class TestJacobiStep:
+    def test_matches_ref_canonical(self):
+        u, f = rand_problem(0, 16, 16, 16)
+        got = stencil.jacobi_step(u, f, omega=0.8, h2=1.0)
+        want = ref.jacobi_step_ref(u, f, 0.8, 1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_matches_ref_anisotropic_tile(self):
+        u, f = rand_problem(1, 4, 8, 6)
+        got = stencil.jacobi_step(u, f, omega=0.6, h2=0.25)
+        want = ref.jacobi_step_ref(u, f, 0.6, 0.25)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_omega_zero_is_identity(self):
+        u, f = rand_problem(2, 4, 4, 4)
+        got = stencil.jacobi_step(u, f, omega=0.0, h2=1.0)
+        np.testing.assert_allclose(got, u[1:-1, 1:-1, 1:-1], rtol=1e-6)
+
+    def test_constant_field_is_fixed_point(self):
+        # With f = 0, a constant field is a fixed point of the smoother.
+        u = jnp.ones((6, 6, 6), jnp.float32)
+        f = jnp.zeros((4, 4, 4), jnp.float32)
+        got = stencil.jacobi_step(u, f, omega=0.8, h2=1.0)
+        np.testing.assert_allclose(got, jnp.ones((4, 4, 4)), rtol=1e-6)
+
+    def test_float64(self):
+        u, f = rand_problem(3, 4, 4, 4, jnp.float32)
+        u = u.astype(jnp.float64) if jax.config.read("jax_enable_x64") else u
+        got = stencil.jacobi_step(u, f)
+        want = ref.jacobi_step_ref(u, f, 0.8, 1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestResidual:
+    def test_matches_ref(self):
+        u, f = rand_problem(4, 8, 8, 8)
+        got = stencil.residual(u, f, h2=1.0)
+        want = ref.residual_ref(u, f, 1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_residual_for_exact_solution(self):
+        # u = 0 with f = 0 → r = 0.
+        u = jnp.zeros((6, 6, 6), jnp.float32)
+        f = jnp.zeros((4, 4, 4), jnp.float32)
+        got = stencil.residual(u, f)
+        np.testing.assert_allclose(got, 0.0, atol=1e-7)
+
+    def test_smoothing_reduces_residual(self):
+        # One Jacobi sweep on a zero guess must reduce ||r|| for a Poisson
+        # problem with zero BCs.
+        f = jax.random.normal(jax.random.PRNGKey(7), (8, 8, 8), jnp.float32)
+        u = jnp.zeros((10, 10, 10), jnp.float32)
+        r0 = float(jnp.linalg.norm(ref.residual_ref(u, f, 1.0)))
+        unew = ref.jacobi_step_ref(u, f, 0.8, 1.0)
+        u1 = u.at[1:-1, 1:-1, 1:-1].set(unew)
+        r1 = float(jnp.linalg.norm(ref.residual_ref(u1, f, 1.0)))
+        assert r1 < r0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nx=st.integers(2, 6),
+    ny=st.integers(2, 6),
+    nz=st.integers(2, 6),
+    omega=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_jacobi_hypothesis_shapes(nx, ny, nz, omega, seed):
+    u, f = rand_problem(seed, nx, ny, nz)
+    got = stencil.jacobi_step(u, f, omega=omega, h2=1.0)
+    want = ref.jacobi_step_ref(u, f, omega, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    nx=st.integers(2, 5),
+    h2=st.floats(0.01, 4.0),
+    seed=st.integers(0, 2**16),
+)
+def test_residual_hypothesis(nx, h2, seed):
+    u, f = rand_problem(seed, nx, nx, nx)
+    got = stencil.residual(u, f, h2=h2)
+    want = ref.residual_ref(u, f, h2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_is_small():
+    # The canonical tile must fit comfortably in a 16 MiB VMEM budget.
+    assert stencil.vmem_footprint_bytes(32, 32, 32) < 2 << 20

@@ -1,0 +1,39 @@
+//! Bench: regenerate Fig 1 (Kripke avg time/rank per region, Dane & Tioga)
+//! and time the weak-scaling cells.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::figures;
+use commscope::thicket::Thicket;
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    let opts = RunOptions {
+        iter_shrink: 4,
+        size_shrink: 2,
+    };
+    let mut runs = Vec::new();
+    section("fig1: kripke weak-scaling cells");
+    for (system, scales) in [
+        (SystemId::Dane, vec![64usize, 128, 256]),
+        (SystemId::Tioga, vec![8, 16, 32, 64]),
+    ] {
+        for nranks in scales {
+            let spec = ExperimentSpec {
+                app: AppKind::Kripke,
+                system,
+                scaling: Scaling::Weak,
+                nranks,
+            };
+            let mut out = None;
+            bench(&spec.id(), 0, 2, || {
+                out = Some(run_cell(&spec, &opts).expect("cell"));
+            });
+            runs.push(out.unwrap());
+        }
+    }
+    section("fig1: rendered");
+    let t = Thicket::new(runs);
+    println!("{}", figures::fig1(&t, None).unwrap());
+}

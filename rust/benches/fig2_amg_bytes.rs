@@ -1,0 +1,39 @@
+//! Bench: regenerate Fig 2 (AMG bytes sent per process per MG level) and
+//! time the AMG weak-scaling cells.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::figures;
+use commscope::thicket::Thicket;
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    let opts = RunOptions {
+        iter_shrink: 4,
+        size_shrink: 1, // level structure depends on true local size
+    };
+    let mut runs = Vec::new();
+    section("fig2: amg weak-scaling cells");
+    for (system, scales) in [
+        (SystemId::Dane, vec![64usize, 128, 256]),
+        (SystemId::Tioga, vec![8, 16, 32, 64]),
+    ] {
+        for nranks in scales {
+            let spec = ExperimentSpec {
+                app: AppKind::Amg2023,
+                system,
+                scaling: Scaling::Weak,
+                nranks,
+            };
+            let mut out = None;
+            bench(&spec.id(), 0, 2, || {
+                out = Some(run_cell(&spec, &opts).expect("cell"));
+            });
+            runs.push(out.unwrap());
+        }
+    }
+    section("fig2: rendered");
+    let t = Thicket::new(runs);
+    println!("{}", figures::fig2(&t, None).unwrap());
+}

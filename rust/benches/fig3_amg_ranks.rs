@@ -1,0 +1,58 @@
+//! Bench: regenerate Fig 3 (AMG avg source ranks per MG level) — the
+//! coarse-level fan-in contrast between the CPU and GPU coarsening
+//! strategies — and time the cells, including the 512-rank Dane run where
+//! the paper observes >100 source ranks at level 6.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::figures;
+use commscope::thicket::{stats, Thicket};
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    let opts = RunOptions {
+        iter_shrink: 10, // fan-in structure is iteration-invariant
+        size_shrink: 1,
+    };
+    let mut runs = Vec::new();
+    section("fig3: amg cells (incl. dane 512)");
+    for (system, scales) in [
+        (SystemId::Dane, vec![64usize, 256, 512]),
+        (SystemId::Tioga, vec![8, 32, 64]),
+    ] {
+        for nranks in scales {
+            let spec = ExperimentSpec {
+                app: AppKind::Amg2023,
+                system,
+                scaling: Scaling::Weak,
+                nranks,
+            };
+            let mut out = None;
+            bench(&spec.id(), 0, 1, || {
+                out = Some(run_cell(&spec, &opts).expect("cell"));
+            });
+            runs.push(out.unwrap());
+        }
+    }
+
+    // the paper's headline check: >100 source ranks at a deep level, 512p
+    let t = Thicket::new(runs);
+    let dane512 = t.filter(&[("system", "dane"), ("ranks", "512")]);
+    if let Some(run) = dane512.runs.first() {
+        let series = stats::amg_per_level(run, |r| r.src_ranks.max());
+        let deep_max = series
+            .iter()
+            .filter(|(l, _)| *l >= 5)
+            .map(|(_, v)| *v)
+            .fold(0.0f64, f64::max);
+        println!(
+            "\ncheck: dane@512 deep-level max src ranks = {} (paper: >100)  {}",
+            deep_max,
+            if deep_max > 100.0 { "OK" } else { "MISS" }
+        );
+    }
+
+    section("fig3: rendered");
+    println!("{}", figures::fig3(&t, None).unwrap());
+}

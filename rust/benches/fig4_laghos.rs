@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 4 (Laghos avg time/rank per region under strong
+//! scaling on Dane) and time the cells.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::figures;
+use commscope::thicket::Thicket;
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    let opts = RunOptions {
+        iter_shrink: 5,
+        size_shrink: 2,
+    };
+    let mut runs = Vec::new();
+    section("fig4: laghos strong-scaling cells");
+    for nranks in [112usize, 224, 448] {
+        let spec = ExperimentSpec {
+            app: AppKind::Laghos,
+            system: SystemId::Dane,
+            scaling: Scaling::Strong,
+            nranks,
+        };
+        let mut out = None;
+        bench(&spec.id(), 0, 2, || {
+            out = Some(run_cell(&spec, &opts).expect("cell"));
+        });
+        runs.push(out.unwrap());
+    }
+    section("fig4: rendered");
+    let t = Thicket::new(runs);
+    println!("{}", figures::fig4(&t, None).unwrap());
+}

@@ -1,0 +1,82 @@
+//! Bench: regenerate Fig 5 (bytes/sec and messages/sec per process for all
+//! three apps on Dane) and time the cells.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::figures;
+use commscope::thicket::{stats, Thicket};
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    let opts = RunOptions {
+        iter_shrink: 4,
+        size_shrink: 2,
+    };
+    let mut runs = Vec::new();
+    section("fig5: dane cells (3 apps)");
+    for (app, scales) in [
+        (AppKind::Amg2023, vec![64usize, 128, 256]),
+        (AppKind::Kripke, vec![64, 128, 256]),
+        (AppKind::Laghos, vec![112, 224, 448]),
+    ] {
+        for nranks in scales {
+            let spec = ExperimentSpec {
+                app,
+                system: SystemId::Dane,
+                scaling: if app == AppKind::Laghos {
+                    Scaling::Strong
+                } else {
+                    Scaling::Weak
+                },
+                nranks,
+            };
+            let mut out = None;
+            bench(&spec.id(), 0, 1, || {
+                out = Some(run_cell(&spec, &opts).expect("cell"));
+            });
+            runs.push(out.unwrap());
+        }
+    }
+    let t = Thicket::new(runs);
+
+    // headline ordering check: Kripke has the highest bandwidth and the
+    // lowest message rate among the three (paper §V-A).
+    let bw = |app: &str| {
+        let g = t.filter(&[("app", app)]);
+        g.series(stats::bandwidth_per_proc)
+            .first()
+            .map(|p| p.1)
+            .unwrap_or(0.0)
+    };
+    let rate = |app: &str| {
+        let g = t.filter(&[("app", app)]);
+        g.series(stats::message_rate_per_proc)
+            .first()
+            .map(|p| p.1)
+            .unwrap_or(0.0)
+    };
+    println!(
+        "\ncheck: bandwidth kripke {:.2e} > laghos {:.2e} > amg {:.2e}: {}",
+        bw("kripke"),
+        bw("laghos"),
+        bw("amg2023"),
+        if bw("kripke") > bw("laghos") && bw("laghos") > bw("amg2023") {
+            "OK"
+        } else {
+            "PARTIAL"
+        }
+    );
+    println!(
+        "check: message rate kripke {:.2e} is lowest: {}",
+        rate("kripke"),
+        if rate("kripke") < rate("amg2023") && rate("kripke") < rate("laghos") {
+            "OK"
+        } else {
+            "PARTIAL"
+        }
+    );
+
+    section("fig5: rendered");
+    println!("{}", figures::fig5(&t, None).unwrap());
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate Fig 6 (bytes/sec and messages/sec per process for
+//! AMG and Kripke on Tioga) and time the cells.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::figures;
+use commscope::thicket::{stats, Thicket};
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    let opts = RunOptions {
+        iter_shrink: 4,
+        size_shrink: 2,
+    };
+    let mut runs = Vec::new();
+    section("fig6: tioga cells (amg + kripke, 8..64 ranks)");
+    for app in [AppKind::Amg2023, AppKind::Kripke] {
+        for nranks in [8usize, 16, 32, 64] {
+            let spec = ExperimentSpec {
+                app,
+                system: SystemId::Tioga,
+                scaling: Scaling::Weak,
+                nranks,
+            };
+            let mut out = None;
+            bench(&spec.id(), 0, 2, || {
+                out = Some(run_cell(&spec, &opts).expect("cell"));
+            });
+            runs.push(out.unwrap());
+        }
+    }
+    let t = Thicket::new(runs);
+
+    // headline check: Kripke per-process bandwidth *rises* with scale on
+    // Tioga (paper §V-B), unlike the Dane decline.
+    let pts = t
+        .filter(&[("app", "kripke")])
+        .series(stats::bandwidth_per_proc);
+    if pts.len() >= 2 {
+        let rising = pts.last().unwrap().1 > pts.first().unwrap().1;
+        println!(
+            "\ncheck: kripke tioga bandwidth {:.2e} → {:.2e} rising: {}",
+            pts.first().unwrap().1,
+            pts.last().unwrap().1,
+            if rising { "OK" } else { "MISS" }
+        );
+    }
+
+    section("fig6: rendered");
+    println!("{}", figures::fig6(&t, None).unwrap());
+}

@@ -1,0 +1,118 @@
+//! Microbenchmarks of the L3 hot paths (the §Perf targets in DESIGN.md):
+//! p2p matching engine, collective board, comm-profiler hook overhead,
+//! world spawn/teardown, and PJRT artifact execution latency.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use commscope::caliper::Caliper;
+use commscope::mpisim::collectives::ReduceOp;
+use commscope::mpisim::{MachineModel, MpiEvent, MpiHook, World, WorldConfig};
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    section("L3 microbenchmarks");
+
+    // world spawn/teardown, 64 ranks
+    bench("world_spawn_teardown_64r", 1, 5, || {
+        let cfg = WorldConfig::new(64, MachineModel::test_machine());
+        World::run(cfg, |rank| rank.rank)
+    });
+
+    // p2p ping-pong throughput: 2 ranks, 10k messages of 1 KiB
+    bench("p2p_pingpong_2r_10k_1KiB", 1, 5, || {
+        let cfg = WorldConfig::new(2, MachineModel::test_machine());
+        World::run(cfg, |rank| {
+            let world = rank.world();
+            let buf = vec![0u8; 1024];
+            for i in 0..10_000 {
+                if rank.rank == 0 {
+                    rank.send(&buf, 1, i % 32, &world).unwrap();
+                    let _ = rank.recv::<u8>(Some(1), i % 32, &world).unwrap();
+                } else {
+                    let _ = rank.recv::<u8>(Some(0), i % 32, &world).unwrap();
+                    rank.send(&buf, 0, i % 32, &world).unwrap();
+                }
+            }
+        })
+    });
+
+    // fan-in matching stress: 8 senders → 1 receiver, per-source tags
+    bench("p2p_fanin_8to1_8k", 1, 5, || {
+        let cfg = WorldConfig::new(9, MachineModel::test_machine());
+        World::run(cfg, |rank| {
+            let world = rank.world();
+            if rank.rank == 8 {
+                for round in 0..1000 {
+                    for src in 0..8 {
+                        let _ = rank
+                            .recv::<u8>(Some(src), round % 16, &world)
+                            .unwrap();
+                    }
+                }
+            } else {
+                let buf = vec![0u8; 256];
+                for round in 0..1000 {
+                    rank.send(&buf, 8, round % 16, &world).unwrap();
+                }
+            }
+        })
+    });
+
+    // collective board: 64-rank allreduce ×200
+    bench("allreduce_64r_x200", 1, 5, || {
+        let cfg = WorldConfig::new(64, MachineModel::test_machine());
+        World::run(cfg, |rank| {
+            let world = rank.world();
+            let mut acc = 0.0;
+            for _ in 0..200 {
+                acc = rank
+                    .allreduce_f64(&[1.0], ReduceOp::Sum, &world)
+                    .unwrap()[0];
+            }
+            acc
+        })
+    });
+
+    // profiler hook overhead: events into an attached caliper context
+    struct NullHook;
+    impl MpiHook for NullHook {
+        fn on_event(&mut self, _r: usize, _e: &MpiEvent) {}
+    }
+    bench("caliper_hook_1M_events_1r", 1, 5, || {
+        let cfg = WorldConfig::new(1, MachineModel::test_machine());
+        World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            rank.add_hook(Rc::new(RefCell::new(NullHook)));
+            cali.comm_region_begin(rank, "r");
+            let world = rank.world();
+            // self-sends exercise send+recv+hook paths without matching waits
+            let buf = [0u8; 64];
+            for i in 0..500_000 {
+                rank.isend(&buf, 0, i % 8, &world).unwrap();
+                let _ = rank.recv::<u8>(Some(0), i % 8, &world).unwrap();
+            }
+            cali.comm_region_end(rank, "r");
+            cali.finish(rank)
+        })
+    });
+
+    // PJRT artifact execution latency (requires `make artifacts`)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use commscope::runtime::Executor;
+        let exec = Executor::load("artifacts").expect("artifacts");
+        let u = vec![0.5f32; 18 * 18 * 18];
+        let f = vec![0.1f32; 16 * 16 * 16];
+        bench("pjrt_amg_jacobi_16c", 3, 20, || {
+            exec.execute_f32("amg_jacobi", &[&u, &f]).unwrap()
+        });
+        let face = vec![1.0f32; 8 * 8 * 64];
+        let sig = vec![1.0f32; 512];
+        bench("pjrt_kripke_sweep_8c", 3, 20, || {
+            exec.execute_f32("kripke_sweep", &[&face, &face, &face, &sig])
+                .unwrap()
+        });
+    } else {
+        println!("(skipping PJRT microbench: run `make artifacts`)");
+    }
+}

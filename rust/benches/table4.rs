@@ -1,0 +1,49 @@
+//! Bench: regenerate Table IV (total bytes, sends, largest/avg send per
+//! app/system/scale) and time the end-to-end cells.
+//!
+//! Full-fidelity rows come from `repro campaign`; the bench uses reduced
+//! iteration counts so `cargo bench` stays minutes-scale, while keeping
+//! the *message schedule* (send counts per edge) exact for Kripke.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::figures;
+use commscope::thicket::Thicket;
+use commscope::util::benchutil::{bench, section};
+
+fn main() {
+    section("table4: per-cell end-to-end runtimes (reduced iters)");
+    let opts = RunOptions {
+        iter_shrink: 4,
+        size_shrink: 2,
+    };
+    let mut runs = Vec::new();
+    let cells = [
+        (AppKind::Kripke, SystemId::Dane, 64),
+        (AppKind::Kripke, SystemId::Tioga, 8),
+        (AppKind::Amg2023, SystemId::Dane, 64),
+        (AppKind::Amg2023, SystemId::Tioga, 8),
+        (AppKind::Laghos, SystemId::Dane, 112),
+    ];
+    for (app, system, nranks) in cells {
+        let spec = ExperimentSpec {
+            app,
+            system,
+            scaling: if app == AppKind::Laghos {
+                Scaling::Strong
+            } else {
+                Scaling::Weak
+            },
+            nranks,
+        };
+        let mut out = None;
+        bench(&spec.id(), 0, 3, || {
+            out = Some(run_cell(&spec, &opts).expect("cell"));
+        });
+        runs.push(out.unwrap());
+    }
+
+    section("table4: reproduced rows (reduced iters — see repro campaign for full)");
+    println!("{}", figures::table4(&Thicket::new(runs)));
+}

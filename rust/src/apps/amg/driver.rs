@@ -1,0 +1,198 @@
+//! The annotated AMG application: what Benchpark launches.
+
+use super::hierarchy::{CoarseStrategy, Hierarchy};
+use super::matvec::Field;
+use super::solver;
+use crate::apps::common::ComputeBackend;
+use crate::caliper::{Caliper, RankProfile};
+use crate::mpisim::cart::CartComm;
+use crate::mpisim::{World, WorldConfig};
+
+/// Configuration of one AMG run (one cell of the paper's Table III matrix).
+#[derive(Clone)]
+pub struct AmgConfig {
+    /// Process grid (must multiply to the world size).
+    pub pdims: [usize; 3],
+    /// Zones per rank at level 0 (weak scaling: constant per rank).
+    pub local: [usize; 3],
+    /// Number of V-cycles.
+    pub niter: usize,
+    /// Matvec exchanges per level per cycle (pre-smooth, residual,
+    /// post-smooth = 3, hypre-like).
+    pub exchanges_per_level: usize,
+    /// Coarse-level strategy: CPU-naive (Dane) or GPU-balanced (Tioga).
+    pub strategy: CoarseStrategy,
+    /// Numerics engine for the level-0 smoother.
+    pub backend: ComputeBackend,
+    /// Seed for the RHS workload.
+    pub seed: u64,
+}
+
+impl AmgConfig {
+    /// The paper's configuration for a given system/scale (Table III):
+    /// 32×32×16 zones per rank, 20 V-cycles, 3 exchanges per level.
+    pub fn paper(pdims: [usize; 3], strategy: CoarseStrategy) -> AmgConfig {
+        AmgConfig {
+            pdims,
+            local: [32, 32, 16],
+            niter: 20,
+            exchanges_per_level: 3,
+            strategy,
+            backend: ComputeBackend::Native,
+            seed: 20230717,
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.pdims.iter().product()
+    }
+}
+
+/// Result of one run: per-rank profiles plus solver diagnostics.
+pub struct AmgResult {
+    pub profiles: Vec<RankProfile>,
+    /// Global residual norm after each V-cycle (rank-0 view).
+    pub residuals: Vec<f64>,
+    pub n_levels: usize,
+}
+
+/// Run the AMG analog on a world. The caller supplies the `WorldConfig`
+/// (machine model, size = pdims product).
+pub fn run_amg(world: WorldConfig, cfg: &AmgConfig) -> AmgResult {
+    assert_eq!(world.size, cfg.nranks(), "world size vs pdims mismatch");
+    let results = World::run(world, |rank| {
+        let cali = Caliper::attach(rank);
+        let cart = CartComm::new(
+            rank.world(),
+            &[cfg.pdims[0], cfg.pdims[1], cfg.pdims[2]],
+            &[false, false, false],
+        )
+        .expect("cart");
+        let hier = Hierarchy::build(rank.rank, cfg.pdims, cfg.local, cfg.strategy);
+        let mut field = Field::new(cfg.local, cfg.seed ^ (rank.rank as u64) << 20);
+        let mut residuals = Vec::with_capacity(cfg.niter);
+
+        cali.begin(rank, "main");
+        solver::setup_phase(rank, &cali, &cart, &hier).expect("setup");
+        cali.begin(rank, "solve");
+        for _it in 0..cfg.niter {
+            solver::vcycle(
+                rank,
+                &cali,
+                &cart,
+                &hier,
+                &mut field,
+                &cfg.backend,
+                cfg.exchanges_per_level,
+            )
+            .expect("vcycle");
+            solver::coarse_gather(rank, &cali, &cart, &hier).expect("coarse gather");
+            let r = solver::global_residual(rank, &cali, &cart, &field).expect("residual");
+            residuals.push(r);
+        }
+        cali.end(rank, "solve");
+        cali.end(rank, "main");
+        (cali.finish(rank), residuals, hier.n_levels())
+    });
+
+    let mut profiles = Vec::with_capacity(results.len());
+    let mut residuals = Vec::new();
+    let mut n_levels = 0;
+    for (i, (p, r, l)) in results.into_iter().enumerate() {
+        profiles.push(p);
+        if i == 0 {
+            residuals = r;
+            n_levels = l;
+        }
+    }
+    AmgResult {
+        profiles,
+        residuals,
+        n_levels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caliper::aggregate::{aggregate, check_conservation};
+    use crate::mpisim::MachineModel;
+    use std::collections::BTreeMap;
+
+    fn tiny_cfg(strategy: CoarseStrategy) -> AmgConfig {
+        AmgConfig {
+            pdims: [2, 2, 2],
+            local: [8, 8, 8],
+            niter: 3,
+            exchanges_per_level: 3,
+            strategy,
+            backend: ComputeBackend::Native,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn residual_decreases_and_traffic_conserves() {
+        let cfg = tiny_cfg(CoarseStrategy::CpuNaive);
+        let world = WorldConfig::new(8, MachineModel::test_machine());
+        let res = run_amg(world, &cfg);
+        assert_eq!(res.profiles.len(), 8);
+        assert!(res.residuals.windows(2).all(|w| w[1] <= w[0] * 1.0001),
+            "residuals not monotone: {:?}", res.residuals);
+        assert!(res.residuals.last().unwrap() < &res.residuals[0]);
+        check_conservation(&res.profiles).unwrap();
+    }
+
+    #[test]
+    fn regions_present_per_level() {
+        let cfg = tiny_cfg(CoarseStrategy::CpuNaive);
+        let world = WorldConfig::new(8, MachineModel::test_machine());
+        let res = run_amg(world, &cfg);
+        let run = aggregate(BTreeMap::new(), &res.profiles);
+        assert!(run.region("matvec_comm_level_0").is_some());
+        assert!(run.region("setup_comm_level_0").is_some());
+        assert!(run.region("residual_norm").is_some());
+        let levels = run.regions_with_prefix("matvec_comm_level_");
+        assert_eq!(levels.len(), res.n_levels);
+        // level 0 carries more bytes than the coarsest level (Fig 2 shape)
+        let l0 = run.region("matvec_comm_level_0").unwrap().1;
+        let last = levels.last().unwrap().1;
+        assert!(l0.bytes_sent.total() > last.bytes_sent.total());
+    }
+
+    #[test]
+    fn gpu_variant_runs_and_restricts() {
+        let cfg = AmgConfig {
+            pdims: [2, 2, 2],
+            local: [16, 16, 16],
+            niter: 2,
+            exchanges_per_level: 3,
+            strategy: CoarseStrategy::GpuBalanced,
+            backend: ComputeBackend::Native,
+            seed: 9,
+        };
+        let world = WorldConfig::new(8, MachineModel::test_machine());
+        let res = run_amg(world, &cfg);
+        check_conservation(&res.profiles).unwrap();
+        let run = aggregate(BTreeMap::new(), &res.profiles);
+        // thinning must produce at least one restriction region
+        assert!(
+            !run.regions_with_prefix("restrict_level_").is_empty(),
+            "regions: {:?}",
+            run.regions.keys().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn deterministic_profiles() {
+        let cfg = tiny_cfg(CoarseStrategy::CpuNaive);
+        let run = |c: &AmgConfig| {
+            let world = WorldConfig::new(8, MachineModel::test_machine());
+            let res = run_amg(world, c);
+            aggregate(BTreeMap::new(), &res.profiles)
+                .to_json()
+                .to_string_pretty()
+        };
+        assert_eq!(run(&cfg), run(&cfg));
+    }
+}

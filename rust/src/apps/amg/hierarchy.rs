@@ -1,0 +1,459 @@
+//! Multigrid level schedule: who owns what at each level, who talks to
+//! whom, and how big the messages are.
+//!
+//! Geometric coarsening by 2 per dimension per level. Two strategies mirror
+//! the paper's CPU/GPU contrast:
+//!
+//! - [`CoarseStrategy::CpuNaive`] (hypre-on-Dane-like): every rank stays
+//!   active on every level, local blocks shrink toward 1 zone, and the
+//!   effective stencil reach (in rank units) grows with the level as
+//!   Galerkin products densify — so coarse levels couple each rank to a
+//!   rapidly growing neighbor ball (the paper's "suboptimal coarsening …
+//!   coarse problem distributed across more ranks than necessary").
+//! - [`CoarseStrategy::GpuBalanced`] (Tioga-like): stencil reach is held at
+//!   1 by aggressive interpolation truncation, and once a local dimension
+//!   would fall below a threshold the level is re-aggregated onto a thinned
+//!   process grid (every other rank per halved dimension), keeping coarse
+//!   communication compact and balanced.
+
+use crate::mpisim::cart::CartComm;
+
+/// Coarse-level handling strategy (the CPU/GPU contrast of §IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoarseStrategy {
+    CpuNaive,
+    GpuBalanced,
+}
+
+/// One level of the hierarchy, from one rank's perspective.
+#[derive(Debug, Clone)]
+pub struct LevelSpec {
+    pub level: usize,
+    /// Does this rank own zones at this level?
+    pub active: bool,
+    /// Owned zones (per dimension) when active.
+    pub local: [usize; 3],
+    /// Active process grid at this level.
+    pub active_pdims: [usize; 3],
+    /// Halo-exchange partners: world ranks, deduplicated, sorted.
+    pub partners: Vec<usize>,
+    /// Per-partner halo message bytes for one matvec exchange.
+    pub halo_bytes: usize,
+    /// Setup-phase (interpolation-row) message bytes per partner.
+    pub setup_bytes: usize,
+    /// Average stencil size (matrix row length) — grows with level under
+    /// Galerkin coarsening; drives setup message sizes.
+    pub stencil: usize,
+    /// Restriction target (world rank) when this rank deactivates at the
+    /// next level; `None` if it stays active or is already inactive.
+    pub restrict_to: Option<usize>,
+    /// Ranks that restrict onto this rank at the next level.
+    pub restrict_from: Vec<usize>,
+}
+
+/// The whole schedule for one rank.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub levels: Vec<LevelSpec>,
+    pub strategy: CoarseStrategy,
+}
+
+/// Chebyshev-ball neighbors of `coords` within `reach` on `pdims`,
+/// restricted to ranks active at this level (stride-based activity).
+fn ball_partners(
+    coords: &[usize; 3],
+    pdims: &[usize; 3],
+    reach: usize,
+    stride: usize,
+) -> Vec<usize> {
+    let mut out = Vec::new();
+    let r = reach as i64;
+    for dx in -r..=r {
+        for dy in -r..=r {
+            for dz in -r..=r {
+                if dx == 0 && dy == 0 && dz == 0 {
+                    continue;
+                }
+                let nx = coords[0] as i64 + dx * stride as i64;
+                let ny = coords[1] as i64 + dy * stride as i64;
+                let nz = coords[2] as i64 + dz * stride as i64;
+                if nx < 0
+                    || ny < 0
+                    || nz < 0
+                    || nx >= pdims[0] as i64
+                    || ny >= pdims[1] as i64
+                    || nz >= pdims[2] as i64
+                {
+                    continue;
+                }
+                out.push(CartComm::coords_to_rank(
+                    &[nx as usize, ny as usize, nz as usize],
+                    pdims,
+                ));
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Face neighbors only (7-point stencil), among active ranks at `stride`.
+fn face_partners(coords: &[usize; 3], pdims: &[usize; 3], stride: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    for d in 0..3 {
+        for s in [-1i64, 1] {
+            let mut c = [coords[0] as i64, coords[1] as i64, coords[2] as i64];
+            c[d] += s * stride as i64;
+            if c[d] >= 0 && c[d] < pdims[d] as i64 {
+                out.push(CartComm::coords_to_rank(
+                    &[c[0] as usize, c[1] as usize, c[2] as usize],
+                    pdims,
+                ));
+            }
+        }
+    }
+    out
+}
+
+impl Hierarchy {
+    /// Build the schedule for `rank` on a `pdims` grid with `local` zones
+    /// per rank at level 0.
+    pub fn build(
+        rank: usize,
+        pdims: [usize; 3],
+        local: [usize; 3],
+        strategy: CoarseStrategy,
+    ) -> Hierarchy {
+        let global = [
+            local[0] * pdims[0],
+            local[1] * pdims[1],
+            local[2] * pdims[2],
+        ];
+        // Coarsen until the global grid collapses: hypre-like depth,
+        // log2 of the *largest* global dimension (the paper's runs show
+        // levels 0..9 at 512 ranks; this yields 0..7 at our sizes, with
+        // depth still growing with scale).
+        let max_dim = *global.iter().max().unwrap();
+        let n_levels = (max_dim as f64).log2().floor() as usize;
+        let n_levels = n_levels.max(2);
+        let coords_v = CartComm::rank_to_coords(rank, &pdims);
+        let coords = [coords_v[0], coords_v[1], coords_v[2]];
+
+        let mut levels = Vec::with_capacity(n_levels);
+        for l in 0..n_levels {
+            let spec = match strategy {
+                CoarseStrategy::CpuNaive => {
+                    Self::cpu_level(l, &coords, &pdims, &local, &global)
+                }
+                CoarseStrategy::GpuBalanced => {
+                    Self::gpu_level(l, rank, &coords, &pdims, &local, &global)
+                }
+            };
+            levels.push(spec);
+        }
+        Hierarchy { levels, strategy }
+    }
+
+    /// CPU (hypre-like): everyone stays active; blocks shrink; stencil
+    /// reach grows once local blocks get small.
+    fn cpu_level(
+        l: usize,
+        coords: &[usize; 3],
+        pdims: &[usize; 3],
+        local0: &[usize; 3],
+        _global: &[usize; 3],
+    ) -> LevelSpec {
+        let local = [
+            (local0[0] >> l).max(1),
+            (local0[1] >> l).max(1),
+            (local0[2] >> l).max(1),
+        ];
+        // Effective coupling reach in rank units: the coarse-grid stencil
+        // spans ~2^l fine zones; once that exceeds the local block, the
+        // matvec couples across multiple ranks per direction. Interpolation
+        // truncation bounds the physical reach at ~2 rank widths (without
+        // it, the coarsest levels would couple all-to-all, which even
+        // hypre's naive path avoids).
+        let min_local0 = *local0.iter().min().unwrap();
+        let span = 1usize << l;
+        let reach = (span / min_local0).clamp(0, 2);
+        // Galerkin stencil densification: 7 → up to 27 → saturate.
+        let stencil = (7 + 4 * l * l).min(81);
+        let partners = if reach == 0 {
+            face_partners(coords, pdims, 1)
+        } else {
+            ball_partners(coords, pdims, reach, 1)
+        };
+        let face = [
+            local[1] * local[2],
+            local[0] * local[2],
+            local[0] * local[1],
+        ];
+        let avg_face = (face[0] + face[1] + face[2]) / 3;
+        LevelSpec {
+            level: l,
+            active: true,
+            local,
+            active_pdims: *pdims,
+            halo_bytes: (avg_face * 8).max(8),
+            setup_bytes: (avg_face * stencil * 8 / 4).max(16),
+            stencil,
+            partners,
+            restrict_to: None,
+            restrict_from: Vec::new(),
+        }
+    }
+
+    /// GPU (Tioga-like): reach stays 1; the active grid thins when blocks
+    /// get small; deactivated ranks restrict onto their parent.
+    fn gpu_level(
+        l: usize,
+        _rank: usize,
+        coords: &[usize; 3],
+        pdims: &[usize; 3],
+        local0: &[usize; 3],
+        _global: &[usize; 3],
+    ) -> LevelSpec {
+        // Thinning schedule: once the would-be local dim < 8 zones, halve
+        // the active grid in that dimension instead of the local block.
+        let mut local = *local0;
+        let mut stride = [1usize; 3];
+        for _step in 0..l {
+            for d in 0..3 {
+                if local[d] / 2 >= 8 || stride[d] * 2 > pdims[d] {
+                    local[d] = (local[d] / 2).max(1);
+                } else {
+                    stride[d] = (stride[d] * 2).min(pdims[d]);
+                }
+            }
+        }
+        let max_stride = *stride.iter().max().unwrap();
+        let active = (0..3).all(|d| coords[d] % stride[d] == 0);
+        let active_pdims = [
+            pdims[0].div_ceil(stride[0]),
+            pdims[1].div_ceil(stride[1]),
+            pdims[2].div_ceil(stride[2]),
+        ];
+        let stencil = (7 + 2 * l).min(27); // truncation keeps rows short
+        let partners = if active {
+            // face neighbors among active ranks (stride steps), same-stride
+            (0..3)
+                .flat_map(|d| {
+                    [-1i64, 1].into_iter().filter_map(move |s| {
+                        let mut c =
+                            [coords[0] as i64, coords[1] as i64, coords[2] as i64];
+                        c[d] += s * stride[d] as i64;
+                        if c[d] >= 0 && c[d] < pdims[d] as i64 {
+                            Some(CartComm::coords_to_rank(
+                                &[c[0] as usize, c[1] as usize, c[2] as usize],
+                                pdims,
+                            ))
+                        } else {
+                            None
+                        }
+                    })
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        // Restriction topology for the *next* level's thinning step.
+        let next = Self::stride_at(local0, pdims, l + 1);
+        let deactivates = active && !(0..3).all(|d| coords[d] % next[d] == 0);
+        let restrict_to = if deactivates {
+            let parent = [
+                coords[0] - coords[0] % next[0],
+                coords[1] - coords[1] % next[1],
+                coords[2] - coords[2] % next[2],
+            ];
+            Some(CartComm::coords_to_rank(&parent, pdims))
+        } else {
+            None
+        };
+        let restrict_from = if active && (0..3).all(|d| coords[d] % next[d] == 0) {
+            // children: ranks in my next-level aggregation block, active now
+            let mut from = Vec::new();
+            for dx in 0..next[0] / stride[0] {
+                for dy in 0..next[1] / stride[1] {
+                    for dz in 0..next[2] / stride[2] {
+                        if dx == 0 && dy == 0 && dz == 0 {
+                            continue;
+                        }
+                        let c = [
+                            coords[0] + dx * stride[0],
+                            coords[1] + dy * stride[1],
+                            coords[2] + dz * stride[2],
+                        ];
+                        if c[0] < pdims[0] && c[1] < pdims[1] && c[2] < pdims[2] {
+                            from.push(CartComm::coords_to_rank(&c, pdims));
+                        }
+                    }
+                }
+            }
+            from
+        } else {
+            Vec::new()
+        };
+        let face = [
+            local[1] * local[2],
+            local[0] * local[2],
+            local[0] * local[1],
+        ];
+        let avg_face = (face[0] + face[1] + face[2]) / 3;
+        let _ = max_stride;
+        LevelSpec {
+            level: l,
+            active,
+            local,
+            active_pdims,
+            halo_bytes: (avg_face * 8).max(8),
+            setup_bytes: (avg_face * stencil * 8 / 4).max(16),
+            stencil,
+            partners,
+            restrict_to,
+            restrict_from,
+        }
+    }
+
+    fn stride_at(local0: &[usize; 3], pdims: &[usize; 3], l: usize) -> [usize; 3] {
+        let mut local = *local0;
+        let mut stride = [1usize; 3];
+        for _ in 0..l {
+            for d in 0..3 {
+                if local[d] / 2 >= 8 || stride[d] * 2 > pdims[d] {
+                    local[d] = (local[d] / 2).max(1);
+                } else {
+                    stride[d] = (stride[d] * 2).min(pdims[d]);
+                }
+            }
+        }
+        stride
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_count_grows_with_scale() {
+        // Dane weak scaling, local 32x32x16
+        let h64 = Hierarchy::build(0, [4, 4, 4], [32, 32, 16], CoarseStrategy::CpuNaive);
+        let h512 = Hierarchy::build(0, [8, 8, 8], [32, 32, 16], CoarseStrategy::CpuNaive);
+        assert!(h512.n_levels() > h64.n_levels(), "{} vs {}", h512.n_levels(), h64.n_levels());
+    }
+
+    #[test]
+    fn cpu_fine_levels_are_face_local() {
+        let h = Hierarchy::build(0, [4, 4, 4], [32, 32, 16], CoarseStrategy::CpuNaive);
+        // corner rank: 3 face partners at level 0
+        assert_eq!(h.levels[0].partners.len(), 3);
+        // interior rank: 6
+        let interior = CartComm::coords_to_rank(&[1, 1, 1], &[4, 4, 4]);
+        let hi = Hierarchy::build(interior, [4, 4, 4], [32, 32, 16], CoarseStrategy::CpuNaive);
+        assert_eq!(hi.levels[0].partners.len(), 6);
+    }
+
+    #[test]
+    fn cpu_coarse_levels_broaden_dramatically() {
+        // 8x8x8 grid (512 ranks): at a deep level an interior rank's
+        // partner count must exceed 100 (the paper's Fig 3 observation).
+        let interior = CartComm::coords_to_rank(&[4, 4, 4], &[8, 8, 8]);
+        let h = Hierarchy::build(interior, [8, 8, 8], [32, 32, 16], CoarseStrategy::CpuNaive);
+        let deep = h.levels.last().unwrap();
+        assert!(
+            deep.partners.len() > 100,
+            "deep-level partners = {}",
+            deep.partners.len()
+        );
+        // and fine levels stay face-local
+        assert!(h.levels[0].partners.len() <= 6);
+    }
+
+    #[test]
+    fn gpu_reach_stays_bounded() {
+        let interior = CartComm::coords_to_rank(&[2, 2, 2], &[4, 4, 4]);
+        let h = Hierarchy::build(interior, [4, 4, 4], [32, 32, 16], CoarseStrategy::GpuBalanced);
+        for lvl in &h.levels {
+            assert!(
+                lvl.partners.len() <= 6,
+                "level {} has {} partners",
+                lvl.level,
+                lvl.partners.len()
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_thinning_deactivates_ranks() {
+        // With local [32,32,16], dims thin when blocks would drop below 8.
+        let n = 4 * 4 * 4;
+        let mut active_last = 0;
+        for r in 0..n {
+            let h = Hierarchy::build(r, [4, 4, 4], [32, 32, 16], CoarseStrategy::GpuBalanced);
+            if h.levels.last().unwrap().active {
+                active_last += 1;
+            }
+        }
+        assert!(active_last < n, "no thinning happened");
+        assert!(active_last >= 1);
+    }
+
+    #[test]
+    fn gpu_restriction_topology_consistent() {
+        // Every restrict_to on level l must appear in the target's
+        // restrict_from on the same level.
+        let pdims = [4, 4, 4];
+        let n = 64;
+        let hs: Vec<Hierarchy> = (0..n)
+            .map(|r| Hierarchy::build(r, pdims, [32, 32, 16], CoarseStrategy::GpuBalanced))
+            .collect();
+        for (r, h) in hs.iter().enumerate() {
+            for lvl in &h.levels {
+                if let Some(target) = lvl.restrict_to {
+                    let tgt_lvl = &hs[target].levels[lvl.level];
+                    assert!(
+                        tgt_lvl.restrict_from.contains(&r),
+                        "rank {} restricts to {} at level {} but is not in its list",
+                        r,
+                        target,
+                        lvl.level
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_shrink_with_level() {
+        let h = Hierarchy::build(0, [4, 4, 4], [32, 32, 16], CoarseStrategy::CpuNaive);
+        assert!(h.levels[0].halo_bytes > h.levels[2].halo_bytes);
+        assert!(h.levels[2].halo_bytes > h.levels.last().unwrap().halo_bytes);
+    }
+
+    #[test]
+    fn partners_are_symmetric_cpu() {
+        let pdims = [4, 2, 2];
+        let hs: Vec<Hierarchy> = (0..16)
+            .map(|r| Hierarchy::build(r, pdims, [16, 16, 16], CoarseStrategy::CpuNaive))
+            .collect();
+        for (r, h) in hs.iter().enumerate() {
+            for lvl in &h.levels {
+                for &p in &lvl.partners {
+                    assert!(
+                        hs[p].levels[lvl.level].partners.contains(&r),
+                        "asymmetric partners at level {}: {} -> {}",
+                        lvl.level,
+                        r,
+                        p
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! AMG2023 analog: a structured-grid algebraic-multigrid-style solver whose
+//! communication structure reproduces the phenomena the paper reports for
+//! AMG2023/hypre (§IV-B):
+//!
+//! - a level hierarchy that deepens with scale (more levels on larger runs),
+//! - per-level `MatVecComm` halo exchanges (the paper's annotated region),
+//! - fine levels carrying most of the data volume (Fig 2),
+//! - communication partners that stay local at fine levels and broaden
+//!   dramatically at coarse levels on the CPU variant (Fig 3 / §IV-B.5:
+//!   >100 source ranks at level 6 for 512 processes) because coarse grids
+//!   stay distributed across all ranks while Galerkin stencils densify,
+//! - a GPU variant with balanced coarse-level aggregation and bounded
+//!   stencil reach, reproducing Tioga's controlled growth (§IV-B.6).
+//!
+//! Module map: [`hierarchy`] builds the level schedule, [`matvec`] performs
+//! the halo exchanges + smoother application on real level-0 data (native
+//! or PJRT backend), [`solver`] runs setup + V-cycles, [`driver`] wires the
+//! Caliper annotations and produces the run profile.
+
+pub mod driver;
+pub mod hierarchy;
+pub mod matvec;
+pub mod solver;
+
+pub use driver::{run_amg, AmgConfig, AmgResult};
+pub use hierarchy::{CoarseStrategy, Hierarchy, LevelSpec};

@@ -1,0 +1,215 @@
+//! V-cycle orchestration: the annotated communication phases of one AMG
+//! solve, mirroring the structure the paper profiles (§IV-B):
+//!
+//! ```text
+//! main
+//! ├── setup                      (interpolation construction)
+//! │   └── setup_comm_level_{l}   [comm]  P-row exchanges, per level
+//! └── solve                      (V-cycles)
+//!     ├── matvec_comm_level_{l}  [comm]  halo exchanges, per level
+//!     ├── smooth_level_{l}               smoother compute
+//!     ├── restrict_level_{l}     [comm]  GPU-variant re-aggregation
+//!     └── residual_norm          [comm]  allreduce per cycle
+//! ```
+//!
+//! Level 0 moves real field data (native or PJRT smoother); coarser levels
+//! exchange synthetic payloads with the sizes/partners dictated by the
+//! [`super::hierarchy`] schedule — the paper's metrics (message counts,
+//! bytes, src/dst ranks, times) are produced by the real traffic either way.
+
+use super::hierarchy::{Hierarchy, LevelSpec};
+use super::matvec::{self, Field};
+use crate::apps::common::ComputeBackend;
+use crate::caliper::Caliper;
+use crate::mpisim::cart::CartComm;
+use crate::mpisim::collectives::ReduceOp;
+use crate::mpisim::{MpiError, Rank};
+
+/// Tags: level-0 physical faces use 0..6; synthetic level traffic uses
+/// 100·level; restriction uses 9000 + level.
+fn level_tag(level: usize, exchange: usize) -> i32 {
+    (100 * level + 10 * exchange) as i32
+}
+
+/// Exchange synthetic halo payloads with every partner of a level.
+/// Symmetric by construction (partner lists are symmetric), so every isend
+/// pairs with exactly one recv.
+fn synthetic_exchange(
+    rank: &mut Rank,
+    cart: &CartComm,
+    lvl: &LevelSpec,
+    bytes: usize,
+    exchange: usize,
+) -> Result<(), MpiError> {
+    let payload = vec![0u8; bytes];
+    let tag = level_tag(lvl.level, exchange);
+    for &p in &lvl.partners {
+        rank.isend(&payload, p, tag, &cart.comm)?;
+    }
+    for &p in &lvl.partners {
+        let _ = rank.recv::<u8>(Some(p), tag, &cart.comm)?;
+    }
+    Ok(())
+}
+
+/// The setup phase: per-level interpolation-row exchanges. Message sizes
+/// grow with the level's stencil density (Galerkin products), which is
+/// what drives the paper's growing "largest send" with scale (§IV, Table IV).
+pub fn setup_phase(
+    rank: &mut Rank,
+    cali: &Caliper,
+    cart: &CartComm,
+    hier: &Hierarchy,
+) -> Result<(), MpiError> {
+    cali.begin(rank, "setup");
+    for lvl in &hier.levels {
+        if !lvl.active {
+            continue;
+        }
+        let name = format!("setup_comm_level_{}", lvl.level);
+        cali.comm_region_begin(rank, &name);
+        synthetic_exchange(rank, cart, lvl, lvl.setup_bytes, 9)?;
+        cali.comm_region_end(rank, &name);
+        // coarsening arithmetic: ~stencil^2 flops per owned zone
+        let zones: usize = lvl.local.iter().product();
+        rank.compute(
+            zones as f64 * (lvl.stencil * lvl.stencil) as f64 * 0.2,
+            zones as f64 * 8.0 * lvl.stencil as f64,
+        );
+    }
+    cali.end(rank, "setup");
+    Ok(())
+}
+
+/// One V-cycle: down-sweep (smooth + restrict), coarse solve, up-sweep.
+/// Returns the smoother flop count actually spent (for reporting).
+#[allow(clippy::too_many_arguments)]
+pub fn vcycle(
+    rank: &mut Rank,
+    cali: &Caliper,
+    cart: &CartComm,
+    hier: &Hierarchy,
+    field: &mut Field,
+    backend: &ComputeBackend,
+    exchanges_per_level: usize,
+) -> Result<(), MpiError> {
+    for lvl in &hier.levels {
+        if !lvl.active {
+            continue;
+        }
+        let comm_name = format!("matvec_comm_level_{}", lvl.level);
+        let smooth_name = format!("smooth_level_{}", lvl.level);
+        for ex in 0..exchanges_per_level {
+            cali.comm_region_begin(rank, &comm_name);
+            if lvl.level == 0 {
+                // real field halo exchange with the 6 face neighbors
+                matvec::halo_exchange(rank, cart, field, level_tag(0, ex))?;
+            } else {
+                synthetic_exchange(rank, cart, lvl, lvl.halo_bytes, ex)?;
+            }
+            cali.comm_region_end(rank, &comm_name);
+
+            cali.begin(rank, &smooth_name);
+            // Memory traffic of a real SpMV-based smoother: the operator
+            // rows (stencil coefficients) stream from memory along with
+            // the vectors — hypre's smoother is memory-bound on CPUs.
+            let zones: usize = lvl.local.iter().product();
+            let smoother_bytes = zones as f64 * 8.0 * (lvl.stencil as f64 + 4.0);
+            if lvl.level == 0 {
+                let (flops, _pjrt) = matvec::jacobi_step(field, backend);
+                rank.compute(flops, smoother_bytes);
+            } else {
+                rank.compute(zones as f64 * lvl.stencil as f64 * 2.0, smoother_bytes);
+            }
+            cali.end(rank, &smooth_name);
+        }
+        // GPU-variant re-aggregation between this level and the next.
+        if lvl.restrict_to.is_some() || !lvl.restrict_from.is_empty() {
+            let name = format!("restrict_level_{}", lvl.level);
+            cali.comm_region_begin(rank, &name);
+            let zones: usize = lvl.local.iter().product();
+            let bytes = (zones / 8).max(8); // coarse injection payload
+            let payload = vec![0u8; bytes];
+            let tag = 9000 + lvl.level as i32;
+            if let Some(target) = lvl.restrict_to {
+                rank.isend(&payload, target, tag, &cart.comm)?;
+            }
+            let from = lvl.restrict_from.clone();
+            for src in from {
+                let _ = rank.recv::<u8>(Some(src), tag, &cart.comm)?;
+            }
+            cali.comm_region_end(rank, &name);
+        }
+    }
+    Ok(())
+}
+
+/// Coarse-grid gather: hypre's default coarse solve collects the coarsest
+/// level onto one rank. A binomial-tree gather makes mid-tree ranks forward
+/// their accumulated subtree, so the *largest single send* grows ~linearly
+/// with the rank count — exactly the Table IV behaviour (Tioga's largest
+/// send doubles with every process doubling; Dane 512 and Tioga 64 both
+/// peak at ~136 KB in the paper).
+pub fn coarse_gather(
+    rank: &mut Rank,
+    cali: &Caliper,
+    cart: &CartComm,
+    hier: &Hierarchy,
+) -> Result<(), MpiError> {
+    let coarsest = hier.levels.last().expect("levels");
+    // Per-rank coarse payload: owned coarse zones × stencil rows. Ranks
+    // already aggregated away (GPU thinning) contribute only a token.
+    let zones: usize = coarsest.local.iter().product();
+    let own_bytes = if coarsest.active {
+        (zones * coarsest.stencil * 8).max(64)
+    } else {
+        64
+    };
+    let p = cart.comm.size();
+    let me = cart.comm.rank;
+    cali.comm_region_begin(rank, "coarse_gather");
+    let mut acc = own_bytes;
+    let mut round = 0usize;
+    loop {
+        let bit = 1usize << round;
+        if bit >= p {
+            break;
+        }
+        if me & (bit - 1) != 0 {
+            break; // this rank already sent in an earlier round
+        }
+        if me & bit != 0 {
+            // send accumulated subtree to the partner below
+            let dst = me - bit;
+            rank.isend(&vec![0u8; acc], dst, 7000 + round as i32, &cart.comm)?;
+            break;
+        } else {
+            let src = me + bit;
+            if src < p {
+                let (data, _st) = rank.recv::<u8>(Some(src), 7000 + round as i32, &cart.comm)?;
+                acc += data.len();
+            }
+        }
+        round += 1;
+    }
+    // root pays the sequential coarse solve
+    if me == 0 {
+        rank.compute((acc as f64 / 8.0) * 20.0, acc as f64 * 3.0);
+    }
+    cali.comm_region_end(rank, "coarse_gather");
+    Ok(())
+}
+
+/// Residual norm across ranks (level 0, real data).
+pub fn global_residual(
+    rank: &mut Rank,
+    cali: &Caliper,
+    cart: &CartComm,
+    field: &Field,
+) -> Result<f64, MpiError> {
+    cali.comm_region_begin(rank, "residual_norm");
+    let local = matvec::residual_norm2_native(field);
+    let total = rank.allreduce_f64(&[local], ReduceOp::Sum, &cart.comm)?;
+    cali.comm_region_end(rank, "residual_norm");
+    Ok(total[0].sqrt())
+}

@@ -1,0 +1,42 @@
+//! Compute-backend abstraction.
+//!
+//! Applications execute their per-rank compute either through the PJRT
+//! runtime (the AOT-compiled JAX/Pallas artifacts — the canonical tile
+//! sizes) or through native Rust implementations of the *same schemes*
+//! (arbitrary sizes, used for the 512-rank scaling sweeps where invoking
+//! interpret-mode-lowered HLO per rank would dominate wall time).
+//!
+//! Virtual time is **always** charged from the machine cost model — the
+//! simulation models Dane/Tioga, not this container's CPU — so backend
+//! choice changes numerics-provenance only, never simulated timing. The
+//! integration tests assert both backends agree to float tolerance.
+
+use crate::runtime::ComputeHandle;
+
+/// Which engine produces the numbers.
+#[derive(Clone)]
+pub enum ComputeBackend {
+    /// Native Rust implementations (any problem size).
+    Native,
+    /// PJRT execution of `artifacts/*.hlo.txt` (canonical sizes only).
+    Pjrt(ComputeHandle),
+}
+
+impl ComputeBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeBackend::Native => "native",
+            ComputeBackend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, ComputeBackend::Pjrt(_))
+    }
+}
+
+impl std::fmt::Debug for ComputeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ComputeBackend::{}", self.name())
+    }
+}

@@ -1,0 +1,155 @@
+//! 3D block domain decomposition shared by the AMG and Kripke analogs.
+
+use crate::mpisim::cart::CartComm;
+
+/// A global 3D grid split over a `px × py × pz` process grid.
+#[derive(Debug, Clone)]
+pub struct Decomp3D {
+    /// Global zone counts.
+    pub global: [usize; 3],
+    /// Process grid.
+    pub pdims: [usize; 3],
+}
+
+impl Decomp3D {
+    /// Weak-scaling constructor: `local` zones per rank on every rank.
+    pub fn weak(local: [usize; 3], pdims: [usize; 3]) -> Decomp3D {
+        Decomp3D {
+            global: [
+                local[0] * pdims[0],
+                local[1] * pdims[1],
+                local[2] * pdims[2],
+            ],
+            pdims,
+        }
+    }
+
+    /// Strong-scaling constructor: fixed global grid. Global dims must be
+    /// divisible by the process grid (callers choose compatible configs).
+    pub fn strong(global: [usize; 3], pdims: [usize; 3]) -> Decomp3D {
+        for d in 0..3 {
+            assert_eq!(
+                global[d] % pdims[d],
+                0,
+                "global dim {} = {} not divisible by pdims {}",
+                d,
+                global[d],
+                pdims[d]
+            );
+        }
+        Decomp3D { global, pdims }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.pdims.iter().product()
+    }
+
+    /// Local zone counts (uniform blocks).
+    pub fn local(&self) -> [usize; 3] {
+        [
+            self.global[0] / self.pdims[0],
+            self.global[1] / self.pdims[1],
+            self.global[2] / self.pdims[2],
+        ]
+    }
+
+    /// The block owned by cartesian coords.
+    pub fn block(&self, coords: &[usize]) -> BlockDomain {
+        let l = self.local();
+        BlockDomain {
+            origin: [
+                coords[0] * l[0],
+                coords[1] * l[1],
+                coords[2] * l[2],
+            ],
+            extent: l,
+        }
+    }
+
+    /// Face zone counts per dimension: face perpendicular to dim d has
+    /// `local[(d+1)%3] * local[(d+2)%3]` zones.
+    pub fn face_zones(&self, dim: usize) -> usize {
+        let l = self.local();
+        match dim {
+            0 => l[1] * l[2],
+            1 => l[0] * l[2],
+            2 => l[0] * l[1],
+            _ => panic!("dim out of range"),
+        }
+    }
+}
+
+/// One rank's block of the global grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockDomain {
+    pub origin: [usize; 3],
+    pub extent: [usize; 3],
+}
+
+impl BlockDomain {
+    pub fn zones(&self) -> usize {
+        self.extent.iter().product()
+    }
+}
+
+/// Convenience: build the paper's process grids (Table III) for a rank
+/// count, preferring the exact decompositions listed there.
+pub fn paper_pdims(nranks: usize) -> [usize; 3] {
+    let d = CartComm::dims_create(nranks, 3);
+    [d[0], d[1], d[2]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weak_scaling_keeps_local_constant() {
+        let d1 = Decomp3D::weak([16, 32, 32], [4, 4, 4]);
+        let d2 = Decomp3D::weak([16, 32, 32], [8, 8, 8]);
+        assert_eq!(d1.local(), d2.local());
+        assert_eq!(d1.global, [64, 128, 128]);
+        assert_eq!(d2.nranks(), 512);
+    }
+
+    #[test]
+    fn strong_scaling_shrinks_local() {
+        let d = Decomp3D::strong([64, 64, 64], [4, 2, 2]);
+        assert_eq!(d.local(), [16, 32, 32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn strong_scaling_requires_divisibility() {
+        Decomp3D::strong([10, 10, 10], [3, 1, 1]);
+    }
+
+    #[test]
+    fn face_zones() {
+        let d = Decomp3D::weak([16, 32, 32], [2, 2, 2]);
+        assert_eq!(d.face_zones(0), 32 * 32);
+        assert_eq!(d.face_zones(1), 16 * 32);
+        assert_eq!(d.face_zones(2), 16 * 32);
+    }
+
+    #[test]
+    fn blocks_tile_the_domain() {
+        let d = Decomp3D::weak([4, 4, 4], [2, 3, 1]);
+        let mut total = 0;
+        for x in 0..2 {
+            for y in 0..3 {
+                let b = d.block(&[x, y, 0]);
+                assert_eq!(b.extent, [4, 4, 4]);
+                total += b.zones();
+            }
+        }
+        assert_eq!(total, d.global.iter().product::<usize>());
+    }
+
+    #[test]
+    fn paper_pdims_match_table3() {
+        assert_eq!(paper_pdims(64), [4, 4, 4]);
+        assert_eq!(paper_pdims(512), [8, 8, 8]);
+        assert_eq!(paper_pdims(8), [2, 2, 2]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared application substrate: domain decomposition, halo specifications,
+//! and the compute-backend abstraction used by all three benchmarks.
+
+pub mod backend;
+pub mod domain;
+
+pub use backend::ComputeBackend;
+pub use domain::{BlockDomain, Decomp3D};

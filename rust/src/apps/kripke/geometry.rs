@@ -1,0 +1,100 @@
+//! Sweep geometry: octants, group/direction sets, upstream/downstream
+//! neighbor maps on the cartesian process grid.
+
+use crate::mpisim::cart::CartComm;
+
+/// One of the eight sweep octants, identified by its direction signs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Octant {
+    /// +1 = sweeping low→high in that dimension, -1 = high→low.
+    pub sign: [i64; 3],
+}
+
+impl Octant {
+    /// All eight octants in canonical order (z fastest).
+    pub fn all() -> [Octant; 8] {
+        let mut out = [Octant { sign: [1, 1, 1] }; 8];
+        for (i, o) in out.iter_mut().enumerate() {
+            o.sign = [
+                if i & 4 == 0 { 1 } else { -1 },
+                if i & 2 == 0 { 1 } else { -1 },
+                if i & 1 == 0 { 1 } else { -1 },
+            ];
+        }
+        out
+    }
+
+    /// Upstream neighbor in dimension `dim` (whence incident flux comes),
+    /// or `None` at the domain boundary.
+    pub fn upstream(&self, cart: &CartComm, dim: usize) -> Option<usize> {
+        cart.shift(dim, -self.sign[dim])
+    }
+
+    /// Downstream neighbor in dimension `dim` (where outgoing flux goes).
+    pub fn downstream(&self, cart: &CartComm, dim: usize) -> Option<usize> {
+        cart.shift(dim, self.sign[dim])
+    }
+}
+
+/// Message tag for a (octant, groupset, dirset, dim) sweep face.
+pub fn sweep_tag(oct: usize, gs: usize, ds: usize, dim: usize) -> i32 {
+    (((oct * 64 + gs) * 64 + ds) * 3 + dim) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::Comm;
+
+    #[test]
+    fn eight_distinct_octants() {
+        let all = Octant::all();
+        for i in 0..8 {
+            for j in 0..8 {
+                if i != j {
+                    assert_ne!(all[i].sign, all[j].sign);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn upstream_downstream_are_opposite() {
+        let size = 27;
+        let center = CartComm::coords_to_rank(&[1, 1, 1], &[3, 3, 3]);
+        let cart = CartComm::new(Comm::world(center, size), &[3, 3, 3], &[false; 3]).unwrap();
+        for o in Octant::all() {
+            for dim in 0..3 {
+                let up = o.upstream(&cart, dim).unwrap();
+                let down = o.downstream(&cart, dim).unwrap();
+                assert_ne!(up, down);
+            }
+        }
+    }
+
+    #[test]
+    fn corner_rank_has_no_upstream_for_its_octant() {
+        // rank at (0,0,0): for the (+,+,+) octant every upstream is a
+        // boundary.
+        let cart = CartComm::new(Comm::world(0, 8), &[2, 2, 2], &[false; 3]).unwrap();
+        let o = Octant { sign: [1, 1, 1] };
+        for dim in 0..3 {
+            assert!(o.upstream(&cart, dim).is_none());
+            assert!(o.downstream(&cart, dim).is_some());
+        }
+    }
+
+    #[test]
+    fn tags_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for oct in 0..8 {
+            for gs in 0..8 {
+                for ds in 0..4 {
+                    for dim in 0..3 {
+                        assert!(seen.insert(sweep_tag(oct, gs, ds, dim)));
+                    }
+                }
+            }
+        }
+    }
+}

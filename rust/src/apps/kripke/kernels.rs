@@ -1,0 +1,236 @@
+//! Native diamond-difference sweep over the local subdomain — the Rust
+//! mirror of the L2 model `kripke_sweep_local` (a lax.scan over the Pallas
+//! plane kernel with plane-lagged y/z upwind closure). Works in
+//! octant-local coordinates (always sweeping low→high).
+//!
+//! Face layout: all three carried faces are (ny, nz, lanes) row-major —
+//! exactly the artifact's `psi_bc_*` buffers — where `lanes` =
+//! groups_per_groupset × dirs_per_dirset.
+
+/// Deterministic total cross-section field: shared by the native kernel,
+/// the PJRT input builder, and the python tests' mental model.
+#[inline]
+pub fn sigt_at(x: usize, y: usize, z: usize) -> f64 {
+    1.0 + 0.25 * ((x + y + z) % 3) as f64
+}
+
+/// Result of sweeping the local cube for one (octant, groupset, dirset).
+#[derive(Debug, Clone)]
+pub struct SweepOut {
+    /// Outgoing carried faces, each (ny·nz·lanes).
+    pub out_x: Vec<f64>,
+    pub out_y: Vec<f64>,
+    pub out_z: Vec<f64>,
+    /// Σ φ² over the local zones (scalar-flux norm contribution).
+    pub phi_norm2: f64,
+    /// Flop estimate for the cost model.
+    pub flops: f64,
+}
+
+/// Sweep the local cube: `local` = [nx, ny, nz] zones, faces (ny·nz·lanes).
+/// `q` is the isotropic source; dx=dy=dz=1 (unit cells, as the artifact).
+/// Takes the incident faces by value and updates them in place — the
+/// sweep loop is the campaign's wall-clock hot spot, and avoiding the
+/// three face copies per pipeline step is a measured win (§Perf).
+pub fn sweep_local_native(
+    local: [usize; 3],
+    lanes: usize,
+    bc_x: Vec<f64>,
+    bc_y: Vec<f64>,
+    bc_z: Vec<f64>,
+    q: f64,
+) -> SweepOut {
+    let [nx, ny, nz] = local;
+    let fl = ny * nz * lanes;
+    assert_eq!(bc_x.len(), fl, "bc_x length");
+    assert_eq!(bc_y.len(), fl, "bc_y length");
+    assert_eq!(bc_z.len(), fl, "bc_z length");
+    let mut px = bc_x;
+    let mut py = bc_y;
+    let mut pz = bc_z;
+    let mut phi_norm2 = 0.0;
+    // Diamond-difference plane solve, plane-lagged closure (ref.py):
+    //   psi = (q + 2 px + 2 py + 2 pz) / (sigt + 6)
+    //   out_f = 2 psi - in_f
+    // Specialized instantiations for the paper configurations let LLVM
+    // fully unroll the lane loop (lanes = 3 on Dane/Tioga sweeps, 64 on
+    // the canonical PJRT tile).
+    match lanes {
+        3 => sweep_planes::<3>(nx, ny, nz, &mut px, &mut py, &mut pz, q, &mut phi_norm2),
+        64 => sweep_planes::<64>(nx, ny, nz, &mut px, &mut py, &mut pz, q, &mut phi_norm2),
+        _ => sweep_planes_dyn(nx, ny, nz, lanes, &mut px, &mut py, &mut pz, q, &mut phi_norm2),
+    }
+    let flops = (nx * ny * nz * lanes) as f64 * 12.0;
+    SweepOut {
+        out_x: px,
+        out_y: py,
+        out_z: pz,
+        phi_norm2,
+        flops,
+    }
+}
+
+/// Const-lane-count plane sweep (monomorphized; inner loop unrolled).
+#[allow(clippy::too_many_arguments)]
+fn sweep_planes<const L: usize>(
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    px: &mut [f64],
+    py: &mut [f64],
+    pz: &mut [f64],
+    q: f64,
+    phi_norm2: &mut f64,
+) {
+    let inv_lanes = 1.0 / L as f64;
+    let inv_table: [f64; 3] = core::array::from_fn(|m| 1.0 / (sigt_at(m, 0, 0) + 6.0));
+    for x in 0..nx {
+        let (mut y, mut z) = (0usize, 0usize);
+        let mut phase = x % 3;
+        for ((pxs, pys), pzs) in px
+            .chunks_exact_mut(L)
+            .zip(py.chunks_exact_mut(L))
+            .zip(pz.chunks_exact_mut(L))
+        {
+            let inv_den = inv_table[phase];
+            let mut phi = 0.0;
+            for l in 0..L {
+                let (a, b, c) = (pxs[l], pys[l], pzs[l]);
+                let psi = (q + 2.0 * (a + b + c)) * inv_den;
+                pxs[l] = 2.0 * psi - a;
+                pys[l] = 2.0 * psi - b;
+                pzs[l] = 2.0 * psi - c;
+                phi += psi;
+            }
+            phi *= inv_lanes;
+            *phi_norm2 += phi * phi;
+            z += 1;
+            if z == nz {
+                z = 0;
+                y += 1;
+                phase = (x + y) % 3;
+            } else {
+                phase += 1;
+                if phase == 3 {
+                    phase = 0;
+                }
+            }
+        }
+        debug_assert_eq!(y, ny);
+    }
+}
+
+/// Dynamic-lane-count fallback.
+#[allow(clippy::too_many_arguments)]
+fn sweep_planes_dyn(
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    lanes: usize,
+    px: &mut [f64],
+    py: &mut [f64],
+    pz: &mut [f64],
+    q: f64,
+    phi_norm2: &mut f64,
+) {
+    let inv_lanes = 1.0 / lanes as f64;
+    // σ_t cycles with period 3 in (x+y+z); a 3-entry reciprocal table
+    // replaces the per-cell divide, and zipped chunk iterators eliminate
+    // the per-lane bounds checks (together ~1.35× on this loop, §Perf).
+    let inv_table: [f64; 3] = core::array::from_fn(|m| 1.0 / (sigt_at(m, 0, 0) + 6.0));
+    for x in 0..nx {
+        let (mut y, mut z) = (0usize, 0usize);
+        let mut phase = x % 3;
+        for ((pxs, pys), pzs) in px
+            .chunks_exact_mut(lanes)
+            .zip(py.chunks_exact_mut(lanes))
+            .zip(pz.chunks_exact_mut(lanes))
+        {
+            let inv_den = inv_table[phase];
+            let mut phi = 0.0;
+            for ((a, b), c) in pxs.iter_mut().zip(pys.iter_mut()).zip(pzs.iter_mut()) {
+                let psi = (q + 2.0 * (*a + *b + *c)) * inv_den;
+                *a = 2.0 * psi - *a;
+                *b = 2.0 * psi - *b;
+                *c = 2.0 * psi - *c;
+                phi += psi;
+            }
+            phi *= inv_lanes;
+            *phi_norm2 += phi * phi;
+            // advance (y, z) and the σ_t phase = (x+y+z) mod 3
+            z += 1;
+            if z == nz {
+                z = 0;
+                y += 1;
+                phase = (x + y) % 3;
+            } else {
+                phase += 1;
+                if phase == 3 {
+                    phase = 0;
+                }
+            }
+        }
+        debug_assert_eq!(y, ny);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equilibrium_is_fixed_point() {
+        // Uniform sigt version: use q such that q/sig is constant only where
+        // sigt is constant — pick zones where (x+y+z)%3 == 0 ⇒ sig = 1.
+        // Simpler: check the invariant cell-wise with the known formula.
+        let local = [2, 2, 2];
+        let lanes = 4;
+        let fl = 2 * 2 * lanes;
+        let bc = vec![0.5f64; fl];
+        let out = sweep_local_native(local, lanes, bc.clone(), bc.clone(), bc.clone(), 1.0);
+        // cell (0,0,0): sig=1, psi=(1+3)/7 — not equilibrium; just assert
+        // finite and deterministic.
+        assert!(out.phi_norm2.is_finite());
+        let out2 = sweep_local_native(local, lanes, bc.clone(), bc.clone(), bc.clone(), 1.0);
+        assert_eq!(out.phi_norm2.to_bits(), out2.phi_norm2.to_bits());
+    }
+
+    #[test]
+    fn matches_scalar_recurrence_1d() {
+        // nx=3, ny=nz=1, lanes=1: hand-roll the recurrence.
+        let bc = vec![1.0f64];
+        let out = sweep_local_native([3, 1, 1], 1, bc.clone(), bc.clone(), bc.clone(), 0.0);
+        let (mut px, mut py, mut pz) = (1.0f64, 1.0f64, 1.0f64);
+        for x in 0..3 {
+            let sig = sigt_at(x, 0, 0);
+            let psi = (2.0 * (px + py + pz)) / (sig + 6.0);
+            px = 2.0 * psi - px;
+            py = 2.0 * psi - py;
+            pz = 2.0 * psi - pz;
+        }
+        assert!((out.out_x[0] - px).abs() < 1e-12);
+        assert!((out.out_y[0] - py).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorption_attenuates_magnitude() {
+        // With q=0 the flux magnitude leaving must be below the incident.
+        let local = [6, 2, 2];
+        let lanes = 2;
+        let fl = 2 * 2 * lanes;
+        let bc = vec![1.0f64; fl];
+        let out = sweep_local_native(local, lanes, bc.clone(), bc.clone(), bc.clone(), 0.0);
+        let max_out = out.out_x.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        assert!(max_out < 1.0, "max_out = {}", max_out);
+    }
+
+    #[test]
+    fn source_fills_vacuum() {
+        let local = [4, 2, 2];
+        let lanes = 2;
+        let fl = 2 * 2 * lanes;
+        let bc = vec![0.0f64; fl];
+        let out = sweep_local_native(local, lanes, bc.clone(), bc.clone(), bc.clone(), 2.0);
+        assert!(out.phi_norm2 > 0.0);
+    }
+}

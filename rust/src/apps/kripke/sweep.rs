@@ -1,0 +1,133 @@
+//! The KBA sweep loop: per (octant, groupset, dirset) pipeline step,
+//! receive upstream faces, solve the local cube, send downstream faces.
+//!
+//! All ranks iterate the (octant, groupset, dirset) schedule in the same
+//! order; sends are eager, so the wavefront dependency chain terminates at
+//! the sweep-origin corner and the loop is deadlock-free. Virtual time
+//! reproduces the pipeline-fill stalls through the logical clocks — that
+//! stall time is exactly what the `sweep_comm` region measures (Fig 1).
+
+use super::geometry::{sweep_tag, Octant};
+use super::kernels::{self, SweepOut};
+use crate::apps::common::ComputeBackend;
+use crate::caliper::Caliper;
+use crate::mpisim::cart::CartComm;
+use crate::mpisim::{MpiError, Rank};
+
+/// Angular decomposition of one pipeline step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepSpec {
+    pub oct: usize,
+    pub gs: usize,
+    pub ds: usize,
+    /// lanes = groups_per_gs × dirs_per_ds.
+    pub lanes: usize,
+}
+
+/// Sweep one (octant, groupset, dirset) step. Returns the local φ²
+/// contribution.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_step(
+    rank: &mut Rank,
+    cali: &Caliper,
+    cart: &CartComm,
+    local: [usize; 3],
+    step: StepSpec,
+    octant: Octant,
+    backend: &ComputeBackend,
+    q: f64,
+) -> Result<f64, MpiError> {
+    let [_nx, ny, nz] = local;
+    let face_len = ny * nz * step.lanes;
+
+    // --- receive / boundary-fill incident faces -------------------------
+    cali.comm_region_begin(rank, "sweep_comm");
+    let mut faces: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (dim, face) in faces.iter_mut().enumerate() {
+        *face = match octant.upstream(cart, dim) {
+            Some(up) => {
+                let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
+                let (data, _st) = rank.recv::<f64>(Some(up), tag, &cart.comm)?;
+                debug_assert_eq!(data.len(), face_len);
+                data
+            }
+            None => vec![1.0; face_len], // incident boundary flux
+        };
+    }
+    cali.comm_region_end(rank, "sweep_comm");
+
+    // --- local solve ------------------------------------------------------
+    cali.begin(rank, "solve");
+    let out = run_kernel(rank, local, step, faces, backend, q);
+    cali.end(rank, "solve");
+
+    // --- send outgoing faces downstream ----------------------------------
+    cali.comm_region_begin(rank, "sweep_comm");
+    let outs = [&out.out_x, &out.out_y, &out.out_z];
+    for dim in 0..3 {
+        if let Some(down) = octant.downstream(cart, dim) {
+            let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
+            rank.isend(outs[dim], down, tag, &cart.comm)?;
+        }
+    }
+    cali.comm_region_end(rank, "sweep_comm");
+
+    Ok(out.phi_norm2)
+}
+
+/// Dispatch to the PJRT artifact when the configuration matches the
+/// canonical (8,8,8)×64-lane shape, else the native kernel. Virtual time is
+/// charged identically from the cost model either way.
+fn run_kernel(
+    rank: &mut Rank,
+    local: [usize; 3],
+    step: StepSpec,
+    faces: [Vec<f64>; 3],
+    backend: &ComputeBackend,
+    q: f64,
+) -> SweepOut {
+    let out = match backend {
+        ComputeBackend::Pjrt(handle)
+            if local == [8, 8, 8] && step.lanes == 64 && (q - 1.0).abs() < 1e-12 =>
+        {
+            let to32 = |v: &Vec<f64>| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+            let mut sigt = Vec::with_capacity(512);
+            for x in 0..8 {
+                for y in 0..8 {
+                    for z in 0..8 {
+                        sigt.push(kernels::sigt_at(x, y, z) as f32);
+                    }
+                }
+            }
+            let outs = handle
+                .execute(
+                    "kripke_sweep",
+                    vec![to32(&faces[0]), to32(&faces[1]), to32(&faces[2]), sigt],
+                )
+                .expect("pjrt kripke_sweep failed");
+            let back = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+            // phi output is (nx, ny, nz, G=8): φ_cell = mean over groups.
+            let phi = &outs[3];
+            let mut phi_norm2 = 0.0;
+            for cell in phi.chunks_exact(8) {
+                let m: f32 = cell.iter().sum::<f32>() / 8.0;
+                phi_norm2 += (m as f64) * (m as f64);
+            }
+            SweepOut {
+                out_x: back(&outs[0]),
+                out_y: back(&outs[1]),
+                out_z: back(&outs[2]),
+                phi_norm2,
+                flops: (8 * 8 * 8 * 64) as f64 * 12.0,
+            }
+        }
+        _ => {
+            let [fx, fy, fz] = faces;
+            kernels::sweep_local_native(local, step.lanes, fx, fy, fz, q)
+        }
+    };
+    // Roofline cost: flops plus streaming the angular flux block twice.
+    let bytes = (local[0] * local[1] * local[2] * step.lanes) as f64 * 8.0 * 2.0;
+    rank.compute(out.flops, bytes);
+    out
+}

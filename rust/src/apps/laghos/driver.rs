@@ -1,0 +1,212 @@
+//! The annotated Laghos application: what Benchpark launches.
+
+use super::forces::HydroState;
+use super::mesh::MeshPatch;
+use super::timestep::timestep;
+use crate::apps::common::ComputeBackend;
+use crate::caliper::{Caliper, RankProfile};
+use crate::mpisim::{World, WorldConfig};
+
+/// Configuration of one Laghos run (strong scaling: `global` fixed).
+#[derive(Clone)]
+pub struct LaghosConfig {
+    /// Global element mesh (2D quads).
+    pub global: [usize; 2],
+    /// Process grid (px·py = world size).
+    pub pdims: [usize; 2],
+    /// Polynomial order (rp2-like ⇒ 2).
+    pub order: usize,
+    /// Timesteps.
+    pub steps: usize,
+    /// CG iterations per velocity solve.
+    pub cg_iters: usize,
+    /// Quadrature points / dofs per element for the force kernel.
+    pub quad: usize,
+    pub ndof: usize,
+    pub backend: ComputeBackend,
+    pub seed: u64,
+}
+
+impl LaghosConfig {
+    /// The paper's rs2-rp2-like strong-scaling configuration, sized so the
+    /// Dane process grids for {112, 224, 448, 896} ranks divide the mesh
+    /// evenly ([14,8], [16,14], [28,16], [32,28] all divide 448×448).
+    pub fn paper(pdims: [usize; 2]) -> LaghosConfig {
+        LaghosConfig {
+            global: [448, 448],
+            pdims,
+            order: 2,
+            steps: 100,
+            cg_iters: 12,
+            quad: 16,
+            ndof: 16,
+            backend: ComputeBackend::Native,
+            seed: 0x1a9705,
+        }
+    }
+
+    /// Canonical-artifact configuration: 64 elements/rank so the PJRT
+    /// force kernel shape matches exactly.
+    pub fn canonical_pjrt(pdims: [usize; 2], backend: ComputeBackend) -> LaghosConfig {
+        LaghosConfig {
+            global: [pdims[0] * 8, pdims[1] * 8],
+            pdims,
+            order: 2,
+            steps: 5,
+            cg_iters: 4,
+            quad: 16,
+            ndof: 16,
+            backend,
+            seed: 0x1a9705,
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.pdims.iter().product()
+    }
+}
+
+/// Result of one run.
+pub struct LaghosResult {
+    pub profiles: Vec<RankProfile>,
+    /// dt chosen at every step (rank-0 view) — monotonically sane, used by
+    /// the e2e example as the solver-progress log.
+    pub dts: Vec<f64>,
+}
+
+/// Run the Laghos analog.
+pub fn run_laghos(world: WorldConfig, cfg: &LaghosConfig) -> LaghosResult {
+    assert_eq!(world.size, cfg.nranks(), "world size vs pdims mismatch");
+    let results = World::run(world, |rank| {
+        let cali = Caliper::attach(rank);
+        let comm = rank.world();
+        let patch = MeshPatch::new(cfg.global, cfg.pdims, rank.rank, cfg.order);
+        let mut state = HydroState::new(
+            patch.elements(),
+            cfg.quad,
+            cfg.ndof,
+            2,
+            cfg.seed ^ ((rank.rank as u64) << 24),
+        );
+        let mut dts = Vec::with_capacity(cfg.steps);
+        cali.begin(rank, "main");
+        for step in 0..cfg.steps {
+            let dt = timestep(
+                rank,
+                &cali,
+                &comm,
+                &patch,
+                &mut state,
+                &cfg.backend,
+                cfg.cg_iters,
+                step as u64,
+            )
+            .expect("timestep");
+            dts.push(dt);
+        }
+        cali.end(rank, "main");
+        (cali.finish(rank), dts)
+    });
+
+    let mut profiles = Vec::with_capacity(results.len());
+    let mut dts = Vec::new();
+    for (i, (p, d)) in results.into_iter().enumerate() {
+        profiles.push(p);
+        if i == 0 {
+            dts = d;
+        }
+    }
+    LaghosResult { profiles, dts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caliper::aggregate::{aggregate, check_conservation};
+    use crate::mpisim::MachineModel;
+    use std::collections::BTreeMap;
+
+    fn tiny() -> LaghosConfig {
+        LaghosConfig {
+            global: [16, 8],
+            pdims: [2, 2],
+            order: 2,
+            steps: 4,
+            cg_iters: 3,
+            quad: 4,
+            ndof: 4,
+            backend: ComputeBackend::Native,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn runs_and_conserves() {
+        let res = run_laghos(WorldConfig::new(4, MachineModel::test_machine()), &tiny());
+        check_conservation(&res.profiles).unwrap();
+        assert_eq!(res.dts.len(), 4);
+        assert!(res.dts.iter().all(|d| *d > 0.0 && d.is_finite()));
+    }
+
+    #[test]
+    fn region_structure_matches_fig4() {
+        let res = run_laghos(WorldConfig::new(4, MachineModel::test_machine()), &tiny());
+        let run = aggregate(BTreeMap::new(), &res.profiles);
+        for name in ["main", "timestep", "halo_exchange", "reduction", "broadcast", "force", "cg_solve"] {
+            assert!(run.region(name).is_some(), "missing region {}", name);
+        }
+        let halo = run.region("halo_exchange").unwrap().1;
+        assert!(halo.is_comm_region);
+        // 4 steps × 2 stages × 3 cg iters × (1|3 neighbors at 2x2: every
+        // rank has 3 Moore neighbors) = 72 sends per rank
+        assert_eq!(halo.sends.avg(), 72.0);
+    }
+
+    #[test]
+    fn dt_identical_across_ranks_via_bcast() {
+        // dts come from rank 0 but every rank must compute the same ones —
+        // verified indirectly: deterministic rerun gives identical dts.
+        let a = run_laghos(WorldConfig::new(4, MachineModel::test_machine()), &tiny());
+        let b = run_laghos(WorldConfig::new(4, MachineModel::test_machine()), &tiny());
+        assert_eq!(a.dts, b.dts);
+    }
+
+    #[test]
+    fn strong_scaling_shrinks_max_send() {
+        // Table IV: largest send falls as ranks grow (2D surface scaling).
+        let mk = |pdims: [usize; 2]| {
+            let cfg = LaghosConfig {
+                global: [32, 32],
+                pdims,
+                ..tiny()
+            };
+            let res = run_laghos(
+                WorldConfig::new(cfg.nranks(), MachineModel::test_machine()),
+                &cfg,
+            );
+            let run = aggregate(BTreeMap::new(), &res.profiles);
+            run.largest_send()
+        };
+        let m4 = mk([2, 2]);
+        let m16 = mk([4, 4]);
+        assert!(m4 > m16, "max send {} should exceed {}", m4, m16);
+    }
+
+    #[test]
+    fn total_sends_grow_with_ranks() {
+        let mk = |pdims: [usize; 2]| {
+            let cfg = LaghosConfig {
+                global: [32, 32],
+                pdims,
+                ..tiny()
+            };
+            let res = run_laghos(
+                WorldConfig::new(cfg.nranks(), MachineModel::test_machine()),
+                &cfg,
+            );
+            let run = aggregate(BTreeMap::new(), &res.profiles);
+            run.comm_totals().1
+        };
+        assert!(mk([4, 4]) > 2.0 * mk([2, 2]));
+    }
+}

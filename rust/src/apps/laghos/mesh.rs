@@ -1,0 +1,129 @@
+//! 2D structured quad-mesh partitioning for the hydro solver.
+
+use crate::mpisim::cart::CartComm;
+
+/// A rank's patch of the global `gx × gy` element mesh on a `px × py`
+/// process grid (strong scaling: global fixed, patches shrink).
+#[derive(Debug, Clone)]
+pub struct MeshPatch {
+    pub global: [usize; 2],
+    pub pdims: [usize; 2],
+    pub coords: [usize; 2],
+    /// Elements in this patch (per dimension).
+    pub local: [usize; 2],
+    /// Polynomial order (rp2-like: order 2 ⇒ 3×3 dofs per element edge…
+    /// we track boundary dofs per edge = local_edge · (order+1)).
+    pub order: usize,
+}
+
+impl MeshPatch {
+    pub fn new(global: [usize; 2], pdims: [usize; 2], rank: usize, order: usize) -> MeshPatch {
+        assert_eq!(global[0] % pdims[0], 0, "gx % px");
+        assert_eq!(global[1] % pdims[1], 0, "gy % py");
+        let coords = CartComm::rank_to_coords(rank, &pdims);
+        MeshPatch {
+            global,
+            pdims,
+            coords: [coords[0], coords[1]],
+            local: [global[0] / pdims[0], global[1] / pdims[1]],
+            order,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.local[0] * self.local[1]
+    }
+
+    /// Moore neighbors (8-connected: edges + corners), as (rank, kind)
+    /// where kind 0/1 = x/y edge, 2 = corner. High-order FEM shares dofs
+    /// across both edges and vertices, hence the 8-neighborhood.
+    pub fn neighbors(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for dx in -1i64..=1 {
+            for dy in -1i64..=1 {
+                if dx == 0 && dy == 0 {
+                    continue;
+                }
+                let nx = self.coords[0] as i64 + dx;
+                let ny = self.coords[1] as i64 + dy;
+                if nx < 0
+                    || ny < 0
+                    || nx >= self.pdims[0] as i64
+                    || ny >= self.pdims[1] as i64
+                {
+                    continue;
+                }
+                let kind = if dx != 0 && dy != 0 {
+                    2
+                } else if dx != 0 {
+                    0
+                } else {
+                    1
+                };
+                out.push((
+                    CartComm::coords_to_rank(&[nx as usize, ny as usize], &self.pdims),
+                    kind,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Shared dofs with a neighbor of the given kind: edge neighbors share
+    /// a line of `local_edge · order + 1` dofs; corners share 1.
+    pub fn shared_dofs(&self, kind: usize) -> usize {
+        match kind {
+            0 => self.local[1] * self.order + 1,
+            1 => self.local[0] * self.order + 1,
+            2 => 1,
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_has_eight_neighbors() {
+        let rank = CartComm::coords_to_rank(&[1, 1], &[4, 4]);
+        let m = MeshPatch::new([64, 64], [4, 4], rank, 2);
+        assert_eq!(m.coords, [1, 1]);
+        assert_eq!(m.neighbors().len(), 8);
+    }
+
+    #[test]
+    fn corner_has_three_neighbors() {
+        let m = MeshPatch::new([64, 64], [4, 4], 0, 2);
+        assert_eq!(m.neighbors().len(), 3);
+    }
+
+    #[test]
+    fn strong_scaling_shrinks_patches_and_messages() {
+        let small = MeshPatch::new([128, 128], [4, 4], 0, 2);
+        let large = MeshPatch::new([128, 128], [8, 8], 0, 2);
+        assert_eq!(small.elements(), 4 * large.elements());
+        assert!(small.shared_dofs(0) > large.shared_dofs(0));
+        // ~sqrt scaling of boundary: 4x elements ⇒ 2x edge dofs
+        assert_eq!(small.local[1], 2 * large.local[1]);
+    }
+
+    #[test]
+    fn neighbor_symmetry() {
+        let pdims = [4, 3];
+        let n = 12;
+        let patches: Vec<MeshPatch> =
+            (0..n).map(|r| MeshPatch::new([32, 24], pdims, r, 2)).collect();
+        for (r, p) in patches.iter().enumerate() {
+            for (nbr, _kind) in p.neighbors() {
+                assert!(
+                    patches[nbr].neighbors().iter().any(|(b, _)| *b == r),
+                    "asymmetric {} -> {}",
+                    r,
+                    nbr
+                );
+            }
+        }
+    }
+}

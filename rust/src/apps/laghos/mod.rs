@@ -1,0 +1,24 @@
+//! Laghos analog: a 2D high-order Lagrangian hydrodynamics mini-solver
+//! whose communication reproduces the paper's §IV-C/Fig 4 observations
+//! under **strong scaling**:
+//!
+//! - a fixed global mesh divided over more ranks ⇒ per-rank data volume
+//!   and maximum send size fall as ~p^(−1/2) (2D surface scaling — exactly
+//!   Table IV's 80256 → 29072 max-send trend from 112 → 896 procs),
+//! - total sends grow ~linearly with p (fixed per-step per-rank message
+//!   schedule), so the message *rate* rises with scale until it plateaus
+//!   (Fig 5 right),
+//! - each timestep runs shared-boundary (halo) exchanges per CG iteration
+//!   of the velocity solve plus a dt reduction and a parameter broadcast —
+//!   the paper's "two levels" of collective dots in Fig 4.
+//!
+//! [`mesh`] partitions the global quad mesh; [`forces`] evaluates corner
+//! forces (native mirror of the `laghos_forces` artifact or PJRT);
+//! [`timestep`] is the annotated RK loop; [`driver`] wires it together.
+
+pub mod driver;
+pub mod forces;
+pub mod mesh;
+pub mod timestep;
+
+pub use driver::{run_laghos, LaghosConfig, LaghosResult};

@@ -1,0 +1,5 @@
+//! Communication analogs of the paper's three benchmark applications.
+pub mod amg;
+pub mod common;
+pub mod kripke;
+pub mod laghos;

@@ -1,0 +1,159 @@
+//! Experiment specifications — the paper's Table III matrix, as data.
+
+use super::system::SystemId;
+use crate::mpisim::cart::CartComm;
+
+/// Which benchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppKind {
+    Amg2023,
+    Kripke,
+    Laghos,
+}
+
+impl AppKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::Amg2023 => "amg2023",
+            AppKind::Kripke => "kripke",
+            AppKind::Laghos => "laghos",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "amg2023" | "amg" => Some(AppKind::Amg2023),
+            "kripke" => Some(AppKind::Kripke),
+            "laghos" => Some(AppKind::Laghos),
+            _ => None,
+        }
+    }
+}
+
+/// Scaling regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scaling {
+    Weak,
+    Strong,
+}
+
+impl Scaling {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scaling::Weak => "weak",
+            Scaling::Strong => "strong",
+        }
+    }
+}
+
+/// One cell of the experiment matrix: app × system × rank count.
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentSpec {
+    pub app: AppKind,
+    pub system: SystemId,
+    pub scaling: Scaling,
+    pub nranks: usize,
+}
+
+impl ExperimentSpec {
+    /// 3D process grid for the grid apps (matches Table III's dimensions —
+    /// verified by `cart::tests::dims_create_matches_paper_decompositions`).
+    pub fn pdims3(&self) -> [usize; 3] {
+        let d = CartComm::dims_create(self.nranks, 3);
+        [d[0], d[1], d[2]]
+    }
+
+    /// 2D process grid for Laghos.
+    pub fn pdims2(&self) -> [usize; 2] {
+        let d = CartComm::dims_create(self.nranks, 2);
+        [d[0], d[1]]
+    }
+
+    /// Identifier used in result file names: `kripke_dane_64`.
+    pub fn id(&self) -> String {
+        format!("{}_{}_{}", self.app.name(), self.system.name(), self.nranks)
+    }
+}
+
+/// The paper's per-system process counts (Table III).
+pub fn paper_scales(app: AppKind, system: SystemId) -> Vec<usize> {
+    match (app, system) {
+        (AppKind::Laghos, SystemId::Dane) => vec![112, 224, 448, 896],
+        (AppKind::Laghos, SystemId::Tioga) => vec![], // not run on Tioga in the paper
+        (_, SystemId::Dane) => vec![64, 128, 256, 512],
+        (_, SystemId::Tioga) => vec![8, 16, 32, 64],
+    }
+}
+
+/// All experiment cells of Table III.
+pub fn paper_matrix() -> Vec<ExperimentSpec> {
+    let mut out = Vec::new();
+    for app in [AppKind::Amg2023, AppKind::Kripke, AppKind::Laghos] {
+        for system in [SystemId::Dane, SystemId::Tioga] {
+            let scaling = if app == AppKind::Laghos {
+                Scaling::Strong
+            } else {
+                Scaling::Weak
+            };
+            for nranks in paper_scales(app, system) {
+                out.push(ExperimentSpec {
+                    app,
+                    system,
+                    scaling,
+                    nranks,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_has_20_cells() {
+        // 2 apps × 2 systems × 4 scales + laghos × 1 system × 4 = 20.
+        assert_eq!(paper_matrix().len(), 20);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let m = paper_matrix();
+        let mut ids: Vec<String> = m.iter().map(|s| s.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), m.len());
+    }
+
+    #[test]
+    fn laghos_is_strong_everything_else_weak() {
+        for s in paper_matrix() {
+            if s.app == AppKind::Laghos {
+                assert_eq!(s.scaling, Scaling::Strong);
+                assert_eq!(s.system, SystemId::Dane);
+            } else {
+                assert_eq!(s.scaling, Scaling::Weak);
+            }
+        }
+    }
+
+    #[test]
+    fn pdims_match_table3() {
+        let s = ExperimentSpec {
+            app: AppKind::Kripke,
+            system: SystemId::Dane,
+            scaling: Scaling::Weak,
+            nranks: 256,
+        };
+        assert_eq!(s.pdims3(), [8, 8, 4]);
+    }
+
+    #[test]
+    fn parse_apps() {
+        assert_eq!(AppKind::parse("AMG"), Some(AppKind::Amg2023));
+        assert_eq!(AppKind::parse("kripke"), Some(AppKind::Kripke));
+        assert_eq!(AppKind::parse("x"), None);
+    }
+}

@@ -1,0 +1,17 @@
+//! `benchpark` — reproducible experiment specifications and the scaling-
+//! study runner (the role Benchpark + Ramble play in the paper: §II/§III-D).
+//!
+//! [`system`] holds the machine descriptions of Table II (Dane, Tioga) as
+//! calibrated [`crate::mpisim::MachineModel`]s; [`experiment`] encodes the
+//! Table III experiment matrix; [`modifier`] is the Caliper modifier that
+//! stamps profiling metadata onto runs; [`runner`] executes cells of the
+//! matrix and returns aggregated [`crate::caliper::RunProfile`]s.
+
+pub mod experiment;
+pub mod modifier;
+pub mod runner;
+pub mod system;
+
+pub use experiment::{AppKind, ExperimentSpec, Scaling};
+pub use runner::{run_cell, table3_matrix};
+pub use system::{dane, tioga, SystemId};

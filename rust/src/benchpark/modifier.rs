@@ -1,0 +1,93 @@
+//! The Caliper modifier: Benchpark's mechanism for enabling profiling on a
+//! benchmark run (§III-D: "The Caliper modifier enables profiling in
+//! Benchpark and has different variants… The new MPI attributes collected
+//! by Caliper were added to this modifier").
+//!
+//! Here the modifier (a) stamps run metadata the way the real modifier
+//! injects `CALI_CONFIG`, and (b) selects profiling variants. The `mpi`
+//! variant enables the communication-pattern profiler (always on in this
+//! stack — it is the paper's contribution); `gpu` additionally marks runs
+//! on GPU systems so Thicket can split CPU/GPU populations.
+
+use std::collections::BTreeMap;
+
+use super::experiment::ExperimentSpec;
+
+/// Profiling variants, mirroring the Benchpark modifier's variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CaliperVariant {
+    /// Region timing only.
+    Time,
+    /// Timing + MPI communication-pattern attributes (Table I).
+    Mpi,
+    /// Mpi + GPU annotations.
+    MpiGpu,
+}
+
+impl CaliperVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CaliperVariant::Time => "time",
+            CaliperVariant::Mpi => "mpi",
+            CaliperVariant::MpiGpu => "mpi,gpu",
+        }
+    }
+}
+
+/// Build the metadata map stamped onto a run's profile.
+pub fn run_metadata(
+    spec: &ExperimentSpec,
+    variant: CaliperVariant,
+    extra: &[(&str, String)],
+) -> BTreeMap<String, String> {
+    let mut meta = BTreeMap::new();
+    meta.insert("app".to_string(), spec.app.name().to_string());
+    meta.insert("system".to_string(), spec.system.name().to_string());
+    meta.insert("scaling".to_string(), spec.scaling.name().to_string());
+    meta.insert("ranks".to_string(), spec.nranks.to_string());
+    meta.insert("caliper_variant".to_string(), variant.name().to_string());
+    for (k, v) in extra {
+        meta.insert(k.to_string(), v.clone());
+    }
+    meta
+}
+
+/// The default variant for a system (GPU systems get the gpu variant, as
+/// Benchpark's experiment specs select cuda/rocm variants per machine).
+pub fn default_variant(spec: &ExperimentSpec) -> CaliperVariant {
+    match spec.system {
+        super::system::SystemId::Tioga => CaliperVariant::MpiGpu,
+        super::system::SystemId::Dane => CaliperVariant::Mpi,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchpark::experiment::{AppKind, Scaling};
+    use crate::benchpark::system::SystemId;
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec {
+            app: AppKind::Kripke,
+            system: SystemId::Tioga,
+            scaling: Scaling::Weak,
+            nranks: 8,
+        }
+    }
+
+    #[test]
+    fn metadata_complete() {
+        let m = run_metadata(&spec(), CaliperVariant::MpiGpu, &[("pdims", "2x2x2".into())]);
+        assert_eq!(m["app"], "kripke");
+        assert_eq!(m["system"], "tioga");
+        assert_eq!(m["ranks"], "8");
+        assert_eq!(m["caliper_variant"], "mpi,gpu");
+        assert_eq!(m["pdims"], "2x2x2");
+    }
+
+    #[test]
+    fn gpu_system_gets_gpu_variant() {
+        assert_eq!(default_variant(&spec()), CaliperVariant::MpiGpu);
+    }
+}

@@ -1,0 +1,193 @@
+//! The scaling-study runner: executes experiment cells and returns
+//! aggregated run profiles (what Benchpark + Ramble do with batch jobs).
+
+use anyhow::{bail, Result};
+
+use super::experiment::{paper_matrix, AppKind, ExperimentSpec};
+use super::modifier::{default_variant, run_metadata};
+use super::system::SystemId;
+use crate::apps::amg::{run_amg, AmgConfig, CoarseStrategy};
+use crate::apps::kripke::{run_kripke, KripkeConfig};
+use crate::apps::laghos::{run_laghos, LaghosConfig};
+use crate::caliper::aggregate::{aggregate, check_conservation};
+use crate::caliper::RunProfile;
+use crate::mpisim::WorldConfig;
+
+/// Scale shrink factor for quick runs: 1 = full paper configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions {
+    /// Divide iteration counts by this (≥1) for smoke runs.
+    pub iter_shrink: usize,
+    /// Shrink per-rank problem volumes (≥1) for smoke runs.
+    pub size_shrink: usize,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            iter_shrink: 1,
+            size_shrink: 1,
+        }
+    }
+}
+
+impl RunOptions {
+    pub fn smoke() -> Self {
+        RunOptions {
+            iter_shrink: 4,
+            size_shrink: 4,
+        }
+    }
+
+    fn shrink_dims3(&self, d: [usize; 3]) -> [usize; 3] {
+        [
+            (d[0] / self.size_shrink).max(2),
+            (d[1] / self.size_shrink).max(2),
+            (d[2] / self.size_shrink).max(2),
+        ]
+    }
+}
+
+/// Run one cell of the experiment matrix with the paper configuration,
+/// returning the cross-rank aggregated profile (metadata stamped by the
+/// Caliper modifier). The runner self-checks message conservation.
+pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> {
+    let machine = spec.system.machine();
+    let world = WorldConfig::new(spec.nranks, machine);
+    let variant = default_variant(spec);
+
+    let (profiles, extra): (Vec<crate::caliper::RankProfile>, Vec<(&str, String)>) = match spec.app
+    {
+        AppKind::Amg2023 => {
+            let strategy = match spec.system {
+                SystemId::Dane => CoarseStrategy::CpuNaive,
+                SystemId::Tioga => CoarseStrategy::GpuBalanced,
+            };
+            let mut cfg = AmgConfig::paper(spec.pdims3(), strategy);
+            cfg.local = opts.shrink_dims3(cfg.local);
+            cfg.niter = (cfg.niter / opts.iter_shrink).max(2);
+            let res = run_amg(world, &cfg);
+            let extra = vec![
+                ("pdims", fmt3(cfg.pdims)),
+                ("local", fmt3(cfg.local)),
+                ("levels", res.n_levels.to_string()),
+                (
+                    "final_residual",
+                    format!("{:.6e}", res.residuals.last().copied().unwrap_or(0.0)),
+                ),
+            ];
+            (res.profiles, extra)
+        }
+        AppKind::Kripke => {
+            let mut cfg = match spec.system {
+                SystemId::Dane => KripkeConfig::paper_dane(spec.pdims3()),
+                SystemId::Tioga => KripkeConfig::paper_tioga(spec.pdims3()),
+            };
+            cfg.local = opts.shrink_dims3(cfg.local);
+            cfg.niter = (cfg.niter / opts.iter_shrink).max(2);
+            let res = run_kripke(world, &cfg);
+            let extra = vec![
+                ("pdims", fmt3(cfg.pdims)),
+                ("local", fmt3(cfg.local)),
+                (
+                    "phi_norm",
+                    format!("{:.6e}", res.phi_norms.last().copied().unwrap_or(0.0)),
+                ),
+            ];
+            (res.profiles, extra)
+        }
+        AppKind::Laghos => {
+            if spec.system != SystemId::Dane {
+                bail!("laghos runs on dane only in the paper's matrix");
+            }
+            let mut cfg = LaghosConfig::paper(spec.pdims2());
+            cfg.steps = (cfg.steps / opts.iter_shrink).max(2);
+            // strong scaling: global mesh fixed; do NOT shrink with ranks
+            if opts.size_shrink > 1 {
+                cfg.global = [
+                    (cfg.global[0] / opts.size_shrink).max(cfg.pdims[0] * 2),
+                    (cfg.global[1] / opts.size_shrink).max(cfg.pdims[1] * 2),
+                ];
+                // keep divisibility
+                cfg.global[0] -= cfg.global[0] % cfg.pdims[0];
+                cfg.global[1] -= cfg.global[1] % cfg.pdims[1];
+                cfg.global[0] = cfg.global[0].max(cfg.pdims[0]);
+                cfg.global[1] = cfg.global[1].max(cfg.pdims[1]);
+            }
+            // Paper-scale state would be ~7 MB/rank with Q=N=16; use the
+            // compact element basis for the scaling study.
+            cfg.quad = 4;
+            cfg.ndof = 4;
+            let res = run_laghos(world, &cfg);
+            let extra = vec![
+                ("pdims", format!("{}x{}", cfg.pdims[0], cfg.pdims[1])),
+                ("global", format!("{}x{}", cfg.global[0], cfg.global[1])),
+                (
+                    "final_dt",
+                    format!("{:.6e}", res.dts.last().copied().unwrap_or(0.0)),
+                ),
+            ];
+            (res.profiles, extra)
+        }
+    };
+
+    check_conservation(&profiles).map_err(|e| anyhow::anyhow!("self-check failed: {}", e))?;
+    let meta = run_metadata(spec, variant, &extra);
+    Ok(aggregate(meta, &profiles))
+}
+
+fn fmt3(d: [usize; 3]) -> String {
+    format!("{}x{}x{}", d[0], d[1], d[2])
+}
+
+/// The full Table III matrix.
+pub fn table3_matrix() -> Vec<ExperimentSpec> {
+    paper_matrix()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchpark::experiment::Scaling;
+
+    #[test]
+    fn smoke_run_each_app() {
+        let opts = RunOptions {
+            iter_shrink: 10,
+            size_shrink: 8,
+        };
+        for (app, system, nranks) in [
+            (AppKind::Amg2023, SystemId::Tioga, 8),
+            (AppKind::Kripke, SystemId::Tioga, 8),
+            (AppKind::Laghos, SystemId::Dane, 4),
+        ] {
+            let spec = ExperimentSpec {
+                app,
+                system,
+                scaling: if app == AppKind::Laghos {
+                    Scaling::Strong
+                } else {
+                    Scaling::Weak
+                },
+                nranks,
+            };
+            let run = run_cell(&spec, &opts).unwrap();
+            assert_eq!(run.meta["app"], app.name());
+            assert_eq!(run.meta["ranks"], nranks.to_string());
+            assert!(!run.regions.is_empty());
+            let (bytes, sends) = run.comm_totals();
+            assert!(bytes > 0.0 && sends > 0.0, "{}: no traffic", app.name());
+        }
+    }
+
+    #[test]
+    fn laghos_rejects_tioga() {
+        let spec = ExperimentSpec {
+            app: AppKind::Laghos,
+            system: SystemId::Tioga,
+            scaling: Scaling::Strong,
+            nranks: 8,
+        };
+        assert!(run_cell(&spec, &RunOptions::smoke()).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Cross-rank aggregation: fold every rank's [`RankProfile`] into one
+//! [`RunProfile`] with min/max/avg/total per Table I attribute. This is the
+//! analog of Caliper's cross-process aggregation service (which reduces
+//! profiles over MPI at flush time).
+
+use std::collections::BTreeMap;
+
+use super::profile::{RankProfile, RunProfile};
+
+/// Aggregate per-rank profiles into a run profile. `meta` carries the run's
+/// identity (app, system, ranks, scaling type, problem size, ...).
+pub fn aggregate(meta: BTreeMap<String, String>, ranks: &[RankProfile]) -> RunProfile {
+    let mut run = RunProfile {
+        meta,
+        regions: BTreeMap::new(),
+    };
+    for rp in ranks {
+        for (path, s) in &rp.regions {
+            let agg = run.regions.entry(path.clone()).or_default();
+            agg.is_comm_region |= s.is_comm_region;
+            agg.participants += 1;
+            agg.visits += s.visits;
+            agg.time.push(s.time_incl);
+            agg.sends.push(s.sends as f64);
+            agg.recvs.push(s.recvs as f64);
+            agg.bytes_sent.push(s.bytes_sent as f64);
+            agg.bytes_recv.push(s.bytes_recv as f64);
+            agg.dest_ranks.push(s.dest_ranks.len() as f64);
+            agg.src_ranks.push(s.src_ranks.len() as f64);
+            agg.colls.push(s.colls as f64);
+            if s.sends > 0 {
+                agg.max_send = agg.max_send.max(s.max_send);
+                agg.min_send = if agg.min_send == 0 {
+                    s.min_send
+                } else {
+                    agg.min_send.min(s.min_send)
+                };
+            }
+            if s.recvs > 0 {
+                agg.max_recv = agg.max_recv.max(s.max_recv);
+                agg.min_recv = if agg.min_recv == 0 {
+                    s.min_recv
+                } else {
+                    agg.min_recv.min(s.min_recv)
+                };
+            }
+        }
+    }
+    run
+}
+
+/// Conservation check: across all ranks and regions, total messages sent
+/// must equal total messages received, and bytes likewise (every deposit is
+/// matched by exactly one receive in a quiescent run). Returns
+/// `Err(description)` on violation — used by integration tests and the
+/// campaign runner's self-check.
+pub fn check_conservation(ranks: &[RankProfile]) -> Result<(), String> {
+    let mut sends: u64 = 0;
+    let mut recvs: u64 = 0;
+    let mut bytes_sent: u64 = 0;
+    let mut bytes_recv: u64 = 0;
+    for rp in ranks {
+        for s in rp.regions.values() {
+            sends += s.sends;
+            recvs += s.recvs;
+            bytes_sent += s.bytes_sent;
+            bytes_recv += s.bytes_recv;
+        }
+    }
+    if sends != recvs {
+        return Err(format!(
+            "message conservation violated: {} sends vs {} recvs",
+            sends, recvs
+        ));
+    }
+    if bytes_sent != bytes_recv {
+        return Err(format!(
+            "byte conservation violated: {} sent vs {} received",
+            bytes_sent, bytes_recv
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caliper::profile::RegionStats;
+
+    fn rank_profile(rank: usize, sends: u64, bytes_each: u64) -> RankProfile {
+        let mut p = RankProfile {
+            rank,
+            ..Default::default()
+        };
+        let mut s = RegionStats {
+            is_comm_region: true,
+            visits: 1,
+            time_incl: rank as f64 + 1.0,
+            ..Default::default()
+        };
+        for i in 0..sends {
+            s.record_send((rank + 1) % 4, bytes_each + i);
+        }
+        p.regions.insert("halo".to_string(), s);
+        p
+    }
+
+    #[test]
+    fn aggregates_min_max_avg_total() {
+        let profiles: Vec<RankProfile> =
+            (0..4).map(|r| rank_profile(r, 2 + r as u64, 100)).collect();
+        let run = aggregate(BTreeMap::new(), &profiles);
+        let agg = &run.regions["halo"];
+        assert_eq!(agg.participants, 4);
+        // sends per rank: 2,3,4,5
+        assert_eq!(agg.sends.min(), 2.0);
+        assert_eq!(agg.sends.max(), 5.0);
+        assert_eq!(agg.sends.total(), 14.0);
+        assert!((agg.sends.avg() - 3.5).abs() < 1e-12);
+        // time per rank: 1..4
+        assert_eq!(agg.time.max(), 4.0);
+        // max single send: rank 3 sent 100..=104 → 104
+        assert_eq!(agg.max_send, 104);
+        assert_eq!(agg.min_send, 100);
+    }
+
+    #[test]
+    fn conservation_detects_imbalance() {
+        let mut p0 = RankProfile {
+            rank: 0,
+            ..Default::default()
+        };
+        let mut s = RegionStats::default();
+        s.record_send(1, 64);
+        p0.regions.insert("x".into(), s);
+        let mut p1 = RankProfile {
+            rank: 1,
+            ..Default::default()
+        };
+        let mut s1 = RegionStats::default();
+        s1.record_recv(0, 64);
+        p1.regions.insert("x".into(), s1);
+        assert!(check_conservation(&[p0.clone(), p1]).is_ok());
+        assert!(check_conservation(&[p0]).is_err());
+    }
+
+    #[test]
+    fn regions_missing_on_some_ranks() {
+        // rank 0 has an extra region; participants must reflect that.
+        let mut p0 = rank_profile(0, 1, 10);
+        p0.regions
+            .insert("root_only".to_string(), RegionStats::default());
+        let p1 = rank_profile(1, 1, 10);
+        let run = aggregate(BTreeMap::new(), &[p0, p1]);
+        assert_eq!(run.regions["halo"].participants, 2);
+        assert_eq!(run.regions["root_only"].participants, 1);
+    }
+}

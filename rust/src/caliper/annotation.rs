@@ -1,0 +1,223 @@
+//! The per-rank instrumentation front end: nested annotation regions, the
+//! paper's communication-region markers, and the glue that attaches the
+//! communication-pattern profiler to the simulated MPI's hook chain.
+//!
+//! ```no_run
+//! use commscope::mpisim::{World, WorldConfig, MachineModel};
+//! use commscope::caliper::Caliper;
+//!
+//! let cfg = WorldConfig::new(2, MachineModel::test_machine());
+//! let profiles = World::run(cfg, |rank| {
+//!     let cali = Caliper::attach(rank);
+//!     cali.begin(rank, "main");
+//!     cali.comm_region_begin(rank, "halo_exchange");
+//!     // ... MPI calls are attributed to `halo_exchange` ...
+//!     cali.comm_region_end(rank, "halo_exchange");
+//!     cali.end(rank, "main");
+//!     cali.finish(rank)
+//! });
+//! ```
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::comm_profiler::CommProfiler;
+use super::profile::RankProfile;
+use crate::mpisim::Rank;
+
+/// Per-rank Caliper context. Cheap handle over the shared recorder; the
+/// same recorder is registered as an MPI hook on the rank.
+pub struct Caliper {
+    rec: Rc<RefCell<CommProfiler>>,
+}
+
+impl Caliper {
+    /// Create a context for `rank` and attach its communication profiler to
+    /// the rank's PMPI hook chain.
+    pub fn attach(rank: &mut Rank) -> Caliper {
+        let rec = Rc::new(RefCell::new(CommProfiler::new(rank.rank)));
+        rank.add_hook(rec.clone());
+        Caliper { rec }
+    }
+
+    /// `CALI_MARK_BEGIN(name)` — enter a plain annotation region.
+    pub fn begin(&self, rank: &Rank, name: &str) {
+        self.rec.borrow_mut().begin(name, false, rank.now());
+    }
+
+    /// `CALI_MARK_END(name)` — leave the innermost region, which must be
+    /// `name` (checked, like Caliper's nesting validation).
+    pub fn end(&self, rank: &Rank, name: &str) {
+        self.rec.borrow_mut().end(name, rank.now());
+    }
+
+    /// `CALI_MARK_COMM_REGION_BEGIN(name)` — enter a communication region:
+    /// MPI operations until the matching end are attributed to it.
+    pub fn comm_region_begin(&self, rank: &Rank, name: &str) {
+        self.rec.borrow_mut().begin(name, true, rank.now());
+    }
+
+    /// `CALI_MARK_COMM_REGION_END(name)`.
+    pub fn comm_region_end(&self, rank: &Rank, name: &str) {
+        self.rec.borrow_mut().end(name, rank.now());
+    }
+
+    /// Run `f` inside a plain region (RAII-style convenience).
+    pub fn scoped<T>(&self, rank: &mut Rank, name: &str, f: impl FnOnce(&mut Rank) -> T) -> T {
+        self.begin(rank, name);
+        let out = f(rank);
+        self.end(rank, name);
+        out
+    }
+
+    /// Run `f` inside a communication region.
+    pub fn comm_scoped<T>(
+        &self,
+        rank: &mut Rank,
+        name: &str,
+        f: impl FnOnce(&mut Rank) -> T,
+    ) -> T {
+        self.comm_region_begin(rank, name);
+        let out = f(rank);
+        self.comm_region_end(rank, name);
+        out
+    }
+
+    /// Close out and return this rank's profile. Open regions are an
+    /// instrumentation bug: they are force-closed at the current time and
+    /// flagged in the profile (path suffix `!unclosed`).
+    pub fn finish(self, rank: &Rank) -> RankProfile {
+        self.rec.borrow_mut().finish(rank.now())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::caliper::Caliper;
+    use crate::mpisim::{MachineModel, World, WorldConfig};
+
+    #[test]
+    fn nesting_and_paths() {
+        let cfg = WorldConfig::new(1, MachineModel::test_machine());
+        let profiles = World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            cali.begin(rank, "main");
+            rank.advance(1.0);
+            cali.begin(rank, "solve");
+            rank.advance(2.0);
+            cali.end(rank, "solve");
+            cali.end(rank, "main");
+            cali.finish(rank)
+        });
+        let p = &profiles[0];
+        assert!(p.regions.contains_key("main"));
+        assert!(p.regions.contains_key("main/solve"));
+        let main = &p.regions["main"];
+        let solve = &p.regions["main/solve"];
+        assert!((main.time_incl - 3.0).abs() < 1e-12);
+        assert!((solve.time_incl - 2.0).abs() < 1e-12);
+        assert_eq!(main.visits, 1);
+    }
+
+    #[test]
+    fn revisits_accumulate() {
+        let cfg = WorldConfig::new(1, MachineModel::test_machine());
+        let profiles = World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            for _ in 0..5 {
+                cali.scoped(rank, "step", |r| r.advance(0.5));
+            }
+            cali.finish(rank)
+        });
+        let s = &profiles[0].regions["step"];
+        assert_eq!(s.visits, 5);
+        assert!((s.time_incl - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_attribution_to_innermost_comm_region() {
+        let cfg = WorldConfig::new(2, MachineModel::test_machine());
+        let profiles = World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            let world = rank.world();
+            cali.begin(rank, "main");
+            // traffic outside any comm region
+            if rank.rank == 0 {
+                rank.send(&[0u8; 16], 1, 0, &world).unwrap();
+            } else {
+                rank.recv::<u8>(Some(0), 0, &world).unwrap();
+            }
+            cali.comm_region_begin(rank, "halo");
+            if rank.rank == 0 {
+                rank.send(&[0u8; 64], 1, 1, &world).unwrap();
+                rank.send(&[0u8; 32], 1, 2, &world).unwrap();
+            } else {
+                rank.recv::<u8>(Some(0), 1, &world).unwrap();
+                rank.recv::<u8>(Some(0), 2, &world).unwrap();
+            }
+            cali.comm_region_end(rank, "halo");
+            cali.end(rank, "main");
+            cali.finish(rank)
+        });
+        let p0 = &profiles[0];
+        let halo0 = &p0.regions["main/halo"];
+        assert!(halo0.is_comm_region);
+        assert_eq!(halo0.sends, 2);
+        assert_eq!(halo0.bytes_sent, 96);
+        assert_eq!(halo0.max_send, 64);
+        assert_eq!(halo0.min_send, 32);
+        assert_eq!(halo0.dest_ranks.len(), 1);
+        // the out-of-region send lands on the enclosing plain region path
+        let main0 = &p0.regions["main"];
+        assert_eq!(main0.sends, 1);
+        let p1 = &profiles[1];
+        let halo1 = &p1.regions["main/halo"];
+        assert_eq!(halo1.recvs, 2);
+        assert_eq!(halo1.bytes_recv, 96);
+        assert_eq!(halo1.src_ranks.len(), 1);
+    }
+
+    #[test]
+    fn collectives_counted() {
+        let cfg = WorldConfig::new(4, MachineModel::test_machine());
+        let profiles = World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            let world = rank.world();
+            cali.comm_region_begin(rank, "timestep_reduce");
+            rank.allreduce_f64(&[1.0], crate::mpisim::collectives::ReduceOp::Min, &world)
+                .unwrap();
+            rank.barrier(&world).unwrap();
+            cali.comm_region_end(rank, "timestep_reduce");
+            cali.finish(rank)
+        });
+        for p in &profiles {
+            assert_eq!(p.regions["timestep_reduce"].colls, 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "region nesting")]
+    fn mismatched_end_panics() {
+        let cfg = WorldConfig::new(1, MachineModel::test_machine());
+        World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            cali.begin(rank, "a");
+            cali.end(rank, "b");
+        });
+    }
+
+    #[test]
+    fn unclosed_region_flagged() {
+        let cfg = WorldConfig::new(1, MachineModel::test_machine());
+        let profiles = World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            cali.begin(rank, "main");
+            rank.advance(1.0);
+            cali.finish(rank)
+        });
+        assert!(profiles[0]
+            .regions
+            .keys()
+            .any(|k| k.contains("!unclosed")));
+    }
+}

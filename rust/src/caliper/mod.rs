@@ -1,0 +1,60 @@
+//! `caliper` — instrumentation and profiling with **communication regions**.
+//!
+//! This is the Rust analog of the Caliper extension the paper introduces
+//! (§III): alongside ordinary nested annotation regions
+//! (`CALI_MARK_BEGIN`/`END`), applications may mark *communication regions*
+//! (`CALI_MARK_COMM_REGION_BEGIN`/`END`) around groups of MPI calls that
+//! form one logical communication pattern instance — a halo exchange, a
+//! sweep phase, hypre's `MatVecComm` setup. A communication-pattern profiler
+//! attached to the simulated MPI's PMPI hook chain records, per region and
+//! rank, the attributes of the paper's Table I:
+//!
+//! | Attribute  | Description                                              |
+//! |------------|----------------------------------------------------------|
+//! | Sends      | Min/Max number of messages sent                          |
+//! | Recvs      | Min/Max number of messages received                      |
+//! | Dest ranks | Min/Max number of distinct destination ranks             |
+//! | Src ranks  | Min/Max number of distinct source ranks                  |
+//! | Bytes sent | Min/Max message size sent by a process in a region       |
+//! | Bytes recv | Min/Max message size received by a process in a region   |
+//! | Coll       | Max collective calls in a region                         |
+//!
+//! The per-rank recorder ([`Caliper`]) produces a [`profile::RankProfile`];
+//! [`aggregate::aggregate`] folds all ranks of a run into a
+//! [`profile::RunProfile`] carrying min/max/avg/total per metric, which the
+//! report writers ([`report`]) and the Thicket layer consume.
+
+pub mod aggregate;
+pub mod annotation;
+pub mod comm_profiler;
+pub mod profile;
+pub mod report;
+
+pub use annotation::Caliper;
+pub use profile::{AggMetric, AggRegion, RankProfile, RegionStats, RunProfile};
+
+/// Attribute names (Table I), used as metric keys in profiles and reports.
+pub mod attr {
+    pub const TIME: &str = "time";
+    pub const VISITS: &str = "visits";
+    pub const SENDS: &str = "sends";
+    pub const RECVS: &str = "recvs";
+    pub const BYTES_SENT: &str = "bytes_sent";
+    pub const BYTES_RECV: &str = "bytes_recv";
+    pub const MAX_SEND: &str = "max_send";
+    pub const MIN_SEND: &str = "min_send";
+    pub const DEST_RANKS: &str = "dest_ranks";
+    pub const SRC_RANKS: &str = "src_ranks";
+    pub const COLLS: &str = "colls";
+
+    /// All Table I attribute keys in presentation order.
+    pub const TABLE1: &[(&str, &str)] = &[
+        (SENDS, "Min/Max. number of messages sent"),
+        (RECVS, "Min/Max. number of messages received"),
+        (DEST_RANKS, "Min/Max. number of distinct destination ranks"),
+        (SRC_RANKS, "Min/Max. number of distinct source ranks"),
+        (BYTES_SENT, "Min/Max. message size sent by a process in a region"),
+        (BYTES_RECV, "Min/Max. message size received by a process in a region"),
+        (COLLS, "Max. collective calls in a region"),
+    ];
+}

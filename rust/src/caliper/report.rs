@@ -1,0 +1,143 @@
+//! Report writers: the analogs of Caliper's `runtime-report` (region time
+//! tree) and the new `comm-report` (Table I attributes per communication
+//! region).
+
+use super::profile::RunProfile;
+use crate::util::table::{Align, TextTable};
+
+/// Region time tree with avg/min/max time per rank — like
+/// `CALI_CONFIG=runtime-report`.
+pub fn runtime_report(run: &RunProfile) -> String {
+    let mut t = TextTable::new(&[
+        "Path",
+        "Visits",
+        "Time (avg)",
+        "Time (min)",
+        "Time (max)",
+        "Ranks",
+    ])
+    .align(0, Align::Left)
+    .title(&format!(
+        "runtime-report: {}",
+        run.meta
+            .iter()
+            .map(|(k, v)| format!("{}={}", k, v))
+            .collect::<Vec<_>>()
+            .join(" ")
+    ));
+    for (path, r) in &run.regions {
+        let depth = path.matches('/').count();
+        let leaf = path.rsplit('/').next().unwrap_or(path);
+        let label = format!("{}{}{}", "  ".repeat(depth), leaf, if r.is_comm_region { " [comm]" } else { "" });
+        t.row(vec![
+            label,
+            r.visits.to_string(),
+            format!("{:.6}", r.time.avg()),
+            format!("{:.6}", r.time.min()),
+            format!("{:.6}", r.time.max()),
+            r.participants.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Table I attributes for every communication region — the paper's new
+/// `comm-report`.
+pub fn comm_report(run: &RunProfile) -> String {
+    let mut t = TextTable::new(&[
+        "Comm region",
+        "Sends min/max",
+        "Recvs min/max",
+        "Dst ranks min/max",
+        "Src ranks min/max",
+        "Bytes sent min/max",
+        "Bytes recv min/max",
+        "Coll max",
+        "Largest msg",
+    ])
+    .align(0, Align::Left)
+    .title("comm-report (Table I attributes per communication region)");
+    for (path, r) in &run.regions {
+        if !r.is_comm_region {
+            continue;
+        }
+        t.row(vec![
+            path.clone(),
+            format!("{}/{}", r.sends.min(), r.sends.max()),
+            format!("{}/{}", r.recvs.min(), r.recvs.max()),
+            format!("{}/{}", r.dest_ranks.min(), r.dest_ranks.max()),
+            format!("{}/{}", r.src_ranks.min(), r.src_ranks.max()),
+            format!("{:.0}/{:.0}", r.bytes_sent.min(), r.bytes_sent.max()),
+            format!("{:.0}/{:.0}", r.bytes_recv.min(), r.bytes_recv.max()),
+            format!("{:.0}", r.colls.max()),
+            r.max_send.to_string(),
+        ]);
+    }
+    if t.n_rows() == 0 {
+        return "comm-report: no communication regions recorded\n".to_string();
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caliper::aggregate::aggregate;
+    use crate::caliper::profile::{RankProfile, RegionStats};
+    use std::collections::BTreeMap;
+
+    fn sample_run() -> RunProfile {
+        let mut profiles = Vec::new();
+        for rank in 0..2 {
+            let mut p = RankProfile {
+                rank,
+                ..Default::default()
+            };
+            let mut main = RegionStats {
+                visits: 1,
+                time_incl: 10.0,
+                ..Default::default()
+            };
+            main.record_send(1 - rank, 8);
+            main.record_recv(1 - rank, 8);
+            p.regions.insert("main".to_string(), main);
+            let mut halo = RegionStats {
+                is_comm_region: true,
+                visits: 3,
+                time_incl: 2.0,
+                ..Default::default()
+            };
+            halo.record_send(1 - rank, 4096);
+            halo.record_recv(1 - rank, 4096);
+            halo.record_coll(16);
+            p.regions.insert("main/halo".to_string(), halo);
+            profiles.push(p);
+        }
+        let mut meta = BTreeMap::new();
+        meta.insert("app".to_string(), "demo".to_string());
+        aggregate(meta, &profiles)
+    }
+
+    #[test]
+    fn runtime_report_has_tree() {
+        let rep = runtime_report(&sample_run());
+        assert!(rep.contains("main"));
+        assert!(rep.contains("  halo [comm]"));
+        assert!(rep.contains("app=demo"));
+    }
+
+    #[test]
+    fn comm_report_only_comm_regions() {
+        let rep = comm_report(&sample_run());
+        assert!(rep.contains("main/halo"));
+        // plain region absent from rows (title contains 'comm region(s)')
+        assert!(!rep.contains("\nmain  "));
+        assert!(rep.contains("4096"));
+    }
+
+    #[test]
+    fn comm_report_empty() {
+        let run = RunProfile::default();
+        assert!(comm_report(&run).contains("no communication regions"));
+    }
+}

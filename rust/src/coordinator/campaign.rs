@@ -1,0 +1,128 @@
+//! Campaign execution: run experiment cells, persist profiles, self-check.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::benchpark::experiment::ExperimentSpec;
+use crate::benchpark::runner::{run_cell, RunOptions};
+use crate::benchpark::{table3_matrix, AppKind, SystemId};
+use crate::thicket::Thicket;
+
+/// Campaign options.
+#[derive(Debug, Clone)]
+pub struct CampaignOptions {
+    pub out_dir: PathBuf,
+    pub run: RunOptions,
+    /// Restrict to one app / system if set.
+    pub app: Option<AppKind>,
+    pub system: Option<SystemId>,
+    /// Restrict to rank counts ≤ this (for quick passes).
+    pub max_ranks: Option<usize>,
+    pub verbose: bool,
+}
+
+impl CampaignOptions {
+    pub fn new(out_dir: impl Into<PathBuf>) -> CampaignOptions {
+        CampaignOptions {
+            out_dir: out_dir.into(),
+            run: RunOptions::default(),
+            app: None,
+            system: None,
+            max_ranks: None,
+            verbose: true,
+        }
+    }
+}
+
+/// Which cells survive the filters.
+pub fn selected_cells(opts: &CampaignOptions) -> Vec<ExperimentSpec> {
+    table3_matrix()
+        .into_iter()
+        .filter(|s| opts.app.map(|a| s.app == a).unwrap_or(true))
+        .filter(|s| opts.system.map(|m| s.system == m).unwrap_or(true))
+        .filter(|s| opts.max_ranks.map(|m| s.nranks <= m).unwrap_or(true))
+        .collect()
+}
+
+/// Run the campaign; writes `<out>/profiles/<id>.json` per cell and
+/// returns the loaded thicket. Existing profile files are reused unless
+/// `force` — making the campaign incremental, like Benchpark workspaces.
+pub fn run_campaign(opts: &CampaignOptions, force: bool) -> Result<Thicket> {
+    let profile_dir = opts.out_dir.join("profiles");
+    std::fs::create_dir_all(&profile_dir).context("creating profile dir")?;
+    let cells = selected_cells(opts);
+    let total = cells.len();
+    for (i, spec) in cells.iter().enumerate() {
+        let path = profile_dir.join(format!("{}.json", spec.id()));
+        if path.exists() && !force {
+            if opts.verbose {
+                println!("[{}/{}] {} — cached", i + 1, total, spec.id());
+            }
+            continue;
+        }
+        let t0 = Instant::now();
+        let run = run_cell(spec, &opts.run)
+            .with_context(|| format!("running cell {}", spec.id()))?;
+        std::fs::write(&path, run.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        if opts.verbose {
+            let (bytes, sends) = run.comm_totals();
+            println!(
+                "[{}/{}] {} — {:.1}s wall, {:.3e} bytes, {:.3e} sends, vtime {:.3}s",
+                i + 1,
+                total,
+                spec.id(),
+                t0.elapsed().as_secs_f64(),
+                bytes,
+                sends,
+                run.wall_time(),
+            );
+        }
+    }
+    load_profiles(&opts.out_dir)
+}
+
+/// Load previously-written campaign profiles.
+pub fn load_profiles(out_dir: impl AsRef<Path>) -> Result<Thicket> {
+    Thicket::load_dir(out_dir.as_ref().join("profiles"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filters_select_cells() {
+        let mut opts = CampaignOptions::new("/tmp/x");
+        opts.app = Some(AppKind::Kripke);
+        opts.system = Some(SystemId::Tioga);
+        let cells = selected_cells(&opts);
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().all(|c| c.app == AppKind::Kripke));
+        opts.max_ranks = Some(16);
+        assert_eq!(selected_cells(&opts).len(), 2);
+    }
+
+    #[test]
+    fn smoke_campaign_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("campaign_test_{}", std::process::id()));
+        let mut opts = CampaignOptions::new(&dir);
+        opts.app = Some(AppKind::Kripke);
+        opts.system = Some(SystemId::Tioga);
+        opts.max_ranks = Some(8);
+        opts.run = RunOptions {
+            iter_shrink: 10,
+            size_shrink: 8,
+        };
+        opts.verbose = false;
+        let t = run_campaign(&opts, true).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.runs[0].meta["app"], "kripke");
+        // second pass hits the cache
+        let t2 = run_campaign(&opts, false).unwrap();
+        assert_eq!(t2.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,182 @@
+//! The `repro` command-line interface.
+//!
+//! ```text
+//! repro campaign [--out results] [--app X] [--system Y] [--max-ranks N]
+//!                [--smoke] [--force]        run the Table III matrix
+//! repro table1|table2|table3                print static tables
+//! repro table4  [--out results]             print Table IV from profiles
+//! repro fig1..fig6 [--out results]          render figures (+CSV)
+//! repro run --app kripke --system dane --ranks 64 [--smoke]
+//!                                           run one cell, print reports
+//! repro report --profile results/profiles/kripke_dane_64.json
+//! ```
+
+use std::path::Path;
+
+use crate::benchpark::experiment::{ExperimentSpec, Scaling};
+use crate::benchpark::runner::{run_cell, RunOptions};
+use crate::benchpark::{AppKind, SystemId};
+use crate::caliper::report::{comm_report, runtime_report};
+use crate::caliper::RunProfile;
+use crate::coordinator::campaign::{load_profiles, run_campaign, CampaignOptions};
+use crate::coordinator::figures;
+use crate::thicket::Thicket;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+const HELP: &str = "\
+repro — regenerate the tables and figures of
+  'Leveraging Caliper and Benchpark to Analyze MPI Communication Patterns'
+on the commscope simulated stack.
+
+USAGE:
+  repro campaign [--out results] [--app APP] [--system SYS]
+                 [--max-ranks N] [--smoke] [--force]
+  repro table1 | table2 | table3
+  repro table4 [--out results]
+  repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6  [--out results]
+  repro run --app APP --system SYS --ranks N [--smoke]
+  repro report --profile FILE.json
+  repro help
+
+Profiles are cached under <out>/profiles; `campaign --force` reruns.
+APP ∈ {amg2023, kripke, laghos}; SYS ∈ {dane, tioga}.";
+
+/// Entry point used by `main`; returns the process exit code.
+pub fn dispatch(args: &Args) -> i32 {
+    match dispatch_inner(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("repro: {:#}", e);
+            1
+        }
+    }
+}
+
+fn run_options(args: &Args) -> RunOptions {
+    if args.has("smoke") {
+        RunOptions::smoke()
+    } else {
+        RunOptions::default()
+    }
+}
+
+fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
+    let out_dir = args.get_or("out", "results").to_string();
+    match args.subcommand() {
+        None | Some("help") => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        Some("campaign") => {
+            let mut opts = CampaignOptions::new(&out_dir);
+            opts.run = run_options(args);
+            if let Some(app) = args.get("app") {
+                opts.app =
+                    Some(AppKind::parse(app).ok_or_else(|| anyhow::anyhow!("bad --app"))?);
+            }
+            if let Some(sys) = args.get("system") {
+                opts.system =
+                    Some(SystemId::parse(sys).ok_or_else(|| anyhow::anyhow!("bad --system"))?);
+            }
+            if let Some(m) = args.get("max-ranks") {
+                opts.max_ranks = Some(m.parse()?);
+            }
+            let t = run_campaign(&opts, args.has("force"))?;
+            println!("campaign complete: {} profiles under {}/profiles", t.len(), out_dir);
+            // drop the inventory + all figures alongside
+            let fig_dir = Path::new(&out_dir);
+            crate::thicket::export::write_inventory_csv(fig_dir.join("inventory.csv"), &t)?;
+            let mut all = String::new();
+            all.push_str(&figures::table1());
+            all.push_str(&figures::table2());
+            all.push_str(&figures::table3());
+            all.push_str(&figures::table4(&t));
+            all.push_str(&figures::fig1(&t, Some(fig_dir))?);
+            all.push_str(&figures::fig2(&t, Some(fig_dir))?);
+            all.push_str(&figures::fig3(&t, Some(fig_dir))?);
+            all.push_str(&figures::fig4(&t, Some(fig_dir))?);
+            all.push_str(&figures::fig5(&t, Some(fig_dir))?);
+            all.push_str(&figures::fig6(&t, Some(fig_dir))?);
+            std::fs::write(fig_dir.join("report.txt"), &all)?;
+            println!("figures + CSVs written to {}", out_dir);
+            Ok(())
+        }
+        Some("table1") => {
+            println!("{}", figures::table1());
+            Ok(())
+        }
+        Some("table2") => {
+            println!("{}", figures::table2());
+            Ok(())
+        }
+        Some("table3") => {
+            println!("{}", figures::table3());
+            Ok(())
+        }
+        Some("table4") => {
+            let t = need_profiles(&out_dir)?;
+            println!("{}", figures::table4(&t));
+            Ok(())
+        }
+        Some(fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6")) => {
+            let t = need_profiles(&out_dir)?;
+            let dir = Path::new(&out_dir);
+            let text = match fig {
+                "fig1" => figures::fig1(&t, Some(dir))?,
+                "fig2" => figures::fig2(&t, Some(dir))?,
+                "fig3" => figures::fig3(&t, Some(dir))?,
+                "fig4" => figures::fig4(&t, Some(dir))?,
+                "fig5" => figures::fig5(&t, Some(dir))?,
+                _ => figures::fig6(&t, Some(dir))?,
+            };
+            println!("{}", text);
+            Ok(())
+        }
+        Some("run") => {
+            let app = AppKind::parse(args.get("app").unwrap_or(""))
+                .ok_or_else(|| anyhow::anyhow!("--app required (amg2023|kripke|laghos)"))?;
+            let system = SystemId::parse(args.get("system").unwrap_or("dane"))
+                .ok_or_else(|| anyhow::anyhow!("bad --system"))?;
+            let nranks = args.get_usize("ranks", 8);
+            let spec = ExperimentSpec {
+                app,
+                system,
+                scaling: if app == AppKind::Laghos {
+                    Scaling::Strong
+                } else {
+                    Scaling::Weak
+                },
+                nranks,
+            };
+            let run = run_cell(&spec, &run_options(args))?;
+            println!("{}", runtime_report(&run));
+            println!("{}", comm_report(&run));
+            Ok(())
+        }
+        Some("report") => {
+            let path = args
+                .get("profile")
+                .ok_or_else(|| anyhow::anyhow!("--profile FILE.json required"))?;
+            let text = std::fs::read_to_string(path)?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}", e))?;
+            let run = RunProfile::from_json(&j)
+                .ok_or_else(|| anyhow::anyhow!("not a RunProfile json"))?;
+            println!("{}", runtime_report(&run));
+            println!("{}", comm_report(&run));
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown subcommand '{}'; try `repro help`", other)
+        }
+    }
+}
+
+fn need_profiles(out_dir: &str) -> anyhow::Result<Thicket> {
+    let t = load_profiles(out_dir)
+        .map_err(|_| anyhow::anyhow!("no profiles under {}/profiles — run `repro campaign` first", out_dir))?;
+    if t.is_empty() {
+        anyhow::bail!("no profiles under {}/profiles — run `repro campaign` first", out_dir);
+    }
+    Ok(t)
+}

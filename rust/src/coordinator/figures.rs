@@ -1,0 +1,334 @@
+//! Regenerators for every table and figure in the paper's evaluation.
+//! Each function renders text (tables / ASCII charts) and, when given an
+//! output directory, drops the matching CSV next to it.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::benchpark::system::SystemId;
+use crate::benchpark::table3_matrix;
+use crate::caliper::attr;
+use crate::thicket::export::write_series_csv;
+use crate::thicket::{stats, Thicket};
+use crate::util::plotascii::{Chart, Series};
+use crate::util::table::{sci, Align, TextTable};
+
+/// Table I — the attributes the comm-pattern profiler collects.
+pub fn table1() -> String {
+    let mut t = TextTable::new(&["Attribute", "Description"])
+        .align(0, Align::Left)
+        .align(1, Align::Left)
+        .title("TABLE I — MPI attributes collected by Caliper comm regions");
+    for (name, desc) in attr::TABLE1 {
+        t.row(vec![name.to_string(), desc.to_string()]);
+    }
+    t.render()
+}
+
+/// Table II — the two systems.
+pub fn table2() -> String {
+    let mut t = TextTable::new(&["Hardware Attribute", "Tioga", "Dane"])
+        .align(0, Align::Left)
+        .title("TABLE II — Architectures used for the experiments");
+    let tioga = SystemId::Tioga.table2_row();
+    let dane = SystemId::Dane.table2_row();
+    for i in 0..tioga.len() {
+        t.row(vec![
+            tioga[i].0.to_string(),
+            tioga[i].1.to_string(),
+            dane[i].1.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Table III — the experiment matrix.
+pub fn table3() -> String {
+    let mut t = TextTable::new(&["Benchmark", "System", "Scaling", "# Processes", "Dimensions"])
+        .align(0, Align::Left)
+        .align(1, Align::Left)
+        .align(2, Align::Left)
+        .title("TABLE III — Experiments run for each benchmark");
+    for spec in table3_matrix() {
+        let dims = if spec.app == crate::benchpark::AppKind::Laghos {
+            let d = spec.pdims2();
+            format!("{}x{}", d[0], d[1])
+        } else {
+            let d = spec.pdims3();
+            format!("{}x{}x{}", d[0], d[1], d[2])
+        };
+        t.row(vec![
+            spec.app.name().to_string(),
+            spec.system.name().to_string(),
+            spec.scaling.name().to_string(),
+            spec.nranks.to_string(),
+            dims,
+        ]);
+    }
+    t.render()
+}
+
+/// Table IV — sample metric collection from annotated regions.
+pub fn table4(thicket: &Thicket) -> String {
+    let mut t = TextTable::new(&[
+        "Application and Processes",
+        "Total Bytes Sent",
+        "Total Sends",
+        "Largest Send (bytes)",
+        "Avg Send Size (bytes)",
+    ])
+    .align(0, Align::Left)
+    .title("TABLE IV — Metric collection from annotated application regions");
+    for run in thicket.by_ranks() {
+        // stable ordering: laghos, kripke dane/tioga, amg dane/tioga —
+        // follow the thicket's (app, system) grouping instead.
+        let _ = run;
+    }
+    for (group_key, group) in group_app_system(thicket) {
+        for run in group.by_ranks() {
+            let (bytes, sends, largest, avg) = stats::table4_row(run);
+            t.row(vec![
+                format!("{} - {}", group_key, run.meta["ranks"]),
+                sci(bytes),
+                sci(sends),
+                largest.to_string(),
+                sci(avg),
+            ]);
+        }
+    }
+    t.render()
+}
+
+fn group_app_system(thicket: &Thicket) -> Vec<(String, Thicket)> {
+    let mut out = Vec::new();
+    for (app, by_app) in thicket.groupby("app") {
+        for (system, group) in by_app.groupby("system") {
+            out.push((format!("{} ({})", app, system), group));
+        }
+    }
+    out
+}
+
+fn render_time_chart(
+    title: &str,
+    group: &Thicket,
+    regions: &[&str],
+    out: Option<(&Path, String)>,
+) -> Result<String> {
+    let mut series = Vec::new();
+    let mut csv = Vec::new();
+    for name in regions {
+        let pts = group.series(|r| stats::region_time_avg(r, name));
+        if !pts.is_empty() {
+            series.push(Series::new(name, pts.clone()));
+            csv.push((name.to_string(), pts));
+        }
+    }
+    if let Some((dir, file)) = out {
+        write_series_csv(dir.join(file), &csv, "ranks", "avg_time_per_rank_s")?;
+    }
+    let chart = Chart::new(title, "processes", "avg time per rank (s)").log_y();
+    Ok(chart.render(&series))
+}
+
+/// Fig 1 — Kripke average time per rank (main, solve, sweep_comm), both
+/// systems.
+pub fn fig1(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    let mut text = String::new();
+    for system in ["dane", "tioga"] {
+        let group = thicket.filter(&[("app", "kripke"), ("system", system)]);
+        if group.is_empty() {
+            continue;
+        }
+        let title = format!("Fig 1 — Kripke weak scaling, avg time/rank ({})", system);
+        text.push_str(&render_time_chart(
+            &title,
+            &group,
+            &["main", "solve", "sweep_comm", "pop_reduce"],
+            out.map(|d| (d, format!("fig1_kripke_{}.csv", system))),
+        )?);
+        text.push('\n');
+    }
+    Ok(text)
+}
+
+/// Fig 2 — AMG bytes sent per process per MG level.
+pub fn fig2(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    amg_level_figure(
+        thicket,
+        out,
+        "fig2",
+        "bytes sent per process (max)",
+        |reg| reg.bytes_sent.max(),
+    )
+}
+
+/// Fig 3 — AMG average source ranks per MG level.
+pub fn fig3(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    amg_level_figure(
+        thicket,
+        out,
+        "fig3",
+        "avg distinct source ranks",
+        |reg| reg.src_ranks.avg(),
+    )
+}
+
+fn amg_level_figure(
+    thicket: &Thicket,
+    out: Option<&Path>,
+    fig: &str,
+    y_label: &str,
+    metric: impl Fn(&crate::caliper::AggRegion) -> f64 + Copy,
+) -> Result<String> {
+    let mut text = String::new();
+    for system in ["dane", "tioga"] {
+        let group = thicket.filter(&[("app", "amg2023"), ("system", system)]);
+        if group.is_empty() {
+            continue;
+        }
+        // level → series over rank counts
+        let mut by_level: std::collections::BTreeMap<usize, Vec<(f64, f64)>> = Default::default();
+        for run in group.by_ranks() {
+            let ranks = run.meta_usize("ranks").unwrap_or(0) as f64;
+            for (level, v) in stats::amg_per_level(run, metric) {
+                by_level.entry(level).or_default().push((ranks, v));
+            }
+        }
+        let series: Vec<Series> = by_level
+            .iter()
+            .map(|(l, pts)| Series::new(&format!("MG level {}", l), pts.clone()))
+            .collect();
+        let csv: Vec<(String, Vec<(f64, f64)>)> = by_level
+            .iter()
+            .map(|(l, pts)| (format!("level_{}", l), pts.clone()))
+            .collect();
+        if let Some(dir) = out {
+            write_series_csv(
+                dir.join(format!("{}_amg_{}.csv", fig, system)),
+                &csv,
+                "ranks",
+                y_label,
+            )?;
+        }
+        let title = format!(
+            "{} — AMG2023 {}, per MG level ({})",
+            fig, y_label, system
+        );
+        let chart = Chart::new(&title, "processes", y_label).log_y();
+        text.push_str(&chart.render(&series));
+        text.push('\n');
+    }
+    Ok(text)
+}
+
+/// Fig 4 — Laghos average time per rank per region (Dane, strong scaling).
+pub fn fig4(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    let group = thicket.filter(&[("app", "laghos"), ("system", "dane")]);
+    if group.is_empty() {
+        return Ok("fig4: no laghos runs in thicket\n".to_string());
+    }
+    render_time_chart(
+        "Fig 4 — Laghos strong scaling, avg time/rank (dane)",
+        &group,
+        &["main", "timestep", "halo_exchange", "reduction", "broadcast"],
+        out.map(|d| (d, "fig4_laghos_dane.csv".to_string())),
+    )
+}
+
+/// Fig 5 — bandwidth and message rate per process, all apps, Dane.
+pub fn fig5(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    bw_rate_figure(thicket, out, "fig5", "dane", &["amg2023", "kripke", "laghos"])
+}
+
+/// Fig 6 — bandwidth and message rate per process, AMG + Kripke, Tioga.
+pub fn fig6(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    bw_rate_figure(thicket, out, "fig6", "tioga", &["amg2023", "kripke"])
+}
+
+fn bw_rate_figure(
+    thicket: &Thicket,
+    out: Option<&Path>,
+    fig: &str,
+    system: &str,
+    apps: &[&str],
+) -> Result<String> {
+    let mut text = String::new();
+    for (metric_name, f) in [
+        (
+            "bytes/sec/process",
+            stats::bandwidth_per_proc as fn(&crate::caliper::RunProfile) -> Option<f64>,
+        ),
+        ("messages/sec/process", stats::message_rate_per_proc),
+    ] {
+        let mut series = Vec::new();
+        let mut csv = Vec::new();
+        for app in apps {
+            let group = thicket.filter(&[("app", app), ("system", system)]);
+            let pts = group.series(|r| f(r));
+            if !pts.is_empty() {
+                series.push(Series::new(app, pts.clone()));
+                csv.push((app.to_string(), pts));
+            }
+        }
+        if series.is_empty() {
+            continue;
+        }
+        if let Some(dir) = out {
+            let fname = format!(
+                "{}_{}_{}.csv",
+                fig,
+                system,
+                metric_name.replace('/', "_per_")
+            );
+            write_series_csv(dir.join(fname), &csv, "ranks", metric_name)?;
+        }
+        let title = format!("{} — {} ({})", fig, metric_name, system);
+        let chart = Chart::new(&title, "processes", metric_name).log_y();
+        text.push_str(&chart.render(&series));
+        text.push('\n');
+    }
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_tables_render() {
+        let t1 = table1();
+        assert!(t1.contains("sends"));
+        assert!(t1.contains("Coll") || t1.contains("colls"));
+        let t2 = table2();
+        assert!(t2.contains("MI250X"));
+        assert!(t2.contains("Sapphire"));
+        let t3 = table3();
+        assert!(t3.contains("kripke"));
+        assert!(t3.contains("8x8x8"));
+        assert!(t3.contains("896"));
+    }
+
+    #[test]
+    fn table4_renders_with_data() {
+        use crate::caliper::{AggRegion, RunProfile};
+        let mut run = RunProfile::default();
+        run.meta.insert("app".into(), "kripke".into());
+        run.meta.insert("system".into(), "dane".into());
+        run.meta.insert("ranks".into(), "64".into());
+        let mut reg = AggRegion {
+            is_comm_region: true,
+            max_send: 24576,
+            ..Default::default()
+        };
+        reg.bytes_sent.push(4.0e9);
+        reg.sends.push(184320.0);
+        reg.time.push(1.0);
+        run.regions.insert("main/sweep_comm".into(), reg);
+        let t = Thicket::new(vec![run]);
+        let rendered = table4(&t);
+        assert!(rendered.contains("kripke (dane) - 64"));
+        assert!(rendered.contains("4.00E+09"));
+    }
+}

@@ -1,0 +1,11 @@
+//! `coordinator` — the leader process: runs experiment campaigns, collects
+//! profiles, and regenerates every table and figure of the paper.
+//!
+//! [`campaign`] executes the Table III matrix (each cell = one simulated
+//! multi-rank job) and persists aggregated profiles; [`figures`] turns a
+//! [`crate::thicket::Thicket`] of profiles into the paper's tables/figures
+//! (text + CSV); [`cli`] is the `repro` command-line surface.
+
+pub mod campaign;
+pub mod cli;
+pub mod figures;

@@ -1,0 +1,35 @@
+//! # commscope
+//!
+//! A communication-pattern analysis stack for MPI-style HPC applications,
+//! reproducing *"Leveraging Caliper and Benchpark to Analyze MPI
+//! Communication Patterns: Insights from AMG2023, Kripke, and Laghos"*
+//! (Nansamba et al., CS.DC 2025) on a fully self-contained, simulated
+//! substrate.
+//!
+//! The stack has five cooperating layers (see `DESIGN.md` for the full
+//! inventory and the paper-experiment index):
+//!
+//! 1. [`mpisim`] — a deterministic simulated MPI runtime: thread-per-rank,
+//!    logical clocks, per-architecture network/compute models (Dane-like CPU
+//!    and Tioga-like GPU machines).
+//! 2. [`caliper`] — the paper's contribution: region annotations plus
+//!    **communication regions** whose profiler records message, rank, and
+//!    volume statistics per region instance (Table I of the paper).
+//! 3. [`apps`] — faithful communication analogs of the three benchmarks:
+//!    AMG2023 (multigrid, `MatVecComm`), Kripke (KBA sweep, `sweep_comm`),
+//!    and Laghos (Lagrangian hydro, `halo_exchange` + dt reductions).
+//! 4. [`benchpark`] + [`thicket`] — reproducible experiment specifications,
+//!    the scaling-study runner, and multi-run exploratory analysis that
+//!    regenerates every table and figure in the paper's evaluation.
+//! 5. [`runtime`] — the PJRT bridge: loads the AOT-compiled JAX/Pallas
+//!    compute kernels (HLO text under `artifacts/`) and executes them from
+//!    the Rust hot path, proving the three-layer composition end to end.
+
+pub mod apps;
+pub mod benchpark;
+pub mod caliper;
+pub mod coordinator;
+pub mod mpisim;
+pub mod runtime;
+pub mod thicket;
+pub mod util;

@@ -1,0 +1,8 @@
+//! `repro` — the command-line entry point.
+//!
+//! Subcommands regenerate each table/figure of the paper; see `--help`.
+
+fn main() {
+    let args = commscope::util::cli::Args::from_env();
+    std::process::exit(commscope::coordinator::cli::dispatch(&args));
+}

@@ -1,0 +1,216 @@
+//! Cartesian process topologies (the analog of `MPI_Cart_create` /
+//! `MPI_Cart_shift`). All three applications decompose a 3D domain over a
+//! `px × py × pz` process grid; the sweep and halo patterns the paper
+//! profiles are expressed through neighbor lookups on this topology.
+
+use super::comm::Comm;
+use super::error::MpiError;
+
+/// A cartesian view over a communicator. Row-major rank ordering:
+/// `rank = (x * dims[1] + y) * dims[2] + z` for 3D.
+#[derive(Debug, Clone)]
+pub struct CartComm {
+    pub comm: Comm,
+    pub dims: Vec<usize>,
+    pub periodic: Vec<bool>,
+    pub coords: Vec<usize>,
+}
+
+impl CartComm {
+    /// Create a cartesian topology over an existing communicator. `dims`
+    /// must multiply to exactly `comm.size()`.
+    pub fn new(comm: Comm, dims: &[usize], periodic: &[bool]) -> Result<CartComm, MpiError> {
+        let vol: usize = dims.iter().product();
+        if vol != comm.size() {
+            return Err(MpiError::BadCartDims {
+                dims: dims.to_vec(),
+                size: comm.size(),
+            });
+        }
+        assert_eq!(dims.len(), periodic.len());
+        let coords = Self::rank_to_coords(comm.rank, dims);
+        Ok(CartComm {
+            comm,
+            dims: dims.to_vec(),
+            periodic: periodic.to_vec(),
+            coords,
+        })
+    }
+
+    /// Decompose `rank` into coordinates (row-major).
+    pub fn rank_to_coords(rank: usize, dims: &[usize]) -> Vec<usize> {
+        let mut coords = vec![0; dims.len()];
+        let mut rem = rank;
+        for d in (0..dims.len()).rev() {
+            coords[d] = rem % dims[d];
+            rem /= dims[d];
+        }
+        coords
+    }
+
+    /// Compose coordinates into a rank (row-major).
+    pub fn coords_to_rank(coords: &[usize], dims: &[usize]) -> usize {
+        let mut rank = 0;
+        for d in 0..dims.len() {
+            rank = rank * dims[d] + coords[d];
+        }
+        rank
+    }
+
+    /// Communicator rank at `coords`.
+    pub fn rank_at(&self, coords: &[usize]) -> usize {
+        Self::coords_to_rank(coords, &self.dims)
+    }
+
+    /// Neighbor in dimension `dim` at displacement `disp` (±1 typically).
+    /// Returns the communicator rank, or `None` at a non-periodic boundary.
+    pub fn shift(&self, dim: usize, disp: i64) -> Option<usize> {
+        let extent = self.dims[dim] as i64;
+        let pos = self.coords[dim] as i64 + disp;
+        let wrapped = if self.periodic[dim] {
+            Some(pos.rem_euclid(extent))
+        } else if (0..extent).contains(&pos) {
+            Some(pos)
+        } else {
+            None
+        };
+        wrapped.map(|p| {
+            let mut c = self.coords.clone();
+            c[dim] = p as usize;
+            self.rank_at(&c)
+        })
+    }
+
+    /// All face neighbors (±1 in every dimension), in (dim, direction)
+    /// order: (-x, +x, -y, +y, ...). `None` entries are domain boundaries.
+    pub fn face_neighbors(&self) -> Vec<Option<usize>> {
+        let mut out = Vec::with_capacity(self.dims.len() * 2);
+        for d in 0..self.dims.len() {
+            out.push(self.shift(d, -1));
+            out.push(self.shift(d, 1));
+        }
+        out
+    }
+
+    /// Number of distinct existing face neighbors — the paper's
+    /// "communication partners" metric (3 for corner ranks of a 3D grid,
+    /// up to 6 in the interior).
+    pub fn n_neighbors(&self) -> usize {
+        self.face_neighbors().iter().flatten().count()
+    }
+
+    /// Choose a near-cubic factorization of `size` into `ndims` factors
+    /// (the analog of `MPI_Dims_create`). Factors are non-increasing.
+    pub fn dims_create(size: usize, ndims: usize) -> Vec<usize> {
+        let mut dims = vec![1usize; ndims];
+        let mut remaining = size;
+        // Greedy: repeatedly divide off the smallest prime factor, assign to
+        // the currently-smallest dimension.
+        let mut factors = Vec::new();
+        let mut n = remaining;
+        let mut p = 2;
+        while p * p <= n {
+            while n % p == 0 {
+                factors.push(p);
+                n /= p;
+            }
+            p += 1;
+        }
+        if n > 1 {
+            factors.push(n);
+        }
+        factors.sort_unstable_by(|a, b| b.cmp(a));
+        for f in factors {
+            let i = (0..ndims).min_by_key(|&i| dims[i]).unwrap();
+            dims[i] *= f;
+            remaining /= f;
+        }
+        debug_assert_eq!(remaining, 1);
+        dims.sort_unstable_by(|a, b| b.cmp(a));
+        dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cart(rank: usize, dims: &[usize]) -> CartComm {
+        let size = dims.iter().product();
+        CartComm::new(Comm::world(rank, size), dims, &vec![false; dims.len()]).unwrap()
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let dims = vec![4, 3, 2];
+        for r in 0..24 {
+            let c = CartComm::rank_to_coords(r, &dims);
+            assert_eq!(CartComm::coords_to_rank(&c, &dims), r);
+        }
+    }
+
+    #[test]
+    fn corner_has_three_neighbors_interior_six() {
+        // 4x4x4 grid: rank 0 is a corner; rank at (1,1,1) is interior.
+        let c0 = cart(0, &[4, 4, 4]);
+        assert_eq!(c0.n_neighbors(), 3);
+        let interior_rank = CartComm::coords_to_rank(&[1, 1, 1], &[4, 4, 4]);
+        let ci = cart(interior_rank, &[4, 4, 4]);
+        assert_eq!(ci.n_neighbors(), 6);
+    }
+
+    #[test]
+    fn all_corners_in_2x2x2() {
+        // paper: "for the smallest GPU run every rank has only three
+        // communication partners because all ranks are on a corner"
+        for r in 0..8 {
+            assert_eq!(cart(r, &[2, 2, 2]).n_neighbors(), 3);
+        }
+    }
+
+    #[test]
+    fn shift_nonperiodic_boundary() {
+        let c = cart(0, &[4, 4, 4]);
+        assert_eq!(c.shift(0, -1), None);
+        assert_eq!(
+            c.shift(0, 1),
+            Some(CartComm::coords_to_rank(&[1, 0, 0], &[4, 4, 4]))
+        );
+    }
+
+    #[test]
+    fn shift_periodic_wraps() {
+        let size = 4 * 4 * 4;
+        let c = CartComm::new(Comm::world(0, size), &[4, 4, 4], &[true, true, true]).unwrap();
+        assert_eq!(
+            c.shift(2, -1),
+            Some(CartComm::coords_to_rank(&[0, 0, 3], &[4, 4, 4]))
+        );
+    }
+
+    #[test]
+    fn bad_dims_rejected() {
+        let r = CartComm::new(Comm::world(0, 8), &[3, 3], &[false, false]);
+        assert!(matches!(r, Err(MpiError::BadCartDims { .. })));
+    }
+
+    #[test]
+    fn dims_create_matches_paper_decompositions() {
+        // Table III decompositions
+        assert_eq!(CartComm::dims_create(64, 3), vec![4, 4, 4]);
+        assert_eq!(CartComm::dims_create(128, 3), vec![8, 4, 4]);
+        assert_eq!(CartComm::dims_create(256, 3), vec![8, 8, 4]);
+        assert_eq!(CartComm::dims_create(512, 3), vec![8, 8, 8]);
+        assert_eq!(CartComm::dims_create(8, 3), vec![2, 2, 2]);
+        assert_eq!(CartComm::dims_create(16, 3), vec![4, 2, 2]);
+        assert_eq!(CartComm::dims_create(32, 3), vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn dims_create_volume_invariant() {
+        for size in [1, 2, 6, 12, 60, 96, 112, 224, 896] {
+            let d = CartComm::dims_create(size, 3);
+            assert_eq!(d.iter().product::<usize>(), size, "size {}", size);
+        }
+    }
+}

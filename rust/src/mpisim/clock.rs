@@ -1,0 +1,72 @@
+//! Per-rank virtual clocks.
+//!
+//! A rank's clock is plain `f64` seconds of *simulated* time. It only moves
+//! forward: compute models add compute time, the network model adds
+//! communication time, and synchronizing operations (receives, collectives)
+//! pull the clock up to the timestamp implied by their peers. Because clock
+//! exchange piggybacks on the messages themselves, no global scheduler is
+//! needed and the result is schedule-independent.
+
+/// Monotonic virtual clock (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Clock {
+    now: f64,
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock { now: 0.0 }
+    }
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by a non-negative delta.
+    #[inline]
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative clock advance: {}", dt);
+        debug_assert!(dt.is_finite(), "non-finite clock advance");
+        self.now += dt;
+    }
+
+    /// Pull the clock up to `t` if `t` is later (synchronization edge).
+    #[inline]
+    pub fn sync_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_and_syncs() {
+        let mut c = Clock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.sync_to(1.0); // earlier: no-op
+        assert_eq!(c.now(), 1.5);
+        c.sync_to(2.0);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic]
+    fn negative_advance_panics_in_debug() {
+        let mut c = Clock::new();
+        c.advance(-1.0);
+    }
+}

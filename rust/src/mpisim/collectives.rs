@@ -1,0 +1,333 @@
+//! Collective rendezvous board.
+//!
+//! Collectives are implemented natively (not on top of p2p messages) so that
+//! the profiler sees them as *collective calls*, exactly as Caliper's MPI
+//! wrapper does — the paper's Table I counts collectives separately from
+//! sends/receives. Each collective instance is a slot keyed by
+//! (context id, per-communicator sequence number); ranks deposit their
+//! contribution and entry clock, the last arriver runs the reduction
+//! closure, and everyone leaves with the shared result plus the maximum
+//! entry time (the synchronization point from which the cost model extends).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::error::MpiError;
+
+/// Reduction operators for the typed reduce/allreduce wrappers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    pub fn apply_f64(&self, acc: f64, x: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => acc + x,
+            ReduceOp::Min => acc.min(x),
+            ReduceOp::Max => acc.max(x),
+        }
+    }
+
+    pub fn apply_u64(&self, acc: u64, x: u64) -> u64 {
+        match self {
+            ReduceOp::Sum => acc + x,
+            ReduceOp::Min => acc.min(x),
+            ReduceOp::Max => acc.max(x),
+        }
+    }
+
+    pub fn identity_f64(&self) -> f64 {
+        match self {
+            ReduceOp::Sum => 0.0,
+            ReduceOp::Min => f64::INFINITY,
+            ReduceOp::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn identity_u64(&self) -> u64 {
+        match self {
+            ReduceOp::Sum => 0,
+            ReduceOp::Min => u64::MAX,
+            ReduceOp::Max => 0,
+        }
+    }
+}
+
+struct CollSlot {
+    kind: &'static str,
+    expected: usize,
+    arrived: usize,
+    left: usize,
+    max_entry: f64,
+    contribs: Vec<Option<Box<[u8]>>>,
+    result: Option<Arc<[u8]>>,
+}
+
+/// The process-wide board shared by all ranks of a `World`.
+#[derive(Default)]
+pub struct CollBoard {
+    slots: Mutex<HashMap<(u32, u64), CollSlot>>,
+    cv: Condvar,
+}
+
+impl CollBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Execute one collective instance from the calling rank's perspective.
+    ///
+    /// `finalize` runs exactly once (on the last-arriving rank) over all
+    /// contributions (indexed by communicator rank) and produces the shared
+    /// result bytes. Returns `(result, max_entry_time)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        key: (u32, u64),
+        kind: &'static str,
+        comm_size: usize,
+        my_idx: usize,
+        my_world_rank: usize,
+        entry_time: f64,
+        contrib: Box<[u8]>,
+        finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
+        timeout: Duration,
+    ) -> Result<(Arc<[u8]>, f64), MpiError> {
+        let deadline = Instant::now() + timeout;
+        let mut slots = self.slots.lock().unwrap();
+        {
+            let slot = slots.entry(key).or_insert_with(|| CollSlot {
+                kind,
+                expected: comm_size,
+                arrived: 0,
+                left: 0,
+                max_entry: f64::NEG_INFINITY,
+                contribs: (0..comm_size).map(|_| None).collect(),
+                result: None,
+            });
+            if slot.kind != kind {
+                return Err(MpiError::CollectiveMismatch {
+                    ctx: key.0,
+                    seq: key.1,
+                    rank: my_world_rank,
+                    called: kind,
+                    expected: slot.kind,
+                });
+            }
+            debug_assert!(slot.contribs[my_idx].is_none(), "rank entered twice");
+            slot.contribs[my_idx] = Some(contrib);
+            slot.arrived += 1;
+            if entry_time > slot.max_entry {
+                slot.max_entry = entry_time;
+            }
+            if slot.arrived == slot.expected {
+                let result = finalize(&mut slot.contribs);
+                slot.result = Some(Arc::from(result));
+                self.cv.notify_all();
+            }
+        }
+        // Wait for completion.
+        loop {
+            {
+                let slot = slots.get(&key).expect("collective slot vanished");
+                if let Some(result) = &slot.result {
+                    let out = (result.clone(), slot.max_entry);
+                    let slot = slots.get_mut(&key).unwrap();
+                    slot.left += 1;
+                    if slot.left == slot.expected {
+                        slots.remove(&key);
+                    }
+                    return Ok(out);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let slot = slots.get(&key).unwrap();
+                return Err(MpiError::CollectiveTimeout {
+                    rank: my_world_rank,
+                    kind,
+                    ctx: key.0,
+                    arrived: slot.arrived,
+                    expected: slot.expected,
+                    secs: timeout.as_secs(),
+                });
+            }
+            let (guard, _r) = self.cv.wait_timeout(slots, deadline - now).unwrap();
+            slots = guard;
+        }
+    }
+}
+
+/// Length-prefix framing for variable-size gather results: each entry is
+/// `u32 little-endian length` followed by the bytes.
+pub fn frame_concat(parts: &mut [Option<Box<[u8]>>]) -> Box<[u8]> {
+    let mut out = Vec::new();
+    for p in parts.iter() {
+        let b = p.as_ref().expect("missing contribution");
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        out.extend_from_slice(b);
+    }
+    out.into_boxed_slice()
+}
+
+/// Inverse of [`frame_concat`].
+pub fn frame_split(bytes: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 4 <= bytes.len() {
+        let len = u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]) as usize;
+        i += 4;
+        out.push(bytes[i..i + len].to_vec());
+        i += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn framing_roundtrip() {
+        let mut parts: Vec<Option<Box<[u8]>>> = vec![
+            Some(vec![1, 2, 3].into_boxed_slice()),
+            Some(vec![].into_boxed_slice()),
+            Some(vec![9].into_boxed_slice()),
+        ];
+        let framed = frame_concat(&mut parts);
+        let back = frame_split(&framed);
+        assert_eq!(back, vec![vec![1, 2, 3], vec![], vec![9]]);
+    }
+
+    #[test]
+    fn board_sums_across_threads() {
+        let board = StdArc::new(CollBoard::new());
+        let n = 8;
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let b = board.clone();
+                std::thread::spawn(move || {
+                    let contrib = (i as f64).to_le_bytes().to_vec().into_boxed_slice();
+                    let (res, max_t) = b
+                        .run(
+                            (0, 0),
+                            "sum",
+                            n,
+                            i,
+                            i,
+                            i as f64,
+                            contrib,
+                            &|parts| {
+                                let s: f64 = parts
+                                    .iter()
+                                    .map(|p| {
+                                        let b = p.as_ref().unwrap();
+                                        f64::from_le_bytes(b[..8].try_into().unwrap())
+                                    })
+                                    .sum();
+                                s.to_le_bytes().to_vec().into_boxed_slice()
+                            },
+                            Duration::from_secs(5),
+                        )
+                        .unwrap();
+                    let s = f64::from_le_bytes(res[..8].try_into().unwrap());
+                    (s, max_t)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (s, max_t) = h.join().unwrap();
+            assert_eq!(s, 28.0); // 0+1+...+7
+            assert_eq!(max_t, 7.0);
+        }
+        // slot cleaned up
+        assert!(board.slots.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn mismatch_detected() {
+        let board = StdArc::new(CollBoard::new());
+        let b2 = board.clone();
+        let t = std::thread::spawn(move || {
+            b2.run(
+                (0, 0),
+                "bcast",
+                2,
+                0,
+                0,
+                0.0,
+                Box::from(&[][..]),
+                &|_| Box::from(&[][..]),
+                Duration::from_secs(2),
+            )
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let err = board
+            .run(
+                (0, 0),
+                "reduce",
+                2,
+                1,
+                1,
+                0.0,
+                Box::from(&[][..]),
+                &|_| Box::from(&[][..]),
+                Duration::from_millis(100),
+            )
+            .unwrap_err();
+        assert!(matches!(err, MpiError::CollectiveMismatch { .. }));
+        // unblock the first thread by completing properly
+        let _ = board.run(
+            (0, 0),
+            "bcast",
+            2,
+            1,
+            1,
+            0.0,
+            Box::from(&[][..]),
+            &|_| Box::from(&[][..]),
+            Duration::from_secs(2),
+        );
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn timeout_reports_stragglers() {
+        let board = CollBoard::new();
+        let err = board
+            .run(
+                (7, 0),
+                "barrier",
+                4,
+                0,
+                0,
+                0.0,
+                Box::from(&[][..]),
+                &|_| Box::from(&[][..]),
+                Duration::from_millis(30),
+            )
+            .unwrap_err();
+        match err {
+            MpiError::CollectiveTimeout {
+                arrived, expected, ..
+            } => {
+                assert_eq!(arrived, 1);
+                assert_eq!(expected, 4);
+            }
+            other => panic!("unexpected {:?}", other),
+        }
+    }
+
+    #[test]
+    fn reduce_op_semantics() {
+        assert_eq!(ReduceOp::Sum.apply_f64(1.0, 2.0), 3.0);
+        assert_eq!(ReduceOp::Min.apply_f64(1.0, 2.0), 1.0);
+        assert_eq!(ReduceOp::Max.apply_u64(1, 2), 2);
+        assert_eq!(ReduceOp::Min.identity_u64(), u64::MAX);
+    }
+}

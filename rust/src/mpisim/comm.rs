@@ -1,0 +1,100 @@
+//! Communicators: ordered groups of world ranks with a context id that
+//! isolates their message traffic and collective sequencing (the analog of
+//! MPI's communicator contexts).
+
+/// A communicator. Cheap to clone; holds the member list (world ranks, in
+/// communicator-rank order) and this process' position in it.
+#[derive(Debug, Clone)]
+pub struct Comm {
+    /// Context id: messages and collectives on different contexts never match.
+    pub ctx: u32,
+    /// Members in communicator-rank order (values are world ranks).
+    pub ranks: Vec<usize>,
+    /// This process' communicator rank (index into `ranks`).
+    pub rank: usize,
+}
+
+impl Comm {
+    /// The world communicator for a job of `size` ranks, viewed from `rank`.
+    pub fn world(rank: usize, size: usize) -> Comm {
+        Comm {
+            ctx: 0,
+            ranks: (0..size).collect(),
+            rank,
+        }
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// World rank of communicator rank `r`.
+    #[inline]
+    pub fn world_rank(&self, r: usize) -> usize {
+        self.ranks[r]
+    }
+
+    /// Communicator rank of a world rank, if a member.
+    pub fn rank_of_world(&self, world: usize) -> Option<usize> {
+        self.ranks.iter().position(|&w| w == world)
+    }
+
+    /// Derive a deterministic child context id. All members derive the same
+    /// id because they observe the same (parent ctx, per-parent split count).
+    pub fn derive_ctx(parent_ctx: u32, split_seq: u64) -> u32 {
+        // FNV-1a over the pair; avoid 0 which is reserved for world.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in parent_ctx
+            .to_le_bytes()
+            .iter()
+            .chain(split_seq.to_le_bytes().iter())
+        {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let ctx = (h as u32) ^ ((h >> 32) as u32);
+        if ctx == 0 {
+            1
+        } else {
+            ctx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_comm() {
+        let c = Comm::world(2, 8);
+        assert_eq!(c.size(), 8);
+        assert_eq!(c.rank, 2);
+        assert_eq!(c.world_rank(5), 5);
+        assert_eq!(c.rank_of_world(7), Some(7));
+        assert_eq!(c.ctx, 0);
+    }
+
+    #[test]
+    fn derived_ctx_is_stable_and_nonzero() {
+        let a = Comm::derive_ctx(0, 1);
+        let b = Comm::derive_ctx(0, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, 0);
+        assert_ne!(Comm::derive_ctx(0, 1), Comm::derive_ctx(0, 2));
+        assert_ne!(Comm::derive_ctx(0, 1), Comm::derive_ctx(1, 1));
+    }
+
+    #[test]
+    fn subgroup_lookup() {
+        let c = Comm {
+            ctx: 5,
+            ranks: vec![3, 5, 9],
+            rank: 1,
+        };
+        assert_eq!(c.world_rank(0), 3);
+        assert_eq!(c.rank_of_world(9), Some(2));
+        assert_eq!(c.rank_of_world(4), None);
+    }
+}

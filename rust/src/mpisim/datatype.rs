@@ -1,0 +1,99 @@
+//! Typed payload encoding for simulated messages.
+//!
+//! Real MPI ships raw bytes described by datatypes; we do the same: every
+//! message body is a `Box<[u8]>` and `MpiData` provides safe, alignment-free
+//! encode/decode for the element types the applications use. Byte counts
+//! reported to the profiler are exactly `len * size_of::<T>()`, matching what
+//! Caliper's MPI wrappers compute from `count × MPI_Type_size`.
+
+use super::error::MpiError;
+
+/// Element types that can be sent through the simulator.
+pub trait MpiData: Copy + 'static {
+    const ELEM_SIZE: usize;
+    fn write_le(&self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! impl_mpi_data {
+    ($t:ty, $n:expr) => {
+        impl MpiData for $t {
+            const ELEM_SIZE: usize = $n;
+            #[inline]
+            fn write_le(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            #[inline]
+            fn read_le(bytes: &[u8]) -> Self {
+                let mut buf = [0u8; $n];
+                buf.copy_from_slice(&bytes[..$n]);
+                <$t>::from_le_bytes(buf)
+            }
+        }
+    };
+}
+
+impl_mpi_data!(f64, 8);
+impl_mpi_data!(f32, 4);
+impl_mpi_data!(u64, 8);
+impl_mpi_data!(i64, 8);
+impl_mpi_data!(u32, 4);
+impl_mpi_data!(i32, 4);
+impl_mpi_data!(u8, 1);
+
+/// Encode a slice to little-endian bytes.
+pub fn encode<T: MpiData>(data: &[T]) -> Box<[u8]> {
+    let mut out = Vec::with_capacity(data.len() * T::ELEM_SIZE);
+    for v in data {
+        v.write_le(&mut out);
+    }
+    out.into_boxed_slice()
+}
+
+/// Decode bytes back to a typed vector.
+pub fn decode<T: MpiData>(bytes: &[u8]) -> Result<Vec<T>, MpiError> {
+    if bytes.len() % T::ELEM_SIZE != 0 {
+        return Err(MpiError::PayloadSizeMismatch {
+            got: bytes.len(),
+            elem: T::ELEM_SIZE,
+        });
+    }
+    Ok(bytes
+        .chunks_exact(T::ELEM_SIZE)
+        .map(|c| T::read_le(c))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f64() {
+        let data = vec![1.5f64, -2.25, 0.0, f64::MAX];
+        let bytes = encode(&data);
+        assert_eq!(bytes.len(), 32);
+        assert_eq!(decode::<f64>(&bytes).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let data = vec![-7i32, 0, 123456];
+        assert_eq!(decode::<i32>(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_u8() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode::<u8>(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn size_mismatch_detected() {
+        let bytes = vec![0u8; 10];
+        assert!(matches!(
+            decode::<f64>(&bytes),
+            Err(MpiError::PayloadSizeMismatch { got: 10, elem: 8 })
+        ));
+    }
+}

@@ -1,0 +1,69 @@
+//! Error types for the simulated MPI runtime.
+
+use thiserror::Error;
+
+/// Errors surfaced by simulated MPI operations. Most are programming errors
+/// in the application (rank out of range, type mismatch) and are returned
+/// rather than panicking so failure-injection tests can assert on them.
+#[derive(Debug, Error, Clone, PartialEq, Eq)]
+pub enum MpiError {
+    #[error("rank {rank} out of range for communicator of size {size}")]
+    RankOutOfRange { rank: usize, size: usize },
+
+    #[error("receive timed out after {secs}s real time: rank {rank} waiting for src={src:?} tag={tag} ctx={ctx}")]
+    RecvTimeout {
+        rank: usize,
+        src: Option<usize>,
+        tag: i32,
+        ctx: u32,
+    /// Real-time seconds waited before giving up (deadlock guard).
+        secs: u64,
+    },
+
+    #[error("collective mismatch on ctx {ctx} seq {seq}: rank {rank} called {called} but slot holds {expected}")]
+    CollectiveMismatch {
+        ctx: u32,
+        seq: u64,
+        rank: usize,
+        called: &'static str,
+        expected: &'static str,
+    },
+
+    #[error("collective timed out after {secs}s real time: rank {rank} in {kind} on ctx {ctx} ({arrived}/{expected} ranks arrived)")]
+    CollectiveTimeout {
+        rank: usize,
+        kind: &'static str,
+        ctx: u32,
+        arrived: usize,
+        expected: usize,
+        secs: u64,
+    },
+
+    #[error("payload size {got} bytes does not decode to element type of size {elem}")]
+    PayloadSizeMismatch { got: usize, elem: usize },
+
+    #[error("communicator split produced empty group for rank {rank}")]
+    EmptyGroup { rank: usize },
+
+    #[error("cartesian dims {dims:?} do not cover communicator size {size}")]
+    BadCartDims { dims: Vec<usize>, size: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = MpiError::RankOutOfRange { rank: 9, size: 4 };
+        assert!(e.to_string().contains("rank 9"));
+        let e = MpiError::RecvTimeout {
+            rank: 3,
+            src: Some(1),
+            tag: 7,
+            ctx: 0,
+            secs: 60,
+        };
+        assert!(e.to_string().contains("tag=7"));
+    }
+}

@@ -1,0 +1,132 @@
+//! PMPI-style interposition: every simulated MPI operation is reported to a
+//! chain of hooks on the owning rank. This mirrors how Caliper intercepts
+//! MPI via PMPI/GOTCHA on the real systems — the communication-pattern
+//! profiler in `caliper::comm_profiler` is simply one such hook.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Collective operation kinds, as the profiler sees them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollKind {
+    Barrier,
+    Bcast,
+    Reduce,
+    Allreduce,
+    Allgather,
+    Alltoall,
+    CommSplit,
+}
+
+impl CollKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollKind::Barrier => "MPI_Barrier",
+            CollKind::Bcast => "MPI_Bcast",
+            CollKind::Reduce => "MPI_Reduce",
+            CollKind::Allreduce => "MPI_Allreduce",
+            CollKind::Allgather => "MPI_Allgather",
+            CollKind::Alltoall => "MPI_Alltoall",
+            CollKind::CommSplit => "MPI_Comm_split",
+        }
+    }
+}
+
+/// One observed MPI operation. Peers are **world** ranks; times are virtual
+/// seconds (operation start and completion on the observing rank).
+#[derive(Debug, Clone)]
+pub enum MpiEvent {
+    Send {
+        dst: usize,
+        tag: i32,
+        bytes: usize,
+        t_start: f64,
+        t_end: f64,
+    },
+    Recv {
+        src: usize,
+        tag: i32,
+        bytes: usize,
+        t_start: f64,
+        t_end: f64,
+    },
+    Coll {
+        kind: CollKind,
+        /// Bytes contributed by this rank.
+        bytes: usize,
+        comm_size: usize,
+        t_start: f64,
+        t_end: f64,
+    },
+}
+
+impl MpiEvent {
+    /// Duration of the operation on the observing rank.
+    pub fn duration(&self) -> f64 {
+        match self {
+            MpiEvent::Send { t_start, t_end, .. }
+            | MpiEvent::Recv { t_start, t_end, .. }
+            | MpiEvent::Coll { t_start, t_end, .. } => t_end - t_start,
+        }
+    }
+}
+
+/// A hook receiving MPI events on one rank. Implementations are rank-local
+/// (no cross-thread sharing), hence no `Send`/`Sync` bound.
+pub trait MpiHook {
+    fn on_event(&mut self, rank: usize, ev: &MpiEvent);
+}
+
+/// Shared handle to a hook, as stored on a `Rank`.
+pub type HookHandle = Rc<RefCell<dyn MpiHook>>;
+
+/// A hook that simply records every event — used by tests.
+#[derive(Default)]
+pub struct RecordingHook {
+    pub events: Vec<MpiEvent>,
+}
+
+impl MpiHook for RecordingHook {
+    fn on_event(&mut self, _rank: usize, ev: &MpiEvent) {
+        self.events.push(ev.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(CollKind::Allreduce.name(), "MPI_Allreduce");
+        assert_eq!(CollKind::CommSplit.name(), "MPI_Comm_split");
+    }
+
+    #[test]
+    fn duration() {
+        let ev = MpiEvent::Send {
+            dst: 1,
+            tag: 0,
+            bytes: 8,
+            t_start: 1.0,
+            t_end: 1.5,
+        };
+        assert!((ev.duration() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recording_hook_records() {
+        let mut h = RecordingHook::default();
+        h.on_event(
+            0,
+            &MpiEvent::Coll {
+                kind: CollKind::Barrier,
+                bytes: 0,
+                comm_size: 4,
+                t_start: 0.0,
+                t_end: 1.0,
+            },
+        );
+        assert_eq!(h.events.len(), 1);
+    }
+}

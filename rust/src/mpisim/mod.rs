@@ -1,0 +1,52 @@
+//! `mpisim` — a deterministic simulated MPI substrate.
+//!
+//! The paper profiles real MPI applications on two production clusters. This
+//! module is the substitution (see DESIGN.md §1): a thread-per-rank message
+//! passing runtime whose *semantics* match the MPI subset the three
+//! applications need (blocking and nonblocking point-to-point, the common
+//! collectives, cartesian topologies, communicator splitting) and whose
+//! *timing* is virtual — every rank carries a logical clock advanced by a
+//! per-architecture network/compute model ([`netmodel`]), so the same binary
+//! "runs on" Dane (CPU) or Tioga (GPU) by switching machine models.
+//!
+//! Design properties:
+//!
+//! - **Deterministic**: message matching is per-(source, tag) FIFO; a rank's
+//!   sends are ordered by its own program order; collectives are sequenced
+//!   per-communicator. Given a fixed experiment spec, every metric and every
+//!   virtual timestamp is bit-reproducible across runs and thread schedules
+//!   (provided applications use concrete sources, which all three do).
+//! - **Observable**: every MPI operation flows through a PMPI-style hook
+//!   chain ([`hooks`]) — this is where the Caliper communication-pattern
+//!   profiler attaches, exactly like Caliper's GOTCHA/PMPI wrappers on the
+//!   real thing.
+//! - **Virtual time**: sends are eager (buffered) and cost the sender an
+//!   injection overhead; a message arrives at
+//!   `sender_clock + α(link) + bytes·β(link)`; receives complete at
+//!   `max(receiver_clock, arrival)`. Collectives synchronize participants to
+//!   `max(entry clocks) + model cost`. See [`netmodel`] for the Dane/Tioga
+//!   parameterizations and the statistical contention terms.
+
+pub mod cart;
+pub mod clock;
+pub mod collectives;
+pub mod comm;
+pub mod datatype;
+pub mod error;
+pub mod hooks;
+pub mod netmodel;
+pub mod p2p;
+pub mod request;
+pub mod world;
+
+pub use cart::CartComm;
+pub use comm::Comm;
+pub use datatype::MpiData;
+pub use error::MpiError;
+pub use hooks::{CollKind, MpiEvent, MpiHook};
+pub use netmodel::{ComputeParams, MachineModel, NetParams};
+pub use request::{RecvRequest, SendRequest, Status};
+pub use world::{Rank, World, WorldConfig};
+
+/// Wildcard tag for receives.
+pub const ANY_TAG: i32 = -1;

@@ -1,0 +1,245 @@
+//! Architecture performance models: virtual-time costs for communication and
+//! computation.
+//!
+//! Communication uses a two-level Hockney model (`α + β·bytes`) with distinct
+//! intra-node and inter-node link classes, block rank→node mapping, plus two
+//! *statistical* congestion terms that stand in for effects we cannot observe
+//! without a packet-level network simulator:
+//!
+//! - **NIC sharing**: ranks on a node share the node's injection bandwidth;
+//!   effective inter-node β is scaled by a factor that grows with
+//!   ranks-per-node.
+//! - **Fabric contention**: effective inter-node β grows mildly with the node
+//!   count (`1 + c·(nodes-1)^e`), capturing the congestion the paper observes
+//!   on Dane at 512 ranks (Fig 5) without modelling individual switches.
+//!
+//! Computation uses a roofline-style model: `max(flops/rate, bytes/bw)` plus
+//! a per-kernel launch overhead (large on the GPU machine — this is what
+//! makes small coarse-grid kernels comparatively expensive on Tioga, and what
+//! motivates the GPU message-aggregation behaviour in the Kripke analog).
+//!
+//! Concrete Dane/Tioga parameterizations live in `benchpark::system`; this
+//! module provides the mechanics and a neutral `test_machine()`.
+
+/// Point-to-point network parameters.
+#[derive(Debug, Clone)]
+pub struct NetParams {
+    /// Intra-node latency (s) and inverse bandwidth (s/B).
+    pub alpha_intra: f64,
+    pub beta_intra: f64,
+    /// Inter-node latency (s) and inverse bandwidth (s/B), uncongested.
+    pub alpha_inter: f64,
+    pub beta_inter: f64,
+    /// Sender-side injection overhead per message (s) — the part of a send
+    /// that occupies the sending rank itself (eager protocol).
+    pub send_overhead: f64,
+    /// Receiver-side completion overhead per message (s).
+    pub recv_overhead: f64,
+    /// NIC-sharing factor: effective inter-node β is multiplied by
+    /// `1 + nic_share * (ranks_per_node - 1) / ranks_per_node`.
+    pub nic_share: f64,
+    /// Fabric contention: β multiplier `1 + coeff * (nodes - 1)^exp`.
+    pub contention_coeff: f64,
+    pub contention_exp: f64,
+}
+
+/// Compute-side parameters (roofline + launch overhead).
+#[derive(Debug, Clone)]
+pub struct ComputeParams {
+    /// Effective per-rank floating-point rate (FLOP/s).
+    pub flops: f64,
+    /// Effective per-rank memory bandwidth (B/s).
+    pub mem_bw: f64,
+    /// Fixed overhead per kernel invocation (s). GPU ≫ CPU.
+    pub kernel_overhead: f64,
+}
+
+/// A machine: rank layout plus network and compute models.
+#[derive(Debug, Clone)]
+pub struct MachineModel {
+    pub name: String,
+    pub ranks_per_node: usize,
+    pub net: NetParams,
+    pub compute: ComputeParams,
+    /// True for GPU-centric systems (Tioga): applications may adapt, e.g.
+    /// Kripke aggregates sweep messages to amortize launch overheads.
+    pub gpu: bool,
+}
+
+/// Collective operation classes used by the collective cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollClass {
+    Barrier,
+    Bcast,
+    Reduce,
+    Allreduce,
+    Allgather,
+    Alltoall,
+}
+
+impl MachineModel {
+    /// Node that hosts a world rank (block mapping, as on the real clusters).
+    #[inline]
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    /// Number of nodes occupied by `total_ranks`.
+    #[inline]
+    pub fn nodes_for(&self, total_ranks: usize) -> usize {
+        total_ranks.div_ceil(self.ranks_per_node)
+    }
+
+    /// Effective inter-node inverse bandwidth under sharing + contention.
+    fn beta_inter_eff(&self, total_ranks: usize) -> f64 {
+        let rpn = self.ranks_per_node.min(total_ranks).max(1) as f64;
+        let nodes = self.nodes_for(total_ranks) as f64;
+        let share = 1.0 + self.net.nic_share * (rpn - 1.0) / rpn;
+        let contention = 1.0 + self.net.contention_coeff * (nodes - 1.0).max(0.0).powf(self.net.contention_exp);
+        self.net.beta_inter * share * contention
+    }
+
+    /// Wire time for one message of `bytes` from `src` to `dst` world rank.
+    /// (The sender additionally pays `send_overhead`, the receiver
+    /// `recv_overhead`; those are accounted in the p2p engine.)
+    pub fn transfer_time(&self, bytes: usize, src: usize, dst: usize, total_ranks: usize) -> f64 {
+        if self.node_of(src) == self.node_of(dst) {
+            self.net.alpha_intra + bytes as f64 * self.net.beta_intra
+        } else {
+            self.net.alpha_inter + bytes as f64 * self.beta_inter_eff(total_ranks)
+        }
+    }
+
+    /// Model cost of a collective over `p` ranks moving `bytes` per rank.
+    /// Standard log-tree / Rabenseifner-style estimates; `total_ranks` feeds
+    /// the contention model.
+    pub fn collective_time(
+        &self,
+        class: CollClass,
+        bytes: usize,
+        p: usize,
+        total_ranks: usize,
+    ) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let logp = (p as f64).log2().ceil().max(1.0);
+        // Collectives on multi-node jobs are dominated by inter-node links.
+        let nodes = self.nodes_for(total_ranks);
+        let (alpha, beta) = if nodes > 1 {
+            (self.net.alpha_inter, self.beta_inter_eff(total_ranks))
+        } else {
+            (self.net.alpha_intra, self.net.beta_intra)
+        };
+        let n = bytes as f64;
+        match class {
+            CollClass::Barrier => logp * alpha,
+            CollClass::Bcast => logp * (alpha + n * beta),
+            CollClass::Reduce => logp * alpha + n * beta * logp.min(2.0) + flop_term(self, n),
+            // Rabenseifner: 2·log(p)·α + 2·n·β (+ reduction flops)
+            CollClass::Allreduce => 2.0 * logp * alpha + 2.0 * n * beta + flop_term(self, n),
+            // Ring allgather: (p-1) steps of n bytes
+            CollClass::Allgather => (p as f64 - 1.0) * (alpha + n * beta),
+            CollClass::Alltoall => (p as f64 - 1.0) * (alpha + n * beta),
+        }
+    }
+
+    /// Roofline compute time for one kernel invocation.
+    pub fn compute_time(&self, flops: f64, bytes: f64) -> f64 {
+        let t_flop = flops / self.compute.flops;
+        let t_mem = bytes / self.compute.mem_bw;
+        self.compute.kernel_overhead + t_flop.max(t_mem)
+    }
+
+    /// A small symmetric machine for unit tests: 4 ranks/node, flat μs-scale
+    /// latencies, GB/s-scale bandwidths, no contention.
+    pub fn test_machine() -> MachineModel {
+        MachineModel {
+            name: "testbox".to_string(),
+            ranks_per_node: 4,
+            net: NetParams {
+                alpha_intra: 0.5e-6,
+                beta_intra: 1.0 / 20e9,
+                alpha_inter: 2.0e-6,
+                beta_inter: 1.0 / 10e9,
+                send_overhead: 0.2e-6,
+                recv_overhead: 0.2e-6,
+                nic_share: 0.0,
+                contention_coeff: 0.0,
+                contention_exp: 1.0,
+            },
+            compute: ComputeParams {
+                flops: 10e9,
+                mem_bw: 20e9,
+                kernel_overhead: 0.1e-6,
+            },
+            gpu: false,
+        }
+    }
+}
+
+/// Reduction arithmetic cost for reducing collectives.
+fn flop_term(m: &MachineModel, bytes: f64) -> f64 {
+    // one flop per 8-byte element
+    (bytes / 8.0) / m.compute.flops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_mapping_is_block() {
+        let m = MachineModel::test_machine();
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(3), 0);
+        assert_eq!(m.node_of(4), 1);
+        assert_eq!(m.nodes_for(9), 3);
+    }
+
+    #[test]
+    fn intra_faster_than_inter() {
+        let m = MachineModel::test_machine();
+        let intra = m.transfer_time(1 << 20, 0, 1, 8);
+        let inter = m.transfer_time(1 << 20, 0, 5, 8);
+        assert!(intra < inter, "intra {} inter {}", intra, inter);
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let m = MachineModel::test_machine();
+        let a = m.transfer_time(1024, 0, 5, 8);
+        let b = m.transfer_time(4096, 0, 5, 8);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn contention_raises_beta() {
+        let mut m = MachineModel::test_machine();
+        m.net.contention_coeff = 0.1;
+        m.net.contention_exp = 0.5;
+        let small = m.transfer_time(1 << 20, 0, 5, 8); // 2 nodes
+        let large = m.transfer_time(1 << 20, 0, 5, 64); // 16 nodes
+        assert!(large > small);
+    }
+
+    #[test]
+    fn collective_costs_scale_with_p() {
+        let m = MachineModel::test_machine();
+        let p8 = m.collective_time(CollClass::Allreduce, 1024, 8, 8);
+        let p64 = m.collective_time(CollClass::Allreduce, 1024, 64, 64);
+        assert!(p64 > p8);
+        assert_eq!(m.collective_time(CollClass::Barrier, 0, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn compute_roofline() {
+        let m = MachineModel::test_machine();
+        // flop-bound: 1e9 flops over 8 bytes
+        let t1 = m.compute_time(1e9, 8.0);
+        assert!((t1 - (0.1e-6 + 0.1)).abs() < 1e-9);
+        // memory-bound: 8 flops over 1e9 bytes
+        let t2 = m.compute_time(8.0, 1e9);
+        assert!((t2 - (0.1e-6 + 0.05)).abs() < 1e-9);
+    }
+}

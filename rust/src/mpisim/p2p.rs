@@ -1,0 +1,181 @@
+//! The point-to-point matching engine: one mailbox per world rank.
+//!
+//! Senders deposit envelopes (eager protocol) carrying the payload and the
+//! *virtual arrival time* computed from the sender's clock plus the network
+//! model; receivers block (real condvar wait) until a matching envelope is
+//! present, then synchronize their virtual clock to the arrival time.
+//!
+//! Matching is MPI-conformant: per (source, tag) FIFO in sender program
+//! order. `ANY_TAG` receives match the earliest-deposited envelope from the
+//! given source; ANY_SOURCE (`src = None`) matches the earliest-deposited
+//! envelope overall and is therefore only deterministic for applications
+//! whose matching is unambiguous (none of the three apps here use it).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::error::MpiError;
+use super::ANY_TAG;
+
+/// A message in flight (or queued unexpected).
+#[derive(Debug)]
+pub struct Envelope {
+    /// Sender world rank.
+    pub src: usize,
+    pub tag: i32,
+    pub ctx: u32,
+    pub payload: Box<[u8]>,
+    /// Virtual time at which the message is fully available at the receiver.
+    pub arrival: f64,
+}
+
+/// Per-rank mailbox: deposit-ordered queue of unexpected messages.
+#[derive(Default)]
+pub struct Mailbox {
+    queue: Mutex<VecDeque<Envelope>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deposit an envelope (called from the sender's thread).
+    pub fn deposit(&self, env: Envelope) {
+        let mut q = self.queue.lock().unwrap();
+        q.push_back(env);
+        // notify_all: multiple receivers only occur in tests; apps have one
+        // receiving thread per mailbox by construction.
+        self.cv.notify_all();
+    }
+
+    /// Number of queued (unmatched) envelopes — used by failure diagnostics.
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Block until an envelope matching (src, tag, ctx) is available and
+    /// remove it. `timeout` bounds *real* waiting time (deadlock guard).
+    pub fn match_recv(
+        &self,
+        my_rank: usize,
+        src: Option<usize>,
+        tag: i32,
+        ctx: u32,
+        timeout: Duration,
+    ) -> Result<Envelope, MpiError> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(idx) = Self::find_match(&q, src, tag, ctx) {
+                return Ok(q.remove(idx).unwrap());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(MpiError::RecvTimeout {
+                    rank: my_rank,
+                    src,
+                    tag,
+                    ctx,
+                    secs: timeout.as_secs(),
+                });
+            }
+            let (guard, _res) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    fn find_match(q: &VecDeque<Envelope>, src: Option<usize>, tag: i32, ctx: u32) -> Option<usize> {
+        q.iter().position(|e| {
+            e.ctx == ctx
+                && (tag == ANY_TAG || e.tag == tag)
+                && src.map(|s| e.src == s).unwrap_or(true)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn env(src: usize, tag: i32, ctx: u32, arrival: f64) -> Envelope {
+        Envelope {
+            src,
+            tag,
+            ctx,
+            payload: vec![0u8; 8].into_boxed_slice(),
+            arrival,
+        }
+    }
+
+    #[test]
+    fn fifo_per_source_tag() {
+        let mb = Mailbox::new();
+        mb.deposit(env(1, 7, 0, 1.0));
+        mb.deposit(env(1, 7, 0, 2.0));
+        let a = mb
+            .match_recv(0, Some(1), 7, 0, Duration::from_secs(1))
+            .unwrap();
+        let b = mb
+            .match_recv(0, Some(1), 7, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(a.arrival, 1.0);
+        assert_eq!(b.arrival, 2.0);
+    }
+
+    #[test]
+    fn tag_and_ctx_filtering() {
+        let mb = Mailbox::new();
+        mb.deposit(env(1, 7, 0, 1.0));
+        mb.deposit(env(1, 8, 0, 2.0));
+        mb.deposit(env(1, 8, 5, 3.0));
+        let e = mb
+            .match_recv(0, Some(1), 8, 5, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.arrival, 3.0);
+        let e = mb
+            .match_recv(0, Some(1), 8, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.arrival, 2.0);
+        assert_eq!(mb.pending(), 1);
+    }
+
+    #[test]
+    fn any_tag_matches_earliest() {
+        let mb = Mailbox::new();
+        mb.deposit(env(2, 5, 0, 1.0));
+        mb.deposit(env(2, 3, 0, 2.0));
+        let e = mb
+            .match_recv(0, Some(2), ANY_TAG, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.tag, 5);
+    }
+
+    #[test]
+    fn timeout_on_no_match() {
+        let mb = Mailbox::new();
+        mb.deposit(env(1, 7, 0, 1.0));
+        let err = mb
+            .match_recv(3, Some(2), 7, 0, Duration::from_millis(20))
+            .unwrap_err();
+        assert!(matches!(err, MpiError::RecvTimeout { rank: 3, .. }));
+    }
+
+    #[test]
+    fn cross_thread_wakeup() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            mb2.deposit(env(4, 1, 0, 9.0));
+        });
+        let e = mb
+            .match_recv(0, Some(4), 1, 0, Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(e.arrival, 9.0);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,839 @@
+//! The world: thread-per-rank launcher and the `Rank` handle exposing the
+//! MPI-like API to application code.
+//!
+//! ```no_run
+//! use commscope::mpisim::{World, WorldConfig, MachineModel};
+//!
+//! let cfg = WorldConfig::new(4, MachineModel::test_machine());
+//! let results = World::run(cfg, |rank| {
+//!     let world = rank.world();
+//!     if rank.rank == 0 {
+//!         rank.send(&[1.0f64, 2.0], 1, 0, &world).unwrap();
+//!     } else if rank.rank == 1 {
+//!         let (data, _st) = rank.recv::<f64>(Some(0), 0, &world).unwrap();
+//!         assert_eq!(data, vec![1.0, 2.0]);
+//!     }
+//!     rank.now()
+//! });
+//! assert_eq!(results.len(), 4);
+//! ```
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use super::clock::Clock;
+use super::collectives::{frame_concat, frame_split, CollBoard, ReduceOp};
+use super::comm::Comm;
+use super::datatype::{decode, encode, MpiData};
+use super::error::MpiError;
+use super::hooks::{CollKind, HookHandle, MpiEvent};
+use super::netmodel::{CollClass, MachineModel};
+use super::p2p::{Envelope, Mailbox};
+use super::request::{RecvRequest, SendRequest, Status};
+
+/// Configuration for one simulated job.
+#[derive(Clone)]
+pub struct WorldConfig {
+    pub size: usize,
+    pub machine: MachineModel,
+    /// Real-time deadlock guard for blocking operations.
+    pub timeout: Duration,
+    /// Stack size per rank thread.
+    pub stack_size: usize,
+}
+
+impl WorldConfig {
+    pub fn new(size: usize, machine: MachineModel) -> Self {
+        WorldConfig {
+            size,
+            machine,
+            timeout: Duration::from_secs(120),
+            stack_size: 4 << 20,
+        }
+    }
+
+    pub fn with_timeout(mut self, t: Duration) -> Self {
+        self.timeout = t;
+        self
+    }
+}
+
+/// Shared state for one job.
+pub(crate) struct WorldCore {
+    pub size: usize,
+    pub machine: MachineModel,
+    pub timeout: Duration,
+    mailboxes: Vec<Mailbox>,
+    coll: CollBoard,
+}
+
+/// The world launcher.
+pub struct World;
+
+impl World {
+    /// Run `f` on `cfg.size` ranks (one OS thread each) and collect each
+    /// rank's return value in rank order. Panics in a rank propagate.
+    pub fn run<T, F>(cfg: WorldConfig, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&mut Rank) -> T + Sync,
+    {
+        let core = WorldCore {
+            size: cfg.size,
+            machine: cfg.machine.clone(),
+            timeout: cfg.timeout,
+            mailboxes: (0..cfg.size).map(|_| Mailbox::new()).collect(),
+            coll: CollBoard::new(),
+        };
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(cfg.size);
+            for r in 0..cfg.size {
+                let core_ref = &core;
+                let f_ref = &f;
+                let h = std::thread::Builder::new()
+                    .name(format!("rank-{}", r))
+                    .stack_size(cfg.stack_size)
+                    .spawn_scoped(scope, move || {
+                        let mut rank = Rank::new(core_ref, r);
+                        f_ref(&mut rank)
+                    })
+                    .expect("failed to spawn rank thread");
+                handles.push(h);
+            }
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(r, h)| match h.join() {
+                    Ok(v) => v,
+                    Err(e) => {
+                        let msg = e
+                            .downcast_ref::<String>()
+                            .map(|s| s.as_str())
+                            .or_else(|| e.downcast_ref::<&str>().copied())
+                            .unwrap_or("<non-string panic>");
+                        panic!("rank {} panicked: {}", r, msg)
+                    }
+                })
+                .collect()
+        })
+    }
+}
+
+/// Per-rank handle: virtual clock, hooks, and the MPI-like API surface.
+pub struct Rank<'w> {
+    /// World rank of this process.
+    pub rank: usize,
+    core: &'w WorldCore,
+    clock: Clock,
+    hooks: Vec<HookHandle>,
+    /// Per-context collective sequence numbers (this rank's call count).
+    coll_seq: HashMap<u32, u64>,
+    /// Per-context comm_split call count (derives child contexts).
+    split_seq: HashMap<u32, u64>,
+}
+
+impl<'w> Rank<'w> {
+    fn new(core: &'w WorldCore, rank: usize) -> Self {
+        Rank {
+            rank,
+            core,
+            clock: Clock::new(),
+            hooks: Vec::new(),
+            coll_seq: HashMap::new(),
+            split_seq: HashMap::new(),
+        }
+    }
+
+    // ---- introspection --------------------------------------------------
+
+    /// Total number of ranks in the world.
+    pub fn size(&self) -> usize {
+        self.core.size
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// The machine model this job runs on.
+    pub fn machine(&self) -> &MachineModel {
+        &self.core.machine
+    }
+
+    /// The world communicator.
+    pub fn world(&self) -> Comm {
+        Comm::world(self.rank, self.core.size)
+    }
+
+    // ---- time -----------------------------------------------------------
+
+    /// Advance virtual time by an explicit amount (e.g. modeled I/O).
+    pub fn advance(&mut self, dt: f64) {
+        self.clock.advance(dt);
+    }
+
+    /// Advance virtual time by the modeled cost of a compute kernel.
+    pub fn compute(&mut self, flops: f64, bytes: f64) {
+        let dt = self.core.machine.compute_time(flops, bytes);
+        self.clock.advance(dt);
+    }
+
+    // ---- hooks ----------------------------------------------------------
+
+    /// Attach a PMPI-style hook (e.g. the Caliper comm profiler).
+    pub fn add_hook(&mut self, hook: HookHandle) {
+        self.hooks.push(hook);
+    }
+
+    fn emit(&self, ev: MpiEvent) {
+        for h in &self.hooks {
+            h.borrow_mut().on_event(self.rank, &ev);
+        }
+    }
+
+    // ---- point-to-point -------------------------------------------------
+
+    /// Blocking (eager/buffered) send of a typed slice.
+    pub fn send<T: MpiData>(
+        &mut self,
+        buf: &[T],
+        dst: usize,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<(), MpiError> {
+        self.isend(buf, dst, tag, comm)?.wait()
+    }
+
+    /// Nonblocking send (eager, so complete at return).
+    pub fn isend<T: MpiData>(
+        &mut self,
+        buf: &[T],
+        dst: usize,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<SendRequest, MpiError> {
+        if dst >= comm.size() {
+            return Err(MpiError::RankOutOfRange {
+                rank: dst,
+                size: comm.size(),
+            });
+        }
+        let dst_world = comm.world_rank(dst);
+        let payload = encode(buf);
+        let bytes = payload.len();
+        let t_start = self.clock.now();
+        // Sender pays its injection overhead.
+        self.clock.advance(self.core.machine.net.send_overhead);
+        let t_end = self.clock.now();
+        let arrival = t_start
+            + self
+                .core
+                .machine
+                .transfer_time(bytes, self.rank, dst_world, self.core.size);
+        self.core.mailboxes[dst_world].deposit(Envelope {
+            src: self.rank,
+            tag,
+            ctx: comm.ctx,
+            payload,
+            arrival,
+        });
+        self.emit(MpiEvent::Send {
+            dst: dst_world,
+            tag,
+            bytes,
+            t_start,
+            t_end,
+        });
+        Ok(SendRequest { _bytes: bytes })
+    }
+
+    /// Blocking receive. `src` is a communicator rank, or `None` for
+    /// ANY_SOURCE (see module docs for the determinism caveat).
+    pub fn recv<T: MpiData>(
+        &mut self,
+        src: Option<usize>,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<(Vec<T>, Status), MpiError> {
+        let req = self.irecv(src, tag, comm)?;
+        self.wait_recv(req)
+    }
+
+    /// Post a nonblocking receive; match happens at [`Rank::wait_recv`].
+    pub fn irecv(
+        &mut self,
+        src: Option<usize>,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<RecvRequest, MpiError> {
+        let src_world = match src {
+            Some(s) => {
+                if s >= comm.size() {
+                    return Err(MpiError::RankOutOfRange {
+                        rank: s,
+                        size: comm.size(),
+                    });
+                }
+                Some(comm.world_rank(s))
+            }
+            None => None,
+        };
+        Ok(RecvRequest {
+            src: src_world,
+            tag,
+            ctx: comm.ctx,
+            post_time: self.clock.now(),
+            done: false,
+        })
+    }
+
+    /// Complete a posted receive, blocking until the matching message has
+    /// (logically) arrived. Advances the virtual clock to
+    /// `max(now, arrival) + recv_overhead`.
+    pub fn wait_recv<T: MpiData>(
+        &mut self,
+        mut req: RecvRequest,
+    ) -> Result<(Vec<T>, Status), MpiError> {
+        debug_assert!(!req.done, "double wait on RecvRequest");
+        req.done = true;
+        let env = self.core.mailboxes[self.rank].match_recv(
+            self.rank,
+            req.src,
+            req.tag,
+            req.ctx,
+            self.core.timeout,
+        )?;
+        let t_start = self.clock.now().min(req.post_time);
+        self.clock.sync_to(env.arrival);
+        self.clock.advance(self.core.machine.net.recv_overhead);
+        let t_end = self.clock.now();
+        let status = Status {
+            src: env.src,
+            tag: env.tag,
+            bytes: env.payload.len(),
+        };
+        self.emit(MpiEvent::Recv {
+            src: env.src,
+            tag: env.tag,
+            bytes: env.payload.len(),
+            t_start,
+            t_end,
+        });
+        let data = decode::<T>(&env.payload)?;
+        Ok((data, status))
+    }
+
+    /// Wait on a set of receive requests in order, collecting payloads.
+    pub fn waitall_recv<T: MpiData>(
+        &mut self,
+        reqs: Vec<RecvRequest>,
+    ) -> Result<Vec<(Vec<T>, Status)>, MpiError> {
+        reqs.into_iter().map(|r| self.wait_recv(r)).collect()
+    }
+
+    // ---- collectives ----------------------------------------------------
+
+    fn next_coll_seq(&mut self, ctx: u32) -> u64 {
+        let seq = self.coll_seq.entry(ctx).or_insert(0);
+        let v = *seq;
+        *seq += 1;
+        v
+    }
+
+    /// Internal: run one collective through the board, advance the clock by
+    /// the model cost, and emit the hook event.
+    fn collective(
+        &mut self,
+        comm: &Comm,
+        kind: CollKind,
+        class: CollClass,
+        contrib: Box<[u8]>,
+        cost_bytes: usize,
+        finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
+    ) -> Result<std::sync::Arc<[u8]>, MpiError> {
+        let seq = self.next_coll_seq(comm.ctx);
+        let t_start = self.clock.now();
+        let static_kind = kind.name();
+        let (result, max_entry) = self.core.coll.run(
+            (comm.ctx, seq),
+            static_kind,
+            comm.size(),
+            comm.rank,
+            self.rank,
+            t_start,
+            contrib,
+            finalize,
+            self.core.timeout,
+        )?;
+        let cost =
+            self.core
+                .machine
+                .collective_time(class, cost_bytes, comm.size(), self.core.size);
+        self.clock.sync_to(max_entry);
+        self.clock.advance(cost);
+        let t_end = self.clock.now();
+        self.emit(MpiEvent::Coll {
+            kind,
+            bytes: cost_bytes,
+            comm_size: comm.size(),
+            t_start,
+            t_end,
+        });
+        Ok(result)
+    }
+
+    /// Barrier over `comm`.
+    pub fn barrier(&mut self, comm: &Comm) -> Result<(), MpiError> {
+        self.collective(
+            comm,
+            CollKind::Barrier,
+            CollClass::Barrier,
+            Box::from(&[][..]),
+            0,
+            &|_| Box::from(&[][..]),
+        )?;
+        Ok(())
+    }
+
+    /// Broadcast `data` from communicator rank `root`; every rank returns
+    /// the root's buffer.
+    pub fn bcast<T: MpiData>(
+        &mut self,
+        data: &[T],
+        root: usize,
+        comm: &Comm,
+    ) -> Result<Vec<T>, MpiError> {
+        let contrib = if comm.rank == root {
+            encode(data)
+        } else {
+            Box::from(&[][..])
+        };
+        let bytes = data.len() * T::ELEM_SIZE;
+        let result = self.collective(
+            comm,
+            CollKind::Bcast,
+            CollClass::Bcast,
+            contrib,
+            bytes,
+            &move |parts| parts[root].take().expect("root contribution missing"),
+        )?;
+        decode::<T>(&result)
+    }
+
+    /// All-reduce of f64 lanes with `op`.
+    pub fn allreduce_f64(
+        &mut self,
+        data: &[f64],
+        op: ReduceOp,
+        comm: &Comm,
+    ) -> Result<Vec<f64>, MpiError> {
+        let contrib = encode(data);
+        let n = data.len();
+        let result = self.collective(
+            comm,
+            CollKind::Allreduce,
+            CollClass::Allreduce,
+            contrib,
+            n * 8,
+            &move |parts| reduce_lanes_f64(parts, n, op),
+        )?;
+        decode::<f64>(&result)
+    }
+
+    /// All-reduce of u64 lanes with `op` (exact integer arithmetic — used by
+    /// the profile aggregator for counts).
+    pub fn allreduce_u64(
+        &mut self,
+        data: &[u64],
+        op: ReduceOp,
+        comm: &Comm,
+    ) -> Result<Vec<u64>, MpiError> {
+        let contrib = encode(data);
+        let n = data.len();
+        let result = self.collective(
+            comm,
+            CollKind::Allreduce,
+            CollClass::Allreduce,
+            contrib,
+            n * 8,
+            &move |parts| reduce_lanes_u64(parts, n, op),
+        )?;
+        decode::<u64>(&result)
+    }
+
+    /// Reduce to `root`; root receives the reduction, others an empty vec.
+    pub fn reduce_f64(
+        &mut self,
+        data: &[f64],
+        op: ReduceOp,
+        root: usize,
+        comm: &Comm,
+    ) -> Result<Vec<f64>, MpiError> {
+        let contrib = encode(data);
+        let n = data.len();
+        let result = self.collective(
+            comm,
+            CollKind::Reduce,
+            CollClass::Reduce,
+            contrib,
+            n * 8,
+            &move |parts| reduce_lanes_f64(parts, n, op),
+        )?;
+        if comm.rank == root {
+            decode::<f64>(&result)
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    /// All-gather with variable-length contributions; returns one `Vec<T>`
+    /// per communicator rank, in rank order.
+    pub fn allgatherv<T: MpiData>(
+        &mut self,
+        data: &[T],
+        comm: &Comm,
+    ) -> Result<Vec<Vec<T>>, MpiError> {
+        let contrib = encode(data);
+        let bytes = contrib.len();
+        let result = self.collective(
+            comm,
+            CollKind::Allgather,
+            CollClass::Allgather,
+            contrib,
+            bytes,
+            &|parts| frame_concat(parts),
+        )?;
+        frame_split(&result)
+            .into_iter()
+            .map(|b| decode::<T>(&b))
+            .collect()
+    }
+
+    // ---- communicator management ----------------------------------------
+
+    /// Split `comm` into sub-communicators by `color`; ranks with the same
+    /// color land in the same child, ordered by (key, parent rank). This is
+    /// a collective (implemented over the board, costed as an allgather).
+    pub fn comm_split(
+        &mut self,
+        comm: &Comm,
+        color: u64,
+        key: u64,
+    ) -> Result<Comm, MpiError> {
+        let split_seq = {
+            let c = self.split_seq.entry(comm.ctx).or_insert(0);
+            let v = *c;
+            *c += 1;
+            v
+        };
+        // allgather (color, key, world_rank)
+        let my = [color, key, self.rank as u64];
+        let contrib = encode(&my[..]);
+        let result = self.collective(
+            comm,
+            CollKind::CommSplit,
+            CollClass::Allgather,
+            contrib,
+            24,
+            &|parts| frame_concat(parts),
+        )?;
+        let entries: Vec<(u64, u64, usize, usize)> = frame_split(&result)
+            .into_iter()
+            .enumerate()
+            .map(|(comm_rank, b)| {
+                let v = decode::<u64>(&b).expect("bad split payload");
+                (v[0], v[1], v[2] as usize, comm_rank)
+            })
+            .collect();
+        let mut members: Vec<(u64, usize, usize)> = entries
+            .iter()
+            .filter(|e| e.0 == color)
+            .map(|e| (e.1, e.3, e.2)) // (key, parent comm rank, world rank)
+            .collect();
+        members.sort();
+        if members.is_empty() {
+            return Err(MpiError::EmptyGroup { rank: self.rank });
+        }
+        let ranks: Vec<usize> = members.iter().map(|m| m.2).collect();
+        let my_idx = ranks
+            .iter()
+            .position(|&w| w == self.rank)
+            .expect("self not in split group");
+        Ok(Comm {
+            ctx: Comm::derive_ctx(comm.ctx, split_seq.wrapping_add(color.rotate_left(17))),
+            ranks,
+            rank: my_idx,
+        })
+    }
+}
+
+fn reduce_lanes_f64(parts: &mut [Option<Box<[u8]>>], n: usize, op: ReduceOp) -> Box<[u8]> {
+    let mut acc = vec![op.identity_f64(); n];
+    for p in parts.iter() {
+        let vals = decode::<f64>(p.as_ref().expect("missing contribution")).unwrap();
+        assert_eq!(vals.len(), n, "allreduce lane count mismatch");
+        for (a, v) in acc.iter_mut().zip(vals) {
+            *a = op.apply_f64(*a, v);
+        }
+    }
+    encode(&acc)
+}
+
+fn reduce_lanes_u64(parts: &mut [Option<Box<[u8]>>], n: usize, op: ReduceOp) -> Box<[u8]> {
+    let mut acc = vec![op.identity_u64(); n];
+    for p in parts.iter() {
+        let vals = decode::<u64>(p.as_ref().expect("missing contribution")).unwrap();
+        assert_eq!(vals.len(), n, "allreduce lane count mismatch");
+        for (a, v) in acc.iter_mut().zip(vals) {
+            *a = op.apply_u64(*a, v);
+        }
+    }
+    encode(&acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize) -> WorldConfig {
+        WorldConfig::new(n, MachineModel::test_machine()).with_timeout(Duration::from_secs(20))
+    }
+
+    #[test]
+    fn ring_pass() {
+        let n = 8;
+        let sums = World::run(cfg(n), |rank| {
+            let world = rank.world();
+            let next = (rank.rank + 1) % n;
+            let prev = (rank.rank + n - 1) % n;
+            rank.send(&[rank.rank as f64], next, 0, &world).unwrap();
+            let (data, st) = rank.recv::<f64>(Some(prev), 0, &world).unwrap();
+            assert_eq!(st.src, prev);
+            data[0]
+        });
+        let total: f64 = sums.iter().sum();
+        assert_eq!(total, (0..n).map(|x| x as f64).sum());
+    }
+
+    #[test]
+    fn virtual_time_advances_on_comm() {
+        let times = World::run(cfg(2), |rank| {
+            let world = rank.world();
+            if rank.rank == 0 {
+                rank.advance(1.0); // sender is busy until t=1
+                rank.send(&vec![0u8; 1_000_000], 1, 0, &world).unwrap();
+            } else {
+                let _ = rank.recv::<u8>(Some(0), 0, &world).unwrap();
+            }
+            rank.now()
+        });
+        // Receiver must see t >= 1.0 + transfer time of 1 MB.
+        let m = MachineModel::test_machine();
+        let wire = m.transfer_time(1_000_000, 0, 1, 2);
+        assert!(times[1] >= 1.0 + wire, "t1={} wire={}", times[1], wire);
+    }
+
+    #[test]
+    fn allreduce_sum_and_max() {
+        let n = 16;
+        let res = World::run(cfg(n), |rank| {
+            let world = rank.world();
+            let s = rank
+                .allreduce_f64(&[rank.rank as f64, 1.0], ReduceOp::Sum, &world)
+                .unwrap();
+            let m = rank
+                .allreduce_f64(&[rank.rank as f64], ReduceOp::Max, &world)
+                .unwrap();
+            (s, m)
+        });
+        for (s, m) in res {
+            assert_eq!(s, vec![120.0, 16.0]);
+            assert_eq!(m, vec![15.0]);
+        }
+    }
+
+    #[test]
+    fn allreduce_u64_exact() {
+        let n = 4;
+        let res = World::run(cfg(n), |rank| {
+            let world = rank.world();
+            rank.allreduce_u64(&[1u64 << 60], ReduceOp::Max, &world)
+                .unwrap()
+        });
+        for r in res {
+            assert_eq!(r, vec![1u64 << 60]);
+        }
+    }
+
+    #[test]
+    fn bcast_from_nonzero_root() {
+        let res = World::run(cfg(5), |rank| {
+            let world = rank.world();
+            let data = if rank.rank == 3 {
+                vec![42.0f64, 7.0]
+            } else {
+                vec![0.0; 2]
+            };
+            rank.bcast(&data, 3, &world).unwrap()
+        });
+        for r in res {
+            assert_eq!(r, vec![42.0, 7.0]);
+        }
+    }
+
+    #[test]
+    fn allgatherv_variable_sizes() {
+        let res = World::run(cfg(4), |rank| {
+            let world = rank.world();
+            let mine: Vec<u32> = (0..rank.rank as u32).collect();
+            rank.allgatherv(&mine, &world).unwrap()
+        });
+        for r in res {
+            assert_eq!(r.len(), 4);
+            assert_eq!(r[0], Vec::<u32>::new());
+            assert_eq!(r[3], vec![0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn reduce_only_root_gets_result() {
+        let res = World::run(cfg(4), |rank| {
+            let world = rank.world();
+            rank.reduce_f64(&[1.0], ReduceOp::Sum, 2, &world).unwrap()
+        });
+        assert_eq!(res[2], vec![4.0]);
+        assert!(res[0].is_empty() && res[1].is_empty() && res[3].is_empty());
+    }
+
+    #[test]
+    fn barrier_synchronizes_clocks() {
+        let times = World::run(cfg(4), |rank| {
+            let world = rank.world();
+            rank.advance(rank.rank as f64); // stagger
+            rank.barrier(&world).unwrap();
+            rank.now()
+        });
+        // all clocks >= the max pre-barrier clock (3.0)
+        for t in &times {
+            assert!(*t >= 3.0, "t={}", t);
+        }
+        // and equal (same sync point + same cost)
+        for t in &times {
+            assert!((t - times[0]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn comm_split_even_odd() {
+        let res = World::run(cfg(6), |rank| {
+            let world = rank.world();
+            let color = (rank.rank % 2) as u64;
+            let sub = rank.comm_split(&world, color, rank.rank as u64).unwrap();
+            let s = rank
+                .allreduce_f64(&[rank.rank as f64], ReduceOp::Sum, &sub)
+                .unwrap();
+            (sub.size(), s[0])
+        });
+        for (r, (size, sum)) in res.iter().enumerate() {
+            assert_eq!(*size, 3);
+            if r % 2 == 0 {
+                assert_eq!(*sum, 0.0 + 2.0 + 4.0);
+            } else {
+                assert_eq!(*sum, 1.0 + 3.0 + 5.0);
+            }
+        }
+    }
+
+    #[test]
+    fn isend_irecv_waitall() {
+        let n = 4;
+        let res = World::run(cfg(n), |rank| {
+            let world = rank.world();
+            // everyone sends to everyone (including self? no: skip self)
+            for dst in 0..n {
+                if dst != rank.rank {
+                    rank.isend(&[rank.rank as f64], dst, 9, &world).unwrap();
+                }
+            }
+            let me = rank.rank;
+            let mut reqs = Vec::new();
+            for s in (0..n).filter(|&s| s != me) {
+                reqs.push(rank.irecv(Some(s), 9, &world).unwrap());
+            }
+            let msgs = rank.waitall_recv::<f64>(reqs).unwrap();
+            msgs.iter().map(|(d, _)| d[0]).sum::<f64>()
+        });
+        for (r, sum) in res.iter().enumerate() {
+            let expect: f64 = (0..n).filter(|&s| s != r).map(|s| s as f64).sum();
+            assert_eq!(*sum, expect);
+        }
+    }
+
+    #[test]
+    fn hooks_observe_traffic() {
+        use super::super::hooks::RecordingHook;
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let counts = World::run(cfg(2), |rank| {
+            let hook = Rc::new(RefCell::new(RecordingHook::default()));
+            rank.add_hook(hook.clone());
+            let world = rank.world();
+            if rank.rank == 0 {
+                rank.send(&[1.0f64; 10], 1, 0, &world).unwrap();
+            } else {
+                let _ = rank.recv::<f64>(Some(0), 0, &world).unwrap();
+            }
+            rank.barrier(&world).unwrap();
+            let evs = &hook.borrow().events;
+            let sends = evs
+                .iter()
+                .filter(|e| matches!(e, MpiEvent::Send { .. }))
+                .count();
+            let recvs = evs
+                .iter()
+                .filter(|e| matches!(e, MpiEvent::Recv { .. }))
+                .count();
+            let colls = evs
+                .iter()
+                .filter(|e| matches!(e, MpiEvent::Coll { .. }))
+                .count();
+            (sends, recvs, colls)
+        });
+        assert_eq!(counts[0], (1, 0, 1));
+        assert_eq!(counts[1], (0, 1, 1));
+    }
+
+    #[test]
+    fn determinism_across_runs() {
+        let run = || {
+            World::run(cfg(8), |rank| {
+                let world = rank.world();
+                // a little stencil-ish exchange plus a reduction
+                let left = (rank.rank + 7) % 8;
+                let right = (rank.rank + 1) % 8;
+                rank.compute(1e6, 1e5);
+                rank.send(&vec![rank.rank as f64; 100], right, 1, &world)
+                    .unwrap();
+                let (d, _) = rank.recv::<f64>(Some(left), 1, &world).unwrap();
+                let s = rank.allreduce_f64(&[d[0]], ReduceOp::Sum, &world).unwrap();
+                (rank.now(), s[0])
+            })
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "virtual times must be bit-identical");
+            assert_eq!(x.1, y.1);
+        }
+    }
+
+    #[test]
+    fn rank_out_of_range_errors() {
+        World::run(cfg(2), |rank| {
+            let world = rank.world();
+            let err = rank.send(&[0.0f64], 5, 0, &world).unwrap_err();
+            assert!(matches!(err, MpiError::RankOutOfRange { rank: 5, size: 2 }));
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor as recorded in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|v| v.as_u64().map(|u| u as usize))
+            .collect::<Option<Vec<_>>>()
+            .context("non-integer dim")?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .context("tensor spec missing dtype")?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => bail!("manifest.json root must be an object"),
+        };
+        let mut models = BTreeMap::new();
+        for (name, entry) in obj {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("model {} missing file", name))?
+                .to_string();
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("model {} missing {}", name, key))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    file,
+                    inputs: specs("inputs")?,
+                    outputs: specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{}' not in manifest", name))
+    }
+
+    /// Absolute path of a model's HLO text file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.model(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "amg_jacobi": {
+        "file": "amg_jacobi.hlo.txt",
+        "inputs": [
+          {"shape": [18,18,18], "dtype": "float32"},
+          {"shape": [16,16,16], "dtype": "float32"}
+        ],
+        "outputs": [{"shape": [16,16,16], "dtype": "float32"}]
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let model = m.model("amg_jacobi").unwrap();
+        assert_eq!(model.inputs.len(), 2);
+        assert_eq!(model.inputs[0].shape, vec![18, 18, 18]);
+        assert_eq!(model.inputs[0].elements(), 18 * 18 * 18);
+        assert_eq!(model.outputs[0].dtype, "float32");
+        assert_eq!(
+            m.hlo_path("amg_jacobi").unwrap(),
+            PathBuf::from("/tmp/a/amg_jacobi.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn scalar_output_shape() {
+        let text = r#"{"m": {"file": "m.hlo.txt", "inputs": [], "outputs": [{"shape": [], "dtype": "float32"}]}}"#;
+        let m = Manifest::parse(text, PathBuf::from(".")).unwrap();
+        assert_eq!(m.model("m").unwrap().outputs[0].elements(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("[1,2]", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse("{\"x\": {}}", PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Single-thread PJRT executor: load HLO text, compile once, execute many.
+//!
+//! Not `Send` (the `xla` crate's client is `Rc`-based); see
+//! [`super::service`] for the cross-thread front end.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Manifest, ModelInfo};
+
+/// Owns the PJRT CPU client and the compiled executables.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU PJRT client and eagerly compile every model in the
+    /// manifest (compile-once, execute-many).
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Executor> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for name in manifest.models.keys() {
+            let path = manifest.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", name))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Executor {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.manifest.model(name)
+    }
+
+    /// Execute `name` with f32 inputs (row-major, shapes per the manifest).
+    /// Returns one flat f32 vector per output (scalars → length-1).
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let info = self.manifest.model(name)?;
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                name,
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            if data.len() != spec.elements() {
+                bail!(
+                    "{}: input {} has {} elements, manifest says {:?} = {}",
+                    name,
+                    i,
+                    data.len(),
+                    spec.shape,
+                    spec.elements()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.is_empty() {
+                lit
+            } else {
+                lit.reshape(&dims)
+                    .with_context(|| format!("reshaping input {} of {}", i, name))?
+            };
+            literals.push(lit);
+        }
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("executable '{}' not loaded", name))?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", name))?;
+        // return_tuple=True at lowering: one tuple literal on device 0.
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        if parts.len() != info.outputs.len() {
+            bail!(
+                "{}: manifest declares {} outputs, executable returned {}",
+                name,
+                info.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, part) in parts.into_iter().enumerate() {
+            let v = part
+                .to_vec::<f32>()
+                .with_context(|| format!("decoding output {} of {}", i, name))?;
+            if v.len() != info.outputs[i].elements() {
+                bail!(
+                    "{}: output {} has {} elements, manifest says {}",
+                    name,
+                    i,
+                    v.len(),
+                    info.outputs[i].elements()
+                );
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_roundtrip.rs
+// (they require `make artifacts` to have run).

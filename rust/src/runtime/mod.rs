@@ -1,0 +1,27 @@
+//! `runtime` — the PJRT bridge that executes the AOT-compiled JAX/Pallas
+//! artifacts from the Rust hot path.
+//!
+//! Build-time Python (`python/compile/aot.py`) lowers the L2 models to HLO
+//! **text** under `artifacts/` (text, not serialized proto — xla_extension
+//! 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids; the text parser
+//! reassigns them). At startup the Rust side:
+//!
+//! 1. [`artifact`] parses `artifacts/manifest.json` (names, shapes, dtypes),
+//! 2. [`executor`] creates a `PjRtClient::cpu()`, loads each
+//!    `<name>.hlo.txt` via `HloModuleProto::from_text_file`, compiles it
+//!    once, and executes with concrete buffers,
+//! 3. [`service`] wraps the executor in a dedicated compute thread (the
+//!    `xla` crate's handles are `Rc`-based and thus not `Send`), exposing a
+//!    cloneable, thread-safe [`service::ComputeHandle`] that simulated ranks
+//!    call — the software analog of node-shared accelerators.
+
+pub mod artifact;
+pub mod executor;
+pub mod service;
+
+pub use artifact::{Manifest, ModelInfo, TensorSpec};
+pub use executor::Executor;
+pub use service::{ComputeHandle, ComputeService};
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

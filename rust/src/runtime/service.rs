@@ -1,0 +1,149 @@
+//! Cross-thread compute service: one dedicated thread owns the PJRT
+//! [`Executor`]; simulated ranks talk to it through a cloneable
+//! [`ComputeHandle`].
+//!
+//! The indirection exists because the `xla` crate's client types are
+//! `Rc`-based (not `Send`), while our ranks are OS threads. It also mirrors
+//! the deployment reality the paper's Tioga runs have — many ranks feeding
+//! shared accelerator queues. Requests are serialized per service thread;
+//! for the small canonical artifact shapes this is not a bottleneck
+//! (measured in EXPERIMENTS.md §Perf).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::executor::Executor;
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>, String>>,
+    },
+    Platform {
+        reply: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle used by rank threads.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ComputeHandle {
+    /// Execute a compiled model; blocks until the service replies.
+    pub fn execute(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("compute service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("compute service dropped the reply"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Platform { reply })
+            .map_err(|_| anyhow!("compute service is down"))?;
+        rx.recv().map_err(|_| anyhow!("no reply"))
+    }
+}
+
+/// The owning side: spawns the service thread, shuts it down on drop.
+pub struct ComputeService {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Start a service over the artifacts in `dir`. Fails fast if the
+    /// artifacts are missing or won't compile.
+    pub fn start(dir: impl Into<std::path::PathBuf>) -> Result<ComputeService> {
+        let dir = dir.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-compute".to_string())
+            .spawn(move || {
+                let exec = match Executor::load(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("{:#}", e)));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            let refs: Vec<&[f32]> =
+                                inputs.iter().map(|v| v.as_slice()).collect();
+                            let res = exec
+                                .execute_f32(&name, &refs)
+                                .map_err(|e| format!("{:#}", e));
+                            let _ = reply.send(res);
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(exec.platform());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawning compute service thread");
+        init_rx
+            .recv()
+            .map_err(|_| anyhow!("compute service died during init"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(ComputeService {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        ComputeHandle {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Start and return a shared handle, or `None` (with a warning) when
+    /// artifacts are absent — callers fall back to the native backend.
+    pub fn try_start_shared(dir: &str) -> Option<(Arc<ComputeService>, ComputeHandle)> {
+        match ComputeService::start(dir) {
+            Ok(svc) => {
+                let h = svc.handle();
+                Some((Arc::new(svc), h))
+            }
+            Err(e) => {
+                eprintln!("[runtime] PJRT service unavailable ({}); using native backend", e);
+                None
+            }
+        }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

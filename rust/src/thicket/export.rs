@@ -1,0 +1,71 @@
+//! CSV export of thicket series and tables — the artifacts `repro`
+//! drops under `results/` next to the rendered figures.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::frame::Thicket;
+use crate::util::table::TextTable;
+
+/// Write a multi-series CSV: one row per (series, x, y).
+pub fn write_series_csv(
+    path: impl AsRef<Path>,
+    series: &[(String, Vec<(f64, f64)>)],
+    x_name: &str,
+    y_name: &str,
+) -> Result<()> {
+    let mut t = TextTable::new(&["series", x_name, y_name]);
+    for (name, pts) in series {
+        for (x, y) in pts {
+            t.row(vec![name.clone(), format!("{}", x), format!("{:.6e}", y)]);
+        }
+    }
+    std::fs::write(path.as_ref(), t.to_csv())?;
+    Ok(())
+}
+
+/// Write every run's metadata + comm totals (the campaign inventory).
+pub fn write_inventory_csv(path: impl AsRef<Path>, thicket: &Thicket) -> Result<()> {
+    let mut t = TextTable::new(&[
+        "app", "system", "scaling", "ranks", "bytes_sent", "sends", "largest_send", "wall_time",
+    ]);
+    for run in thicket.by_ranks() {
+        let (bytes, sends) = run.comm_totals();
+        t.row(vec![
+            run.meta.get("app").cloned().unwrap_or_default(),
+            run.meta.get("system").cloned().unwrap_or_default(),
+            run.meta.get("scaling").cloned().unwrap_or_default(),
+            run.meta.get("ranks").cloned().unwrap_or_default(),
+            format!("{:.0}", bytes),
+            format!("{:.0}", sends),
+            run.largest_send().to_string(),
+            format!("{:.6}", run.wall_time()),
+        ]);
+    }
+    std::fs::write(path.as_ref(), t.to_csv())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_csv_roundtrip_text() {
+        let dir = std::env::temp_dir().join(format!("export_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.csv");
+        write_series_csv(
+            &path,
+            &[("kripke".to_string(), vec![(8.0, 1.5e6), (64.0, 2.5e6)])],
+            "ranks",
+            "bytes_per_sec",
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,ranks,bytes_per_sec"));
+        assert!(text.contains("kripke,8,1.5"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,149 @@
+//! The multi-run container and its selection/grouping operations.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::caliper::RunProfile;
+use crate::util::json::Json;
+
+/// A collection of run profiles (≈ a Thicket object).
+#[derive(Debug, Clone, Default)]
+pub struct Thicket {
+    pub runs: Vec<RunProfile>,
+}
+
+impl Thicket {
+    pub fn new(runs: Vec<RunProfile>) -> Thicket {
+        Thicket { runs }
+    }
+
+    /// Load every `*.json` profile in a directory (what `repro campaign`
+    /// writes).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Thicket> {
+        let mut runs = Vec::new();
+        let mut entries: Vec<_> = std::fs::read_dir(dir.as_ref())
+            .with_context(|| format!("reading {}", dir.as_ref().display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+            .collect();
+        entries.sort();
+        for path in entries {
+            let text = std::fs::read_to_string(&path)?;
+            let j = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))?;
+            if let Some(run) = RunProfile::from_json(&j) {
+                runs.push(run);
+            }
+        }
+        Ok(Thicket { runs })
+    }
+
+    /// Select runs matching all (key, value) metadata filters.
+    pub fn filter(&self, filters: &[(&str, &str)]) -> Thicket {
+        Thicket {
+            runs: self
+                .runs
+                .iter()
+                .filter(|r| {
+                    filters
+                        .iter()
+                        .all(|(k, v)| r.meta.get(*k).map(|m| m == v).unwrap_or(false))
+                })
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Group runs by a metadata key (e.g. "app"), preserving order by key.
+    pub fn groupby(&self, key: &str) -> BTreeMap<String, Thicket> {
+        let mut out: BTreeMap<String, Thicket> = BTreeMap::new();
+        for r in &self.runs {
+            let k = r.meta.get(key).cloned().unwrap_or_else(|| "?".to_string());
+            out.entry(k).or_default().runs.push(r.clone());
+        }
+        out
+    }
+
+    /// Runs sorted by integer rank count.
+    pub fn by_ranks(&self) -> Vec<&RunProfile> {
+        let mut v: Vec<&RunProfile> = self.runs.iter().collect();
+        v.sort_by_key(|r| r.meta_usize("ranks").unwrap_or(0));
+        v
+    }
+
+    /// Extract an (x = ranks, y = f(run)) series across the runs.
+    pub fn series(&self, f: impl Fn(&RunProfile) -> Option<f64>) -> Vec<(f64, f64)> {
+        self.by_ranks()
+            .into_iter()
+            .filter_map(|r| {
+                let x = r.meta_usize("ranks")? as f64;
+                let y = f(r)?;
+                Some((x, y))
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caliper::AggRegion;
+
+    fn run(app: &str, ranks: usize, bytes: f64) -> RunProfile {
+        let mut r = RunProfile::default();
+        r.meta.insert("app".into(), app.into());
+        r.meta.insert("ranks".into(), ranks.to_string());
+        let mut reg = AggRegion {
+            is_comm_region: true,
+            ..Default::default()
+        };
+        reg.bytes_sent.push(bytes);
+        reg.sends.push(1.0);
+        r.regions.insert("main/halo".into(), reg);
+        r
+    }
+
+    #[test]
+    fn filter_and_group() {
+        let t = Thicket::new(vec![
+            run("kripke", 8, 1.0),
+            run("kripke", 64, 2.0),
+            run("amg2023", 8, 3.0),
+        ]);
+        assert_eq!(t.filter(&[("app", "kripke")]).len(), 2);
+        let g = t.groupby("app");
+        assert_eq!(g.len(), 2);
+        assert_eq!(g["amg2023"].len(), 1);
+    }
+
+    #[test]
+    fn series_sorted_by_ranks() {
+        let t = Thicket::new(vec![run("k", 64, 2.0), run("k", 8, 1.0)]);
+        let s = t.series(|r| Some(r.comm_totals().0));
+        assert_eq!(s, vec![(8.0, 1.0), (64.0, 2.0)]);
+    }
+
+    #[test]
+    fn load_dir_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("thicket_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = run("kripke", 8, 42.0);
+        std::fs::write(dir.join("a.json"), r.to_json().to_string_pretty()).unwrap();
+        let t = Thicket::load_dir(&dir).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.runs[0].meta["app"], "kripke");
+        assert_eq!(t.runs[0].comm_totals().0, 42.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+//! `thicket` — multi-run exploratory analysis (the role Thicket plays in
+//! the paper: §II, "Caliper performance profiles are easily uploaded into
+//! Thicket objects that can be manipulated … to generate statistics and
+//! plots").
+//!
+//! A [`Thicket`] holds many [`crate::caliper::RunProfile`]s; [`frame`]
+//! provides selection/grouping, [`stats`] derives the paper's metrics
+//! (bandwidth, message rate, per-level series), and [`export`] writes CSV.
+//! Figure rendering lives in `coordinator::figures`.
+
+pub mod export;
+pub mod frame;
+pub mod stats;
+
+pub use frame::Thicket;

@@ -1,0 +1,127 @@
+//! Derived metrics over run profiles: everything the paper's figures plot.
+
+use crate::caliper::RunProfile;
+
+/// Bytes sent per second per process (Fig 5/6 left axes): total bytes over
+/// all communication regions, divided by run wall time and rank count.
+pub fn bandwidth_per_proc(run: &RunProfile) -> Option<f64> {
+    let ranks = run.meta_usize("ranks")? as f64;
+    let wall = run.wall_time();
+    if wall <= 0.0 {
+        return None;
+    }
+    let (bytes, _) = run.comm_totals();
+    Some(bytes / wall / ranks)
+}
+
+/// Messages per second per process (Fig 5/6 right axes).
+pub fn message_rate_per_proc(run: &RunProfile) -> Option<f64> {
+    let ranks = run.meta_usize("ranks")? as f64;
+    let wall = run.wall_time();
+    if wall <= 0.0 {
+        return None;
+    }
+    let (_, sends) = run.comm_totals();
+    Some(sends / wall / ranks)
+}
+
+/// Table IV row: (total bytes sent, total sends, largest send, avg send).
+pub fn table4_row(run: &RunProfile) -> (f64, f64, u64, f64) {
+    let (bytes, sends) = run.comm_totals();
+    let largest = run.largest_send();
+    let avg = if sends > 0.0 { bytes / sends } else { 0.0 };
+    (bytes, sends, largest, avg)
+}
+
+/// Per-multigrid-level series for AMG (Fig 2/3): returns (level, value)
+/// pairs using `metric` over the `matvec_comm_level_*` regions.
+pub fn amg_per_level(
+    run: &RunProfile,
+    metric: impl Fn(&crate::caliper::AggRegion) -> f64,
+) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    for (path, reg) in run.regions_with_prefix("matvec_comm_level_") {
+        if let Some(level) = path
+            .rsplit('/')
+            .next()
+            .and_then(|leaf| leaf.strip_prefix("matvec_comm_level_"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            out.push((level, metric(reg)));
+        }
+    }
+    out.sort_by_key(|(l, _)| *l);
+    out
+}
+
+/// Average time per rank for a named region (Fig 1/4).
+pub fn region_time_avg(run: &RunProfile, name: &str) -> Option<f64> {
+    run.region(name).map(|(_, r)| r.time.avg())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caliper::AggRegion;
+    use crate::caliper::RunProfile;
+
+    fn sample() -> RunProfile {
+        let mut r = RunProfile::default();
+        r.meta.insert("ranks".into(), "4".into());
+        let mut main = AggRegion::default();
+        for _ in 0..4 {
+            main.time.push(10.0);
+        }
+        r.regions.insert("main".into(), main);
+        for level in 0..3 {
+            let mut reg = AggRegion {
+                is_comm_region: true,
+                max_send: 1000 >> level,
+                ..Default::default()
+            };
+            for _ in 0..4 {
+                reg.bytes_sent.push(100.0 / (1 << level) as f64);
+                reg.sends.push(10.0);
+                reg.src_ranks.push((level + 3) as f64);
+                reg.time.push(1.0);
+            }
+            r.regions
+                .insert(format!("main/solve/matvec_comm_level_{}", level), reg);
+        }
+        r
+    }
+
+    #[test]
+    fn bandwidth_and_rate() {
+        let r = sample();
+        // bytes = 4*(100+50+25) = 700; wall = 10; ranks = 4
+        assert!((bandwidth_per_proc(&r).unwrap() - 700.0 / 10.0 / 4.0).abs() < 1e-9);
+        // sends = 120
+        assert!((message_rate_per_proc(&r).unwrap() - 120.0 / 10.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table4() {
+        let (bytes, sends, largest, avg) = table4_row(&sample());
+        assert_eq!(bytes, 700.0);
+        assert_eq!(sends, 120.0);
+        assert_eq!(largest, 1000);
+        assert!((avg - 700.0 / 120.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_level_series_sorted() {
+        let s = amg_per_level(&sample(), |r| r.bytes_sent.avg());
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].0, 0);
+        assert!(s[0].1 > s[2].1);
+        let src = amg_per_level(&sample(), |r| r.src_ranks.avg());
+        assert_eq!(src[2].1, 5.0);
+    }
+
+    #[test]
+    fn region_time() {
+        assert_eq!(region_time_avg(&sample(), "main"), Some(10.0));
+        assert_eq!(region_time_avg(&sample(), "nope"), None);
+    }
+}

@@ -1,0 +1,100 @@
+//! Minimal benchmark harness (the offline crate set has no criterion):
+//! warmup + repeated timing with mean/min/max/stddev reporting, and a
+//! simple table printer for paper-row outputs.
+
+use std::time::Instant;
+
+use super::stats::OnlineStats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>4} iters  mean {:>12}  min {:>12}  max {:>12}  ±{:>10}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.min_s),
+            fmt_s(self.max_s),
+            fmt_s(self.stddev_s),
+        )
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` for `iters` measured iterations after `warmup` runs. The
+/// closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = OnlineStats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats.mean(),
+        min_s: stats.min(),
+        max_s: stats.max(),
+        stddev_s: stats.stddev(),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Print a section header for a bench binary.
+pub fn section(title: &str) {
+    println!("\n=== {} ===", title);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 3, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(r.iters, 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_s(2.0).contains("s"));
+        assert!(fmt_s(2e-3).contains("ms"));
+        assert!(fmt_s(2e-6).contains("µs"));
+        assert!(fmt_s(2e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Declarative command-line parsing for the `repro` binary and the examples.
+//! (The offline crate set has no `clap`; this covers the subset we need:
+//! subcommands, `--flag value`, `--flag=value`, boolean switches, help text.)
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals plus flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.flags
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.switches.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{} expects an integer, got '{}'", key, v))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{} expects a number, got '{}'", key, v))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated integer list, e.g. `--ranks 8,16,32`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .unwrap_or_else(|_| panic!("--{} expects integers, got '{}'", key, p))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+
+    /// First positional = subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("campaign --system dane --ranks 64,128 --verbose");
+        assert_eq!(a.subcommand(), Some("campaign"));
+        assert_eq!(a.get("system"), Some("dane"));
+        assert_eq!(a.get_usize_list("ranks", &[]), vec![64, 128]);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --out=results --steps=20");
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.get_usize("steps", 0), 20);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("system", "dane"), "dane");
+        assert_eq!(a.get_usize("steps", 7), 7);
+        assert_eq!(a.get_f64("tol", 0.5), 0.5);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("x --flag");
+        assert!(a.has("flag"));
+    }
+}

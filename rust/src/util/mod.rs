@@ -1,0 +1,23 @@
+//! Self-contained infrastructure utilities.
+//!
+//! This crate builds in a fully offline environment whose vendored crate set
+//! does not include `serde`, `clap`, `rand`, or `criterion`. The modules here
+//! provide the small subset of that functionality the stack needs:
+//!
+//! - [`json`]: a minimal JSON value model, writer, and recursive-descent parser
+//!   (profile serialization, artifact manifests).
+//! - [`rng`]: deterministic SplitMix64 / xoshiro256** PRNGs (workload
+//!   generation, property-test inputs).
+//! - [`stats`]: streaming min/max/mean/variance accumulators and percentile
+//!   helpers (metric aggregation).
+//! - [`table`]: aligned plain-text table rendering (paper-table output).
+//! - [`cli`]: a small declarative argument parser for the `repro` binary.
+//! - [`plotascii`]: terminal line charts used by the figure regenerators.
+
+pub mod benchutil;
+pub mod cli;
+pub mod json;
+pub mod plotascii;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,249 @@
+//! Terminal line charts: multi-series scatter/line plots on a character
+//! grid, with optional log axes. This is how `repro figN` renders the
+//! paper's figures without a plotting stack.
+
+/// One named data series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, points: Vec<(f64, f64)>) -> Self {
+        Series {
+            name: name.to_string(),
+            points,
+        }
+    }
+}
+
+/// Axis scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log10,
+}
+
+/// Chart configuration.
+#[derive(Debug, Clone)]
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub width: usize,
+    pub height: usize,
+    pub x_scale: Scale,
+    pub y_scale: Scale,
+}
+
+impl Chart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Chart {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 72,
+            height: 20,
+            x_scale: Scale::Linear,
+            y_scale: Scale::Linear,
+        }
+    }
+
+    pub fn log_x(mut self) -> Self {
+        self.x_scale = Scale::Log10;
+        self
+    }
+
+    pub fn log_y(mut self) -> Self {
+        self.y_scale = Scale::Log10;
+        self
+    }
+
+    fn tf(scale: Scale, v: f64) -> f64 {
+        match scale {
+            Scale::Linear => v,
+            Scale::Log10 => v.max(1e-300).log10(),
+        }
+    }
+
+    /// Render the chart with the given series; marker per series cycles
+    /// through `*o+x#@%&`.
+    pub fn render(&self, series: &[Series]) -> String {
+        const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+        let pts: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+        if pts.is_empty() {
+            return format!("{}\n(no data)\n", self.title);
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| Self::tf(self.x_scale, p.0)).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| Self::tf(self.y_scale, p.1)).collect();
+        let (xmin, xmax) = min_max(&xs);
+        let (ymin, ymax) = min_max(&ys);
+        let xspan = if xmax > xmin { xmax - xmin } else { 1.0 };
+        let yspan = if ymax > ymin { ymax - ymin } else { 1.0 };
+
+        let w = self.width;
+        let h = self.height;
+        let mut grid = vec![vec![' '; w]; h];
+        for (si, s) in series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            // line segments between consecutive points
+            let proj: Vec<(usize, usize)> = s
+                .points
+                .iter()
+                .map(|&(x, y)| {
+                    let px = ((Self::tf(self.x_scale, x) - xmin) / xspan * (w - 1) as f64).round()
+                        as usize;
+                    let py = ((Self::tf(self.y_scale, y) - ymin) / yspan * (h - 1) as f64).round()
+                        as usize;
+                    (px.min(w - 1), h - 1 - py.min(h - 1))
+                })
+                .collect();
+            for pair in proj.windows(2) {
+                let (x0, y0) = pair[0];
+                let (x1, y1) = pair[1];
+                for (x, y) in line_cells(x0 as i64, y0 as i64, x1 as i64, y1 as i64) {
+                    if grid[y as usize][x as usize] == ' ' {
+                        grid[y as usize][x as usize] = '.';
+                    }
+                }
+            }
+            for &(px, py) in &proj {
+                grid[py][px] = mark;
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        let ytop = fmt_axis(self.y_scale, ymax);
+        let ybot = fmt_axis(self.y_scale, ymin);
+        let lw = ytop.len().max(ybot.len());
+        for (r, row) in grid.iter().enumerate() {
+            let label = if r == 0 {
+                format!("{:>lw$}", ytop, lw = lw)
+            } else if r == h - 1 {
+                format!("{:>lw$}", ybot, lw = lw)
+            } else {
+                " ".repeat(lw)
+            };
+            out.push_str(&format!("{} |{}\n", label, row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{} +{}\n",
+            " ".repeat(lw),
+            "-".repeat(w)
+        ));
+        let xlo = fmt_axis(self.x_scale, xmin);
+        let xhi = fmt_axis(self.x_scale, xmax);
+        let pad = w.saturating_sub(xlo.len() + xhi.len());
+        out.push_str(&format!(
+            "{}  {}{}{}   ({})\n",
+            " ".repeat(lw),
+            xlo,
+            " ".repeat(pad),
+            xhi,
+            self.x_label
+        ));
+        out.push_str(&format!("{}  y: {}\n", " ".repeat(lw), self.y_label));
+        for (si, s) in series.iter().enumerate() {
+            out.push_str(&format!(
+                "{}   {} {}\n",
+                " ".repeat(lw),
+                MARKS[si % MARKS.len()],
+                s.name
+            ));
+        }
+        out
+    }
+}
+
+fn fmt_axis(scale: Scale, v: f64) -> String {
+    match scale {
+        Scale::Linear => {
+            if v.abs() >= 1e5 || (v != 0.0 && v.abs() < 1e-2) {
+                format!("{:.2e}", v)
+            } else {
+                format!("{:.3}", v)
+            }
+        }
+        Scale::Log10 => format!("1e{:.1}", v),
+    }
+}
+
+fn min_max(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    (lo, hi)
+}
+
+/// Bresenham line rasterization.
+fn line_cells(x0: i64, y0: i64, x1: i64, y1: i64) -> Vec<(i64, i64)> {
+    let mut cells = Vec::new();
+    let dx = (x1 - x0).abs();
+    let dy = -(y1 - y0).abs();
+    let sx = if x0 < x1 { 1 } else { -1 };
+    let sy = if y0 < y1 { 1 } else { -1 };
+    let mut err = dx + dy;
+    let (mut x, mut y) = (x0, y0);
+    loop {
+        cells.push((x, y));
+        if x == x1 && y == y1 {
+            break;
+        }
+        let e2 = 2 * err;
+        if e2 >= dy {
+            err += dy;
+            x += sx;
+        }
+        if e2 <= dx {
+            err += dx;
+            y += sy;
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nonempty() {
+        let c = Chart::new("t", "x", "y");
+        let s = Series::new("a", vec![(1.0, 1.0), (2.0, 4.0), (3.0, 9.0)]);
+        let out = c.render(&[s]);
+        assert!(out.contains('*'));
+        assert!(out.contains("t\n"));
+        assert!(out.lines().count() > 20);
+    }
+
+    #[test]
+    fn empty_ok() {
+        let c = Chart::new("t", "x", "y");
+        assert!(c.render(&[]).contains("no data"));
+    }
+
+    #[test]
+    fn log_axes_do_not_panic_on_zero() {
+        let c = Chart::new("t", "x", "y").log_y().log_x();
+        let s = Series::new("a", vec![(1.0, 0.0), (10.0, 100.0)]);
+        let _ = c.render(&[s]);
+    }
+
+    #[test]
+    fn multi_series_markers_differ() {
+        let c = Chart::new("t", "x", "y");
+        let s1 = Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)]);
+        let s2 = Series::new("b", vec![(0.0, 1.0), (1.0, 0.0)]);
+        let out = c.render(&[s1, s2]);
+        assert!(out.contains('*') && out.contains('o'));
+    }
+}

@@ -1,0 +1,198 @@
+//! Aligned plain-text tables — how the `repro` binary prints the paper's
+//! tables (Table I–IV) and per-figure data series.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Debug, Clone)]
+pub struct TextTable {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl TextTable {
+    pub fn new(headers: &[&str]) -> Self {
+        TextTable {
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: &str) -> Self {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch: {} vs {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let fmt_row = |cells: &[String], width: &[usize], aligns: &[Align]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let pad = width[i] - c.chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        line.push_str(c);
+                        line.extend(std::iter::repeat(' ').take(pad));
+                    }
+                    Align::Right => {
+                        line.extend(std::iter::repeat(' ').take(pad));
+                        line.push_str(c);
+                    }
+                }
+            }
+            // trim trailing pad
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &width, &self.aligns));
+        out.push('\n');
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.extend(std::iter::repeat('-').take(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width, &self.aligns));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering of the same data (used by `--csv` outputs).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Scientific-notation formatting matching the paper's tables (e.g. 4.03E+09).
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let exp = v.abs().log10().floor() as i32;
+    let mant = v / 10f64.powi(exp);
+    format!("{:.2}E{:+03}", mant, exp)
+}
+
+/// Human format with thousands separators for counts.
+pub fn human_count(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::new();
+    let bytes = s.as_bytes();
+    for (i, c) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*c as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TextTable::new(&["app", "ranks", "bytes"]).align(0, Align::Left);
+        t.row(vec!["kripke".into(), "64".into(), "4.03E+09".into()]);
+        t.row(vec!["amg".into(), "512".into(), "6.96E+09".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].starts_with("kripke"));
+        assert!(lines[3].starts_with("amg"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = TextTable::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = TextTable::new(&["a"]);
+        t.row(vec!["x,y".into()]);
+        assert_eq!(t.to_csv(), "a\n\"x,y\"\n");
+    }
+
+    #[test]
+    fn sci_matches_paper_style() {
+        assert_eq!(sci(4.03e9), "4.03E+09");
+        assert_eq!(sci(466.0), "4.66E+02");
+        assert_eq!(sci(0.0), "0");
+    }
+
+    #[test]
+    fn human() {
+        assert_eq!(human_count(184320), "184,320");
+        assert_eq!(human_count(12), "12");
+    }
+}

@@ -1,0 +1,168 @@
+//! Failure-injection tests: the runtime must turn application bugs into
+//! diagnosable errors, not hangs or silent corruption.
+
+use std::time::Duration;
+
+use commscope::mpisim::collectives::ReduceOp;
+use commscope::mpisim::{MachineModel, MpiError, World, WorldConfig};
+
+fn quick_cfg(n: usize) -> WorldConfig {
+    WorldConfig::new(n, MachineModel::test_machine())
+        .with_timeout(Duration::from_millis(300))
+}
+
+#[test]
+fn recv_without_sender_times_out_with_context() {
+    let errs = World::run(quick_cfg(2), |rank| {
+        let world = rank.world();
+        if rank.rank == 0 {
+            // rank 1 never sends tag 42
+            match rank.recv::<f64>(Some(1), 42, &world) {
+                Err(MpiError::RecvTimeout { rank: r, tag, .. }) => {
+                    assert_eq!(r, 0);
+                    assert_eq!(tag, 42);
+                    true
+                }
+                other => panic!("expected RecvTimeout, got {:?}", other.map(|_| ())),
+            }
+        } else {
+            true
+        }
+    });
+    assert!(errs.iter().all(|&e| e));
+}
+
+#[test]
+fn collective_straggler_times_out_with_counts() {
+    let results = World::run(quick_cfg(4), |rank| {
+        let world = rank.world();
+        if rank.rank == 3 {
+            // deserter: never joins the barrier
+            return None;
+        }
+        match rank.barrier(&world) {
+            Err(MpiError::CollectiveTimeout {
+                arrived, expected, ..
+            }) => Some((arrived, expected)),
+            other => panic!("expected CollectiveTimeout, got {:?}", other),
+        }
+    });
+    for r in results.into_iter().flatten() {
+        assert_eq!(r.1, 4);
+        assert!(r.0 <= 3);
+    }
+}
+
+#[test]
+fn mismatched_collectives_detected() {
+    let flags = World::run(quick_cfg(2), |rank| {
+        let world = rank.world();
+        if rank.rank == 0 {
+            match rank.barrier(&world) {
+                // rank 1 called allreduce on the same slot: whoever arrives
+                // second sees the mismatch; the first may instead time out.
+                Err(MpiError::CollectiveMismatch { .. })
+                | Err(MpiError::CollectiveTimeout { .. }) => true,
+                other => panic!("rank0: unexpected {:?}", other),
+            }
+        } else {
+            match rank.allreduce_f64(&[1.0], ReduceOp::Sum, &world) {
+                Err(MpiError::CollectiveMismatch { .. })
+                | Err(MpiError::CollectiveTimeout { .. }) => true,
+                other => panic!("rank1: unexpected {:?}", other.map(|_| ())),
+            }
+        }
+    });
+    assert!(flags.iter().all(|&f| f));
+}
+
+#[test]
+fn wrong_payload_type_detected() {
+    World::run(quick_cfg(2), |rank| {
+        let world = rank.world();
+        if rank.rank == 0 {
+            // 10 bytes is not a whole number of f64s
+            rank.send(&[1u8; 10], 1, 0, &world).unwrap();
+        } else {
+            let err = rank.recv::<f64>(Some(0), 0, &world).unwrap_err();
+            assert!(matches!(err, MpiError::PayloadSizeMismatch { got: 10, elem: 8 }));
+        }
+    });
+}
+
+#[test]
+fn rank_out_of_range_on_every_surface() {
+    World::run(quick_cfg(2), |rank| {
+        let world = rank.world();
+        assert!(matches!(
+            rank.send(&[0.0f64], 7, 0, &world),
+            Err(MpiError::RankOutOfRange { rank: 7, .. })
+        ));
+        assert!(matches!(
+            rank.irecv(Some(9), 0, &world),
+            Err(MpiError::RankOutOfRange { rank: 9, .. })
+        ));
+    });
+}
+
+#[test]
+fn unclosed_caliper_region_is_flagged_not_lost() {
+    use commscope::caliper::Caliper;
+    let profiles = World::run(quick_cfg(1), |rank| {
+        let cali = Caliper::attach(rank);
+        cali.begin(rank, "main");
+        cali.comm_region_begin(rank, "leaky");
+        rank.advance(1.0);
+        cali.finish(rank)
+    });
+    let keys: Vec<&String> = profiles[0].regions.keys().collect();
+    assert!(
+        keys.iter().any(|k| k.contains("leaky!unclosed")),
+        "keys: {:?}",
+        keys
+    );
+    // time still attributed
+    let leaky = profiles[0]
+        .regions
+        .iter()
+        .find(|(k, _)| k.contains("leaky"))
+        .unwrap()
+        .1;
+    assert!(leaky.time_incl >= 1.0);
+}
+
+#[test]
+fn bad_cart_dims_rejected_not_hung() {
+    use commscope::mpisim::cart::CartComm;
+    World::run(quick_cfg(4), |rank| {
+        let world = rank.world();
+        let err = CartComm::new(world, &[3, 3, 3], &[false; 3]).unwrap_err();
+        assert!(matches!(err, MpiError::BadCartDims { .. }));
+    });
+}
+
+#[test]
+fn empty_split_group_is_error() {
+    // color chosen so one rank's group would be empty is impossible by
+    // construction (each rank is in its own color's group); instead verify
+    // split with distinct colors yields singleton comms that still work.
+    let sizes = World::run(quick_cfg(3), |rank| {
+        let world = rank.world();
+        let sub = rank.comm_split(&world, rank.rank as u64, 0).unwrap();
+        let s = rank
+            .allreduce_f64(&[rank.rank as f64], ReduceOp::Sum, &sub)
+            .unwrap();
+        (sub.size(), s[0])
+    });
+    for (r, (size, sum)) in sizes.iter().enumerate() {
+        assert_eq!(*size, 1);
+        assert_eq!(*sum, r as f64);
+    }
+}
+
+#[test]
+fn runtime_missing_artifacts_fails_fast() {
+    use commscope::runtime::{ComputeService, Executor};
+    assert!(Executor::load("/nonexistent/place").is_err());
+    assert!(ComputeService::start("/nonexistent/place").is_err());
+}

@@ -1,0 +1,114 @@
+//! Integration: campaign → profiles on disk → thicket reload → every
+//! figure/table renderer produces sane output with CSV side effects.
+
+use commscope::benchpark::runner::RunOptions;
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::campaign::{run_campaign, selected_cells, CampaignOptions};
+use commscope::coordinator::figures;
+use commscope::thicket::stats;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("figtest_{}_{}", tag, std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn full_pipeline_small_scale() {
+    let dir = tmpdir("pipeline");
+    let mut opts = CampaignOptions::new(&dir);
+    opts.run = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+    };
+    opts.max_ranks = Some(16);
+    opts.verbose = false;
+    // Expect the ≤16-rank cells: amg tioga 8,16; kripke tioga 8,16 (laghos
+    // min scale is 112 → filtered out).
+    let cells = selected_cells(&opts);
+    assert_eq!(cells.len(), 4, "{:?}", cells.iter().map(|c| c.id()).collect::<Vec<_>>());
+    let t = run_campaign(&opts, true).unwrap();
+    assert_eq!(t.len(), 4);
+
+    // table4 renders a row per run
+    let t4 = figures::table4(&t);
+    assert!(t4.contains("kripke (tioga) - 8"));
+    assert!(t4.contains("amg2023 (tioga) - 16"));
+
+    // figures render and write CSVs
+    let fig_dir = dir.as_path();
+    let f1 = figures::fig1(&t, Some(fig_dir)).unwrap();
+    assert!(f1.contains("Kripke"));
+    assert!(fig_dir.join("fig1_kripke_tioga.csv").exists());
+    let f2 = figures::fig2(&t, Some(fig_dir)).unwrap();
+    assert!(f2.contains("MG level"));
+    assert!(fig_dir.join("fig2_amg_tioga.csv").exists());
+    let f3 = figures::fig3(&t, Some(fig_dir)).unwrap();
+    assert!(f3.contains("source ranks"));
+    let f6 = figures::fig6(&t, Some(fig_dir)).unwrap();
+    assert!(f6.contains("bytes/sec"));
+    // fig4/fig5 need laghos/dane; they must degrade gracefully
+    let f4 = figures::fig4(&t, Some(fig_dir)).unwrap();
+    assert!(f4.contains("no laghos runs"));
+
+    // reload from disk and check metric derivations
+    let t2 = commscope::coordinator::campaign::load_profiles(&dir).unwrap();
+    assert_eq!(t2.len(), 4);
+    for run in &t2.runs {
+        assert!(stats::bandwidth_per_proc(run).unwrap() > 0.0);
+        assert!(stats::message_rate_per_proc(run).unwrap() > 0.0);
+    }
+    // per-level series survive serialization
+    let amg = t2.filter(&[("app", "amg2023"), ("ranks", "16")]);
+    let levels = stats::amg_per_level(&amg.runs[0], |r| r.bytes_sent.avg());
+    assert!(levels.len() >= 2);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn campaign_cache_reuses_profiles() {
+    let dir = tmpdir("cache");
+    let mut opts = CampaignOptions::new(&dir);
+    opts.run = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+    };
+    opts.app = Some(AppKind::Kripke);
+    opts.system = Some(SystemId::Tioga);
+    opts.max_ranks = Some(8);
+    opts.verbose = false;
+    let t1 = run_campaign(&opts, true).unwrap();
+    let path = dir.join("profiles/kripke_tioga_8.json");
+    let mtime1 = std::fs::metadata(&path).unwrap().modified().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let t2 = run_campaign(&opts, false).unwrap();
+    let mtime2 = std::fs::metadata(&path).unwrap().modified().unwrap();
+    assert_eq!(mtime1, mtime2, "cached profile must not be rewritten");
+    assert_eq!(t1.len(), t2.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn deterministic_profiles_on_disk() {
+    // Same cell run twice → byte-identical JSON (determinism contract).
+    let dir_a = tmpdir("det_a");
+    let dir_b = tmpdir("det_b");
+    for d in [&dir_a, &dir_b] {
+        let mut opts = CampaignOptions::new(d);
+        opts.run = RunOptions {
+            iter_shrink: 10,
+            size_shrink: 8,
+        };
+        opts.app = Some(AppKind::Amg2023);
+        opts.system = Some(SystemId::Dane);
+        opts.max_ranks = Some(64);
+        opts.verbose = false;
+        run_campaign(&opts, true).unwrap();
+    }
+    let a = std::fs::read_to_string(dir_a.join("profiles/amg2023_dane_64.json")).unwrap();
+    let b = std::fs::read_to_string(dir_b.join("profiles/amg2023_dane_64.json")).unwrap();
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}

@@ -1,0 +1,188 @@
+//! Integration tests asserting the paper's qualitative findings hold on
+//! reduced-scale runs — the "shape" contract of the reproduction
+//! (EXPERIMENTS.md records the full-scale numbers).
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::caliper::RunProfile;
+use commscope::thicket::{stats, Thicket};
+
+fn cell(app: AppKind, system: SystemId, nranks: usize, opts: &RunOptions) -> RunProfile {
+    let spec = ExperimentSpec {
+        app,
+        system,
+        scaling: if app == AppKind::Laghos {
+            Scaling::Strong
+        } else {
+            Scaling::Weak
+        },
+        nranks,
+    };
+    run_cell(&spec, opts).expect("cell")
+}
+
+fn fast() -> RunOptions {
+    RunOptions {
+        iter_shrink: 5,
+        size_shrink: 4,
+    }
+}
+
+#[test]
+fn kripke_partner_counts_match_paper() {
+    // §IV-A: 3..6 partners; smallest GPU run: all corners ⇒ exactly 3.
+    let run = cell(AppKind::Kripke, SystemId::Tioga, 8, &fast());
+    let sweep = run.region("sweep_comm").unwrap().1;
+    assert_eq!(sweep.dest_ranks.min(), 3.0);
+    assert_eq!(sweep.dest_ranks.max(), 3.0);
+    let run64 = cell(AppKind::Kripke, SystemId::Tioga, 64, &fast());
+    let sweep64 = run64.region("sweep_comm").unwrap().1;
+    assert_eq!(sweep64.dest_ranks.min(), 3.0);
+    assert_eq!(sweep64.dest_ranks.max(), 6.0);
+}
+
+#[test]
+fn kripke_sends_per_edge_are_640_at_full_iters() {
+    // Table IV invariant: 640 messages per directed edge (32/iter × 20).
+    let opts = RunOptions {
+        iter_shrink: 1,
+        size_shrink: 8,
+    };
+    let run = cell(AppKind::Kripke, SystemId::Tioga, 8, &opts);
+    let sweep = run.region("sweep_comm").unwrap().1;
+    // 2x2x2 ⇒ 24 directed edges ⇒ 15,360 total sends (Table IV Tioga-8).
+    assert_eq!(sweep.sends.total(), 15_360.0);
+}
+
+#[test]
+fn amg_level_count_grows_with_scale() {
+    // §IV-B: larger runs have more MG levels.
+    let opts = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 1,
+    };
+    let small = cell(AppKind::Amg2023, SystemId::Tioga, 8, &opts);
+    let large = cell(AppKind::Amg2023, SystemId::Tioga, 64, &opts);
+    let nl = |r: &RunProfile| r.regions_with_prefix("matvec_comm_level_").len();
+    assert!(nl(&large) > nl(&small), "{} vs {}", nl(&large), nl(&small));
+}
+
+#[test]
+fn amg_fine_levels_carry_most_bytes() {
+    // Fig 2: level 0 ≫ coarsest level in bytes per process.
+    let opts = RunOptions {
+        iter_shrink: 5,
+        size_shrink: 1,
+    };
+    let run = cell(AppKind::Amg2023, SystemId::Dane, 64, &opts);
+    let series = stats::amg_per_level(&run, |r| r.bytes_sent.max());
+    assert!(series.len() >= 3);
+    let first = series.first().unwrap().1;
+    let last = series.last().unwrap().1;
+    assert!(first > 10.0 * last, "fine {} vs coarse {}", first, last);
+}
+
+#[test]
+fn amg_cpu_coarse_fanin_explodes_gpu_stays_bounded() {
+    // Fig 3's core contrast, at 64 ranks: deep-level src fan-in is much
+    // larger under the CPU strategy than the GPU strategy.
+    let opts = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 1,
+    };
+    let dane = cell(AppKind::Amg2023, SystemId::Dane, 64, &opts);
+    let tioga = cell(AppKind::Amg2023, SystemId::Tioga, 64, &opts);
+    let deep_max = |r: &RunProfile| {
+        stats::amg_per_level(r, |reg| reg.src_ranks.max())
+            .into_iter()
+            .map(|(_, v)| v)
+            .fold(0.0f64, f64::max)
+    };
+    let d = deep_max(&dane);
+    let t = deep_max(&tioga);
+    assert!(d >= 4.0 * t, "dane fan-in {} vs tioga {}", d, t);
+    assert!(t <= 8.0, "tioga fan-in should stay face-local, got {}", t);
+}
+
+#[test]
+fn laghos_strong_scaling_shapes() {
+    // Table IV Laghos rows: max send falls, total sends grow, per-rank
+    // bytes fall.
+    let opts = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 4,
+    };
+    let runs: Vec<RunProfile> = [16, 64]
+        .into_iter()
+        .map(|n| cell(AppKind::Laghos, SystemId::Dane, n, &opts))
+        .collect();
+    let (b16, s16, m16, _) = stats::table4_row(&runs[0]);
+    let (b64, s64, m64, _) = stats::table4_row(&runs[1]);
+    assert!(m16 > m64, "largest send must fall: {} vs {}", m16, m64);
+    assert!(s64 > s16, "total sends must grow: {} vs {}", s16, s64);
+    assert!(
+        b16 / 16.0 > b64 / 64.0,
+        "bytes per rank must fall: {} vs {}",
+        b16 / 16.0,
+        b64 / 64.0
+    );
+}
+
+#[test]
+fn dane_bandwidth_declines_tioga_rises_for_kripke() {
+    // Fig 5 vs Fig 6 headline contrast.
+    let opts = RunOptions {
+        iter_shrink: 5,
+        size_shrink: 2,
+    };
+    let mk = |system, scales: [usize; 2]| {
+        Thicket::new(
+            scales
+                .into_iter()
+                .map(|n| cell(AppKind::Kripke, system, n, &opts))
+                .collect(),
+        )
+    };
+    let dane = mk(SystemId::Dane, [64, 256]);
+    let tioga = mk(SystemId::Tioga, [8, 64]);
+    let series = |t: &Thicket| t.series(stats::bandwidth_per_proc);
+    let d = series(&dane);
+    let t = series(&tioga);
+    assert!(
+        d.first().unwrap().1 > d.last().unwrap().1,
+        "dane kripke bandwidth should decline: {:?}",
+        d
+    );
+    assert!(
+        t.last().unwrap().1 > t.first().unwrap().1 * 0.9,
+        "tioga kripke bandwidth should not collapse: {:?}",
+        t
+    );
+}
+
+#[test]
+fn kripke_is_bandwidth_king_amg_is_message_heavy() {
+    // Fig 5: Kripke has the highest bytes/s/proc and the lowest msg rate.
+    // Full per-rank problem sizes and full iteration counts (shrinking
+    // either distorts the byte/time balance this test is about — e.g.
+    // AMG's one-time setup phase amortizes over the solve iterations);
+    // small rank count keeps it fast.
+    let opts = RunOptions {
+        iter_shrink: 1,
+        size_shrink: 1,
+    };
+    let kripke = cell(AppKind::Kripke, SystemId::Dane, 8, &opts);
+    let amg = cell(AppKind::Amg2023, SystemId::Dane, 8, &opts);
+    let bw_k = stats::bandwidth_per_proc(&kripke).unwrap();
+    let bw_a = stats::bandwidth_per_proc(&amg).unwrap();
+    assert!(bw_k > bw_a, "kripke bw {} vs amg {}", bw_k, bw_a);
+    let avg_k = stats::table4_row(&kripke).3;
+    let avg_a = stats::table4_row(&amg).3;
+    assert!(
+        avg_k > avg_a,
+        "kripke avg msg {} should exceed amg {}",
+        avg_k,
+        avg_a
+    );
+}

@@ -1,0 +1,259 @@
+//! Property-based tests over randomized configurations (a minimal
+//! proptest-style harness: seeded generators, many cases, failing seeds
+//! printed for reproduction — the offline crate set has no proptest).
+//!
+//! Invariants exercised:
+//! - message/byte conservation for random apps × machines × topologies
+//! - virtual-clock monotonicity and schedule independence (determinism)
+//! - collective results equal a sequential oracle for random inputs
+//! - cartesian topology round-trips and symmetry under random dims
+//! - aggregation linearity: aggregate(profiles) totals = Σ per-rank
+
+use commscope::caliper::aggregate::{aggregate, check_conservation};
+use commscope::caliper::Caliper;
+use commscope::mpisim::cart::CartComm;
+use commscope::mpisim::collectives::ReduceOp;
+use commscope::mpisim::{MachineModel, World, WorldConfig};
+use commscope::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Run `cases` randomized cases, printing the failing seed.
+fn for_seeds(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case * 0x9E3779B9);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{}' failed at seed {:#x}: {:?}", name, seed, e);
+        }
+    }
+}
+
+fn random_machine(rng: &mut Rng) -> MachineModel {
+    let mut m = MachineModel::test_machine();
+    m.ranks_per_node = *rng.choose(&[1usize, 2, 4, 8]);
+    m.net.alpha_inter = rng.range_f64(0.5e-6, 5e-6);
+    m.net.beta_inter = 1.0 / rng.range_f64(1e9, 50e9);
+    m.net.nic_share = rng.range_f64(0.0, 10.0);
+    m.net.contention_coeff = rng.range_f64(0.0, 0.5);
+    m.compute.flops = rng.range_f64(1e9, 1e12);
+    m
+}
+
+#[test]
+fn prop_random_traffic_conserves_and_is_deterministic() {
+    for_seeds("traffic_conservation", 8, |rng| {
+        let n = *rng.choose(&[2usize, 3, 4, 6, 8]);
+        let machine = random_machine(rng);
+        let rounds = rng.range(1, 5) as usize;
+        let msg_elems = rng.range(1, 2048) as usize;
+        let seed = rng.next_u64();
+        let run_once = || {
+            let cfg = WorldConfig::new(n, machine.clone());
+            let profiles = World::run(cfg, |rank| {
+                let cali = Caliper::attach(rank);
+                let world = rank.world();
+                let mut local_rng = Rng::new(seed ^ rank.rank as u64);
+                cali.begin(rank, "main");
+                for round in 0..rounds {
+                    cali.comm_region_begin(rank, "ring");
+                    // deterministic ring with randomized payload sizes
+                    let next = (rank.rank + 1) % n;
+                    let prev = (rank.rank + n - 1) % n;
+                    let len = 1 + (local_rng.next_u64() as usize) % msg_elems;
+                    // IMPORTANT: receiver can't know len; it just receives
+                    rank.isend(&vec![0.5f64; len], next, round as i32, &world)
+                        .unwrap();
+                    let _ = rank.recv::<f64>(Some(prev), round as i32, &world).unwrap();
+                    cali.comm_region_end(rank, "ring");
+                    rank.compute(local_rng.range_f64(1e3, 1e6), 1e3);
+                }
+                cali.end(rank, "main");
+                (cali.finish(rank), rank.now())
+            });
+            profiles
+        };
+        let a = run_once();
+        let b = run_once();
+        let pa: Vec<_> = a.iter().map(|(p, _)| p.clone()).collect();
+        check_conservation(&pa).unwrap();
+        for ((p1, t1), (p2, t2)) in a.iter().zip(&b) {
+            assert_eq!(t1.to_bits(), t2.to_bits(), "virtual time must be deterministic");
+            assert_eq!(
+                p1.to_json().to_string_compact(),
+                p2.to_json().to_string_compact(),
+                "profiles must be deterministic"
+            );
+        }
+        // clocks never go backwards: end time >= 0 and regions non-negative
+        for (p, t) in &a {
+            assert!(*t >= 0.0);
+            for s in p.regions.values() {
+                assert!(s.time_incl >= -1e-15);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_collectives_match_sequential_oracle() {
+    for_seeds("collective_oracle", 8, |rng| {
+        let n = rng.range(2, 12) as usize;
+        let lanes = rng.range(1, 16) as usize;
+        let machine = random_machine(rng);
+        let seed = rng.next_u64();
+        let op = *rng.choose(&[ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max]);
+        // oracle inputs
+        let inputs: Vec<Vec<f64>> = (0..n)
+            .map(|r| {
+                let mut rr = Rng::new(seed ^ r as u64);
+                (0..lanes).map(|_| rr.range_f64(-100.0, 100.0)).collect()
+            })
+            .collect();
+        let mut expect = vec![op.identity_f64(); lanes];
+        for row in &inputs {
+            for (e, v) in expect.iter_mut().zip(row) {
+                *e = op.apply_f64(*e, *v);
+            }
+        }
+        let cfg = WorldConfig::new(n, machine);
+        let results = World::run(cfg, |rank| {
+            let world = rank.world();
+            let mut rr = Rng::new(seed ^ rank.rank as u64);
+            let mine: Vec<f64> = (0..lanes).map(|_| rr.range_f64(-100.0, 100.0)).collect();
+            rank.allreduce_f64(&mine, op, &world).unwrap()
+        });
+        for r in results {
+            for (got, want) in r.iter().zip(&expect) {
+                assert!(
+                    (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "allreduce {} vs {}",
+                    got,
+                    want
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_allgather_preserves_every_contribution() {
+    for_seeds("allgather", 6, |rng| {
+        let n = rng.range(2, 10) as usize;
+        let machine = random_machine(rng);
+        let cfg = WorldConfig::new(n, machine);
+        let results = World::run(cfg, |rank| {
+            let world = rank.world();
+            let mine: Vec<u32> = (0..rank.rank as u32 % 7).map(|i| rank.rank as u32 * 100 + i).collect();
+            rank.allgatherv(&mine, &world).unwrap()
+        });
+        for r in &results {
+            assert_eq!(r.len(), n);
+            for (src, part) in r.iter().enumerate() {
+                assert_eq!(part.len(), src % 7);
+                for (i, v) in part.iter().enumerate() {
+                    assert_eq!(*v, src as u32 * 100 + i as u32);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cart_roundtrip_and_symmetry() {
+    for_seeds("cart", 32, |rng| {
+        let dims = [
+            rng.range(1, 6) as usize,
+            rng.range(1, 6) as usize,
+            rng.range(1, 6) as usize,
+        ];
+        let size: usize = dims.iter().product();
+        for r in 0..size {
+            let c = CartComm::rank_to_coords(r, &dims);
+            assert_eq!(CartComm::coords_to_rank(&c, &dims), r);
+        }
+        // face-neighbor symmetry
+        let carts: Vec<CartComm> = (0..size)
+            .map(|r| {
+                CartComm::new(
+                    commscope::mpisim::Comm::world(r, size),
+                    &dims,
+                    &[false, false, false],
+                )
+                .unwrap()
+            })
+            .collect();
+        for (r, cart) in carts.iter().enumerate() {
+            for nbr in cart.face_neighbors().into_iter().flatten() {
+                assert!(
+                    carts[nbr].face_neighbors().into_iter().flatten().any(|b| b == r),
+                    "asymmetric neighbors {} {}",
+                    r,
+                    nbr
+                );
+            }
+        }
+        // dims_create covers the size
+        let d = CartComm::dims_create(size, 3);
+        assert_eq!(d.iter().product::<usize>(), size);
+    });
+}
+
+#[test]
+fn prop_aggregation_totals_are_sums() {
+    for_seeds("aggregation_linearity", 16, |rng| {
+        use commscope::caliper::profile::{RankProfile, RegionStats};
+        let nranks = rng.range(1, 20) as usize;
+        let mut profiles = Vec::new();
+        let mut want_sends = 0u64;
+        let mut want_bytes = 0u64;
+        for r in 0..nranks {
+            let mut p = RankProfile {
+                rank: r,
+                ..Default::default()
+            };
+            let mut s = RegionStats {
+                is_comm_region: true,
+                visits: 1,
+                ..Default::default()
+            };
+            let n_msg = rng.range(0, 50);
+            for _ in 0..n_msg {
+                let bytes = rng.range(1, 1 << 20);
+                s.record_send((r + 1) % nranks.max(2), bytes);
+                want_sends += 1;
+                want_bytes += bytes;
+            }
+            p.regions.insert("x".to_string(), s);
+            profiles.push(p);
+        }
+        let run = aggregate(BTreeMap::new(), &profiles);
+        let reg = &run.regions["x"];
+        assert_eq!(reg.sends.total() as u64, want_sends);
+        assert_eq!(reg.bytes_sent.total() as u64, want_bytes);
+        assert_eq!(reg.participants as usize, nranks);
+        // min ≤ avg ≤ max
+        assert!(reg.sends.min() <= reg.sends.avg() + 1e-9);
+        assert!(reg.sends.avg() <= reg.sends.max() + 1e-9);
+    });
+}
+
+#[test]
+fn prop_transfer_time_monotone() {
+    for_seeds("netmodel_monotone", 32, |rng| {
+        let m = random_machine(rng);
+        let total = 64;
+        let b1 = rng.range(1, 1 << 22) as usize;
+        let b2 = b1 + rng.range(1, 1 << 20) as usize;
+        // monotone in bytes, for both link classes
+        assert!(m.transfer_time(b2, 0, 1, total) >= m.transfer_time(b1, 0, 1, total));
+        let far = m.ranks_per_node; // first off-node rank
+        if far < total {
+            assert!(m.transfer_time(b2, 0, far, total) >= m.transfer_time(b1, 0, far, total));
+            // inter-node never faster than intra-node for same bytes
+            assert!(
+                m.transfer_time(b1, 0, far, total) >= m.transfer_time(b1, 0, 1, total) - 1e-15
+            );
+        }
+    });
+}

@@ -1,0 +1,172 @@
+//! Integration: the Rust PJRT runtime loads the HLO-text artifacts emitted
+//! by `python/compile/aot.py` and reproduces the Python-side numerics.
+//!
+//! Requires `make artifacts` (the Makefile runs it before tests). The
+//! reference values below mirror the schemes in
+//! `python/compile/kernels/ref.py` exactly.
+
+use commscope::runtime::{ComputeService, Executor};
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// Deterministic pseudo-random fill matching nothing in particular — the
+/// comparison is against a Rust re-implementation of the same scheme, so
+/// any values work.
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = commscope::util::rng::Rng::new(seed);
+    (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+/// Rust mirror of ref.jacobi_step_ref (omega=0.8, h2=1).
+fn jacobi_ref(u: &[f32], f: &[f32], n: usize) -> Vec<f32> {
+    let nh = n + 2;
+    let idx = |x: usize, y: usize, z: usize| (x * nh + y) * nh + z;
+    let fidx = |x: usize, y: usize, z: usize| (x * n + y) * n + z;
+    let mut out = vec![0f32; n * n * n];
+    for x in 0..n {
+        for y in 0..n {
+            for z in 0..n {
+                let (hx, hy, hz) = (x + 1, y + 1, z + 1);
+                let c = u[idx(hx, hy, hz)];
+                let nbr = u[idx(hx - 1, hy, hz)]
+                    + u[idx(hx + 1, hy, hz)]
+                    + u[idx(hx, hy - 1, hz)]
+                    + u[idx(hx, hy + 1, hz)]
+                    + u[idx(hx, hy, hz - 1)]
+                    + u[idx(hx, hy, hz + 1)];
+                let jac = (nbr + f[fidx(x, y, z)]) / 6.0;
+                out[fidx(x, y, z)] = 0.2 * c + 0.8 * jac;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn amg_jacobi_matches_native_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exec = Executor::load(dir).expect("loading artifacts");
+    assert!(exec.platform().to_lowercase().contains("cpu") || !exec.platform().is_empty());
+    let n = 16usize;
+    let u = fill((n + 2) * (n + 2) * (n + 2), 1);
+    let f = fill(n * n * n, 2);
+    let outs = exec.execute_f32("amg_jacobi", &[&u, &f]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let want = jacobi_ref(&u, &f, n);
+    assert_eq!(outs[0].len(), want.len());
+    for (a, b) in outs[0].iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{} vs {}", a, b);
+    }
+}
+
+#[test]
+fn amg_residual_norm_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exec = Executor::load(dir).unwrap();
+    let n = 16usize;
+    let u = fill((n + 2) * (n + 2) * (n + 2), 3);
+    let f = fill(n * n * n, 4);
+    let outs = exec.execute_f32("amg_residual", &[&u, &f]).unwrap();
+    assert_eq!(outs.len(), 2);
+    let r = &outs[0];
+    let norm2 = outs[1][0];
+    let sum: f32 = r.iter().map(|x| x * x).sum();
+    assert!(
+        (sum - norm2).abs() <= 1e-3 * norm2.abs().max(1.0),
+        "norm mismatch {} vs {}",
+        sum,
+        norm2
+    );
+}
+
+#[test]
+fn kripke_sweep_equilibrium_fixed_point() {
+    // At psi_in = q/sigt on all faces the DD update is a fixed point
+    // (same property tested python-side).
+    let Some(dir) = artifacts_dir() else { return };
+    let exec = Executor::load(dir).unwrap();
+    let (nx, ny, nz, g, d) = (8usize, 8usize, 8usize, 8usize, 8usize);
+    let sig = vec![2.0f32; nx * ny * nz];
+    let eq = vec![0.5f32; ny * nz * g * d]; // q=1.0 default, q/sigt = 0.5
+    let outs = exec
+        .execute_f32("kripke_sweep", &[&eq, &eq, &eq, &sig])
+        .unwrap();
+    assert_eq!(outs.len(), 4);
+    for v in &outs[0] {
+        assert!((v - 0.5).abs() < 1e-5, "psi_out_x {}", v);
+    }
+    // phi = mean over directions = 0.5 everywhere
+    for v in &outs[3] {
+        assert!((v - 0.5).abs() < 1e-5, "phi {}", v);
+    }
+}
+
+#[test]
+fn laghos_forces_matches_einsum() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exec = Executor::load(dir).unwrap();
+    let (e, q, n, dim) = (64usize, 16usize, 16usize, 2usize);
+    let b = fill(e * q * n, 7);
+    let s = fill(e * q * dim, 8);
+    let outs = exec.execute_f32("laghos_forces", &[&b, &s]).unwrap();
+    assert_eq!(outs.len(), 2);
+    let forces = &outs[0];
+    // spot-check a handful of entries against the contraction
+    let fref = |ei: usize, ni: usize, di: usize| -> f32 {
+        (0..q)
+            .map(|qi| b[(ei * q + qi) * n + ni] * s[(ei * q + qi) * dim + di])
+            .sum()
+    };
+    for &(ei, ni, di) in &[(0, 0, 0), (5, 3, 1), (63, 15, 1), (17, 9, 0)] {
+        let got = forces[(ei * n + ni) * dim + di];
+        let want = fref(ei, ni, di);
+        assert!((got - want).abs() < 1e-3, "{} vs {}", got, want);
+    }
+    // wavespeed = max |stress|
+    let ws = outs[1][0];
+    let max_abs = s.iter().fold(0f32, |m, x| m.max(x.abs()));
+    assert!((ws - max_abs).abs() < 1e-6);
+}
+
+#[test]
+fn compute_service_cross_thread() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = ComputeService::start(dir).unwrap();
+    let h = svc.handle();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let n = 16usize;
+                let u = fill((n + 2) * (n + 2) * (n + 2), 100 + i);
+                let f = fill(n * n * n, 200 + i);
+                let outs = h.execute("amg_jacobi", vec![u.clone(), f.clone()]).unwrap();
+                let want = jacobi_ref(&u, &f, n);
+                for (a, b) in outs[0].iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4);
+                }
+            })
+        })
+        .collect();
+    for t in handles {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn executor_validates_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exec = Executor::load(dir).unwrap();
+    let bad = vec![0f32; 10];
+    let f = vec![0f32; 16 * 16 * 16];
+    assert!(exec.execute_f32("amg_jacobi", &[&bad, &f]).is_err());
+    assert!(exec.execute_f32("amg_jacobi", &[&f]).is_err());
+    assert!(exec.execute_f32("no_such_model", &[]).is_err());
+}
