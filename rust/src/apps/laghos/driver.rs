@@ -152,7 +152,15 @@ mod tests {
     fn region_structure_matches_fig4() {
         let res = run_laghos(WorldConfig::new(4, MachineModel::test_machine()), &tiny());
         let run = aggregate(BTreeMap::new(), &res.profiles);
-        for name in ["main", "timestep", "halo_exchange", "reduction", "broadcast", "force", "cg_solve"] {
+        for name in [
+            "main",
+            "timestep",
+            "halo_exchange",
+            "reduction",
+            "broadcast",
+            "force",
+            "cg_solve",
+        ] {
             assert!(run.region(name).is_some(), "missing region {}", name);
         }
         let halo = run.region("halo_exchange").unwrap().1;

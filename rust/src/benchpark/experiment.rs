@@ -46,8 +46,11 @@ impl Scaling {
     }
 }
 
-/// One cell of the experiment matrix: app × system × rank count.
-#[derive(Debug, Clone, Copy)]
+/// One cell of the experiment matrix: app × system × rank count. (Note:
+/// spec equality is NOT the campaign dedup contract — the executor keys
+/// cells on [`crate::benchpark::modifier::cell_key`], which also folds in
+/// the run options.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExperimentSpec {
     pub app: AppKind,
     pub system: SystemId,

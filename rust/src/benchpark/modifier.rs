@@ -61,6 +61,25 @@ pub fn default_variant(spec: &ExperimentSpec) -> CaliperVariant {
     }
 }
 
+/// Content key for one experiment cell under the given run options: two
+/// cells with equal keys are guaranteed byte-identical `RunProfile`s (the
+/// runner is deterministic in everything but wall-clock), which is the
+/// contract the campaign executor's dedup cache relies on. The key covers
+/// every input that reaches the simulation: app, system, scaling, rank
+/// count, profiling variant, and both shrink factors.
+pub fn cell_key(spec: &ExperimentSpec, opts: &super::runner::RunOptions) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|is{}|ss{}",
+        spec.app.name(),
+        spec.system.name(),
+        spec.scaling.name(),
+        spec.nranks,
+        default_variant(spec).name(),
+        opts.iter_shrink,
+        opts.size_shrink,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +108,26 @@ mod tests {
     #[test]
     fn gpu_system_gets_gpu_variant() {
         assert_eq!(default_variant(&spec()), CaliperVariant::MpiGpu);
+    }
+
+    #[test]
+    fn cell_key_covers_all_run_inputs() {
+        use crate::benchpark::runner::RunOptions;
+        let base = spec();
+        let opts = RunOptions {
+            iter_shrink: 4,
+            size_shrink: 2,
+        };
+        let k = cell_key(&base, &opts);
+        assert_eq!(k, "kripke|tioga|weak|8|mpi,gpu|is4|ss2");
+        // Any input change must change the key.
+        let mut other = base;
+        other.nranks = 16;
+        assert_ne!(cell_key(&other, &opts), k);
+        let opts2 = RunOptions {
+            iter_shrink: 4,
+            size_shrink: 4,
+        };
+        assert_ne!(cell_key(&base, &opts2), k);
     }
 }

@@ -39,7 +39,22 @@ impl RunOptions {
         }
     }
 
+    /// Both shrink factors are divisors and must be ≥ 1. A zero would
+    /// otherwise reach `/ self.size_shrink` (or `/ self.iter_shrink`) and
+    /// panic with a bare divide-by-zero; fail with a diagnosable error at
+    /// the API boundary instead.
+    pub fn validate(&self) -> Result<()> {
+        if self.iter_shrink == 0 {
+            bail!("RunOptions::iter_shrink must be >= 1 (got 0)");
+        }
+        if self.size_shrink == 0 {
+            bail!("RunOptions::size_shrink must be >= 1 (got 0)");
+        }
+        Ok(())
+    }
+
     fn shrink_dims3(&self, d: [usize; 3]) -> [usize; 3] {
+        debug_assert!(self.size_shrink >= 1, "validate() not called");
         [
             (d[0] / self.size_shrink).max(2),
             (d[1] / self.size_shrink).max(2),
@@ -52,6 +67,7 @@ impl RunOptions {
 /// returning the cross-rank aggregated profile (metadata stamped by the
 /// Caliper modifier). The runner self-checks message conservation.
 pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> {
+    opts.validate()?;
     let machine = spec.system.machine();
     let world = WorldConfig::new(spec.nranks, machine);
     let variant = default_variant(spec);
@@ -132,6 +148,12 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
     };
 
     check_conservation(&profiles).map_err(|e| anyhow::anyhow!("self-check failed: {}", e))?;
+    // Stamp the run options into the metadata: a persisted profile must
+    // carry every input that shaped it, so the campaign's disk cache can
+    // tell a smoke-fidelity profile from a full-fidelity one.
+    let mut extra = extra;
+    extra.push(("iter_shrink", opts.iter_shrink.to_string()));
+    extra.push(("size_shrink", opts.size_shrink.to_string()));
     let meta = run_metadata(spec, variant, &extra);
     Ok(aggregate(meta, &profiles))
 }
@@ -177,6 +199,27 @@ mod tests {
             assert!(!run.regions.is_empty());
             let (bytes, sends) = run.comm_totals();
             assert!(bytes > 0.0 && sends > 0.0, "{}: no traffic", app.name());
+        }
+    }
+
+    #[test]
+    fn zero_shrink_factors_rejected_with_clear_error() {
+        let spec = ExperimentSpec {
+            app: AppKind::Kripke,
+            system: SystemId::Tioga,
+            scaling: Scaling::Weak,
+            nranks: 8,
+        };
+        for (iter_shrink, size_shrink, what) in
+            [(0, 1, "iter_shrink"), (1, 0, "size_shrink"), (0, 0, "iter_shrink")]
+        {
+            let opts = RunOptions {
+                iter_shrink,
+                size_shrink,
+            };
+            let err = run_cell(&spec, &opts).unwrap_err().to_string();
+            assert!(err.contains(what), "error '{}' must name {}", err, what);
+            assert!(err.contains(">= 1"), "error '{}' must state the floor", err);
         }
     }
 

@@ -28,7 +28,12 @@ pub fn runtime_report(run: &RunProfile) -> String {
     for (path, r) in &run.regions {
         let depth = path.matches('/').count();
         let leaf = path.rsplit('/').next().unwrap_or(path);
-        let label = format!("{}{}{}", "  ".repeat(depth), leaf, if r.is_comm_region { " [comm]" } else { "" });
+        let label = format!(
+            "{}{}{}",
+            "  ".repeat(depth),
+            leaf,
+            if r.is_comm_region { " [comm]" } else { "" }
+        );
         t.row(vec![
             label,
             r.visits.to_string(),

@@ -1,14 +1,33 @@
 //! Campaign execution: run experiment cells, persist profiles, self-check.
+//!
+//! The paper's evaluation is a large matrix of independent cells (app ×
+//! system × rank count); each cell owns its own `mpisim` world, so the
+//! matrix is embarrassingly parallel. [`CampaignExecutor`] shards cells
+//! across a work-stealing thread pool ([`crate::util::pool`]), deduplicates
+//! identical `(app, system, ranks, variant, shrink)` cells through a
+//! content-keyed result cache ([`crate::util::cache`]), streams each
+//! [`RunProfile`] to its sink the moment the cell completes (no barrier on
+//! the whole matrix), and surfaces per-cell failures without aborting the
+//! campaign. Because every cell is deterministic, a parallel campaign
+//! produces byte-identical profiles to a serial one.
 
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::benchpark::experiment::ExperimentSpec;
+use crate::benchpark::modifier::cell_key;
 use crate::benchpark::runner::{run_cell, RunOptions};
 use crate::benchpark::{table3_matrix, AppKind, SystemId};
+use crate::caliper::RunProfile;
 use crate::thicket::Thicket;
+use crate::util::cache::{CacheStats, ResultCache};
+use crate::util::json::Json;
+use crate::util::pool::run_batch;
 
 /// Campaign options.
 #[derive(Debug, Clone)]
@@ -21,6 +40,8 @@ pub struct CampaignOptions {
     /// Restrict to rank counts ≤ this (for quick passes).
     pub max_ranks: Option<usize>,
     pub verbose: bool,
+    /// Worker threads for the campaign executor (`--jobs N`; 1 = serial).
+    pub jobs: usize,
 }
 
 impl CampaignOptions {
@@ -32,6 +53,7 @@ impl CampaignOptions {
             system: None,
             max_ranks: None,
             verbose: true,
+            jobs: 1,
         }
     }
 }
@@ -46,32 +68,250 @@ pub fn selected_cells(opts: &CampaignOptions) -> Vec<ExperimentSpec> {
         .collect()
 }
 
-/// Run the campaign; writes `<out>/profiles/<id>.json` per cell and
-/// returns the loaded thicket. Existing profile files are reused unless
-/// `force` — making the campaign incremental, like Benchpark workspaces.
-pub fn run_campaign(opts: &CampaignOptions, force: bool) -> Result<Thicket> {
+/// One cell that did not produce a profile.
+#[derive(Debug, Clone)]
+pub struct CellFailure {
+    pub id: String,
+    pub error: String,
+}
+
+/// What a campaign actually did: profiles in deterministic (first
+/// occurrence) order, failures, and executor observability.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignReport {
+    /// Successful unique cells from THIS call (executed or served by the
+    /// in-memory dedup cache), in first-occurrence order of the input.
+    /// Disk-cached cells are not re-loaded here — use
+    /// [`load_profiles`] for the full campaign view.
+    pub runs: Vec<Arc<RunProfile>>,
+    pub failures: Vec<CellFailure>,
+    /// Cells in the request.
+    pub cells_total: usize,
+    /// Cells simulated to completion AND persisted (unique, uncached). A
+    /// cell that failed — in simulation or at persist time — counts under
+    /// `failures`, not here, so run/cached/disk-cached/failed partition
+    /// `cells_total` (modulo duplicates of a failed cell, see
+    /// `cache_hits`).
+    pub cells_executed: usize,
+    /// Cells served from the dedup cache instead of re-simulated. A
+    /// duplicate of a *failed* cell counts in neither bucket: the failure
+    /// is recorded once, under the first occurrence.
+    pub cache_hits: usize,
+    /// Cells served from profile files already on disk (incremental
+    /// campaigns; always 0 for a bare executor, which never touches disk).
+    pub disk_cached: usize,
+    /// Thread-pool width the batch ran with.
+    pub workers: usize,
+    /// Workers that executed at least one cell.
+    pub workers_used: usize,
+    /// Cells executed on a worker other than the one they were sharded to.
+    pub steals: u64,
+}
+
+impl CampaignReport {
+    /// This call's successful runs as a [`Thicket`] in canonical (app,
+    /// system, ranks) order — for executor users that never touch the
+    /// disk. Excludes disk-cached cells (see [`CampaignReport::runs`]).
+    pub fn thicket(&self) -> Thicket {
+        let mut t = Thicket::default();
+        for r in &self.runs {
+            t.push((**r).clone());
+        }
+        t.sort_canonical();
+        t
+    }
+
+    /// One-line summary for logs, e.g.
+    /// `12 cells: 8 run, 2 cached, 2 disk-cached, 0 failed (4 workers used of 4)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} cells: {} run, {} cached, {} disk-cached, {} failed ({} worker{} used of {})",
+            self.cells_total,
+            self.cells_executed,
+            self.cache_hits,
+            self.disk_cached,
+            self.failures.len(),
+            self.workers_used,
+            if self.workers_used == 1 { "" } else { "s" },
+            self.workers,
+        )
+    }
+}
+
+/// The batched, work-stealing campaign executor. Holds the dedup cache, so
+/// consecutive `execute` calls on one executor serve repeated cells from
+/// memory (reported as cache hits).
+pub struct CampaignExecutor {
+    jobs: usize,
+    run: RunOptions,
+    cache: ResultCache<RunProfile>,
+}
+
+impl CampaignExecutor {
+    /// `jobs` is the worker-thread count (0 is clamped to 1). Fails fast on
+    /// invalid run options rather than once per cell.
+    pub fn new(jobs: usize, run: RunOptions) -> Result<CampaignExecutor> {
+        run.validate().context("invalid campaign run options")?;
+        Ok(CampaignExecutor {
+            jobs: jobs.max(1),
+            run,
+            cache: ResultCache::new(),
+        })
+    }
+
+    /// Cumulative dedup-cache counters across every `execute` call.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Run every cell, returning profiles and failures. Equivalent to
+    /// [`CampaignExecutor::execute_with`] with a no-op sink.
+    pub fn execute(&self, cells: &[ExperimentSpec]) -> CampaignReport {
+        self.execute_with(cells, |_, _| {})
+    }
+
+    /// Run every cell; `sink` is invoked from the executing worker the
+    /// moment a cell's profile is ready (streaming — used to persist
+    /// profiles and report progress without waiting for the whole matrix).
+    /// The sink is never called for cache-served or failed cells.
+    pub fn execute_with(
+        &self,
+        cells: &[ExperimentSpec],
+        sink: impl Fn(&ExperimentSpec, &RunProfile) + Sync,
+    ) -> CampaignReport {
+        // Dedup pass: a cell is served from cache if its content key was
+        // computed before — by an earlier execute() or earlier in this batch.
+        // In-batch duplicates are only counted as hits once their first
+        // occurrence actually produced a profile (see below): a duplicate of
+        // a cell that fails is collapsed into that cell's single failure
+        // record rather than claiming a hit on a cache that never held it.
+        let mut to_run: Vec<(ExperimentSpec, String)> = Vec::new();
+        let mut queued: BTreeSet<String> = BTreeSet::new();
+        let mut dup_keys: Vec<String> = Vec::new();
+        let mut cache_hits = 0usize;
+        for spec in cells {
+            let key = cell_key(spec, &self.run);
+            if queued.contains(&key) {
+                dup_keys.push(key);
+            } else if self.cache.get(&key).is_some() {
+                // Served from a previous execute() (counted on the cache).
+                cache_hits += 1;
+            } else {
+                queued.insert(key.clone());
+                to_run.push((*spec, key));
+            }
+        }
+
+        let cache = &self.cache;
+        let run_opts = self.run;
+        let (results, stats) = run_batch(
+            to_run,
+            self.jobs,
+            move |(spec, key): &(ExperimentSpec, String)| match run_cell(spec, &run_opts) {
+                Ok(profile) => {
+                    // Stream: cache + sink immediately, on the worker.
+                    let shared = cache.insert(key.clone(), profile);
+                    sink(spec, &shared);
+                    Ok(())
+                }
+                Err(e) => Err(CellFailure {
+                    id: spec.id(),
+                    error: format!("{:#}", e),
+                }),
+            },
+            |_, _| {},
+        );
+
+        let failures: Vec<CellFailure> = results.into_iter().filter_map(|r| r.err()).collect();
+        // Resolve in-batch duplicates now that the batch ran: a duplicate
+        // whose first occurrence succeeded was served from the cache
+        // (counted on the cache counters too, so `cache_stats()` agrees
+        // with the report).
+        cache_hits += dup_keys
+            .iter()
+            .filter(|k| self.cache.get(k).is_some())
+            .count();
+        // Deterministic output order: first occurrence in the input,
+        // independent of completion order.
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let mut runs = Vec::new();
+        for spec in cells {
+            let key = cell_key(spec, &self.run);
+            if seen.insert(key.clone()) {
+                if let Some(p) = self.cache.peek(&key) {
+                    runs.push(p);
+                }
+            }
+        }
+        CampaignReport {
+            cells_total: cells.len(),
+            cells_executed: stats.jobs - failures.len(),
+            runs,
+            failures,
+            cache_hits,
+            disk_cached: 0,
+            workers: stats.workers.max(1),
+            workers_used: stats.workers_used,
+            steals: stats.steals,
+        }
+    }
+}
+
+/// Run the campaign; writes `<out>/profiles/<id>.json` per cell and returns
+/// the loaded thicket plus the executor's report. Existing profile files
+/// generated under the same run options are reused unless `force` — making
+/// the campaign incremental, like Benchpark workspaces. Per-cell failures
+/// (including a profile that could not be persisted) do NOT abort the
+/// campaign; they are listed in the report.
+pub fn run_campaign_report(
+    opts: &CampaignOptions,
+    force: bool,
+) -> Result<(Thicket, CampaignReport)> {
     let profile_dir = opts.out_dir.join("profiles");
     std::fs::create_dir_all(&profile_dir).context("creating profile dir")?;
     let cells = selected_cells(opts);
     let total = cells.len();
-    for (i, spec) in cells.iter().enumerate() {
+
+    // Disk layer of the cache: skip cells whose profile file already exists
+    // AND was generated under the same run options (profiles are stamped
+    // with their shrink factors; a smoke-fidelity profile must not satisfy
+    // a full-fidelity campaign).
+    let mut fresh: Vec<ExperimentSpec> = Vec::new();
+    let mut disk_cached = 0usize;
+    for spec in &cells {
         let path = profile_dir.join(format!("{}.json", spec.id()));
-        if path.exists() && !force {
+        if !force && disk_profile_matches(&path, &opts.run) {
+            disk_cached += 1;
             if opts.verbose {
-                println!("[{}/{}] {} — cached", i + 1, total, spec.id());
+                println!("[{}/{}] {} — cached on disk", disk_cached, total, spec.id());
             }
-            continue;
+        } else {
+            fresh.push(*spec);
         }
-        let t0 = Instant::now();
-        let run = run_cell(spec, &opts.run)
-            .with_context(|| format!("running cell {}", spec.id()))?;
-        std::fs::write(&path, run.to_json().to_string_pretty())
-            .with_context(|| format!("writing {}", path.display()))?;
+    }
+
+    let executor = CampaignExecutor::new(opts.jobs, opts.run)?;
+    let t0 = Instant::now();
+    let done = AtomicUsize::new(disk_cached);
+    // A profile that simulated fine but could not be persisted becomes that
+    // cell's failure (reported in failures.csv and the exit code) rather
+    // than discarding the whole report.
+    let io_errors: Mutex<Vec<CellFailure>> = Mutex::new(Vec::new());
+    let mut report = executor.execute_with(&fresh, |spec, run| {
+        let path = profile_dir.join(format!("{}.json", spec.id()));
+        if let Err(e) = std::fs::write(&path, run.to_json().to_string_pretty()) {
+            io_errors.lock().unwrap().push(CellFailure {
+                id: spec.id(),
+                error: format!("writing {}: {}", path.display(), e),
+            });
+            return;
+        }
         if opts.verbose {
+            let i = done.fetch_add(1, Ordering::Relaxed) + 1;
             let (bytes, sends) = run.comm_totals();
             println!(
-                "[{}/{}] {} — {:.1}s wall, {:.3e} bytes, {:.3e} sends, vtime {:.3}s",
-                i + 1,
+                "[{}/{}] {} — {:.1}s elapsed, {:.3e} bytes, {:.3e} sends, vtime {:.3}s",
+                i,
                 total,
                 spec.id(),
                 t0.elapsed().as_secs_f64(),
@@ -80,13 +320,96 @@ pub fn run_campaign(opts: &CampaignOptions, force: bool) -> Result<Thicket> {
                 run.wall_time(),
             );
         }
+    });
+    let io_failures = io_errors.into_inner().unwrap();
+    if !io_failures.is_empty() {
+        // A cell that simulated but was never persisted is a failure, not a
+        // success: drop it from `runs` so the report stays consistent. The
+        // match goes through the spec's own fields (the same sources
+        // `run_metadata` stamped), not a re-assembled id string.
+        let failed: BTreeSet<&str> = io_failures.iter().map(|f| f.id.as_str()).collect();
+        let failed_specs: Vec<&ExperimentSpec> = fresh
+            .iter()
+            .filter(|s| failed.contains(s.id().as_str()))
+            .collect();
+        report.runs.retain(|r| {
+            !failed_specs.iter().any(|s| {
+                r.meta.get("app").map(String::as_str) == Some(s.app.name())
+                    && r.meta.get("system").map(String::as_str) == Some(s.system.name())
+                    && r.meta_usize("ranks") == Some(s.nranks)
+            })
+        });
+        report.cells_executed = report.cells_executed.saturating_sub(io_failures.len());
+        report.failures.extend(io_failures);
     }
-    load_profiles(&opts.out_dir)
+    // Fold the disk layer into the report so incremental campaigns don't
+    // claim "0 cells" while serving everything from <out>/profiles.
+    report.disk_cached = disk_cached;
+    report.cells_total += disk_cached;
+    if opts.verbose {
+        println!("campaign executor: {}", report.summary());
+        for f in &report.failures {
+            eprintln!("campaign cell FAILED: {}: {}", f.id, f.error);
+        }
+    }
+    let thicket = load_profiles(&opts.out_dir)?;
+    Ok((thicket, report))
+}
+
+/// Strict wrapper preserving the original contract: any cell failure fails
+/// the campaign (after every other cell has still been run and persisted).
+pub fn run_campaign(opts: &CampaignOptions, force: bool) -> Result<Thicket> {
+    let (thicket, report) = run_campaign_report(opts, force)?;
+    if !report.failures.is_empty() {
+        let list: Vec<String> = report
+            .failures
+            .iter()
+            .map(|f| format!("{}: {}", f.id, f.error))
+            .collect();
+        bail!(
+            "{} of {} campaign cells failed: {}",
+            report.failures.len(),
+            report.cells_total,
+            list.join("; ")
+        );
+    }
+    Ok(thicket)
 }
 
 /// Load previously-written campaign profiles.
 pub fn load_profiles(out_dir: impl AsRef<Path>) -> Result<Thicket> {
     Thicket::load_dir(out_dir.as_ref().join("profiles"))
+}
+
+/// True when a profile file exists AND its stamped run options match the
+/// requested ones. Unreadable/unparseable files and profiles from before
+/// the options were stamped count as stale (re-run, overwrite).
+///
+/// This parses the file that `load_profiles` will parse again at the end
+/// of the campaign — accepted: profiles are small, the matrix is ≤20
+/// cells, and keeping `load_dir` the single source of thicket assembly
+/// beats caching parsed profiles across the two passes.
+fn disk_profile_matches(path: &Path, run: &RunOptions) -> bool {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return false,
+    };
+    let parsed = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(_) => return false,
+    };
+    // Only the two stamped meta fields matter here — skip the full
+    // RunProfile reconstruction (regions, per-rank aggregates).
+    let meta = match parsed.get("meta") {
+        Some(m) => m,
+        None => return false,
+    };
+    let field = |k: &str| {
+        meta.get(k)
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse::<usize>().ok())
+    };
+    field("iter_shrink") == Some(run.iter_shrink) && field("size_shrink") == Some(run.size_shrink)
 }
 
 #[cfg(test)]
@@ -120,9 +443,80 @@ mod tests {
         let t = run_campaign(&opts, true).unwrap();
         assert_eq!(t.len(), 1);
         assert_eq!(t.runs[0].meta["app"], "kripke");
-        // second pass hits the cache
-        let t2 = run_campaign(&opts, false).unwrap();
+        // second pass hits the disk cache
+        let (t2, report) = run_campaign_report(&opts, false).unwrap();
         assert_eq!(t2.len(), 1);
+        assert_eq!(report.cells_executed, 0, "{}", report.summary());
+        assert_eq!(report.disk_cached, 1, "{}", report.summary());
+        assert_eq!(report.cells_total, 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_disk_profiles_rerun_on_options_change() {
+        let dir = std::env::temp_dir().join(format!("campaign_stale_{}", std::process::id()));
+        let mut opts = CampaignOptions::new(&dir);
+        opts.app = Some(AppKind::Kripke);
+        opts.system = Some(SystemId::Tioga);
+        opts.max_ranks = Some(8);
+        opts.run = RunOptions {
+            iter_shrink: 10,
+            size_shrink: 8,
+        };
+        opts.verbose = false;
+        run_campaign(&opts, true).unwrap();
+        // same fidelity: served from disk
+        let (_, same) = run_campaign_report(&opts, false).unwrap();
+        assert_eq!(same.disk_cached, 1, "{}", same.summary());
+        // different fidelity: the smoke-era profile must NOT satisfy it
+        opts.run = RunOptions {
+            iter_shrink: 20,
+            size_shrink: 8,
+        };
+        let (_, changed) = run_campaign_report(&opts, false).unwrap();
+        assert_eq!(changed.disk_cached, 0, "{}", changed.summary());
+        assert_eq!(changed.cells_executed, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn executor_rejects_invalid_options() {
+        let bad = RunOptions {
+            iter_shrink: 0,
+            size_shrink: 1,
+        };
+        assert!(CampaignExecutor::new(4, bad).is_err());
+    }
+
+    #[test]
+    fn executor_dedups_repeated_cells() {
+        use crate::benchpark::experiment::Scaling;
+        let spec = ExperimentSpec {
+            app: AppKind::Kripke,
+            system: SystemId::Tioga,
+            scaling: Scaling::Weak,
+            nranks: 8,
+        };
+        let exec = CampaignExecutor::new(
+            2,
+            RunOptions {
+                iter_shrink: 10,
+                size_shrink: 8,
+            },
+        )
+        .unwrap();
+        // Same cell three times in one batch: one simulation, two hits.
+        let report = exec.execute(&[spec, spec, spec]);
+        assert_eq!(report.cells_total, 3);
+        assert_eq!(report.cells_executed, 1);
+        assert_eq!(report.cache_hits, 2);
+        assert_eq!(report.runs.len(), 1);
+        assert!(report.failures.is_empty());
+        // A whole repeated campaign: zero simulations.
+        let again = exec.execute(&[spec]);
+        assert_eq!(again.cells_executed, 0);
+        assert_eq!(again.cache_hits, 1);
+        assert_eq!(again.runs.len(), 1);
+        assert!(Arc::ptr_eq(&report.runs[0], &again.runs[0]));
     }
 }

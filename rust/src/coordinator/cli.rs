@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! repro campaign [--out results] [--app X] [--system Y] [--max-ranks N]
-//!                [--smoke] [--force]        run the Table III matrix
+//!                [--smoke] [--force] [--jobs N]
+//!                                           run the Table III matrix
+//!                                           (N worker threads; default 1)
 //! repro table1|table2|table3                print static tables
 //! repro table4  [--out results]             print Table IV from profiles
 //! repro fig1..fig6 [--out results]          render figures (+CSV)
@@ -18,7 +20,7 @@ use crate::benchpark::runner::{run_cell, RunOptions};
 use crate::benchpark::{AppKind, SystemId};
 use crate::caliper::report::{comm_report, runtime_report};
 use crate::caliper::RunProfile;
-use crate::coordinator::campaign::{load_profiles, run_campaign, CampaignOptions};
+use crate::coordinator::campaign::{load_profiles, run_campaign_report, CampaignOptions};
 use crate::coordinator::figures;
 use crate::thicket::Thicket;
 use crate::util::cli::Args;
@@ -31,7 +33,7 @@ on the commscope simulated stack.
 
 USAGE:
   repro campaign [--out results] [--app APP] [--system SYS]
-                 [--max-ranks N] [--smoke] [--force]
+                 [--max-ranks N] [--smoke] [--force] [--jobs N]
   repro table1 | table2 | table3
   repro table4 [--out results]
   repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6  [--out results]
@@ -40,6 +42,10 @@ USAGE:
   repro help
 
 Profiles are cached under <out>/profiles; `campaign --force` reruns.
+`--jobs N` runs matrix cells on N worker threads (work-stealing executor;
+results are byte-identical to a serial run). Per-cell failures do not abort
+the campaign: survivors are rendered, failures land in failures.csv, and
+the exit code is nonzero.
 APP ∈ {amg2023, kripke, laghos}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
@@ -71,6 +77,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
         Some("campaign") => {
             let mut opts = CampaignOptions::new(&out_dir);
             opts.run = run_options(args);
+            opts.jobs = args.get_usize("jobs", 1);
             if let Some(app) = args.get("app") {
                 opts.app =
                     Some(AppKind::parse(app).ok_or_else(|| anyhow::anyhow!("bad --app"))?);
@@ -82,24 +89,30 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             if let Some(m) = args.get("max-ranks") {
                 opts.max_ranks = Some(m.parse()?);
             }
-            let t = run_campaign(&opts, args.has("force"))?;
-            println!("campaign complete: {} profiles under {}/profiles", t.len(), out_dir);
-            // drop the inventory + all figures alongside
+            let (t, report) = run_campaign_report(&opts, args.has("force"))?;
+            println!(
+                "campaign complete: {} profiles under {}/profiles ({})",
+                t.len(),
+                out_dir,
+                report.summary()
+            );
+            // drop the inventory, failure list, + all figures alongside
             let fig_dir = Path::new(&out_dir);
             crate::thicket::export::write_inventory_csv(fig_dir.join("inventory.csv"), &t)?;
-            let mut all = String::new();
-            all.push_str(&figures::table1());
-            all.push_str(&figures::table2());
-            all.push_str(&figures::table3());
-            all.push_str(&figures::table4(&t));
-            all.push_str(&figures::fig1(&t, Some(fig_dir))?);
-            all.push_str(&figures::fig2(&t, Some(fig_dir))?);
-            all.push_str(&figures::fig3(&t, Some(fig_dir))?);
-            all.push_str(&figures::fig4(&t, Some(fig_dir))?);
-            all.push_str(&figures::fig5(&t, Some(fig_dir))?);
-            all.push_str(&figures::fig6(&t, Some(fig_dir))?);
+            crate::thicket::export::write_failures_csv(
+                fig_dir.join("failures.csv"),
+                report.failures.iter().map(|f| (f.id.as_str(), f.error.as_str())),
+            )?;
+            let all = figures::render_all(&t, Some(fig_dir))?;
             std::fs::write(fig_dir.join("report.txt"), &all)?;
             println!("figures + CSVs written to {}", out_dir);
+            if !report.failures.is_empty() {
+                anyhow::bail!(
+                    "{} campaign cell(s) failed (see {}/failures.csv)",
+                    report.failures.len(),
+                    out_dir
+                );
+            }
             Ok(())
         }
         Some("table1") => {
@@ -173,10 +186,13 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
 }
 
 fn need_profiles(out_dir: &str) -> anyhow::Result<Thicket> {
-    let t = load_profiles(out_dir)
-        .map_err(|_| anyhow::anyhow!("no profiles under {}/profiles — run `repro campaign` first", out_dir))?;
+    let missing = format!(
+        "no profiles under {}/profiles — run `repro campaign` first",
+        out_dir
+    );
+    let t = load_profiles(out_dir).map_err(|_| anyhow::anyhow!("{}", missing))?;
     if t.is_empty() {
-        anyhow::bail!("no profiles under {}/profiles — run `repro campaign` first", out_dir);
+        anyhow::bail!("{}", missing);
     }
     Ok(t)
 }

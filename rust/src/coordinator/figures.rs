@@ -14,6 +14,24 @@ use crate::thicket::{stats, Thicket};
 use crate::util::plotascii::{Chart, Series};
 use crate::util::table::{sci, Align, TextTable};
 
+/// Render every table and figure into one report string; when `out` is
+/// given, drop each figure's CSV there too. Any emitter error propagates —
+/// the CI campaign-smoke job gates on this returning `Ok`.
+pub fn render_all(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    let mut all = String::new();
+    all.push_str(&table1());
+    all.push_str(&table2());
+    all.push_str(&table3());
+    all.push_str(&table4(thicket));
+    all.push_str(&fig1(thicket, out)?);
+    all.push_str(&fig2(thicket, out)?);
+    all.push_str(&fig3(thicket, out)?);
+    all.push_str(&fig4(thicket, out)?);
+    all.push_str(&fig5(thicket, out)?);
+    all.push_str(&fig6(thicket, out)?);
+    Ok(all)
+}
+
 /// Table I — the attributes the comm-pattern profiler collects.
 pub fn table1() -> String {
     let mut t = TextTable::new(&["Attribute", "Description"])
@@ -266,7 +284,7 @@ fn bw_rate_figure(
         let mut csv = Vec::new();
         for app in apps {
             let group = thicket.filter(&[("app", app), ("system", system)]);
-            let pts = group.series(|r| f(r));
+            let pts = group.series(f);
             if !pts.is_empty() {
                 series.push(Series::new(app, pts.clone()));
                 csv.push((app.to_string(), pts));

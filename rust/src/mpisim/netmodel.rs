@@ -95,7 +95,8 @@ impl MachineModel {
         let rpn = self.ranks_per_node.min(total_ranks).max(1) as f64;
         let nodes = self.nodes_for(total_ranks) as f64;
         let share = 1.0 + self.net.nic_share * (rpn - 1.0) / rpn;
-        let contention = 1.0 + self.net.contention_coeff * (nodes - 1.0).max(0.0).powf(self.net.contention_exp);
+        let contention =
+            1.0 + self.net.contention_coeff * (nodes - 1.0).max(0.0).powf(self.net.contention_exp);
         self.net.beta_inter * share * contention
     }
 

@@ -67,6 +67,26 @@ pub(crate) struct WorldCore {
     coll: CollBoard,
 }
 
+/// Compile-time Send/Sync audit.
+///
+/// Two layers of threading stack here: each world shares a [`WorldCore`]
+/// across its rank threads, and the campaign executor additionally runs
+/// many *worlds* concurrently from a work-stealing pool (`util::pool`), so
+/// every world-level structure must be `Send + Sync` and worlds must share
+/// no mutable global state (each `World::run` owns its core exclusively).
+/// Per-rank state ([`Rank`]) is deliberately NOT `Sync`: its
+/// [`HookHandle`]s are `Rc<RefCell<…>>` and never leave the rank thread.
+#[allow(dead_code)]
+fn _send_sync_audit() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<WorldConfig>();
+    assert_send_sync::<WorldCore>();
+    assert_send_sync::<MachineModel>();
+    assert_send_sync::<Mailbox>();
+    assert_send_sync::<CollBoard>();
+    assert_send_sync::<Envelope>();
+}
+
 /// The world launcher.
 pub struct World;
 

@@ -47,9 +47,43 @@ pub fn write_inventory_csv(path: impl AsRef<Path>, thicket: &Thicket) -> Result<
     Ok(())
 }
 
+/// Write the campaign's per-cell failures (empty file with header when the
+/// campaign was clean) — dropped next to the inventory so a partial matrix
+/// is diagnosable from the artifacts alone.
+pub fn write_failures_csv<'a>(
+    path: impl AsRef<Path>,
+    failures: impl IntoIterator<Item = (&'a str, &'a str)>,
+) -> Result<()> {
+    let mut t = TextTable::new(&["cell", "error"]);
+    for (id, error) in failures {
+        // keep the CSV one-line-per-cell: flatten any multi-line context
+        // (to_csv itself quotes cells containing commas)
+        t.row(vec![id.to_string(), error.replace('\n', " | ")]);
+    }
+    std::fs::write(path.as_ref(), t.to_csv())?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn failures_csv_flattens_errors() {
+        let dir = std::env::temp_dir().join(format!("failcsv_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("failures.csv");
+        write_failures_csv(
+            &path,
+            [("laghos_tioga_8", "running cell\nlaghos runs on dane, only")],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("cell,error"));
+        assert!(text.contains("laghos_tioga_8"));
+        assert!(!text.contains('\n') || text.lines().count() == 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 
     #[test]
     fn series_csv_roundtrip_text() {

@@ -19,6 +19,31 @@ impl Thicket {
         Thicket { runs }
     }
 
+    /// Append one run (incremental ingestion; see
+    /// `CampaignReport::thicket`, which assembles an in-memory thicket
+    /// from executor results without a campaign directory).
+    pub fn push(&mut self, run: RunProfile) {
+        self.runs.push(run);
+    }
+
+    /// Canonical deterministic order: (app, system, numeric ranks).
+    /// Incremental ingestion can arrive in any order; sorting afterwards
+    /// makes the result independent of completion order. (Note this is
+    /// NOT the same order as [`Thicket::load_dir`], which sorts file
+    /// names lexicographically, so e.g. ranks 16 precedes ranks 8.)
+    pub fn sort_canonical(&mut self) {
+        self.runs.sort_by(|a, b| {
+            let key = |r: &RunProfile| {
+                (
+                    r.meta.get("app").cloned().unwrap_or_default(),
+                    r.meta.get("system").cloned().unwrap_or_default(),
+                    r.meta_usize("ranks").unwrap_or(0),
+                )
+            };
+            key(a).cmp(&key(b))
+        });
+    }
+
     /// Load every `*.json` profile in a directory (what `repro campaign`
     /// writes).
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Thicket> {
@@ -132,6 +157,29 @@ mod tests {
         let t = Thicket::new(vec![run("k", 64, 2.0), run("k", 8, 1.0)]);
         let s = t.series(|r| Some(r.comm_totals().0));
         assert_eq!(s, vec![(8.0, 1.0), (64.0, 2.0)]);
+    }
+
+    #[test]
+    fn push_and_sort_canonical() {
+        let mut t = Thicket::default();
+        // completion order: scrambled, as a parallel campaign would yield
+        for (app, ranks) in [("kripke", 64), ("amg2023", 8), ("kripke", 8)] {
+            t.push(run(app, ranks, 1.0));
+        }
+        t.sort_canonical();
+        let order: Vec<(String, usize)> = t
+            .runs
+            .iter()
+            .map(|r| (r.meta["app"].clone(), r.meta_usize("ranks").unwrap()))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                ("amg2023".to_string(), 8),
+                ("kripke".to_string(), 8),
+                ("kripke".to_string(), 64)
+            ]
+        );
     }
 
     #[test]

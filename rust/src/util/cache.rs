@@ -1,0 +1,126 @@
+//! A content-keyed result cache with hit/miss accounting.
+//!
+//! The campaign executor keys each experiment cell by its full run
+//! configuration (`app|system|ranks|variant|shrink factors`); because the
+//! runner is deterministic, identical keys are guaranteed identical results,
+//! so repeated cells can be served from the cache instead of re-simulated.
+//! Values are stored behind `Arc` so duplicate cells share one allocation.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache observability counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: u64,
+}
+
+/// Thread-safe map from content key to shared result.
+#[derive(Debug, Default)]
+pub struct ResultCache<V> {
+    map: Mutex<BTreeMap<String, Arc<V>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<V> ResultCache<V> {
+    pub fn new() -> ResultCache<V> {
+        ResultCache {
+            map: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up `key`, counting a hit or miss.
+    pub fn get(&self, key: &str) -> Option<Arc<V>> {
+        let got = self.map.lock().unwrap().get(key).cloned();
+        match &got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Look up `key` without touching the hit/miss counters (internal
+    /// assembly passes that re-read entries already counted as user-facing
+    /// lookups).
+    pub fn peek(&self, key: &str) -> Option<Arc<V>> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert a computed value, returning the shared handle. Inserting an
+    /// existing key replaces the value (last write wins; with deterministic
+    /// producers both values are identical).
+    pub fn insert(&self, key: impl Into<String>, value: V) -> Arc<V> {
+        let v = Arc::new(value);
+        self.map.lock().unwrap().insert(key.into(), v.clone());
+        v
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.lock().unwrap().contains_key(key)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_accounting() {
+        let c: ResultCache<u64> = ResultCache::new();
+        assert!(c.get("a").is_none());
+        c.insert("a", 42);
+        assert_eq!(*c.get("a").unwrap(), 42);
+        assert!(c.contains("a"));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn peek_does_not_count() {
+        let c: ResultCache<u64> = ResultCache::new();
+        c.insert("k", 7);
+        assert_eq!(*c.peek("k").unwrap(), 7);
+        assert!(c.peek("missing").is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+    }
+
+    #[test]
+    fn duplicates_share_one_allocation() {
+        let c: ResultCache<Vec<u8>> = ResultCache::new();
+        let a = c.insert("k", vec![1, 2, 3]);
+        let b = c.get("k").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c: ResultCache<usize> = ResultCache::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..50 {
+                        c.insert(format!("k{}", i % 10), t * 1000 + i);
+                        let _ = c.get(&format!("k{}", i % 10));
+                    }
+                });
+            }
+        });
+        assert_eq!(c.stats().entries, 10);
+    }
+}

@@ -13,11 +13,17 @@
 //! - [`table`]: aligned plain-text table rendering (paper-table output).
 //! - [`cli`]: a small declarative argument parser for the `repro` binary.
 //! - [`plotascii`]: terminal line charts used by the figure regenerators.
+//! - [`pool`]: a work-stealing thread pool for parallel job batches (no
+//!   `rayon`) — the campaign executor's substrate.
+//! - [`cache`]: a content-keyed result cache with hit/miss accounting
+//!   (experiment-cell deduplication).
 
 pub mod benchutil;
+pub mod cache;
 pub mod cli;
 pub mod json;
 pub mod plotascii;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;

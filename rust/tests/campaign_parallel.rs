@@ -1,0 +1,139 @@
+//! The parallel campaign executor's contract: a parallel run of the smoke
+//! matrix is byte-identical to a serial run (determinism), work actually
+//! spreads over >1 worker, repeated cells are served from the dedup cache,
+//! and the disk campaign writes the same artifacts at any `--jobs` width.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use commscope::benchpark::runner::RunOptions;
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::coordinator::campaign::{
+    run_campaign_report, selected_cells, CampaignExecutor, CampaignOptions,
+};
+
+fn fast() -> RunOptions {
+    RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+    }
+}
+
+/// The ≤16-rank smoke matrix: amg2023 tioga 8/16, kripke tioga 8/16.
+fn smoke_cells() -> Vec<commscope::benchpark::ExperimentSpec> {
+    let mut opts = CampaignOptions::new(std::env::temp_dir());
+    opts.max_ranks = Some(16);
+    let cells = selected_cells(&opts);
+    assert_eq!(cells.len(), 4);
+    cells
+}
+
+#[test]
+fn parallel_profiles_byte_identical_to_serial() {
+    let cells = smoke_cells();
+    let serial = CampaignExecutor::new(1, fast()).unwrap().execute(&cells);
+    // `workers_used` is scheduling-dependent: on a contended runner one
+    // worker can in principle steal the whole batch. Retry a couple of
+    // times (fresh executor each time, so cells really re-run) before
+    // declaring the pool serial — three collapses in a row means a bug.
+    let mut parallel = CampaignExecutor::new(4, fast()).unwrap().execute(&cells);
+    for _ in 0..2 {
+        if parallel.workers_used > 1 {
+            break;
+        }
+        parallel = CampaignExecutor::new(4, fast()).unwrap().execute(&cells);
+    }
+    assert!(serial.failures.is_empty() && parallel.failures.is_empty());
+    assert_eq!(serial.runs.len(), 4);
+    assert_eq!(parallel.runs.len(), 4);
+    assert_eq!(parallel.workers, 4);
+    assert!(
+        parallel.workers_used > 1,
+        "expected >1 worker thread, report: {}",
+        parallel.summary()
+    );
+    for (s, p) in serial.runs.iter().zip(&parallel.runs) {
+        assert_eq!(s.meta, p.meta);
+        let sj = s.to_json().to_string_pretty();
+        let pj = p.to_json().to_string_pretty();
+        assert_eq!(sj, pj, "profile for {:?} diverged", s.meta.get("app"));
+    }
+}
+
+#[test]
+fn dedup_cache_serves_repeated_cells() {
+    let cells = smoke_cells();
+    let exec = CampaignExecutor::new(4, fast()).unwrap();
+    // The same 4 unique cells, each listed three times.
+    let mut tripled = Vec::new();
+    for _ in 0..3 {
+        tripled.extend_from_slice(&cells);
+    }
+    let executed = AtomicUsize::new(0);
+    let report = exec.execute_with(&tripled, |_, _| {
+        executed.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(report.cells_total, 12);
+    assert_eq!(report.cells_executed, 4, "{}", report.summary());
+    assert_eq!(report.cache_hits, 8, "{}", report.summary());
+    assert_eq!(executed.load(Ordering::Relaxed), 4, "sink fires once per unique cell");
+    assert_eq!(report.runs.len(), 4, "duplicates collapse in the output");
+    // In-memory thicket assembly: canonical (app, system, ranks) order.
+    let t = report.thicket();
+    assert_eq!(t.len(), 4);
+    let order: Vec<String> = t
+        .runs
+        .iter()
+        .map(|r| format!("{}_{}", r.meta["app"], r.meta["ranks"]))
+        .collect();
+    assert_eq!(order, ["amg2023_8", "amg2023_16", "kripke_8", "kripke_16"]);
+
+    // A follow-up campaign of already-seen cells is pure cache.
+    let again = exec.execute(&cells);
+    assert_eq!(again.cells_executed, 0);
+    assert_eq!(again.cache_hits, 4);
+    for (a, b) in report.runs.iter().zip(&again.runs) {
+        assert!(Arc::ptr_eq(a, b), "cached cells must share one allocation");
+    }
+    let stats = exec.cache_stats();
+    assert_eq!(stats.entries, 4);
+    assert!(stats.hits >= 4, "cache hit counter must register: {:?}", stats);
+}
+
+#[test]
+fn disk_campaign_identical_across_jobs_widths() {
+    let base = std::env::temp_dir().join(format!("campaign_par_{}", std::process::id()));
+    let dir_serial = base.join("serial");
+    let dir_parallel = base.join("parallel");
+    for (dir, jobs) in [(&dir_serial, 1usize), (&dir_parallel, 3usize)] {
+        let mut opts = CampaignOptions::new(dir);
+        opts.run = fast();
+        opts.app = Some(AppKind::Kripke);
+        opts.system = Some(SystemId::Tioga);
+        opts.max_ranks = Some(16);
+        opts.verbose = false;
+        opts.jobs = jobs;
+        let (t, report) = run_campaign_report(&opts, true).unwrap();
+        assert_eq!(t.len(), 2);
+        assert!(report.failures.is_empty());
+        assert_eq!(report.cells_executed, 2);
+    }
+    for cell in ["kripke_tioga_8", "kripke_tioga_16"] {
+        let a = std::fs::read_to_string(dir_serial.join(format!("profiles/{}.json", cell)))
+            .unwrap();
+        let b = std::fs::read_to_string(dir_parallel.join(format!("profiles/{}.json", cell)))
+            .unwrap();
+        assert_eq!(a, b, "{} differs between --jobs 1 and --jobs 3", cell);
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn executor_validates_options_before_running() {
+    let bad = RunOptions {
+        iter_shrink: 1,
+        size_shrink: 0,
+    };
+    let err = CampaignExecutor::new(2, bad).unwrap_err().to_string();
+    assert!(err.contains("campaign run options"), "err: {}", err);
+}

@@ -166,3 +166,52 @@ fn runtime_missing_artifacts_fails_fast() {
     assert!(Executor::load("/nonexistent/place").is_err());
     assert!(ComputeService::start("/nonexistent/place").is_err());
 }
+
+#[test]
+fn campaign_surfaces_cell_failures_without_aborting() {
+    use commscope::benchpark::experiment::Scaling;
+    use commscope::benchpark::runner::RunOptions;
+    use commscope::benchpark::{AppKind, ExperimentSpec, SystemId};
+    use commscope::coordinator::campaign::CampaignExecutor;
+
+    // laghos on tioga is outside the paper's matrix → the runner rejects
+    // it; the two valid cells around it must still run to completion.
+    let bad = ExperimentSpec {
+        app: AppKind::Laghos,
+        system: SystemId::Tioga,
+        scaling: Scaling::Strong,
+        nranks: 8,
+    };
+    let good = |nranks| ExperimentSpec {
+        app: AppKind::Kripke,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks,
+    };
+    let exec = CampaignExecutor::new(
+        2,
+        RunOptions {
+            iter_shrink: 10,
+            size_shrink: 8,
+        },
+    )
+    .unwrap();
+    let report = exec.execute(&[good(8), bad, good(16)]);
+    assert_eq!(report.cells_total, 3);
+    assert_eq!(report.runs.len(), 2, "valid cells must survive");
+    assert_eq!(report.failures.len(), 1);
+    assert_eq!(report.failures[0].id, "laghos_tioga_8");
+    assert!(
+        report.failures[0].error.contains("dane"),
+        "diagnosable error, got: {}",
+        report.failures[0].error
+    );
+    // the failed cell is not poisoned into the cache: retrying re-fails,
+    // and a duplicate of a failed cell claims no cache hit — it collapses
+    // into the one failure record.
+    let retry = exec.execute(&[bad, bad]);
+    assert_eq!(retry.cells_total, 2);
+    assert_eq!(retry.cells_executed, 0, "a failed cell is not 'executed'");
+    assert_eq!(retry.failures.len(), 1);
+    assert_eq!(retry.cache_hits, 0);
+}

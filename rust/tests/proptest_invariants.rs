@@ -144,7 +144,9 @@ fn prop_allgather_preserves_every_contribution() {
         let cfg = WorldConfig::new(n, machine);
         let results = World::run(cfg, |rank| {
             let world = rank.world();
-            let mine: Vec<u32> = (0..rank.rank as u32 % 7).map(|i| rank.rank as u32 * 100 + i).collect();
+            let mine: Vec<u32> = (0..rank.rank as u32 % 7)
+                .map(|i| rank.rank as u32 * 100 + i)
+                .collect();
             rank.allgatherv(&mine, &world).unwrap()
         });
         for r in &results {
