@@ -59,6 +59,7 @@ fn main() {
         strategy: CoarseStrategy::GpuBalanced,
         backend,
         seed: 42,
+        channels: commscope::caliper::ChannelConfig::default(),
     };
     let amg_pjrt = run_amg(
         WorldConfig::new(8, machine.clone()),

@@ -1,5 +1,6 @@
 //! Quickstart: instrument a tiny MPI-style program with communication
-//! regions and print the two Caliper reports.
+//! regions (RAII guards + metric channels) and print the two Caliper
+//! reports.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -19,42 +20,47 @@ fn main() {
     // doing a few halo exchanges around a fake stencil update.
     let cfg = WorldConfig::new(8, MachineModel::test_machine());
     let profiles = World::run(cfg, |rank| {
-        let cali = Caliper::attach(rank);
+        // Select metric channels with a Caliper-style spec string: the
+        // default Table I stats plus the rank×rank comm matrix and the
+        // message-size histogram.
+        let cali = Caliper::attach_with(rank, "comm-stats,comm-matrix,msg-hist").unwrap();
         let cart = CartComm::new(rank.world(), &[2, 2, 2], &[false; 3]).unwrap();
 
-        cali.begin(rank, "main");
+        let main = cali.region("main");
         for step in 0..5 {
             // --- the paper's new marker: a communication region ---------
-            cali.comm_region_begin(rank, "halo_exchange");
-            let payload = vec![step as f64; 1024];
-            for dim in 0..3 {
-                for dir in [-1i64, 1] {
-                    if let Some(nbr) = cart.shift(dim, dir) {
-                        rank.isend(&payload, nbr, dim as i32, &cart.comm).unwrap();
+            {
+                let _halo = cali.comm_region("halo_exchange");
+                let payload = vec![step as f64; 1024];
+                for dim in 0..3 {
+                    for dir in [-1i64, 1] {
+                        if let Some(nbr) = cart.shift(dim, dir) {
+                            rank.isend(&payload, nbr, dim as i32, &cart.comm).unwrap();
+                        }
                     }
                 }
-            }
-            for dim in 0..3 {
-                for dir in [-1i64, 1] {
-                    if let Some(nbr) = cart.shift(dim, dir) {
-                        let _ = rank.recv::<f64>(Some(nbr), dim as i32, &cart.comm).unwrap();
+                for dim in 0..3 {
+                    for dir in [-1i64, 1] {
+                        if let Some(nbr) = cart.shift(dim, dir) {
+                            let _ =
+                                rank.recv::<f64>(Some(nbr), dim as i32, &cart.comm).unwrap();
+                        }
                     }
                 }
-            }
-            cali.comm_region_end(rank, "halo_exchange");
+            } // halo_exchange closes when the guard drops
 
             // --- compute phase (virtual time from the machine model) ----
             cali.scoped(rank, "stencil", |r| r.compute(2.0e7, 1.0e6));
 
             // --- a residual-style reduction ------------------------------
-            cali.comm_region_begin(rank, "reduction");
-            let norm = rank
-                .allreduce_f64(&[step as f64], ReduceOp::Sum, &cart.comm)
-                .unwrap();
-            cali.comm_region_end(rank, "reduction");
+            let norm = {
+                let _red = cali.comm_region("reduction");
+                rank.allreduce_f64(&[step as f64], ReduceOp::Sum, &cart.comm)
+                    .unwrap()
+            };
             assert_eq!(norm[0], step as f64 * 8.0);
         }
-        cali.end(rank, "main");
+        drop(main);
         cali.finish(rank)
     });
 

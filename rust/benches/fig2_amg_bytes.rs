@@ -11,7 +11,8 @@ use commscope::util::benchutil::{bench, section};
 fn main() {
     let opts = RunOptions {
         iter_shrink: 4,
-        size_shrink: 1, // level structure depends on true local size
+        size_shrink: 1, // level structure depends on true local size,
+        ..Default::default()
     };
     let mut runs = Vec::new();
     section("fig2: amg weak-scaling cells");

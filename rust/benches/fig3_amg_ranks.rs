@@ -14,6 +14,7 @@ fn main() {
     let opts = RunOptions {
         iter_shrink: 10, // fan-in structure is iteration-invariant
         size_shrink: 1,
+        ..Default::default()
     };
     let mut runs = Vec::new();
     section("fig3: amg cells (incl. dane 512)");

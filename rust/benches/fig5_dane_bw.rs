@@ -12,6 +12,7 @@ fn main() {
     let opts = RunOptions {
         iter_shrink: 4,
         size_shrink: 2,
+        ..Default::default()
     };
     let mut runs = Vec::new();
     section("fig5: dane cells (3 apps)");

@@ -1,0 +1,97 @@
+//! Hook hot-path smoke: the per-event cost of the full metric-channel
+//! pipeline must stay within 3× of the default `comm-stats` pipeline.
+//!
+//! Run by CI (`cargo bench --bench hookpath`); prints both costs and FAILS
+//! (exits nonzero) when the ratio regresses past the bound, so a channel
+//! implementation that sneaks an allocation or extra lookup into
+//! `on_event` is caught at the pull request, not in a campaign.
+
+use std::time::Instant;
+
+use commscope::caliper::channel::ChannelConfig;
+use commscope::caliper::comm_profiler::CommProfiler;
+use commscope::mpisim::{CollKind, MpiEvent, MpiHook};
+
+const EVENTS: usize = 400_000;
+const REPS: usize = 7;
+
+/// A realistic event mix: halo-style sends/recvs over a few peers with
+/// varying sizes, plus the occasional collective.
+fn event_mix() -> Vec<MpiEvent> {
+    let mut evs = Vec::with_capacity(EVENTS);
+    for i in 0..EVENTS {
+        let peer = i % 6;
+        let bytes = 64 << (i % 7);
+        let t = i as f64 * 1e-6;
+        evs.push(match i % 8 {
+            0..=3 => MpiEvent::Send {
+                dst: peer,
+                tag: (i % 16) as i32,
+                bytes,
+                t_start: t,
+                t_end: t + 1e-7,
+            },
+            4..=6 => MpiEvent::Recv {
+                src: peer,
+                tag: (i % 16) as i32,
+                bytes,
+                t_start: t,
+                t_end: t + 2e-7,
+            },
+            _ => MpiEvent::Coll {
+                kind: CollKind::Allreduce,
+                bytes: 8,
+                comm_size: 8,
+                t_start: t,
+                t_end: t + 5e-7,
+            },
+        });
+    }
+    evs
+}
+
+/// Best-of-REPS seconds per event for a channel configuration.
+fn per_event_cost(spec: &str, events: &[MpiEvent]) -> f64 {
+    let cfg = ChannelConfig::parse(spec).expect("valid spec");
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let mut p = CommProfiler::with_channels(0, cfg);
+        p.begin("main", false, 0.0);
+        p.begin("halo", true, 0.0);
+        let t0 = Instant::now();
+        for ev in events {
+            p.on_event(0, ev);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        p.end("halo", 1.0);
+        p.end("main", 1.0);
+        let prof = p.finish(1.0);
+        assert!(prof.regions["main/halo"].sends > 0, "pipeline recorded");
+        best = best.min(dt / events.len() as f64);
+    }
+    best
+}
+
+fn main() {
+    let events = event_mix();
+    // warmup pass so both measured configs see a hot cache
+    let _ = per_event_cost("comm-stats", &events[..events.len() / 4]);
+
+    let base = per_event_cost("comm-stats", &events);
+    let all = per_event_cost("all", &events);
+    let ratio = all / base;
+    println!(
+        "hook hot path: comm-stats {:.1} ns/event, all channels {:.1} ns/event, ratio {:.2}x",
+        base * 1e9,
+        all * 1e9,
+        ratio
+    );
+    assert!(
+        ratio <= 3.0,
+        "all-channels per-event cost ({:.1} ns) exceeds 3x comm-stats alone ({:.1} ns): {:.2}x",
+        all * 1e9,
+        base * 1e9,
+        ratio
+    );
+    println!("hookpath smoke OK (bound: 3.00x)");
+}

@@ -84,15 +84,16 @@ fn main() {
         World::run(cfg, |rank| {
             let cali = Caliper::attach(rank);
             rank.add_hook(Rc::new(RefCell::new(NullHook)));
-            cali.comm_region_begin(rank, "r");
-            let world = rank.world();
-            // self-sends exercise send+recv+hook paths without matching waits
-            let buf = [0u8; 64];
-            for i in 0..500_000 {
-                rank.isend(&buf, 0, i % 8, &world).unwrap();
-                let _ = rank.recv::<u8>(Some(0), i % 8, &world).unwrap();
+            {
+                let _r = cali.comm_region("r");
+                let world = rank.world();
+                // self-sends exercise send+recv+hook paths without matching waits
+                let buf = [0u8; 64];
+                for i in 0..500_000 {
+                    rank.isend(&buf, 0, i % 8, &world).unwrap();
+                    let _ = rank.recv::<u8>(Some(0), i % 8, &world).unwrap();
+                }
             }
-            cali.comm_region_end(rank, "r");
             cali.finish(rank)
         })
     });

@@ -17,6 +17,7 @@ fn main() {
     let opts = RunOptions {
         iter_shrink: 4,
         size_shrink: 2,
+        ..Default::default()
     };
     let mut runs = Vec::new();
     let cells = [

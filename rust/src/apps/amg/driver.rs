@@ -4,7 +4,7 @@ use super::hierarchy::{CoarseStrategy, Hierarchy};
 use super::matvec::Field;
 use super::solver;
 use crate::apps::common::ComputeBackend;
-use crate::caliper::{Caliper, RankProfile};
+use crate::caliper::{Caliper, ChannelConfig, RankProfile};
 use crate::mpisim::cart::CartComm;
 use crate::mpisim::{World, WorldConfig};
 
@@ -26,6 +26,9 @@ pub struct AmgConfig {
     pub backend: ComputeBackend,
     /// Seed for the RHS workload.
     pub seed: u64,
+    /// Metric channels collected by the run's Caliper contexts (e.g. add
+    /// `comm-matrix` to capture the halo exchanges' rank×rank traffic).
+    pub channels: ChannelConfig,
 }
 
 impl AmgConfig {
@@ -40,6 +43,7 @@ impl AmgConfig {
             strategy,
             backend: ComputeBackend::Native,
             seed: 20230717,
+            channels: ChannelConfig::default(),
         }
     }
 
@@ -61,7 +65,7 @@ pub struct AmgResult {
 pub fn run_amg(world: WorldConfig, cfg: &AmgConfig) -> AmgResult {
     assert_eq!(world.size, cfg.nranks(), "world size vs pdims mismatch");
     let results = World::run(world, |rank| {
-        let cali = Caliper::attach(rank);
+        let cali = Caliper::attach_cfg(rank, cfg.channels);
         let cart = CartComm::new(
             rank.world(),
             &[cfg.pdims[0], cfg.pdims[1], cfg.pdims[2]],
@@ -72,26 +76,26 @@ pub fn run_amg(world: WorldConfig, cfg: &AmgConfig) -> AmgResult {
         let mut field = Field::new(cfg.local, cfg.seed ^ (rank.rank as u64) << 20);
         let mut residuals = Vec::with_capacity(cfg.niter);
 
-        cali.begin(rank, "main");
-        solver::setup_phase(rank, &cali, &cart, &hier).expect("setup");
-        cali.begin(rank, "solve");
-        for _it in 0..cfg.niter {
-            solver::vcycle(
-                rank,
-                &cali,
-                &cart,
-                &hier,
-                &mut field,
-                &cfg.backend,
-                cfg.exchanges_per_level,
-            )
-            .expect("vcycle");
-            solver::coarse_gather(rank, &cali, &cart, &hier).expect("coarse gather");
-            let r = solver::global_residual(rank, &cali, &cart, &field).expect("residual");
-            residuals.push(r);
+        {
+            let _main = cali.region("main");
+            solver::setup_phase(rank, &cali, &cart, &hier).expect("setup");
+            let _solve = cali.region("solve");
+            for _it in 0..cfg.niter {
+                solver::vcycle(
+                    rank,
+                    &cali,
+                    &cart,
+                    &hier,
+                    &mut field,
+                    &cfg.backend,
+                    cfg.exchanges_per_level,
+                )
+                .expect("vcycle");
+                solver::coarse_gather(rank, &cali, &cart, &hier).expect("coarse gather");
+                let r = solver::global_residual(rank, &cali, &cart, &field).expect("residual");
+                residuals.push(r);
+            }
         }
-        cali.end(rank, "solve");
-        cali.end(rank, "main");
         (cali.finish(rank), residuals, hier.n_levels())
     });
 
@@ -128,6 +132,7 @@ mod tests {
             strategy,
             backend: ComputeBackend::Native,
             seed: 7,
+            channels: ChannelConfig::default(),
         }
     }
 
@@ -170,6 +175,7 @@ mod tests {
             strategy: CoarseStrategy::GpuBalanced,
             backend: ComputeBackend::Native,
             seed: 9,
+            channels: ChannelConfig::default(),
         };
         let world = WorldConfig::new(8, MachineModel::test_machine());
         let res = run_amg(world, &cfg);
@@ -181,6 +187,27 @@ mod tests {
             "regions: {:?}",
             run.regions.keys().collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn comm_matrix_on_halo_exchange() {
+        use crate::caliper::aggregate::check_matrix_conservation;
+        let mut cfg = tiny_cfg(CoarseStrategy::CpuNaive);
+        cfg.channels = ChannelConfig::parse("comm-stats,comm-matrix").unwrap();
+        let world = WorldConfig::new(8, MachineModel::test_machine());
+        let res = run_amg(world, &cfg);
+        let run = aggregate(BTreeMap::new(), &res.profiles);
+        let halo = run.region("matvec_comm_level_0").unwrap().1;
+        let m = halo.comm_matrix.as_ref().expect("matrix enabled");
+        check_matrix_conservation(m).unwrap();
+        assert_eq!(m.n_ranks(), 8);
+        // 2x2x2 grid: every rank exchanges with its 3 face neighbors, both
+        // directions — 8 ranks × 3 partners directed cells
+        assert_eq!(m.sent.len(), 24);
+        for ((src, dst), (msgs, bytes)) in &m.sent {
+            assert_ne!(src, dst);
+            assert!(*msgs > 0 && *bytes > 0);
+        }
     }
 
     #[test]

@@ -61,15 +61,16 @@ pub fn setup_phase(
     cart: &CartComm,
     hier: &Hierarchy,
 ) -> Result<(), MpiError> {
-    cali.begin(rank, "setup");
+    let _setup = cali.region("setup");
     for lvl in &hier.levels {
         if !lvl.active {
             continue;
         }
         let name = format!("setup_comm_level_{}", lvl.level);
-        cali.comm_region_begin(rank, &name);
-        synthetic_exchange(rank, cart, lvl, lvl.setup_bytes, 9)?;
-        cali.comm_region_end(rank, &name);
+        {
+            let _comm = cali.comm_region(&name);
+            synthetic_exchange(rank, cart, lvl, lvl.setup_bytes, 9)?;
+        }
         // coarsening arithmetic: ~stencil^2 flops per owned zone
         let zones: usize = lvl.local.iter().product();
         rank.compute(
@@ -77,7 +78,6 @@ pub fn setup_phase(
             zones as f64 * 8.0 * lvl.stencil as f64,
         );
     }
-    cali.end(rank, "setup");
     Ok(())
 }
 
@@ -100,16 +100,17 @@ pub fn vcycle(
         let comm_name = format!("matvec_comm_level_{}", lvl.level);
         let smooth_name = format!("smooth_level_{}", lvl.level);
         for ex in 0..exchanges_per_level {
-            cali.comm_region_begin(rank, &comm_name);
-            if lvl.level == 0 {
-                // real field halo exchange with the 6 face neighbors
-                matvec::halo_exchange(rank, cart, field, level_tag(0, ex))?;
-            } else {
-                synthetic_exchange(rank, cart, lvl, lvl.halo_bytes, ex)?;
+            {
+                let _comm = cali.comm_region(&comm_name);
+                if lvl.level == 0 {
+                    // real field halo exchange with the 6 face neighbors
+                    matvec::halo_exchange(rank, cart, field, level_tag(0, ex))?;
+                } else {
+                    synthetic_exchange(rank, cart, lvl, lvl.halo_bytes, ex)?;
+                }
             }
-            cali.comm_region_end(rank, &comm_name);
 
-            cali.begin(rank, &smooth_name);
+            let _smooth = cali.region(&smooth_name);
             // Memory traffic of a real SpMV-based smoother: the operator
             // rows (stencil coefficients) stream from memory along with
             // the vectors — hypre's smoother is memory-bound on CPUs.
@@ -121,12 +122,11 @@ pub fn vcycle(
             } else {
                 rank.compute(zones as f64 * lvl.stencil as f64 * 2.0, smoother_bytes);
             }
-            cali.end(rank, &smooth_name);
         }
         // GPU-variant re-aggregation between this level and the next.
         if lvl.restrict_to.is_some() || !lvl.restrict_from.is_empty() {
             let name = format!("restrict_level_{}", lvl.level);
-            cali.comm_region_begin(rank, &name);
+            let _restrict = cali.comm_region(&name);
             let zones: usize = lvl.local.iter().product();
             let bytes = (zones / 8).max(8); // coarse injection payload
             let payload = vec![0u8; bytes];
@@ -138,7 +138,6 @@ pub fn vcycle(
             for src in from {
                 let _ = rank.recv::<u8>(Some(src), tag, &cart.comm)?;
             }
-            cali.comm_region_end(rank, &name);
         }
     }
     Ok(())
@@ -167,7 +166,7 @@ pub fn coarse_gather(
     };
     let p = cart.comm.size();
     let me = cart.comm.rank;
-    cali.comm_region_begin(rank, "coarse_gather");
+    let _gather = cali.comm_region("coarse_gather");
     let mut acc = own_bytes;
     let mut round = 0usize;
     loop {
@@ -196,7 +195,6 @@ pub fn coarse_gather(
     if me == 0 {
         rank.compute((acc as f64 / 8.0) * 20.0, acc as f64 * 3.0);
     }
-    cali.comm_region_end(rank, "coarse_gather");
     Ok(())
 }
 
@@ -207,9 +205,8 @@ pub fn global_residual(
     cart: &CartComm,
     field: &Field,
 ) -> Result<f64, MpiError> {
-    cali.comm_region_begin(rank, "residual_norm");
+    let _norm = cali.comm_region("residual_norm");
     let local = matvec::residual_norm2_native(field);
     let total = rank.allreduce_f64(&[local], ReduceOp::Sum, &cart.comm)?;
-    cali.comm_region_end(rank, "residual_norm");
     Ok(total[0].sqrt())
 }

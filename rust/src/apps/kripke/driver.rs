@@ -3,7 +3,7 @@
 use super::geometry::Octant;
 use super::sweep::{sweep_step, StepSpec};
 use crate::apps::common::ComputeBackend;
-use crate::caliper::{Caliper, RankProfile};
+use crate::caliper::{Caliper, ChannelConfig, RankProfile};
 use crate::mpisim::cart::CartComm;
 use crate::mpisim::collectives::ReduceOp;
 use crate::mpisim::{World, WorldConfig};
@@ -25,6 +25,9 @@ pub struct KripkeConfig {
     /// Isotropic source strength.
     pub q: f64,
     pub backend: ComputeBackend,
+    /// Metric channels collected by the run's Caliper contexts (add
+    /// `comm-matrix` to capture `sweep_comm`'s rank×rank traffic).
+    pub channels: ChannelConfig,
 }
 
 impl KripkeConfig {
@@ -44,6 +47,7 @@ impl KripkeConfig {
             niter: 20,
             q: 1.0,
             backend: ComputeBackend::Native,
+            channels: ChannelConfig::default(),
         }
     }
 
@@ -70,6 +74,7 @@ impl KripkeConfig {
             niter: 2,
             q: 1.0,
             backend,
+            channels: ChannelConfig::default(),
         }
     }
 
@@ -101,7 +106,7 @@ pub fn run_kripke(world: WorldConfig, cfg: &KripkeConfig) -> KripkeResult {
     );
     let octants = Octant::all();
     let results = World::run(world, |rank| {
-        let cali = Caliper::attach(rank);
+        let cali = Caliper::attach_cfg(rank, cfg.channels);
         let cart = CartComm::new(
             rank.world(),
             &[cfg.pdims[0], cfg.pdims[1], cfg.pdims[2]],
@@ -109,7 +114,7 @@ pub fn run_kripke(world: WorldConfig, cfg: &KripkeConfig) -> KripkeResult {
         )
         .expect("cart");
         let mut norms = Vec::with_capacity(cfg.niter);
-        cali.begin(rank, "main");
+        let main = cali.region("main");
         for _iter in 0..cfg.niter {
             let mut phi_local = 0.0;
             for (oi, oct) in octants.iter().enumerate() {
@@ -136,14 +141,14 @@ pub fn run_kripke(world: WorldConfig, cfg: &KripkeConfig) -> KripkeResult {
                 }
             }
             // Population edit: one collective per iteration.
-            cali.comm_region_begin(rank, "pop_reduce");
-            let total = rank
-                .allreduce_f64(&[phi_local], ReduceOp::Sum, &cart.comm)
-                .expect("pop reduce");
-            cali.comm_region_end(rank, "pop_reduce");
+            let total = {
+                let _pop = cali.comm_region("pop_reduce");
+                rank.allreduce_f64(&[phi_local], ReduceOp::Sum, &cart.comm)
+                    .expect("pop reduce")
+            };
             norms.push(total[0].sqrt());
         }
-        cali.end(rank, "main");
+        drop(main);
         (cali.finish(rank), norms)
     });
 
@@ -179,6 +184,7 @@ mod tests {
             niter: 3,
             q: 1.0,
             backend: ComputeBackend::Native,
+            channels: ChannelConfig::default(),
         }
     }
 

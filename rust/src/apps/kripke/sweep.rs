@@ -41,36 +41,39 @@ pub fn sweep_step(
     let face_len = ny * nz * step.lanes;
 
     // --- receive / boundary-fill incident faces -------------------------
-    cali.comm_region_begin(rank, "sweep_comm");
     let mut faces: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
-    for (dim, face) in faces.iter_mut().enumerate() {
-        *face = match octant.upstream(cart, dim) {
-            Some(up) => {
-                let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
-                let (data, _st) = rank.recv::<f64>(Some(up), tag, &cart.comm)?;
-                debug_assert_eq!(data.len(), face_len);
-                data
-            }
-            None => vec![1.0; face_len], // incident boundary flux
-        };
-    }
-    cali.comm_region_end(rank, "sweep_comm");
-
-    // --- local solve ------------------------------------------------------
-    cali.begin(rank, "solve");
-    let out = run_kernel(rank, local, step, faces, backend, q);
-    cali.end(rank, "solve");
-
-    // --- send outgoing faces downstream ----------------------------------
-    cali.comm_region_begin(rank, "sweep_comm");
-    let outs = [&out.out_x, &out.out_y, &out.out_z];
-    for dim in 0..3 {
-        if let Some(down) = octant.downstream(cart, dim) {
-            let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
-            rank.isend(outs[dim], down, tag, &cart.comm)?;
+    {
+        let _comm = cali.comm_region("sweep_comm");
+        for (dim, face) in faces.iter_mut().enumerate() {
+            *face = match octant.upstream(cart, dim) {
+                Some(up) => {
+                    let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
+                    let (data, _st) = rank.recv::<f64>(Some(up), tag, &cart.comm)?;
+                    debug_assert_eq!(data.len(), face_len);
+                    data
+                }
+                None => vec![1.0; face_len], // incident boundary flux
+            };
         }
     }
-    cali.comm_region_end(rank, "sweep_comm");
+
+    // --- local solve ------------------------------------------------------
+    let out = {
+        let _solve = cali.region("solve");
+        run_kernel(rank, local, step, faces, backend, q)
+    };
+
+    // --- send outgoing faces downstream ----------------------------------
+    {
+        let _comm = cali.comm_region("sweep_comm");
+        let outs = [&out.out_x, &out.out_y, &out.out_z];
+        for dim in 0..3 {
+            if let Some(down) = octant.downstream(cart, dim) {
+                let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
+                rank.isend(outs[dim], down, tag, &cart.comm)?;
+            }
+        }
+    }
 
     Ok(out.phi_norm2)
 }

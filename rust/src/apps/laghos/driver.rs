@@ -4,7 +4,7 @@ use super::forces::HydroState;
 use super::mesh::MeshPatch;
 use super::timestep::timestep;
 use crate::apps::common::ComputeBackend;
-use crate::caliper::{Caliper, RankProfile};
+use crate::caliper::{Caliper, ChannelConfig, RankProfile};
 use crate::mpisim::{World, WorldConfig};
 
 /// Configuration of one Laghos run (strong scaling: `global` fixed).
@@ -25,6 +25,9 @@ pub struct LaghosConfig {
     pub ndof: usize,
     pub backend: ComputeBackend,
     pub seed: u64,
+    /// Metric channels collected by the run's Caliper contexts (add
+    /// `comm-matrix` to capture `halo_exchange`'s rank×rank traffic).
+    pub channels: ChannelConfig,
 }
 
 impl LaghosConfig {
@@ -42,6 +45,7 @@ impl LaghosConfig {
             ndof: 16,
             backend: ComputeBackend::Native,
             seed: 0x1a9705,
+            channels: ChannelConfig::default(),
         }
     }
 
@@ -58,6 +62,7 @@ impl LaghosConfig {
             ndof: 16,
             backend,
             seed: 0x1a9705,
+            channels: ChannelConfig::default(),
         }
     }
 
@@ -78,7 +83,7 @@ pub struct LaghosResult {
 pub fn run_laghos(world: WorldConfig, cfg: &LaghosConfig) -> LaghosResult {
     assert_eq!(world.size, cfg.nranks(), "world size vs pdims mismatch");
     let results = World::run(world, |rank| {
-        let cali = Caliper::attach(rank);
+        let cali = Caliper::attach_cfg(rank, cfg.channels);
         let comm = rank.world();
         let patch = MeshPatch::new(cfg.global, cfg.pdims, rank.rank, cfg.order);
         let mut state = HydroState::new(
@@ -89,22 +94,23 @@ pub fn run_laghos(world: WorldConfig, cfg: &LaghosConfig) -> LaghosResult {
             cfg.seed ^ ((rank.rank as u64) << 24),
         );
         let mut dts = Vec::with_capacity(cfg.steps);
-        cali.begin(rank, "main");
-        for step in 0..cfg.steps {
-            let dt = timestep(
-                rank,
-                &cali,
-                &comm,
-                &patch,
-                &mut state,
-                &cfg.backend,
-                cfg.cg_iters,
-                step as u64,
-            )
-            .expect("timestep");
-            dts.push(dt);
+        {
+            let _main = cali.region("main");
+            for step in 0..cfg.steps {
+                let dt = timestep(
+                    rank,
+                    &cali,
+                    &comm,
+                    &patch,
+                    &mut state,
+                    &cfg.backend,
+                    cfg.cg_iters,
+                    step as u64,
+                )
+                .expect("timestep");
+                dts.push(dt);
+            }
         }
-        cali.end(rank, "main");
         (cali.finish(rank), dts)
     });
 
@@ -137,6 +143,7 @@ mod tests {
             ndof: 4,
             backend: ComputeBackend::Native,
             seed: 11,
+            channels: ChannelConfig::default(),
         }
     }
 

@@ -31,7 +31,7 @@ pub fn halo_exchange(
     state: &HydroState,
     tag: i32,
 ) -> Result<(), MpiError> {
-    cali.comm_region_begin(rank, "halo_exchange");
+    let _halo = cali.comm_region("halo_exchange");
     let neighbors = patch.neighbors();
     for &(nbr, kind) in &neighbors {
         let ndofs = patch.shared_dofs(kind);
@@ -50,7 +50,6 @@ pub fn halo_exchange(
     for &(nbr, _kind) in &neighbors {
         let _ = rank.recv::<f64>(Some(nbr), tag, comm)?;
     }
-    cali.comm_region_end(rank, "halo_exchange");
     Ok(())
 }
 
@@ -66,19 +65,19 @@ pub fn cg_solve(
     iters: usize,
     step_tag: i32,
 ) -> Result<f64, MpiError> {
-    cali.begin(rank, "cg_solve");
+    let _cg = cali.region("cg_solve");
     let mut rho = 1.0f64;
     for it in 0..iters {
         halo_exchange(rank, cali, comm, patch, state, step_tag + it as i32)?;
         // local SpMV on the velocity mass matrix
         let dofs = (patch.elements() * state.n) as f64;
         rank.compute(dofs * 32.0, dofs * 8.0 * 3.0);
-        cali.comm_region_begin(rank, "reduction");
-        let dot = rank.allreduce_f64(&[rho * 0.5, rho * 0.25], ReduceOp::Sum, comm)?;
-        cali.comm_region_end(rank, "reduction");
+        let dot = {
+            let _red = cali.comm_region("reduction");
+            rank.allreduce_f64(&[rho * 0.5, rho * 0.25], ReduceOp::Sum, comm)?
+        };
         rho = (dot[0] / (dot[1] + 1e-30)).abs().min(1e6);
     }
-    cali.end(rank, "cg_solve");
     Ok(rho)
 }
 
@@ -94,44 +93,47 @@ pub fn timestep(
     cg_iters: usize,
     step: u64,
 ) -> Result<f64, MpiError> {
-    cali.begin(rank, "timestep");
+    let _step = cali.region("timestep");
 
     // Corner forces (RK stage 1).
-    cali.begin(rank, "force");
-    let ws1 = forces::corner_forces(rank, state, backend);
-    cali.end(rank, "force");
+    let ws1 = {
+        let _force = cali.region("force");
+        forces::corner_forces(rank, state, backend)
+    };
 
     // Velocity solve.
     let base_tag = 100 + (step as i32 % 100) * 200;
     cg_solve(rank, cali, comm, patch, state, cg_iters, base_tag)?;
 
     // RK stage 2 force evaluation.
-    cali.begin(rank, "force");
-    let ws2 = forces::corner_forces(rank, state, backend);
-    cali.end(rank, "force");
+    let ws2 = {
+        let _force = cali.region("force");
+        forces::corner_forces(rank, state, backend)
+    };
     cg_solve(rank, cali, comm, patch, state, cg_iters, base_tag + 100)?;
 
     // dt control: CFL reduction (min over ranks) …
     let local_dt = 0.9 / ws1.max(ws2).max(1e-9);
-    cali.comm_region_begin(rank, "reduction");
-    let dt = rank.allreduce_f64(&[local_dt], ReduceOp::Min, comm)?[0];
-    cali.comm_region_end(rank, "reduction");
+    let dt = {
+        let _red = cali.comm_region("reduction");
+        rank.allreduce_f64(&[local_dt], ReduceOp::Min, comm)?[0]
+    };
 
     // … and rank-0 broadcasts the accepted step parameters.
-    cali.comm_region_begin(rank, "broadcast");
-    let params = if comm.rank == 0 {
-        vec![dt, step as f64, 1.0]
-    } else {
-        vec![0.0; 3]
+    let params = {
+        let _bcast = cali.comm_region("broadcast");
+        let params = if comm.rank == 0 {
+            vec![dt, step as f64, 1.0]
+        } else {
+            vec![0.0; 3]
+        };
+        rank.bcast(&params, 0, comm)?
     };
-    let params = rank.bcast(&params, 0, comm)?;
-    cali.comm_region_end(rank, "broadcast");
 
     // advance state
     forces::evolve_stress(state, params[0], step);
     let dofs = (patch.elements() * state.n) as f64;
     rank.compute(dofs * 12.0, dofs * 8.0 * 2.0);
 
-    cali.end(rank, "timestep");
     Ok(params[0])
 }

@@ -66,10 +66,12 @@ pub fn default_variant(spec: &ExperimentSpec) -> CaliperVariant {
 /// runner is deterministic in everything but wall-clock), which is the
 /// contract the campaign executor's dedup cache relies on. The key covers
 /// every input that reaches the simulation: app, system, scaling, rank
-/// count, profiling variant, and both shrink factors.
+/// count, profiling variant, both shrink factors, and the metric-channel
+/// spec (a profile without the comm matrix must not satisfy a request
+/// that needs it).
 pub fn cell_key(spec: &ExperimentSpec, opts: &super::runner::RunOptions) -> String {
     format!(
-        "{}|{}|{}|{}|{}|is{}|ss{}",
+        "{}|{}|{}|{}|{}|is{}|ss{}|ch{}",
         spec.app.name(),
         spec.system.name(),
         spec.scaling.name(),
@@ -77,6 +79,7 @@ pub fn cell_key(spec: &ExperimentSpec, opts: &super::runner::RunOptions) -> Stri
         default_variant(spec).name(),
         opts.iter_shrink,
         opts.size_shrink,
+        opts.channels.spec_string(),
     )
 }
 
@@ -113,13 +116,18 @@ mod tests {
     #[test]
     fn cell_key_covers_all_run_inputs() {
         use crate::benchpark::runner::RunOptions;
+        use crate::caliper::ChannelConfig;
         let base = spec();
         let opts = RunOptions {
             iter_shrink: 4,
             size_shrink: 2,
+            ..Default::default()
         };
         let k = cell_key(&base, &opts);
-        assert_eq!(k, "kripke|tioga|weak|8|mpi,gpu|is4|ss2");
+        assert_eq!(
+            k,
+            "kripke|tioga|weak|8|mpi,gpu|is4|ss2|chregion-times,comm-stats"
+        );
         // Any input change must change the key.
         let mut other = base;
         other.nranks = 16;
@@ -127,7 +135,14 @@ mod tests {
         let opts2 = RunOptions {
             iter_shrink: 4,
             size_shrink: 4,
+            ..Default::default()
         };
         assert_ne!(cell_key(&base, &opts2), k);
+        // ... including the channel spec.
+        let opts3 = RunOptions {
+            channels: ChannelConfig::parse("comm-stats,comm-matrix").unwrap(),
+            ..opts
+        };
+        assert_ne!(cell_key(&base, &opts3), k);
     }
 }

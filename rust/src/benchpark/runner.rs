@@ -10,16 +10,19 @@ use crate::apps::amg::{run_amg, AmgConfig, CoarseStrategy};
 use crate::apps::kripke::{run_kripke, KripkeConfig};
 use crate::apps::laghos::{run_laghos, LaghosConfig};
 use crate::caliper::aggregate::{aggregate, check_conservation};
-use crate::caliper::RunProfile;
+use crate::caliper::{ChannelConfig, RunProfile};
 use crate::mpisim::WorldConfig;
 
-/// Scale shrink factor for quick runs: 1 = full paper configuration.
+/// Per-run knobs: fidelity shrink factors and the Caliper metric channels.
 #[derive(Debug, Clone, Copy)]
 pub struct RunOptions {
     /// Divide iteration counts by this (≥1) for smoke runs.
     pub iter_shrink: usize,
     /// Shrink per-rank problem volumes (≥1) for smoke runs.
     pub size_shrink: usize,
+    /// Metric channels the apps' Caliper contexts collect
+    /// (`--channels` on the CLI; default = region times + comm stats).
+    pub channels: ChannelConfig,
 }
 
 impl Default for RunOptions {
@@ -27,6 +30,7 @@ impl Default for RunOptions {
         RunOptions {
             iter_shrink: 1,
             size_shrink: 1,
+            channels: ChannelConfig::default(),
         }
     }
 }
@@ -36,6 +40,7 @@ impl RunOptions {
         RunOptions {
             iter_shrink: 4,
             size_shrink: 4,
+            ..Default::default()
         }
     }
 
@@ -82,6 +87,7 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
             let mut cfg = AmgConfig::paper(spec.pdims3(), strategy);
             cfg.local = opts.shrink_dims3(cfg.local);
             cfg.niter = (cfg.niter / opts.iter_shrink).max(2);
+            cfg.channels = opts.channels;
             let res = run_amg(world, &cfg);
             let extra = vec![
                 ("pdims", fmt3(cfg.pdims)),
@@ -101,6 +107,7 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
             };
             cfg.local = opts.shrink_dims3(cfg.local);
             cfg.niter = (cfg.niter / opts.iter_shrink).max(2);
+            cfg.channels = opts.channels;
             let res = run_kripke(world, &cfg);
             let extra = vec![
                 ("pdims", fmt3(cfg.pdims)),
@@ -118,6 +125,7 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
             }
             let mut cfg = LaghosConfig::paper(spec.pdims2());
             cfg.steps = (cfg.steps / opts.iter_shrink).max(2);
+            cfg.channels = opts.channels;
             // strong scaling: global mesh fixed; do NOT shrink with ranks
             if opts.size_shrink > 1 {
                 cfg.global = [
@@ -154,6 +162,7 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
     let mut extra = extra;
     extra.push(("iter_shrink", opts.iter_shrink.to_string()));
     extra.push(("size_shrink", opts.size_shrink.to_string()));
+    extra.push(("channels", opts.channels.spec_string()));
     let meta = run_metadata(spec, variant, &extra);
     Ok(aggregate(meta, &profiles))
 }
@@ -177,6 +186,7 @@ mod tests {
         let opts = RunOptions {
             iter_shrink: 10,
             size_shrink: 8,
+            ..Default::default()
         };
         for (app, system, nranks) in [
             (AppKind::Amg2023, SystemId::Tioga, 8),
@@ -216,6 +226,7 @@ mod tests {
             let opts = RunOptions {
                 iter_shrink,
                 size_shrink,
+                ..Default::default()
             };
             let err = run_cell(&spec, &opts).unwrap_err().to_string();
             assert!(err.contains(what), "error '{}' must name {}", err, what);

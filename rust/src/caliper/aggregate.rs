@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use super::profile::{RankProfile, RunProfile};
+use super::profile::{AggCommMatrix, AggMetric, MsgSizeHist, RankProfile, RunProfile};
 
 /// Aggregate per-rank profiles into a run profile. `meta` carries the run's
 /// identity (app, system, ranks, scaling type, problem size, ...).
@@ -44,6 +44,36 @@ pub fn aggregate(meta: BTreeMap<String, String>, ranks: &[RankProfile]) -> RunPr
                     agg.min_recv.min(s.min_recv)
                 };
             }
+            // ---- channel payloads ---------------------------------------
+            if let Some(m) = &s.ext.comm_matrix {
+                let agg_m = agg.comm_matrix.get_or_insert_with(AggCommMatrix::default);
+                for (dst, (msgs, bytes)) in &m.sent {
+                    let cell = agg_m.sent.entry((rp.rank, *dst)).or_insert((0, 0));
+                    cell.0 += msgs;
+                    cell.1 += bytes;
+                }
+                for (src, (msgs, bytes)) in &m.recv {
+                    let cell = agg_m.recv.entry((*src, rp.rank)).or_insert((0, 0));
+                    cell.0 += msgs;
+                    cell.1 += bytes;
+                }
+            }
+            if let Some(h) = &s.ext.msg_hist {
+                let agg_h = agg.msg_hist.get_or_insert_with(MsgSizeHist::default);
+                agg_h.send.merge(&h.send);
+                agg_h.recv.merge(&h.recv);
+            }
+            if let Some(b) = &s.ext.coll_breakdown {
+                let agg_b = agg.coll_breakdown.get_or_insert_with(BTreeMap::new);
+                for (kind, (calls, bytes)) in b {
+                    let cell = agg_b.entry(kind.clone()).or_insert((0, 0));
+                    cell.0 += calls;
+                    cell.1 += bytes;
+                }
+            }
+            if let Some(t) = s.ext.mpi_time {
+                agg.mpi_time.get_or_insert_with(AggMetric::default).push(t);
+            }
         }
     }
     run
@@ -80,6 +110,27 @@ pub fn check_conservation(ranks: &[RankProfile]) -> Result<(), String> {
         ));
     }
     Ok(())
+}
+
+/// Matrix-level conservation for a region aggregated with the
+/// `comm-matrix` channel: the sender-side and receiver-side matrices must
+/// agree cell-for-cell. (Row sums of sent bytes equaling column sums of
+/// received bytes per rank follows from cell equality.)
+pub fn check_matrix_conservation(m: &AggCommMatrix) -> Result<(), String> {
+    if m.sent == m.recv {
+        return Ok(());
+    }
+    for (cell, sent) in &m.sent {
+        let recv = m.recv.get(cell).copied().unwrap_or((0, 0));
+        if *sent != recv {
+            return Err(format!(
+                "comm-matrix conservation violated at (src={}, dst={}): \
+                 sender saw {:?}, receiver saw {:?}",
+                cell.0, cell.1, sent, recv
+            ));
+        }
+    }
+    Err("comm-matrix conservation violated: receiver-side extra cells".into())
 }
 
 #[cfg(test)]
@@ -142,6 +193,61 @@ mod tests {
         p1.regions.insert("x".into(), s1);
         assert!(check_conservation(&[p0.clone(), p1]).is_ok());
         assert!(check_conservation(&[p0]).is_err());
+    }
+
+    #[test]
+    fn channel_payloads_fold_across_ranks() {
+        use crate::caliper::profile::CommMatrixStats;
+        let mut p0 = RankProfile {
+            rank: 0,
+            ..Default::default()
+        };
+        let mut s0 = RegionStats {
+            is_comm_region: true,
+            ..Default::default()
+        };
+        let mut m0 = CommMatrixStats::default();
+        m0.sent.insert(1, (2, 200));
+        m0.recv.insert(1, (1, 50));
+        s0.ext.comm_matrix = Some(m0);
+        s0.ext.mpi_time = Some(0.25);
+        p0.regions.insert("halo".into(), s0);
+
+        let mut p1 = RankProfile {
+            rank: 1,
+            ..Default::default()
+        };
+        let mut s1 = RegionStats {
+            is_comm_region: true,
+            ..Default::default()
+        };
+        let mut m1 = CommMatrixStats::default();
+        m1.recv.insert(0, (2, 200));
+        m1.sent.insert(0, (1, 50));
+        s1.ext.comm_matrix = Some(m1);
+        s1.ext.mpi_time = Some(0.75);
+        p1.regions.insert("halo".into(), s1);
+
+        let run = aggregate(BTreeMap::new(), &[p0, p1]);
+        let agg = &run.regions["halo"];
+        let m = agg.comm_matrix.as_ref().unwrap();
+        assert_eq!(m.sent[&(0, 1)], (2, 200));
+        assert_eq!(m.sent[&(1, 0)], (1, 50));
+        assert_eq!(m.recv[&(0, 1)], (2, 200));
+        assert_eq!(m.recv[&(1, 0)], (1, 50));
+        check_matrix_conservation(m).unwrap();
+        let mt = agg.mpi_time.as_ref().unwrap();
+        assert_eq!(mt.count(), 2);
+        assert_eq!(mt.total(), 1.0);
+    }
+
+    #[test]
+    fn matrix_conservation_detects_mismatch() {
+        let mut m = AggCommMatrix::default();
+        m.sent.insert((0, 1), (1, 100));
+        // receiver never saw it
+        let err = check_matrix_conservation(&m).unwrap_err();
+        assert!(err.contains("src=0"), "{}", err);
     }
 
     #[test]

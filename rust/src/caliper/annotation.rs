@@ -1,6 +1,11 @@
-//! The per-rank instrumentation front end: nested annotation regions, the
-//! paper's communication-region markers, and the glue that attaches the
-//! communication-pattern profiler to the simulated MPI's hook chain.
+//! The per-rank instrumentation front end: RAII region guards, the paper's
+//! communication-region markers, metric-channel selection, and the glue
+//! that attaches the communication-pattern profiler to the simulated MPI's
+//! hook chain.
+//!
+//! Regions are opened with [`Caliper::region`] / [`Caliper::comm_region`]
+//! and closed when the returned guard drops — exit timestamps come from a
+//! shared virtual-clock handle, so no `&Rank` is needed at close:
 //!
 //! ```no_run
 //! use commscope::mpisim::{World, WorldConfig, MachineModel};
@@ -8,66 +13,135 @@
 //!
 //! let cfg = WorldConfig::new(2, MachineModel::test_machine());
 //! let profiles = World::run(cfg, |rank| {
-//!     let cali = Caliper::attach(rank);
-//!     cali.begin(rank, "main");
-//!     cali.comm_region_begin(rank, "halo_exchange");
-//!     // ... MPI calls are attributed to `halo_exchange` ...
-//!     cali.comm_region_end(rank, "halo_exchange");
-//!     cali.end(rank, "main");
+//!     // select metric channels with a Caliper-style spec string
+//!     let cali = Caliper::attach_with(rank, "comm-stats,comm-matrix").unwrap();
+//!     let _main = cali.region("main");
+//!     {
+//!         let _halo = cali.comm_region("halo_exchange");
+//!         // ... MPI calls are attributed to `halo_exchange` ...
+//!     } // `halo_exchange` closes here
+//!     drop(_main);
 //!     cali.finish(rank)
 //! });
 //! ```
+//!
+//! The v1 paired calls (`begin`/`end`, `comm_region_begin`/`_end`) remain
+//! as deprecated shims for downstream code mid-migration.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use super::channel::{ChannelConfig, ChannelSpecError};
 use super::comm_profiler::CommProfiler;
 use super::profile::RankProfile;
-use crate::mpisim::Rank;
+use crate::mpisim::{ClockHandle, Rank};
 
 /// Per-rank Caliper context. Cheap handle over the shared recorder; the
 /// same recorder is registered as an MPI hook on the rank.
 pub struct Caliper {
     rec: Rc<RefCell<CommProfiler>>,
+    clock: ClockHandle,
+}
+
+/// An open annotation region, closed (with nesting validation) when
+/// dropped. Borrowing the [`Caliper`] means the borrow checker rules out
+/// finishing the context while regions are still open, and guards nested
+/// in one scope close innermost-first — including during a panic unwind.
+#[must_use = "dropping the guard immediately closes the region"]
+pub struct RegionGuard<'a> {
+    cali: &'a Caliper,
+    name: String,
+}
+
+impl Drop for RegionGuard<'_> {
+    fn drop(&mut self) {
+        self.cali
+            .rec
+            .borrow_mut()
+            .end(&self.name, self.cali.clock.now());
+    }
 }
 
 impl Caliper {
-    /// Create a context for `rank` and attach its communication profiler to
-    /// the rank's PMPI hook chain.
+    /// Create a context for `rank` with the default metric channels
+    /// (region times + Table I comm stats) and attach its communication
+    /// profiler to the rank's PMPI hook chain.
     pub fn attach(rank: &mut Rank) -> Caliper {
-        let rec = Rc::new(RefCell::new(CommProfiler::new(rank.rank)));
+        Self::attach_cfg(rank, ChannelConfig::default())
+    }
+
+    /// Like [`Caliper::attach`], with channels selected by a spec string —
+    /// e.g. `"comm-stats,comm-matrix,msg-hist"`. See
+    /// [`ChannelConfig::parse`] for the grammar.
+    pub fn attach_with(rank: &mut Rank, spec: &str) -> Result<Caliper, ChannelSpecError> {
+        Ok(Self::attach_cfg(rank, ChannelConfig::parse(spec)?))
+    }
+
+    /// Like [`Caliper::attach`], with an explicit channel configuration.
+    pub fn attach_cfg(rank: &mut Rank, config: ChannelConfig) -> Caliper {
+        let profiler = CommProfiler::with_channels(rank.rank, config);
+        let rec = Rc::new(RefCell::new(profiler));
         rank.add_hook(rec.clone());
-        Caliper { rec }
+        Caliper {
+            rec,
+            clock: rank.clock_handle(),
+        }
     }
 
-    /// `CALI_MARK_BEGIN(name)` — enter a plain annotation region.
-    pub fn begin(&self, rank: &Rank, name: &str) {
-        self.rec.borrow_mut().begin(name, false, rank.now());
+    /// Enter a plain annotation region; it closes when the guard drops.
+    pub fn region(&self, name: &str) -> RegionGuard<'_> {
+        self.rec.borrow_mut().begin(name, false, self.clock.now());
+        RegionGuard {
+            cali: self,
+            name: name.to_string(),
+        }
     }
 
-    /// `CALI_MARK_END(name)` — leave the innermost region, which must be
-    /// `name` (checked, like Caliper's nesting validation).
-    pub fn end(&self, rank: &Rank, name: &str) {
-        self.rec.borrow_mut().end(name, rank.now());
+    /// Enter a communication region: MPI operations until the guard drops
+    /// are attributed to it.
+    pub fn comm_region(&self, name: &str) -> RegionGuard<'_> {
+        self.rec.borrow_mut().begin(name, true, self.clock.now());
+        RegionGuard {
+            cali: self,
+            name: name.to_string(),
+        }
     }
 
-    /// `CALI_MARK_COMM_REGION_BEGIN(name)` — enter a communication region:
-    /// MPI operations until the matching end are attributed to it.
-    pub fn comm_region_begin(&self, rank: &Rank, name: &str) {
-        self.rec.borrow_mut().begin(name, true, rank.now());
+    /// `CALI_MARK_BEGIN(name)` — v1 paired call.
+    #[deprecated(since = "0.2.0", note = "use the RAII guard: `let _g = cali.region(name);`")]
+    pub fn begin(&self, _rank: &Rank, name: &str) {
+        self.rec.borrow_mut().begin(name, false, self.clock.now());
     }
 
-    /// `CALI_MARK_COMM_REGION_END(name)`.
-    pub fn comm_region_end(&self, rank: &Rank, name: &str) {
-        self.rec.borrow_mut().end(name, rank.now());
+    /// `CALI_MARK_END(name)` — v1 paired call (checked, like Caliper's
+    /// nesting validation).
+    #[deprecated(since = "0.2.0", note = "use the RAII guard: `let _g = cali.region(name);`")]
+    pub fn end(&self, _rank: &Rank, name: &str) {
+        self.rec.borrow_mut().end(name, self.clock.now());
     }
 
-    /// Run `f` inside a plain region (RAII-style convenience).
+    /// `CALI_MARK_COMM_REGION_BEGIN(name)` — v1 paired call.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the RAII guard: `let _g = cali.comm_region(name);`"
+    )]
+    pub fn comm_region_begin(&self, _rank: &Rank, name: &str) {
+        self.rec.borrow_mut().begin(name, true, self.clock.now());
+    }
+
+    /// `CALI_MARK_COMM_REGION_END(name)` — v1 paired call.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the RAII guard: `let _g = cali.comm_region(name);`"
+    )]
+    pub fn comm_region_end(&self, _rank: &Rank, name: &str) {
+        self.rec.borrow_mut().end(name, self.clock.now());
+    }
+
+    /// Run `f` inside a plain region (closure-scoped convenience).
     pub fn scoped<T>(&self, rank: &mut Rank, name: &str, f: impl FnOnce(&mut Rank) -> T) -> T {
-        self.begin(rank, name);
-        let out = f(rank);
-        self.end(rank, name);
-        out
+        let _g = self.region(name);
+        f(rank)
     }
 
     /// Run `f` inside a communication region.
@@ -77,15 +151,14 @@ impl Caliper {
         name: &str,
         f: impl FnOnce(&mut Rank) -> T,
     ) -> T {
-        self.comm_region_begin(rank, name);
-        let out = f(rank);
-        self.comm_region_end(rank, name);
-        out
+        let _g = self.comm_region(name);
+        f(rank)
     }
 
-    /// Close out and return this rank's profile. Open regions are an
-    /// instrumentation bug: they are force-closed at the current time and
-    /// flagged in the profile (path suffix `!unclosed`).
+    /// Close out and return this rank's profile. Open regions held by live
+    /// guards are a compile error (the guards borrow `self`); regions
+    /// leaked through the deprecated paired calls are force-closed at the
+    /// current time and flagged in the profile (path suffix `!unclosed`).
     pub fn finish(self, rank: &Rank) -> RankProfile {
         self.rec.borrow_mut().finish(rank.now())
     }
@@ -101,12 +174,14 @@ mod tests {
         let cfg = WorldConfig::new(1, MachineModel::test_machine());
         let profiles = World::run(cfg, |rank| {
             let cali = Caliper::attach(rank);
-            cali.begin(rank, "main");
-            rank.advance(1.0);
-            cali.begin(rank, "solve");
-            rank.advance(2.0);
-            cali.end(rank, "solve");
-            cali.end(rank, "main");
+            {
+                let _main = cali.region("main");
+                rank.advance(1.0);
+                {
+                    let _solve = cali.region("solve");
+                    rank.advance(2.0);
+                }
+            }
             cali.finish(rank)
         });
         let p = &profiles[0];
@@ -140,23 +215,24 @@ mod tests {
         let profiles = World::run(cfg, |rank| {
             let cali = Caliper::attach(rank);
             let world = rank.world();
-            cali.begin(rank, "main");
+            let _main = cali.region("main");
             // traffic outside any comm region
             if rank.rank == 0 {
                 rank.send(&[0u8; 16], 1, 0, &world).unwrap();
             } else {
                 rank.recv::<u8>(Some(0), 0, &world).unwrap();
             }
-            cali.comm_region_begin(rank, "halo");
-            if rank.rank == 0 {
-                rank.send(&[0u8; 64], 1, 1, &world).unwrap();
-                rank.send(&[0u8; 32], 1, 2, &world).unwrap();
-            } else {
-                rank.recv::<u8>(Some(0), 1, &world).unwrap();
-                rank.recv::<u8>(Some(0), 2, &world).unwrap();
+            {
+                let _halo = cali.comm_region("halo");
+                if rank.rank == 0 {
+                    rank.send(&[0u8; 64], 1, 1, &world).unwrap();
+                    rank.send(&[0u8; 32], 1, 2, &world).unwrap();
+                } else {
+                    rank.recv::<u8>(Some(0), 1, &world).unwrap();
+                    rank.recv::<u8>(Some(0), 2, &world).unwrap();
+                }
             }
-            cali.comm_region_end(rank, "halo");
-            cali.end(rank, "main");
+            drop(_main);
             cali.finish(rank)
         });
         let p0 = &profiles[0];
@@ -183,11 +259,12 @@ mod tests {
         let profiles = World::run(cfg, |rank| {
             let cali = Caliper::attach(rank);
             let world = rank.world();
-            cali.comm_region_begin(rank, "timestep_reduce");
-            rank.allreduce_f64(&[1.0], crate::mpisim::collectives::ReduceOp::Min, &world)
-                .unwrap();
-            rank.barrier(&world).unwrap();
-            cali.comm_region_end(rank, "timestep_reduce");
+            {
+                let _g = cali.comm_region("timestep_reduce");
+                rank.allreduce_f64(&[1.0], crate::mpisim::collectives::ReduceOp::Min, &world)
+                    .unwrap();
+                rank.barrier(&world).unwrap();
+            }
             cali.finish(rank)
         });
         for p in &profiles {
@@ -196,6 +273,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     #[should_panic(expected = "region nesting")]
     fn mismatched_end_panics() {
         let cfg = WorldConfig::new(1, MachineModel::test_machine());
@@ -207,6 +285,26 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_record() {
+        let cfg = WorldConfig::new(1, MachineModel::test_machine());
+        let profiles = World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            cali.begin(rank, "main");
+            rank.advance(1.0);
+            cali.comm_region_begin(rank, "halo");
+            rank.advance(0.5);
+            cali.comm_region_end(rank, "halo");
+            cali.end(rank, "main");
+            cali.finish(rank)
+        });
+        let p = &profiles[0];
+        assert!((p.regions["main"].time_incl - 1.5).abs() < 1e-12);
+        assert!(p.regions["main/halo"].is_comm_region);
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn unclosed_region_flagged() {
         let cfg = WorldConfig::new(1, MachineModel::test_machine());
         let profiles = World::run(cfg, |rank| {
@@ -219,5 +317,27 @@ mod tests {
             .regions
             .keys()
             .any(|k| k.contains("!unclosed")));
+    }
+
+    #[test]
+    fn guards_close_during_panic_unwind() {
+        let cfg = WorldConfig::new(1, MachineModel::test_machine());
+        let profiles = World::run(cfg, |rank| {
+            let cali = Caliper::attach(rank);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _outer = cali.region("outer");
+                let _inner = cali.comm_region("inner");
+                panic!("boom");
+            }));
+            assert!(result.is_err());
+            rank.advance(1.0);
+            cali.finish(rank)
+        });
+        let p = &profiles[0];
+        // both guards dropped innermost-first during unwind: clean close,
+        // nothing flagged as unclosed
+        assert!(p.regions.contains_key("outer"));
+        assert!(p.regions.contains_key("outer/inner"));
+        assert!(!p.regions.keys().any(|k| k.contains("!unclosed")));
     }
 }

@@ -1,0 +1,476 @@
+//! Metric channels: the pluggable capture pipeline behind the Caliper v2
+//! API.
+//!
+//! A *channel* is one family of per-region metrics — region times, the
+//! paper's Table I communication statistics, rank×rank traffic matrices,
+//! message-size histograms, per-collective breakdowns, MPI time. Channels
+//! are selected at attach time with a Caliper-style spec string (the analog
+//! of `CALI_CONFIG=...` / ConfigManager specs):
+//!
+//! ```no_run
+//! use commscope::caliper::Caliper;
+//! use commscope::mpisim::{World, WorldConfig, MachineModel};
+//!
+//! let cfg = WorldConfig::new(2, MachineModel::test_machine());
+//! World::run(cfg, |rank| {
+//!     let cali = Caliper::attach_with(rank, "comm-stats,comm-matrix,msg-hist").unwrap();
+//!     let _main = cali.region("main");
+//!     // ...
+//! });
+//! ```
+//!
+//! Every channel implements [`MetricChannel`] and writes into the region's
+//! [`RegionStats`] bucket (core fields or the per-channel `ext` payloads),
+//! so the per-event hot path resolves the attribution bucket once and
+//! fans the event out to the active channels with no further lookups.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::profile::{CommMatrixStats, MsgSizeHist, RegionStats};
+use crate::mpisim::MpiEvent;
+
+/// One selectable metric family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ChannelKind {
+    /// Region visit counts and inclusive virtual time (the backbone every
+    /// report consumes; enabled in the default spec).
+    RegionTimes,
+    /// Table I communication statistics per region: send/recv/collective
+    /// counts, bytes, message-size extremes, distinct peer sets.
+    CommStats,
+    /// Per-region rank×rank message/byte counts (communication regions
+    /// only) — the raw material of halo-exchange heatmaps.
+    CommMatrix,
+    /// Log2-bucketed send/recv message-size histograms with
+    /// count/sum/min/max/mean.
+    MsgSizeHistogram,
+    /// Per-collective-kind call and byte counts.
+    CollBreakdown,
+    /// Sum of MPI event durations per region (virtual seconds a rank spent
+    /// inside MPI operations attributed to the region).
+    MpiTime,
+}
+
+impl ChannelKind {
+    /// Every channel, in canonical spec order.
+    pub const ALL: [ChannelKind; 6] = [
+        ChannelKind::RegionTimes,
+        ChannelKind::CommStats,
+        ChannelKind::CommMatrix,
+        ChannelKind::MsgSizeHistogram,
+        ChannelKind::CollBreakdown,
+        ChannelKind::MpiTime,
+    ];
+
+    /// The spec-string name of the channel.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChannelKind::RegionTimes => "region-times",
+            ChannelKind::CommStats => "comm-stats",
+            ChannelKind::CommMatrix => "comm-matrix",
+            ChannelKind::MsgSizeHistogram => "msg-hist",
+            ChannelKind::CollBreakdown => "coll-breakdown",
+            ChannelKind::MpiTime => "mpi-time",
+        }
+    }
+
+    fn bit(&self) -> u8 {
+        match self {
+            ChannelKind::RegionTimes => 1 << 0,
+            ChannelKind::CommStats => 1 << 1,
+            ChannelKind::CommMatrix => 1 << 2,
+            ChannelKind::MsgSizeHistogram => 1 << 3,
+            ChannelKind::CollBreakdown => 1 << 4,
+            ChannelKind::MpiTime => 1 << 5,
+        }
+    }
+}
+
+/// Error from parsing a channel spec string. Carries enough context to be
+/// actionable: the offending token, the valid names, and a best-guess
+/// suggestion when the token is close to one of them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelSpecError {
+    pub token: String,
+    pub suggestion: Option<&'static str>,
+}
+
+impl fmt::Display for ChannelSpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown metric channel '{}'", self.token)?;
+        if let Some(s) = self.suggestion {
+            write!(f, " (did you mean '{}'?)", s)?;
+        }
+        let names: Vec<&str> = ChannelKind::ALL.iter().map(|k| k.name()).collect();
+        write!(
+            f,
+            "; valid channels: {} (comma-separated, e.g. \"comm-stats,comm-matrix\"), or \"all\"",
+            names.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for ChannelSpecError {}
+
+/// The set of channels a Caliper context collects. `Copy`, so it travels
+/// through run options, experiment cell keys, and app configs for free.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ChannelConfig {
+    bits: u8,
+}
+
+impl Default for ChannelConfig {
+    /// The default pipeline: region times + the paper's Table I comm stats
+    /// (what the v1 API always collected).
+    fn default() -> Self {
+        ChannelConfig::empty()
+            .with(ChannelKind::RegionTimes)
+            .with(ChannelKind::CommStats)
+    }
+}
+
+impl ChannelConfig {
+    /// No channels at all (rarely what you want — see `Default`).
+    pub fn empty() -> ChannelConfig {
+        ChannelConfig { bits: 0 }
+    }
+
+    /// Every channel on.
+    pub fn all() -> ChannelConfig {
+        let mut c = ChannelConfig::empty();
+        for k in ChannelKind::ALL {
+            c = c.with(k);
+        }
+        c
+    }
+
+    /// Add one channel (builder style).
+    #[must_use]
+    pub fn with(mut self, kind: ChannelKind) -> ChannelConfig {
+        self.bits |= kind.bit();
+        self
+    }
+
+    pub fn enabled(&self, kind: ChannelKind) -> bool {
+        self.bits & kind.bit() != 0
+    }
+
+    /// Parse a Caliper-style spec string: comma-separated channel names,
+    /// e.g. `"comm-stats,comm-matrix,msg-hist"`. Whitespace around tokens
+    /// is ignored; empty tokens are ignored; `"all"` enables everything;
+    /// an empty spec yields the default config. Region times are always
+    /// implied — without them no report could anchor the region tree.
+    pub fn parse(spec: &str) -> Result<ChannelConfig, ChannelSpecError> {
+        let mut cfg = ChannelConfig::empty().with(ChannelKind::RegionTimes);
+        let mut any = false;
+        for raw in spec.split(',') {
+            let token = raw.trim();
+            if token.is_empty() {
+                continue;
+            }
+            any = true;
+            if token.eq_ignore_ascii_case("all") {
+                cfg = ChannelConfig::all();
+                continue;
+            }
+            match ChannelKind::ALL
+                .iter()
+                .find(|k| k.name().eq_ignore_ascii_case(token))
+            {
+                Some(k) => cfg = cfg.with(*k),
+                None => {
+                    return Err(ChannelSpecError {
+                        token: token.to_string(),
+                        suggestion: suggest(token),
+                    })
+                }
+            }
+        }
+        if !any {
+            return Ok(ChannelConfig::default());
+        }
+        Ok(cfg)
+    }
+
+    /// Canonical spec string (round-trips through [`ChannelConfig::parse`]).
+    /// Stamped into profile metadata and cache keys.
+    pub fn spec_string(&self) -> String {
+        let names: Vec<&str> = ChannelKind::ALL
+            .iter()
+            .filter(|k| self.enabled(**k))
+            .map(|k| k.name())
+            .collect();
+        names.join(",")
+    }
+
+    /// Instantiate the pipeline this configuration describes.
+    pub fn build_channels(&self) -> Vec<Box<dyn MetricChannel>> {
+        let mut out: Vec<Box<dyn MetricChannel>> = Vec::new();
+        if self.enabled(ChannelKind::RegionTimes) {
+            out.push(Box::new(RegionTimes));
+        }
+        if self.enabled(ChannelKind::CommStats) {
+            out.push(Box::new(CommStats));
+        }
+        if self.enabled(ChannelKind::CommMatrix) {
+            out.push(Box::new(CommMatrix));
+        }
+        if self.enabled(ChannelKind::MsgSizeHistogram) {
+            out.push(Box::new(MsgSizeHistogram));
+        }
+        if self.enabled(ChannelKind::CollBreakdown) {
+            out.push(Box::new(CollBreakdown));
+        }
+        if self.enabled(ChannelKind::MpiTime) {
+            out.push(Box::new(MpiTime));
+        }
+        out
+    }
+}
+
+impl fmt::Debug for ChannelConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ChannelConfig({})", self.spec_string())
+    }
+}
+
+/// `Display` is the canonical spec string (what `--channels` accepts).
+impl fmt::Display for ChannelConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec_string())
+    }
+}
+
+/// Closest valid channel name: minimum edit distance over names with
+/// separators/case stripped, suggested only when plausibly a typo
+/// (distance ≤ 3).
+fn suggest(token: &str) -> Option<&'static str> {
+    let norm = |s: &str| {
+        s.chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .collect::<String>()
+            .to_ascii_lowercase()
+    };
+    let t = norm(token);
+    ChannelKind::ALL
+        .iter()
+        .map(|k| (edit_distance(&t, &norm(k.name())), k.name()))
+        .min()
+        .filter(|(d, _)| *d <= 3)
+        .map(|(_, name)| name)
+}
+
+/// Plain Levenshtein distance (the strings are ≤ ~16 chars).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// One pluggable metric family. The profiler resolves the attribution
+/// bucket (`stats`) once per event/exit and hands it to every active
+/// channel; `attr_is_comm` says whether the bucket is a communication
+/// region (some channels only collect there).
+pub trait MetricChannel {
+    fn kind(&self) -> ChannelKind;
+
+    /// An MPI event was attributed to the region owning `stats`.
+    fn on_event(&mut self, stats: &mut RegionStats, attr_is_comm: bool, ev: &MpiEvent);
+
+    /// The region owning `stats` was exited after `dt` inclusive seconds.
+    fn on_region_exit(&mut self, stats: &mut RegionStats, is_comm: bool, dt: f64);
+}
+
+/// Visits + inclusive time.
+struct RegionTimes;
+
+impl MetricChannel for RegionTimes {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::RegionTimes
+    }
+
+    fn on_event(&mut self, _stats: &mut RegionStats, _comm: bool, _ev: &MpiEvent) {}
+
+    fn on_region_exit(&mut self, stats: &mut RegionStats, _is_comm: bool, dt: f64) {
+        stats.visits += 1;
+        stats.time_incl += dt;
+    }
+}
+
+/// Table I statistics (the v1 profiler's whole output).
+struct CommStats;
+
+impl MetricChannel for CommStats {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::CommStats
+    }
+
+    fn on_event(&mut self, stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
+        match ev {
+            MpiEvent::Send { dst, bytes, .. } => stats.record_send(*dst, *bytes as u64),
+            MpiEvent::Recv { src, bytes, .. } => stats.record_recv(*src, *bytes as u64),
+            MpiEvent::Coll { bytes, .. } => stats.record_coll(*bytes as u64),
+        }
+    }
+
+    fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
+}
+
+/// Rank×rank message/byte counts, communication regions only. The channel
+/// sees one side of each transfer: the observing rank contributes its send
+/// row and its receive column; cross-rank aggregation assembles the full
+/// matrix.
+struct CommMatrix;
+
+impl MetricChannel for CommMatrix {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::CommMatrix
+    }
+
+    fn on_event(&mut self, stats: &mut RegionStats, attr_is_comm: bool, ev: &MpiEvent) {
+        if !attr_is_comm {
+            return;
+        }
+        let m = stats
+            .ext
+            .comm_matrix
+            .get_or_insert_with(CommMatrixStats::default);
+        match ev {
+            MpiEvent::Send { dst, bytes, .. } => {
+                let cell = m.sent.entry(*dst).or_insert((0, 0));
+                cell.0 += 1;
+                cell.1 += *bytes as u64;
+            }
+            MpiEvent::Recv { src, bytes, .. } => {
+                let cell = m.recv.entry(*src).or_insert((0, 0));
+                cell.0 += 1;
+                cell.1 += *bytes as u64;
+            }
+            MpiEvent::Coll { .. } => {}
+        }
+    }
+
+    fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
+}
+
+/// Log2-bucketed message-size histograms for sends and receives.
+struct MsgSizeHistogram;
+
+impl MetricChannel for MsgSizeHistogram {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::MsgSizeHistogram
+    }
+
+    fn on_event(&mut self, stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
+        let h = stats.ext.msg_hist.get_or_insert_with(MsgSizeHist::default);
+        match ev {
+            MpiEvent::Send { bytes, .. } => h.send.record(*bytes as u64),
+            MpiEvent::Recv { bytes, .. } => h.recv.record(*bytes as u64),
+            MpiEvent::Coll { .. } => {}
+        }
+    }
+
+    fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
+}
+
+/// Per-collective-kind call/byte counts.
+struct CollBreakdown;
+
+impl MetricChannel for CollBreakdown {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::CollBreakdown
+    }
+
+    fn on_event(&mut self, stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
+        if let MpiEvent::Coll { kind, bytes, .. } = ev {
+            let b = stats.ext.coll_breakdown.get_or_insert_with(BTreeMap::new);
+            let cell = b.entry(kind.name().to_string()).or_insert((0, 0));
+            cell.0 += 1;
+            cell.1 += *bytes as u64;
+        }
+    }
+
+    fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
+}
+
+/// Sum of MPI event durations per region.
+struct MpiTime;
+
+impl MetricChannel for MpiTime {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::MpiTime
+    }
+
+    fn on_event(&mut self, stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
+        *stats.ext.mpi_time.get_or_insert(0.0) += ev.duration();
+    }
+
+    fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_canonical_spec() {
+        for spec in ["comm-stats", "comm-stats,comm-matrix,msg-hist", "all", ""] {
+            let cfg = ChannelConfig::parse(spec).unwrap();
+            let again = ChannelConfig::parse(&cfg.spec_string()).unwrap();
+            assert_eq!(cfg, again, "spec '{}'", spec);
+        }
+        assert_eq!(ChannelConfig::parse("").unwrap(), ChannelConfig::default());
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_case() {
+        let cfg = ChannelConfig::parse(" Comm-Stats , MSG-HIST ,").unwrap();
+        assert!(cfg.enabled(ChannelKind::CommStats));
+        assert!(cfg.enabled(ChannelKind::MsgSizeHistogram));
+        assert!(cfg.enabled(ChannelKind::RegionTimes), "always implied");
+        assert!(!cfg.enabled(ChannelKind::CommMatrix));
+    }
+
+    #[test]
+    fn parse_error_is_actionable() {
+        let err = ChannelConfig::parse("comm-stats,comm_matrix").unwrap_err();
+        assert_eq!(err.token, "comm_matrix");
+        assert_eq!(err.suggestion, Some("comm-matrix"));
+        let msg = err.to_string();
+        assert!(msg.contains("comm_matrix"), "{}", msg);
+        assert!(msg.contains("did you mean 'comm-matrix'"), "{}", msg);
+        assert!(msg.contains("valid channels"), "{}", msg);
+
+        let err = ChannelConfig::parse("bogus").unwrap_err();
+        assert_eq!(err.suggestion, None);
+        assert!(err.to_string().contains("msg-hist"));
+    }
+
+    #[test]
+    fn all_enables_every_channel() {
+        let cfg = ChannelConfig::parse("all").unwrap();
+        for k in ChannelKind::ALL {
+            assert!(cfg.enabled(k), "{:?}", k);
+        }
+        assert_eq!(cfg.build_channels().len(), ChannelKind::ALL.len());
+    }
+
+    #[test]
+    fn default_is_v1_behavior() {
+        let cfg = ChannelConfig::default();
+        assert!(cfg.enabled(ChannelKind::RegionTimes));
+        assert!(cfg.enabled(ChannelKind::CommStats));
+        assert!(!cfg.enabled(ChannelKind::CommMatrix));
+        assert_eq!(cfg.spec_string(), "region-times,comm-stats");
+    }
+}

@@ -1,15 +1,19 @@
-//! The communication-pattern profiler: the paper's §III extension.
+//! The communication-pattern profiler: the paper's §III extension, driving
+//! the configurable metric-channel pipeline ([`super::channel`]).
 //!
 //! Implements [`MpiHook`] so the simulated MPI runtime reports every
 //! operation here (the PMPI/GOTCHA analog). Each event is attributed to the
 //! **innermost active communication region**; if none is active, to the
 //! innermost plain region (so the `comm-report` can still show untagged MPI
 //! traffic, as Caliper's mpi service does). Region time is attributed on
-//! region exit from the rank's virtual clock.
+//! region exit from the rank's virtual clock. What gets recorded per event
+//! is decided by the attached [`MetricChannel`]s.
 
 use std::collections::HashMap;
 
+use super::channel::{ChannelConfig, MetricChannel};
 use super::profile::{RankProfile, RegionStats};
+use super::TOPLEVEL;
 use crate::mpisim::{MpiEvent, MpiHook};
 
 struct Frame {
@@ -28,27 +32,42 @@ pub struct CommProfiler {
     /// Index in `stack` of the innermost active comm region, lazily
     /// maintained (indices of comm frames, in stack order).
     comm_frames: Vec<usize>,
-    /// Cached attribution target for MPI events, refreshed on begin/end so
-    /// the per-event hook path allocates nothing (EXPERIMENTS.md §Perf:
-    /// this cache cut the hook cost by ~35%).
+    /// Cached attribution target for MPI events, refreshed on begin/end.
+    /// `refresh_attr` also pre-creates the target's stats bucket (one
+    /// `entry` call on the cold path), so the per-event hook path is a
+    /// single always-hit `get_mut` — no second lookup, no allocation
+    /// (EXPERIMENTS.md §Perf: the cached key alone cut hook cost ~35%;
+    /// hoisting the bucket creation removed the remaining double lookup).
     attr_path: String,
     attr_is_comm: bool,
+    /// The active metric channels, in pipeline order.
+    channels: Vec<Box<dyn MetricChannel>>,
 }
 
 impl CommProfiler {
+    /// Default pipeline: region times + the paper's Table I comm stats.
     pub fn new(rank: usize) -> Self {
-        CommProfiler {
+        Self::with_channels(rank, ChannelConfig::default())
+    }
+
+    /// Profiler with an explicit channel configuration.
+    pub fn with_channels(rank: usize, config: ChannelConfig) -> Self {
+        let mut p = CommProfiler {
             rank,
             stack: Vec::new(),
             regions: HashMap::new(),
             comm_frames: Vec::new(),
-            attr_path: "<toplevel>".to_string(),
+            attr_path: String::new(),
             attr_is_comm: false,
-        }
+            channels: config.build_channels(),
+        };
+        p.refresh_attr();
+        p
     }
 
-    /// Recompute the cached attribution target: innermost comm region if
-    /// any, else innermost region, else the synthetic root.
+    /// Recompute the cached attribution target — innermost comm region if
+    /// any, else innermost region, else the synthetic root — and make sure
+    /// its bucket exists so `on_event` can use a single lookup.
     fn refresh_attr(&mut self) {
         if let Some(&idx) = self.comm_frames.last() {
             self.attr_path.clear();
@@ -60,9 +79,13 @@ impl CommProfiler {
             self.attr_is_comm = false;
         } else {
             self.attr_path.clear();
-            self.attr_path.push_str("<toplevel>");
+            self.attr_path.push_str(TOPLEVEL);
             self.attr_is_comm = false;
         }
+        // The hoisted half of the old double lookup: one `entry` call here,
+        // on the cold (begin/end) path. Untouched buckets are dropped at
+        // `finish`, so eager creation never leaks empty regions.
+        self.regions.entry(self.attr_path.clone()).or_default();
     }
 
     pub fn begin(&mut self, name: &str, is_comm: bool, now: f64) {
@@ -95,38 +118,40 @@ impl CommProfiler {
         if frame.is_comm {
             self.comm_frames.pop();
         }
-        let stats = self
-            .regions
-            .entry(frame.path.clone())
-            .or_default();
-        stats.is_comm_region |= frame.is_comm;
-        stats.visits += 1;
-        stats.time_incl += now - frame.t_enter;
+        self.close_frame(&frame.path, frame.is_comm, now - frame.t_enter);
         self.refresh_attr();
+    }
+
+    /// Book a region exit into its bucket and run the channel exits.
+    fn close_frame(&mut self, path: &str, is_comm: bool, dt: f64) {
+        let stats = match self.regions.get_mut(path) {
+            Some(s) => s,
+            None => self.regions.entry(path.to_string()).or_default(),
+        };
+        stats.is_comm_region |= is_comm;
+        for ch in &mut self.channels {
+            ch.on_region_exit(stats, is_comm, dt);
+        }
     }
 
     pub fn finish(&mut self, now: f64) -> RankProfile {
         // Force-close leaked regions, flagging them.
         self.comm_frames.clear();
-        self.refresh_attr();
         while let Some(frame) = self.stack.pop() {
-            if frame.is_comm {
-                self.comm_frames.pop();
-            }
-            let stats = self
-                .regions
-                .entry(format!("{}!unclosed", frame.path))
-                .or_default();
-            stats.is_comm_region |= frame.is_comm;
-            stats.visits += 1;
-            stats.time_incl += now - frame.t_enter;
+            let flagged = format!("{}!unclosed", frame.path);
+            self.close_frame(&flagged, frame.is_comm, now - frame.t_enter);
         }
+        self.refresh_attr();
         let mut profile = RankProfile {
             rank: self.rank,
             regions: Default::default(),
         };
         for (path, stats) in self.regions.drain() {
-            profile.regions.insert(path, stats);
+            // Buckets pre-created for the hot path that never saw an event
+            // or an exit are bookkeeping, not data.
+            if !stats.is_untouched() {
+                profile.regions.insert(path, stats);
+            }
         }
         profile
     }
@@ -134,17 +159,17 @@ impl CommProfiler {
 
 impl MpiHook for CommProfiler {
     fn on_event(&mut self, _rank: usize, ev: &MpiEvent) {
-        // Allocation-free fast path: the cached attribution key hits an
-        // existing bucket for every event after a region's first.
+        // Allocation-free fast path: `refresh_attr` pre-created the bucket,
+        // so this single lookup hits on every event. The fallback is only
+        // reachable when events arrive after `finish()` drained the map
+        // (hook left attached past the profile's lifetime).
         let stats = match self.regions.get_mut(&self.attr_path) {
             Some(s) => s,
             None => self.regions.entry(self.attr_path.clone()).or_default(),
         };
         stats.is_comm_region |= self.attr_is_comm;
-        match ev {
-            MpiEvent::Send { dst, bytes, .. } => stats.record_send(*dst, *bytes as u64),
-            MpiEvent::Recv { src, bytes, .. } => stats.record_recv(*src, *bytes as u64),
-            MpiEvent::Coll { bytes, .. } => stats.record_coll(*bytes as u64),
+        for ch in &mut self.channels {
+            ch.on_event(stats, self.attr_is_comm, ev);
         }
     }
 }
@@ -152,6 +177,7 @@ impl MpiHook for CommProfiler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::caliper::channel::ChannelConfig;
     use crate::mpisim::CollKind;
 
     fn send_ev(dst: usize, bytes: usize) -> MpiEvent {
@@ -161,6 +187,16 @@ mod tests {
             bytes,
             t_start: 0.0,
             t_end: 0.0,
+        }
+    }
+
+    fn recv_ev(src: usize, bytes: usize) -> MpiEvent {
+        MpiEvent::Recv {
+            src,
+            tag: 0,
+            bytes,
+            t_start: 0.0,
+            t_end: 0.5,
         }
     }
 
@@ -185,7 +221,21 @@ mod tests {
         let mut p = CommProfiler::new(0);
         p.on_event(0, &send_ev(1, 8));
         let prof = p.finish(0.0);
-        assert_eq!(prof.regions["<toplevel>"].sends, 1);
+        assert_eq!(prof.regions[TOPLEVEL].sends, 1);
+    }
+
+    #[test]
+    fn quiet_toplevel_not_in_profile() {
+        let mut p = CommProfiler::new(0);
+        p.begin("main", false, 0.0);
+        p.end("main", 1.0);
+        let prof = p.finish(1.0);
+        assert!(
+            !prof.regions.contains_key(TOPLEVEL),
+            "untouched synthetic root must be dropped: {:?}",
+            prof.regions.keys().collect::<Vec<_>>()
+        );
+        assert!(prof.regions.contains_key("main"));
     }
 
     #[test]
@@ -220,5 +270,72 @@ mod tests {
         let prof = p.finish(1.0);
         assert_eq!(prof.regions["r"].colls, 1);
         assert_eq!(prof.regions["r"].coll_bytes, 16);
+    }
+
+    #[test]
+    fn comm_matrix_channel_records_both_sides() {
+        let cfg = ChannelConfig::parse("comm-stats,comm-matrix").unwrap();
+        let mut p = CommProfiler::with_channels(0, cfg);
+        p.begin("halo", true, 0.0);
+        p.on_event(0, &send_ev(2, 100));
+        p.on_event(0, &send_ev(2, 50));
+        p.on_event(0, &recv_ev(1, 30));
+        p.end("halo", 1.0);
+        // traffic in a PLAIN region: no matrix rows
+        p.begin("compute", false, 1.0);
+        p.on_event(0, &send_ev(3, 10));
+        p.end("compute", 2.0);
+        let prof = p.finish(2.0);
+        let m = prof.regions["halo"].ext.comm_matrix.as_ref().unwrap();
+        assert_eq!(m.sent[&2], (2, 150));
+        assert_eq!(m.recv[&1], (1, 30));
+        assert!(prof.regions["compute"].ext.comm_matrix.is_none());
+    }
+
+    #[test]
+    fn hist_coll_and_mpi_time_channels() {
+        let cfg = ChannelConfig::parse("all").unwrap();
+        let mut p = CommProfiler::with_channels(0, cfg);
+        p.begin("r", true, 0.0);
+        p.on_event(0, &send_ev(1, 1024));
+        p.on_event(0, &send_ev(1, 65536));
+        p.on_event(0, &recv_ev(1, 8));
+        p.on_event(
+            0,
+            &MpiEvent::Coll {
+                kind: CollKind::Barrier,
+                bytes: 0,
+                comm_size: 4,
+                t_start: 1.0,
+                t_end: 1.25,
+            },
+        );
+        p.end("r", 2.0);
+        let prof = p.finish(2.0);
+        let ext = &prof.regions["r"].ext;
+        let h = ext.msg_hist.as_ref().unwrap();
+        assert_eq!(h.send.count, 2);
+        assert_eq!(h.send.buckets[10], 1);
+        assert_eq!(h.send.buckets[16], 1);
+        assert_eq!(h.recv.count, 1);
+        let b = ext.coll_breakdown.as_ref().unwrap();
+        assert_eq!(b["MPI_Barrier"], (1, 0));
+        // durations: recv 0.5 + barrier 0.25 (sends are 0-length here)
+        assert!((ext.mpi_time.unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_channels_record_nothing() {
+        let cfg = ChannelConfig::parse("region-times").unwrap();
+        let mut p = CommProfiler::with_channels(0, cfg);
+        p.begin("r", true, 0.0);
+        p.on_event(0, &send_ev(1, 64));
+        p.end("r", 2.0);
+        let prof = p.finish(2.0);
+        let r = &prof.regions["r"];
+        assert_eq!(r.visits, 1);
+        assert!((r.time_incl - 2.0).abs() < 1e-12);
+        assert_eq!(r.sends, 0, "comm-stats disabled");
+        assert!(r.ext.is_empty());
     }
 }

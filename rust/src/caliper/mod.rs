@@ -21,17 +21,35 @@
 //!
 //! The per-rank recorder ([`Caliper`]) produces a [`profile::RankProfile`];
 //! [`aggregate::aggregate`] folds all ranks of a run into a
-//! [`profile::RunProfile`] carrying min/max/avg/total per metric, which the
-//! report writers ([`report`]) and the Thicket layer consume.
+//! [`profile::RunProfile`] carrying the full per-metric distribution, which
+//! the report writers ([`report`]) and the Thicket layer consume.
+//!
+//! ## v2 API: guards + metric channels
+//!
+//! Regions are RAII guards (`cali.region("main")`,
+//! `cali.comm_region("halo")`); what gets recorded is decided by the
+//! **metric channels** selected at attach time
+//! (`Caliper::attach_with(rank, "comm-stats,comm-matrix,msg-hist")`) — see
+//! [`channel`] for the available channels and the spec grammar, and
+//! [`profile`] for the versioned profile schema they serialize into.
 
 pub mod aggregate;
 pub mod annotation;
+pub mod channel;
 pub mod comm_profiler;
 pub mod profile;
 pub mod report;
 
-pub use annotation::Caliper;
-pub use profile::{AggMetric, AggRegion, RankProfile, RegionStats, RunProfile};
+pub use annotation::{Caliper, RegionGuard};
+pub use channel::{ChannelConfig, ChannelKind, ChannelSpecError, MetricChannel};
+pub use profile::{
+    AggCommMatrix, AggMetric, AggRegion, CommMatrixStats, MsgSizeHist, RankProfile, RegionStats,
+    RunProfile, SizeHist,
+};
+
+/// Synthetic root path for MPI traffic outside any annotation region —
+/// shared by the profiler's attribution logic and the report writers.
+pub const TOPLEVEL: &str = "<toplevel>";
 
 /// Attribute names (Table I), used as metric keys in profiles and reports.
 pub mod attr {

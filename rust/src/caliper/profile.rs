@@ -1,16 +1,146 @@
-//! Profile data model: per-rank raw stats and the cross-rank aggregate,
-//! plus JSON (de)serialization for both.
+//! Profile data model: per-rank raw stats (with per-channel payloads), the
+//! cross-rank aggregate, and the versioned JSON profile schema.
+//!
+//! ## Profile schema
+//!
+//! [`RunProfile::to_json`] writes **schema v2**: a self-describing document
+//! (`"schema": 2`) whose per-metric aggregates serialize the
+//! [`OnlineStats`] accumulator losslessly (count/min/max/sum/mean/m2) and
+//! whose regions carry an optional `"channels"` object with the payloads of
+//! the metric channels that were enabled ([`super::channel`]).
+//! [`RunProfile::from_json`] reads v2 and falls back to the v1 layout
+//! (min/max/avg/total scalars, no channels) for profiles already on disk.
 
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::util::json::Json;
 use crate::util::stats::OnlineStats;
 
+/// Current profile schema version written by [`RunProfile::to_json`].
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// Per-region rank×rank traffic observed by ONE rank: its send row and its
+/// receive column. Cross-rank aggregation assembles the full matrix
+/// ([`AggCommMatrix`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CommMatrixStats {
+    /// dst world rank → (messages, bytes) sent by the observing rank.
+    pub sent: BTreeMap<usize, (u64, u64)>,
+    /// src world rank → (messages, bytes) received by the observing rank.
+    pub recv: BTreeMap<usize, (u64, u64)>,
+}
+
+/// Log2-bucketed message-size histogram for one direction. Buckets are a
+/// fixed array so the per-event hot path is branch-free arithmetic (no
+/// map lookups); only nonzero buckets are serialized.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SizeHist {
+    /// `buckets[b]` counts messages with floor(log2(bytes.max(1))) == b.
+    pub buckets: [u64; 64],
+    pub count: u64,
+    pub total_bytes: u64,
+    /// Valid when `count > 0`.
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for SizeHist {
+    fn default() -> Self {
+        SizeHist {
+            buckets: [0; 64],
+            count: 0,
+            total_bytes: 0,
+            min: 0,
+            max: 0,
+        }
+    }
+}
+
+impl SizeHist {
+    #[inline]
+    pub fn record(&mut self, bytes: u64) {
+        let bucket = 63 - bytes.max(1).leading_zeros() as usize;
+        self.buckets[bucket] += 1;
+        if self.count == 0 {
+            self.min = bytes;
+            self.max = bytes;
+        } else {
+            self.min = self.min.min(bytes);
+            self.max = self.max.max(bytes);
+        }
+        self.count += 1;
+        self.total_bytes += bytes;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.count as f64
+        }
+    }
+
+    /// (log2 bucket, count) pairs for the nonzero buckets, ascending.
+    pub fn nonzero_buckets(&self) -> Vec<(u32, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(b, c)| (b as u32, *c))
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &SizeHist) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        for (b, c) in other.buckets.iter().enumerate() {
+            self.buckets[b] += c;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.total_bytes += other.total_bytes;
+    }
+}
+
+/// Send + receive histograms (the `msg-hist` channel payload).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MsgSizeHist {
+    pub send: SizeHist,
+    pub recv: SizeHist,
+}
+
+/// Optional per-channel payloads on a region. `None` means the channel was
+/// not enabled (or saw no traffic) — absent from serialized profiles.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegionChannels {
+    pub comm_matrix: Option<CommMatrixStats>,
+    pub msg_hist: Option<MsgSizeHist>,
+    /// Collective kind name (`MPI_Allreduce`, ...) → (calls, bytes).
+    pub coll_breakdown: Option<BTreeMap<String, (u64, u64)>>,
+    /// Virtual seconds spent inside MPI operations attributed here.
+    pub mpi_time: Option<f64>,
+}
+
+impl RegionChannels {
+    pub fn is_empty(&self) -> bool {
+        self.comm_matrix.is_none()
+            && self.msg_hist.is_none()
+            && self.coll_breakdown.is_none()
+            && self.mpi_time.is_none()
+    }
+}
+
 /// Raw statistics for one region path on one rank.
 #[derive(Debug, Clone)]
 pub struct RegionStats {
-    /// True if the region was opened with `comm_region_begin` (the paper's
-    /// new marker) rather than a plain annotation.
+    /// True if the region was opened with a communication-region marker
+    /// (the paper's new annotation) rather than a plain annotation.
     pub is_comm_region: bool,
     /// Number of times the region was entered (pattern instances).
     pub visits: u64,
@@ -32,6 +162,8 @@ pub struct RegionStats {
     pub colls: u64,
     /// Bytes contributed to collectives inside the region.
     pub coll_bytes: u64,
+    /// Payloads of the optional metric channels.
+    pub ext: RegionChannels,
 }
 
 impl Default for RegionStats {
@@ -52,6 +184,7 @@ impl Default for RegionStats {
             src_ranks: BTreeSet::new(),
             colls: 0,
             coll_bytes: 0,
+            ext: RegionChannels::default(),
         }
     }
 }
@@ -76,6 +209,17 @@ impl RegionStats {
     pub fn record_coll(&mut self, bytes: u64) {
         self.colls += 1;
         self.coll_bytes += bytes;
+    }
+
+    /// True when no channel ever wrote here — the bucket was pre-created
+    /// for the hot path but the region saw neither an exit nor an event.
+    pub(crate) fn is_untouched(&self) -> bool {
+        self.visits == 0
+            && self.time_incl == 0.0
+            && self.sends == 0
+            && self.recvs == 0
+            && self.colls == 0
+            && self.ext.is_empty()
     }
 }
 
@@ -114,6 +258,9 @@ impl RankProfile {
                 )
                 .set("colls", s.colls)
                 .set("coll_bytes", s.coll_bytes);
+            if !s.ext.is_empty() {
+                o.set("channels", rank_channels_json(&s.ext, self.rank));
+            }
             regions.set(path, o);
         }
         let mut out = Json::obj();
@@ -122,7 +269,107 @@ impl RankProfile {
     }
 }
 
-/// Aggregated metric: min/max/mean/total across ranks.
+/// Channel payloads of one rank's region, as JSON (rank-local view).
+fn rank_channels_json(ext: &RegionChannels, rank: usize) -> Json {
+    let mut c = Json::obj();
+    if let Some(m) = &ext.comm_matrix {
+        let mut o = Json::obj();
+        o.set("sent", peer_rows(&m.sent, rank, true))
+            .set("recv", peer_rows(&m.recv, rank, false));
+        c.set("comm-matrix", o);
+    }
+    if let Some(h) = &ext.msg_hist {
+        let mut o = Json::obj();
+        o.set("send", size_hist_json(&h.send))
+            .set("recv", size_hist_json(&h.recv));
+        c.set("msg-hist", o);
+    }
+    if let Some(b) = &ext.coll_breakdown {
+        c.set("coll-breakdown", coll_breakdown_json(b));
+    }
+    if let Some(t) = ext.mpi_time {
+        c.set("mpi-time", t);
+    }
+    c
+}
+
+fn peer_rows(map: &BTreeMap<usize, (u64, u64)>, rank: usize, rank_is_src: bool) -> Json {
+    Json::Arr(
+        map.iter()
+            .map(|(peer, (msgs, bytes))| {
+                let (src, dst) = if rank_is_src {
+                    (rank, *peer)
+                } else {
+                    (*peer, rank)
+                };
+                Json::Arr(vec![
+                    Json::from(src),
+                    Json::from(dst),
+                    Json::from(*msgs),
+                    Json::from(*bytes),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn size_hist_json(h: &SizeHist) -> Json {
+    let buckets: Vec<Json> = h
+        .nonzero_buckets()
+        .into_iter()
+        .map(|(b, c)| Json::Arr(vec![Json::from(b), Json::from(c)]))
+        .collect();
+    let mut o = Json::obj();
+    o.set("buckets", Json::Arr(buckets));
+    o.set("count", h.count).set("total_bytes", h.total_bytes);
+    if h.count > 0 {
+        o.set("min", h.min).set("max", h.max);
+    }
+    o
+}
+
+fn size_hist_from_json(j: &Json) -> Option<SizeHist> {
+    let mut h = SizeHist {
+        count: j.get("count").and_then(Json::as_u64)?,
+        total_bytes: j.get("total_bytes").and_then(Json::as_u64)?,
+        ..Default::default()
+    };
+    if h.count > 0 {
+        h.min = j.get("min").and_then(Json::as_u64)?;
+        h.max = j.get("max").and_then(Json::as_u64)?;
+    }
+    for pair in j.get("buckets")?.as_arr()? {
+        let p = pair.as_arr()?;
+        let bucket = p.first()?.as_u64()? as usize;
+        if bucket >= 64 {
+            return None;
+        }
+        h.buckets[bucket] = p.get(1)?.as_u64()?;
+    }
+    Some(h)
+}
+
+fn coll_breakdown_json(b: &BTreeMap<String, (u64, u64)>) -> Json {
+    let mut o = Json::obj();
+    for (kind, (calls, bytes)) in b {
+        o.set(
+            kind,
+            Json::Arr(vec![Json::from(*calls), Json::from(*bytes)]),
+        );
+    }
+    o
+}
+
+fn coll_breakdown_from_json(j: &Json) -> Option<BTreeMap<String, (u64, u64)>> {
+    let mut out = BTreeMap::new();
+    for (kind, v) in j.as_obj()? {
+        let p = v.as_arr()?;
+        out.insert(kind.clone(), (p.first()?.as_u64()?, p.get(1)?.as_u64()?));
+    }
+    Some(out)
+}
+
+/// Aggregated metric: the full per-rank distribution accumulator.
 #[derive(Debug, Clone, Default)]
 pub struct AggMetric {
     pub stats: OnlineStats,
@@ -131,6 +378,9 @@ pub struct AggMetric {
 impl AggMetric {
     pub fn push(&mut self, v: f64) {
         self.stats.push(v);
+    }
+    pub fn count(&self) -> u64 {
+        self.stats.count()
     }
     pub fn min(&self) -> f64 {
         self.stats.min()
@@ -144,13 +394,149 @@ impl AggMetric {
     pub fn total(&self) -> f64 {
         self.stats.sum()
     }
+
+    /// Schema-v2 serialization: the raw accumulator moments, losslessly.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
-        o.set("min", self.min())
-            .set("max", self.max())
-            .set("avg", self.avg())
-            .set("total", self.total());
+        o.set("count", self.stats.count());
+        if self.stats.count() > 0 {
+            o.set("min", self.stats.min())
+                .set("max", self.stats.max())
+                .set("sum", self.stats.sum())
+                .set("mean", self.stats.raw_mean())
+                .set("m2", self.stats.m2());
+        }
         o
+    }
+
+    /// Read the schema-v2 form written by [`AggMetric::to_json`].
+    pub fn from_json(j: &Json) -> Option<AggMetric> {
+        let n = j.get("count").and_then(Json::as_u64)?;
+        if n == 0 {
+            return Some(AggMetric::default());
+        }
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        Some(AggMetric {
+            stats: OnlineStats::from_raw_parts(
+                n,
+                f("min")?,
+                f("max")?,
+                f("sum")?,
+                f("mean")?,
+                f("m2")?,
+            ),
+        })
+    }
+
+    /// Fallback reader for the v1 on-disk layout (`min`/`max`/`avg`/
+    /// `total` scalars). The distribution shape (variance, exact count)
+    /// was never stored in v1; the four scalars are restored exactly and
+    /// the count is inferred as `round(total/avg)`.
+    fn from_v1_json(j: &Json) -> AggMetric {
+        let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let (min, max, avg, total) = (g("min"), g("max"), g("avg"), g("total"));
+        let n = if avg.abs() > 1e-300 {
+            (total / avg).round().max(1.0) as u64
+        } else {
+            1
+        };
+        let stats = if n == 1 {
+            OnlineStats::from_raw_parts(1, total, total, total, total, 0.0)
+        } else {
+            OnlineStats::from_raw_parts(n, min, max, total, avg, 0.0)
+        };
+        AggMetric { stats }
+    }
+}
+
+/// Cross-rank rank×rank traffic matrix for one region: the union of every
+/// rank's send rows and receive columns. In a quiescent run the two sides
+/// agree cell-for-cell; keeping both lets the conservation check (row sums
+/// of sent bytes vs column sums of received bytes) detect lost traffic.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AggCommMatrix {
+    /// (src, dst) → (messages, bytes) from the senders' observations.
+    pub sent: BTreeMap<(usize, usize), (u64, u64)>,
+    /// (src, dst) → (messages, bytes) from the receivers' observations.
+    pub recv: BTreeMap<(usize, usize), (u64, u64)>,
+}
+
+impl AggCommMatrix {
+    /// Smallest n such that every (src, dst) index < n.
+    pub fn n_ranks(&self) -> usize {
+        self.sent
+            .keys()
+            .chain(self.recv.keys())
+            .map(|(s, d)| s.max(d) + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Dense n×n sent-bytes matrix (`[src][dst]`), for heatmaps.
+    pub fn dense_sent_bytes(&self) -> Vec<Vec<f64>> {
+        let n = self.n_ranks();
+        let mut m = vec![vec![0.0; n]; n];
+        for ((s, d), (_msgs, bytes)) in &self.sent {
+            m[*s][*d] = *bytes as f64;
+        }
+        m
+    }
+
+    /// Per-src-rank total bytes sent (row sums of the sent matrix).
+    pub fn sent_row_sums(&self) -> BTreeMap<usize, u64> {
+        let mut out = BTreeMap::new();
+        for ((s, _d), (_m, b)) in &self.sent {
+            *out.entry(*s).or_insert(0) += b;
+        }
+        out
+    }
+
+    /// Per-dst-rank total bytes received (column sums of the recv matrix).
+    pub fn recv_col_sums(&self) -> BTreeMap<usize, u64> {
+        let mut out = BTreeMap::new();
+        for ((_s, d), (_m, b)) in &self.recv {
+            *out.entry(*d).or_insert(0) += b;
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        let rows = |map: &BTreeMap<(usize, usize), (u64, u64)>| {
+            Json::Arr(
+                map.iter()
+                    .map(|((s, d), (m, b))| {
+                        Json::Arr(vec![
+                            Json::from(*s),
+                            Json::from(*d),
+                            Json::from(*m),
+                            Json::from(*b),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let mut o = Json::obj();
+        o.set("sent", rows(&self.sent));
+        o.set("recv", rows(&self.recv));
+        o
+    }
+
+    fn from_json(j: &Json) -> Option<AggCommMatrix> {
+        let side = |key: &str| -> Option<BTreeMap<(usize, usize), (u64, u64)>> {
+            let mut map = BTreeMap::new();
+            for row in j.get(key)?.as_arr()? {
+                let r = row.as_arr()?;
+                map.insert(
+                    (r.first()?.as_u64()? as usize, r.get(1)?.as_u64()? as usize),
+                    (r.get(2)?.as_u64()?, r.get(3)?.as_u64()?),
+                );
+            }
+            Some(map)
+        };
+        Some(AggCommMatrix {
+            sent: side("sent")?,
+            recv: side("recv")?,
+        })
     }
 }
 
@@ -175,6 +561,61 @@ pub struct AggRegion {
     pub min_send: u64,
     pub max_recv: u64,
     pub min_recv: u64,
+    /// `comm-matrix` channel: assembled rank×rank traffic.
+    pub comm_matrix: Option<AggCommMatrix>,
+    /// `msg-hist` channel: histograms merged across ranks.
+    pub msg_hist: Option<MsgSizeHist>,
+    /// `coll-breakdown` channel: per-kind (calls, bytes) summed over ranks.
+    pub coll_breakdown: Option<BTreeMap<String, (u64, u64)>>,
+    /// `mpi-time` channel: per-rank MPI-time distribution.
+    pub mpi_time: Option<AggMetric>,
+}
+
+impl AggRegion {
+    fn channels_json(&self) -> Option<Json> {
+        if self.comm_matrix.is_none()
+            && self.msg_hist.is_none()
+            && self.coll_breakdown.is_none()
+            && self.mpi_time.is_none()
+        {
+            return None;
+        }
+        let mut c = Json::obj();
+        if let Some(m) = &self.comm_matrix {
+            c.set("comm-matrix", m.to_json());
+        }
+        if let Some(h) = &self.msg_hist {
+            let mut o = Json::obj();
+            o.set("send", size_hist_json(&h.send))
+                .set("recv", size_hist_json(&h.recv));
+            c.set("msg-hist", o);
+        }
+        if let Some(b) = &self.coll_breakdown {
+            c.set("coll-breakdown", coll_breakdown_json(b));
+        }
+        if let Some(t) = &self.mpi_time {
+            c.set("mpi-time", t.to_json());
+        }
+        Some(c)
+    }
+
+    fn read_channels(&mut self, j: &Json) {
+        if let Some(m) = j.get("comm-matrix") {
+            self.comm_matrix = AggCommMatrix::from_json(m);
+        }
+        if let Some(h) = j.get("msg-hist") {
+            let read = |key: &str| h.get(key).and_then(size_hist_from_json);
+            if let (Some(send), Some(recv)) = (read("send"), read("recv")) {
+                self.msg_hist = Some(MsgSizeHist { send, recv });
+            }
+        }
+        if let Some(b) = j.get("coll-breakdown") {
+            self.coll_breakdown = coll_breakdown_from_json(b);
+        }
+        if let Some(t) = j.get("mpi-time") {
+            self.mpi_time = AggMetric::from_json(t);
+        }
+    }
 }
 
 /// A whole run: metadata plus aggregated regions, the unit Thicket ingests.
@@ -240,14 +681,22 @@ impl RunProfile {
             .unwrap_or(0)
     }
 
-    /// Total wall (virtual) time of the run = max over ranks of the root
-    /// region's time. Root = the shortest path in the profile.
+    /// Total wall (virtual) time of the run: the max over ranks of root
+    /// region time, where the roots are **all** regions at the minimum
+    /// nesting depth. A driver that opens a single `main` has one root; a
+    /// multi-root profile (several top-level phases, or untagged traffic
+    /// alongside `main`) takes the max across its roots rather than
+    /// whichever path happens to sort first.
     pub fn wall_time(&self) -> f64 {
+        let min_depth = match self.regions.keys().map(|p| p.matches('/').count()).min() {
+            Some(d) => d,
+            None => return 0.0,
+        };
         self.regions
             .iter()
-            .min_by_key(|(p, _)| p.matches('/').count())
+            .filter(|(p, _)| p.matches('/').count() == min_depth)
             .map(|(_, r)| r.time.max())
-            .unwrap_or(0.0)
+            .fold(0.0, f64::max)
     }
 
     pub fn to_json(&self) -> Json {
@@ -273,36 +722,41 @@ impl RunProfile {
                 .set("min_send", r.min_send)
                 .set("max_recv", r.max_recv)
                 .set("min_recv", r.min_recv);
+            if let Some(c) = r.channels_json() {
+                o.set("channels", c);
+            }
             regions.set(path, o);
         }
         let mut out = Json::obj();
-        out.set("meta", meta).set("regions", regions);
+        out.set("schema", SCHEMA_VERSION)
+            .set("meta", meta)
+            .set("regions", regions);
         out
     }
 
-    /// Parse a profile previously written by [`RunProfile::to_json`].
+    /// Parse a profile previously written by [`RunProfile::to_json`] —
+    /// either the current schema v2 or the legacy v1 layout (no `schema`
+    /// key), which older disk caches still hold. A profile declaring an
+    /// unknown (future) schema version is refused rather than misread.
     pub fn from_json(j: &Json) -> Option<RunProfile> {
+        let v2 = match j.get("schema").and_then(Json::as_u64) {
+            Some(SCHEMA_VERSION) => true,
+            Some(_) => return None,
+            None => false,
+        };
         let mut p = RunProfile::default();
         for (k, v) in j.get("meta")?.as_obj()? {
             p.meta.insert(k.clone(), v.as_str()?.to_string());
         }
         for (path, o) in j.get("regions")?.as_obj()? {
             let metric = |name: &str| -> AggMetric {
-                let mut m = AggMetric::default();
-                if let Some(mo) = o.get(name) {
-                    // Reconstruct a 2-point distribution preserving
-                    // min/max/avg/total: push min and max, then correct by
-                    // re-synthesizing from the stored values is lossy; we
-                    // store the four scalars in a shadow accumulator.
-                    let min = mo.get("min").and_then(Json::as_f64).unwrap_or(0.0);
-                    let max = mo.get("max").and_then(Json::as_f64).unwrap_or(0.0);
-                    let avg = mo.get("avg").and_then(Json::as_f64).unwrap_or(0.0);
-                    let total = mo.get("total").and_then(Json::as_f64).unwrap_or(0.0);
-                    m = AggMetric::from_scalars(min, max, avg, total);
+                match o.get(name) {
+                    Some(mo) if v2 => AggMetric::from_json(mo).unwrap_or_default(),
+                    Some(mo) => AggMetric::from_v1_json(mo),
+                    None => AggMetric::default(),
                 }
-                m
             };
-            let r = AggRegion {
+            let mut r = AggRegion {
                 is_comm_region: matches!(o.get("comm_region"), Some(Json::Bool(true))),
                 participants: o.get("participants").and_then(Json::as_u64).unwrap_or(0),
                 visits: o.get("visits").and_then(Json::as_u64).unwrap_or(0),
@@ -318,42 +772,16 @@ impl RunProfile {
                 min_send: o.get("min_send").and_then(Json::as_u64).unwrap_or(0),
                 max_recv: o.get("max_recv").and_then(Json::as_u64).unwrap_or(0),
                 min_recv: o.get("min_recv").and_then(Json::as_u64).unwrap_or(0),
+                ..Default::default()
             };
+            if v2 {
+                if let Some(c) = o.get("channels") {
+                    r.read_channels(c);
+                }
+            }
             p.regions.insert(path.clone(), r);
         }
         Some(p)
-    }
-}
-
-impl AggMetric {
-    /// Rebuild an aggregate from its four serialized scalars. The
-    /// distribution shape is lost but min/max/avg/total are preserved,
-    /// which is all reports and figures consume.
-    pub fn from_scalars(min: f64, max: f64, avg: f64, total: f64) -> AggMetric {
-        // n = total/avg when avg != 0; synthesize n pushes that preserve
-        // the scalars: push min and max once each, then (n-2) values whose
-        // sum keeps the mean. For n < 2 just push avg.
-        let mut m = AggMetric::default();
-        let n = if avg.abs() > 1e-300 {
-            (total / avg).round().max(1.0) as u64
-        } else {
-            1
-        };
-        if n == 1 {
-            m.push(total);
-            return m;
-        }
-        m.push(min);
-        m.push(max);
-        let remaining = n - 2;
-        if remaining > 0 {
-            let rem_sum = total - min - max;
-            let each = rem_sum / remaining as f64;
-            for _ in 0..remaining {
-                m.push(each);
-            }
-        }
-        m
     }
 }
 
@@ -396,7 +824,29 @@ mod tests {
     }
 
     #[test]
-    fn run_profile_roundtrip() {
+    fn size_hist_buckets_and_extremes() {
+        let mut h = SizeHist::default();
+        for b in [1u64, 2, 3, 1024, 1025, 4096] {
+            h.record(b);
+        }
+        assert_eq!(h.count, 6);
+        assert_eq!(h.min, 1);
+        assert_eq!(h.max, 4096);
+        assert_eq!(h.buckets[0], 1); // 1
+        assert_eq!(h.buckets[1], 2); // 2, 3
+        assert_eq!(h.buckets[10], 2); // 1024, 1025
+        assert_eq!(h.buckets[12], 1); // 4096
+        assert_eq!(h.nonzero_buckets(), vec![(0, 1), (1, 2), (10, 2), (12, 1)]);
+        let mut other = SizeHist::default();
+        other.record(8);
+        other.merge(&h);
+        assert_eq!(other.count, 7);
+        assert_eq!(other.min, 1);
+        assert!((other.mean() - (h.total_bytes + 8) as f64 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_profile_roundtrip_exact() {
         let mut rp = RunProfile::default();
         rp.meta.insert("app".into(), "kripke".into());
         rp.meta.insert("ranks".into(), "64".into());
@@ -421,9 +871,87 @@ mod tests {
         assert!(r2.is_comm_region);
         assert_eq!(r2.max_send, 8388608);
         let orig = &rp.regions["main/sweep_comm"];
-        assert!((r2.sends.total() - orig.sends.total()).abs() < 1.0);
-        assert!((r2.time.avg() - orig.time.avg()).abs() < 1e-6);
-        assert!((r2.time.max() - orig.time.max()).abs() < 1e-9);
+        // v2 is lossless: every stored moment is bit-identical.
+        assert_eq!(r2.time.count(), orig.time.count());
+        assert_eq!(r2.time.min().to_bits(), orig.time.min().to_bits());
+        assert_eq!(r2.time.max().to_bits(), orig.time.max().to_bits());
+        assert_eq!(r2.time.total().to_bits(), orig.time.total().to_bits());
+        assert_eq!(r2.time.avg().to_bits(), orig.time.avg().to_bits());
+        assert_eq!(
+            r2.time.stats.variance().to_bits(),
+            orig.time.stats.variance().to_bits()
+        );
+        assert_eq!(r2.sends.total().to_bits(), orig.sends.total().to_bits());
+    }
+
+    #[test]
+    fn v2_json_is_byte_stable() {
+        let mut rp = RunProfile::default();
+        rp.meta.insert("app".into(), "demo".into());
+        let mut reg = AggRegion {
+            is_comm_region: true,
+            participants: 2,
+            ..Default::default()
+        };
+        reg.time.push(0.125);
+        reg.time.push(0.375);
+        let mut cm = AggCommMatrix::default();
+        cm.sent.insert((0, 1), (3, 300));
+        cm.recv.insert((0, 1), (3, 300));
+        reg.comm_matrix = Some(cm);
+        let mut hist = MsgSizeHist::default();
+        hist.send.record(100);
+        hist.recv.record(100);
+        reg.msg_hist = Some(hist);
+        reg.coll_breakdown = Some([("MPI_Allreduce".to_string(), (4, 64))].into());
+        let mut mt = AggMetric::default();
+        mt.push(0.5);
+        reg.mpi_time = Some(mt);
+        rp.regions.insert("halo".into(), reg);
+
+        let text = rp.to_json().to_string_pretty();
+        let rp2 = RunProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let text2 = rp2.to_json().to_string_pretty();
+        assert_eq!(text, text2, "v2 round-trip must be byte-identical");
+        let r2 = &rp2.regions["halo"];
+        assert_eq!(r2.comm_matrix.as_ref().unwrap().sent[&(0, 1)], (3, 300));
+        assert_eq!(r2.coll_breakdown.as_ref().unwrap()["MPI_Allreduce"], (4, 64));
+    }
+
+    #[test]
+    fn v1_profiles_still_read() {
+        // A v1-era document: no schema key, metrics as min/max/avg/total.
+        let v1 = r#"{
+            "meta": {"app": "kripke", "ranks": "4"},
+            "regions": {
+                "main/sweep_comm": {
+                    "comm_region": true,
+                    "participants": 4,
+                    "visits": 8,
+                    "time": {"min": 1.0, "max": 2.0, "avg": 1.5, "total": 6.0},
+                    "sends": {"min": 10, "max": 10, "avg": 10, "total": 40},
+                    "max_send": 4096,
+                    "min_send": 512
+                }
+            }
+        }"#;
+        let rp = RunProfile::from_json(&Json::parse(v1).unwrap()).unwrap();
+        let r = &rp.regions["main/sweep_comm"];
+        assert!(r.is_comm_region);
+        assert_eq!(r.time.min(), 1.0);
+        assert_eq!(r.time.max(), 2.0);
+        assert_eq!(r.time.avg(), 1.5);
+        assert_eq!(r.time.total(), 6.0);
+        assert_eq!(r.time.count(), 4);
+        assert_eq!(r.sends.total(), 40.0);
+        assert_eq!(r.max_send, 4096);
+        assert!(r.comm_matrix.is_none());
+    }
+
+    #[test]
+    fn future_schema_versions_are_refused() {
+        let j = Json::parse(r#"{"schema": 3, "meta": {}, "regions": {}}"#).unwrap();
+        assert!(RunProfile::from_json(&j).is_none());
     }
 
     #[test]
@@ -463,5 +991,39 @@ mod tests {
         rp.regions.insert("a/halo".into(), comm);
         rp.regions.insert("a/solve".into(), plain);
         assert_eq!(rp.comm_totals(), (100.0, 10.0));
+    }
+
+    #[test]
+    fn wall_time_takes_max_over_all_roots() {
+        // Two depth-0 roots (a driver with two top-level phases): wall time
+        // is the max over both, not whichever sorts first.
+        let mut rp = RunProfile::default();
+        let mut a = AggRegion::default();
+        a.time.push(2.0);
+        let mut b = AggRegion::default();
+        b.time.push(7.0);
+        let mut deep = AggRegion::default();
+        deep.time.push(100.0); // deeper region must not win
+        rp.regions.insert("aaa_phase".into(), a);
+        rp.regions.insert("zzz_phase".into(), b);
+        rp.regions.insert("aaa_phase/inner".into(), deep);
+        assert_eq!(rp.wall_time(), 7.0);
+        assert_eq!(RunProfile::default().wall_time(), 0.0);
+    }
+
+    #[test]
+    fn agg_comm_matrix_sums() {
+        let mut m = AggCommMatrix::default();
+        m.sent.insert((0, 1), (2, 200));
+        m.sent.insert((1, 0), (1, 50));
+        m.recv.insert((0, 1), (2, 200));
+        m.recv.insert((1, 0), (1, 50));
+        assert_eq!(m.n_ranks(), 2);
+        assert_eq!(m.sent_row_sums()[&0], 200);
+        assert_eq!(m.sent_row_sums()[&1], 50);
+        assert_eq!(m.recv_col_sums()[&1], 200);
+        let dense = m.dense_sent_bytes();
+        assert_eq!(dense[0][1], 200.0);
+        assert_eq!(dense[1][0], 50.0);
     }
 }

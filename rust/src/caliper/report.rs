@@ -3,6 +3,7 @@
 //! region).
 
 use super::profile::RunProfile;
+use super::TOPLEVEL;
 use crate::util::table::{Align, TextTable};
 
 /// Region time tree with avg/min/max time per rank — like
@@ -31,7 +32,7 @@ pub fn runtime_report(run: &RunProfile) -> String {
         let label = format!(
             "{}{}{}",
             "  ".repeat(depth),
-            leaf,
+            if path == TOPLEVEL { "(untagged MPI)" } else { leaf },
             if r.is_comm_region { " [comm]" } else { "" }
         );
         t.row(vec![
@@ -47,9 +48,11 @@ pub fn runtime_report(run: &RunProfile) -> String {
 }
 
 /// Table I attributes for every communication region — the paper's new
-/// `comm-report`.
+/// `comm-report`. When the `mpi-time` channel was enabled, a per-region
+/// MPI-time column is appended.
 pub fn comm_report(run: &RunProfile) -> String {
-    let mut t = TextTable::new(&[
+    let has_mpi_time = run.regions.values().any(|r| r.mpi_time.is_some());
+    let mut headers = vec![
         "Comm region",
         "Sends min/max",
         "Recvs min/max",
@@ -59,15 +62,23 @@ pub fn comm_report(run: &RunProfile) -> String {
         "Bytes recv min/max",
         "Coll max",
         "Largest msg",
-    ])
-    .align(0, Align::Left)
-    .title("comm-report (Table I attributes per communication region)");
+    ];
+    if has_mpi_time {
+        headers.push("MPI time (max)");
+    }
+    let mut t = TextTable::new(&headers)
+        .align(0, Align::Left)
+        .title("comm-report (Table I attributes per communication region)");
     for (path, r) in &run.regions {
         if !r.is_comm_region {
             continue;
         }
-        t.row(vec![
-            path.clone(),
+        let mut row = vec![
+            if path == TOPLEVEL {
+                "(untagged MPI)".to_string()
+            } else {
+                path.clone()
+            },
             format!("{}/{}", r.sends.min(), r.sends.max()),
             format!("{}/{}", r.recvs.min(), r.recvs.max()),
             format!("{}/{}", r.dest_ranks.min(), r.dest_ranks.max()),
@@ -76,7 +87,14 @@ pub fn comm_report(run: &RunProfile) -> String {
             format!("{:.0}/{:.0}", r.bytes_recv.min(), r.bytes_recv.max()),
             format!("{:.0}", r.colls.max()),
             r.max_send.to_string(),
-        ]);
+        ];
+        if has_mpi_time {
+            row.push(match &r.mpi_time {
+                Some(m) => format!("{:.6}", m.max()),
+                None => "-".to_string(),
+            });
+        }
+        t.row(row);
     }
     if t.n_rows() == 0 {
         return "comm-report: no communication regions recorded\n".to_string();

@@ -381,9 +381,10 @@ pub fn load_profiles(out_dir: impl AsRef<Path>) -> Result<Thicket> {
     Thicket::load_dir(out_dir.as_ref().join("profiles"))
 }
 
-/// True when a profile file exists AND its stamped run options match the
-/// requested ones. Unreadable/unparseable files and profiles from before
-/// the options were stamped count as stale (re-run, overwrite).
+/// True when a profile file exists AND its stamped run options — shrink
+/// factors and metric-channel spec — match the requested ones.
+/// Unreadable/unparseable files and profiles from before the options were
+/// stamped count as stale (re-run, overwrite).
 ///
 /// This parses the file that `load_profiles` will parse again at the end
 /// of the campaign — accepted: profiles are small, the matrix is ≤20
@@ -409,7 +410,9 @@ fn disk_profile_matches(path: &Path, run: &RunOptions) -> bool {
             .and_then(Json::as_str)
             .and_then(|s| s.parse::<usize>().ok())
     };
-    field("iter_shrink") == Some(run.iter_shrink) && field("size_shrink") == Some(run.size_shrink)
+    field("iter_shrink") == Some(run.iter_shrink)
+        && field("size_shrink") == Some(run.size_shrink)
+        && meta.get("channels").and_then(Json::as_str) == Some(run.channels.spec_string().as_str())
 }
 
 #[cfg(test)]
@@ -438,6 +441,7 @@ mod tests {
         opts.run = RunOptions {
             iter_shrink: 10,
             size_shrink: 8,
+            ..Default::default()
         };
         opts.verbose = false;
         let t = run_campaign(&opts, true).unwrap();
@@ -462,6 +466,7 @@ mod tests {
         opts.run = RunOptions {
             iter_shrink: 10,
             size_shrink: 8,
+            ..Default::default()
         };
         opts.verbose = false;
         run_campaign(&opts, true).unwrap();
@@ -472,10 +477,18 @@ mod tests {
         opts.run = RunOptions {
             iter_shrink: 20,
             size_shrink: 8,
+            ..Default::default()
         };
         let (_, changed) = run_campaign_report(&opts, false).unwrap();
         assert_eq!(changed.disk_cached, 0, "{}", changed.summary());
         assert_eq!(changed.cells_executed, 1);
+        // different channel set: the comm-stats-only profile must NOT
+        // satisfy a campaign that needs the comm matrix
+        opts.run.channels =
+            crate::caliper::ChannelConfig::parse("comm-stats,comm-matrix").unwrap();
+        let (_, rechanneled) = run_campaign_report(&opts, false).unwrap();
+        assert_eq!(rechanneled.disk_cached, 0, "{}", rechanneled.summary());
+        assert_eq!(rechanneled.cells_executed, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -484,6 +497,7 @@ mod tests {
         let bad = RunOptions {
             iter_shrink: 0,
             size_shrink: 1,
+            ..Default::default()
         };
         assert!(CampaignExecutor::new(4, bad).is_err());
     }
@@ -502,6 +516,7 @@ mod tests {
             RunOptions {
                 iter_shrink: 10,
                 size_shrink: 8,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -2,14 +2,15 @@
 //!
 //! ```text
 //! repro campaign [--out results] [--app X] [--system Y] [--max-ranks N]
-//!                [--smoke] [--force] [--jobs N]
+//!                [--smoke] [--force] [--jobs N] [--channels SPEC]
 //!                                           run the Table III matrix
 //!                                           (N worker threads; default 1)
 //! repro table1|table2|table3                print static tables
 //! repro table4  [--out results]             print Table IV from profiles
 //! repro fig1..fig6 [--out results]          render figures (+CSV)
+//! repro heatmap [--out results]             comm-matrix heatmaps (+CSV)
 //! repro run --app kripke --system dane --ranks 64 [--smoke]
-//!                                           run one cell, print reports
+//!           [--channels SPEC]               run one cell, print reports
 //! repro report --profile results/profiles/kripke_dane_64.json
 //! ```
 
@@ -34,10 +35,12 @@ on the commscope simulated stack.
 USAGE:
   repro campaign [--out results] [--app APP] [--system SYS]
                  [--max-ranks N] [--smoke] [--force] [--jobs N]
+                 [--channels SPEC]
   repro table1 | table2 | table3
   repro table4 [--out results]
   repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6  [--out results]
-  repro run --app APP --system SYS --ranks N [--smoke]
+  repro heatmap [--out results]
+  repro run --app APP --system SYS --ranks N [--smoke] [--channels SPEC]
   repro report --profile FILE.json
   repro help
 
@@ -46,6 +49,12 @@ Profiles are cached under <out>/profiles; `campaign --force` reruns.
 results are byte-identical to a serial run). Per-cell failures do not abort
 the campaign: survivors are rendered, failures land in failures.csv, and
 the exit code is nonzero.
+`--channels SPEC` selects the Caliper metric channels, comma-separated:
+region-times, comm-stats, comm-matrix, msg-hist, coll-breakdown, mpi-time,
+or `all` (default: region-times,comm-stats). Profiles are stamped with
+their channel spec, so changing --channels reruns stale cells. Example:
+  repro campaign --channels comm-stats,comm-matrix
+then `repro heatmap` renders rank×rank traffic heatmaps.
 APP ∈ {amg2023, kripke, laghos}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
@@ -59,12 +68,17 @@ pub fn dispatch(args: &Args) -> i32 {
     }
 }
 
-fn run_options(args: &Args) -> RunOptions {
-    if args.has("smoke") {
+fn run_options(args: &Args) -> anyhow::Result<RunOptions> {
+    let mut opts = if args.has("smoke") {
         RunOptions::smoke()
     } else {
         RunOptions::default()
+    };
+    if let Some(spec) = args.get("channels") {
+        opts.channels = crate::caliper::ChannelConfig::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--channels: {}", e))?;
     }
+    Ok(opts)
 }
 
 fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
@@ -76,7 +90,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
         }
         Some("campaign") => {
             let mut opts = CampaignOptions::new(&out_dir);
-            opts.run = run_options(args);
+            opts.run = run_options(args)?;
             opts.jobs = args.get_usize("jobs", 1);
             if let Some(app) = args.get("app") {
                 opts.app =
@@ -132,7 +146,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::table4(&t));
             Ok(())
         }
-        Some(fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6")) => {
+        Some(fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "heatmap")) => {
             let t = need_profiles(&out_dir)?;
             let dir = Path::new(&out_dir);
             let text = match fig {
@@ -141,7 +155,8 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
                 "fig3" => figures::fig3(&t, Some(dir))?,
                 "fig4" => figures::fig4(&t, Some(dir))?,
                 "fig5" => figures::fig5(&t, Some(dir))?,
-                _ => figures::fig6(&t, Some(dir))?,
+                "fig6" => figures::fig6(&t, Some(dir))?,
+                _ => figures::comm_heatmap(&t, Some(dir))?,
             };
             println!("{}", text);
             Ok(())
@@ -162,7 +177,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
                 },
                 nranks,
             };
-            let run = run_cell(&spec, &run_options(args))?;
+            let run = run_cell(&spec, &run_options(args)?)?;
             println!("{}", runtime_report(&run));
             println!("{}", comm_report(&run));
             Ok(())

@@ -9,9 +9,9 @@ use anyhow::Result;
 use crate::benchpark::system::SystemId;
 use crate::benchpark::table3_matrix;
 use crate::caliper::attr;
-use crate::thicket::export::write_series_csv;
+use crate::thicket::export::{write_matrix_csv, write_series_csv};
 use crate::thicket::{stats, Thicket};
-use crate::util::plotascii::{Chart, Series};
+use crate::util::plotascii::{Chart, Heatmap, Series};
 use crate::util::table::{sci, Align, TextTable};
 
 /// Render every table and figure into one report string; when `out` is
@@ -29,7 +29,72 @@ pub fn render_all(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
     all.push_str(&fig4(thicket, out)?);
     all.push_str(&fig5(thicket, out)?);
     all.push_str(&fig6(thicket, out)?);
+    all.push_str(&comm_heatmap(thicket, out)?);
     Ok(all)
+}
+
+/// The canonical halo/sweep communication region per app — where the
+/// `comm-matrix` channel shows the neighbor structure.
+fn halo_region_for(app: &str) -> &'static str {
+    match app {
+        "amg2023" => "matvec_comm_level_0",
+        "kripke" => "sweep_comm",
+        "laghos" => "halo_exchange",
+        _ => "halo_exchange",
+    }
+}
+
+/// Rank×rank sent-bytes heatmap per (app, system) from the `comm-matrix`
+/// channel, using each group's smallest run (the clearest structure).
+/// Requires profiles recorded with `--channels ...,comm-matrix`; groups
+/// without matrix data are skipped, and an explanatory line is emitted
+/// when no group has any.
+pub fn comm_heatmap(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    if thicket.with_comm_matrix().is_empty() {
+        return Ok(
+            "comm-matrix heatmap: no profile carries the comm-matrix channel \
+             (re-run the campaign with --channels comm-stats,comm-matrix)\n"
+                .to_string(),
+        );
+    }
+    let mut text = String::new();
+    for (key, group) in group_app_system(thicket) {
+        let meta_of = |k: &str| {
+            group
+                .runs
+                .first()
+                .and_then(|r| r.meta.get(k).cloned())
+                .unwrap_or_default()
+        };
+        let (app, system) = (meta_of("app"), meta_of("system"));
+        let preferred = halo_region_for(&app);
+        // smallest rank count first: by_ranks is ascending
+        let mut found = None;
+        for run in group.by_ranks() {
+            let dense = stats::comm_matrix_dense(run, preferred)
+                .or_else(|| stats::first_region_with_matrix(run));
+            if let Some((path, matrix)) = dense {
+                let ranks = run.meta.get("ranks").cloned().unwrap_or_default();
+                found = Some((ranks, path, matrix));
+                break;
+            }
+        }
+        let (ranks, path, matrix) = match found {
+            Some(f) => f,
+            None => continue,
+        };
+        if let Some(dir) = out {
+            write_matrix_csv(dir.join(format!("heatmap_{}_{}.csv", app, system)), &matrix)?;
+        }
+        let title = format!(
+            "comm-matrix heatmap — {} @ {} ranks, region '{}' (bytes sent)",
+            key, ranks, path
+        );
+        let hm = Heatmap::new(&title, "dst rank", "src rank");
+        text.push_str(&hm.render(&matrix));
+        text.push('\n');
+    }
+    Ok(text)
 }
 
 /// Table I — the attributes the comm-pattern profiler collects.
@@ -326,6 +391,38 @@ mod tests {
         assert!(t3.contains("kripke"));
         assert!(t3.contains("8x8x8"));
         assert!(t3.contains("896"));
+    }
+
+    #[test]
+    fn comm_heatmap_renders_matrix_or_explains() {
+        use crate::caliper::{AggCommMatrix, AggRegion, RunProfile};
+        // no matrix data → explanatory line
+        let empty = Thicket::new(vec![]);
+        let txt = comm_heatmap(&empty, None).unwrap();
+        assert!(txt.contains("--channels"), "{}", txt);
+
+        // AMG run with a matrix on the halo region → heatmap
+        let mut run = RunProfile::default();
+        run.meta.insert("app".into(), "amg2023".into());
+        run.meta.insert("system".into(), "dane".into());
+        run.meta.insert("ranks".into(), "8".into());
+        let mut reg = AggRegion {
+            is_comm_region: true,
+            ..Default::default()
+        };
+        let mut m = AggCommMatrix::default();
+        for src in 0..8usize {
+            let dst = (src + 1) % 8;
+            m.sent.insert((src, dst), (10, 1024));
+            m.recv.insert((src, dst), (10, 1024));
+        }
+        reg.comm_matrix = Some(m);
+        run.regions.insert("main/matvec_comm_level_0".into(), reg);
+        let t = Thicket::new(vec![run]);
+        let txt = comm_heatmap(&t, None).unwrap();
+        assert!(txt.contains("amg2023"), "{}", txt);
+        assert!(txt.contains("matvec_comm_level_0"), "{}", txt);
+        assert!(txt.contains("src rank"), "{}", txt);
     }
 
     #[test]

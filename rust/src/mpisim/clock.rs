@@ -6,16 +6,42 @@
 //! pull the clock up to the timestamp implied by their peers. Because clock
 //! exchange piggybacks on the messages themselves, no global scheduler is
 //! needed and the result is schedule-independent.
+//!
+//! The current time lives in a shared cell so that instrumentation handles
+//! ([`ClockHandle`]) can read it without borrowing the owning `Rank` — this
+//! is what lets Caliper's RAII region guards stamp their exit time from
+//! `Drop`, where no `&Rank` is available.
 
-/// Monotonic virtual clock (seconds).
-#[derive(Debug, Clone, Copy, PartialEq)]
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// Monotonic virtual clock (seconds). Owned by exactly one `Rank`; only the
+/// owner advances it, but any number of [`ClockHandle`]s may read it.
+#[derive(Debug)]
 pub struct Clock {
-    now: f64,
+    now: Rc<Cell<f64>>,
 }
 
 impl Default for Clock {
     fn default() -> Self {
-        Clock { now: 0.0 }
+        Clock {
+            now: Rc::new(Cell::new(0.0)),
+        }
+    }
+}
+
+/// Read-only view of a rank's virtual clock, cheaply cloneable and usable
+/// without a `Rank` borrow (rank-local: `Rc`, not `Arc`).
+#[derive(Debug, Clone)]
+pub struct ClockHandle {
+    now: Rc<Cell<f64>>,
+}
+
+impl ClockHandle {
+    /// Current virtual time (seconds).
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.now.get()
     }
 }
 
@@ -26,7 +52,14 @@ impl Clock {
 
     #[inline]
     pub fn now(&self) -> f64 {
-        self.now
+        self.now.get()
+    }
+
+    /// A shared read-only handle onto this clock.
+    pub fn handle(&self) -> ClockHandle {
+        ClockHandle {
+            now: self.now.clone(),
+        }
     }
 
     /// Advance by a non-negative delta.
@@ -34,14 +67,14 @@ impl Clock {
     pub fn advance(&mut self, dt: f64) {
         debug_assert!(dt >= 0.0, "negative clock advance: {}", dt);
         debug_assert!(dt.is_finite(), "non-finite clock advance");
-        self.now += dt;
+        self.now.set(self.now.get() + dt);
     }
 
     /// Pull the clock up to `t` if `t` is later (synchronization edge).
     #[inline]
     pub fn sync_to(&mut self, t: f64) {
-        if t > self.now {
-            self.now = t;
+        if t > self.now.get() {
+            self.now.set(t);
         }
     }
 }
@@ -60,6 +93,17 @@ mod tests {
         assert_eq!(c.now(), 1.5);
         c.sync_to(2.0);
         assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn handle_tracks_owner() {
+        let mut c = Clock::new();
+        let h = c.handle();
+        assert_eq!(h.now(), 0.0);
+        c.advance(3.25);
+        assert_eq!(h.now(), 3.25);
+        c.sync_to(10.0);
+        assert_eq!(h.now(), 10.0);
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod request;
 pub mod world;
 
 pub use cart::CartComm;
+pub use clock::ClockHandle;
 pub use comm::Comm;
 pub use datatype::MpiData;
 pub use error::MpiError;

@@ -21,7 +21,7 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use super::clock::Clock;
+use super::clock::{Clock, ClockHandle};
 use super::collectives::{frame_concat, frame_split, CollBoard, ReduceOp};
 use super::comm::Comm;
 use super::datatype::{decode, encode, MpiData};
@@ -174,6 +174,13 @@ impl<'w> Rank<'w> {
     /// Current virtual time (seconds).
     pub fn now(&self) -> f64 {
         self.clock.now()
+    }
+
+    /// Shared read-only handle onto this rank's virtual clock. Rank-local
+    /// instrumentation (Caliper region guards) reads time through this
+    /// without holding a `Rank` borrow.
+    pub fn clock_handle(&self) -> ClockHandle {
+        self.clock.handle()
     }
 
     /// The machine model this job runs on.

@@ -47,6 +47,25 @@ pub fn write_inventory_csv(path: impl AsRef<Path>, thicket: &Thicket) -> Result<
     Ok(())
 }
 
+/// Write a dense rank×rank matrix as a long-form CSV (`src,dst,bytes`),
+/// skipping zero cells — the raw data behind a comm-matrix heatmap.
+pub fn write_matrix_csv(path: impl AsRef<Path>, matrix: &[Vec<f64>]) -> Result<()> {
+    let mut t = TextTable::new(&["src", "dst", "bytes"]);
+    for (src, row) in matrix.iter().enumerate() {
+        for (dst, &bytes) in row.iter().enumerate() {
+            if bytes > 0.0 {
+                t.row(vec![
+                    src.to_string(),
+                    dst.to_string(),
+                    format!("{:.0}", bytes),
+                ]);
+            }
+        }
+    }
+    std::fs::write(path.as_ref(), t.to_csv())?;
+    Ok(())
+}
+
 /// Write the campaign's per-cell failures (empty file with header when the
 /// campaign was clean) — dropped next to the inventory so a partial matrix
 /// is diagnosable from the artifacts alone.

@@ -45,7 +45,9 @@ impl Thicket {
     }
 
     /// Load every `*.json` profile in a directory (what `repro campaign`
-    /// writes).
+    /// writes). Reads both profile schemas: the current v2 (lossless
+    /// moments + channel payloads) and the legacy v1 layout, so thickets
+    /// assemble across old and new campaign outputs.
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Thicket> {
         let mut runs = Vec::new();
         let mut entries: Vec<_> = std::fs::read_dir(dir.as_ref())
@@ -108,6 +110,15 @@ impl Thicket {
                 let y = f(r)?;
                 Some((x, y))
             })
+            .collect()
+    }
+
+    /// Runs that carry `comm-matrix` channel data on at least one region
+    /// (what the heatmap figure can draw from).
+    pub fn with_comm_matrix(&self) -> Vec<&RunProfile> {
+        self.runs
+            .iter()
+            .filter(|r| r.regions.values().any(|reg| reg.comm_matrix.is_some()))
             .collect()
     }
 

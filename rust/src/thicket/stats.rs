@@ -59,6 +59,25 @@ pub fn region_time_avg(run: &RunProfile, name: &str) -> Option<f64> {
     run.region(name).map(|(_, r)| r.time.avg())
 }
 
+/// Dense rank×rank sent-bytes matrix for a region recorded with the
+/// `comm-matrix` channel: returns (region path, matrix) where
+/// `matrix[src][dst]` is bytes sent. `None` when the region is absent or
+/// the channel was not enabled on the run.
+pub fn comm_matrix_dense(run: &RunProfile, region: &str) -> Option<(String, Vec<Vec<f64>>)> {
+    let (path, reg) = run.region(region)?;
+    let m = reg.comm_matrix.as_ref()?;
+    Some((path.clone(), m.dense_sent_bytes()))
+}
+
+/// First region (path order) carrying a comm-matrix payload — what the
+/// heatmap figure falls back to when the canonical region name is absent.
+pub fn first_region_with_matrix(run: &RunProfile) -> Option<(String, Vec<Vec<f64>>)> {
+    run.regions
+        .iter()
+        .find(|(_, r)| r.comm_matrix.is_some())
+        .map(|(p, r)| (p.clone(), r.comm_matrix.as_ref().unwrap().dense_sent_bytes()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

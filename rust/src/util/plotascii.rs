@@ -157,6 +157,122 @@ impl Chart {
     }
 }
 
+/// Terminal heatmap: an n×m matrix rendered as an intensity grid (the
+/// rank×rank communication-matrix figures). Cells map onto a ramp of
+/// density characters; large matrices are max-pooled down to `max_cells`
+/// per axis so a 512-rank matrix still fits a terminal.
+#[derive(Debug, Clone)]
+pub struct Heatmap {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    /// Downsample threshold per axis (max-pooling above it).
+    pub max_cells: usize,
+}
+
+impl Heatmap {
+    const RAMP: &'static [char] = &['.', ':', '-', '=', '+', '*', '#', '%', '@'];
+
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Heatmap {
+        Heatmap {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            max_cells: 64,
+        }
+    }
+
+    /// Render `matrix[row][col]` (rows = y axis, top to bottom). Zero cells
+    /// print as space; positive cells use a log-scaled ramp between the
+    /// smallest and largest nonzero value.
+    pub fn render(&self, matrix: &[Vec<f64>]) -> String {
+        let n_rows = matrix.len();
+        let n_cols = matrix.iter().map(|r| r.len()).max().unwrap_or(0);
+        if n_rows == 0 || n_cols == 0 {
+            return format!("{}\n(no data)\n", self.title);
+        }
+        let (m, pooled) = self.pool(matrix, n_rows, n_cols);
+        let nonzero: Vec<f64> = m.iter().flatten().copied().filter(|v| *v > 0.0).collect();
+        if nonzero.is_empty() {
+            return format!("{}\n(all cells zero)\n", self.title);
+        }
+        let (lo, hi) = min_max(&nonzero);
+        let (llo, lhi) = (lo.max(1e-300).log10(), hi.max(1e-300).log10());
+        let span = if lhi > llo { lhi - llo } else { 1.0 };
+        let mut out = format!("{}\n", self.title);
+        if let Some(factor) = pooled {
+            out.push_str(&format!(
+                "(max-pooled {}x per axis: one cell covers {0}x{0} rank pairs)\n",
+                factor
+            ));
+        }
+        let lw = (m.len().saturating_sub(1)).to_string().len().max(2);
+        for (r, row) in m.iter().enumerate() {
+            let mut line = String::new();
+            for &v in row {
+                if v <= 0.0 {
+                    line.push(' ');
+                } else {
+                    let t = (v.max(1e-300).log10() - llo) / span;
+                    let idx = (t * (Self::RAMP.len() - 1) as f64).round() as usize;
+                    line.push(Self::RAMP[idx.min(Self::RAMP.len() - 1)]);
+                }
+            }
+            out.push_str(&format!("{:>lw$} |{}|\n", r, line, lw = lw));
+        }
+        out.push_str(&format!(
+            "{}  x: {} (0..{}), y: {} (0..{})\n",
+            " ".repeat(lw),
+            self.x_label,
+            m[0].len() - 1,
+            self.y_label,
+            m.len() - 1,
+        ));
+        out.push_str(&format!(
+            "{}  scale: '{}' = {:.3e} .. '{}' = {:.3e} (log)\n",
+            " ".repeat(lw),
+            Self::RAMP[0],
+            lo,
+            Self::RAMP[Self::RAMP.len() - 1],
+            hi,
+        ));
+        out
+    }
+
+    /// Max-pool the matrix down to ≤ max_cells per axis. Returns the
+    /// (possibly pooled) matrix and the pooling factor when applied.
+    fn pool(
+        &self,
+        matrix: &[Vec<f64>],
+        n_rows: usize,
+        n_cols: usize,
+    ) -> (Vec<Vec<f64>>, Option<usize>) {
+        let n = n_rows.max(n_cols);
+        if n <= self.max_cells {
+            let mut m = vec![vec![0.0; n_cols]; n_rows];
+            for (r, row) in matrix.iter().enumerate() {
+                for (c, &v) in row.iter().enumerate() {
+                    m[r][c] = v;
+                }
+            }
+            return (m, None);
+        }
+        let factor = n.div_ceil(self.max_cells);
+        let pr = n_rows.div_ceil(factor);
+        let pc = n_cols.div_ceil(factor);
+        let mut m = vec![vec![0.0; pc]; pr];
+        for (r, row) in matrix.iter().enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                let cell = &mut m[r / factor][c / factor];
+                if v > *cell {
+                    *cell = v;
+                }
+            }
+        }
+        (m, Some(factor))
+    }
+}
+
 fn fmt_axis(scale: Scale, v: f64) -> String {
     match scale {
         Scale::Linear => {
@@ -236,6 +352,44 @@ mod tests {
         let c = Chart::new("t", "x", "y").log_y().log_x();
         let s = Series::new("a", vec![(1.0, 0.0), (10.0, 100.0)]);
         let _ = c.render(&[s]);
+    }
+
+    #[test]
+    fn heatmap_renders_ramp_and_zeroes() {
+        let h = Heatmap::new("hm", "dst", "src");
+        let m = vec![
+            vec![0.0, 1.0, 1000.0],
+            vec![1.0, 0.0, 1.0],
+            vec![1000.0, 1.0, 0.0],
+        ];
+        let out = h.render(&m);
+        assert!(out.contains("hm"));
+        assert!(out.contains('@'), "max cell must use densest mark: {}", out);
+        assert!(out.contains('.'), "min cell must use lightest mark: {}", out);
+        // diagonal zeros render as spaces inside the row frame
+        assert!(out.contains("| ") || out.contains(" |"), "{}", out);
+        assert!(out.contains("scale:"));
+    }
+
+    #[test]
+    fn heatmap_pools_large_matrices() {
+        let n = 200;
+        let m: Vec<Vec<f64>> = (0..n)
+            .map(|r| (0..n).map(|c| if r == c { 0.0 } else { 1.0 }).collect())
+            .collect();
+        let h = Heatmap::new("big", "dst", "src");
+        let out = h.render(&m);
+        assert!(out.contains("max-pooled"));
+        // 200 / 64 → factor 4 → 50 rows
+        let framed = out.lines().filter(|l| l.contains('|')).count();
+        assert_eq!(framed, 50, "{}", out);
+    }
+
+    #[test]
+    fn heatmap_empty_and_zero() {
+        let h = Heatmap::new("z", "x", "y");
+        assert!(h.render(&[]).contains("no data"));
+        assert!(h.render(&[vec![0.0, 0.0]]).contains("all cells zero"));
     }
 
     #[test]

@@ -93,6 +93,36 @@ impl OnlineStats {
             self.mean
         }
     }
+    /// Second central moment Σ(x−mean)² (Welford's running `M2`). Exposed
+    /// so profiles can serialize the accumulator losslessly.
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+
+    /// Raw mean without the `n == 0` guard of [`OnlineStats::mean`] —
+    /// serialization wants the stored moments verbatim.
+    pub fn raw_mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Rebuild an accumulator from previously serialized moments. The
+    /// inverse of reading (`count`, `min`, `max`, `sum`, `raw_mean`, `m2`)
+    /// off an existing accumulator: pushes into the result behave exactly
+    /// as if the original had kept accumulating.
+    pub fn from_raw_parts(n: u64, min: f64, max: f64, sum: f64, mean: f64, m2: f64) -> OnlineStats {
+        if n == 0 {
+            return OnlineStats::new();
+        }
+        OnlineStats {
+            n,
+            min,
+            max,
+            sum,
+            mean,
+            m2,
+        }
+    }
+
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0

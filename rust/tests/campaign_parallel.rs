@@ -16,6 +16,7 @@ fn fast() -> RunOptions {
     RunOptions {
         iter_shrink: 10,
         size_shrink: 8,
+        ..Default::default()
     }
 }
 
@@ -133,6 +134,7 @@ fn executor_validates_options_before_running() {
     let bad = RunOptions {
         iter_shrink: 1,
         size_shrink: 0,
+        ..Default::default()
     };
     let err = CampaignExecutor::new(2, bad).unwrap_err().to_string();
     assert!(err.contains("campaign run options"), "err: {}", err);

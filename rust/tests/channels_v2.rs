@@ -1,0 +1,243 @@
+//! Integration tests for the Caliper v2 surface: metric channels, the
+//! rank×rank comm matrix, RAII region guards, channel-spec parsing, and
+//! the schema-v2 profile round-trip (including v1 migration).
+
+use std::collections::BTreeMap;
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::caliper::aggregate::{aggregate, check_matrix_conservation};
+use commscope::caliper::{Caliper, ChannelConfig, RunProfile};
+use commscope::mpisim::{MachineModel, World, WorldConfig};
+use commscope::util::json::Json;
+
+fn cfg(n: usize) -> WorldConfig {
+    WorldConfig::new(n, MachineModel::test_machine())
+}
+
+/// Every rank sends a distinct payload to every other rank inside a comm
+/// region; the aggregated matrix must be fully populated and conserved.
+#[test]
+fn comm_matrix_conservation_all_to_all() {
+    let n = 6;
+    let profiles = World::run(cfg(n), |rank| {
+        let cali = Caliper::attach_with(rank, "comm-stats,comm-matrix").unwrap();
+        let world = rank.world();
+        {
+            let _x = cali.comm_region("exchange");
+            for dst in (0..n).filter(|&d| d != rank.rank) {
+                // payload size encodes (src, dst) so cells are distinct
+                let len = 8 * (1 + rank.rank * n + dst);
+                rank.isend(&vec![0u8; len], dst, 7, &world).unwrap();
+            }
+            for src in (0..n).filter(|&s| s != rank.rank) {
+                let _ = rank.recv::<u8>(Some(src), 7, &world).unwrap();
+            }
+        }
+        cali.finish(rank)
+    });
+    let run = aggregate(BTreeMap::new(), &profiles);
+    let m = run.regions["exchange"].comm_matrix.as_ref().unwrap();
+    check_matrix_conservation(m).unwrap();
+    assert_eq!(m.sent.len(), n * (n - 1));
+    // row sums of sent bytes == column sums of received bytes, per rank
+    let rows = m.sent_row_sums();
+    let cols = m.recv_col_sums();
+    for r in 0..n {
+        let sent_by_r = rows[&r];
+        let recv_by_r = cols[&r];
+        let expect_sent: u64 = (0..n)
+            .filter(|&d| d != r)
+            .map(|d| 8 * (1 + r * n + d) as u64)
+            .sum();
+        let expect_recv: u64 = (0..n)
+            .filter(|&s| s != r)
+            .map(|s| 8 * (1 + s * n + r) as u64)
+            .sum();
+        assert_eq!(sent_by_r, expect_sent, "rank {} sent", r);
+        assert_eq!(recv_by_r, expect_recv, "rank {} recv", r);
+        // and every individual cell carries the encoded size
+        for d in (0..n).filter(|&d| d != r) {
+            assert_eq!(m.sent[&(r, d)], (1, 8 * (1 + r * n + d) as u64));
+        }
+    }
+}
+
+#[test]
+fn guard_drop_order_builds_nested_paths() {
+    let profiles = World::run(cfg(1), |rank| {
+        let cali = Caliper::attach(rank);
+        {
+            let _a = cali.region("a");
+            rank.advance(1.0);
+            {
+                let _b = cali.comm_region("b");
+                rank.advance(2.0);
+                let _c = cali.region("c");
+                rank.advance(4.0);
+                // _c then _b drop here, innermost first
+            }
+            rank.advance(8.0);
+        }
+        cali.finish(rank)
+    });
+    let p = &profiles[0];
+    assert!((p.regions["a"].time_incl - 15.0).abs() < 1e-12);
+    assert!((p.regions["a/b"].time_incl - 6.0).abs() < 1e-12);
+    assert!((p.regions["a/b/c"].time_incl - 4.0).abs() < 1e-12);
+    assert!(p.regions["a/b"].is_comm_region);
+    assert!(!p.regions["a/b/c"].is_comm_region);
+    assert!(!p.regions.keys().any(|k| k.contains("!unclosed")));
+}
+
+/// Guards must close their regions during a panic unwind, so a profile
+/// survives `catch_unwind` without flagged leaks.
+#[test]
+fn guards_are_panic_safe() {
+    let profiles = World::run(cfg(1), |rank| {
+        let cali = Caliper::attach(rank);
+        for attempt in 0..3 {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _outer = cali.region("attempt");
+                let _comm = cali.comm_region("risky_comm");
+                if attempt < 2 {
+                    panic!("injected failure {}", attempt);
+                }
+            }));
+            assert_eq!(caught.is_err(), attempt < 2);
+        }
+        cali.finish(rank)
+    });
+    let p = &profiles[0];
+    // all three attempts closed cleanly — two via unwinding drops
+    assert_eq!(p.regions["attempt"].visits, 3);
+    assert_eq!(p.regions["attempt/risky_comm"].visits, 3);
+    assert!(!p.regions.keys().any(|k| k.contains("!unclosed")));
+}
+
+#[test]
+fn channel_spec_errors_are_actionable() {
+    // typo with a near-miss suggestion
+    let err = ChannelConfig::parse("comm-stats,com-matrix").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("com-matrix"), "{}", msg);
+    assert!(msg.contains("did you mean 'comm-matrix'"), "{}", msg);
+    assert!(msg.contains("valid channels"), "{}", msg);
+    // totally unknown name still lists the menu
+    let err = ChannelConfig::parse("wharrgarbl").unwrap_err();
+    assert!(err.to_string().contains("region-times"), "{}", err);
+    // attach_with surfaces the same error
+    World::run(cfg(1), |rank| {
+        let err = Caliper::attach_with(rank, "nope").unwrap_err();
+        assert_eq!(err.token, "nope");
+    });
+}
+
+/// A v1-era profile document (no schema key, lossy min/max/avg/total
+/// metrics) still loads, and re-saving it produces a valid v2 document.
+#[test]
+fn v1_profile_migrates_to_v2() {
+    let v1_text = r#"{
+        "meta": {"app": "laghos", "ranks": "4", "system": "dane"},
+        "regions": {
+            "main": {
+                "comm_region": false,
+                "participants": 4,
+                "visits": 4,
+                "time": {"min": 9.0, "max": 11.0, "avg": 10.0, "total": 40.0}
+            },
+            "main/halo_exchange": {
+                "comm_region": true,
+                "participants": 4,
+                "visits": 16,
+                "sends": {"min": 2, "max": 6, "avg": 4, "total": 16},
+                "bytes_sent": {"min": 128, "max": 512, "avg": 256, "total": 1024},
+                "max_send": 512,
+                "min_send": 128
+            }
+        }
+    }"#;
+    let v1 = RunProfile::from_json(&Json::parse(v1_text).unwrap()).unwrap();
+    assert_eq!(v1.meta["app"], "laghos");
+    let halo = &v1.regions["main/halo_exchange"];
+    assert_eq!(halo.sends.min(), 2.0);
+    assert_eq!(halo.sends.max(), 6.0);
+    assert_eq!(halo.sends.avg(), 4.0);
+    assert_eq!(halo.sends.total(), 16.0);
+    assert_eq!(halo.sends.count(), 4);
+    assert!((v1.wall_time() - 11.0).abs() < 1e-12);
+
+    // migrate: write as v2, read back, exact values preserved
+    let v2_text = v1.to_json().to_string_pretty();
+    assert!(v2_text.contains("\"schema\": 2"), "{}", &v2_text[..100]);
+    let v2 = RunProfile::from_json(&Json::parse(&v2_text).unwrap()).unwrap();
+    let halo2 = &v2.regions["main/halo_exchange"];
+    assert_eq!(halo2.sends.min().to_bits(), halo.sends.min().to_bits());
+    assert_eq!(halo2.sends.max().to_bits(), halo.sends.max().to_bits());
+    assert_eq!(halo2.sends.avg().to_bits(), halo.sends.avg().to_bits());
+    assert_eq!(halo2.sends.total().to_bits(), halo.sends.total().to_bits());
+    assert_eq!(halo2.sends.count(), halo.sends.count());
+}
+
+/// End-to-end: a real experiment cell run with every channel produces a
+/// schema-v2 profile that round-trips byte-identically — the disk-cache
+/// contract (`write(parse(write(p))) == write(p)`).
+#[test]
+fn v2_roundtrip_byte_identical_through_cell_runner() {
+    let spec = ExperimentSpec {
+        app: AppKind::Amg2023,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 8,
+    };
+    let opts = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+        channels: ChannelConfig::parse("all").unwrap(),
+    };
+    let run = run_cell(&spec, &opts).unwrap();
+    let all_spec = ChannelConfig::parse("all").unwrap().spec_string();
+    assert_eq!(run.meta["channels"], all_spec);
+    let text1 = run.to_json().to_string_pretty();
+    let reparsed = RunProfile::from_json(&Json::parse(&text1).unwrap()).unwrap();
+    let text2 = reparsed.to_json().to_string_pretty();
+    assert_eq!(text1, text2, "schema-v2 disk round-trip must be byte-identical");
+
+    // the halo region carries its matrix, and it is conserved
+    let halo = run.region("matvec_comm_level_0").unwrap().1;
+    let m = halo.comm_matrix.as_ref().expect("comm-matrix channel on");
+    check_matrix_conservation(m).unwrap();
+    // mpi-time exists and is positive (overlapping posted receives can
+    // legitimately sum past the region's elapsed span, so no upper bound)
+    let mt = halo.mpi_time.as_ref().expect("mpi-time channel on");
+    assert!(mt.max() > 0.0);
+    // msg-hist agrees with the comm-stats extremes
+    let h = halo.msg_hist.as_ref().expect("msg-hist channel on");
+    assert_eq!(h.send.min, halo.min_send);
+    assert_eq!(h.send.max, halo.max_send);
+    assert_eq!(h.send.count as f64, halo.sends.total());
+}
+
+/// The default channel set reproduces the v1 profiler's output exactly —
+/// migration must not change any existing figure input.
+#[test]
+fn default_channels_match_v1_output() {
+    let spec = ExperimentSpec {
+        app: AppKind::Kripke,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 8,
+    };
+    let opts = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+        ..Default::default()
+    };
+    let run = run_cell(&spec, &opts).unwrap();
+    let sweep = run.region("sweep_comm").unwrap().1;
+    assert!(sweep.sends.total() > 0.0);
+    assert!(sweep.comm_matrix.is_none(), "not requested");
+    assert!(sweep.msg_hist.is_none());
+    assert!(sweep.mpi_time.is_none());
+}

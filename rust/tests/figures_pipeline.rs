@@ -20,6 +20,7 @@ fn full_pipeline_small_scale() {
     opts.run = RunOptions {
         iter_shrink: 10,
         size_shrink: 8,
+        ..Default::default()
     };
     opts.max_ranks = Some(16);
     opts.verbose = false;
@@ -73,6 +74,7 @@ fn campaign_cache_reuses_profiles() {
     opts.run = RunOptions {
         iter_shrink: 10,
         size_shrink: 8,
+        ..Default::default()
     };
     opts.app = Some(AppKind::Kripke);
     opts.system = Some(SystemId::Tioga);
@@ -99,6 +101,7 @@ fn deterministic_profiles_on_disk() {
         opts.run = RunOptions {
             iter_shrink: 10,
             size_shrink: 8,
+            ..Default::default()
         };
         opts.app = Some(AppKind::Amg2023);
         opts.system = Some(SystemId::Dane);

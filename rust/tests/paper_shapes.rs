@@ -26,6 +26,7 @@ fn fast() -> RunOptions {
     RunOptions {
         iter_shrink: 5,
         size_shrink: 4,
+        ..Default::default()
     }
 }
 
@@ -48,6 +49,7 @@ fn kripke_sends_per_edge_are_640_at_full_iters() {
     let opts = RunOptions {
         iter_shrink: 1,
         size_shrink: 8,
+        ..Default::default()
     };
     let run = cell(AppKind::Kripke, SystemId::Tioga, 8, &opts);
     let sweep = run.region("sweep_comm").unwrap().1;
@@ -61,6 +63,7 @@ fn amg_level_count_grows_with_scale() {
     let opts = RunOptions {
         iter_shrink: 10,
         size_shrink: 1,
+        ..Default::default()
     };
     let small = cell(AppKind::Amg2023, SystemId::Tioga, 8, &opts);
     let large = cell(AppKind::Amg2023, SystemId::Tioga, 64, &opts);
@@ -74,6 +77,7 @@ fn amg_fine_levels_carry_most_bytes() {
     let opts = RunOptions {
         iter_shrink: 5,
         size_shrink: 1,
+        ..Default::default()
     };
     let run = cell(AppKind::Amg2023, SystemId::Dane, 64, &opts);
     let series = stats::amg_per_level(&run, |r| r.bytes_sent.max());
@@ -90,6 +94,7 @@ fn amg_cpu_coarse_fanin_explodes_gpu_stays_bounded() {
     let opts = RunOptions {
         iter_shrink: 10,
         size_shrink: 1,
+        ..Default::default()
     };
     let dane = cell(AppKind::Amg2023, SystemId::Dane, 64, &opts);
     let tioga = cell(AppKind::Amg2023, SystemId::Tioga, 64, &opts);
@@ -112,6 +117,7 @@ fn laghos_strong_scaling_shapes() {
     let opts = RunOptions {
         iter_shrink: 10,
         size_shrink: 4,
+        ..Default::default()
     };
     let runs: Vec<RunProfile> = [16, 64]
         .into_iter()
@@ -135,6 +141,7 @@ fn dane_bandwidth_declines_tioga_rises_for_kripke() {
     let opts = RunOptions {
         iter_shrink: 5,
         size_shrink: 2,
+        ..Default::default()
     };
     let mk = |system, scales: [usize; 2]| {
         Thicket::new(
@@ -171,6 +178,7 @@ fn kripke_is_bandwidth_king_amg_is_message_heavy() {
     let opts = RunOptions {
         iter_shrink: 1,
         size_shrink: 1,
+        ..Default::default()
     };
     let kripke = cell(AppKind::Kripke, SystemId::Dane, 8, &opts);
     let amg = cell(AppKind::Amg2023, SystemId::Dane, 8, &opts);

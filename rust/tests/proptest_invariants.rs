@@ -54,21 +54,23 @@ fn prop_random_traffic_conserves_and_is_deterministic() {
                 let cali = Caliper::attach(rank);
                 let world = rank.world();
                 let mut local_rng = Rng::new(seed ^ rank.rank as u64);
-                cali.begin(rank, "main");
-                for round in 0..rounds {
-                    cali.comm_region_begin(rank, "ring");
-                    // deterministic ring with randomized payload sizes
-                    let next = (rank.rank + 1) % n;
-                    let prev = (rank.rank + n - 1) % n;
-                    let len = 1 + (local_rng.next_u64() as usize) % msg_elems;
-                    // IMPORTANT: receiver can't know len; it just receives
-                    rank.isend(&vec![0.5f64; len], next, round as i32, &world)
-                        .unwrap();
-                    let _ = rank.recv::<f64>(Some(prev), round as i32, &world).unwrap();
-                    cali.comm_region_end(rank, "ring");
-                    rank.compute(local_rng.range_f64(1e3, 1e6), 1e3);
+                {
+                    let _main = cali.region("main");
+                    for round in 0..rounds {
+                        {
+                            let _ring = cali.comm_region("ring");
+                            // deterministic ring with randomized payload sizes
+                            let next = (rank.rank + 1) % n;
+                            let prev = (rank.rank + n - 1) % n;
+                            let len = 1 + (local_rng.next_u64() as usize) % msg_elems;
+                            // IMPORTANT: receiver can't know len; it just receives
+                            rank.isend(&vec![0.5f64; len], next, round as i32, &world)
+                                .unwrap();
+                            let _ = rank.recv::<f64>(Some(prev), round as i32, &world).unwrap();
+                        }
+                        rank.compute(local_rng.range_f64(1e3, 1e6), 1e3);
+                    }
                 }
-                cali.end(rank, "main");
                 (cali.finish(rank), rank.now())
             });
             profiles
