@@ -1,5 +1,7 @@
-//! Communication analogs of the paper's three benchmark applications.
+//! Communication analogs of the paper's three benchmark applications,
+//! plus the zmodel global-communication mini-app (Beatnik analog).
 pub mod amg;
 pub mod common;
 pub mod kripke;
 pub mod laghos;
+pub mod zmodel;

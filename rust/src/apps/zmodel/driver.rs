@@ -1,0 +1,345 @@
+//! The annotated zmodel application: a Beatnik-style global-communication
+//! mini-app (an interface/vortex-sheet solver) whose timestep is dominated
+//! by *global* patterns — the row/column pencil transposes of a spectral
+//! derivative pass on sub-communicators, a world-wide far-field exchange,
+//! and a CFL reduction — rather than the halo bands of AMG/Kripke/Laghos.
+//!
+//! Region structure:
+//!
+//! ```text
+//! main
+//! ├── comm_setup       [comm]   comm_split → row + column communicators
+//! └── timestep                   (per step)
+//!     ├── deriv_x
+//!     │   └── transpose [comm]   row-comm alltoallv (forward + inverse)
+//!     ├── deriv_y
+//!     │   └── transpose [comm]   col-comm alltoallv (forward + inverse)
+//!     ├── br_exchange   [comm]   world alltoallv of far-field samples
+//!     ├── line_reduce   [comm]   row-comm allreduce (sheet-strength norm)
+//!     └── cfl_reduce    [comm]   world allreduce (dt min + amplitude max)
+//! ```
+
+use super::surface::{SurfaceGrid, SurfaceState};
+use super::transpose::{from_pencils, periodic_row_derivative, to_pencils, transpose_block};
+use crate::apps::common::ComputeBackend;
+use crate::caliper::{Caliper, ChannelConfig, RankProfile};
+use crate::mpisim::collectives::ReduceOp;
+use crate::mpisim::{Comm, MpiError, Rank, World, WorldConfig};
+
+/// Configuration of one zmodel run (weak scaling: `local` fixed per rank).
+#[derive(Clone)]
+pub struct ZmodelConfig {
+    /// Interface points per rank (rows × cols of the local block).
+    pub local: [usize; 2],
+    /// Process grid (pr·pc = world size; row-major rank = i·pc + j).
+    pub pdims: [usize; 2],
+    /// Timesteps.
+    pub steps: usize,
+    /// Far-field samples each rank sends to every peer per step (the
+    /// cutoff Birkhoff-Rott solver analog).
+    pub br_samples: usize,
+    /// Atwood number driving the instability growth.
+    pub atwood: f64,
+    pub backend: ComputeBackend,
+    pub seed: u64,
+    /// Metric channels collected by the run's Caliper contexts (add
+    /// `comm-matrix` to capture the dense rank×rank traffic).
+    pub channels: ChannelConfig,
+}
+
+impl ZmodelConfig {
+    /// The scaling-study configuration: 32×32 points/rank, 12 steps — the
+    /// Beatnik-style weak-scaling cell used for the Dane/Tioga analogs.
+    pub fn paper(pdims: [usize; 2]) -> ZmodelConfig {
+        ZmodelConfig {
+            local: [32, 32],
+            pdims,
+            steps: 12,
+            br_samples: 24,
+            atwood: 0.5,
+            backend: ComputeBackend::Native,
+            seed: 0x5ea5cafe,
+            channels: ChannelConfig::default(),
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.pdims.iter().product()
+    }
+
+    fn global(&self) -> [usize; 2] {
+        [self.local[0] * self.pdims[0], self.local[1] * self.pdims[1]]
+    }
+}
+
+/// Result of one run.
+pub struct ZmodelResult {
+    pub profiles: Vec<RankProfile>,
+    /// Global interface amplitude after every step (rank-0 view) — the
+    /// instability-growth diagnostic.
+    pub amplitudes: Vec<f64>,
+}
+
+/// One spectral-derivative pass over `comm`: transpose to pencils, take
+/// the periodic row derivative at full group width, transpose back.
+/// `data` is `rows × cols` with `cols == widths[comm.rank]`.
+fn derivative_pass(
+    rank: &mut Rank,
+    cali: &Caliper,
+    comm: &Comm,
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    widths: &[usize],
+) -> Result<Vec<f64>, MpiError> {
+    let (pencil, my_rows) = {
+        let _t = cali.comm_region("transpose");
+        to_pencils(rank, comm, data, rows, cols, widths)?
+    };
+    let width: usize = widths.iter().sum();
+    // spectral work: FFT-like cost per full-width line
+    rank.compute(
+        (my_rows * width) as f64 * 5.0 * (width.max(2) as f64).log2(),
+        (my_rows * width) as f64 * 8.0 * 2.0,
+    );
+    let deriv = periodic_row_derivative(&pencil, my_rows, width);
+    let back = {
+        let _t = cali.comm_region("transpose");
+        from_pencils(rank, comm, &deriv, my_rows, rows, widths)?
+    };
+    debug_assert_eq!(back.len(), rows * cols);
+    Ok(back)
+}
+
+/// Run the zmodel analog.
+pub fn run_zmodel(world: WorldConfig, cfg: &ZmodelConfig) -> ZmodelResult {
+    assert_eq!(world.size, cfg.nranks(), "world size vs pdims mismatch");
+    assert!(cfg.steps > 0 && cfg.br_samples > 0);
+    let results = World::run(world, |rank| {
+        let cali = Caliper::attach_cfg(rank, cfg.channels);
+        let comm = rank.world();
+        let nranks = comm.size();
+        let grid = SurfaceGrid::new(cfg.global(), cfg.pdims, rank.rank);
+        let mut state = SurfaceState::new(&grid, cfg.seed);
+        let mut amplitudes = Vec::with_capacity(cfg.steps);
+        let _main = cali.region("main");
+        // Sub-communicators: ranks sharing a row block (color = i) ordered
+        // by column, and ranks sharing a column block (color = j) ordered
+        // by row — the pencil groups of the two derivative passes.
+        let (row_comm, col_comm) = {
+            let _setup = cali.comm_region("comm_setup");
+            let row = rank
+                .comm_split(&comm, grid.coords[0] as u64, grid.coords[1] as u64)
+                .expect("row split");
+            let col = rank
+                .comm_split(&comm, grid.coords[1] as u64, grid.coords[0] as u64)
+                .expect("col split");
+            (row, col)
+        };
+        let row_widths = grid.row_group_widths();
+        let col_heights = grid.col_group_heights();
+        for _step in 0..cfg.steps {
+            let _ts = cali.region("timestep");
+
+            // x-derivative: pencils along the surface rows (row comm).
+            let dzdx = {
+                let _dx = cali.region("deriv_x");
+                derivative_pass(
+                    rank,
+                    &cali,
+                    &row_comm,
+                    &state.z,
+                    grid.rows,
+                    grid.cols,
+                    &row_widths,
+                )
+                .expect("deriv_x")
+            };
+
+            // y-derivative: same machinery on the locally transposed
+            // block, over the column comm, transposed back afterwards.
+            let dzdy = {
+                let _dy = cali.region("deriv_y");
+                let zt = transpose_block(&state.z, grid.rows, grid.cols);
+                let dt_block = derivative_pass(
+                    rank,
+                    &cali,
+                    &col_comm,
+                    &zt,
+                    grid.cols,
+                    grid.rows,
+                    &col_heights,
+                )
+                .expect("deriv_y");
+                transpose_block(&dt_block, grid.cols, grid.rows)
+            };
+
+            // Far-field Birkhoff-Rott exchange: every rank samples its
+            // sheet strength and swaps samples with every other rank.
+            let far = {
+                let _br = cali.comm_region("br_exchange");
+                let stride = (state.w.len() / cfg.br_samples).max(1);
+                let sample: Vec<f64> = state
+                    .w
+                    .iter()
+                    .step_by(stride)
+                    .take(cfg.br_samples)
+                    .copied()
+                    .collect();
+                let parts: Vec<Vec<f64>> = (0..nranks).map(|_| sample.clone()).collect();
+                let received = rank.alltoallv(&parts, &comm).expect("br exchange");
+                // kernel-weighted far-field sum (deterministic order)
+                let mut acc = 0.0;
+                for (src, part) in received.iter().enumerate() {
+                    let w = 1.0 / (1.0 + (src as f64 - rank.rank as f64).abs());
+                    acc += w * part.iter().sum::<f64>();
+                }
+                acc / nranks as f64
+            };
+            rank.compute(
+                (cfg.br_samples * nranks) as f64 * 6.0,
+                (cfg.br_samples * nranks) as f64 * 8.0,
+            );
+
+            // Sheet-strength norm along the row group: a *sub-communicator*
+            // collective, priced by the row group's own node span.
+            let _line_norm = {
+                let _lr = cali.comm_region("line_reduce");
+                rank.allreduce_f64(&[state.local_max_w()], ReduceOp::Max, &row_comm)
+                    .expect("line reduce")[0]
+            };
+
+            // CFL step control + amplitude diagnostic on the world.
+            let local_dt = 0.25 / (state.local_max_w() + 1.0);
+            let (dt, amp) = {
+                let _cfl = cali.comm_region("cfl_reduce");
+                let mn = rank
+                    .allreduce_f64(&[local_dt], ReduceOp::Min, &comm)
+                    .expect("cfl min")[0];
+                let mx = rank
+                    .allreduce_f64(&[state.local_amplitude()], ReduceOp::Max, &comm)
+                    .expect("amp max")[0];
+                (mn, mx)
+            };
+            state.update(&dzdx, &dzdy, far, cfg.atwood, dt);
+            rank.compute(grid.points() as f64 * 8.0, grid.points() as f64 * 8.0 * 4.0);
+            amplitudes.push(amp);
+        }
+        drop(_main);
+        (cali.finish(rank), amplitudes)
+    });
+
+    let mut profiles = Vec::with_capacity(results.len());
+    let mut amplitudes = Vec::new();
+    for (i, (p, a)) in results.into_iter().enumerate() {
+        profiles.push(p);
+        if i == 0 {
+            amplitudes = a;
+        }
+    }
+    ZmodelResult {
+        profiles,
+        amplitudes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caliper::aggregate::{aggregate, check_conservation, check_matrix_conservation};
+    use crate::mpisim::MachineModel;
+    use std::collections::BTreeMap;
+
+    fn tiny() -> ZmodelConfig {
+        ZmodelConfig {
+            local: [6, 5],
+            pdims: [2, 3],
+            steps: 3,
+            br_samples: 4,
+            atwood: 0.5,
+            backend: ComputeBackend::Native,
+            seed: 99,
+            channels: ChannelConfig::default(),
+        }
+    }
+
+    #[test]
+    fn runs_and_conserves() {
+        let res = run_zmodel(WorldConfig::new(6, MachineModel::test_machine()), &tiny());
+        check_conservation(&res.profiles).unwrap();
+        assert_eq!(res.amplitudes.len(), 3);
+        assert!(res.amplitudes.iter().all(|a| a.is_finite() && *a > 0.0));
+    }
+
+    #[test]
+    fn region_structure_is_global_not_halo() {
+        let res = run_zmodel(WorldConfig::new(6, MachineModel::test_machine()), &tiny());
+        let run = aggregate(BTreeMap::new(), &res.profiles);
+        for name in [
+            "main",
+            "timestep",
+            "deriv_x",
+            "deriv_y",
+            "transpose",
+            "br_exchange",
+            "line_reduce",
+            "cfl_reduce",
+            "comm_setup",
+        ] {
+            assert!(run.region(name).is_some(), "missing region {}", name);
+        }
+        let br = run.region("br_exchange").unwrap().1;
+        assert!(br.is_comm_region);
+        // every rank messages every other rank, every step
+        assert_eq!(br.sends.total(), (6 * 5 * 3) as f64);
+        assert_eq!(br.dest_ranks.min(), 5.0, "global pattern: all peers");
+        let t = run.region("transpose").unwrap().1;
+        assert!(t.is_comm_region);
+        assert!(t.sends.total() > 0.0);
+    }
+
+    #[test]
+    fn comm_matrix_is_dense_and_conserved() {
+        let cfg = ZmodelConfig {
+            channels: ChannelConfig::parse("comm-stats,comm-matrix").unwrap(),
+            ..tiny()
+        };
+        let res = run_zmodel(WorldConfig::new(6, MachineModel::test_machine()), &cfg);
+        let run = aggregate(BTreeMap::new(), &res.profiles);
+        let br = run.region("br_exchange").unwrap().1;
+        let m = br.comm_matrix.as_ref().expect("comm-matrix channel on");
+        check_matrix_conservation(m).unwrap();
+        // fully dense: all n·(n-1) off-diagonal cells carry traffic
+        assert_eq!(m.sent.len(), 6 * 5);
+        assert!(m.sent.values().all(|(msgs, bytes)| *msgs > 0 && *bytes > 0));
+    }
+
+    #[test]
+    fn weak_scaling_grows_total_traffic() {
+        let bytes = |pdims: [usize; 2]| {
+            let cfg = ZmodelConfig { pdims, ..tiny() };
+            let res = run_zmodel(
+                WorldConfig::new(cfg.nranks(), MachineModel::test_machine()),
+                &cfg,
+            );
+            let run = aggregate(BTreeMap::new(), &res.profiles);
+            run.comm_totals().0
+        };
+        // the BR exchange is quadratic in ranks: doubling ranks must far
+        // more than double total bytes
+        assert!(bytes([2, 6]) > 2.0 * bytes([2, 3]));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let res = run_zmodel(WorldConfig::new(6, MachineModel::test_machine()), &tiny());
+            res.amplitudes
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

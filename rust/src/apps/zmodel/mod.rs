@@ -1,0 +1,14 @@
+//! zmodel — a Beatnik-style **global-communication** mini-app (Stewart &
+//! Bridges, 2024): an interface/vortex-sheet solver whose timestep is a
+//! row/column pencil transpose over sub-communicators (`comm_split` +
+//! `alltoallv`), a world-wide far-field exchange, and a CFL reduction.
+//! Where the paper's three apps produce banded halo heatmaps, zmodel's
+//! rank×rank matrix is dense — the pattern class halo-dominated suites
+//! miss, and the workload that makes the sub-communicator cost model
+//! load-bearing.
+
+pub mod driver;
+pub mod surface;
+pub mod transpose;
+
+pub use driver::{run_zmodel, ZmodelConfig, ZmodelResult};

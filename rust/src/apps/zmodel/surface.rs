@@ -1,0 +1,180 @@
+//! Interface-surface state for the zmodel global-communication mini-app: a
+//! 2D block decomposition of the global `nx × ny` interface over a
+//! `pr × pc` process grid, plus the deterministic per-rank physics that
+//! stands in for the Z-Model's rollup dynamics.
+
+use crate::util::rng::Rng;
+
+/// Split `n` points into `parts` contiguous blocks; the first `n % parts`
+/// blocks get one extra point. Non-divisible splits are deliberate — they
+/// are what makes the transpose's alltoallv counts genuinely variable.
+pub fn block_sizes(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0, "block_sizes over zero parts");
+    let base = n / parts;
+    let rem = n % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// A rank's placement on the `pr × pc` process grid (row-major: rank =
+/// `i * pc + j`) and its block of the global interface mesh.
+#[derive(Debug, Clone)]
+pub struct SurfaceGrid {
+    pub global: [usize; 2],
+    pub pdims: [usize; 2],
+    /// (row-group index i, column-group index j).
+    pub coords: [usize; 2],
+    /// Local block extent: rows × cols of interface points.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl SurfaceGrid {
+    pub fn new(global: [usize; 2], pdims: [usize; 2], rank: usize) -> SurfaceGrid {
+        assert!(rank < pdims[0] * pdims[1], "rank outside process grid");
+        let i = rank / pdims[1];
+        let j = rank % pdims[1];
+        SurfaceGrid {
+            global,
+            pdims,
+            coords: [i, j],
+            rows: block_sizes(global[0], pdims[0])[i],
+            cols: block_sizes(global[1], pdims[1])[j],
+        }
+    }
+
+    pub fn points(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Column widths of this rank's row group (one entry per row-comm
+    /// member, in communicator-rank order).
+    pub fn row_group_widths(&self) -> Vec<usize> {
+        block_sizes(self.global[1], self.pdims[1])
+    }
+
+    /// Row heights of this rank's column group (one entry per col-comm
+    /// member, in communicator-rank order).
+    pub fn col_group_heights(&self) -> Vec<usize> {
+        block_sizes(self.global[0], self.pdims[0])
+    }
+}
+
+/// Per-rank interface state: surface height `z` and vortex-sheet strength
+/// `w`, both `rows × cols` row-major.
+#[derive(Debug, Clone)]
+pub struct SurfaceState {
+    pub z: Vec<f64>,
+    pub w: Vec<f64>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl SurfaceState {
+    /// Deterministic initial interface: a single-mode perturbation (the
+    /// classic RT/RM rollup seed) plus seeded small-amplitude noise.
+    pub fn new(grid: &SurfaceGrid, seed: u64) -> SurfaceState {
+        let mut rng = Rng::new(seed ^ ((grid.coords[0] as u64) << 32) ^ grid.coords[1] as u64);
+        let n = grid.points();
+        let mut z = Vec::with_capacity(n);
+        let row0: usize = block_sizes(grid.global[0], grid.pdims[0])[..grid.coords[0]]
+            .iter()
+            .sum();
+        let col0: usize = block_sizes(grid.global[1], grid.pdims[1])[..grid.coords[1]]
+            .iter()
+            .sum();
+        for r in 0..grid.rows {
+            let gy = (row0 + r) as f64 / grid.global[0] as f64;
+            for c in 0..grid.cols {
+                let gx = (col0 + c) as f64 / grid.global[1] as f64;
+                let mode = (std::f64::consts::TAU * gx).sin() * (std::f64::consts::TAU * gy).cos();
+                z.push(0.1 * mode + 1e-3 * rng.range_f64(-1.0, 1.0));
+            }
+        }
+        let w = (0..n).map(|_| rng.range_f64(-0.01, 0.01)).collect();
+        SurfaceState {
+            z,
+            w,
+            rows: grid.rows,
+            cols: grid.cols,
+        }
+    }
+
+    /// Largest |z| in the local block — the interface amplitude a rank
+    /// contributes to the global growth diagnostic.
+    pub fn local_amplitude(&self) -> f64 {
+        self.z.iter().fold(0.0, |a, v| a.max(v.abs()))
+    }
+
+    /// Largest |w| — the CFL-limiting sheet strength.
+    pub fn local_max_w(&self) -> f64 {
+        self.w.iter().fold(0.0, |a, v| a.max(v.abs()))
+    }
+
+    /// Advance the interface with the derivative fields and the far-field
+    /// Birkhoff-Rott contribution: forward-Euler in virtual time, bounded
+    /// so long runs stay finite.
+    pub fn update(&mut self, dzdx: &[f64], dzdy: &[f64], far: f64, atwood: f64, dt: f64) {
+        assert_eq!(dzdx.len(), self.z.len());
+        assert_eq!(dzdy.len(), self.z.len());
+        for k in 0..self.z.len() {
+            let slope = dzdx[k] + dzdy[k];
+            self.w[k] = (self.w[k] + dt * atwood * (slope + 0.1 * far)).clamp(-10.0, 10.0);
+            self.z[k] = (self.z[k] + dt * self.w[k]).clamp(-10.0, 10.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_sizes_cover_exactly() {
+        for (n, p) in [(10, 3), (16, 4), (7, 7), (5, 8), (448, 14)] {
+            let s = block_sizes(n, p);
+            assert_eq!(s.len(), p);
+            assert_eq!(s.iter().sum::<usize>(), n, "n={} p={}", n, p);
+            // contiguous blocks differ by at most one point
+            let (mn, mx) = (s.iter().min().unwrap(), s.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn grid_tiles_the_surface() {
+        let global = [13, 10];
+        let pdims = [3, 4];
+        let mut total = 0;
+        for rank in 0..12 {
+            let g = SurfaceGrid::new(global, pdims, rank);
+            assert_eq!(g.coords, [rank / 4, rank % 4]);
+            total += g.points();
+        }
+        assert_eq!(total, 130);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_rank_distinct() {
+        let g0 = SurfaceGrid::new([16, 16], [2, 2], 0);
+        let g1 = SurfaceGrid::new([16, 16], [2, 2], 1);
+        let a = SurfaceState::new(&g0, 42);
+        let b = SurfaceState::new(&g0, 42);
+        let c = SurfaceState::new(&g1, 42);
+        assert_eq!(a.z, b.z);
+        assert_ne!(a.z, c.z, "different coords must seed different noise");
+        assert!(a.local_amplitude() > 0.0 && a.local_amplitude() < 1.0);
+    }
+
+    #[test]
+    fn update_stays_bounded() {
+        let g = SurfaceGrid::new([8, 8], [1, 1], 0);
+        let mut s = SurfaceState::new(&g, 7);
+        let d = vec![0.5; s.z.len()];
+        for _ in 0..1000 {
+            s.update(&d, &d, 1.0, 0.5, 0.1);
+        }
+        assert!(s.local_amplitude() <= 10.0);
+        assert!(s.local_max_w() <= 10.0);
+        assert!(s.z.iter().all(|v| v.is_finite()));
+    }
+}

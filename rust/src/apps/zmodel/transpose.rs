@@ -1,0 +1,185 @@
+//! The zmodel transpose: pencil redistribution of a block-decomposed
+//! surface over a sub-communicator, built on [`Rank::alltoallv`].
+//!
+//! Members of a row communicator jointly hold `rows × Σwidths` points
+//! (identical `rows`, per-member column widths). [`to_pencils`] moves the
+//! group to the transposed distribution — each member owns a contiguous
+//! share of the rows at **full** group width — and [`from_pencils`] is its
+//! exact inverse. Widths and row shares need not divide evenly, so the
+//! per-peer alltoallv counts are genuinely variable.
+
+use super::surface::block_sizes;
+use crate::mpisim::{Comm, MpiError, Rank};
+
+/// Split a row-major `rows × cols` block into `parts` slabs of consecutive
+/// rows (variable heights when `parts` does not divide `rows`).
+pub fn pack_row_slabs(data: &[f64], rows: usize, cols: usize, parts: usize) -> Vec<Vec<f64>> {
+    assert_eq!(data.len(), rows * cols);
+    let mut out = Vec::with_capacity(parts);
+    let mut r0 = 0;
+    for h in block_sizes(rows, parts) {
+        out.push(data[r0 * cols..(r0 + h) * cols].to_vec());
+        r0 += h;
+    }
+    out
+}
+
+/// Inverse of [`pack_row_slabs`]: stack slabs (slab `k` is
+/// `heights[k] × cols`) back into one block.
+pub fn unpack_row_blocks(slabs: &[Vec<f64>], heights: &[usize], cols: usize) -> Vec<f64> {
+    assert_eq!(slabs.len(), heights.len());
+    let mut out = Vec::with_capacity(heights.iter().sum::<usize>() * cols);
+    for (slab, h) in slabs.iter().zip(heights) {
+        assert_eq!(slab.len(), h * cols, "slab height mismatch");
+        out.extend_from_slice(slab);
+    }
+    out
+}
+
+/// Split a row-major `rows × Σwidths` block into per-member column slabs
+/// (slab `k` is `rows × widths[k]`, row-major).
+pub fn pack_col_slabs(data: &[f64], rows: usize, widths: &[usize]) -> Vec<Vec<f64>> {
+    let total: usize = widths.iter().sum();
+    assert_eq!(data.len(), rows * total);
+    let mut out: Vec<Vec<f64>> = widths.iter().map(|w| Vec::with_capacity(rows * w)).collect();
+    for r in 0..rows {
+        let mut c0 = 0;
+        for (k, &w) in widths.iter().enumerate() {
+            out[k].extend_from_slice(&data[r * total + c0..r * total + c0 + w]);
+            c0 += w;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_col_slabs`]: concatenate per-source column slabs
+/// (slab `k` is `rows × widths[k]`) side by side into `rows × Σwidths`.
+pub fn unpack_col_blocks(slabs: &[Vec<f64>], rows: usize, widths: &[usize]) -> Vec<f64> {
+    assert_eq!(slabs.len(), widths.len());
+    let total: usize = widths.iter().sum();
+    let mut out = Vec::with_capacity(rows * total);
+    for r in 0..rows {
+        for (slab, &w) in slabs.iter().zip(widths) {
+            assert_eq!(slab.len(), rows * w, "slab width mismatch");
+            out.extend_from_slice(&slab[r * w..(r + 1) * w]);
+        }
+    }
+    out
+}
+
+/// Local out-of-place transpose of a row-major `rows × cols` block.
+pub fn transpose_block(data: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(data.len(), rows * cols);
+    let mut out = vec![0.0; data.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = data[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Forward pencil redistribution within `comm`: from this member's
+/// `rows × cols` block (every member shares `rows`; member `k` holds
+/// `widths[k]` columns) to `(pencil, my_rows)` where the pencil is
+/// `my_rows × Σwidths` — this member's contiguous row share at full group
+/// width. One alltoallv.
+pub fn to_pencils(
+    rank: &mut Rank,
+    comm: &Comm,
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    widths: &[usize],
+) -> Result<(Vec<f64>, usize), MpiError> {
+    assert_eq!(widths.len(), comm.size());
+    assert_eq!(widths[comm.rank], cols, "my width disagrees with the plan");
+    let parts = pack_row_slabs(data, rows, cols, comm.size());
+    let received = rank.alltoallv(&parts, comm)?;
+    let my_rows = block_sizes(rows, comm.size())[comm.rank];
+    Ok((unpack_col_blocks(&received, my_rows, widths), my_rows))
+}
+
+/// Exact inverse of [`to_pencils`]: redistribute the `my_rows × Σwidths`
+/// pencil back to this member's original `rows × widths[comm.rank]` block.
+pub fn from_pencils(
+    rank: &mut Rank,
+    comm: &Comm,
+    pencil: &[f64],
+    my_rows: usize,
+    rows: usize,
+    widths: &[usize],
+) -> Result<Vec<f64>, MpiError> {
+    assert_eq!(widths.len(), comm.size());
+    let parts = pack_col_slabs(pencil, my_rows, widths);
+    let received = rank.alltoallv(&parts, comm)?;
+    let heights = block_sizes(rows, comm.size());
+    Ok(unpack_row_blocks(&received, &heights, widths[comm.rank]))
+}
+
+/// Periodic centered difference along each full-width row of a pencil —
+/// the spectral-derivative stand-in that motivates gathering whole rows.
+pub fn periodic_row_derivative(pencil: &[f64], rows: usize, width: usize) -> Vec<f64> {
+    assert_eq!(pencil.len(), rows * width);
+    let mut out = vec![0.0; pencil.len()];
+    if width < 2 {
+        return out;
+    }
+    for r in 0..rows {
+        let row = &pencil[r * width..(r + 1) * width];
+        for c in 0..width {
+            let prev = row[(c + width - 1) % width];
+            let next = row[(c + 1) % width];
+            out[r * width + c] = 0.5 * (next - prev) * width as f64;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_slab_pack_unpack_roundtrip() {
+        let rows = 5;
+        let cols = 3;
+        let data: Vec<f64> = (0..rows * cols).map(|v| v as f64).collect();
+        for parts in 1..=6 {
+            let slabs = pack_row_slabs(&data, rows, cols, parts);
+            let heights = block_sizes(rows, parts);
+            assert_eq!(unpack_row_blocks(&slabs, &heights, cols), data);
+        }
+    }
+
+    #[test]
+    fn col_slab_pack_unpack_roundtrip() {
+        let rows = 4;
+        let widths = [3usize, 1, 2];
+        let total: usize = widths.iter().sum();
+        let data: Vec<f64> = (0..rows * total).map(|v| v as f64 * 0.5).collect();
+        let slabs = pack_col_slabs(&data, rows, &widths);
+        assert_eq!(slabs[0].len(), rows * 3);
+        assert_eq!(slabs[1], vec![3.0 * 0.5, 9.0 * 0.5, 15.0 * 0.5, 21.0 * 0.5]);
+        assert_eq!(unpack_col_blocks(&slabs, rows, &widths), data);
+    }
+
+    #[test]
+    fn transpose_block_is_involutive() {
+        let data: Vec<f64> = (0..12).map(|v| v as f64).collect();
+        let t = transpose_block(&data, 3, 4);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // (row 1, col 0) lands at (0, 1)
+        assert_eq!(transpose_block(&t, 4, 3), data);
+    }
+
+    #[test]
+    fn periodic_derivative_of_constant_is_zero() {
+        let d = periodic_row_derivative(&[2.0; 12], 3, 4);
+        assert!(d.iter().all(|v| v.abs() < 1e-12));
+        // linear ramp wraps: interior entries see slope 1·width
+        let ramp: Vec<f64> = (0..8).map(|v| v as f64).collect();
+        let d = periodic_row_derivative(&ramp, 1, 8);
+        assert!((d[3] - 8.0).abs() < 1e-12);
+    }
+}

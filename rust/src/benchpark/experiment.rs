@@ -3,12 +3,15 @@
 use super::system::SystemId;
 use crate::mpisim::cart::CartComm;
 
-/// Which benchmark.
+/// Which benchmark. The paper's three apps plus `zmodel`, the
+/// global-communication extension cell (Beatnik analog — not in the
+/// paper's Table III, carried by [`zmodel_matrix`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AppKind {
     Amg2023,
     Kripke,
     Laghos,
+    Zmodel,
 }
 
 impl AppKind {
@@ -17,6 +20,7 @@ impl AppKind {
             AppKind::Amg2023 => "amg2023",
             AppKind::Kripke => "kripke",
             AppKind::Laghos => "laghos",
+            AppKind::Zmodel => "zmodel",
         }
     }
 
@@ -25,6 +29,7 @@ impl AppKind {
             "amg2023" | "amg" => Some(AppKind::Amg2023),
             "kripke" => Some(AppKind::Kripke),
             "laghos" => Some(AppKind::Laghos),
+            "zmodel" | "beatnik" => Some(AppKind::Zmodel),
             _ => None,
         }
     }
@@ -78,7 +83,8 @@ impl ExperimentSpec {
     }
 }
 
-/// The paper's per-system process counts (Table III).
+/// The paper's per-system process counts (Table III). `zmodel` — not in
+/// the paper — weak-scales on the same ladders as the grid apps.
 pub fn paper_scales(app: AppKind, system: SystemId) -> Vec<usize> {
     match (app, system) {
         (AppKind::Laghos, SystemId::Dane) => vec![112, 224, 448, 896],
@@ -88,10 +94,9 @@ pub fn paper_scales(app: AppKind, system: SystemId) -> Vec<usize> {
     }
 }
 
-/// All experiment cells of Table III.
-pub fn paper_matrix() -> Vec<ExperimentSpec> {
+fn app_cells(apps: &[AppKind]) -> Vec<ExperimentSpec> {
     let mut out = Vec::new();
-    for app in [AppKind::Amg2023, AppKind::Kripke, AppKind::Laghos] {
+    for &app in apps {
         for system in [SystemId::Dane, SystemId::Tioga] {
             let scaling = if app == AppKind::Laghos {
                 Scaling::Strong
@@ -111,19 +116,43 @@ pub fn paper_matrix() -> Vec<ExperimentSpec> {
     out
 }
 
+/// The paper's experiment cells (Table III exactly — 20 cells).
+pub fn paper_matrix() -> Vec<ExperimentSpec> {
+    app_cells(&[AppKind::Amg2023, AppKind::Kripke, AppKind::Laghos])
+}
+
+/// The zmodel global-communication extension cells (both systems, weak
+/// scaling on the grid-app ladders).
+pub fn zmodel_matrix() -> Vec<ExperimentSpec> {
+    app_cells(&[AppKind::Zmodel])
+}
+
+/// Everything the campaign runs: the paper's matrix plus the zmodel
+/// extension cells.
+pub fn full_matrix() -> Vec<ExperimentSpec> {
+    let mut out = paper_matrix();
+    out.extend(zmodel_matrix());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn matrix_has_20_cells() {
-        // 2 apps × 2 systems × 4 scales + laghos × 1 system × 4 = 20.
+    fn paper_matrix_has_20_cells_full_28() {
+        // Paper: 2 apps × 2 systems × 4 scales + laghos × 1 system × 4 = 20.
         assert_eq!(paper_matrix().len(), 20);
+        // zmodel extension: 2 systems × 4 scales.
+        assert_eq!(zmodel_matrix().len(), 8);
+        assert_eq!(full_matrix().len(), 28);
+        assert!(paper_matrix().iter().all(|s| s.app != AppKind::Zmodel));
+        assert!(zmodel_matrix().iter().all(|s| s.app == AppKind::Zmodel));
     }
 
     #[test]
     fn ids_unique() {
-        let m = paper_matrix();
+        let m = full_matrix();
         let mut ids: Vec<String> = m.iter().map(|s| s.id()).collect();
         ids.sort();
         ids.dedup();
@@ -132,7 +161,7 @@ mod tests {
 
     #[test]
     fn laghos_is_strong_everything_else_weak() {
-        for s in paper_matrix() {
+        for s in full_matrix() {
             if s.app == AppKind::Laghos {
                 assert_eq!(s.scaling, Scaling::Strong);
                 assert_eq!(s.system, SystemId::Dane);

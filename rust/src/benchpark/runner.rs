@@ -3,12 +3,13 @@
 
 use anyhow::{bail, Result};
 
-use super::experiment::{paper_matrix, AppKind, ExperimentSpec};
+use super::experiment::{full_matrix, AppKind, ExperimentSpec};
 use super::modifier::{default_variant, run_metadata};
 use super::system::SystemId;
 use crate::apps::amg::{run_amg, AmgConfig, CoarseStrategy};
 use crate::apps::kripke::{run_kripke, KripkeConfig};
 use crate::apps::laghos::{run_laghos, LaghosConfig};
+use crate::apps::zmodel::{run_zmodel, ZmodelConfig};
 use crate::caliper::aggregate::{aggregate, check_conservation};
 use crate::caliper::{ChannelConfig, RunProfile};
 use crate::mpisim::WorldConfig;
@@ -153,6 +154,28 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
             ];
             (res.profiles, extra)
         }
+        AppKind::Zmodel => {
+            let mut cfg = ZmodelConfig::paper(spec.pdims2());
+            // weak scaling: shrink the per-rank block (pencil shares may
+            // go empty for some members at extreme shrink — handled)
+            cfg.local = [
+                (cfg.local[0] / opts.size_shrink).max(4),
+                (cfg.local[1] / opts.size_shrink).max(4),
+            ];
+            cfg.steps = (cfg.steps / opts.iter_shrink).max(2);
+            cfg.br_samples = (cfg.br_samples / opts.size_shrink).max(2);
+            cfg.channels = opts.channels;
+            let res = run_zmodel(world, &cfg);
+            let extra = vec![
+                ("pdims", format!("{}x{}", cfg.pdims[0], cfg.pdims[1])),
+                ("local", format!("{}x{}", cfg.local[0], cfg.local[1])),
+                (
+                    "final_amplitude",
+                    format!("{:.6e}", res.amplitudes.last().copied().unwrap_or(0.0)),
+                ),
+            ];
+            (res.profiles, extra)
+        }
     };
 
     check_conservation(&profiles).map_err(|e| anyhow::anyhow!("self-check failed: {}", e))?;
@@ -171,9 +194,10 @@ fn fmt3(d: [usize; 3]) -> String {
     format!("{}x{}x{}", d[0], d[1], d[2])
 }
 
-/// The full Table III matrix.
+/// Every cell the campaign runs: the paper's Table III matrix plus the
+/// zmodel global-communication extension cells.
 pub fn table3_matrix() -> Vec<ExperimentSpec> {
-    paper_matrix()
+    full_matrix()
 }
 
 #[cfg(test)]
@@ -192,6 +216,7 @@ mod tests {
             (AppKind::Amg2023, SystemId::Tioga, 8),
             (AppKind::Kripke, SystemId::Tioga, 8),
             (AppKind::Laghos, SystemId::Dane, 4),
+            (AppKind::Zmodel, SystemId::Tioga, 8),
         ] {
             let spec = ExperimentSpec {
                 app,

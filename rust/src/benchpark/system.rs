@@ -172,6 +172,31 @@ mod tests {
     }
 
     #[test]
+    fn subcommunicator_collectives_priced_by_their_own_span() {
+        // The zmodel pencil groups: on both calibrated machines, a
+        // node-local sub-communicator's collective must cost intra-node
+        // α/β — strictly under the same-size group spread across nodes,
+        // which additionally pays NIC sharing + fabric contention.
+        use crate::mpisim::netmodel::CollClass;
+        for m in [dane(), tioga()] {
+            let rpn = m.ranks_per_node;
+            let local: Vec<usize> = (0..rpn.min(8)).collect();
+            let spread: Vec<usize> = (0..rpn.min(8)).map(|i| i * rpn).collect();
+            let t_local =
+                m.collective_time_span(CollClass::Alltoall, 1 << 16, &m.group_span(&local));
+            let t_spread =
+                m.collective_time_span(CollClass::Alltoall, 1 << 16, &m.group_span(&spread));
+            assert!(
+                t_local < t_spread,
+                "{}: node-local {} vs spread {}",
+                m.name,
+                t_local,
+                t_spread
+            );
+        }
+    }
+
+    #[test]
     fn table2_rows_present() {
         assert_eq!(SystemId::Dane.table2_row()[1].1, "112");
         assert_eq!(SystemId::Tioga.table2_row()[4].1, "8");

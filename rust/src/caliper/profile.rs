@@ -431,21 +431,25 @@ impl AggMetric {
     /// Fallback reader for the v1 on-disk layout (`min`/`max`/`avg`/
     /// `total` scalars). The distribution shape (variance, exact count)
     /// was never stored in v1; the four scalars are restored exactly and
-    /// the count is inferred as `round(total/avg)`.
+    /// the count is inferred as `round(total/avg)` where that quotient is
+    /// usable. A zero (or non-finite) mean must not divide — a metric can
+    /// legitimately sum to zero — so those cases restore the scalars
+    /// verbatim under the smallest count consistent with them (2 when
+    /// `min != max`, else 1) instead of clobbering min/max.
     fn from_v1_json(j: &Json) -> AggMetric {
         let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
         let (min, max, avg, total) = (g("min"), g("max"), g("avg"), g("total"));
-        let n = if avg.abs() > 1e-300 {
-            (total / avg).round().max(1.0) as u64
+        let quotient = total / avg;
+        let n = if avg != 0.0 && quotient.is_finite() {
+            (quotient.round().max(1.0)).min(u64::MAX as f64) as u64
+        } else if min != max {
+            2
         } else {
             1
         };
-        let stats = if n == 1 {
-            OnlineStats::from_raw_parts(1, total, total, total, total, 0.0)
-        } else {
-            OnlineStats::from_raw_parts(n, min, max, total, avg, 0.0)
-        };
-        AggMetric { stats }
+        AggMetric {
+            stats: OnlineStats::from_raw_parts(n, min, max, total, avg, 0.0),
+        }
     }
 }
 
@@ -946,6 +950,47 @@ mod tests {
         assert_eq!(r.sends.total(), 40.0);
         assert_eq!(r.max_send, 4096);
         assert!(r.comm_matrix.is_none());
+    }
+
+    #[test]
+    fn v1_zero_mean_metric_does_not_divide_by_zero() {
+        // A signed metric can legitimately sum to zero (avg == 0). The v1
+        // count reconstruction `round(total/avg)` must not divide: the
+        // scalars come back verbatim, with the smallest consistent count.
+        let v1 = r#"{
+            "meta": {"app": "zmodel"},
+            "regions": {
+                "main/skew": {
+                    "comm_region": false,
+                    "participants": 4,
+                    "visits": 4,
+                    "time": {"min": -2.5, "max": 2.5, "avg": 0.0, "total": 0.0}
+                },
+                "main/flat": {
+                    "comm_region": false,
+                    "participants": 1,
+                    "visits": 1,
+                    "time": {"min": 0.0, "max": 0.0, "avg": 0.0, "total": 0.0}
+                }
+            }
+        }"#;
+        let rp = RunProfile::from_json(&Json::parse(v1).unwrap()).unwrap();
+        let skew = &rp.regions["main/skew"].time;
+        assert_eq!(skew.min(), -2.5, "stored min must survive a zero mean");
+        assert_eq!(skew.max(), 2.5);
+        assert_eq!(skew.total(), 0.0);
+        assert_eq!(skew.avg(), 0.0);
+        assert_eq!(skew.count(), 2, "min != max needs at least two samples");
+        let flat = &rp.regions["main/flat"].time;
+        assert_eq!(flat.count(), 1);
+        assert_eq!(flat.total(), 0.0);
+        // migrating the document to v2 keeps the restored values
+        let v2 = RunProfile::from_json(&Json::parse(&rp.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        let skew2 = &v2.regions["main/skew"].time;
+        assert_eq!(skew2.min().to_bits(), skew.min().to_bits());
+        assert_eq!(skew2.max().to_bits(), skew.max().to_bits());
+        assert_eq!(skew2.count(), 2);
     }
 
     #[test]

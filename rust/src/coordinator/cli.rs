@@ -7,7 +7,7 @@
 //!                                           (N worker threads; default 1)
 //! repro table1|table2|table3                print static tables
 //! repro table4  [--out results]             print Table IV from profiles
-//! repro fig1..fig6 [--out results]          render figures (+CSV)
+//! repro fig1..fig7 [--out results]          render figures (+CSV)
 //! repro heatmap [--out results]             comm-matrix heatmaps (+CSV)
 //! repro run --app kripke --system dane --ranks 64 [--smoke]
 //!           [--channels SPEC]               run one cell, print reports
@@ -38,7 +38,7 @@ USAGE:
                  [--channels SPEC]
   repro table1 | table2 | table3
   repro table4 [--out results]
-  repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6  [--out results]
+  repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6 | fig7  [--out results]
   repro heatmap [--out results]
   repro run --app APP --system SYS --ranks N [--smoke] [--channels SPEC]
   repro report --profile FILE.json
@@ -54,8 +54,9 @@ region-times, comm-stats, comm-matrix, msg-hist, coll-breakdown, mpi-time,
 or `all` (default: region-times,comm-stats). Profiles are stamped with
 their channel spec, so changing --channels reruns stale cells. Example:
   repro campaign --channels comm-stats,comm-matrix
-then `repro heatmap` renders rank×rank traffic heatmaps.
-APP ∈ {amg2023, kripke, laghos}; SYS ∈ {dane, tioga}.";
+then `repro heatmap` renders rank×rank traffic heatmaps and `repro fig7`
+contrasts zmodel's dense global pattern against AMG's banded halo.
+APP ∈ {amg2023, kripke, laghos, zmodel}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
 pub fn dispatch(args: &Args) -> i32 {
@@ -146,7 +147,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::table4(&t));
             Ok(())
         }
-        Some(fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "heatmap")) => {
+        Some(fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "fig7" | "heatmap")) => {
             let t = need_profiles(&out_dir)?;
             let dir = Path::new(&out_dir);
             let text = match fig {
@@ -156,6 +157,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
                 "fig4" => figures::fig4(&t, Some(dir))?,
                 "fig5" => figures::fig5(&t, Some(dir))?,
                 "fig6" => figures::fig6(&t, Some(dir))?,
+                "fig7" => figures::fig7(&t, Some(dir))?,
                 _ => figures::comm_heatmap(&t, Some(dir))?,
             };
             println!("{}", text);
@@ -163,7 +165,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
         }
         Some("run") => {
             let app = AppKind::parse(args.get("app").unwrap_or(""))
-                .ok_or_else(|| anyhow::anyhow!("--app required (amg2023|kripke|laghos)"))?;
+                .ok_or_else(|| anyhow::anyhow!("--app required (amg2023|kripke|laghos|zmodel)"))?;
             let system = SystemId::parse(args.get("system").unwrap_or("dane"))
                 .ok_or_else(|| anyhow::anyhow!("bad --system"))?;
             let nranks = args.get_usize("ranks", 8);

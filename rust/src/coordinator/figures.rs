@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::benchpark::system::SystemId;
 use crate::benchpark::table3_matrix;
-use crate::caliper::attr;
+use crate::caliper::{attr, RunProfile};
 use crate::thicket::export::{write_matrix_csv, write_series_csv};
 use crate::thicket::{stats, Thicket};
 use crate::util::plotascii::{Chart, Heatmap, Series};
@@ -30,18 +30,38 @@ pub fn render_all(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
     all.push_str(&fig5(thicket, out)?);
     all.push_str(&fig6(thicket, out)?);
     all.push_str(&comm_heatmap(thicket, out)?);
+    all.push_str(&fig7(thicket, out)?);
     Ok(all)
 }
 
-/// The canonical halo/sweep communication region per app — where the
-/// `comm-matrix` channel shows the neighbor structure.
+/// The canonical communication region per app — where the `comm-matrix`
+/// channel shows the pattern structure (neighbor bands for the halo apps,
+/// the dense far-field exchange for zmodel).
 fn halo_region_for(app: &str) -> &'static str {
     match app {
         "amg2023" => "matvec_comm_level_0",
         "kripke" => "sweep_comm",
         "laghos" => "halo_exchange",
+        "zmodel" => "br_exchange",
         _ => "halo_exchange",
     }
+}
+
+/// Smallest run in `group` carrying a comm matrix (smallest = clearest
+/// structure): the preferred region's matrix if recorded, else the first
+/// region with one. Shared by the heatmap figures.
+fn first_matrix_run<'t>(
+    group: &'t Thicket,
+    preferred: &str,
+) -> Option<(&'t RunProfile, String, Vec<Vec<f64>>)> {
+    for run in group.by_ranks() {
+        let dense = stats::comm_matrix_dense(run, preferred)
+            .or_else(|| stats::first_region_with_matrix(run));
+        if let Some((path, matrix)) = dense {
+            return Some((run, path, matrix));
+        }
+    }
+    None
 }
 
 /// Rank×rank sent-bytes heatmap per (app, system) from the `comm-matrix`
@@ -67,22 +87,11 @@ pub fn comm_heatmap(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
                 .unwrap_or_default()
         };
         let (app, system) = (meta_of("app"), meta_of("system"));
-        let preferred = halo_region_for(&app);
-        // smallest rank count first: by_ranks is ascending
-        let mut found = None;
-        for run in group.by_ranks() {
-            let dense = stats::comm_matrix_dense(run, preferred)
-                .or_else(|| stats::first_region_with_matrix(run));
-            if let Some((path, matrix)) = dense {
-                let ranks = run.meta.get("ranks").cloned().unwrap_or_default();
-                found = Some((ranks, path, matrix));
-                break;
-            }
-        }
-        let (ranks, path, matrix) = match found {
+        let (run, path, matrix) = match first_matrix_run(&group, halo_region_for(&app)) {
             Some(f) => f,
             None => continue,
         };
+        let ranks = run.meta.get("ranks").cloned().unwrap_or_default();
         if let Some(dir) = out {
             write_matrix_csv(dir.join(format!("heatmap_{}_{}.csv", app, system)), &matrix)?;
         }
@@ -134,7 +143,9 @@ pub fn table3() -> String {
         .align(2, Align::Left)
         .title("TABLE III — Experiments run for each benchmark");
     for spec in table3_matrix() {
-        let dims = if spec.app == crate::benchpark::AppKind::Laghos {
+        use crate::benchpark::AppKind;
+        // 2D surface/mesh apps decompose over a 2D process grid.
+        let dims = if matches!(spec.app, AppKind::Laghos | AppKind::Zmodel) {
             let d = spec.pdims2();
             format!("{}x{}", d[0], d[1])
         } else {
@@ -375,6 +386,73 @@ fn bw_rate_figure(
     Ok(text)
 }
 
+/// Fraction of the n×n off-diagonal cells carrying traffic — 1.0 for a
+/// fully dense all-to-all, small for a banded halo.
+fn matrix_fill(matrix: &[Vec<f64>]) -> f64 {
+    let n = matrix.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nonzero = matrix
+        .iter()
+        .enumerate()
+        .flat_map(|(s, row)| row.iter().enumerate().filter(move |(d, _)| *d != s))
+        .filter(|(_, v)| **v > 0.0)
+        .count();
+    nonzero as f64 / (n * (n - 1)) as f64
+}
+
+/// Fig 7 — global vs halo communication structure: zmodel's dense
+/// rank×rank far-field/transpose matrix side by side with AMG's banded
+/// halo matrix, each annotated with its off-diagonal fill factor. This is
+/// the Beatnik argument in one picture: the pattern class a
+/// halo-dominated suite never exercises.
+pub fn fig7(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    let mut text = String::new();
+    let mut fills = Vec::new();
+    for app in ["zmodel", "amg2023"] {
+        let group = thicket.filter(&[("app", app)]);
+        let (run, path, matrix) = match first_matrix_run(&group, halo_region_for(app)) {
+            Some(f) => f,
+            None => {
+                text.push_str(&format!(
+                    "fig7: no {} profile carries the comm-matrix channel \
+                     (re-run the campaign with --channels comm-stats,comm-matrix)\n",
+                    app
+                ));
+                continue;
+            }
+        };
+        let ranks = run.meta.get("ranks").cloned().unwrap_or_default();
+        let system = run.meta.get("system").cloned().unwrap_or_default();
+        let fill = matrix_fill(&matrix);
+        fills.push((app, fill));
+        if let Some(dir) = out {
+            write_matrix_csv(dir.join(format!("fig7_{}_{}.csv", app, system)), &matrix)?;
+        }
+        let title = format!(
+            "Fig 7 — {} @ {} ranks ({}), region '{}': off-diagonal fill {:.0}%",
+            app,
+            ranks,
+            system,
+            path,
+            fill * 100.0
+        );
+        let hm = Heatmap::new(&title, "dst rank", "src rank");
+        text.push_str(&hm.render(&matrix));
+        text.push('\n');
+    }
+    if let [(_, zfill), (_, afill)] = fills[..] {
+        text.push_str(&format!(
+            "fig7: zmodel fills {:.0}% of the rank×rank matrix vs {:.0}% for \
+             AMG's halo — global vs neighborhood communication.\n",
+            zfill * 100.0,
+            afill * 100.0
+        ));
+    }
+    Ok(text)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -423,6 +501,47 @@ mod tests {
         assert!(txt.contains("amg2023"), "{}", txt);
         assert!(txt.contains("matvec_comm_level_0"), "{}", txt);
         assert!(txt.contains("src rank"), "{}", txt);
+    }
+
+    #[test]
+    fn fig7_contrasts_dense_zmodel_with_banded_amg() {
+        use crate::caliper::{AggCommMatrix, AggRegion, RunProfile};
+        // without matrices: explanatory lines for both apps
+        let txt = fig7(&Thicket::new(vec![]), None).unwrap();
+        assert!(txt.contains("no zmodel profile"), "{}", txt);
+        assert!(txt.contains("no amg2023 profile"), "{}", txt);
+
+        let mk = |app: &str, region: &str, dense: bool| {
+            let mut run = RunProfile::default();
+            run.meta.insert("app".into(), app.into());
+            run.meta.insert("system".into(), "tioga".into());
+            run.meta.insert("ranks".into(), "4".into());
+            let mut reg = AggRegion {
+                is_comm_region: true,
+                ..Default::default()
+            };
+            let mut m = AggCommMatrix::default();
+            for src in 0..4usize {
+                for dst in 0..4usize {
+                    if src == dst || (!dense && dst != (src + 1) % 4) {
+                        continue;
+                    }
+                    m.sent.insert((src, dst), (1, 100));
+                    m.recv.insert((src, dst), (1, 100));
+                }
+            }
+            reg.comm_matrix = Some(m);
+            run.regions.insert(format!("main/{}", region), reg);
+            run
+        };
+        let t = Thicket::new(vec![
+            mk("zmodel", "br_exchange", true),
+            mk("amg2023", "matvec_comm_level_0", false),
+        ]);
+        let txt = fig7(&t, None).unwrap();
+        assert!(txt.contains("fill 100%"), "{}", txt);
+        assert!(txt.contains("fill 33%"), "{}", txt);
+        assert!(txt.contains("global vs neighborhood"), "{}", txt);
     }
 
     #[test]

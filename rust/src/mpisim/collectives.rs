@@ -153,7 +153,7 @@ impl CollBoard {
                     ctx: key.0,
                     arrived: slot.arrived,
                     expected: slot.expected,
-                    secs: timeout.as_secs(),
+                    millis: timeout.as_millis() as u64,
                 });
             }
             let (guard, _r) = self.cv.wait_timeout(slots, deadline - now).unwrap();

@@ -10,14 +10,16 @@ pub enum MpiError {
     #[error("rank {rank} out of range for communicator of size {size}")]
     RankOutOfRange { rank: usize, size: usize },
 
-    #[error("receive timed out after {secs}s real time: rank {rank} waiting for src={src:?} tag={tag} ctx={ctx}")]
+    #[error("receive timed out after {millis}ms real time: rank {rank} waiting for src={src:?} tag={tag} ctx={ctx}")]
     RecvTimeout {
         rank: usize,
         src: Option<usize>,
         tag: i32,
         ctx: u32,
-    /// Real-time seconds waited before giving up (deadlock guard).
-        secs: u64,
+        /// Real-time milliseconds waited before giving up (deadlock
+        /// guard). Milliseconds, not seconds: sub-second guards — the norm
+        /// in tests — used to surface as a baffling "timed out after 0s".
+        millis: u64,
     },
 
     #[error("collective mismatch on ctx {ctx} seq {seq}: rank {rank} called {called} but slot holds {expected}")]
@@ -29,14 +31,15 @@ pub enum MpiError {
         expected: &'static str,
     },
 
-    #[error("collective timed out after {secs}s real time: rank {rank} in {kind} on ctx {ctx} ({arrived}/{expected} ranks arrived)")]
+    #[error("collective timed out after {millis}ms real time: rank {rank} in {kind} on ctx {ctx} ({arrived}/{expected} ranks arrived)")]
     CollectiveTimeout {
         rank: usize,
         kind: &'static str,
         ctx: u32,
         arrived: usize,
         expected: usize,
-        secs: u64,
+        /// Real-time milliseconds waited (see [`MpiError::RecvTimeout`]).
+        millis: u64,
     },
 
     #[error("payload size {got} bytes does not decode to element type of size {elem}")]
@@ -62,8 +65,10 @@ mod tests {
             src: Some(1),
             tag: 7,
             ctx: 0,
-            secs: 60,
+            millis: 250,
         };
         assert!(e.to_string().contains("tag=7"));
+        // sub-second guards must not round down to "0s"
+        assert!(e.to_string().contains("250ms"), "{}", e);
     }
 }

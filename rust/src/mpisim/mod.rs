@@ -45,7 +45,7 @@ pub use comm::Comm;
 pub use datatype::MpiData;
 pub use error::MpiError;
 pub use hooks::{CollKind, MpiEvent, MpiHook};
-pub use netmodel::{ComputeParams, MachineModel, NetParams};
+pub use netmodel::{ComputeParams, GroupSpan, MachineModel, NetParams};
 pub use request::{RecvRequest, SendRequest, Status};
 pub use world::{Rank, World, WorldConfig};
 

@@ -18,8 +18,17 @@
 //! makes small coarse-grid kernels comparatively expensive on Tioga, and what
 //! motivates the GPU message-aggregation behaviour in the Kripke analog).
 //!
+//! Collectives are costed from the **node span of the participating
+//! ranks** ([`GroupSpan`]), not the job-wide node count: a sub-communicator
+//! confined to one node pays intra-node α/β even when the enclosing job
+//! spans many nodes, and NIC-sharing/contention apply only to the
+//! inter-node portion of a multi-node collective (sized by the group's own
+//! co-location and node span).
+//!
 //! Concrete Dane/Tioga parameterizations live in `benchpark::system`; this
 //! module provides the mechanics and a neutral `test_machine()`.
+
+use std::collections::BTreeMap;
 
 /// Point-to-point network parameters.
 #[derive(Debug, Clone)]
@@ -77,6 +86,20 @@ pub enum CollClass {
     Alltoall,
 }
 
+/// Node-topology span of a communicator's participants, derived from their
+/// world ranks (block rank→node mapping). This — not the job-wide node
+/// count — decides the link classes a collective over the group pays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupSpan {
+    /// Participating ranks.
+    pub ranks: usize,
+    /// Distinct nodes hosting at least one participant.
+    pub nodes: usize,
+    /// Largest number of participants co-resident on one node — the NIC
+    /// sharing the group itself can cause.
+    pub max_ranks_per_node: usize,
+}
+
 impl MachineModel {
     /// Node that hosts a world rank (block mapping, as on the real clusters).
     #[inline]
@@ -90,10 +113,41 @@ impl MachineModel {
         total_ranks.div_ceil(self.ranks_per_node)
     }
 
+    /// Node-topology span of a group of world ranks. O(|ranks|); callers
+    /// on hot paths cache the result per communicator context.
+    pub fn group_span(&self, world_ranks: &[usize]) -> GroupSpan {
+        let mut per_node: BTreeMap<usize, usize> = BTreeMap::new();
+        for &r in world_ranks {
+            *per_node.entry(self.node_of(r)).or_insert(0) += 1;
+        }
+        GroupSpan {
+            ranks: world_ranks.len(),
+            nodes: per_node.len(),
+            max_ranks_per_node: per_node.values().copied().max().unwrap_or(0),
+        }
+    }
+
+    /// Span of a block-contiguous group of `p` ranks starting at rank 0 —
+    /// what the world communicator occupies.
+    pub fn block_span(&self, p: usize) -> GroupSpan {
+        GroupSpan {
+            ranks: p,
+            nodes: self.nodes_for(p),
+            max_ranks_per_node: p.min(self.ranks_per_node),
+        }
+    }
+
     /// Effective inter-node inverse bandwidth under sharing + contention.
     fn beta_inter_eff(&self, total_ranks: usize) -> f64 {
-        let rpn = self.ranks_per_node.min(total_ranks).max(1) as f64;
-        let nodes = self.nodes_for(total_ranks) as f64;
+        self.beta_inter_span(&self.block_span(total_ranks))
+    }
+
+    /// Effective inter-node inverse bandwidth for a specific group:
+    /// NIC sharing from the group's own worst co-location, fabric
+    /// contention from the group's node span.
+    fn beta_inter_span(&self, span: &GroupSpan) -> f64 {
+        let rpn = span.max_ranks_per_node.max(1) as f64;
+        let nodes = span.nodes.max(1) as f64;
         let share = 1.0 + self.net.nic_share * (rpn - 1.0) / rpn;
         let contention =
             1.0 + self.net.contention_coeff * (nodes - 1.0).max(0.0).powf(self.net.contention_exp);
@@ -111,37 +165,61 @@ impl MachineModel {
         }
     }
 
-    /// Model cost of a collective over `p` ranks moving `bytes` per rank.
-    /// Standard log-tree / Rabenseifner-style estimates; `total_ranks` feeds
-    /// the contention model.
-    pub fn collective_time(
-        &self,
-        class: CollClass,
-        bytes: usize,
-        p: usize,
-        total_ranks: usize,
-    ) -> f64 {
+    /// Model cost of a collective over a block-contiguous group of `p`
+    /// ranks (starting at rank 0 — the world-communicator case) moving
+    /// `bytes` per rank. Sub-communicators with an explicit member list
+    /// must use [`MachineModel::collective_time_span`] — deriving the span
+    /// from a job-wide rank count is exactly the bug that charged
+    /// single-node sub-communicators inter-node latency.
+    pub fn collective_time(&self, class: CollClass, bytes: usize, p: usize) -> f64 {
+        self.collective_time_span(class, bytes, &self.block_span(p))
+    }
+
+    /// Model cost of a collective over the group described by `span`,
+    /// moving `bytes` per rank. Standard log-tree / Rabenseifner-style
+    /// estimates, hierarchically split by link class: of the tree's
+    /// `ceil(log2 p)` levels, `ceil(log2 nodes)` cross nodes (inter-node
+    /// α, NIC-shared + contended β sized by the group's own span) and the
+    /// remainder stay inside a node (intra-node α/β). A group confined to
+    /// one node therefore pays pure intra-node prices.
+    pub fn collective_time_span(&self, class: CollClass, bytes: usize, span: &GroupSpan) -> f64 {
+        let p = span.ranks;
         if p <= 1 {
             return 0.0;
         }
         let logp = (p as f64).log2().ceil().max(1.0);
-        // Collectives on multi-node jobs are dominated by inter-node links.
-        let nodes = self.nodes_for(total_ranks);
-        let (alpha, beta) = if nodes > 1 {
-            (self.net.alpha_inter, self.beta_inter_eff(total_ranks))
+        let logn = if span.nodes > 1 {
+            (span.nodes as f64).log2().ceil().max(1.0).min(logp)
         } else {
-            (self.net.alpha_intra, self.net.beta_intra)
+            0.0
         };
+        let logr = logp - logn;
+        let (ai, bi) = (self.net.alpha_intra, self.net.beta_intra);
+        let (ax, bx) = (self.net.alpha_inter, self.beta_inter_span(span));
         let n = bytes as f64;
         match class {
-            CollClass::Barrier => logp * alpha,
-            CollClass::Bcast => logp * (alpha + n * beta),
-            CollClass::Reduce => logp * alpha + n * beta * logp.min(2.0) + flop_term(self, n),
-            // Rabenseifner: 2·log(p)·α + 2·n·β (+ reduction flops)
-            CollClass::Allreduce => 2.0 * logp * alpha + 2.0 * n * beta + flop_term(self, n),
-            // Ring allgather: (p-1) steps of n bytes
-            CollClass::Allgather => (p as f64 - 1.0) * (alpha + n * beta),
-            CollClass::Alltoall => (p as f64 - 1.0) * (alpha + n * beta),
+            CollClass::Barrier => logr * ai + logn * ax,
+            CollClass::Bcast => logr * (ai + n * bi) + logn * (ax + n * bx),
+            CollClass::Reduce => {
+                // The pipeline overlaps all but ~2 of the bandwidth stages;
+                // charge the most expensive (inter-node) stages first.
+                let k = logp.min(2.0);
+                let kx = logn.min(k);
+                logr * ai + logn * ax + n * (bx * kx + bi * (k - kx)) + flop_term(self, n)
+            }
+            // Rabenseifner: 2·log(p)·α (split by level link class) + 2·n·β
+            // on the bottleneck link (+ reduction flops).
+            CollClass::Allreduce => {
+                let b = if span.nodes > 1 { bx } else { bi };
+                2.0 * (logr * ai + logn * ax) + 2.0 * n * b + flop_term(self, n)
+            }
+            // Ring algorithms: (p-1) steps of n bytes, every step gated by
+            // the slowest link in the ring — inter-node once the group
+            // leaves a single node.
+            CollClass::Allgather | CollClass::Alltoall => {
+                let (a, b) = if span.nodes > 1 { (ax, bx) } else { (ai, bi) };
+                (p as f64 - 1.0) * (a + n * b)
+            }
         }
     }
 
@@ -227,10 +305,89 @@ mod tests {
     #[test]
     fn collective_costs_scale_with_p() {
         let m = MachineModel::test_machine();
-        let p8 = m.collective_time(CollClass::Allreduce, 1024, 8, 8);
-        let p64 = m.collective_time(CollClass::Allreduce, 1024, 64, 64);
+        let p8 = m.collective_time(CollClass::Allreduce, 1024, 8);
+        let p64 = m.collective_time(CollClass::Allreduce, 1024, 64);
         assert!(p64 > p8);
-        assert_eq!(m.collective_time(CollClass::Barrier, 0, 1, 1), 0.0);
+        assert_eq!(m.collective_time(CollClass::Barrier, 0, 1), 0.0);
+    }
+
+    #[test]
+    fn group_span_from_member_lists() {
+        let m = MachineModel::test_machine(); // 4 ranks/node
+        let s = m.group_span(&[0, 1, 2, 3]);
+        assert_eq!(s, GroupSpan { ranks: 4, nodes: 1, max_ranks_per_node: 4 });
+        let s = m.group_span(&[0, 4, 8, 12]);
+        assert_eq!(s, GroupSpan { ranks: 4, nodes: 4, max_ranks_per_node: 1 });
+        let s = m.group_span(&[2, 3, 4, 5, 6]);
+        assert_eq!(s, GroupSpan { ranks: 5, nodes: 2, max_ranks_per_node: 3 });
+        assert_eq!(m.group_span(&[]).nodes, 0);
+        assert_eq!(m.block_span(6), m.group_span(&[0, 1, 2, 3, 4, 5]));
+    }
+
+    #[test]
+    fn single_node_subgroup_pays_intra_node_prices() {
+        // The satellite bug: a sub-communicator confined to one node used
+        // to be charged inter-node α/β because the link class came from
+        // the *job-wide* node count. The span-based model must price the
+        // same 4-rank collective strictly cheaper on one node than spread
+        // over four.
+        let mut m = MachineModel::test_machine();
+        m.net.nic_share = 2.0;
+        m.net.contention_coeff = 0.1;
+        for class in [
+            CollClass::Barrier,
+            CollClass::Bcast,
+            CollClass::Reduce,
+            CollClass::Allreduce,
+            CollClass::Allgather,
+            CollClass::Alltoall,
+        ] {
+            let intra = m.collective_time_span(class, 4096, &m.group_span(&[0, 1, 2, 3]));
+            let inter = m.collective_time_span(class, 4096, &m.group_span(&[0, 4, 8, 12]));
+            assert!(
+                intra < inter,
+                "{:?}: single-node {} must undercut node-spanning {}",
+                class,
+                intra,
+                inter
+            );
+            // And the single-node price must not embed inter-node α at all:
+            // it is bounded by the pure-intra formula with every level intra.
+            let logp = 2.0;
+            let bound = match class {
+                CollClass::Allgather | CollClass::Alltoall => {
+                    3.0 * (m.net.alpha_intra + 4096.0 * m.net.beta_intra)
+                }
+                _ => {
+                    2.0 * logp * (m.net.alpha_intra + 4096.0 * m.net.beta_intra)
+                        + flop_term(&m, 4096.0)
+                }
+            };
+            assert!(intra <= bound + 1e-15, "{:?}: {} > {}", class, intra, bound);
+        }
+    }
+
+    #[test]
+    fn nic_share_and_contention_sized_by_the_group() {
+        let mut m = MachineModel::test_machine();
+        m.net.nic_share = 8.0;
+        m.net.contention_coeff = 0.2;
+        // Same participant count and node span, different co-location:
+        // 2 ranks/node shares the NIC harder than 1 rank/node.
+        let packed = m.group_span(&[0, 1, 4, 5]); // 2 nodes, 2/node
+        let spread = m.group_span(&[0, 4, 8, 12]); // 4 nodes, 1/node
+        assert_eq!(packed.nodes, 2);
+        let t_packed = m.collective_time_span(CollClass::Bcast, 1 << 20, &packed);
+        // contention off: isolate the sharing term
+        m.net.contention_coeff = 0.0;
+        let t_spread_noshare = m.collective_time_span(CollClass::Bcast, 1 << 20, &spread);
+        let t_packed_noshare = {
+            let mut m2 = m.clone();
+            m2.net.nic_share = 0.0;
+            m2.collective_time_span(CollClass::Bcast, 1 << 20, &packed)
+        };
+        assert!(t_packed > t_packed_noshare, "group co-location must cost");
+        assert!(t_spread_noshare < t_packed, "spread group shares no NIC");
     }
 
     #[test]

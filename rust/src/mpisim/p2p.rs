@@ -79,7 +79,7 @@ impl Mailbox {
                     src,
                     tag,
                     ctx,
-                    secs: timeout.as_secs(),
+                    millis: timeout.as_millis() as u64,
                 });
             }
             let (guard, _res) = self.cv.wait_timeout(q, deadline - now).unwrap();
@@ -162,6 +162,20 @@ mod tests {
             .match_recv(3, Some(2), 7, 0, Duration::from_millis(20))
             .unwrap_err();
         assert!(matches!(err, MpiError::RecvTimeout { rank: 3, .. }));
+    }
+
+    #[test]
+    fn subsecond_timeout_reported_in_millis() {
+        // A 300 ms deadlock guard used to render as "timed out after 0s".
+        let mb = Mailbox::new();
+        let err = mb
+            .match_recv(0, Some(1), 1, 0, Duration::from_millis(300))
+            .unwrap_err();
+        match &err {
+            MpiError::RecvTimeout { millis, .. } => assert_eq!(*millis, 300),
+            other => panic!("unexpected {:?}", other),
+        }
+        assert!(err.to_string().contains("300ms"), "{}", err);
     }
 
     #[test]

@@ -20,12 +20,12 @@ fn fast() -> RunOptions {
     }
 }
 
-/// The ≤16-rank smoke matrix: amg2023 tioga 8/16, kripke tioga 8/16.
+/// The ≤16-rank smoke matrix: amg2023/kripke/zmodel tioga 8/16.
 fn smoke_cells() -> Vec<commscope::benchpark::ExperimentSpec> {
     let mut opts = CampaignOptions::new(std::env::temp_dir());
     opts.max_ranks = Some(16);
     let cells = selected_cells(&opts);
-    assert_eq!(cells.len(), 4);
+    assert_eq!(cells.len(), 6);
     cells
 }
 
@@ -45,8 +45,8 @@ fn parallel_profiles_byte_identical_to_serial() {
         parallel = CampaignExecutor::new(4, fast()).unwrap().execute(&cells);
     }
     assert!(serial.failures.is_empty() && parallel.failures.is_empty());
-    assert_eq!(serial.runs.len(), 4);
-    assert_eq!(parallel.runs.len(), 4);
+    assert_eq!(serial.runs.len(), 6);
+    assert_eq!(parallel.runs.len(), 6);
     assert_eq!(parallel.workers, 4);
     assert!(
         parallel.workers_used > 1,
@@ -65,7 +65,7 @@ fn parallel_profiles_byte_identical_to_serial() {
 fn dedup_cache_serves_repeated_cells() {
     let cells = smoke_cells();
     let exec = CampaignExecutor::new(4, fast()).unwrap();
-    // The same 4 unique cells, each listed three times.
+    // The same 6 unique cells, each listed three times.
     let mut tripled = Vec::new();
     for _ in 0..3 {
         tripled.extend_from_slice(&cells);
@@ -74,30 +74,33 @@ fn dedup_cache_serves_repeated_cells() {
     let report = exec.execute_with(&tripled, |_, _| {
         executed.fetch_add(1, Ordering::Relaxed);
     });
-    assert_eq!(report.cells_total, 12);
-    assert_eq!(report.cells_executed, 4, "{}", report.summary());
-    assert_eq!(report.cache_hits, 8, "{}", report.summary());
-    assert_eq!(executed.load(Ordering::Relaxed), 4, "sink fires once per unique cell");
-    assert_eq!(report.runs.len(), 4, "duplicates collapse in the output");
+    assert_eq!(report.cells_total, 18);
+    assert_eq!(report.cells_executed, 6, "{}", report.summary());
+    assert_eq!(report.cache_hits, 12, "{}", report.summary());
+    assert_eq!(executed.load(Ordering::Relaxed), 6, "sink fires once per unique cell");
+    assert_eq!(report.runs.len(), 6, "duplicates collapse in the output");
     // In-memory thicket assembly: canonical (app, system, ranks) order.
     let t = report.thicket();
-    assert_eq!(t.len(), 4);
+    assert_eq!(t.len(), 6);
     let order: Vec<String> = t
         .runs
         .iter()
         .map(|r| format!("{}_{}", r.meta["app"], r.meta["ranks"]))
         .collect();
-    assert_eq!(order, ["amg2023_8", "amg2023_16", "kripke_8", "kripke_16"]);
+    assert_eq!(
+        order,
+        ["amg2023_8", "amg2023_16", "kripke_8", "kripke_16", "zmodel_8", "zmodel_16"]
+    );
 
     // A follow-up campaign of already-seen cells is pure cache.
     let again = exec.execute(&cells);
     assert_eq!(again.cells_executed, 0);
-    assert_eq!(again.cache_hits, 4);
+    assert_eq!(again.cache_hits, 6);
     for (a, b) in report.runs.iter().zip(&again.runs) {
         assert!(Arc::ptr_eq(a, b), "cached cells must share one allocation");
     }
     let stats = exec.cache_stats();
-    assert_eq!(stats.entries, 4);
+    assert_eq!(stats.entries, 6);
     assert!(stats.hits >= 4, "cache hit counter must register: {:?}", stats);
 }
 

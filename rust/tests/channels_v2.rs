@@ -155,6 +155,12 @@ fn v1_profile_migrates_to_v2() {
                 "bytes_sent": {"min": 128, "max": 512, "avg": 256, "total": 1024},
                 "max_send": 512,
                 "min_send": 128
+            },
+            "main/load_skew": {
+                "comm_region": false,
+                "participants": 4,
+                "visits": 4,
+                "time": {"min": -1.5, "max": 1.5, "avg": 0.0, "total": 0.0}
             }
         }
     }"#;
@@ -167,6 +173,12 @@ fn v1_profile_migrates_to_v2() {
     assert_eq!(halo.sends.total(), 16.0);
     assert_eq!(halo.sends.count(), 4);
     assert!((v1.wall_time() - 11.0).abs() < 1e-12);
+    // a zero-mean metric must not divide by zero or clobber its extremes
+    let skew = &v1.regions["main/load_skew"].time;
+    assert_eq!(skew.min(), -1.5);
+    assert_eq!(skew.max(), 1.5);
+    assert_eq!(skew.total(), 0.0);
+    assert_eq!(skew.count(), 2);
 
     // migrate: write as v2, read back, exact values preserved
     let v2_text = v1.to_json().to_string_pretty();

@@ -24,12 +24,12 @@ fn full_pipeline_small_scale() {
     };
     opts.max_ranks = Some(16);
     opts.verbose = false;
-    // Expect the ≤16-rank cells: amg tioga 8,16; kripke tioga 8,16 (laghos
-    // min scale is 112 → filtered out).
+    // Expect the ≤16-rank cells: amg/kripke/zmodel tioga 8,16 (laghos
+    // min scale is 112 → filtered out; dane min scale is 64).
     let cells = selected_cells(&opts);
-    assert_eq!(cells.len(), 4, "{:?}", cells.iter().map(|c| c.id()).collect::<Vec<_>>());
+    assert_eq!(cells.len(), 6, "{:?}", cells.iter().map(|c| c.id()).collect::<Vec<_>>());
     let t = run_campaign(&opts, true).unwrap();
-    assert_eq!(t.len(), 4);
+    assert_eq!(t.len(), 6);
 
     // table4 renders a row per run
     let t4 = figures::table4(&t);
@@ -54,7 +54,7 @@ fn full_pipeline_small_scale() {
 
     // reload from disk and check metric derivations
     let t2 = commscope::coordinator::campaign::load_profiles(&dir).unwrap();
-    assert_eq!(t2.len(), 4);
+    assert_eq!(t2.len(), 6);
     for run in &t2.runs {
         assert!(stats::bandwidth_per_proc(run).unwrap() > 0.0);
         assert!(stats::message_rate_per_proc(run).unwrap() > 0.0);

@@ -1,0 +1,198 @@
+//! Sub-communicator semantics: `comm_split` determinism, message and
+//! collective context isolation between sibling splits, alltoallv
+//! round-trips on subgroups, and the span-based collective cost model
+//! (a single-node sub-communicator must pay intra-node prices).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use commscope::caliper::aggregate::{aggregate, check_matrix_conservation};
+use commscope::caliper::Caliper;
+use commscope::mpisim::collectives::ReduceOp;
+use commscope::mpisim::netmodel::CollClass;
+use commscope::mpisim::{MachineModel, World, WorldConfig};
+
+fn cfg(n: usize) -> WorldConfig {
+    WorldConfig::new(n, MachineModel::test_machine()).with_timeout(Duration::from_secs(20))
+}
+
+#[test]
+fn comm_split_is_deterministic_and_key_ordered() {
+    let run = || {
+        World::run(cfg(8), |rank| {
+            let world = rank.world();
+            // reversed keys: communicator rank order must invert world order
+            let sub = rank
+                .comm_split(&world, (rank.rank % 2) as u64, (8 - rank.rank) as u64)
+                .unwrap();
+            (sub.ctx, sub.rank, sub.ranks.clone())
+        })
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "split must be bit-reproducible");
+    // even group, ordered by descending world rank via the key
+    let (ctx0, _, members0) = &a[0];
+    assert_eq!(members0, &vec![6, 4, 2, 0]);
+    assert_eq!(&a[6].2, members0, "same color ⇒ same member list");
+    assert_eq!(a[0].1, 3, "world rank 0 has the largest key ⇒ last");
+    // sibling splits get distinct contexts, both distinct from world's 0
+    let (ctx1, _, _) = &a[1];
+    assert_ne!(ctx0, ctx1);
+    assert_ne!(*ctx0, 0);
+    assert_ne!(*ctx1, 0);
+}
+
+#[test]
+fn sibling_splits_isolate_p2p_and_collectives() {
+    // Evens and odds each run the same program — same tags, same
+    // collective sequence — on their own split. Nothing may cross.
+    let res = World::run(cfg(6), |rank| {
+        let world = rank.world();
+        let color = (rank.rank % 2) as u64;
+        let sub = rank.comm_split(&world, color, rank.rank as u64).unwrap();
+        // ring send on the sub-communicator, tag 7 in both siblings
+        let next = (sub.rank + 1) % sub.size();
+        let prev = (sub.rank + sub.size() - 1) % sub.size();
+        rank.send(&[rank.rank as f64], next, 7, &sub).unwrap();
+        let (got, st) = rank.recv::<f64>(Some(prev), 7, &sub).unwrap();
+        // the payload must come from my sibling group, not the other one
+        assert_eq!(st.src, sub.world_rank(prev));
+        assert_eq!(got[0] as usize % 2, rank.rank % 2, "crossed the split");
+        // collectives sequence independently per context
+        let s = rank
+            .allreduce_f64(&[rank.rank as f64], ReduceOp::Sum, &sub)
+            .unwrap();
+        // and a world-wide collective still works afterwards
+        let w = rank
+            .allreduce_f64(&[1.0], ReduceOp::Sum, &world)
+            .unwrap();
+        (got[0], s[0], w[0])
+    });
+    for (r, (got, sub_sum, world_sum)) in res.iter().enumerate() {
+        assert_eq!(*got as usize % 2, r % 2);
+        let expect: f64 = if r % 2 == 0 { 0.0 + 2.0 + 4.0 } else { 1.0 + 3.0 + 5.0 };
+        assert_eq!(*sub_sum, expect);
+        assert_eq!(*world_sum, 6.0);
+    }
+}
+
+#[test]
+fn alltoallv_roundtrip_on_subgroup() {
+    // Split 8 ranks into two halves; alltoallv runs inside each half with
+    // communicator-local indices and distinct payloads.
+    let res = World::run(cfg(8), |rank| {
+        let world = rank.world();
+        let color = (rank.rank / 4) as u64;
+        let sub = rank.comm_split(&world, color, rank.rank as u64).unwrap();
+        let p = sub.size();
+        let parts: Vec<Vec<u32>> = (0..p)
+            .map(|d| vec![(rank.rank * 10 + sub.world_rank(d)) as u32; d + 1])
+            .collect();
+        let out = rank.alltoallv(&parts, &sub).unwrap();
+        (sub.rank, out)
+    });
+    for (world_rank, (sub_rank, out)) in res.iter().enumerate() {
+        let base = (world_rank / 4) * 4;
+        assert_eq!(out.len(), 4);
+        for (src, part) in out.iter().enumerate() {
+            // source sub-rank src = world rank base+src (keys ascending)
+            assert_eq!(part.len(), sub_rank + 1, "count from {} to {}", src, world_rank);
+            let expect = ((base + src) * 10 + world_rank) as u32;
+            assert!(part.iter().all(|v| *v == expect), "payload crossed groups");
+        }
+    }
+}
+
+#[test]
+fn subgroup_alltoallv_matrix_is_block_local_and_conserved() {
+    // With the comm-matrix channel on, the two halves' alltoallv traffic
+    // must form two dense 4×4 blocks and never a cross-block cell.
+    let n = 8;
+    let profiles = World::run(cfg(n), |rank| {
+        let cali = Caliper::attach_with(rank, "comm-stats,comm-matrix").unwrap();
+        let world = rank.world();
+        let color = (rank.rank / 4) as u64;
+        let sub = rank.comm_split(&world, color, rank.rank as u64).unwrap();
+        {
+            let _x = cali.comm_region("block_exchange");
+            let parts: Vec<Vec<f64>> = (0..sub.size()).map(|d| vec![1.0; d + 2]).collect();
+            rank.alltoallv(&parts, &sub).unwrap();
+        }
+        cali.finish(rank)
+    });
+    let run = aggregate(BTreeMap::new(), &profiles);
+    let m = run.regions["block_exchange"].comm_matrix.as_ref().unwrap();
+    check_matrix_conservation(m).unwrap();
+    assert_eq!(m.sent.len(), 2 * 4 * 3, "two dense 4-rank blocks");
+    for ((s, d), _) in &m.sent {
+        assert_eq!(s / 4, d / 4, "cell ({}, {}) crossed the split", s, d);
+    }
+}
+
+#[test]
+fn span_model_prices_subgroups_by_their_nodes() {
+    // Direct model-level acceptance: on the 4-ranks/node test machine a
+    // 4-rank single-node group costs intra-node α/β, strictly under the
+    // same collective on 4 ranks spread over 4 nodes — for every class.
+    let m = MachineModel::test_machine();
+    let local = m.group_span(&[4, 5, 6, 7]); // node 1, all four slots
+    let spread = m.group_span(&[0, 4, 8, 12]);
+    assert_eq!(local.nodes, 1);
+    assert_eq!(spread.nodes, 4);
+    for class in [
+        CollClass::Barrier,
+        CollClass::Bcast,
+        CollClass::Reduce,
+        CollClass::Allreduce,
+        CollClass::Allgather,
+        CollClass::Alltoall,
+    ] {
+        let t_local = m.collective_time_span(class, 8192, &local);
+        let t_spread = m.collective_time_span(class, 8192, &spread);
+        assert!(
+            t_local < t_spread,
+            "{:?}: local {} vs spread {}",
+            class,
+            t_local,
+            t_spread
+        );
+    }
+}
+
+#[test]
+fn virtual_time_cheaper_on_node_local_subgroup_end_to_end() {
+    // End-to-end: the same allreduce program on a node-confined split
+    // finishes earlier (virtual time) than on a node-spanning split of
+    // the same size, inside one world.
+    let times = World::run(cfg(16), |rank| {
+        let world = rank.world();
+        // node-local groups: color = node index (4 ranks/node)
+        let local = rank
+            .comm_split(&world, (rank.rank / 4) as u64, rank.rank as u64)
+            .unwrap();
+        // spanning groups: color = slot index → 4 ranks on 4 nodes
+        let spanning = rank
+            .comm_split(&world, (rank.rank % 4) as u64, rank.rank as u64)
+            .unwrap();
+        let t0 = rank.now();
+        for _ in 0..10 {
+            rank.allreduce_f64(&[1.0], ReduceOp::Sum, &local).unwrap();
+        }
+        let t_local = rank.now() - t0;
+        let t1 = rank.now();
+        for _ in 0..10 {
+            rank.allreduce_f64(&[1.0], ReduceOp::Sum, &spanning).unwrap();
+        }
+        (t_local, rank.now() - t1)
+    });
+    for (r, (t_local, t_spanning)) in times.iter().enumerate() {
+        assert!(
+            t_local < t_spanning,
+            "rank {}: node-local {} vs spanning {}",
+            r,
+            t_local,
+            t_spanning
+        );
+    }
+}
