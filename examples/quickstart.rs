@@ -32,21 +32,30 @@ fn main() {
             {
                 let _halo = cali.comm_region("halo_exchange");
                 let payload = vec![step as f64; 1024];
+                // Nonblocking halo: post receives, post sends, waitall.
+                // Above the machine's eager threshold the sends follow the
+                // rendezvous protocol, so the waitall's wait time is what
+                // the mpi-time channel attributes to this region.
+                let mut reqs: Vec<commscope::mpisim::Request> = Vec::new();
                 for dim in 0..3 {
                     for dir in [-1i64, 1] {
                         if let Some(nbr) = cart.shift(dim, dir) {
-                            rank.isend(&payload, nbr, dim as i32, &cart.comm).unwrap();
+                            reqs.push(
+                                rank.irecv(Some(nbr), dim as i32, &cart.comm).unwrap().into(),
+                            );
                         }
                     }
                 }
                 for dim in 0..3 {
                     for dir in [-1i64, 1] {
                         if let Some(nbr) = cart.shift(dim, dir) {
-                            let _ =
-                                rank.recv::<f64>(Some(nbr), dim as i32, &cart.comm).unwrap();
+                            reqs.push(
+                                rank.isend(&payload, nbr, dim as i32, &cart.comm).unwrap().into(),
+                            );
                         }
                     }
                 }
+                let _ = rank.waitall::<f64>(reqs).unwrap();
             } // halo_exchange closes when the guard drops
 
             // --- compute phase (virtual time from the machine model) ----

@@ -90,7 +90,7 @@ fn main() {
                 // self-sends exercise send+recv+hook paths without matching waits
                 let buf = [0u8; 64];
                 for i in 0..500_000 {
-                    rank.isend(&buf, 0, i % 8, &world).unwrap();
+                    let _ = rank.isend(&buf, 0, i % 8, &world).unwrap();
                     let _ = rank.recv::<u8>(Some(0), i % 8, &world).unwrap();
                 }
             }

@@ -6,7 +6,7 @@
 
 use crate::apps::common::ComputeBackend;
 use crate::mpisim::cart::CartComm;
-use crate::mpisim::{MpiError, Rank};
+use crate::mpisim::{MpiError, Rank, Request};
 
 /// The per-rank level-0 field: `u` with a one-zone halo, plus the RHS `f`.
 #[derive(Debug, Clone)]
@@ -128,32 +128,46 @@ impl Field {
 
 /// Exchange all six faces with the cartesian face neighbors; real data.
 /// Non-periodic boundaries keep zero halos (Dirichlet).
+///
+/// Nonblocking pattern (hypre's `MatVecComm` shape): post every receive
+/// first — so large-message rendezvous partners see the earliest possible
+/// post times — then every send, then one `waitall` over all requests.
+/// The symmetric exchange is deadlock-free for any message size because
+/// nothing blocks before all requests are posted.
 pub fn halo_exchange(
     rank: &mut Rank,
     cart: &CartComm,
     field: &mut Field,
     tag_base: i32,
 ) -> Result<(), MpiError> {
-    // Post all sends (eager), then receive.
+    let mut reqs: Vec<Request> = Vec::with_capacity(12);
+    // face list in post order, so waitall results map back to halo slots
+    let mut recv_faces: Vec<(usize, usize)> = Vec::with_capacity(6);
     for dim in 0..3 {
         for (diridx, disp) in [(0usize, -1i64), (1, 1)] {
             if let Some(nbr) = cart.shift(dim, disp) {
-                let buf = field.pack_face(dim, diridx);
-                let tag = tag_base + (dim * 2 + diridx) as i32;
-                rank.isend(&buf, nbr, tag, &cart.comm)?;
+                // The neighbor sends its opposite face with the matching
+                // tag: its (dim, 1-diridx) send targets our (dim, diridx)
+                // halo.
+                let tag = tag_base + (dim * 2 + (1 - diridx)) as i32;
+                reqs.push(rank.irecv(Some(nbr), tag, &cart.comm)?.into());
+                recv_faces.push((dim, diridx));
             }
         }
     }
     for dim in 0..3 {
         for (diridx, disp) in [(0usize, -1i64), (1, 1)] {
             if let Some(nbr) = cart.shift(dim, disp) {
-                // The neighbor sent its opposite face with the matching tag:
-                // its (dim, 1-diridx) send targets our (dim, diridx) halo.
-                let tag = tag_base + (dim * 2 + (1 - diridx)) as i32;
-                let (data, _st) = rank.recv::<f64>(Some(nbr), tag, &cart.comm)?;
-                field.unpack_face(dim, diridx, &data);
+                let buf = field.pack_face(dim, diridx);
+                let tag = tag_base + (dim * 2 + diridx) as i32;
+                reqs.push(rank.isend(&buf, nbr, tag, &cart.comm)?.into());
             }
         }
+    }
+    let done = rank.waitall::<f64>(reqs)?;
+    for ((dim, diridx), item) in recv_faces.into_iter().zip(done) {
+        let (data, _st) = item.expect("receive slot");
+        field.unpack_face(dim, diridx, &data);
     }
     Ok(())
 }

@@ -23,7 +23,7 @@ use crate::apps::common::ComputeBackend;
 use crate::caliper::Caliper;
 use crate::mpisim::cart::CartComm;
 use crate::mpisim::collectives::ReduceOp;
-use crate::mpisim::{MpiError, Rank};
+use crate::mpisim::{MpiError, Rank, Request};
 
 /// Tags: level-0 physical faces use 0..6; synthetic level traffic uses
 /// 100·level; restriction uses 9000 + level.
@@ -33,7 +33,10 @@ fn level_tag(level: usize, exchange: usize) -> i32 {
 
 /// Exchange synthetic halo payloads with every partner of a level.
 /// Symmetric by construction (partner lists are symmetric), so every isend
-/// pairs with exactly one recv.
+/// pairs with exactly one receive. Nonblocking: irecv everything, isend
+/// everything, one waitall — deadlock-free above the eager threshold, and
+/// the rendezvous wait time lands in the enclosing comm region's
+/// `mpi-time` split.
 fn synthetic_exchange(
     rank: &mut Rank,
     cart: &CartComm,
@@ -43,12 +46,14 @@ fn synthetic_exchange(
 ) -> Result<(), MpiError> {
     let payload = vec![0u8; bytes];
     let tag = level_tag(lvl.level, exchange);
+    let mut reqs: Vec<Request> = Vec::with_capacity(2 * lvl.partners.len());
     for &p in &lvl.partners {
-        rank.isend(&payload, p, tag, &cart.comm)?;
+        reqs.push(rank.irecv(Some(p), tag, &cart.comm)?.into());
     }
     for &p in &lvl.partners {
-        let _ = rank.recv::<u8>(Some(p), tag, &cart.comm)?;
+        reqs.push(rank.isend(&payload, p, tag, &cart.comm)?.into());
     }
+    rank.waitall::<u8>(reqs)?;
     Ok(())
 }
 
@@ -131,13 +136,14 @@ pub fn vcycle(
             let bytes = (zones / 8).max(8); // coarse injection payload
             let payload = vec![0u8; bytes];
             let tag = 9000 + lvl.level as i32;
+            let mut reqs: Vec<Request> = Vec::with_capacity(1 + lvl.restrict_from.len());
+            for &src in &lvl.restrict_from {
+                reqs.push(rank.irecv(Some(src), tag, &cart.comm)?.into());
+            }
             if let Some(target) = lvl.restrict_to {
-                rank.isend(&payload, target, tag, &cart.comm)?;
+                reqs.push(rank.isend(&payload, target, tag, &cart.comm)?.into());
             }
-            let from = lvl.restrict_from.clone();
-            for src in from {
-                let _ = rank.recv::<u8>(Some(src), tag, &cart.comm)?;
-            }
+            rank.waitall::<u8>(reqs)?;
         }
     }
     Ok(())
@@ -178,9 +184,15 @@ pub fn coarse_gather(
             break; // this rank already sent in an earlier round
         }
         if me & bit != 0 {
-            // send accumulated subtree to the partner below
+            // Send the accumulated subtree to the partner below. Waited
+            // immediately: the subtree payload grows past the eager
+            // threshold at scale, and the partner is guaranteed to reach
+            // its matching receive (binomial trees are acyclic), so the
+            // rendezvous wait is deadlock-free — and is precisely the
+            // fan-in wait the coarse_gather region measures.
             let dst = me - bit;
-            rank.isend(&vec![0u8; acc], dst, 7000 + round as i32, &cart.comm)?;
+            let req = rank.isend(&vec![0u8; acc], dst, 7000 + round as i32, &cart.comm)?;
+            rank.wait_send(req)?;
             break;
         } else {
             let src = me + bit;

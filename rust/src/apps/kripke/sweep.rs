@@ -2,17 +2,23 @@
 //! receive upstream faces, solve the local cube, send downstream faces.
 //!
 //! All ranks iterate the (octant, groupset, dirset) schedule in the same
-//! order; sends are eager, so the wavefront dependency chain terminates at
-//! the sweep-origin corner and the loop is deadlock-free. Virtual time
-//! reproduces the pipeline-fill stalls through the logical clocks — that
-//! stall time is exactly what the `sweep_comm` region measures (Fig 1).
+//! order. Faces move as nonblocking requests: upstream faces are posted as
+//! irecvs and completed with one `waitall` (so the wavefront stall is
+//! attributed as Waitall *wait* time by the `mpi-time` channel), and
+//! downstream sends are waited inside `sweep_comm` — above the eager
+//! threshold they follow the rendezvous protocol, blocking until the
+//! downstream partner posts. The dependency chain still terminates at the
+//! sweep-origin corner (binomial wavefront order is acyclic), so the loop
+//! is deadlock-free for any message size. Virtual time reproduces the
+//! pipeline-fill stalls through the logical clocks — that stall time is
+//! exactly what the `sweep_comm` region measures (Fig 1).
 
 use super::geometry::{sweep_tag, Octant};
 use super::kernels::{self, SweepOut};
 use crate::apps::common::ComputeBackend;
 use crate::caliper::Caliper;
 use crate::mpisim::cart::CartComm;
-use crate::mpisim::{MpiError, Rank};
+use crate::mpisim::{MpiError, Rank, Request};
 
 /// Angular decomposition of one pipeline step.
 #[derive(Debug, Clone, Copy)]
@@ -44,16 +50,25 @@ pub fn sweep_step(
     let mut faces: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
     {
         let _comm = cali.comm_region("sweep_comm");
-        for (dim, face) in faces.iter_mut().enumerate() {
-            *face = match octant.upstream(cart, dim) {
+        // Post every upstream receive, then complete with one waitall —
+        // the pipeline-fill stall surfaces as the waitall's wait time.
+        let mut reqs: Vec<Request> = Vec::with_capacity(3);
+        let mut dims = Vec::with_capacity(3);
+        for dim in 0..3 {
+            match octant.upstream(cart, dim) {
                 Some(up) => {
                     let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
-                    let (data, _st) = rank.recv::<f64>(Some(up), tag, &cart.comm)?;
-                    debug_assert_eq!(data.len(), face_len);
-                    data
+                    reqs.push(rank.irecv(Some(up), tag, &cart.comm)?.into());
+                    dims.push(dim);
                 }
-                None => vec![1.0; face_len], // incident boundary flux
-            };
+                None => faces[dim] = vec![1.0; face_len], // incident boundary flux
+            }
+        }
+        let done = rank.waitall::<f64>(reqs)?;
+        for (dim, item) in dims.into_iter().zip(done) {
+            let (data, _st) = item.expect("receive slot");
+            debug_assert_eq!(data.len(), face_len);
+            faces[dim] = data;
         }
     }
 
@@ -67,12 +82,17 @@ pub fn sweep_step(
     {
         let _comm = cali.comm_region("sweep_comm");
         let outs = [&out.out_x, &out.out_y, &out.out_z];
+        let mut reqs: Vec<Request> = Vec::with_capacity(3);
         for dim in 0..3 {
             if let Some(down) = octant.downstream(cart, dim) {
                 let tag = sweep_tag(step.oct, step.gs, step.ds, dim);
-                rank.isend(outs[dim], down, tag, &cart.comm)?;
+                reqs.push(rank.isend(outs[dim], down, tag, &cart.comm)?.into());
             }
         }
+        // Rendezvous sends block here until the downstream rank posts its
+        // receive — safe (the wavefront order is acyclic) and exactly the
+        // sender-side wait the paper's sweep breakdown shows.
+        rank.waitall::<f64>(reqs)?;
     }
 
     Ok(out.phi_norm2)

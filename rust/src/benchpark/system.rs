@@ -82,6 +82,10 @@ pub fn dane() -> MachineModel {
             beta_inter: 1.0 / 22e9,
             send_overhead: 0.25e-6,
             recv_overhead: 0.30e-6,
+            // MPICH-class eager limit: messages past 16 KiB pay the
+            // rendezvous handshake (Kripke's ~24 KiB sweep faces cross it;
+            // AMG's level-0 halos stay eager).
+            eager_threshold: 16384,
             // 112 ranks share the NIC: strong sharing penalty.
             nic_share: 40.0,
             // Fabric congestion rises with node count (Fig 5 decline).
@@ -112,6 +116,11 @@ pub fn tioga() -> MachineModel {
             beta_inter: 1.0 / 20e9,
             send_overhead: 0.9e-6, // GPU-side staging
             recv_overhead: 0.9e-6,
+            // GPU-attached eager staging buffers are scarce (GPU-direct
+            // RDMA pins device memory), so the rendezvous switch comes
+            // early: AMG's 8 KiB level-0 z-faces and Kripke's ~96 KiB
+            // sweep faces both take the handshake path.
+            eager_threshold: 4096,
             nic_share: 1.0, // 8 ranks over 4 NICs
             // Slingshot adaptive routing keeps congestion nearly flat at
             // these node counts (calibrated so Kripke's per-process
@@ -194,6 +203,21 @@ mod tests {
                 t_spread
             );
         }
+    }
+
+    #[test]
+    fn eager_thresholds_put_large_halos_on_rendezvous() {
+        use crate::mpisim::Protocol;
+        let d = dane();
+        let t = tioga();
+        // Kripke Dane sweep face: 32·32 zones × 3 lanes × 8 B = 24 KiB.
+        assert_eq!(d.protocol(24_576), Protocol::Rendezvous);
+        // AMG level-0 x-face on Dane: 32·16 zones × 8 B = 4 KiB — eager.
+        assert_eq!(d.protocol(4_096), Protocol::Eager);
+        // AMG level-0 z-face on Tioga: 32·32 zones × 8 B = 8 KiB —
+        // rendezvous under the scarce GPU staging buffers.
+        assert_eq!(t.protocol(8_192), Protocol::Rendezvous);
+        assert_eq!(t.protocol(1_024), Protocol::Eager);
     }
 
     #[test]

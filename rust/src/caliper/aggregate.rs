@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use super::profile::{AggCommMatrix, AggMetric, MsgSizeHist, RankProfile, RunProfile};
+use super::profile::{AggCommMatrix, AggMetric, MpiTimeStats, MsgSizeHist, RankProfile, RunProfile};
 
 /// Aggregate per-rank profiles into a run profile. `meta` carries the run's
 /// identity (app, system, ranks, scaling type, problem size, ...).
@@ -71,8 +71,11 @@ pub fn aggregate(meta: BTreeMap<String, String>, ranks: &[RankProfile]) -> RunPr
                     cell.1 += bytes;
                 }
             }
-            if let Some(t) = s.ext.mpi_time {
-                agg.mpi_time.get_or_insert_with(AggMetric::default).push(t);
+            if let Some(t) = &s.ext.mpi_time {
+                agg.mpi_time.get_or_insert_with(AggMetric::default).push(t.total);
+                agg.mpi_wait.get_or_insert_with(AggMetric::default).push(t.wait);
+                let transfer = agg.mpi_transfer.get_or_insert_with(AggMetric::default);
+                transfer.push(t.transfer);
             }
         }
     }
@@ -210,7 +213,11 @@ mod tests {
         m0.sent.insert(1, (2, 200));
         m0.recv.insert(1, (1, 50));
         s0.ext.comm_matrix = Some(m0);
-        s0.ext.mpi_time = Some(0.25);
+        s0.ext.mpi_time = Some(MpiTimeStats {
+            total: 0.25,
+            wait: 0.1,
+            transfer: 0.15,
+        });
         p0.regions.insert("halo".into(), s0);
 
         let mut p1 = RankProfile {
@@ -225,7 +232,11 @@ mod tests {
         m1.recv.insert(0, (2, 200));
         m1.sent.insert(0, (1, 50));
         s1.ext.comm_matrix = Some(m1);
-        s1.ext.mpi_time = Some(0.75);
+        s1.ext.mpi_time = Some(MpiTimeStats {
+            total: 0.75,
+            wait: 0.5,
+            transfer: 0.25,
+        });
         p1.regions.insert("halo".into(), s1);
 
         let run = aggregate(BTreeMap::new(), &[p0, p1]);
@@ -239,6 +250,12 @@ mod tests {
         let mt = agg.mpi_time.as_ref().unwrap();
         assert_eq!(mt.count(), 2);
         assert_eq!(mt.total(), 1.0);
+        // the wait/transfer split folds into its own distributions
+        let mw = agg.mpi_wait.as_ref().unwrap();
+        assert_eq!(mw.total(), 0.6);
+        assert_eq!(mw.max(), 0.5);
+        let mx = agg.mpi_transfer.as_ref().unwrap();
+        assert_eq!(mx.total(), 0.4);
     }
 
     #[test]

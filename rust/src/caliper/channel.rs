@@ -27,7 +27,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use super::profile::{CommMatrixStats, MsgSizeHist, RegionStats};
+use super::profile::{CommMatrixStats, MpiTimeStats, MsgSizeHist, RegionStats};
 use crate::mpisim::MpiEvent;
 
 /// One selectable metric family.
@@ -48,7 +48,9 @@ pub enum ChannelKind {
     /// Per-collective-kind call and byte counts.
     CollBreakdown,
     /// Sum of MPI event durations per region (virtual seconds a rank spent
-    /// inside MPI operations attributed to the region).
+    /// inside MPI operations attributed to the region), with the
+    /// wait-vs-transfer split of `wait`/`waitall` completions — the
+    /// paper's `MPI_Waitall`/`MPI_Irecv` wait-time attribution.
     MpiTime,
 }
 
@@ -320,6 +322,7 @@ impl MetricChannel for CommStats {
             MpiEvent::Send { dst, bytes, .. } => stats.record_send(*dst, *bytes as u64),
             MpiEvent::Recv { src, bytes, .. } => stats.record_recv(*src, *bytes as u64),
             MpiEvent::Coll { bytes, .. } => stats.record_coll(*bytes as u64),
+            MpiEvent::Wait { .. } => {}
         }
     }
 
@@ -356,7 +359,7 @@ impl MetricChannel for CommMatrix {
                 cell.0 += 1;
                 cell.1 += *bytes as u64;
             }
-            MpiEvent::Coll { .. } => {}
+            MpiEvent::Coll { .. } | MpiEvent::Wait { .. } => {}
         }
     }
 
@@ -376,7 +379,7 @@ impl MetricChannel for MsgSizeHistogram {
         match ev {
             MpiEvent::Send { bytes, .. } => h.send.record(*bytes as u64),
             MpiEvent::Recv { bytes, .. } => h.recv.record(*bytes as u64),
-            MpiEvent::Coll { .. } => {}
+            MpiEvent::Coll { .. } | MpiEvent::Wait { .. } => {}
         }
     }
 
@@ -403,7 +406,10 @@ impl MetricChannel for CollBreakdown {
     fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
 }
 
-/// Sum of MPI event durations per region.
+/// Sum of MPI event durations per region, plus the wait/transfer split of
+/// request-completion events. Waitall's per-message `Recv` events are
+/// zero-duration (the `Wait` event owns the span), so nothing is counted
+/// twice.
 struct MpiTime;
 
 impl MetricChannel for MpiTime {
@@ -412,7 +418,12 @@ impl MetricChannel for MpiTime {
     }
 
     fn on_event(&mut self, stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
-        *stats.ext.mpi_time.get_or_insert(0.0) += ev.duration();
+        let t = stats.ext.mpi_time.get_or_insert_with(MpiTimeStats::default);
+        t.total += ev.duration();
+        if let MpiEvent::Wait { wait, transfer, .. } = ev {
+            t.wait += *wait;
+            t.transfer += *transfer;
+        }
     }
 
     fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}

@@ -321,7 +321,43 @@ mod tests {
         let b = ext.coll_breakdown.as_ref().unwrap();
         assert_eq!(b["MPI_Barrier"], (1, 0));
         // durations: recv 0.5 + barrier 0.25 (sends are 0-length here)
-        assert!((ext.mpi_time.unwrap() - 0.75).abs() < 1e-12);
+        let mt = ext.mpi_time.unwrap();
+        assert!((mt.total - 0.75).abs() < 1e-12);
+        assert_eq!(mt.wait, 0.0, "no Wait events fed in");
+    }
+
+    #[test]
+    fn mpi_time_splits_waitall_into_wait_and_transfer() {
+        let cfg = ChannelConfig::parse("mpi-time").unwrap();
+        let mut p = CommProfiler::with_channels(0, cfg);
+        p.begin("halo", true, 0.0);
+        // a waitall: zero-duration per-message recvs + one Wait with split
+        p.on_event(
+            0,
+            &MpiEvent::Recv {
+                src: 1,
+                tag: 0,
+                bytes: 65536,
+                t_start: 2.0,
+                t_end: 2.0,
+            },
+        );
+        p.on_event(
+            0,
+            &MpiEvent::Wait {
+                n_reqs: 2,
+                t_start: 0.5,
+                t_end: 2.0,
+                wait: 1.0,
+                transfer: 0.5,
+            },
+        );
+        p.end("halo", 3.0);
+        let prof = p.finish(3.0);
+        let mt = prof.regions["halo"].ext.mpi_time.unwrap();
+        assert!((mt.total - 1.5).abs() < 1e-12, "Wait owns the span");
+        assert!((mt.wait - 1.0).abs() < 1e-12);
+        assert!((mt.transfer - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -43,8 +43,8 @@ pub mod report;
 pub use annotation::{Caliper, RegionGuard};
 pub use channel::{ChannelConfig, ChannelKind, ChannelSpecError, MetricChannel};
 pub use profile::{
-    AggCommMatrix, AggMetric, AggRegion, CommMatrixStats, MsgSizeHist, RankProfile, RegionStats,
-    RunProfile, SizeHist,
+    AggCommMatrix, AggMetric, AggRegion, CommMatrixStats, MpiTimeStats, MsgSizeHist, RankProfile,
+    RegionStats, RunProfile, SizeHist,
 };
 
 /// Synthetic root path for MPI traffic outside any annotation region —

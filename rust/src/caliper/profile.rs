@@ -115,6 +115,20 @@ pub struct MsgSizeHist {
     pub recv: SizeHist,
 }
 
+/// The `mpi-time` channel payload for one region on one rank: total
+/// virtual seconds inside MPI operations, with the wait/transfer split of
+/// blocking completions (`wait`/`waitall`/`waitany`). `wait` is time
+/// blocked before the critical message's wire transfer began — partner not
+/// ready, receive posted late, rendezvous handshake; `transfer` is the
+/// data-movement remainder (wire + completion overheads). The split covers
+/// request-completion calls only, so `wait + transfer <= total`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MpiTimeStats {
+    pub total: f64,
+    pub wait: f64,
+    pub transfer: f64,
+}
+
 /// Optional per-channel payloads on a region. `None` means the channel was
 /// not enabled (or saw no traffic) — absent from serialized profiles.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -123,8 +137,9 @@ pub struct RegionChannels {
     pub msg_hist: Option<MsgSizeHist>,
     /// Collective kind name (`MPI_Allreduce`, ...) → (calls, bytes).
     pub coll_breakdown: Option<BTreeMap<String, (u64, u64)>>,
-    /// Virtual seconds spent inside MPI operations attributed here.
-    pub mpi_time: Option<f64>,
+    /// Virtual seconds spent inside MPI operations attributed here, with
+    /// the Waitall wait-vs-transfer split.
+    pub mpi_time: Option<MpiTimeStats>,
 }
 
 impl RegionChannels {
@@ -287,8 +302,12 @@ fn rank_channels_json(ext: &RegionChannels, rank: usize) -> Json {
     if let Some(b) = &ext.coll_breakdown {
         c.set("coll-breakdown", coll_breakdown_json(b));
     }
-    if let Some(t) = ext.mpi_time {
-        c.set("mpi-time", t);
+    if let Some(t) = &ext.mpi_time {
+        let mut o = Json::obj();
+        o.set("total", t.total)
+            .set("wait", t.wait)
+            .set("transfer", t.transfer);
+        c.set("mpi-time", o);
     }
     c
 }
@@ -573,6 +592,11 @@ pub struct AggRegion {
     pub coll_breakdown: Option<BTreeMap<String, (u64, u64)>>,
     /// `mpi-time` channel: per-rank MPI-time distribution.
     pub mpi_time: Option<AggMetric>,
+    /// `mpi-time` channel: per-rank Waitall *wait* seconds (blocked before
+    /// the critical transfer began — the paper's wait-time attribution).
+    pub mpi_wait: Option<AggMetric>,
+    /// `mpi-time` channel: per-rank Waitall *transfer* seconds.
+    pub mpi_transfer: Option<AggMetric>,
 }
 
 impl AggRegion {
@@ -581,6 +605,8 @@ impl AggRegion {
             && self.msg_hist.is_none()
             && self.coll_breakdown.is_none()
             && self.mpi_time.is_none()
+            && self.mpi_wait.is_none()
+            && self.mpi_transfer.is_none()
         {
             return None;
         }
@@ -600,6 +626,12 @@ impl AggRegion {
         if let Some(t) = &self.mpi_time {
             c.set("mpi-time", t.to_json());
         }
+        if let Some(t) = &self.mpi_wait {
+            c.set("mpi-wait", t.to_json());
+        }
+        if let Some(t) = &self.mpi_transfer {
+            c.set("mpi-transfer", t.to_json());
+        }
         Some(c)
     }
 
@@ -618,6 +650,14 @@ impl AggRegion {
         }
         if let Some(t) = j.get("mpi-time") {
             self.mpi_time = AggMetric::from_json(t);
+        }
+        // Absent in profiles written before the wait/transfer split —
+        // optional by design, no schema bump.
+        if let Some(t) = j.get("mpi-wait") {
+            self.mpi_wait = AggMetric::from_json(t);
+        }
+        if let Some(t) = j.get("mpi-transfer") {
+            self.mpi_transfer = AggMetric::from_json(t);
         }
     }
 }

@@ -48,10 +48,11 @@ pub fn runtime_report(run: &RunProfile) -> String {
 }
 
 /// Table I attributes for every communication region — the paper's new
-/// `comm-report`. When the `mpi-time` channel was enabled, a per-region
-/// MPI-time column is appended.
+/// `comm-report`. When the `mpi-time` channel was enabled, per-region
+/// MPI-time and Waitall-wait columns are appended.
 pub fn comm_report(run: &RunProfile) -> String {
     let has_mpi_time = run.regions.values().any(|r| r.mpi_time.is_some());
+    let has_wait = run.regions.values().any(|r| r.mpi_wait.is_some());
     let mut headers = vec![
         "Comm region",
         "Sends min/max",
@@ -65,6 +66,9 @@ pub fn comm_report(run: &RunProfile) -> String {
     ];
     if has_mpi_time {
         headers.push("MPI time (max)");
+    }
+    if has_wait {
+        headers.push("Wait (max)");
     }
     let mut t = TextTable::new(&headers)
         .align(0, Align::Left)
@@ -90,6 +94,12 @@ pub fn comm_report(run: &RunProfile) -> String {
         ];
         if has_mpi_time {
             row.push(match &r.mpi_time {
+                Some(m) => format!("{:.6}", m.max()),
+                None => "-".to_string(),
+            });
+        }
+        if has_wait {
+            row.push(match &r.mpi_wait {
                 Some(m) => format!("{:.6}", m.max()),
                 None => "-".to_string(),
             });

@@ -7,7 +7,7 @@
 //!                                           (N worker threads; default 1)
 //! repro table1|table2|table3                print static tables
 //! repro table4  [--out results]             print Table IV from profiles
-//! repro fig1..fig7 [--out results]          render figures (+CSV)
+//! repro fig1..fig8 [--out results]          render figures (+CSV)
 //! repro heatmap [--out results]             comm-matrix heatmaps (+CSV)
 //! repro run --app kripke --system dane --ranks 64 [--smoke]
 //!           [--channels SPEC]               run one cell, print reports
@@ -38,7 +38,7 @@ USAGE:
                  [--channels SPEC]
   repro table1 | table2 | table3
   repro table4 [--out results]
-  repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6 | fig7  [--out results]
+  repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8  [--out results]
   repro heatmap [--out results]
   repro run --app APP --system SYS --ranks N [--smoke] [--channels SPEC]
   repro report --profile FILE.json
@@ -55,7 +55,9 @@ or `all` (default: region-times,comm-stats). Profiles are stamped with
 their channel spec, so changing --channels reruns stale cells. Example:
   repro campaign --channels comm-stats,comm-matrix
 then `repro heatmap` renders rank×rank traffic heatmaps and `repro fig7`
-contrasts zmodel's dense global pattern against AMG's banded halo.
+contrasts zmodel's dense global pattern against AMG's banded halo. With
+`--channels ...,mpi-time`, `repro fig8` renders the Waitall wait-vs-
+transfer breakdown (rendezvous wait time of large-message halos).
 APP ∈ {amg2023, kripke, laghos, zmodel}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
@@ -147,7 +149,10 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::table4(&t));
             Ok(())
         }
-        Some(fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "fig7" | "heatmap")) => {
+        Some(
+            fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "fig7" | "fig8"
+            | "heatmap"),
+        ) => {
             let t = need_profiles(&out_dir)?;
             let dir = Path::new(&out_dir);
             let text = match fig {
@@ -158,6 +163,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
                 "fig5" => figures::fig5(&t, Some(dir))?,
                 "fig6" => figures::fig6(&t, Some(dir))?,
                 "fig7" => figures::fig7(&t, Some(dir))?,
+                "fig8" => figures::fig8(&t, Some(dir))?,
                 _ => figures::comm_heatmap(&t, Some(dir))?,
             };
             println!("{}", text);

@@ -31,6 +31,7 @@ pub fn render_all(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
     all.push_str(&fig6(thicket, out)?);
     all.push_str(&comm_heatmap(thicket, out)?);
     all.push_str(&fig7(thicket, out)?);
+    all.push_str(&fig8(thicket, out)?);
     Ok(all)
 }
 
@@ -453,6 +454,67 @@ pub fn fig7(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
     Ok(text)
 }
 
+/// Fig 8 — Waitall wait-vs-transfer breakdown for each app's canonical
+/// communication region, from the `mpi-time` channel's completion split:
+/// *wait* is time a rank spent blocked before the critical message's wire
+/// transfer began (partner not ready, receive posted late, rendezvous
+/// handshake), *transfer* the data-movement remainder. This is the paper's
+/// headline per-function view — halo time concentrated in
+/// `MPI_Waitall`/`MPI_Irecv` waiting, not byte movement — which an
+/// eager-only simulator could never produce.
+pub fn fig8(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    let mut text = String::new();
+    let mut any = false;
+    for (key, group) in group_app_system(thicket) {
+        let meta_of = |k: &str| {
+            group
+                .runs
+                .first()
+                .and_then(|r| r.meta.get(k).cloned())
+                .unwrap_or_default()
+        };
+        let (app, system) = (meta_of("app"), meta_of("system"));
+        let region = halo_region_for(&app);
+        let wait = group.series(|r| stats::region_mpi_wait_avg(r, region));
+        let transfer = group.series(|r| stats::region_mpi_transfer_avg(r, region));
+        if wait.is_empty() && transfer.is_empty() {
+            continue;
+        }
+        any = true;
+        let mut series = Vec::new();
+        let mut csv = Vec::new();
+        for (name, pts) in [("wait", wait), ("transfer", transfer)] {
+            if !pts.is_empty() {
+                series.push(Series::new(name, pts.clone()));
+                csv.push((name.to_string(), pts));
+            }
+        }
+        if let Some(dir) = out {
+            write_series_csv(
+                dir.join(format!("fig8_{}_{}.csv", app, system)),
+                &csv,
+                "ranks",
+                "avg_seconds_per_rank",
+            )?;
+        }
+        let title = format!(
+            "Fig 8 — {} region '{}': Waitall wait vs transfer (avg s/rank)",
+            key, region
+        );
+        let chart = Chart::new(&title, "processes", "avg seconds per rank").log_y();
+        text.push_str(&chart.render(&series));
+        text.push('\n');
+    }
+    if !any {
+        return Ok(
+            "fig8: no profile carries the mpi-time channel's wait breakdown \
+             (re-run the campaign with --channels comm-stats,mpi-time)\n"
+                .to_string(),
+        );
+    }
+    Ok(text)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,6 +604,45 @@ mod tests {
         assert!(txt.contains("fill 100%"), "{}", txt);
         assert!(txt.contains("fill 33%"), "{}", txt);
         assert!(txt.contains("global vs neighborhood"), "{}", txt);
+    }
+
+    #[test]
+    fn fig8_renders_wait_breakdown_or_explains() {
+        use crate::caliper::{AggMetric, AggRegion, RunProfile};
+        // no mpi-time split anywhere: explanatory line
+        let txt = fig8(&Thicket::new(vec![]), None).unwrap();
+        assert!(txt.contains("mpi-time"), "{}", txt);
+
+        let mk = |ranks: usize| {
+            let mut run = RunProfile::default();
+            run.meta.insert("app".into(), "amg2023".into());
+            run.meta.insert("system".into(), "tioga".into());
+            run.meta.insert("ranks".into(), ranks.to_string());
+            let mut reg = AggRegion {
+                is_comm_region: true,
+                ..Default::default()
+            };
+            reg.time.push(1.0);
+            let mut w = AggMetric::default();
+            w.push(0.25 * ranks as f64);
+            reg.mpi_wait = Some(w);
+            let mut x = AggMetric::default();
+            x.push(0.5);
+            reg.mpi_transfer = Some(x);
+            run.regions.insert("main/matvec_comm_level_0".into(), reg);
+            run
+        };
+        let t = Thicket::new(vec![mk(8), mk(64)]);
+        let dir = std::env::temp_dir().join(format!("fig8_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let txt = fig8(&t, Some(dir.as_path())).unwrap();
+        assert!(txt.contains("Fig 8"), "{}", txt);
+        assert!(txt.contains("wait"), "{}", txt);
+        let csv = std::fs::read_to_string(dir.join("fig8_amg2023_tioga.csv")).unwrap();
+        assert!(csv.starts_with("series,ranks,avg_seconds_per_rank"), "{}", csv);
+        assert!(csv.contains("wait,8,"), "{}", csv);
+        assert!(csv.contains("transfer,64,"), "{}", csv);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

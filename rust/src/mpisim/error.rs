@@ -22,6 +22,16 @@ pub enum MpiError {
         millis: u64,
     },
 
+    #[error("rendezvous send timed out after {millis}ms real time: rank {rank} waiting for dst={dst} tag={tag} ctx={ctx} to post a matching receive")]
+    SendTimeout {
+        rank: usize,
+        dst: usize,
+        tag: i32,
+        ctx: u32,
+        /// Real-time milliseconds waited (see [`MpiError::RecvTimeout`]).
+        millis: u64,
+    },
+
     #[error("collective mismatch on ctx {ctx} seq {seq}: rank {rank} called {called} but slot holds {expected}")]
     CollectiveMismatch {
         ctx: u32,

@@ -58,6 +58,22 @@ pub enum MpiEvent {
         t_start: f64,
         t_end: f64,
     },
+    /// A wait/waitall/waitany completion: the span a rank spent blocked in
+    /// request completion, split into *wait* (blocked before the critical
+    /// transfer began — partner not ready, receive posted late, rendezvous
+    /// handshake) and *transfer* (wire time + completion overheads). The
+    /// per-message `Recv` events a waitall completes are emitted
+    /// zero-duration so this event carries the time exactly once.
+    Wait {
+        /// Requests completed by this call.
+        n_reqs: usize,
+        t_start: f64,
+        t_end: f64,
+        /// Partner-wait seconds (the paper's `MPI_Waitall` wait time).
+        wait: f64,
+        /// Data-movement seconds (wire + overheads).
+        transfer: f64,
+    },
 }
 
 impl MpiEvent {
@@ -66,7 +82,8 @@ impl MpiEvent {
         match self {
             MpiEvent::Send { t_start, t_end, .. }
             | MpiEvent::Recv { t_start, t_end, .. }
-            | MpiEvent::Coll { t_start, t_end, .. } => t_end - t_start,
+            | MpiEvent::Coll { t_start, t_end, .. }
+            | MpiEvent::Wait { t_start, t_end, .. } => t_end - t_start,
         }
     }
 }

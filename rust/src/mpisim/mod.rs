@@ -20,12 +20,18 @@
 //!   chain ([`hooks`]) — this is where the Caliper communication-pattern
 //!   profiler attaches, exactly like Caliper's GOTCHA/PMPI wrappers on the
 //!   real thing.
-//! - **Virtual time**: sends are eager (buffered) and cost the sender an
-//!   injection overhead; a message arrives at
-//!   `sender_clock + α(link) + bytes·β(link)`; receives complete at
-//!   `max(receiver_clock, arrival)`. Collectives synchronize participants to
-//!   `max(entry clocks) + model cost`. See [`netmodel`] for the Dane/Tioga
-//!   parameterizations and the statistical contention terms.
+//! - **Virtual time**: every send costs the sender an injection overhead.
+//!   Messages at or below the machine's eager threshold are buffered and
+//!   arrive at `sender_ready + α(link) + bytes·β(link)`; larger messages
+//!   use the **rendezvous** protocol — the wire transfer starts only once
+//!   the sender's RTS meets a posted receive, so completion is
+//!   `max(sender_ready, receiver_post) + handshake + wire` and the sender's
+//!   `wait` blocks until the receiver matches ([`request`]). Receives
+//!   complete at `max(receiver_clock, arrival)`; `waitall` is
+//!   arrival-order invariant and reports a wait-vs-transfer split.
+//!   Collectives synchronize participants to `max(entry clocks) + model
+//!   cost`. See [`netmodel`] for the Dane/Tioga parameterizations, eager
+//!   thresholds, and the statistical contention terms.
 
 pub mod cart;
 pub mod clock;
@@ -46,7 +52,7 @@ pub use datatype::MpiData;
 pub use error::MpiError;
 pub use hooks::{CollKind, MpiEvent, MpiHook};
 pub use netmodel::{ComputeParams, GroupSpan, MachineModel, NetParams};
-pub use request::{RecvRequest, SendRequest, Status};
+pub use request::{Protocol, RecvRequest, Request, SendRequest, Status};
 pub use world::{Rank, World, WorldConfig};
 
 /// Wildcard tag for receives.

@@ -2,9 +2,13 @@
 //! computation.
 //!
 //! Communication uses a two-level Hockney model (`α + β·bytes`) with distinct
-//! intra-node and inter-node link classes, block rank→node mapping, plus two
-//! *statistical* congestion terms that stand in for effects we cannot observe
-//! without a packet-level network simulator:
+//! intra-node and inter-node link classes, block rank→node mapping, an
+//! eager/rendezvous protocol crossover per machine
+//! ([`NetParams::eager_threshold`]: messages above it pay an RTS/CTS
+//! handshake and cannot start their wire transfer before the receiver has
+//! posted — see [`super::request`]), plus two *statistical* congestion
+//! terms that stand in for effects we cannot observe without a
+//! packet-level network simulator:
 //!
 //! - **NIC sharing**: ranks on a node share the node's injection bandwidth;
 //!   effective inter-node β is scaled by a factor that grows with
@@ -40,10 +44,16 @@ pub struct NetParams {
     pub alpha_inter: f64,
     pub beta_inter: f64,
     /// Sender-side injection overhead per message (s) — the part of a send
-    /// that occupies the sending rank itself (eager protocol).
+    /// that occupies the sending rank itself.
     pub send_overhead: f64,
     /// Receiver-side completion overhead per message (s).
     pub recv_overhead: f64,
+    /// Eager/rendezvous protocol crossover (bytes): messages up to this
+    /// size are sent eagerly (buffered — complete at the sender as soon as
+    /// injected); larger messages use the rendezvous protocol, whose wire
+    /// transfer starts only once the sender's RTS meets a posted receive
+    /// (`max(sender_ready, receiver_post) + handshake + wire`).
+    pub eager_threshold: usize,
     /// NIC-sharing factor: effective inter-node β is multiplied by
     /// `1 + nic_share * (ranks_per_node - 1) / ranks_per_node`.
     pub nic_share: f64,
@@ -165,6 +175,29 @@ impl MachineModel {
         }
     }
 
+    /// Protocol for a message of `bytes` under this machine's eager
+    /// threshold: eager up to (and including) the threshold, rendezvous
+    /// strictly above it.
+    pub fn protocol(&self, bytes: usize) -> super::request::Protocol {
+        if bytes > self.net.eager_threshold {
+            super::request::Protocol::Rendezvous
+        } else {
+            super::request::Protocol::Eager
+        }
+    }
+
+    /// Rendezvous RTS/CTS handshake latency between two ranks: one control
+    /// round trip on the pair's link class. This is the bounded latency
+    /// step a message pays when it crosses the eager threshold — and it is
+    /// pure *wait* time (no payload bytes move during the handshake).
+    pub fn handshake_time(&self, src: usize, dst: usize) -> f64 {
+        if self.node_of(src) == self.node_of(dst) {
+            2.0 * self.net.alpha_intra
+        } else {
+            2.0 * self.net.alpha_inter
+        }
+    }
+
     /// Model cost of a collective over a block-contiguous group of `p`
     /// ranks (starting at rank 0 — the world-communicator case) moving
     /// `bytes` per rank. Sub-communicators with an explicit member list
@@ -243,6 +276,7 @@ impl MachineModel {
                 beta_inter: 1.0 / 10e9,
                 send_overhead: 0.2e-6,
                 recv_overhead: 0.2e-6,
+                eager_threshold: 8192,
                 nic_share: 0.0,
                 contention_coeff: 0.0,
                 contention_exp: 1.0,
@@ -388,6 +422,24 @@ mod tests {
         };
         assert!(t_packed > t_packed_noshare, "group co-location must cost");
         assert!(t_spread_noshare < t_packed, "spread group shares no NIC");
+    }
+
+    #[test]
+    fn protocol_crossover_at_threshold() {
+        use crate::mpisim::request::Protocol;
+        let m = MachineModel::test_machine();
+        let thr = m.net.eager_threshold;
+        assert_eq!(m.protocol(0), Protocol::Eager);
+        assert_eq!(m.protocol(thr), Protocol::Eager, "threshold itself is eager");
+        assert_eq!(m.protocol(thr + 1), Protocol::Rendezvous);
+    }
+
+    #[test]
+    fn handshake_is_one_control_round_trip() {
+        let m = MachineModel::test_machine();
+        assert_eq!(m.handshake_time(0, 1), 2.0 * m.net.alpha_intra);
+        assert_eq!(m.handshake_time(0, 5), 2.0 * m.net.alpha_inter);
+        assert!(m.handshake_time(0, 5) > m.handshake_time(0, 1));
     }
 
     #[test]

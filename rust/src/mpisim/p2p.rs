@@ -1,21 +1,32 @@
-//! The point-to-point matching engine: one mailbox per world rank.
+//! The point-to-point engine: one mailbox + posted-receive table per
+//! world rank.
 //!
-//! Senders deposit envelopes (eager protocol) carrying the payload and the
-//! *virtual arrival time* computed from the sender's clock plus the network
-//! model; receivers block (real condvar wait) until a matching envelope is
-//! present, then synchronize their virtual clock to the arrival time.
+//! Senders deposit envelopes carrying the payload and the protocol timing
+//! inputs — the virtual time the sender finished injecting, the wire time,
+//! and (for rendezvous) the handshake latency plus a completion
+//! back-channel to the sender. Receivers block (real condvar wait) until a
+//! matching envelope is present, then compute the virtual arrival:
+//!
+//! - **Eager**: `sender_ready + wire` — the payload was buffered in
+//!   flight regardless of when the receive was posted.
+//! - **Rendezvous**: `max(sender_ready, receiver_post) + handshake + wire`
+//!   — the wire transfer starts only once the sender's RTS meets a posted
+//!   receive, so a late `irecv` delays a large message's completion. The
+//!   receive's post time comes from the **posted-receive table**, written
+//!   at `irecv` time (not at `wait` time).
 //!
 //! Matching is MPI-conformant: per (source, tag) FIFO in sender program
 //! order. `ANY_TAG` receives match the earliest-deposited envelope from the
 //! given source; ANY_SOURCE (`src = None`) matches the earliest-deposited
 //! envelope overall and is therefore only deterministic for applications
-//! whose matching is unambiguous (none of the three apps here use it).
+//! whose matching is unambiguous (none of the apps here use it).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::error::MpiError;
+use super::request::{Protocol, SendCell};
 use super::ANY_TAG;
 
 /// A message in flight (or queued unexpected).
@@ -26,15 +37,58 @@ pub struct Envelope {
     pub tag: i32,
     pub ctx: u32,
     pub payload: Box<[u8]>,
-    /// Virtual time at which the message is fully available at the receiver.
-    pub arrival: f64,
+    /// Protocol the sender chose from the machine's eager threshold.
+    pub protocol: Protocol,
+    /// Virtual time the sender finished injecting the message.
+    pub sender_ready: f64,
+    /// Wire time (α + β·bytes) for this message's link class.
+    pub wire: f64,
+    /// Rendezvous RTS/CTS handshake latency; 0 for eager.
+    pub handshake: f64,
+    /// Rendezvous completion back-channel: the receiver writes the
+    /// transfer's virtual completion time here when it matches.
+    pub reply: Option<Arc<SendCell>>,
 }
 
-/// Per-rank mailbox: deposit-ordered queue of unexpected messages.
+impl Envelope {
+    /// Virtual time the payload is fully available at the receiver, given
+    /// the post time of the matching receive.
+    pub fn arrival(&self, post_time: f64) -> f64 {
+        match self.protocol {
+            Protocol::Eager => self.sender_ready + self.wire,
+            Protocol::Rendezvous => {
+                self.sender_ready.max(post_time) + self.handshake + self.wire
+            }
+        }
+    }
+}
+
+/// One entry of the posted-receive table: a receive that was posted
+/// (`irecv`) but not yet completed.
+#[derive(Debug, Clone)]
+pub struct PostedRecv {
+    pub id: u64,
+    pub src: Option<usize>,
+    pub tag: i32,
+    pub ctx: u32,
+    /// Virtual time the receive was posted — what gates a rendezvous
+    /// partner's transfer start.
+    pub post_time: f64,
+}
+
+#[derive(Debug, Default)]
+struct PostTable {
+    next_id: u64,
+    entries: Vec<PostedRecv>,
+}
+
+/// Per-rank mailbox: deposit-ordered queue of unexpected messages plus the
+/// rank's posted-receive table.
 #[derive(Default)]
 pub struct Mailbox {
     queue: Mutex<VecDeque<Envelope>>,
     cv: Condvar,
+    posted: Mutex<PostTable>,
 }
 
 impl Mailbox {
@@ -56,6 +110,60 @@ impl Mailbox {
         self.queue.lock().unwrap().len()
     }
 
+    /// Register a posted receive; returns the table id the
+    /// [`super::RecvRequest`] carries.
+    pub fn post_recv(&self, src: Option<usize>, tag: i32, ctx: u32, post_time: f64) -> u64 {
+        let mut t = self.posted.lock().unwrap();
+        let id = t.next_id;
+        t.next_id += 1;
+        t.entries.push(PostedRecv {
+            id,
+            src,
+            tag,
+            ctx,
+            post_time,
+        });
+        id
+    }
+
+    /// Remove and return a posted entry at completion time.
+    pub fn take_posted(&self, id: u64) -> Option<PostedRecv> {
+        let mut t = self.posted.lock().unwrap();
+        let idx = t.entries.iter().position(|e| e.id == id)?;
+        Some(t.entries.swap_remove(idx))
+    }
+
+    /// Number of posted-but-uncompleted receives — failure diagnostics.
+    pub fn posted_pending(&self) -> usize {
+        self.posted.lock().unwrap().entries.len()
+    }
+
+    /// Still-pending posted receives with the exact same matching key that
+    /// were posted before entry `id` (ids are allocation-ordered). This is
+    /// how many queued envelopes are *not ours to take*: posted receives
+    /// bind messages in post order, as MPI requires.
+    pub fn pending_posted_before(&self, id: u64, src: Option<usize>, tag: i32, ctx: u32) -> usize {
+        let t = self.posted.lock().unwrap();
+        t.entries
+            .iter()
+            .filter(|e| e.id < id && e.src == src && e.tag == tag && e.ctx == ctx)
+            .count()
+    }
+
+    /// Nonblocking probe: is a matching envelope queued? (`MPI_Test` for
+    /// receives — real-time dependent, same caveat class as ANY_SOURCE.)
+    pub fn peek_match(&self, src: Option<usize>, tag: i32, ctx: u32) -> bool {
+        let q = self.queue.lock().unwrap();
+        Self::find_match(&q, src, tag, ctx).is_some()
+    }
+
+    /// Block until a new envelope is deposited or `slice` elapses — the
+    /// progress wait of `waitany`.
+    pub fn wait_deposit(&self, slice: Duration) {
+        let q = self.queue.lock().unwrap();
+        let (_guard, _res) = self.cv.wait_timeout(q, slice).unwrap();
+    }
+
     /// Block until an envelope matching (src, tag, ctx) is available and
     /// remove it. `timeout` bounds *real* waiting time (deadlock guard).
     pub fn match_recv(
@@ -66,10 +174,27 @@ impl Mailbox {
         ctx: u32,
         timeout: Duration,
     ) -> Result<Envelope, MpiError> {
+        self.match_recv_nth(my_rank, src, tag, ctx, 0, timeout)
+    }
+
+    /// Like [`Mailbox::match_recv`], but skip the first `skip` matching
+    /// envelopes — the binding for a receive posted after `skip`
+    /// still-pending receives with the same matching key (see
+    /// [`Mailbox::pending_posted_before`]). Earlier envelopes stay queued
+    /// for the earlier posts.
+    pub fn match_recv_nth(
+        &self,
+        my_rank: usize,
+        src: Option<usize>,
+        tag: i32,
+        ctx: u32,
+        skip: usize,
+        timeout: Duration,
+    ) -> Result<Envelope, MpiError> {
         let deadline = Instant::now() + timeout;
         let mut q = self.queue.lock().unwrap();
         loop {
-            if let Some(idx) = Self::find_match(&q, src, tag, ctx) {
+            if let Some(idx) = Self::find_match_nth(&q, src, tag, ctx, skip) {
                 return Ok(q.remove(idx).unwrap());
             }
             let now = Instant::now();
@@ -88,26 +213,43 @@ impl Mailbox {
     }
 
     fn find_match(q: &VecDeque<Envelope>, src: Option<usize>, tag: i32, ctx: u32) -> Option<usize> {
-        q.iter().position(|e| {
-            e.ctx == ctx
-                && (tag == ANY_TAG || e.tag == tag)
-                && src.map(|s| e.src == s).unwrap_or(true)
-        })
+        Self::find_match_nth(q, src, tag, ctx, 0)
+    }
+
+    fn find_match_nth(
+        q: &VecDeque<Envelope>,
+        src: Option<usize>,
+        tag: i32,
+        ctx: u32,
+        skip: usize,
+    ) -> Option<usize> {
+        q.iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                e.ctx == ctx
+                    && (tag == ANY_TAG || e.tag == tag)
+                    && src.map(|s| e.src == s).unwrap_or(true)
+            })
+            .map(|(i, _)| i)
+            .nth(skip)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
-    fn env(src: usize, tag: i32, ctx: u32, arrival: f64) -> Envelope {
+    fn env(src: usize, tag: i32, ctx: u32, sender_ready: f64) -> Envelope {
         Envelope {
             src,
             tag,
             ctx,
             payload: vec![0u8; 8].into_boxed_slice(),
-            arrival,
+            protocol: Protocol::Eager,
+            sender_ready,
+            wire: 0.0,
+            handshake: 0.0,
+            reply: None,
         }
     }
 
@@ -122,8 +264,8 @@ mod tests {
         let b = mb
             .match_recv(0, Some(1), 7, 0, Duration::from_secs(1))
             .unwrap();
-        assert_eq!(a.arrival, 1.0);
-        assert_eq!(b.arrival, 2.0);
+        assert_eq!(a.arrival(0.0), 1.0);
+        assert_eq!(b.arrival(0.0), 2.0);
     }
 
     #[test]
@@ -135,11 +277,11 @@ mod tests {
         let e = mb
             .match_recv(0, Some(1), 8, 5, Duration::from_secs(1))
             .unwrap();
-        assert_eq!(e.arrival, 3.0);
+        assert_eq!(e.sender_ready, 3.0);
         let e = mb
             .match_recv(0, Some(1), 8, 0, Duration::from_secs(1))
             .unwrap();
-        assert_eq!(e.arrival, 2.0);
+        assert_eq!(e.sender_ready, 2.0);
         assert_eq!(mb.pending(), 1);
     }
 
@@ -189,7 +331,70 @@ mod tests {
         let e = mb
             .match_recv(0, Some(4), 1, 0, Duration::from_secs(5))
             .unwrap();
-        assert_eq!(e.arrival, 9.0);
+        assert_eq!(e.sender_ready, 9.0);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn posted_table_records_post_times() {
+        let mb = Mailbox::new();
+        let a = mb.post_recv(Some(1), 7, 0, 1.25);
+        let b = mb.post_recv(None, ANY_TAG, 0, 2.5);
+        assert_ne!(a, b);
+        assert_eq!(mb.posted_pending(), 2);
+        let ea = mb.take_posted(a).unwrap();
+        assert_eq!(ea.post_time, 1.25);
+        assert_eq!(ea.src, Some(1));
+        assert_eq!(mb.posted_pending(), 1);
+        assert!(mb.take_posted(a).is_none(), "entries are consumed once");
+        assert_eq!(mb.take_posted(b).unwrap().post_time, 2.5);
+        assert_eq!(mb.posted_pending(), 0);
+    }
+
+    #[test]
+    fn match_recv_nth_skips_earlier_bindings() {
+        let mb = Mailbox::new();
+        mb.deposit(env(1, 7, 0, 1.0));
+        mb.deposit(env(1, 7, 0, 2.0));
+        let e = mb
+            .match_recv_nth(0, Some(1), 7, 0, 1, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.sender_ready, 2.0, "skip=1 takes the second match");
+        let e = mb
+            .match_recv(0, Some(1), 7, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.sender_ready, 1.0, "first match still queued");
+        // pending_posted_before counts only same-key earlier pending posts
+        let a = mb.post_recv(Some(1), 7, 0, 0.0);
+        let b = mb.post_recv(Some(1), 7, 0, 0.5);
+        let c = mb.post_recv(Some(1), 8, 0, 0.5); // different tag
+        assert_eq!(mb.pending_posted_before(b, Some(1), 7, 0), 1);
+        assert_eq!(mb.pending_posted_before(a, Some(1), 7, 0), 0);
+        assert_eq!(mb.pending_posted_before(c, Some(1), 8, 0), 0);
+    }
+
+    #[test]
+    fn peek_match_is_nondestructive() {
+        let mb = Mailbox::new();
+        assert!(!mb.peek_match(Some(1), 7, 0));
+        mb.deposit(env(1, 7, 0, 1.0));
+        assert!(mb.peek_match(Some(1), 7, 0));
+        assert!(mb.peek_match(None, ANY_TAG, 0));
+        assert!(!mb.peek_match(Some(2), 7, 0));
+        assert_eq!(mb.pending(), 1, "peek must not consume");
+    }
+
+    #[test]
+    fn arrival_eager_vs_rendezvous() {
+        let mut e = env(0, 1, 0, 10.0);
+        e.wire = 2.0;
+        // eager: post time is irrelevant
+        assert_eq!(e.arrival(0.0), 12.0);
+        assert_eq!(e.arrival(100.0), 12.0);
+        // rendezvous: gated by the later of sender-ready and post
+        e.protocol = Protocol::Rendezvous;
+        e.handshake = 0.5;
+        assert_eq!(e.arrival(0.0), 12.5, "sender-gated");
+        assert_eq!(e.arrival(20.0), 22.5, "receiver-post-gated");
     }
 }

@@ -1,14 +1,31 @@
-//! Nonblocking-operation handles.
+//! Nonblocking-operation handles: the unified request state machine.
 //!
-//! Sends are eager (buffered) in this simulator, so a `SendRequest` is
-//! complete at creation and exists for API fidelity: applications written
-//! against isend/irecv/waitall port over directly. An `RecvRequest` is a
-//! deferred match descriptor — the actual matching happens at `wait`,
-//! which is semantically equivalent because matching is per-(source, tag)
-//! FIFO and the virtual completion time is `max(wait time, arrival time)`
-//! either way.
+//! A [`Request`] is either a send or a receive handle. Sends follow one of
+//! two protocols, chosen per message by the machine's eager threshold
+//! ([`super::netmodel::NetParams::eager_threshold`]):
+//!
+//! - **Eager** (`bytes <= threshold`): the payload is buffered at the
+//!   destination when `isend` returns; the request is complete at creation
+//!   and `wait` is free. Arrival is `sender_injection_end + wire`.
+//! - **Rendezvous** (`bytes > threshold`): `isend` only posts an RTS; the
+//!   wire transfer cannot begin before the receiver has posted a matching
+//!   receive, so completion is
+//!   `max(sender_ready, receiver_post) + handshake + wire`. The request
+//!   stays pending until the receiver matches it and writes the completion
+//!   time into the [`SendCell`] back-channel; the sender's
+//!   `wait`/`waitall` blocks on that cell and synchronizes its virtual
+//!   clock to the completion — which is exactly the *wait time* the
+//!   paper's per-function breakdowns show concentrated in
+//!   `MPI_Waitall`/`MPI_Irecv`.
+//!
+//! A receive handle is a key into the rank's posted-receive table
+//! ([`super::p2p::Mailbox::post_recv`]); the post **time** recorded there
+//! is what gates a rendezvous partner's transfer start. Completion happens
+//! at `wait`/`waitall` on the owning [`super::Rank`], which also provides
+//! `waitany` and a nonblocking `test`.
 
-use super::error::MpiError;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Completion status of a receive.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,33 +36,145 @@ pub struct Status {
     pub bytes: usize,
 }
 
-/// Handle for a posted (deferred) receive.
+/// Transfer protocol of one message, decided by the machine's eager
+/// threshold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// Buffered: complete at the sender as soon as it is injected.
+    Eager,
+    /// Handshake: the transfer starts only once sender readiness meets a
+    /// posted receive.
+    Rendezvous,
+}
+
+/// Sender-side completion back-channel for a rendezvous transfer. The
+/// receiver writes the virtual completion time when it matches the
+/// envelope; the sender's `wait` blocks (real time) until then.
+#[derive(Debug, Default)]
+pub struct SendCell {
+    state: Mutex<Option<f64>>,
+    cv: Condvar,
+}
+
+impl SendCell {
+    /// Record the transfer's virtual completion time and wake the sender.
+    pub fn complete(&self, t: f64) {
+        let mut s = self.state.lock().unwrap();
+        // First match wins; a cell is only ever completed once per message.
+        if s.is_none() {
+            *s = Some(t);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Nonblocking completion probe.
+    pub fn is_complete(&self) -> bool {
+        self.state.lock().unwrap().is_some()
+    }
+
+    /// Block (real time) until completed; `None` on timeout (deadlock
+    /// guard — the receiver never matched).
+    pub fn wait(&self, timeout: Duration) -> Option<f64> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(t) = *s {
+                return Some(t);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+}
+
+/// Send-side protocol state.
+#[derive(Debug, Clone)]
+pub(crate) enum SendState {
+    /// Eager send: buffered, complete at creation.
+    Eager,
+    /// Rendezvous send: pending until the receiver matches. `wire` is the
+    /// message's wire time (for the wait/transfer split) and `ready` the
+    /// virtual time the sender finished injecting.
+    Rendezvous {
+        cell: Arc<SendCell>,
+        wire: f64,
+        #[allow(dead_code)] // diagnostic value; the split uses the cell's time
+        ready: f64,
+    },
+}
+
+/// Handle for a nonblocking send.
 #[derive(Debug)]
+#[must_use = "complete the request with Rank::wait_send or Rank::waitall"]
+pub struct SendRequest {
+    /// Destination world rank (diagnostics).
+    pub(crate) dst: usize,
+    pub(crate) tag: i32,
+    pub(crate) ctx: u32,
+    pub(crate) bytes: usize,
+    pub(crate) state: SendState,
+}
+
+impl SendRequest {
+    /// Payload size of the send.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Protocol the message was posted under.
+    pub fn protocol(&self) -> Protocol {
+        match self.state {
+            SendState::Eager => Protocol::Eager,
+            SendState::Rendezvous { .. } => Protocol::Rendezvous,
+        }
+    }
+
+    /// Nonblocking completion probe (`MPI_Test` for sends): eager sends
+    /// are always complete; a rendezvous send completes once the receiver
+    /// has matched it.
+    pub fn test(&self) -> bool {
+        match &self.state {
+            SendState::Eager => true,
+            SendState::Rendezvous { cell, .. } => cell.is_complete(),
+        }
+    }
+}
+
+/// Handle for a posted receive: a key into the owning rank's
+/// posted-receive table, where the post time lives.
+#[derive(Debug)]
+#[must_use = "complete the request with Rank::wait_recv or Rank::waitall"]
 pub struct RecvRequest {
     /// Matching key: concrete source (world rank) or None for ANY_SOURCE.
     pub(crate) src: Option<usize>,
     pub(crate) tag: i32,
     pub(crate) ctx: u32,
-    /// Virtual time at which the receive was posted.
-    pub(crate) post_time: f64,
-    /// Set once waited; guards double-wait in debug builds.
-    pub(crate) done: bool,
+    /// Entry id in the posted-receive table ([`super::p2p::Mailbox`]).
+    pub(crate) post_id: u64,
 }
 
-/// Handle for an eager send (already complete).
+/// Unified nonblocking handle, the element type of
+/// [`super::Rank::waitall`] / [`super::Rank::waitany`] /
+/// [`super::Rank::test`].
 #[derive(Debug)]
-pub struct SendRequest {
-    pub(crate) _bytes: usize,
+pub enum Request {
+    Send(SendRequest),
+    Recv(RecvRequest),
 }
 
-impl SendRequest {
-    /// Eager sends complete immediately.
-    pub fn test(&self) -> bool {
-        true
+impl From<SendRequest> for Request {
+    fn from(r: SendRequest) -> Request {
+        Request::Send(r)
     }
+}
 
-    pub fn wait(self) -> Result<(), MpiError> {
-        Ok(())
+impl From<RecvRequest> for Request {
+    fn from(r: RecvRequest) -> Request {
+        Request::Recv(r)
     }
 }
 
@@ -54,10 +183,60 @@ mod tests {
     use super::*;
 
     #[test]
-    fn send_request_is_complete() {
-        let r = SendRequest { _bytes: 64 };
+    fn eager_send_request_is_complete() {
+        let r = SendRequest {
+            dst: 1,
+            tag: 0,
+            ctx: 0,
+            bytes: 64,
+            state: SendState::Eager,
+        };
         assert!(r.test());
-        assert!(r.wait().is_ok());
+        assert_eq!(r.protocol(), Protocol::Eager);
+        assert_eq!(r.bytes(), 64);
+    }
+
+    #[test]
+    fn rendezvous_send_completes_through_cell() {
+        let cell = Arc::new(SendCell::default());
+        let r = SendRequest {
+            dst: 1,
+            tag: 0,
+            ctx: 0,
+            bytes: 1 << 20,
+            state: SendState::Rendezvous {
+                cell: cell.clone(),
+                wire: 1e-4,
+                ready: 0.5,
+            },
+        };
+        assert_eq!(r.protocol(), Protocol::Rendezvous);
+        assert!(!r.test(), "pending until the receiver matches");
+        cell.complete(2.5);
+        assert!(r.test());
+        assert_eq!(cell.wait(Duration::from_secs(1)), Some(2.5));
+        // the first completion wins
+        cell.complete(9.0);
+        assert_eq!(cell.wait(Duration::from_secs(1)), Some(2.5));
+    }
+
+    #[test]
+    fn send_cell_times_out_without_completion() {
+        let cell = SendCell::default();
+        assert!(cell.wait(Duration::from_millis(20)).is_none());
+        assert!(!cell.is_complete());
+    }
+
+    #[test]
+    fn send_cell_cross_thread_wakeup() {
+        let cell = Arc::new(SendCell::default());
+        let c2 = cell.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            c2.complete(7.0);
+        });
+        assert_eq!(cell.wait(Duration::from_secs(5)), Some(7.0));
+        t.join().unwrap();
     }
 
     #[test]

@@ -19,7 +19,8 @@
 //! ```
 
 use std::collections::HashMap;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::clock::{Clock, ClockHandle};
 use super::collectives::{frame_concat, frame_split, CollBoard, ReduceOp};
@@ -29,7 +30,7 @@ use super::error::MpiError;
 use super::hooks::{CollKind, HookHandle, MpiEvent};
 use super::netmodel::{CollClass, GroupSpan, MachineModel};
 use super::p2p::{Envelope, Mailbox};
-use super::request::{RecvRequest, SendRequest, Status};
+use super::request::{Protocol, RecvRequest, Request, SendCell, SendRequest, SendState, Status};
 
 /// Internal tag for [`Rank::alltoallv`]'s pairwise exchanges. Any app tag
 /// may coexist: matching is per-(src, tag, ctx) FIFO, so the reserved tag
@@ -91,6 +92,22 @@ fn _send_sync_audit() {
     assert_send_sync::<Mailbox>();
     assert_send_sync::<CollBoard>();
     assert_send_sync::<Envelope>();
+}
+
+/// How a collective's model cost is sized. `Fixed` is for operations whose
+/// per-member byte count is structurally identical on every rank
+/// (allreduce lane counts are asserted equal); the `Result*` variants
+/// price rooted / variable-size collectives from the board's shared result
+/// so every member advances its clock identically.
+#[derive(Debug, Clone, Copy)]
+enum CollCost {
+    /// Caller-supplied byte count (must be member-invariant).
+    Fixed(usize),
+    /// Size of the shared result (bcast payload, reduce vector).
+    ResultBytes,
+    /// Shared result split over the members — the per-step block size of a
+    /// ring allgather over variable contributions.
+    ResultBytesPerMember,
 }
 
 /// The world launcher.
@@ -232,7 +249,12 @@ impl<'w> Rank<'w> {
 
     // ---- point-to-point -------------------------------------------------
 
-    /// Blocking (eager/buffered) send of a typed slice.
+    /// Blocking send of a typed slice. Below the machine's eager threshold
+    /// this returns as soon as the message is injected (buffered); above
+    /// it, the rendezvous protocol blocks until the receiver has posted a
+    /// matching receive — two ranks blocking-sending large messages to
+    /// each other deadlock, exactly as in real MPI (the guard surfaces it
+    /// as [`MpiError::SendTimeout`]).
     pub fn send<T: MpiData>(
         &mut self,
         buf: &[T],
@@ -240,10 +262,13 @@ impl<'w> Rank<'w> {
         tag: i32,
         comm: &Comm,
     ) -> Result<(), MpiError> {
-        self.isend(buf, dst, tag, comm)?.wait()
+        let req = self.isend(buf, dst, tag, comm)?;
+        self.wait_send(req)
     }
 
-    /// Nonblocking send (eager, so complete at return).
+    /// Nonblocking send. Eager messages (`bytes <= eager_threshold`) are
+    /// complete at return; larger messages return a *pending* request that
+    /// must be completed with [`Rank::wait_send`] / [`Rank::waitall`].
     pub fn isend<T: MpiData>(
         &mut self,
         buf: &[T],
@@ -261,20 +286,39 @@ impl<'w> Rank<'w> {
         let payload = encode(buf);
         let bytes = payload.len();
         let t_start = self.clock.now();
-        // Sender pays its injection overhead.
+        // Sender pays its injection overhead; the message cannot be on the
+        // wire before injection ends (a message used to depart at
+        // `t_start`, shaving `send_overhead` off every arrival).
         self.clock.advance(self.core.machine.net.send_overhead);
         let t_end = self.clock.now();
-        let arrival = t_start
-            + self
-                .core
-                .machine
-                .transfer_time(bytes, self.rank, dst_world, self.core.size);
+        let machine = &self.core.machine;
+        let wire = machine.transfer_time(bytes, self.rank, dst_world, self.core.size);
+        let protocol = machine.protocol(bytes);
+        let (state, handshake, reply) = match protocol {
+            Protocol::Eager => (SendState::Eager, 0.0, None),
+            Protocol::Rendezvous => {
+                let cell = Arc::new(SendCell::default());
+                (
+                    SendState::Rendezvous {
+                        cell: cell.clone(),
+                        wire,
+                        ready: t_end,
+                    },
+                    machine.handshake_time(self.rank, dst_world),
+                    Some(cell),
+                )
+            }
+        };
         self.core.mailboxes[dst_world].deposit(Envelope {
             src: self.rank,
             tag,
             ctx: comm.ctx,
             payload,
-            arrival,
+            protocol,
+            sender_ready: t_end,
+            wire,
+            handshake,
+            reply,
         });
         self.emit(MpiEvent::Send {
             dst: dst_world,
@@ -283,7 +327,13 @@ impl<'w> Rank<'w> {
             t_start,
             t_end,
         });
-        Ok(SendRequest { _bytes: bytes })
+        Ok(SendRequest {
+            dst: dst_world,
+            tag,
+            ctx: comm.ctx,
+            bytes,
+            state,
+        })
     }
 
     /// Blocking receive. `src` is a communicator rank, or `None` for
@@ -298,7 +348,10 @@ impl<'w> Rank<'w> {
         self.wait_recv(req)
     }
 
-    /// Post a nonblocking receive; match happens at [`Rank::wait_recv`].
+    /// Post a nonblocking receive into this rank's posted-receive table.
+    /// The *post time* recorded there gates when a rendezvous partner may
+    /// start its wire transfer; completion happens at [`Rank::wait_recv`]
+    /// or [`Rank::waitall`].
     pub fn irecv(
         &mut self,
         src: Option<usize>,
@@ -317,12 +370,17 @@ impl<'w> Rank<'w> {
             }
             None => None,
         };
+        let post_id = self.core.mailboxes[self.rank].post_recv(
+            src_world,
+            tag,
+            comm.ctx,
+            self.clock.now(),
+        );
         Ok(RecvRequest {
             src: src_world,
             tag,
             ctx: comm.ctx,
-            post_time: self.clock.now(),
-            done: false,
+            post_id,
         })
     }
 
@@ -331,43 +389,258 @@ impl<'w> Rank<'w> {
     /// `max(now, arrival) + recv_overhead`.
     pub fn wait_recv<T: MpiData>(
         &mut self,
-        mut req: RecvRequest,
+        req: RecvRequest,
     ) -> Result<(Vec<T>, Status), MpiError> {
-        debug_assert!(!req.done, "double wait on RecvRequest");
-        req.done = true;
-        let env = self.core.mailboxes[self.rank].match_recv(
-            self.rank,
-            req.src,
-            req.tag,
-            req.ctx,
-            self.core.timeout,
-        )?;
-        let t_start = self.clock.now().min(req.post_time);
-        self.clock.sync_to(env.arrival);
-        self.clock.advance(self.core.machine.net.recv_overhead);
-        let t_end = self.clock.now();
-        let status = Status {
-            src: env.src,
-            tag: env.tag,
-            bytes: env.payload.len(),
-        };
-        self.emit(MpiEvent::Recv {
-            src: env.src,
-            tag: env.tag,
-            bytes: env.payload.len(),
-            t_start,
-            t_end,
-        });
-        let data = decode::<T>(&env.payload)?;
-        Ok((data, status))
+        let mut out = self.waitall::<T>(vec![Request::Recv(req)])?;
+        Ok(out.pop().unwrap().expect("recv request yields a payload"))
     }
 
-    /// Wait on a set of receive requests in order, collecting payloads.
+    /// Complete a nonblocking send. Free for eager sends; for a rendezvous
+    /// send this blocks until the receiver has matched (its virtual wait
+    /// time lands in the `mpi-time` channel's wait/transfer split).
+    pub fn wait_send(&mut self, req: SendRequest) -> Result<(), MpiError> {
+        self.waitall::<u8>(vec![Request::Send(req)])?;
+        Ok(())
+    }
+
+    /// Wait on a set of receive requests, collecting payloads in request
+    /// order (compatibility wrapper over [`Rank::waitall`]).
     pub fn waitall_recv<T: MpiData>(
         &mut self,
         reqs: Vec<RecvRequest>,
     ) -> Result<Vec<(Vec<T>, Status)>, MpiError> {
-        reqs.into_iter().map(|r| self.wait_recv(r)).collect()
+        let out = self.waitall::<T>(reqs.into_iter().map(Request::Recv).collect())?;
+        let take = |o: Option<(Vec<T>, Status)>| o.expect("recv request yields a payload");
+        Ok(out.into_iter().map(take).collect())
+    }
+
+    /// Complete a set of requests (`MPI_Waitall`). Returns one entry per
+    /// request in request order: `Some((payload, status))` for receives,
+    /// `None` for sends.
+    ///
+    /// MPI-conformant completion semantics: the call returns only when
+    /// every request is complete, and the resulting virtual time is
+    /// **invariant to arrival order** — the clock advances to the latest
+    /// completion (`max` over requests) plus one `recv_overhead` per
+    /// received message, not to an order-dependent fold. Receives are
+    /// completed before pending sends (whatever the request order), so a
+    /// symmetric `[isend, irecv]` exchange cannot deadlock.
+    ///
+    /// The blocked span is split for the `mpi-time` channel:
+    /// *wait* is the time before the critical (latest-completing)
+    /// message's wire transfer began — partner not ready, receive posted
+    /// late, rendezvous handshake — and *transfer* is the rest (wire time
+    /// plus completion overheads). Per-message `Recv` events are emitted
+    /// zero-duration; the single [`MpiEvent::Wait`] carries the time.
+    pub fn waitall<T: MpiData>(
+        &mut self,
+        reqs: Vec<Request>,
+    ) -> Result<Vec<Option<(Vec<T>, Status)>>, MpiError> {
+        let t0 = self.clock.now();
+        let n_reqs = reqs.len();
+        // Per-request, in request order: the matched envelope (receives
+        // only) and the (completion, wire) pair (receives + pending sends).
+        let mut envs: Vec<Option<Envelope>> = Vec::with_capacity(n_reqs);
+        let mut comps: Vec<Option<(f64, f64)>> = Vec::with_capacity(n_reqs);
+        let mut pending_sends: Vec<(usize, SendRequest)> = Vec::new();
+        let mut n_recv = 0usize;
+        // Pass 1: complete every RECEIVE first, regardless of where it
+        // sits in the request list. Matching a receive is what releases a
+        // rendezvous partner's send — if receives queued behind this
+        // rank's own pending sends, two ranks waiting on [isend, irecv]
+        // sets would block on each other's unmatched sends and deadlock.
+        for req in reqs {
+            match req {
+                Request::Recv(r) => {
+                    let (env, at, wire) = self.complete_recv(&r)?;
+                    envs.push(Some(env));
+                    comps.push(Some((at, wire)));
+                    n_recv += 1;
+                }
+                Request::Send(s) => {
+                    let idx = envs.len();
+                    envs.push(None);
+                    comps.push(None);
+                    if !matches!(s.state, SendState::Eager) {
+                        pending_sends.push((idx, s));
+                    }
+                }
+            }
+        }
+        // Pass 2: block on pending rendezvous sends; their completion
+        // cells are filled by the peers' receive completions.
+        for (idx, s) in pending_sends {
+            comps[idx] = self.complete_send(&s)?;
+        }
+        // Critical completion: the latest, ties broken by first occurrence
+        // (deterministic — completions are virtual stamps, not wall time).
+        let crit = comps
+            .iter()
+            .flatten()
+            .copied()
+            .fold(None::<(f64, f64)>, |best, c| match best {
+                Some(b) if b.0 >= c.0 => Some(b),
+                _ => Some(c),
+            });
+        if let Some((at, _)) = crit {
+            self.clock.sync_to(at);
+        }
+        self.clock.advance(n_recv as f64 * self.core.machine.net.recv_overhead);
+        let t_end = self.clock.now();
+        // Split the blocked span: time before the critical transfer began
+        // is wait; the remainder (wire + overheads) is transfer.
+        let wait = match crit {
+            Some((at, wire)) if at > t0 => (at - wire - t0).clamp(0.0, at - t0),
+            _ => 0.0,
+        };
+        if crit.is_some() {
+            self.emit(MpiEvent::Wait {
+                n_reqs,
+                t_start: t0,
+                t_end,
+                wait,
+                transfer: (t_end - t0) - wait,
+            });
+        }
+        // Zero-duration per-message Recv events carry bytes/peers for the
+        // comm-stats/matrix/histogram channels without double-counting the
+        // span the Wait event owns.
+        let mut out = Vec::with_capacity(n_reqs);
+        for (env, comp) in envs.into_iter().zip(comps) {
+            match env {
+                Some(env) => {
+                    let (at, _) = comp.expect("every receive has a completion");
+                    let stamp = at.max(t0).min(t_end);
+                    self.emit(MpiEvent::Recv {
+                        src: env.src,
+                        tag: env.tag,
+                        bytes: env.payload.len(),
+                        t_start: stamp,
+                        t_end: stamp,
+                    });
+                    let status = Status {
+                        src: env.src,
+                        tag: env.tag,
+                        bytes: env.payload.len(),
+                    };
+                    out.push(Some((decode::<T>(&env.payload)?, status)));
+                }
+                None => out.push(None),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Complete exactly one request (`MPI_Waitany`): blocks until at least
+    /// one request in `reqs` is completable, removes it, completes it, and
+    /// returns its original index plus its payload (for receives).
+    ///
+    /// Among simultaneously-ready requests the lowest index wins; like
+    /// ANY_SOURCE matching, which request becomes ready first can depend
+    /// on real-time scheduling, so `waitany` is only deterministic for
+    /// unambiguous usages.
+    pub fn waitany<T: MpiData>(
+        &mut self,
+        reqs: &mut Vec<Request>,
+    ) -> Result<(usize, Option<(Vec<T>, Status)>), MpiError> {
+        assert!(!reqs.is_empty(), "waitany on an empty request set");
+        let deadline = Instant::now() + self.core.timeout;
+        loop {
+            if let Some(i) = reqs.iter().position(|r| self.test(r)) {
+                let req = reqs.remove(i);
+                let mut out = self.waitall::<T>(vec![req])?;
+                return Ok((i, out.pop().unwrap()));
+            }
+            if Instant::now() >= deadline {
+                // Blame a request that is actually stuck, not whatever
+                // happens to sit at index 0.
+                let stuck = reqs.iter().position(|r| !self.test(r)).unwrap_or(0);
+                return Err(self.pending_timeout(&reqs[stuck]));
+            }
+            self.core.mailboxes[self.rank].wait_deposit(Duration::from_micros(200));
+        }
+    }
+
+    /// Nonblocking completion probe (`MPI_Test`): true when completing the
+    /// request would not block. Real-time dependent for receives (the
+    /// matching envelope may simply not have been deposited *yet*) — the
+    /// same determinism caveat as ANY_SOURCE.
+    pub fn test(&self, req: &Request) -> bool {
+        match req {
+            Request::Send(s) => s.test(),
+            Request::Recv(r) => self.core.mailboxes[self.rank].peek_match(r.src, r.tag, r.ctx),
+        }
+    }
+
+    /// Match one posted receive: blocks for the envelope, computes its
+    /// protocol-dependent completion time, and (for rendezvous) notifies
+    /// the sender's back-channel. Does NOT advance the clock — callers
+    /// fold completions so `waitall` is arrival-order invariant.
+    fn complete_recv(&mut self, req: &RecvRequest) -> Result<(Envelope, f64, f64), MpiError> {
+        let mailbox = &self.core.mailboxes[self.rank];
+        let post = mailbox
+            .take_posted(req.post_id)
+            .expect("posted-receive entry consumed exactly once");
+        // Posted receives bind messages in POST order (MPI): envelopes
+        // that belong to older still-pending receives with the same
+        // matching key are not ours to take.
+        let skip = mailbox.pending_posted_before(req.post_id, req.src, req.tag, req.ctx);
+        let env = mailbox.match_recv_nth(
+            self.rank,
+            req.src,
+            req.tag,
+            req.ctx,
+            skip,
+            self.core.timeout,
+        )?;
+        let at = env.arrival(post.post_time);
+        if let Some(cell) = &env.reply {
+            // Rendezvous: the sender's buffer is released when the
+            // transfer completes.
+            cell.complete(at);
+        }
+        let wire = env.wire;
+        Ok((env, at, wire))
+    }
+
+    /// Resolve one send request: `None` for eager (already complete),
+    /// `Some((completion, wire))` for rendezvous, blocking (real time)
+    /// until the receiver has matched.
+    fn complete_send(&mut self, req: &SendRequest) -> Result<Option<(f64, f64)>, MpiError> {
+        match &req.state {
+            SendState::Eager => Ok(None),
+            SendState::Rendezvous { cell, wire, .. } => {
+                let at = cell.wait(self.core.timeout).ok_or(MpiError::SendTimeout {
+                    rank: self.rank,
+                    dst: req.dst,
+                    tag: req.tag,
+                    ctx: req.ctx,
+                    millis: self.core.timeout.as_millis() as u64,
+                })?;
+                Ok(Some((at, *wire)))
+            }
+        }
+    }
+
+    /// Deadlock-guard error for a request that never completed.
+    fn pending_timeout(&self, req: &Request) -> MpiError {
+        let millis = self.core.timeout.as_millis() as u64;
+        match req {
+            Request::Send(s) => MpiError::SendTimeout {
+                rank: self.rank,
+                dst: s.dst,
+                tag: s.tag,
+                ctx: s.ctx,
+                millis,
+            },
+            Request::Recv(r) => MpiError::RecvTimeout {
+                rank: self.rank,
+                src: r.src,
+                tag: r.tag,
+                ctx: r.ctx,
+                millis,
+            },
+        }
     }
 
     // ---- collectives ----------------------------------------------------
@@ -390,13 +663,20 @@ impl<'w> Rank<'w> {
 
     /// Internal: run one collective through the board, advance the clock by
     /// the model cost, and emit the hook event.
+    ///
+    /// Cost sizing must be identical on every member — pricing a
+    /// collective from the caller's *local* buffer silently desynchronizes
+    /// virtual time across the communicator when buffers differ (a
+    /// non-root `bcast` caller may legally pass an empty slice). Rooted /
+    /// variable-size collectives therefore price from the board's shared
+    /// **result**, which every member observes identically.
     fn collective(
         &mut self,
         comm: &Comm,
         kind: CollKind,
         class: CollClass,
         contrib: Box<[u8]>,
-        cost_bytes: usize,
+        cost: CollCost,
         finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
     ) -> Result<std::sync::Arc<[u8]>, MpiError> {
         let seq = self.next_coll_seq(comm.ctx);
@@ -414,6 +694,11 @@ impl<'w> Rank<'w> {
             finalize,
             self.core.timeout,
         )?;
+        let cost_bytes = match cost {
+            CollCost::Fixed(b) => b,
+            CollCost::ResultBytes => result.len(),
+            CollCost::ResultBytesPerMember => result.len().div_ceil(comm.size().max(1)),
+        };
         // Cost from the members' actual node span: a sub-communicator
         // confined to one node pays intra-node α/β regardless of how many
         // nodes the job occupies.
@@ -441,7 +726,7 @@ impl<'w> Rank<'w> {
             CollKind::Barrier,
             CollClass::Barrier,
             Box::from(&[][..]),
-            0,
+            CollCost::Fixed(0),
             &|_| Box::from(&[][..]),
         )?;
         Ok(())
@@ -460,13 +745,16 @@ impl<'w> Rank<'w> {
         } else {
             Box::from(&[][..])
         };
-        let bytes = data.len() * T::ELEM_SIZE;
+        // Price every member from the ROOT's payload (the result): sizing
+        // from the caller's local slice let a non-root rank passing a
+        // short or empty buffer advance its clock less than the root for
+        // the same broadcast.
         let result = self.collective(
             comm,
             CollKind::Bcast,
             CollClass::Bcast,
             contrib,
-            bytes,
+            CollCost::ResultBytes,
             &move |parts| parts[root].take().expect("root contribution missing"),
         )?;
         decode::<T>(&result)
@@ -486,7 +774,7 @@ impl<'w> Rank<'w> {
             CollKind::Allreduce,
             CollClass::Allreduce,
             contrib,
-            n * 8,
+            CollCost::Fixed(n * 8),
             &move |parts| reduce_lanes_f64(parts, n, op),
         )?;
         decode::<f64>(&result)
@@ -507,7 +795,7 @@ impl<'w> Rank<'w> {
             CollKind::Allreduce,
             CollClass::Allreduce,
             contrib,
-            n * 8,
+            CollCost::Fixed(n * 8),
             &move |parts| reduce_lanes_u64(parts, n, op),
         )?;
         decode::<u64>(&result)
@@ -528,7 +816,7 @@ impl<'w> Rank<'w> {
             CollKind::Reduce,
             CollClass::Reduce,
             contrib,
-            n * 8,
+            CollCost::ResultBytes,
             &move |parts| reduce_lanes_f64(parts, n, op),
         )?;
         if comm.rank == root {
@@ -546,13 +834,15 @@ impl<'w> Rank<'w> {
         comm: &Comm,
     ) -> Result<Vec<Vec<T>>, MpiError> {
         let contrib = encode(data);
-        let bytes = contrib.len();
+        // Per-member cost from the gathered total (the ring's average
+        // block), not this rank's own contribution — variable
+        // contributions must not desynchronize the members' clocks.
         let result = self.collective(
             comm,
             CollKind::Allgather,
             CollClass::Allgather,
             contrib,
-            bytes,
+            CollCost::ResultBytesPerMember,
             &|parts| frame_concat(parts),
         )?;
         frame_split(&result)
@@ -589,16 +879,24 @@ impl<'w> Rank<'w> {
         for src in 0..p {
             out.push(if src == me { parts[me].clone() } else { Vec::new() });
         }
-        // Round k: send to (me + k), receive from (me - k). Eager sends
-        // complete immediately, so posting all sends first cannot deadlock
-        // and keeps each round's wire time overlapped across pairs.
-        for k in 1..p {
-            let dst = (me + k) % p;
-            self.isend(&parts[dst], dst, ALLTOALLV_TAG, comm)?;
-        }
+        // Round k: send to (me + k), receive from (me - k). All receives
+        // are posted before any send and completion happens in one
+        // waitall, so the exchange cannot deadlock even when parts exceed
+        // the eager threshold (rendezvous), and each pair's wire time
+        // stays overlapped across pairs.
+        let mut reqs: Vec<Request> = Vec::with_capacity(2 * p.saturating_sub(1));
         for k in 1..p {
             let src = (me + p - k) % p;
-            let (data, _status) = self.recv::<T>(Some(src), ALLTOALLV_TAG, comm)?;
+            reqs.push(Request::Recv(self.irecv(Some(src), ALLTOALLV_TAG, comm)?));
+        }
+        for k in 1..p {
+            let dst = (me + k) % p;
+            reqs.push(Request::Send(self.isend(&parts[dst], dst, ALLTOALLV_TAG, comm)?));
+        }
+        let done = self.waitall::<T>(reqs)?;
+        for (k, item) in done.into_iter().take(p.saturating_sub(1)).enumerate() {
+            let src = (me + p - (k + 1)) % p;
+            let (data, _status) = item.expect("receive slot");
             out[src] = data;
         }
         Ok(out)
@@ -629,7 +927,7 @@ impl<'w> Rank<'w> {
             CollKind::CommSplit,
             CollClass::Allgather,
             contrib,
-            24,
+            CollCost::Fixed(24),
             &|parts| frame_concat(parts),
         )?;
         let entries: Vec<(u64, u64, usize, usize)> = frame_split(&result)
@@ -776,6 +1074,53 @@ mod tests {
         }
     }
 
+    /// The collective-pricing satellite: a non-root rank passing a short
+    /// or empty buffer must advance its clock exactly as the root does for
+    /// the same collective — pricing comes from the root/result payload,
+    /// not the caller's local slice.
+    #[test]
+    fn bcast_prices_every_member_from_root_payload() {
+        let times = World::run(cfg(4), |rank| {
+            let world = rank.world();
+            // non-roots legally pass an EMPTY buffer; only the root's
+            // payload matters
+            let data = if rank.rank == 1 {
+                vec![3.25f64; 1000]
+            } else {
+                Vec::new()
+            };
+            let got = rank.bcast(&data, 1, &world).unwrap();
+            assert_eq!(got.len(), 1000);
+            rank.now()
+        });
+        for t in &times {
+            assert_eq!(
+                t.to_bits(),
+                times[0].to_bits(),
+                "bcast must not desynchronize member clocks: {:?}",
+                times
+            );
+        }
+    }
+
+    #[test]
+    fn variable_allgatherv_keeps_clocks_synchronized() {
+        let times = World::run(cfg(4), |rank| {
+            let world = rank.world();
+            let mine: Vec<u32> = vec![7; rank.rank * 50];
+            let _ = rank.allgatherv(&mine, &world).unwrap();
+            rank.now()
+        });
+        for t in &times {
+            assert_eq!(
+                t.to_bits(),
+                times[0].to_bits(),
+                "allgatherv cost must be member-invariant: {:?}",
+                times
+            );
+        }
+    }
+
     #[test]
     fn allgatherv_variable_sizes() {
         let res = World::run(cfg(4), |rank| {
@@ -915,24 +1260,187 @@ mod tests {
         let n = 4;
         let res = World::run(cfg(n), |rank| {
             let world = rank.world();
-            // everyone sends to everyone (including self? no: skip self)
-            for dst in 0..n {
-                if dst != rank.rank {
-                    rank.isend(&[rank.rank as f64], dst, 9, &world).unwrap();
-                }
-            }
             let me = rank.rank;
-            let mut reqs = Vec::new();
+            let mut reqs: Vec<Request> = Vec::new();
             for s in (0..n).filter(|&s| s != me) {
-                reqs.push(rank.irecv(Some(s), 9, &world).unwrap());
+                reqs.push(rank.irecv(Some(s), 9, &world).unwrap().into());
             }
-            let msgs = rank.waitall_recv::<f64>(reqs).unwrap();
-            msgs.iter().map(|(d, _)| d[0]).sum::<f64>()
+            // everyone sends to everyone (skip self)
+            for dst in (0..n).filter(|&d| d != me) {
+                reqs.push(rank.isend(&[me as f64], dst, 9, &world).unwrap().into());
+            }
+            let msgs = rank.waitall::<f64>(reqs).unwrap();
+            msgs.iter().flatten().map(|(d, _)| d[0]).sum::<f64>()
         });
         for (r, sum) in res.iter().enumerate() {
             let expect: f64 = (0..n).filter(|&s| s != r).map(|s| s as f64).sum();
             assert_eq!(*sum, expect);
         }
+    }
+
+    /// The tentpole acceptance shape: an above-threshold message's
+    /// completion is `max(sender_ready, receiver_post) + handshake + wire`
+    /// — gated by whichever side is late — while below-threshold sends
+    /// keep eager semantics (arrival independent of the post time).
+    #[test]
+    fn rendezvous_completion_gated_by_receiver_post() {
+        let mut m = MachineModel::test_machine();
+        m.net.eager_threshold = 1024;
+        let big = 4096usize; // 4096 bytes > 1024: rendezvous
+        let run = |recv_delay: f64| {
+            let mcl = m.clone();
+            let cfg = WorldConfig::new(2, mcl).with_timeout(Duration::from_secs(20));
+            World::run(cfg, move |rank| {
+                let world = rank.world();
+                if rank.rank == 0 {
+                    let req = rank.isend(&vec![0u8; big], 1, 0, &world).unwrap();
+                    rank.wait_send(req).unwrap();
+                } else {
+                    rank.advance(recv_delay);
+                    let _ = rank.recv::<u8>(Some(0), 0, &world).unwrap();
+                }
+                rank.now()
+            })
+        };
+        let wire = m.transfer_time(big, 0, 1, 2);
+        let hs = m.handshake_time(0, 1);
+        let oh = m.net.send_overhead;
+        // receiver posts late: completion gated by its post time
+        let late = run(1.0);
+        let expect_late = 1.0 + hs + wire + m.net.recv_overhead;
+        assert!(
+            (late[1] - expect_late).abs() < 1e-12,
+            "late post: {} vs {}",
+            late[1],
+            expect_late
+        );
+        // receiver posts immediately: gated by sender readiness
+        let early = run(0.0);
+        let expect_early = oh + hs + wire + m.net.recv_overhead;
+        assert!(
+            (early[1] - expect_early).abs() < 1e-12,
+            "early post: {} vs {}",
+            early[1],
+            expect_early
+        );
+        // the sender's blocking wait synchronizes to the completion
+        assert!((late[0] - (1.0 + hs + wire)).abs() < 1e-12, "{}", late[0]);
+    }
+
+    /// Below the threshold the receiver's post time must NOT move the
+    /// arrival: eager messages are buffered in flight.
+    #[test]
+    fn eager_arrival_ignores_post_time_but_pays_send_overhead() {
+        let m = MachineModel::test_machine();
+        let small = 256usize;
+        let run = |recv_delay: f64| {
+            let mcl = m.clone();
+            let cfg = WorldConfig::new(2, mcl).with_timeout(Duration::from_secs(20));
+            World::run(cfg, move |rank| {
+                let world = rank.world();
+                if rank.rank == 0 {
+                    rank.send(&vec![0u8; small], 1, 0, &world).unwrap();
+                } else {
+                    rank.advance(recv_delay);
+                    let _ = rank.recv::<u8>(Some(0), 0, &world).unwrap();
+                }
+                rank.now()
+            })
+        };
+        let wire = m.transfer_time(small, 0, 1, 2);
+        // arrival includes the sender's injection overhead (the message
+        // cannot depart before injection ends)
+        let t = run(0.0);
+        let arrival = m.net.send_overhead + wire;
+        assert!(
+            (t[1] - (arrival + m.net.recv_overhead)).abs() < 1e-15,
+            "{} vs {}",
+            t[1],
+            arrival + m.net.recv_overhead
+        );
+        // a later post only floors the completion at the post time
+        let t = run(1.0);
+        assert!((t[1] - (1.0 + m.net.recv_overhead)).abs() < 1e-12, "{}", t[1]);
+    }
+
+    /// `waitall` virtual time must not depend on the order requests are
+    /// passed (MPI-conformant completion: max over completions, not an
+    /// order-dependent fold).
+    #[test]
+    fn waitall_is_invariant_to_request_order() {
+        let elapsed = |reverse: bool| {
+            let cfg = cfg(3);
+            World::run(cfg, move |rank| {
+                let world = rank.world();
+                match rank.rank {
+                    0 => {
+                        // early sender
+                        rank.send(&[1.0f64; 4], 2, 7, &world).unwrap();
+                    }
+                    1 => {
+                        // late sender
+                        rank.advance(2.0);
+                        rank.send(&[2.0f64; 4], 2, 7, &world).unwrap();
+                    }
+                    _ => {
+                        let mut reqs = vec![
+                            rank.irecv(Some(0), 7, &world).unwrap(),
+                            rank.irecv(Some(1), 7, &world).unwrap(),
+                        ];
+                        if reverse {
+                            reqs.reverse();
+                        }
+                        let _ = rank.waitall_recv::<f64>(reqs).unwrap();
+                    }
+                }
+                rank.now()
+            })[2]
+        };
+        let fwd = elapsed(false);
+        let rev = elapsed(true);
+        assert_eq!(fwd.to_bits(), rev.to_bits(), "{} vs {}", fwd, rev);
+    }
+
+    /// Posted receives with identical matching keys bind messages in POST
+    /// order, not in the order the application happens to wait them.
+    #[test]
+    fn same_key_receives_bind_in_post_order() {
+        let res = World::run(cfg(2), |rank| {
+            let world = rank.world();
+            if rank.rank == 0 {
+                rank.send(&[1.0f64], 1, 4, &world).unwrap();
+                rank.send(&[2.0f64], 1, 4, &world).unwrap();
+                (0.0, 0.0)
+            } else {
+                let r1 = rank.irecv(Some(0), 4, &world).unwrap();
+                let r2 = rank.irecv(Some(0), 4, &world).unwrap();
+                // waiting the LATER post first must still deliver it the
+                // SECOND message
+                let (d2, _) = rank.wait_recv::<f64>(r2).unwrap();
+                let (d1, _) = rank.wait_recv::<f64>(r1).unwrap();
+                (d1[0], d2[0])
+            }
+        });
+        assert_eq!(res[1], (1.0, 2.0));
+    }
+
+    #[test]
+    fn test_and_waitany_complete_ready_requests() {
+        let res = World::run(cfg(2), |rank| {
+            let world = rank.world();
+            if rank.rank == 0 {
+                rank.send(&[5.0f64], 1, 3, &world).unwrap();
+                0.0
+            } else {
+                let req = rank.irecv(Some(0), 3, &world).unwrap();
+                let mut reqs: Vec<Request> = vec![req.into()];
+                let (idx, data) = rank.waitany::<f64>(&mut reqs).unwrap();
+                assert_eq!(idx, 0);
+                assert!(reqs.is_empty());
+                data.unwrap().0[0]
+            }
+        });
+        assert_eq!(res[1], 5.0);
     }
 
     #[test]

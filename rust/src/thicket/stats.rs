@@ -59,6 +59,26 @@ pub fn region_time_avg(run: &RunProfile, name: &str) -> Option<f64> {
     run.region(name).map(|(_, r)| r.time.avg())
 }
 
+/// Average per-rank Waitall *wait* seconds for a named region (fig8) —
+/// time blocked before the critical transfer began, from the `mpi-time`
+/// channel's wait/transfer split. `None` when the channel was off.
+pub fn region_mpi_wait_avg(run: &RunProfile, name: &str) -> Option<f64> {
+    let (_, r) = run.region(name)?;
+    Some(r.mpi_wait.as_ref()?.avg())
+}
+
+/// Average per-rank Waitall *transfer* seconds for a named region (fig8).
+pub fn region_mpi_transfer_avg(run: &RunProfile, name: &str) -> Option<f64> {
+    let (_, r) = run.region(name)?;
+    Some(r.mpi_transfer.as_ref()?.avg())
+}
+
+/// Average per-rank total MPI seconds for a named region.
+pub fn region_mpi_time_avg(run: &RunProfile, name: &str) -> Option<f64> {
+    let (_, r) = run.region(name)?;
+    Some(r.mpi_time.as_ref()?.avg())
+}
+
 /// Dense rank×rank sent-bytes matrix for a region recorded with the
 /// `comm-matrix` channel: returns (region path, matrix) where
 /// `matrix[src][dst]` is bytes sent. `None` when the region is absent or

@@ -29,7 +29,7 @@ fn comm_matrix_conservation_all_to_all() {
             for dst in (0..n).filter(|&d| d != rank.rank) {
                 // payload size encodes (src, dst) so cells are distinct
                 let len = 8 * (1 + rank.rank * n + dst);
-                rank.isend(&vec![0u8; len], dst, 7, &world).unwrap();
+                let _ = rank.isend(&vec![0u8; len], dst, 7, &world).unwrap();
             }
             for src in (0..n).filter(|&s| s != rank.rank) {
                 let _ = rank.recv::<u8>(Some(src), 7, &world).unwrap();

@@ -64,9 +64,14 @@ fn prop_random_traffic_conserves_and_is_deterministic() {
                             let prev = (rank.rank + n - 1) % n;
                             let len = 1 + (local_rng.next_u64() as usize) % msg_elems;
                             // IMPORTANT: receiver can't know len; it just receives
-                            rank.isend(&vec![0.5f64; len], next, round as i32, &world)
+                            // requests above the eager threshold stay
+                            // pending; a ring never send-waits, so hold
+                            // the handle through the matching receive
+                            let sreq = rank
+                                .isend(&vec![0.5f64; len], next, round as i32, &world)
                                 .unwrap();
                             let _ = rank.recv::<f64>(Some(prev), round as i32, &world).unwrap();
+                            rank.wait_send(sreq).unwrap();
                         }
                         rank.compute(local_rng.range_f64(1e3, 1e6), 1e3);
                     }

