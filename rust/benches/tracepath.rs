@@ -1,0 +1,117 @@
+//! Trace hot-path smoke: with tracing DISABLED the hook path must cost
+//! what it always cost — the trace subsystem's entire disabled-path
+//! footprint is one predictable branch plus no-op `on_region_event`
+//! defaults, so the default `comm-stats` pipeline must stay within the
+//! same envelope as the minimal `region-times` pipeline that predates
+//! tracing (generous 3× bound, mirroring `hookpath`). With tracing
+//! ENABLED the ring capture must stay within a sane multiple instead of
+//! sneaking per-event allocations beyond the `VecDeque` push.
+//!
+//! Run by CI (`cargo bench --bench tracepath`); prints all three costs
+//! and FAILS (exits nonzero) on regression.
+
+use std::time::Instant;
+
+use commscope::caliper::channel::ChannelConfig;
+use commscope::caliper::comm_profiler::CommProfiler;
+use commscope::mpisim::{CollKind, MpiEvent, MpiHook};
+
+const EVENTS: usize = 300_000;
+const REPS: usize = 7;
+
+/// Same realistic mix as `hookpath`: halo-style sends/recvs plus the
+/// occasional collective.
+fn event_mix() -> Vec<MpiEvent> {
+    let mut evs = Vec::with_capacity(EVENTS);
+    for i in 0..EVENTS {
+        let peer = i % 6;
+        let bytes = 64 << (i % 7);
+        let t = i as f64 * 1e-6;
+        evs.push(match i % 8 {
+            0..=3 => MpiEvent::Send {
+                dst: peer,
+                tag: (i % 16) as i32,
+                bytes,
+                t_start: t,
+                t_end: t + 1e-7,
+            },
+            4..=6 => MpiEvent::Recv {
+                src: peer,
+                tag: (i % 16) as i32,
+                bytes,
+                t_start: t,
+                t_end: t + 2e-7,
+            },
+            _ => MpiEvent::Coll {
+                kind: CollKind::Allreduce,
+                bytes: 8,
+                comm_size: 8,
+                t_start: t,
+                t_end: t + 5e-7,
+            },
+        });
+    }
+    evs
+}
+
+fn per_event_cost(spec: &str, events: &[MpiEvent]) -> f64 {
+    let cfg = ChannelConfig::parse(spec).expect("valid spec");
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let mut p = CommProfiler::with_channels(0, cfg);
+        p.begin("main", false, 0.0);
+        p.begin("halo", true, 0.0);
+        let t0 = Instant::now();
+        for ev in events {
+            p.on_event(0, ev);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        p.end("halo", 1.0);
+        p.end("main", 1.0);
+        let prof = p.finish(1.0);
+        assert!(
+            prof.regions["main/halo"].visits > 0,
+            "pipeline recorded the region"
+        );
+        best = best.min(dt / events.len() as f64);
+    }
+    best
+}
+
+fn main() {
+    let events = event_mix();
+    // warmup
+    let _ = per_event_cost("region-times", &events[..events.len() / 4]);
+
+    let minimal = per_event_cost("region-times", &events);
+    let disabled = per_event_cost("comm-stats", &events); // tracing OFF
+    let enabled = per_event_cost("comm-stats,trace", &events); // tracing ON
+    let off_ratio = disabled / minimal;
+    let on_ratio = enabled / disabled;
+    println!(
+        "trace hot path: region-times {:.1} ns/event, comm-stats (trace off) {:.1} ns/event \
+         ({:.2}x), comm-stats+trace {:.1} ns/event ({:.2}x over trace-off)",
+        minimal * 1e9,
+        disabled * 1e9,
+        off_ratio,
+        enabled * 1e9,
+        on_ratio
+    );
+    assert!(
+        off_ratio <= 3.0,
+        "trace-disabled hook path regressed: comm-stats {:.1} ns/event is {:.2}x the \
+         region-times floor ({:.1} ns) — the disabled path must stay branch-only",
+        disabled * 1e9,
+        off_ratio,
+        minimal * 1e9
+    );
+    assert!(
+        on_ratio <= 12.0,
+        "trace-enabled capture cost blew up: {:.1} ns/event is {:.2}x trace-off \
+         ({:.1} ns) — the ring push must stay allocation-light",
+        enabled * 1e9,
+        on_ratio,
+        disabled * 1e9
+    );
+    println!("tracepath smoke OK (bounds: off<=3.00x of minimal, on<=12.00x of off)");
+}

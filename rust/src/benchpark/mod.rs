@@ -13,5 +13,5 @@ pub mod runner;
 pub mod system;
 
 pub use experiment::{AppKind, ExperimentSpec, Scaling};
-pub use runner::{run_cell, table3_matrix};
+pub use runner::{run_cell, run_cell_full, table3_matrix, CellOutput};
 pub use system::{dane, tioga, SystemId};

@@ -11,8 +11,9 @@ use crate::apps::kripke::{run_kripke, KripkeConfig};
 use crate::apps::laghos::{run_laghos, LaghosConfig};
 use crate::apps::zmodel::{run_zmodel, ZmodelConfig};
 use crate::caliper::aggregate::{aggregate, check_conservation};
-use crate::caliper::{ChannelConfig, RunProfile};
+use crate::caliper::{ChannelConfig, ChannelKind, RunProfile};
 use crate::mpisim::WorldConfig;
+use crate::trace::RunTrace;
 
 /// Per-run knobs: fidelity shrink factors and the Caliper metric channels.
 #[derive(Debug, Clone, Copy)]
@@ -69,10 +70,29 @@ impl RunOptions {
     }
 }
 
+/// Everything one cell produces: the aggregated profile and, when the
+/// `trace` channel was enabled, the merged event-level run trace (what
+/// the campaign serializes as the JSONL trace artifact).
+#[derive(Debug, Clone)]
+pub struct CellOutput {
+    pub profile: RunProfile,
+    pub trace: Option<RunTrace>,
+}
+
 /// Run one cell of the experiment matrix with the paper configuration,
 /// returning the cross-rank aggregated profile (metadata stamped by the
 /// Caliper modifier). The runner self-checks message conservation.
+/// Convenience wrapper over [`run_cell_full`] for callers that only need
+/// the profile.
 pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> {
+    Ok(run_cell_full(spec, opts)?.profile)
+}
+
+/// Run one cell, returning the profile *and* (with `--channels ...,trace`)
+/// the merged run trace. Trace analyses — critical path and wait-state
+/// classification — are folded into the profile's per-region `trace`
+/// payloads and metadata before it is returned.
+pub fn run_cell_full(spec: &ExperimentSpec, opts: &RunOptions) -> Result<CellOutput> {
     opts.validate()?;
     let machine = spec.system.machine();
     let world = WorldConfig::new(spec.nranks, machine);
@@ -187,7 +207,23 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
     extra.push(("size_shrink", opts.size_shrink.to_string()));
     extra.push(("channels", opts.channels.spec_string()));
     let meta = run_metadata(spec, variant, &extra);
-    Ok(aggregate(meta, &profiles))
+    // Lift the per-rank event streams off the profiles before aggregation
+    // and fold the trace analyses (critical path, wait states) back into
+    // the aggregated profile's region payloads + metadata.
+    let mut profiles = profiles;
+    let rank_traces: Vec<crate::trace::RankTrace> = profiles
+        .iter_mut()
+        .filter_map(|p| p.trace.take())
+        .collect();
+    let mut run = aggregate(meta, &profiles);
+    let trace = if opts.channels.enabled(ChannelKind::Trace) && !rank_traces.is_empty() {
+        let rt = RunTrace::new(rank_traces);
+        crate::trace::annotate_profile(&mut run, &rt);
+        Some(rt)
+    } else {
+        None
+    };
+    Ok(CellOutput { profile: run, trace })
 }
 
 fn fmt3(d: [usize; 3]) -> String {

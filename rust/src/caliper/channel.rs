@@ -52,17 +52,24 @@ pub enum ChannelKind {
     /// wait-vs-transfer split of `wait`/`waitall` completions — the
     /// paper's `MPI_Waitall`/`MPI_Irecv` wait-time attribution.
     MpiTime,
+    /// Event-level tracing ([`crate::trace`]): a bounded per-rank ring
+    /// buffer of typed events (region boundaries, isend/irecv posts,
+    /// matches, collective epochs, wait spans) feeding the timeline,
+    /// wait-state, and critical-path analyses. Ring capacity is set with
+    /// the spec option `trace.max-events-per-rank=N`.
+    Trace,
 }
 
 impl ChannelKind {
     /// Every channel, in canonical spec order.
-    pub const ALL: [ChannelKind; 6] = [
+    pub const ALL: [ChannelKind; 7] = [
         ChannelKind::RegionTimes,
         ChannelKind::CommStats,
         ChannelKind::CommMatrix,
         ChannelKind::MsgSizeHistogram,
         ChannelKind::CollBreakdown,
         ChannelKind::MpiTime,
+        ChannelKind::Trace,
     ];
 
     /// The spec-string name of the channel.
@@ -74,6 +81,7 @@ impl ChannelKind {
             ChannelKind::MsgSizeHistogram => "msg-hist",
             ChannelKind::CollBreakdown => "coll-breakdown",
             ChannelKind::MpiTime => "mpi-time",
+            ChannelKind::Trace => "trace",
         }
     }
 
@@ -85,6 +93,7 @@ impl ChannelKind {
             ChannelKind::MsgSizeHistogram => 1 << 3,
             ChannelKind::CollBreakdown => 1 << 4,
             ChannelKind::MpiTime => 1 << 5,
+            ChannelKind::Trace => 1 << 6,
         }
     }
 }
@@ -120,6 +129,10 @@ impl std::error::Error for ChannelSpecError {}
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ChannelConfig {
     bits: u8,
+    /// Trace ring capacity (events per rank); only meaningful when the
+    /// `trace` channel is enabled. Carried here so it flows into cell
+    /// keys and disk-cache staleness with the rest of the spec.
+    trace_cap: u32,
 }
 
 impl Default for ChannelConfig {
@@ -135,14 +148,22 @@ impl Default for ChannelConfig {
 impl ChannelConfig {
     /// No channels at all (rarely what you want — see `Default`).
     pub fn empty() -> ChannelConfig {
-        ChannelConfig { bits: 0 }
+        ChannelConfig {
+            bits: 0,
+            trace_cap: crate::trace::DEFAULT_CAPACITY as u32,
+        }
     }
 
-    /// Every channel on.
+    /// Every *aggregate* channel on. The event-level `trace` channel is
+    /// deliberately excluded: it allocates a per-rank event ring and emits
+    /// a separate artifact, so it must be requested by name
+    /// (`--channels ...,trace`) rather than riding along with `all`.
     pub fn all() -> ChannelConfig {
         let mut c = ChannelConfig::empty();
         for k in ChannelKind::ALL {
-            c = c.with(k);
+            if k != ChannelKind::Trace {
+                c = c.with(k);
+            }
         }
         c
     }
@@ -154,8 +175,23 @@ impl ChannelConfig {
         self
     }
 
+    /// Enable tracing with an explicit ring capacity (events per rank;
+    /// clamped to ≥ 1). The spec-string form is
+    /// `trace.max-events-per-rank=N`.
+    #[must_use]
+    pub fn with_trace_capacity(mut self, cap: usize) -> ChannelConfig {
+        self.bits |= ChannelKind::Trace.bit();
+        self.trace_cap = cap.clamp(1, u32::MAX as usize) as u32;
+        self
+    }
+
     pub fn enabled(&self, kind: ChannelKind) -> bool {
         self.bits & kind.bit() != 0
+    }
+
+    /// Trace ring capacity (events per rank).
+    pub fn trace_capacity(&self) -> usize {
+        self.trace_cap as usize
     }
 
     /// Parse a Caliper-style spec string: comma-separated channel names,
@@ -163,6 +199,8 @@ impl ChannelConfig {
     /// is ignored; empty tokens are ignored; `"all"` enables everything;
     /// an empty spec yields the default config. Region times are always
     /// implied — without them no report could anchor the region tree.
+    /// The option token `trace.max-events-per-rank=N` bounds the trace
+    /// ring (and implies the `trace` channel).
     pub fn parse(spec: &str) -> Result<ChannelConfig, ChannelSpecError> {
         let mut cfg = ChannelConfig::empty().with(ChannelKind::RegionTimes);
         let mut any = false;
@@ -173,8 +211,26 @@ impl ChannelConfig {
             }
             any = true;
             if token.eq_ignore_ascii_case("all") {
-                cfg = ChannelConfig::all();
+                // OR, not assignment: "trace,all" must keep the trace bit.
+                cfg.bits |= ChannelConfig::all().bits;
                 continue;
+            }
+            if let Some(value) = token
+                .strip_prefix("trace.max-events-per-rank=")
+                .or_else(|| token.strip_prefix("Trace.max-events-per-rank="))
+            {
+                match value.parse::<u32>() {
+                    Ok(n) if n > 0 => {
+                        cfg = cfg.with_trace_capacity(n as usize);
+                        continue;
+                    }
+                    _ => {
+                        return Err(ChannelSpecError {
+                            token: token.to_string(),
+                            suggestion: None,
+                        })
+                    }
+                }
             }
             match ChannelKind::ALL
                 .iter()
@@ -196,13 +252,20 @@ impl ChannelConfig {
     }
 
     /// Canonical spec string (round-trips through [`ChannelConfig::parse`]).
-    /// Stamped into profile metadata and cache keys.
+    /// Stamped into profile metadata and cache keys — which is exactly how
+    /// a non-default trace capacity reaches the campaign's dedup cache and
+    /// disk staleness check.
     pub fn spec_string(&self) -> String {
-        let names: Vec<&str> = ChannelKind::ALL
+        let mut names: Vec<String> = ChannelKind::ALL
             .iter()
             .filter(|k| self.enabled(**k))
-            .map(|k| k.name())
+            .map(|k| k.name().to_string())
             .collect();
+        if self.enabled(ChannelKind::Trace)
+            && self.trace_cap as usize != crate::trace::DEFAULT_CAPACITY
+        {
+            names.push(format!("trace.max-events-per-rank={}", self.trace_cap));
+        }
         names.join(",")
     }
 
@@ -226,6 +289,9 @@ impl ChannelConfig {
         }
         if self.enabled(ChannelKind::MpiTime) {
             out.push(Box::new(MpiTime));
+        }
+        if self.enabled(ChannelKind::Trace) {
+            out.push(Box::new(TraceChannel::new(self.trace_capacity())));
         }
         out
     }
@@ -291,6 +357,22 @@ pub trait MetricChannel {
 
     /// The region owning `stats` was exited after `dt` inclusive seconds.
     fn on_region_exit(&mut self, stats: &mut RegionStats, is_comm: bool, dt: f64);
+
+    /// A region boundary crossed (full nesting path, absolute virtual
+    /// time). Only event-level channels care; the default is a no-op.
+    fn on_region_event(&mut self, _path: &str, _is_comm: bool, _enter: bool, _t: f64) {}
+
+    /// True when this channel consumes the trace-only MPI event variants
+    /// (forwarded to [`crate::mpisim::MpiHook::wants_trace_events`]).
+    fn wants_trace_events(&self) -> bool {
+        false
+    }
+
+    /// Hand over the captured event stream, if this channel records one.
+    /// Called once by the profiler at `finish`.
+    fn take_trace(&mut self) -> Option<crate::trace::RankTrace> {
+        None
+    }
 }
 
 /// Visits + inclusive time.
@@ -322,7 +404,8 @@ impl MetricChannel for CommStats {
             MpiEvent::Send { dst, bytes, .. } => stats.record_send(*dst, *bytes as u64),
             MpiEvent::Recv { src, bytes, .. } => stats.record_recv(*src, *bytes as u64),
             MpiEvent::Coll { bytes, .. } => stats.record_coll(*bytes as u64),
-            MpiEvent::Wait { .. } => {}
+            // Wait spans and trace-only events carry no Table I counts.
+            _ => {}
         }
     }
 
@@ -359,7 +442,7 @@ impl MetricChannel for CommMatrix {
                 cell.0 += 1;
                 cell.1 += *bytes as u64;
             }
-            MpiEvent::Coll { .. } | MpiEvent::Wait { .. } => {}
+            _ => {}
         }
     }
 
@@ -379,7 +462,7 @@ impl MetricChannel for MsgSizeHistogram {
         match ev {
             MpiEvent::Send { bytes, .. } => h.send.record(*bytes as u64),
             MpiEvent::Recv { bytes, .. } => h.recv.record(*bytes as u64),
-            MpiEvent::Coll { .. } | MpiEvent::Wait { .. } => {}
+            _ => {}
         }
     }
 
@@ -429,6 +512,50 @@ impl MetricChannel for MpiTime {
     fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
 }
 
+/// Event-level capture: forwards every hook event and region boundary to
+/// the bounded per-rank [`crate::trace::TraceRecorder`]. Writes nothing
+/// into `RegionStats` — its output is the rank's event stream, handed to
+/// the profiler at `finish` via [`MetricChannel::take_trace`].
+struct TraceChannel {
+    rec: Option<crate::trace::TraceRecorder>,
+}
+
+impl TraceChannel {
+    fn new(capacity: usize) -> TraceChannel {
+        TraceChannel {
+            rec: Some(crate::trace::TraceRecorder::new(capacity)),
+        }
+    }
+}
+
+impl MetricChannel for TraceChannel {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::Trace
+    }
+
+    fn on_event(&mut self, _stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
+        if let Some(rec) = &mut self.rec {
+            rec.record(ev);
+        }
+    }
+
+    fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
+
+    fn on_region_event(&mut self, path: &str, _is_comm: bool, enter: bool, t: f64) {
+        if let Some(rec) = &mut self.rec {
+            rec.region_event(path, enter, t);
+        }
+    }
+
+    fn wants_trace_events(&self) -> bool {
+        true
+    }
+
+    fn take_trace(&mut self) -> Option<crate::trace::RankTrace> {
+        self.rec.take().map(crate::trace::TraceRecorder::finish)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -468,12 +595,42 @@ mod tests {
     }
 
     #[test]
-    fn all_enables_every_channel() {
+    fn all_enables_every_aggregate_channel_but_not_trace() {
         let cfg = ChannelConfig::parse("all").unwrap();
         for k in ChannelKind::ALL {
-            assert!(cfg.enabled(k), "{:?}", k);
+            if k == ChannelKind::Trace {
+                assert!(!cfg.enabled(k), "trace must be explicit, not in 'all'");
+            } else {
+                assert!(cfg.enabled(k), "{:?}", k);
+            }
         }
-        assert_eq!(cfg.build_channels().len(), ChannelKind::ALL.len());
+        assert_eq!(cfg.build_channels().len(), ChannelKind::ALL.len() - 1);
+    }
+
+    #[test]
+    fn trace_spec_and_capacity_roundtrip() {
+        let cfg = ChannelConfig::parse("comm-stats,trace").unwrap();
+        assert!(cfg.enabled(ChannelKind::Trace));
+        assert_eq!(cfg.trace_capacity(), crate::trace::DEFAULT_CAPACITY);
+        assert_eq!(cfg.spec_string(), "region-times,comm-stats,trace");
+        assert_eq!(ChannelConfig::parse(&cfg.spec_string()).unwrap(), cfg);
+
+        // explicit capacity implies the channel and survives the roundtrip
+        let capped = ChannelConfig::parse("trace.max-events-per-rank=4096").unwrap();
+        assert!(capped.enabled(ChannelKind::Trace));
+        assert_eq!(capped.trace_capacity(), 4096);
+        assert_eq!(
+            capped.spec_string(),
+            "region-times,trace,trace.max-events-per-rank=4096"
+        );
+        assert_eq!(ChannelConfig::parse(&capped.spec_string()).unwrap(), capped);
+        // two configs differing only in capacity are distinct (cache keys!)
+        assert_ne!(capped, ChannelConfig::parse("trace").unwrap());
+
+        // bad capacity is a parse error carrying the offending token
+        let err = ChannelConfig::parse("trace.max-events-per-rank=zero").unwrap_err();
+        assert!(err.token.contains("trace.max-events-per-rank"), "{}", err);
+        assert!(ChannelConfig::parse("trace.max-events-per-rank=0").is_err());
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct CommProfiler {
     attr_is_comm: bool,
     /// The active metric channels, in pipeline order.
     channels: Vec<Box<dyn MetricChannel>>,
+    /// Cached: some channel consumes trace-only events (computed once at
+    /// construction; forwarded to the rank's hook chain so trace event
+    /// emission is skipped entirely when tracing is off).
+    wants_trace: bool,
 }
 
 impl CommProfiler {
@@ -52,6 +56,8 @@ impl CommProfiler {
 
     /// Profiler with an explicit channel configuration.
     pub fn with_channels(rank: usize, config: ChannelConfig) -> Self {
+        let channels = config.build_channels();
+        let wants_trace = channels.iter().any(|c| c.wants_trace_events());
         let mut p = CommProfiler {
             rank,
             stack: Vec::new(),
@@ -59,7 +65,8 @@ impl CommProfiler {
             comm_frames: Vec::new(),
             attr_path: String::new(),
             attr_is_comm: false,
-            channels: config.build_channels(),
+            channels,
+            wants_trace,
         };
         p.refresh_attr();
         p
@@ -96,6 +103,9 @@ impl CommProfiler {
         if is_comm {
             self.comm_frames.push(self.stack.len());
         }
+        for ch in &mut self.channels {
+            ch.on_region_event(&path, is_comm, true, now);
+        }
         self.stack.push(Frame {
             name: name.to_string(),
             path,
@@ -118,6 +128,9 @@ impl CommProfiler {
         if frame.is_comm {
             self.comm_frames.pop();
         }
+        for ch in &mut self.channels {
+            ch.on_region_event(&frame.path, frame.is_comm, false, now);
+        }
         self.close_frame(&frame.path, frame.is_comm, now - frame.t_enter);
         self.refresh_attr();
     }
@@ -139,12 +152,16 @@ impl CommProfiler {
         self.comm_frames.clear();
         while let Some(frame) = self.stack.pop() {
             let flagged = format!("{}!unclosed", frame.path);
+            for ch in &mut self.channels {
+                ch.on_region_event(&flagged, frame.is_comm, false, now);
+            }
             self.close_frame(&flagged, frame.is_comm, now - frame.t_enter);
         }
         self.refresh_attr();
         let mut profile = RankProfile {
             rank: self.rank,
             regions: Default::default(),
+            trace: None,
         };
         for (path, stats) in self.regions.drain() {
             // Buckets pre-created for the hot path that never saw an event
@@ -153,11 +170,23 @@ impl CommProfiler {
                 profile.regions.insert(path, stats);
             }
         }
+        // Event-level capture (the `trace` channel) rides out on the rank
+        // profile, stamped with the owning rank.
+        for ch in &mut self.channels {
+            if let Some(mut tr) = ch.take_trace() {
+                tr.rank = self.rank;
+                profile.trace = Some(tr);
+            }
+        }
         profile
     }
 }
 
 impl MpiHook for CommProfiler {
+    fn wants_trace_events(&self) -> bool {
+        self.wants_trace
+    }
+
     fn on_event(&mut self, _rank: usize, ev: &MpiEvent) {
         // Allocation-free fast path: `refresh_attr` pre-created the bucket,
         // so this single lookup hits on every event. The fallback is only

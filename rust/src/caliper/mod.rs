@@ -44,7 +44,7 @@ pub use annotation::{Caliper, RegionGuard};
 pub use channel::{ChannelConfig, ChannelKind, ChannelSpecError, MetricChannel};
 pub use profile::{
     AggCommMatrix, AggMetric, AggRegion, CommMatrixStats, MpiTimeStats, MsgSizeHist, RankProfile,
-    RegionStats, RunProfile, SizeHist,
+    RegionStats, RegionTraceStats, RunProfile, SizeHist,
 };
 
 /// Synthetic root path for MPI traffic outside any annotation region —

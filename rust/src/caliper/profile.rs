@@ -115,6 +115,25 @@ pub struct MsgSizeHist {
     pub recv: SizeHist,
 }
 
+/// The `trace` channel's per-region analysis results, folded into the
+/// aggregated profile by [`crate::trace::annotate_profile`]: seconds of
+/// the run's critical path attributed to the region, plus
+/// `(instances, idle seconds)` per wait-state class. Serialized as an
+/// optional `"trace"` channel payload — no schema bump, old profiles read
+/// fine.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RegionTraceStats {
+    /// Critical-path seconds attributed to this region (summing over
+    /// regions reproduces the path's total, i.e. the virtual wall time).
+    pub critpath: f64,
+    /// Late-sender waits booked to this region: (instances, seconds).
+    pub late_sender: (u64, f64),
+    /// Late-receiver waits (rendezvous sender blocked on a late post).
+    pub late_receiver: (u64, f64),
+    /// Wait-at-collective time (early arrivals idling for the laggard).
+    pub wait_at_coll: (u64, f64),
+}
+
 /// The `mpi-time` channel payload for one region on one rank: total
 /// virtual seconds inside MPI operations, with the wait/transfer split of
 /// blocking completions (`wait`/`waitall`/`waitany`). `wait` is time
@@ -244,6 +263,10 @@ impl RegionStats {
 pub struct RankProfile {
     pub rank: usize,
     pub regions: BTreeMap<String, RegionStats>,
+    /// The `trace` channel's event stream for this rank, when enabled.
+    /// NOT part of the profile JSON — the runner lifts it into the run's
+    /// [`crate::trace::RunTrace`] and the separate JSONL trace artifact.
+    pub trace: Option<crate::trace::RankTrace>,
 }
 
 impl RankProfile {
@@ -597,6 +620,9 @@ pub struct AggRegion {
     pub mpi_wait: Option<AggMetric>,
     /// `mpi-time` channel: per-rank Waitall *transfer* seconds.
     pub mpi_transfer: Option<AggMetric>,
+    /// `trace` channel: critical-path attribution and wait-state counts
+    /// for this region (see [`RegionTraceStats`]).
+    pub trace: Option<RegionTraceStats>,
 }
 
 impl AggRegion {
@@ -607,6 +633,7 @@ impl AggRegion {
             && self.mpi_time.is_none()
             && self.mpi_wait.is_none()
             && self.mpi_transfer.is_none()
+            && self.trace.is_none()
         {
             return None;
         }
@@ -631,6 +658,15 @@ impl AggRegion {
         }
         if let Some(t) = &self.mpi_transfer {
             c.set("mpi-transfer", t.to_json());
+        }
+        if let Some(t) = &self.trace {
+            let pair = |(n, s): (u64, f64)| Json::Arr(vec![Json::from(n), Json::from(s)]);
+            let mut o = Json::obj();
+            o.set("critpath", t.critpath)
+                .set("late-sender", pair(t.late_sender))
+                .set("late-receiver", pair(t.late_receiver))
+                .set("wait-at-collective", pair(t.wait_at_coll));
+            c.set("trace", o);
         }
         Some(c)
     }
@@ -658,6 +694,27 @@ impl AggRegion {
         }
         if let Some(t) = j.get("mpi-transfer") {
             self.mpi_transfer = AggMetric::from_json(t);
+        }
+        // `trace` payload: absent in profiles recorded without the trace
+        // channel — optional by design, like the wait/transfer split.
+        if let Some(t) = j.get("trace") {
+            let pair = |key: &str| -> Option<(u64, f64)> {
+                let arr = t.get(key)?.as_arr()?;
+                Some((arr.first()?.as_u64()?, arr.get(1)?.as_f64()?))
+            };
+            if let (Some(critpath), Some(ls), Some(lr), Some(wc)) = (
+                t.get("critpath").and_then(Json::as_f64),
+                pair("late-sender"),
+                pair("late-receiver"),
+                pair("wait-at-collective"),
+            ) {
+                self.trace = Some(RegionTraceStats {
+                    critpath,
+                    late_sender: ls,
+                    late_receiver: lr,
+                    wait_at_coll: wc,
+                });
+            }
         }
     }
 }

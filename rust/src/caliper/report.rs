@@ -53,6 +53,7 @@ pub fn runtime_report(run: &RunProfile) -> String {
 pub fn comm_report(run: &RunProfile) -> String {
     let has_mpi_time = run.regions.values().any(|r| r.mpi_time.is_some());
     let has_wait = run.regions.values().any(|r| r.mpi_wait.is_some());
+    let has_trace = run.regions.values().any(|r| r.trace.is_some());
     let mut headers = vec![
         "Comm region",
         "Sends min/max",
@@ -69,6 +70,10 @@ pub fn comm_report(run: &RunProfile) -> String {
     }
     if has_wait {
         headers.push("Wait (max)");
+    }
+    if has_trace {
+        headers.push("Crit path");
+        headers.push("Late snd n");
     }
     let mut t = TextTable::new(&headers)
         .align(0, Align::Left)
@@ -104,12 +109,39 @@ pub fn comm_report(run: &RunProfile) -> String {
                 None => "-".to_string(),
             });
         }
+        if has_trace {
+            match &r.trace {
+                Some(ts) => {
+                    row.push(crate::util::duration::fmt_duration(ts.critpath));
+                    row.push(ts.late_sender.0.to_string());
+                }
+                None => {
+                    row.push("-".to_string());
+                    row.push("-".to_string());
+                }
+            }
+        }
         t.row(row);
     }
     if t.n_rows() == 0 {
         return "comm-report: no communication regions recorded\n".to_string();
     }
-    t.render()
+    let mut out = t.render();
+    // Trace truncation is never silent: surface the drop counter wherever
+    // the trace-derived columns are shown.
+    let dropped = run
+        .meta
+        .get("trace_dropped")
+        .and_then(|d| d.parse::<u64>().ok())
+        .unwrap_or(0);
+    if dropped > 0 {
+        out.push_str(&format!(
+            "trace: {} events dropped by the per-rank ring — raise \
+             trace.max-events-per-rank in --channels\n",
+            dropped
+        ));
+    }
+    out
 }
 
 #[cfg(test)]

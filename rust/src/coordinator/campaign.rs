@@ -6,7 +6,7 @@
 //! across a work-stealing thread pool ([`crate::util::pool`]), deduplicates
 //! identical `(app, system, ranks, variant, shrink)` cells through a
 //! content-keyed result cache ([`crate::util::cache`]), streams each
-//! [`RunProfile`] to its sink the moment the cell completes (no barrier on
+//! [`crate::caliper::RunProfile`] to its sink the moment the cell completes (no barrier on
 //! the whole matrix), and surfaces per-cell failures without aborting the
 //! campaign. Because every cell is deterministic, a parallel campaign
 //! produces byte-identical profiles to a serial one.
@@ -21,9 +21,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::benchpark::experiment::ExperimentSpec;
 use crate::benchpark::modifier::cell_key;
-use crate::benchpark::runner::{run_cell, RunOptions};
+use crate::benchpark::runner::{run_cell_full, CellOutput, RunOptions};
+use crate::caliper::channel::ChannelKind;
 use crate::benchpark::{table3_matrix, AppKind, SystemId};
-use crate::caliper::RunProfile;
 use crate::thicket::Thicket;
 use crate::util::cache::{CacheStats, ResultCache};
 use crate::util::json::Json;
@@ -81,9 +81,12 @@ pub struct CellFailure {
 pub struct CampaignReport {
     /// Successful unique cells from THIS call (executed or served by the
     /// in-memory dedup cache), in first-occurrence order of the input.
-    /// Disk-cached cells are not re-loaded here — use
-    /// [`load_profiles`] for the full campaign view.
-    pub runs: Vec<Arc<RunProfile>>,
+    /// Each entry carries the cell's profile; the event-level trace is
+    /// streamed to the sink only (and to the on-disk artifact) — retained
+    /// entries have `trace: None`, so campaign memory stays proportional
+    /// to profiles, not event streams. Disk-cached cells are not
+    /// re-loaded here — use [`load_profiles`] for the full campaign view.
+    pub runs: Vec<Arc<CellOutput>>,
     pub failures: Vec<CellFailure>,
     /// Cells in the request.
     pub cells_total: usize,
@@ -115,7 +118,7 @@ impl CampaignReport {
     pub fn thicket(&self) -> Thicket {
         let mut t = Thicket::default();
         for r in &self.runs {
-            t.push((**r).clone());
+            t.push(r.profile.clone());
         }
         t.sort_canonical();
         t
@@ -144,7 +147,7 @@ impl CampaignReport {
 pub struct CampaignExecutor {
     jobs: usize,
     run: RunOptions,
-    cache: ResultCache<RunProfile>,
+    cache: ResultCache<CellOutput>,
 }
 
 impl CampaignExecutor {
@@ -177,7 +180,7 @@ impl CampaignExecutor {
     pub fn execute_with(
         &self,
         cells: &[ExperimentSpec],
-        sink: impl Fn(&ExperimentSpec, &RunProfile) + Sync,
+        sink: impl Fn(&ExperimentSpec, &CellOutput) + Sync,
     ) -> CampaignReport {
         // Dedup pass: a cell is served from cache if its content key was
         // computed before — by an earlier execute() or earlier in this batch.
@@ -207,11 +210,23 @@ impl CampaignExecutor {
         let (results, stats) = run_batch(
             to_run,
             self.jobs,
-            move |(spec, key): &(ExperimentSpec, String)| match run_cell(spec, &run_opts) {
-                Ok(profile) => {
-                    // Stream: cache + sink immediately, on the worker.
-                    let shared = cache.insert(key.clone(), profile);
-                    sink(spec, &shared);
+            move |(spec, key): &(ExperimentSpec, String)| match run_cell_full(spec, &run_opts) {
+                Ok(output) => {
+                    // Stream: sink immediately, on the worker, with the
+                    // full output (the campaign writes the trace artifact
+                    // here). The CACHED copy drops the event stream: the
+                    // trace ring bounds memory per rank, and holding every
+                    // cell's events for the whole matrix would re-grow it
+                    // per campaign; duplicates are profile-served (the
+                    // sink never fires for cache hits anyway).
+                    sink(spec, &output);
+                    cache.insert(
+                        key.clone(),
+                        CellOutput {
+                            profile: output.profile,
+                            trace: None,
+                        },
+                    );
                     Ok(())
                 }
                 Err(e) => Err(CellFailure {
@@ -269,18 +284,29 @@ pub fn run_campaign_report(
 ) -> Result<(Thicket, CampaignReport)> {
     let profile_dir = opts.out_dir.join("profiles");
     std::fs::create_dir_all(&profile_dir).context("creating profile dir")?;
+    let trace_enabled = opts.run.channels.enabled(ChannelKind::Trace);
+    let trace_dir = opts.out_dir.join("traces");
+    if trace_enabled {
+        std::fs::create_dir_all(&trace_dir).context("creating trace dir")?;
+    }
     let cells = selected_cells(opts);
     let total = cells.len();
 
     // Disk layer of the cache: skip cells whose profile file already exists
     // AND was generated under the same run options (profiles are stamped
     // with their shrink factors; a smoke-fidelity profile must not satisfy
-    // a full-fidelity campaign).
+    // a full-fidelity campaign). A trace-enabled campaign additionally
+    // requires the cell's trace artifact on disk — a profile without its
+    // trace is stale, not cached.
     let mut fresh: Vec<ExperimentSpec> = Vec::new();
     let mut disk_cached = 0usize;
     for spec in &cells {
         let path = profile_dir.join(format!("{}.json", spec.id()));
-        if !force && disk_profile_matches(&path, &opts.run) {
+        let trace_ok = !trace_enabled
+            || trace_dir
+                .join(format!("{}{}", spec.id(), crate::trace::TRACE_SUFFIX))
+                .is_file();
+        if !force && trace_ok && disk_profile_matches(&path, &opts.run) {
             disk_cached += 1;
             if opts.verbose {
                 println!("[{}/{}] {} — cached on disk", disk_cached, total, spec.id());
@@ -297,7 +323,8 @@ pub fn run_campaign_report(
     // cell's failure (reported in failures.csv and the exit code) rather
     // than discarding the whole report.
     let io_errors: Mutex<Vec<CellFailure>> = Mutex::new(Vec::new());
-    let mut report = executor.execute_with(&fresh, |spec, run| {
+    let mut report = executor.execute_with(&fresh, |spec, out| {
+        let run = &out.profile;
         let path = profile_dir.join(format!("{}.json", spec.id()));
         if let Err(e) = std::fs::write(&path, run.to_json().to_string_pretty()) {
             io_errors.lock().unwrap().push(CellFailure {
@@ -306,15 +333,26 @@ pub fn run_campaign_report(
             });
             return;
         }
+        if let Some(trace) = &out.trace {
+            let tpath =
+                trace_dir.join(format!("{}{}", spec.id(), crate::trace::TRACE_SUFFIX));
+            if let Err(e) = std::fs::write(&tpath, crate::trace::write_jsonl(trace)) {
+                io_errors.lock().unwrap().push(CellFailure {
+                    id: spec.id(),
+                    error: format!("writing {}: {}", tpath.display(), e),
+                });
+                return;
+            }
+        }
         if opts.verbose {
             let i = done.fetch_add(1, Ordering::Relaxed) + 1;
             let (bytes, sends) = run.comm_totals();
             println!(
-                "[{}/{}] {} — {:.1}s elapsed, {:.3e} bytes, {:.3e} sends, vtime {:.3}s",
+                "[{}/{}] {} — {} elapsed, {:.3e} bytes, {:.3e} sends, vtime {:.3}s",
                 i,
                 total,
                 spec.id(),
-                t0.elapsed().as_secs_f64(),
+                crate::util::duration::fmt_duration(t0.elapsed().as_secs_f64()),
                 bytes,
                 sends,
                 run.wall_time(),
@@ -334,9 +372,9 @@ pub fn run_campaign_report(
             .collect();
         report.runs.retain(|r| {
             !failed_specs.iter().any(|s| {
-                r.meta.get("app").map(String::as_str) == Some(s.app.name())
-                    && r.meta.get("system").map(String::as_str) == Some(s.system.name())
-                    && r.meta_usize("ranks") == Some(s.nranks)
+                r.profile.meta.get("app").map(String::as_str) == Some(s.app.name())
+                    && r.profile.meta.get("system").map(String::as_str) == Some(s.system.name())
+                    && r.profile.meta_usize("ranks") == Some(s.nranks)
             })
         });
         report.cells_executed = report.cells_executed.saturating_sub(io_failures.len());
@@ -379,6 +417,38 @@ pub fn run_campaign(opts: &CampaignOptions, force: bool) -> Result<Thicket> {
 /// Load previously-written campaign profiles.
 pub fn load_profiles(out_dir: impl AsRef<Path>) -> Result<Thicket> {
     Thicket::load_dir(out_dir.as_ref().join("profiles"))
+}
+
+/// Cell ids with a trace artifact under `<out>/traces`, sorted.
+pub fn list_traces(out_dir: impl AsRef<Path>) -> Vec<String> {
+    let dir = out_dir.as_ref().join("traces");
+    let mut ids: Vec<String> = std::fs::read_dir(dir)
+        .map(|entries| {
+            entries
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    e.file_name()
+                        .to_str()
+                        .and_then(|n| n.strip_suffix(crate::trace::TRACE_SUFFIX))
+                        .map(String::from)
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    ids.sort();
+    ids
+}
+
+/// Load one cell's trace artifact from `<out>/traces/<cell>.trace.jsonl`.
+pub fn load_trace(out_dir: impl AsRef<Path>, cell_id: &str) -> Result<crate::trace::RunTrace> {
+    let path = out_dir
+        .as_ref()
+        .join("traces")
+        .join(format!("{}{}", cell_id, crate::trace::TRACE_SUFFIX));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    crate::trace::read_jsonl(&text)
+        .ok_or_else(|| anyhow::anyhow!("{}: not a commscope trace artifact", path.display()))
 }
 
 /// True when a profile file exists AND its stamped run options — shrink

@@ -7,8 +7,12 @@
 //!                                           (N worker threads; default 1)
 //! repro table1|table2|table3                print static tables
 //! repro table4  [--out results]             print Table IV from profiles
-//! repro fig1..fig8 [--out results]          render figures (+CSV)
+//! repro fig1..fig9 [--out results]          render figures (+CSV)
 //! repro heatmap [--out results]             comm-matrix heatmaps (+CSV)
+//! repro trace   [--out results] [--cell ID] [--width N]
+//!                                           Gantt timeline, wait states,
+//!                                           critical path from a cell's
+//!                                           trace artifact
 //! repro run --app kripke --system dane --ranks 64 [--smoke]
 //!           [--channels SPEC]               run one cell, print reports
 //! repro report --profile results/profiles/kripke_dane_64.json
@@ -17,7 +21,7 @@
 use std::path::Path;
 
 use crate::benchpark::experiment::{ExperimentSpec, Scaling};
-use crate::benchpark::runner::{run_cell, RunOptions};
+use crate::benchpark::runner::{run_cell_full, RunOptions};
 use crate::benchpark::{AppKind, SystemId};
 use crate::caliper::report::{comm_report, runtime_report};
 use crate::caliper::RunProfile;
@@ -38,8 +42,9 @@ USAGE:
                  [--channels SPEC]
   repro table1 | table2 | table3
   repro table4 [--out results]
-  repro fig1 | fig2 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8  [--out results]
+  repro fig1 | ... | fig9  [--out results]
   repro heatmap [--out results]
+  repro trace [--out results] [--cell ID] [--width N]
   repro run --app APP --system SYS --ranks N [--smoke] [--channels SPEC]
   repro report --profile FILE.json
   repro help
@@ -51,13 +56,21 @@ the campaign: survivors are rendered, failures land in failures.csv, and
 the exit code is nonzero.
 `--channels SPEC` selects the Caliper metric channels, comma-separated:
 region-times, comm-stats, comm-matrix, msg-hist, coll-breakdown, mpi-time,
-or `all` (default: region-times,comm-stats). Profiles are stamped with
-their channel spec, so changing --channels reruns stale cells. Example:
+trace, or `all` (every aggregate channel; `trace` is event-level and must
+be named explicitly; default: region-times,comm-stats). Profiles are
+stamped with their channel spec, so changing --channels reruns stale
+cells. Example:
   repro campaign --channels comm-stats,comm-matrix
 then `repro heatmap` renders rank×rank traffic heatmaps and `repro fig7`
 contrasts zmodel's dense global pattern against AMG's banded halo. With
 `--channels ...,mpi-time`, `repro fig8` renders the Waitall wait-vs-
 transfer breakdown (rendezvous wait time of large-message halos).
+With `--channels ...,trace` (ring capacity via
+`trace.max-events-per-rank=N`) each cell additionally writes an
+event-level JSONL trace under <out>/traces; `repro trace` renders its
+ASCII Gantt timeline, wait-state classification (late sender / late
+receiver / wait-at-collective), and region-attributed critical path, and
+`repro fig9` plots per-region critical-path share vs. rank count.
 APP ∈ {amg2023, kripke, laghos, zmodel}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
@@ -151,7 +164,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
         }
         Some(
             fig @ ("fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "fig7" | "fig8"
-            | "heatmap"),
+            | "fig9" | "heatmap"),
         ) => {
             let t = need_profiles(&out_dir)?;
             let dir = Path::new(&out_dir);
@@ -164,9 +177,39 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
                 "fig6" => figures::fig6(&t, Some(dir))?,
                 "fig7" => figures::fig7(&t, Some(dir))?,
                 "fig8" => figures::fig8(&t, Some(dir))?,
+                "fig9" => figures::fig9(&t, Some(dir))?,
                 _ => figures::comm_heatmap(&t, Some(dir))?,
             };
             println!("{}", text);
+            Ok(())
+        }
+        Some("trace") => {
+            let ids = crate::coordinator::campaign::list_traces(&out_dir);
+            if ids.is_empty() {
+                anyhow::bail!(
+                    "no trace artifacts under {}/traces — run \
+                     `repro campaign --channels comm-stats,trace` first",
+                    out_dir
+                );
+            }
+            let cell = match args.get("cell") {
+                Some(c) => {
+                    if !ids.iter().any(|i| i == c) {
+                        anyhow::bail!(
+                            "no trace for cell '{}'; available: {}",
+                            c,
+                            ids.join(", ")
+                        );
+                    }
+                    c.to_string()
+                }
+                None => ids[0].clone(),
+            };
+            let trace = crate::coordinator::campaign::load_trace(&out_dir, &cell)?;
+            let width = args.get_usize("width", 96);
+            println!("trace for cell '{}' (others: {})", cell, ids.join(", "));
+            println!("{}", figures::trace_gantt(&trace, width));
+            println!("{}", crate::coordinator::figures::trace_report(&trace));
             Ok(())
         }
         Some("run") => {
@@ -185,9 +228,13 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
                 },
                 nranks,
             };
-            let run = run_cell(&spec, &run_options(args)?)?;
-            println!("{}", runtime_report(&run));
-            println!("{}", comm_report(&run));
+            let out = run_cell_full(&spec, &run_options(args)?)?;
+            println!("{}", runtime_report(&out.profile));
+            println!("{}", comm_report(&out.profile));
+            if let Some(trace) = &out.trace {
+                println!("{}", figures::trace_gantt(trace, 96));
+                println!("{}", figures::trace_report(trace));
+            }
             Ok(())
         }
         Some("report") => {

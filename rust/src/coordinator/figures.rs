@@ -32,6 +32,7 @@ pub fn render_all(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
     all.push_str(&comm_heatmap(thicket, out)?);
     all.push_str(&fig7(thicket, out)?);
     all.push_str(&fig8(thicket, out)?);
+    all.push_str(&fig9(thicket, out)?);
     Ok(all)
 }
 
@@ -515,6 +516,136 @@ pub fn fig8(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
     Ok(text)
 }
 
+/// Fig 9 — per-region critical-path share vs. rank count, from the
+/// `trace` channel's happens-before analysis: for each (app, system)
+/// group, which regions own the dependency chain that bounds wall time,
+/// and how that ownership shifts as the job scales. This is the view the
+/// aggregate profiler cannot produce — a region can dominate total MPI
+/// time yet sit entirely off the critical path.
+pub fn fig9(thicket: &Thicket, out: Option<&Path>) -> Result<String> {
+    let mut text = String::new();
+    let mut any = false;
+    for (key, group) in group_app_system(thicket) {
+        let meta_of = |k: &str| {
+            group
+                .runs
+                .first()
+                .and_then(|r| r.meta.get(k).cloned())
+                .unwrap_or_default()
+        };
+        let (app, system) = (meta_of("app"), meta_of("system"));
+        // Regions carrying critical-path attribution anywhere in the group.
+        let mut region_names: Vec<String> = Vec::new();
+        for run in group.by_ranks() {
+            for (path, reg) in &run.regions {
+                if reg.trace.map(|t| t.critpath > 0.0).unwrap_or(false)
+                    && !region_names.contains(path)
+                {
+                    region_names.push(path.clone());
+                }
+            }
+        }
+        if region_names.is_empty() {
+            continue;
+        }
+        any = true;
+        let mut series = Vec::new();
+        let mut csv = Vec::new();
+        for name in &region_names {
+            let pts = group.series(|r| stats::region_critpath_frac(r, name));
+            if !pts.is_empty() {
+                series.push(Series::new(name, pts.clone()));
+                csv.push((name.clone(), pts));
+            }
+        }
+        if let Some(dir) = out {
+            write_series_csv(
+                dir.join(format!("fig9_{}_{}.csv", app, system)),
+                &csv,
+                "ranks",
+                "critpath_fraction",
+            )?;
+        }
+        let title = format!("Fig 9 — {}: per-region critical-path share", key);
+        let chart = Chart::new(&title, "processes", "fraction of critical path");
+        text.push_str(&chart.render(&series));
+        text.push('\n');
+    }
+    if !any {
+        return Ok(
+            "fig9: no profile carries the trace channel's critical-path \
+             attribution (re-run the campaign with --channels comm-stats,trace)\n"
+                .to_string(),
+        );
+    }
+    Ok(text)
+}
+
+/// ASCII Gantt timeline over a cell's trace artifact (`repro trace`):
+/// per-rank lanes of compute / blocked-wait / transfer / collective
+/// states. Thin wrapper so every figure surface lives in this module.
+pub fn trace_gantt(trace: &crate::trace::RunTrace, width: usize) -> String {
+    crate::trace::gantt::render(trace, width)
+}
+
+/// Textual trace analysis (`repro trace`): wait-state classification
+/// totals per kind and the region-attributed critical path.
+pub fn trace_report(trace: &crate::trace::RunTrace) -> String {
+    use crate::trace::{classify, critical_path, WaitKind};
+    use crate::util::duration::fmt_duration;
+    let mut out = String::new();
+    let states = classify(trace);
+    let mut t = TextTable::new(&["Wait state", "Instances", "Idle time", "Worst single"])
+        .align(0, Align::Left)
+        .title("wait-state classification");
+    for kind in [
+        WaitKind::LateSender,
+        WaitKind::LateReceiver,
+        WaitKind::WaitAtCollective,
+    ] {
+        let of_kind: Vec<_> = states.iter().filter(|s| s.kind == kind).collect();
+        let total: f64 = of_kind.iter().map(|s| s.duration).sum();
+        let worst = of_kind.iter().map(|s| s.duration).fold(0.0, f64::max);
+        t.row(vec![
+            kind.name().to_string(),
+            of_kind.len().to_string(),
+            fmt_duration(total),
+            fmt_duration(worst),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+    match critical_path(trace) {
+        Some(cp) => {
+            out.push_str(&format!(
+                "critical path: {} end-to-end (ends on rank {}, {} cross-rank \
+                 hop{}, {} in gated communication)\n",
+                fmt_duration(cp.total),
+                cp.end_rank,
+                cp.hops,
+                if cp.hops == 1 { "" } else { "s" },
+                fmt_duration(cp.comm_seconds),
+            ));
+            let mut t = TextTable::new(&["Region", "On critical path", "Share"])
+                .align(0, Align::Left)
+                .title("critical-path attribution per region");
+            // Largest share first; ties by path for determinism.
+            let mut rows: Vec<(&String, &f64)> = cp.per_region.iter().collect();
+            rows.sort_by(|a, b| b.1.total_cmp(a.1).then(a.0.cmp(b.0)));
+            for (region, secs) in rows {
+                t.row(vec![
+                    region.clone(),
+                    fmt_duration(*secs),
+                    format!("{:.1}%", 100.0 * secs / cp.total.max(f64::MIN_POSITIVE)),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        None => out.push_str("critical path: trace is empty\n"),
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -643,6 +774,104 @@ mod tests {
         assert!(csv.contains("wait,8,"), "{}", csv);
         assert!(csv.contains("transfer,64,"), "{}", csv);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fig9_renders_critpath_shares_or_explains() {
+        use crate::caliper::{AggRegion, RegionTraceStats, RunProfile};
+        // no trace payloads anywhere: explanatory line
+        let txt = fig9(&Thicket::new(vec![]), None).unwrap();
+        assert!(txt.contains("--channels"), "{}", txt);
+
+        let mk = |ranks: usize, halo_secs: f64| {
+            let mut run = RunProfile::default();
+            run.meta.insert("app".into(), "kripke".into());
+            run.meta.insert("system".into(), "tioga".into());
+            run.meta.insert("ranks".into(), ranks.to_string());
+            let mut comm = AggRegion {
+                is_comm_region: true,
+                ..Default::default()
+            };
+            comm.time.push(1.0);
+            comm.trace = Some(RegionTraceStats {
+                critpath: halo_secs,
+                late_sender: (2, 0.5),
+                ..Default::default()
+            });
+            run.regions.insert("main/sweep_comm".into(), comm);
+            let mut main = AggRegion::default();
+            main.time.push(2.0);
+            main.trace = Some(RegionTraceStats {
+                critpath: 2.0 - halo_secs,
+                ..Default::default()
+            });
+            run.regions.insert("main".into(), main);
+            run
+        };
+        let t = Thicket::new(vec![mk(8, 0.5), mk(64, 1.5)]);
+        let dir = std::env::temp_dir().join(format!("fig9_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let txt = fig9(&t, Some(dir.as_path())).unwrap();
+        assert!(txt.contains("Fig 9"), "{}", txt);
+        assert!(txt.contains("critical-path share"), "{}", txt);
+        let csv = std::fs::read_to_string(dir.join("fig9_kripke_tioga.csv")).unwrap();
+        assert!(csv.starts_with("series,ranks,critpath_fraction"), "{}", csv);
+        assert!(csv.contains("main/sweep_comm,8,"), "{}", csv);
+        assert!(csv.contains("main/sweep_comm,64,"), "{}", csv);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn trace_report_renders_wait_states_and_critpath() {
+        use crate::trace::{RankTrace, RunTrace, TraceEvent};
+        let tr = RankTrace {
+            rank: 0,
+            capacity: 64,
+            dropped: 0,
+            paths: vec!["main".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::Coll {
+                    kind: crate::mpisim::CollKind::Barrier,
+                    ctx: 0,
+                    seq: 0,
+                    comm_size: 2,
+                    bytes: 0,
+                    t_start: 0.25,
+                    sync: 0.75,
+                    t_end: 0.8,
+                },
+                TraceEvent::RegionExit { path: 0, t: 1.0 },
+            ],
+        };
+        let peer = RankTrace {
+            rank: 1,
+            capacity: 64,
+            dropped: 0,
+            paths: vec!["main".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::Coll {
+                    kind: crate::mpisim::CollKind::Barrier,
+                    ctx: 0,
+                    seq: 0,
+                    comm_size: 2,
+                    bytes: 0,
+                    t_start: 0.75,
+                    sync: 0.75,
+                    t_end: 0.8,
+                },
+                TraceEvent::RegionExit { path: 0, t: 1.0 },
+            ],
+        };
+        let rt = RunTrace::new(vec![tr, peer]);
+        let rep = trace_report(&rt);
+        assert!(rep.contains("wait-at-collective"), "{}", rep);
+        assert!(rep.contains("critical path:"), "{}", rep);
+        assert!(rep.contains("1.000s"), "end-to-end span: {}", rep);
+        let g = trace_gantt(&rt, 40);
+        assert!(g.contains("rank    0 |"), "{}", g);
+        assert!(g.contains('C'), "collective wait lane: {}", g);
     }
 
     #[test]

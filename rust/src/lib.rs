@@ -6,7 +6,7 @@
 //! (Nansamba et al., CS.DC 2025) on a fully self-contained, simulated
 //! substrate.
 //!
-//! The stack has five cooperating layers (see `DESIGN.md` for the full
+//! The stack has six cooperating layers (see `DESIGN.md` for the full
 //! inventory and the paper-experiment index):
 //!
 //! 1. [`mpisim`] — a deterministic simulated MPI runtime: thread-per-rank,
@@ -18,10 +18,14 @@
 //! 3. [`apps`] — faithful communication analogs of the three benchmarks:
 //!    AMG2023 (multigrid, `MatVecComm`), Kripke (KBA sweep, `sweep_comm`),
 //!    and Laghos (Lagrangian hydro, `halo_exchange` + dt reductions).
-//! 4. [`benchpark`] + [`thicket`] — reproducible experiment specifications,
+//! 4. [`trace`] — the event-level layer over the same hook chain: per-rank
+//!    timelines, wait-state classification (late sender / late receiver /
+//!    wait-at-collective), and critical-path extraction attributed to
+//!    Caliper regions.
+//! 5. [`benchpark`] + [`thicket`] — reproducible experiment specifications,
 //!    the scaling-study runner, and multi-run exploratory analysis that
 //!    regenerates every table and figure in the paper's evaluation.
-//! 5. [`runtime`] — the PJRT bridge: loads the AOT-compiled JAX/Pallas
+//! 6. [`runtime`] — the PJRT bridge: loads the AOT-compiled JAX/Pallas
 //!    compute kernels (HLO text under `artifacts/`) and executes them from
 //!    the Rust hot path, proving the three-layer composition end to end.
 //!
@@ -51,4 +55,5 @@ pub mod coordinator;
 pub mod mpisim;
 pub mod runtime;
 pub mod thicket;
+pub mod trace;
 pub mod util;

@@ -6,6 +6,8 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use super::request::Protocol;
+
 /// Collective operation kinds, as the profiler sees them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CollKind {
@@ -14,11 +16,36 @@ pub enum CollKind {
     Reduce,
     Allreduce,
     Allgather,
+    /// Variable-count allgather ([`super::Rank::allgatherv`]) — its own
+    /// kind so coll-breakdown reports and trace events name the real
+    /// operation instead of folding it into `Allgather`.
+    Allgatherv,
     Alltoall,
+    /// Variable-count all-to-all ([`super::Rank::alltoallv`]). Implemented
+    /// pairwise over the p2p engine; the kind exists so the operation is
+    /// named in coll-breakdown reports rather than appearing as anonymous
+    /// point-to-point traffic only.
+    Alltoallv,
     CommSplit,
 }
 
 impl CollKind {
+    /// Every kind, colocated with the enum so adding a variant means
+    /// updating this list in the same diff (the trace artifact reader
+    /// resolves names through it — a kind missing here would write
+    /// artifacts it cannot read back).
+    pub const ALL: [CollKind; 9] = [
+        CollKind::Barrier,
+        CollKind::Bcast,
+        CollKind::Reduce,
+        CollKind::Allreduce,
+        CollKind::Allgather,
+        CollKind::Allgatherv,
+        CollKind::Alltoall,
+        CollKind::Alltoallv,
+        CollKind::CommSplit,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             CollKind::Barrier => "MPI_Barrier",
@@ -26,9 +53,16 @@ impl CollKind {
             CollKind::Reduce => "MPI_Reduce",
             CollKind::Allreduce => "MPI_Allreduce",
             CollKind::Allgather => "MPI_Allgather",
+            CollKind::Allgatherv => "MPI_Allgatherv",
             CollKind::Alltoall => "MPI_Alltoall",
+            CollKind::Alltoallv => "MPI_Alltoallv",
             CollKind::CommSplit => "MPI_Comm_split",
         }
+    }
+
+    /// Inverse of [`CollKind::name`] (the trace artifact reader's path).
+    pub fn from_name(name: &str) -> Option<CollKind> {
+        CollKind::ALL.into_iter().find(|k| k.name() == name)
     }
 }
 
@@ -74,16 +108,82 @@ pub enum MpiEvent {
         /// Data-movement seconds (wire + overheads).
         transfer: f64,
     },
+    /// Trace-only: a nonblocking receive was posted (`irecv`). Only
+    /// emitted when a hook on the rank declares
+    /// [`MpiHook::wants_trace_events`], so the hot path stays unchanged
+    /// when tracing is disabled.
+    RecvPost {
+        /// Source world rank, or `None` for ANY_SOURCE.
+        src: Option<usize>,
+        tag: i32,
+        t: f64,
+    },
+    /// Trace-only: a posted receive matched and completed, with the full
+    /// protocol timing the wait-state classifier and critical-path
+    /// extractor need. The transfer began at `arrival - wire`; for eager
+    /// messages that is `sender_ready`, for rendezvous
+    /// `max(sender_ready, post_time) + handshake`.
+    RecvMatch {
+        src: usize,
+        tag: i32,
+        bytes: usize,
+        protocol: Protocol,
+        /// Virtual time the receive was posted.
+        post_time: f64,
+        /// Virtual time the sender finished injecting.
+        sender_ready: f64,
+        /// Rendezvous RTS/CTS latency (0 for eager).
+        handshake: f64,
+        /// Wire time (α + β·bytes) of this message's link class.
+        wire: f64,
+        /// Virtual completion time at the receiver.
+        arrival: f64,
+        /// Virtual time the completing wait call began on this rank.
+        wait_start: f64,
+    },
+    /// Trace-only: a rendezvous send completed (the receiver matched).
+    /// `arrival - wire - handshake` is the gate time — when it exceeds
+    /// `sender_ready`, the receiver's late post gated the transfer.
+    SendMatch {
+        dst: usize,
+        tag: i32,
+        bytes: usize,
+        sender_ready: f64,
+        handshake: f64,
+        wire: f64,
+        arrival: f64,
+        wait_start: f64,
+    },
+    /// Trace-only: one collective epoch with its synchronization point.
+    /// `sync` is the latest member's entry time (what every member's exit
+    /// is gated on); `sync - t_start` is this rank's wait-at-collective.
+    CollEpoch {
+        kind: CollKind,
+        ctx: u32,
+        seq: u64,
+        comm_size: usize,
+        bytes: usize,
+        t_start: f64,
+        sync: f64,
+        t_end: f64,
+    },
 }
 
 impl MpiEvent {
-    /// Duration of the operation on the observing rank.
+    /// Duration of the operation on the observing rank. Trace-only events
+    /// are bookkeeping stamps with zero duration — they never contribute
+    /// to the `mpi-time` channel (the spans they describe are owned by the
+    /// `Wait`/`Coll` events).
     pub fn duration(&self) -> f64 {
         match self {
             MpiEvent::Send { t_start, t_end, .. }
             | MpiEvent::Recv { t_start, t_end, .. }
             | MpiEvent::Coll { t_start, t_end, .. }
             | MpiEvent::Wait { t_start, t_end, .. } => t_end - t_start,
+            MpiEvent::RecvPost { .. }
+            | MpiEvent::RecvMatch { .. }
+            | MpiEvent::SendMatch { .. }
+            | MpiEvent::CollEpoch { .. } => 0.0,
         }
     }
 }
@@ -92,6 +192,14 @@ impl MpiEvent {
 /// (no cross-thread sharing), hence no `Send`/`Sync` bound.
 pub trait MpiHook {
     fn on_event(&mut self, rank: usize, ev: &MpiEvent);
+
+    /// True when this hook consumes the trace-only event variants
+    /// (`RecvPost`, `RecvMatch`, `SendMatch`, `CollEpoch`). The rank skips
+    /// emitting them entirely unless some attached hook opts in, keeping
+    /// the hot path free of trace overhead when tracing is disabled.
+    fn wants_trace_events(&self) -> bool {
+        false
+    }
 }
 
 /// Shared handle to a hook, as stored on a `Rank`.
@@ -116,7 +224,15 @@ mod tests {
     #[test]
     fn names() {
         assert_eq!(CollKind::Allreduce.name(), "MPI_Allreduce");
+        assert_eq!(CollKind::Allgatherv.name(), "MPI_Allgatherv");
+        assert_eq!(CollKind::Alltoallv.name(), "MPI_Alltoallv");
         assert_eq!(CollKind::CommSplit.name(), "MPI_Comm_split");
+        // every kind round-trips through its name (the trace artifact
+        // reader's contract)
+        for k in CollKind::ALL {
+            assert_eq!(CollKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(CollKind::from_name("MPI_Sendrecv"), None);
     }
 
     #[test]

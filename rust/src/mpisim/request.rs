@@ -97,13 +97,16 @@ pub(crate) enum SendState {
     /// Eager send: buffered, complete at creation.
     Eager,
     /// Rendezvous send: pending until the receiver matches. `wire` is the
-    /// message's wire time (for the wait/transfer split) and `ready` the
-    /// virtual time the sender finished injecting.
+    /// message's wire time (for the wait/transfer split), `ready` the
+    /// virtual time the sender finished injecting, and `handshake` the
+    /// RTS/CTS latency — together they let the trace's `SendMatch` event
+    /// recover the gate time (`arrival - wire - handshake`) that tells a
+    /// late receiver apart from a slow wire.
     Rendezvous {
         cell: Arc<SendCell>,
         wire: f64,
-        #[allow(dead_code)] // diagnostic value; the split uses the cell's time
         ready: f64,
+        handshake: f64,
     },
 }
 
@@ -208,6 +211,7 @@ mod tests {
                 cell: cell.clone(),
                 wire: 1e-4,
                 ready: 0.5,
+                handshake: 2e-6,
             },
         };
         assert_eq!(r.protocol(), Protocol::Rendezvous);

@@ -169,6 +169,11 @@ pub struct Rank<'w> {
     core: &'w WorldCore,
     clock: Clock,
     hooks: Vec<HookHandle>,
+    /// True when some attached hook consumes trace-only events
+    /// ([`MpiHook::wants_trace_events`]); recomputed on `add_hook`. When
+    /// false, [`Rank::emit_trace`] is a single branch — the tracing
+    /// subsystem costs the disabled hot path one predictable-false test.
+    trace_events: bool,
     /// Per-context collective sequence numbers (this rank's call count).
     coll_seq: HashMap<u32, u64>,
     /// Per-context comm_split call count (derives child contexts).
@@ -186,6 +191,7 @@ impl<'w> Rank<'w> {
             core,
             clock: Clock::new(),
             hooks: Vec::new(),
+            trace_events: false,
             coll_seq: HashMap::new(),
             split_seq: HashMap::new(),
             span_cache: HashMap::new(),
@@ -238,12 +244,22 @@ impl<'w> Rank<'w> {
 
     /// Attach a PMPI-style hook (e.g. the Caliper comm profiler).
     pub fn add_hook(&mut self, hook: HookHandle) {
+        self.trace_events |= hook.borrow().wants_trace_events();
         self.hooks.push(hook);
     }
 
     fn emit(&self, ev: MpiEvent) {
         for h in &self.hooks {
             h.borrow_mut().on_event(self.rank, &ev);
+        }
+    }
+
+    /// Emit a trace-only event (`RecvPost`/`RecvMatch`/`SendMatch`/
+    /// `CollEpoch`) — skipped entirely unless a hook opted in, so the
+    /// non-traced hook path stays unchanged.
+    fn emit_trace(&self, ev: MpiEvent) {
+        if self.trace_events {
+            self.emit(ev);
         }
     }
 
@@ -298,13 +314,15 @@ impl<'w> Rank<'w> {
             Protocol::Eager => (SendState::Eager, 0.0, None),
             Protocol::Rendezvous => {
                 let cell = Arc::new(SendCell::default());
+                let handshake = machine.handshake_time(self.rank, dst_world);
                 (
                     SendState::Rendezvous {
                         cell: cell.clone(),
                         wire,
                         ready: t_end,
+                        handshake,
                     },
-                    machine.handshake_time(self.rank, dst_world),
+                    handshake,
                     Some(cell),
                 )
             }
@@ -370,12 +388,14 @@ impl<'w> Rank<'w> {
             }
             None => None,
         };
-        let post_id = self.core.mailboxes[self.rank].post_recv(
-            src_world,
+        let post_time = self.clock.now();
+        let post_id =
+            self.core.mailboxes[self.rank].post_recv(src_world, tag, comm.ctx, post_time);
+        self.emit_trace(MpiEvent::RecvPost {
+            src: src_world,
             tag,
-            comm.ctx,
-            self.clock.now(),
-        );
+            t: post_time,
+        });
         Ok(RecvRequest {
             src: src_world,
             tag,
@@ -439,9 +459,11 @@ impl<'w> Rank<'w> {
         let t0 = self.clock.now();
         let n_reqs = reqs.len();
         // Per-request, in request order: the matched envelope (receives
-        // only) and the (completion, wire) pair (receives + pending sends).
+        // only), the (completion, wire) pair (receives + pending sends),
+        // and the receive's post time (for the trace's `RecvMatch`).
         let mut envs: Vec<Option<Envelope>> = Vec::with_capacity(n_reqs);
         let mut comps: Vec<Option<(f64, f64)>> = Vec::with_capacity(n_reqs);
+        let mut posts: Vec<f64> = Vec::with_capacity(n_reqs);
         let mut pending_sends: Vec<(usize, SendRequest)> = Vec::new();
         let mut n_recv = 0usize;
         // Pass 1: complete every RECEIVE first, regardless of where it
@@ -452,15 +474,17 @@ impl<'w> Rank<'w> {
         for req in reqs {
             match req {
                 Request::Recv(r) => {
-                    let (env, at, wire) = self.complete_recv(&r)?;
+                    let (env, at, wire, post_time) = self.complete_recv(&r)?;
                     envs.push(Some(env));
                     comps.push(Some((at, wire)));
+                    posts.push(post_time);
                     n_recv += 1;
                 }
                 Request::Send(s) => {
                     let idx = envs.len();
                     envs.push(None);
                     comps.push(None);
+                    posts.push(0.0);
                     if !matches!(s.state, SendState::Eager) {
                         pending_sends.push((idx, s));
                     }
@@ -469,8 +493,53 @@ impl<'w> Rank<'w> {
         }
         // Pass 2: block on pending rendezvous sends; their completion
         // cells are filled by the peers' receive completions.
-        for (idx, s) in pending_sends {
-            comps[idx] = self.complete_send(&s)?;
+        for (idx, s) in &pending_sends {
+            comps[*idx] = self.complete_send(s)?;
+        }
+        // Trace-only match events, one per completed transfer, carrying
+        // the protocol timing the wait-state classifier and critical-path
+        // extractor consume. Emitted before the Wait event so a trace
+        // stream reads matches → wait span → per-message stamps.
+        if self.trace_events {
+            for (i, (env, comp)) in envs.iter().zip(&comps).enumerate() {
+                if let (Some(env), Some((at, _))) = (env, comp) {
+                    self.emit(MpiEvent::RecvMatch {
+                        src: env.src,
+                        tag: env.tag,
+                        bytes: env.payload.len(),
+                        protocol: env.protocol,
+                        post_time: posts[i],
+                        sender_ready: env.sender_ready,
+                        handshake: env.handshake,
+                        wire: env.wire,
+                        arrival: *at,
+                        wait_start: t0,
+                    });
+                }
+            }
+            for (idx, s) in &pending_sends {
+                if let (
+                    Some((at, _)),
+                    SendState::Rendezvous {
+                        wire,
+                        ready,
+                        handshake,
+                        ..
+                    },
+                ) = (comps[*idx], &s.state)
+                {
+                    self.emit(MpiEvent::SendMatch {
+                        dst: s.dst,
+                        tag: s.tag,
+                        bytes: s.bytes,
+                        sender_ready: *ready,
+                        handshake: *handshake,
+                        wire: *wire,
+                        arrival: at,
+                        wait_start: t0,
+                    });
+                }
+            }
         }
         // Critical completion: the latest, ties broken by first occurrence
         // (deterministic — completions are virtual stamps, not wall time).
@@ -575,8 +644,12 @@ impl<'w> Rank<'w> {
     /// Match one posted receive: blocks for the envelope, computes its
     /// protocol-dependent completion time, and (for rendezvous) notifies
     /// the sender's back-channel. Does NOT advance the clock — callers
-    /// fold completions so `waitall` is arrival-order invariant.
-    fn complete_recv(&mut self, req: &RecvRequest) -> Result<(Envelope, f64, f64), MpiError> {
+    /// fold completions so `waitall` is arrival-order invariant. Returns
+    /// `(envelope, completion, wire, post_time)`.
+    fn complete_recv(
+        &mut self,
+        req: &RecvRequest,
+    ) -> Result<(Envelope, f64, f64, f64), MpiError> {
         let mailbox = &self.core.mailboxes[self.rank];
         let post = mailbox
             .take_posted(req.post_id)
@@ -600,7 +673,7 @@ impl<'w> Rank<'w> {
             cell.complete(at);
         }
         let wire = env.wire;
-        Ok((env, at, wire))
+        Ok((env, at, wire, post.post_time))
     }
 
     /// Resolve one send request: `None` for eager (already complete),
@@ -714,6 +787,16 @@ impl<'w> Rank<'w> {
             bytes: cost_bytes,
             comm_size: comm.size(),
             t_start,
+            t_end,
+        });
+        self.emit_trace(MpiEvent::CollEpoch {
+            kind,
+            ctx: comm.ctx,
+            seq,
+            comm_size: comm.size(),
+            bytes: cost_bytes,
+            t_start,
+            sync: max_entry,
             t_end,
         });
         Ok(result)
@@ -839,7 +922,7 @@ impl<'w> Rank<'w> {
         // contributions must not desynchronize the members' clocks.
         let result = self.collective(
             comm,
-            CollKind::Allgather,
+            CollKind::Allgatherv,
             CollClass::Allgather,
             contrib,
             CollCost::ResultBytesPerMember,
@@ -879,6 +962,20 @@ impl<'w> Rank<'w> {
         for src in 0..p {
             out.push(if src == me { parts[me].clone() } else { Vec::new() });
         }
+        // Name the operation for the coll-breakdown channel with a
+        // zero-duration, ZERO-BYTE marker: the pairwise sends/recvs and
+        // the closing waitall own both the time (`mpi-time` counts
+        // nothing twice) and the bytes (comm-stats/comm-matrix already
+        // book every per-pair payload — a byte-carrying marker would
+        // double-count the exchange's traffic as coll_bytes).
+        let t_marker = self.clock.now();
+        self.emit(MpiEvent::Coll {
+            kind: CollKind::Alltoallv,
+            bytes: 0,
+            comm_size: p,
+            t_start: t_marker,
+            t_end: t_marker,
+        });
         // Round k: send to (me + k), receive from (me - k). All receives
         // are posted before any send and completion happens in one
         // waitall, so the exchange cannot deadlock even when parts exceed

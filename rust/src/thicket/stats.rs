@@ -79,6 +79,44 @@ pub fn region_mpi_time_avg(run: &RunProfile, name: &str) -> Option<f64> {
     Some(r.mpi_time.as_ref()?.avg())
 }
 
+/// Critical-path seconds attributed to a named region by the `trace`
+/// channel's happens-before analysis. `None` when the channel was off or
+/// the region never touched the path.
+pub fn region_critpath_secs(run: &RunProfile, name: &str) -> Option<f64> {
+    let (_, r) = run.region(name)?;
+    Some(r.trace.as_ref()?.critpath)
+}
+
+/// Fraction of the run's critical path attributed to a named region
+/// (fig9): region seconds over the summed attribution across regions.
+pub fn region_critpath_frac(run: &RunProfile, name: &str) -> Option<f64> {
+    let total: f64 = run
+        .regions
+        .values()
+        .filter_map(|r| r.trace.as_ref().map(|t| t.critpath))
+        .sum();
+    if total <= 0.0 {
+        return None;
+    }
+    Some(region_critpath_secs(run, name)? / total)
+}
+
+/// Wait-state instance counts for a named region:
+/// `(late_sender, late_receiver, wait_at_collective)`.
+pub fn region_wait_state_counts(run: &RunProfile, name: &str) -> Option<(u64, u64, u64)> {
+    let (_, r) = run.region(name)?;
+    let t = r.trace.as_ref()?;
+    Some((t.late_sender.0, t.late_receiver.0, t.wait_at_coll.0))
+}
+
+/// Wait-state idle seconds for a named region:
+/// `(late_sender, late_receiver, wait_at_collective)`.
+pub fn region_wait_state_secs(run: &RunProfile, name: &str) -> Option<(f64, f64, f64)> {
+    let (_, r) = run.region(name)?;
+    let t = r.trace.as_ref()?;
+    Some((t.late_sender.1, t.late_receiver.1, t.wait_at_coll.1))
+}
+
 /// Dense rank×rank sent-bytes matrix for a region recorded with the
 /// `comm-matrix` channel: returns (region path, matrix) where
 /// `matrix[src][dst]` is bytes sent. `None` when the region is absent or
@@ -162,5 +200,37 @@ mod tests {
     fn region_time() {
         assert_eq!(region_time_avg(&sample(), "main"), Some(10.0));
         assert_eq!(region_time_avg(&sample(), "nope"), None);
+    }
+
+    #[test]
+    fn critpath_and_wait_state_columns() {
+        use crate::caliper::RegionTraceStats;
+        let mut r = sample();
+        assert_eq!(region_critpath_frac(&r, "main"), None, "no trace payload");
+        r.regions.get_mut("main").unwrap().trace = Some(RegionTraceStats {
+            critpath: 6.0,
+            late_sender: (3, 1.5),
+            ..Default::default()
+        });
+        r.regions
+            .get_mut("main/solve/matvec_comm_level_0")
+            .unwrap()
+            .trace = Some(RegionTraceStats {
+            critpath: 2.0,
+            wait_at_coll: (1, 0.25),
+            ..Default::default()
+        });
+        assert_eq!(region_critpath_secs(&r, "main"), Some(6.0));
+        assert!((region_critpath_frac(&r, "main").unwrap() - 0.75).abs() < 1e-12);
+        assert!(
+            (region_critpath_frac(&r, "matvec_comm_level_0").unwrap() - 0.25).abs() < 1e-12,
+            "leaf-name lookup works for trace columns too"
+        );
+        assert_eq!(region_wait_state_counts(&r, "main"), Some((3, 0, 0)));
+        assert_eq!(
+            region_wait_state_secs(&r, "matvec_comm_level_0"),
+            Some((0.0, 0.0, 0.25))
+        );
+        assert_eq!(region_wait_state_counts(&r, "main/solve"), None);
     }
 }

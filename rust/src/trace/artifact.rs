@@ -1,0 +1,383 @@
+//! The versioned JSONL trace artifact written next to the v2 profile.
+//!
+//! Line 1 is a header object (`schema`, rank/event/drop counts); then, per
+//! rank, one rank-header line (capacity, drop count, interned path table)
+//! followed by one line per event. Events use short keys (`"e"` = type
+//! tag) to keep multi-megabyte traces readable *and* cheap. Floats are
+//! written with Rust's shortest-roundtrip formatting, so identical
+//! simulations serialize byte-identically — the determinism contract the
+//! campaign tests gate on.
+
+use super::event::{RankTrace, TraceEvent};
+use super::merge::RunTrace;
+use crate::mpisim::{CollKind, Protocol};
+use crate::util::json::Json;
+
+/// Schema version stamped into the artifact header.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// File suffix of trace artifacts (`<cell>.trace.jsonl`).
+pub const TRACE_SUFFIX: &str = ".trace.jsonl";
+
+fn proto_name(p: Protocol) -> &'static str {
+    match p {
+        Protocol::Eager => "eager",
+        Protocol::Rendezvous => "rendezvous",
+    }
+}
+
+fn proto_parse(s: &str) -> Option<Protocol> {
+    match s {
+        "eager" => Some(Protocol::Eager),
+        "rendezvous" => Some(Protocol::Rendezvous),
+        _ => None,
+    }
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut o = Json::obj();
+    match ev {
+        TraceEvent::RegionEnter { path, t } => {
+            o.set("e", "enter").set("p", *path).set("t", *t);
+        }
+        TraceEvent::RegionExit { path, t } => {
+            o.set("e", "exit").set("p", *path).set("t", *t);
+        }
+        TraceEvent::SendPost {
+            dst,
+            tag,
+            bytes,
+            t_start,
+            t_end,
+        } => {
+            o.set("e", "send")
+                .set("dst", *dst)
+                .set("tag", *tag as f64)
+                .set("bytes", *bytes)
+                .set("t0", *t_start)
+                .set("t1", *t_end);
+        }
+        TraceEvent::RecvPost { src, tag, t } => {
+            o.set("e", "post").set("tag", *tag as f64).set("t", *t);
+            if let Some(s) = src {
+                o.set("src", *s);
+            }
+        }
+        TraceEvent::RecvMatch {
+            src,
+            tag,
+            bytes,
+            protocol,
+            post_time,
+            sender_ready,
+            handshake,
+            wire,
+            arrival,
+            wait_start,
+        } => {
+            o.set("e", "match")
+                .set("src", *src)
+                .set("tag", *tag as f64)
+                .set("bytes", *bytes)
+                .set("proto", proto_name(*protocol))
+                .set("post", *post_time)
+                .set("ready", *sender_ready)
+                .set("hs", *handshake)
+                .set("wire", *wire)
+                .set("at", *arrival)
+                .set("w0", *wait_start);
+        }
+        TraceEvent::SendMatch {
+            dst,
+            tag,
+            bytes,
+            sender_ready,
+            handshake,
+            wire,
+            arrival,
+            wait_start,
+        } => {
+            o.set("e", "smatch")
+                .set("dst", *dst)
+                .set("tag", *tag as f64)
+                .set("bytes", *bytes)
+                .set("ready", *sender_ready)
+                .set("hs", *handshake)
+                .set("wire", *wire)
+                .set("at", *arrival)
+                .set("w0", *wait_start);
+        }
+        TraceEvent::Wait {
+            n_reqs,
+            t_start,
+            t_end,
+            wait,
+            transfer,
+        } => {
+            o.set("e", "wait")
+                .set("n", *n_reqs)
+                .set("t0", *t_start)
+                .set("t1", *t_end)
+                .set("w", *wait)
+                .set("x", *transfer);
+        }
+        TraceEvent::Coll {
+            kind,
+            ctx,
+            seq,
+            comm_size,
+            bytes,
+            t_start,
+            sync,
+            t_end,
+        } => {
+            o.set("e", "coll")
+                .set("kind", kind.name())
+                .set("ctx", *ctx as f64)
+                .set("seq", *seq)
+                .set("size", *comm_size)
+                .set("bytes", *bytes)
+                .set("t0", *t_start)
+                .set("sync", *sync)
+                .set("t1", *t_end);
+        }
+    }
+    o
+}
+
+fn event_from_json(j: &Json) -> Option<TraceEvent> {
+    let f = |k: &str| j.get(k).and_then(Json::as_f64);
+    let u = |k: &str| j.get(k).and_then(Json::as_u64);
+    Some(match j.get("e")?.as_str()? {
+        "enter" => TraceEvent::RegionEnter {
+            path: u("p")? as u32,
+            t: f("t")?,
+        },
+        "exit" => TraceEvent::RegionExit {
+            path: u("p")? as u32,
+            t: f("t")?,
+        },
+        "send" => TraceEvent::SendPost {
+            dst: u("dst")? as usize,
+            tag: f("tag")? as i32,
+            bytes: u("bytes")? as usize,
+            t_start: f("t0")?,
+            t_end: f("t1")?,
+        },
+        "post" => TraceEvent::RecvPost {
+            src: u("src").map(|s| s as usize),
+            tag: f("tag")? as i32,
+            t: f("t")?,
+        },
+        "match" => TraceEvent::RecvMatch {
+            src: u("src")? as usize,
+            tag: f("tag")? as i32,
+            bytes: u("bytes")? as usize,
+            protocol: proto_parse(j.get("proto")?.as_str()?)?,
+            post_time: f("post")?,
+            sender_ready: f("ready")?,
+            handshake: f("hs")?,
+            wire: f("wire")?,
+            arrival: f("at")?,
+            wait_start: f("w0")?,
+        },
+        "smatch" => TraceEvent::SendMatch {
+            dst: u("dst")? as usize,
+            tag: f("tag")? as i32,
+            bytes: u("bytes")? as usize,
+            sender_ready: f("ready")?,
+            handshake: f("hs")?,
+            wire: f("wire")?,
+            arrival: f("at")?,
+            wait_start: f("w0")?,
+        },
+        "wait" => TraceEvent::Wait {
+            n_reqs: u("n")? as usize,
+            t_start: f("t0")?,
+            t_end: f("t1")?,
+            wait: f("w")?,
+            transfer: f("x")?,
+        },
+        "coll" => TraceEvent::Coll {
+            kind: CollKind::from_name(j.get("kind")?.as_str()?)?,
+            ctx: u("ctx")? as u32,
+            seq: u("seq")?,
+            comm_size: u("size")? as usize,
+            bytes: u("bytes")? as usize,
+            t_start: f("t0")?,
+            sync: f("sync")?,
+            t_end: f("t1")?,
+        },
+        _ => return None,
+    })
+}
+
+/// Serialize a run trace to JSONL (deterministic byte-for-byte for
+/// identical traces).
+pub fn write_jsonl(trace: &RunTrace) -> String {
+    let mut out = String::new();
+    let mut header = Json::obj();
+    header
+        .set("schema", TRACE_SCHEMA_VERSION)
+        .set("kind", "commscope-trace")
+        .set("ranks", trace.nranks())
+        .set("events", trace.n_events())
+        .set("dropped_events", trace.dropped_events());
+    out.push_str(&header.to_string_compact());
+    out.push('\n');
+    for tr in &trace.ranks {
+        let mut rh = Json::obj();
+        rh.set("rank", tr.rank)
+            .set("capacity", tr.capacity)
+            .set("dropped", tr.dropped)
+            .set(
+                "paths",
+                Json::Arr(tr.paths.iter().map(|p| Json::Str(p.clone())).collect()),
+            );
+        out.push_str(&rh.to_string_compact());
+        out.push('\n');
+        for ev in &tr.events {
+            out.push_str(&event_json(ev).to_string_compact());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Parse a JSONL artifact written by [`write_jsonl`]. Returns `None` on a
+/// malformed document or an unknown (future) schema version.
+pub fn read_jsonl(text: &str) -> Option<RunTrace> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = Json::parse(lines.next()?).ok()?;
+    if header.get("schema").and_then(Json::as_u64) != Some(TRACE_SCHEMA_VERSION) {
+        return None;
+    }
+    let mut ranks: Vec<RankTrace> = Vec::new();
+    for line in lines {
+        let j = Json::parse(line).ok()?;
+        if let Some(rank) = j.get("rank").and_then(Json::as_u64) {
+            // rank header
+            let paths = j
+                .get("paths")?
+                .as_arr()?
+                .iter()
+                .map(|p| p.as_str().map(String::from))
+                .collect::<Option<Vec<_>>>()?;
+            ranks.push(RankTrace {
+                rank: rank as usize,
+                capacity: j.get("capacity").and_then(Json::as_u64)? as usize,
+                dropped: j.get("dropped").and_then(Json::as_u64)?,
+                paths,
+                events: Vec::new(),
+            });
+        } else {
+            ranks.last_mut()?.events.push(event_from_json(&j)?);
+        }
+    }
+    Some(RunTrace::new(ranks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunTrace {
+        let r0 = RankTrace {
+            rank: 0,
+            capacity: 128,
+            dropped: 3,
+            paths: vec!["main".into(), "main/halo".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::SendPost {
+                    dst: 1,
+                    tag: 7,
+                    bytes: 4096,
+                    t_start: 0.125,
+                    t_end: 0.25,
+                },
+                TraceEvent::RecvMatch {
+                    src: 1,
+                    tag: -3,
+                    bytes: 10,
+                    protocol: Protocol::Rendezvous,
+                    post_time: 0.1,
+                    sender_ready: 0.2,
+                    handshake: 0.01,
+                    wire: 0.05,
+                    arrival: 0.26,
+                    wait_start: 0.1,
+                },
+                TraceEvent::Wait {
+                    n_reqs: 2,
+                    t_start: 0.1,
+                    t_end: 0.3,
+                    wait: 0.12,
+                    transfer: 0.08,
+                },
+                TraceEvent::Coll {
+                    kind: CollKind::Allgatherv,
+                    ctx: 5,
+                    seq: 2,
+                    comm_size: 4,
+                    bytes: 64,
+                    t_start: 0.3,
+                    sync: 0.4,
+                    t_end: 0.45,
+                },
+                TraceEvent::RegionExit { path: 0, t: 0.5 },
+            ],
+        };
+        let r1 = RankTrace {
+            rank: 1,
+            capacity: 128,
+            dropped: 0,
+            paths: vec!["main".into()],
+            events: vec![
+                TraceEvent::RecvPost {
+                    src: None,
+                    tag: -1,
+                    t: 0.0,
+                },
+                TraceEvent::SendMatch {
+                    dst: 0,
+                    tag: 7,
+                    bytes: 1 << 20,
+                    sender_ready: 0.1,
+                    handshake: 0.01,
+                    wire: 0.2,
+                    arrival: 0.5,
+                    wait_start: 0.1,
+                },
+            ],
+        };
+        RunTrace::new(vec![r0, r1])
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_exact_and_byte_stable() {
+        let rt = sample();
+        let text = write_jsonl(&rt);
+        // compact objects serialize keys in sorted (BTreeMap) order
+        let header = text.lines().next().unwrap();
+        assert!(header.contains("\"schema\":1"), "{}", header);
+        assert!(header.contains("\"kind\":\"commscope-trace\""), "{}", header);
+        let back = read_jsonl(&text).expect("parses");
+        assert_eq!(back, rt, "lossless round-trip");
+        assert_eq!(write_jsonl(&back), text, "byte-stable re-serialization");
+        assert_eq!(back.dropped_events(), 3);
+    }
+
+    #[test]
+    fn future_schema_refused() {
+        let rt = sample();
+        let text = write_jsonl(&rt).replacen("\"schema\":1", "\"schema\":9", 1);
+        assert!(read_jsonl(&text).is_none());
+    }
+
+    #[test]
+    fn garbage_refused() {
+        assert!(read_jsonl("").is_none());
+        assert!(read_jsonl("not json\n").is_none());
+    }
+}

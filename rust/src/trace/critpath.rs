@@ -1,0 +1,406 @@
+//! Critical-path extraction over the happens-before graph.
+//!
+//! The graph is implicit in the trace: intra-rank program order plus
+//! cross-rank edges from message completions (`RecvMatch`/`SendMatch`,
+//! whose transfer start is gated by the remote side) and collective
+//! epochs (every member's exit is gated by the last member's entry).
+//!
+//! Extraction walks **backwards** from the run's end anchor — the rank
+//! whose stream ends latest. On the current rank it finds the latest
+//! remote-gated completion before the cursor; the span after it is local
+//! work, the span from the remote gate to the completion is communication
+//! on the critical path, and the walk hops to the gating rank at the gate
+//! time. Because every step partitions `[0, t_end]` exactly, the summed
+//! attribution equals the end-to-end virtual wall time by construction —
+//! the invariant the acceptance test checks against
+//! [`crate::caliper::RunProfile::wall_time`].
+
+use std::collections::BTreeMap;
+
+use super::event::TraceEvent;
+use super::merge::RunTrace;
+use crate::mpisim::Protocol;
+
+const EPS: f64 = 1e-12;
+
+/// One piece of the critical path, chronological.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CritSegment {
+    pub rank: usize,
+    /// Innermost region active on `rank` over the span.
+    pub region: String,
+    pub t0: f64,
+    pub t1: f64,
+    /// True for spans covering a gated transfer/synchronization (the
+    /// message or collective that moved the path between ranks).
+    pub comm: bool,
+}
+
+/// The extracted critical path.
+#[derive(Debug, Clone, Default)]
+pub struct CritPath {
+    /// End-to-end length (== the run's virtual wall time).
+    pub total: f64,
+    /// Rank whose stream anchors the end of the path.
+    pub end_rank: usize,
+    /// Chronological spans partitioning `[0, total]`.
+    pub segments: Vec<CritSegment>,
+    /// Seconds of the path attributed to each region (sums to `total`).
+    pub per_region: BTreeMap<String, f64>,
+    /// Seconds of the path spent in gated communication.
+    pub comm_seconds: f64,
+    /// Cross-rank hops taken.
+    pub hops: usize,
+}
+
+/// A remote-gated completion on one rank: the local clock was pulled to
+/// `complete` by `gate_rank`'s progress at `gate_t`.
+#[derive(Debug, Clone, Copy)]
+struct SyncRec {
+    complete: f64,
+    gate_rank: usize,
+    gate_t: f64,
+}
+
+/// Extract the critical path. Returns `None` for an empty trace; a trace
+/// with dropped events yields a best-effort path over the surviving
+/// suffix (the artifact header makes the truncation explicit).
+pub fn critical_path(trace: &RunTrace) -> Option<CritPath> {
+    if trace.ranks.iter().all(|r| r.events.is_empty()) {
+        return None;
+    }
+    // Last entrant per collective epoch (ctx, seq): (t_start, rank), ties
+    // to the lowest rank for determinism.
+    let mut coll_last: BTreeMap<(u32, u64), (f64, usize)> = BTreeMap::new();
+    for tr in &trace.ranks {
+        for ev in &tr.events {
+            if let TraceEvent::Coll { ctx, seq, t_start, .. } = ev {
+                let e = coll_last.entry((*ctx, *seq)).or_insert((*t_start, tr.rank));
+                if *t_start > e.0 + EPS {
+                    *e = (*t_start, tr.rank);
+                }
+            }
+        }
+    }
+    // Remote-gated completion records per rank, sorted by completion time.
+    let mut recs: BTreeMap<usize, Vec<SyncRec>> = BTreeMap::new();
+    for tr in &trace.ranks {
+        let list = recs.entry(tr.rank).or_default();
+        for ev in &tr.events {
+            let rec = match ev {
+                TraceEvent::RecvMatch {
+                    src,
+                    protocol,
+                    post_time,
+                    sender_ready,
+                    arrival,
+                    wait_start,
+                    ..
+                } => {
+                    // Binding only when the wait actually blocked on it,
+                    // and remote only when the SENDER gated the transfer
+                    // (a rendezvous gated by our own late post continues
+                    // the local chain — no hop).
+                    let sender_gated = match protocol {
+                        Protocol::Eager => true,
+                        Protocol::Rendezvous => *sender_ready >= *post_time,
+                    };
+                    if *arrival > wait_start + EPS && sender_gated {
+                        Some(SyncRec {
+                            complete: *arrival,
+                            gate_rank: *src,
+                            gate_t: *sender_ready,
+                        })
+                    } else {
+                        None
+                    }
+                }
+                TraceEvent::SendMatch {
+                    dst,
+                    sender_ready,
+                    handshake,
+                    wire,
+                    arrival,
+                    wait_start,
+                    ..
+                } => {
+                    let gate = arrival - wire - handshake;
+                    if *arrival > wait_start + EPS && gate > sender_ready + EPS {
+                        Some(SyncRec {
+                            complete: *arrival,
+                            gate_rank: *dst,
+                            gate_t: gate,
+                        })
+                    } else {
+                        None
+                    }
+                }
+                TraceEvent::Coll { ctx, seq, t_start, sync, t_end, .. } => {
+                    let last = coll_last.get(&(*ctx, *seq)).copied();
+                    match last {
+                        Some((_, last_rank))
+                            if last_rank != tr.rank && *sync > t_start + EPS =>
+                        {
+                            Some(SyncRec {
+                                complete: *t_end,
+                                gate_rank: last_rank,
+                                gate_t: *sync,
+                            })
+                        }
+                        _ => None,
+                    }
+                }
+                _ => None,
+            };
+            if let Some(r) = rec {
+                // Strict progress guard: a hop must move backwards.
+                if r.gate_t < r.complete - EPS {
+                    list.push(r);
+                }
+            }
+        }
+        list.sort_by(|a, b| a.complete.total_cmp(&b.complete));
+    }
+
+    // End anchor: latest stream end, ties to the lowest rank.
+    let (end_rank, t_end) = trace
+        .ranks
+        .iter()
+        .map(|r| (r.rank, r.end_time()))
+        .fold((0usize, f64::NEG_INFINITY), |best, (r, t)| {
+            if t > best.1 + EPS {
+                (r, t)
+            } else {
+                best
+            }
+        });
+
+    let mut path = CritPath {
+        total: t_end.max(0.0),
+        end_rank,
+        ..Default::default()
+    };
+    let mut cur_rank = end_rank;
+    let mut cursor = t_end;
+    let mut rev_segments: Vec<CritSegment> = Vec::new();
+    // Region indexes are built once per visited rank, not per hop.
+    let mut indexes: BTreeMap<usize, super::merge::RegionIndex> = BTreeMap::new();
+    // Bounded by the total number of records (each hop consumes the
+    // record it walked through — completion times strictly decrease).
+    let max_steps = trace.n_events() + trace.nranks() + 8;
+    for _ in 0..max_steps {
+        if cursor <= EPS {
+            break;
+        }
+        let idx = indexes
+            .entry(cur_rank)
+            .or_insert_with(|| trace.region_index(cur_rank));
+        // Latest record on this rank completing at or before the cursor
+        // whose gate makes strict backwards progress (degenerate records
+        // are skipped, not allowed to end the walk early).
+        let rec = recs.get(&cur_rank).and_then(|list| {
+            let mut i = list.partition_point(|r| r.complete <= cursor + EPS);
+            while i > 0 {
+                i -= 1;
+                if list[i].gate_t < cursor - EPS {
+                    return Some(list[i]);
+                }
+            }
+            None
+        });
+        match rec {
+            Some(r) => {
+                // Local work after the completion.
+                for (a, b, region) in idx.split(r.complete.min(cursor), cursor) {
+                    push_seg(&mut rev_segments, &mut path, cur_rank, region, a, b, false);
+                }
+                // The gated transfer/synchronization itself.
+                let comm_start = r.gate_t;
+                let comm_end = r.complete.min(cursor);
+                if comm_end > comm_start {
+                    // Sample strictly inside the span: the completion time
+                    // can coincide with the enclosing region's exit stamp.
+                    let region = idx
+                        .innermost_at(0.5 * (comm_start + comm_end))
+                        .to_string();
+                    path.comm_seconds += comm_end - comm_start;
+                    push_seg(
+                        &mut rev_segments,
+                        &mut path,
+                        cur_rank,
+                        &region,
+                        comm_start,
+                        comm_end,
+                        true,
+                    );
+                }
+                path.hops += 1;
+                cur_rank = r.gate_rank;
+                cursor = r.gate_t;
+            }
+            _ => {
+                // No earlier remote gate: everything back to the origin is
+                // this rank's local chain.
+                for (a, b, region) in idx.split(0.0, cursor) {
+                    push_seg(&mut rev_segments, &mut path, cur_rank, region, a, b, false);
+                }
+                cursor = 0.0;
+                break;
+            }
+        }
+    }
+    if cursor > EPS {
+        // Step guard tripped (malformed trace): account the remainder so
+        // the partition invariant still holds.
+        let idx = trace.region_index(cur_rank);
+        for (a, b, region) in idx.split(0.0, cursor) {
+            push_seg(&mut rev_segments, &mut path, cur_rank, region, a, b, false);
+        }
+    }
+    rev_segments.reverse();
+    path.segments = rev_segments;
+    Some(path)
+}
+
+fn push_seg(
+    rev: &mut Vec<CritSegment>,
+    path: &mut CritPath,
+    rank: usize,
+    region: &str,
+    t0: f64,
+    t1: f64,
+    comm: bool,
+) {
+    if t1 <= t0 {
+        return;
+    }
+    *path.per_region.entry(region.to_string()).or_insert(0.0) += t1 - t0;
+    rev.push(CritSegment {
+        rank,
+        region: region.to_string(),
+        t0,
+        t1,
+        comm,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::RankTrace;
+
+    /// Two ranks: rank 0 computes 1s then sends; rank 1 posts at 0 and
+    /// waits. Message: ready at 1.0, wire 0.5 → arrival 1.5; rank 1 then
+    /// computes to 2.0. Critical path: rank0 [0,1.0] + transfer [1.0,1.5]
+    /// + rank1 [1.5,2.0] = 2.0.
+    fn two_rank_chain() -> RunTrace {
+        let r0 = RankTrace {
+            rank: 0,
+            capacity: 64,
+            dropped: 0,
+            paths: vec!["main".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::SendPost {
+                    dst: 1,
+                    tag: 0,
+                    bytes: 64,
+                    t_start: 1.0,
+                    t_end: 1.0,
+                },
+                TraceEvent::RegionExit { path: 0, t: 1.0 },
+            ],
+        };
+        let r1 = RankTrace {
+            rank: 1,
+            capacity: 64,
+            dropped: 0,
+            paths: vec!["main".into(), "main/halo".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::RegionEnter { path: 1, t: 0.0 },
+                TraceEvent::RecvPost {
+                    src: Some(0),
+                    tag: 0,
+                    t: 0.0,
+                },
+                TraceEvent::RecvMatch {
+                    src: 0,
+                    tag: 0,
+                    bytes: 64,
+                    protocol: Protocol::Eager,
+                    post_time: 0.0,
+                    sender_ready: 1.0,
+                    handshake: 0.0,
+                    wire: 0.5,
+                    arrival: 1.5,
+                    wait_start: 0.0,
+                },
+                TraceEvent::RegionExit { path: 1, t: 1.5 },
+                TraceEvent::RegionExit { path: 0, t: 2.0 },
+            ],
+        };
+        RunTrace::new(vec![r0, r1])
+    }
+
+    #[test]
+    fn message_chain_partitions_wall_time() {
+        let rt = two_rank_chain();
+        let cp = critical_path(&rt).unwrap();
+        assert_eq!(cp.end_rank, 1);
+        assert!((cp.total - 2.0).abs() < 1e-12);
+        let sum: f64 = cp.per_region.values().sum();
+        assert!((sum - cp.total).abs() < 1e-9, "attribution sums to total");
+        assert_eq!(cp.hops, 1);
+        // the transfer span lands on the receiver's halo region
+        assert!((cp.comm_seconds - 0.5).abs() < 1e-12);
+        assert!(cp.per_region["main/halo"] >= 0.5);
+        // sender-side local second
+        assert!((cp.per_region["main"] - (1.0 + 0.5)).abs() < 1e-12);
+        // segments are chronological and contiguous
+        for w in cp.segments.windows(2) {
+            assert!(w[0].t1 <= w[1].t0 + 1e-12);
+        }
+        assert_eq!(cp.segments.first().unwrap().t0, 0.0);
+        assert!((cp.segments.last().unwrap().t1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collective_hops_to_last_entrant() {
+        // rank 0 enters barrier at 1.0 (early), rank 1 at 3.0; both exit
+        // at 3.2. End anchor: rank 0 computing until 4.0.
+        let mk = |rank: usize, entry: f64, exit: f64| RankTrace {
+            rank,
+            capacity: 64,
+            dropped: 0,
+            paths: vec!["main".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::Coll {
+                    kind: crate::mpisim::CollKind::Barrier,
+                    ctx: 0,
+                    seq: 0,
+                    comm_size: 2,
+                    bytes: 0,
+                    t_start: entry,
+                    sync: 3.0,
+                    t_end: 3.2,
+                },
+                TraceEvent::RegionExit { path: 0, t: exit },
+            ],
+        };
+        let rt = RunTrace::new(vec![mk(0, 1.0, 4.0), mk(1, 3.0, 3.2)]);
+        let cp = critical_path(&rt).unwrap();
+        assert!((cp.total - 4.0).abs() < 1e-12);
+        assert_eq!(cp.hops, 1, "path crosses to the last entrant");
+        // hop lands on rank 1 (the laggard) before the sync point
+        assert!(cp.segments.iter().any(|s| s.rank == 1));
+        let sum: f64 = cp.per_region.values().sum();
+        assert!((sum - cp.total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_trace_yields_none() {
+        assert!(critical_path(&RunTrace::default()).is_none());
+    }
+}

@@ -1,0 +1,198 @@
+//! The typed event model of the trace subsystem: what one rank records.
+
+use crate::mpisim::{CollKind, Protocol};
+
+/// One recorded event on one rank, with virtual timestamps. Region paths
+/// are interned into the owning [`RankTrace`]'s path table (`path` fields
+/// index it) so repeated visits cost one `u32`, not a `String`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// An annotation region was entered (`path` indexes
+    /// [`RankTrace::paths`]).
+    RegionEnter { path: u32, t: f64 },
+    /// An annotation region was exited.
+    RegionExit { path: u32, t: f64 },
+    /// An `isend` was posted; `[t_start, t_end]` spans the sender's
+    /// injection overhead.
+    SendPost {
+        dst: usize,
+        tag: i32,
+        bytes: usize,
+        t_start: f64,
+        t_end: f64,
+    },
+    /// An `irecv` was posted (`src = None` for ANY_SOURCE).
+    RecvPost { src: Option<usize>, tag: i32, t: f64 },
+    /// A posted receive matched and completed, with the full protocol
+    /// timing: the wire transfer began at `arrival - wire`, which is
+    /// `sender_ready` for eager and
+    /// `max(sender_ready, post_time) + handshake` for rendezvous.
+    RecvMatch {
+        src: usize,
+        tag: i32,
+        bytes: usize,
+        protocol: Protocol,
+        post_time: f64,
+        sender_ready: f64,
+        handshake: f64,
+        wire: f64,
+        arrival: f64,
+        /// When the completing wait call began on this rank.
+        wait_start: f64,
+    },
+    /// A rendezvous send completed: the receiver matched at
+    /// `arrival - wire - handshake` (the gate); a gate later than
+    /// `sender_ready` means the receiver's post throttled the transfer.
+    SendMatch {
+        dst: usize,
+        tag: i32,
+        bytes: usize,
+        sender_ready: f64,
+        handshake: f64,
+        wire: f64,
+        arrival: f64,
+        wait_start: f64,
+    },
+    /// A `wait`/`waitall`/`waitany` span with its wait/transfer split.
+    Wait {
+        n_reqs: usize,
+        t_start: f64,
+        t_end: f64,
+        wait: f64,
+        transfer: f64,
+    },
+    /// One collective epoch: `sync` is the latest member's entry (what
+    /// every member's exit is gated on), so `sync - t_start` is this
+    /// rank's wait-at-collective time.
+    Coll {
+        kind: CollKind,
+        ctx: u32,
+        seq: u64,
+        comm_size: usize,
+        bytes: usize,
+        t_start: f64,
+        sync: f64,
+        t_end: f64,
+    },
+}
+
+impl TraceEvent {
+    /// Primary timestamp, used for the deterministic global merge order.
+    pub fn t(&self) -> f64 {
+        match self {
+            TraceEvent::RegionEnter { t, .. }
+            | TraceEvent::RegionExit { t, .. }
+            | TraceEvent::RecvPost { t, .. } => *t,
+            TraceEvent::SendPost { t_start, .. }
+            | TraceEvent::Wait { t_start, .. }
+            | TraceEvent::Coll { t_start, .. } => *t_start,
+            TraceEvent::RecvMatch { arrival, .. } | TraceEvent::SendMatch { arrival, .. } => {
+                *arrival
+            }
+        }
+    }
+
+    /// Latest timestamp the event mentions (the trace's end anchor is the
+    /// max of these across a rank's stream).
+    pub fn t_end(&self) -> f64 {
+        match self {
+            TraceEvent::RegionEnter { t, .. }
+            | TraceEvent::RegionExit { t, .. }
+            | TraceEvent::RecvPost { t, .. } => *t,
+            TraceEvent::SendPost { t_end, .. }
+            | TraceEvent::Wait { t_end, .. }
+            | TraceEvent::Coll { t_end, .. } => *t_end,
+            TraceEvent::RecvMatch { arrival, .. } | TraceEvent::SendMatch { arrival, .. } => {
+                *arrival
+            }
+        }
+    }
+}
+
+/// One rank's bounded event stream, as captured by the
+/// [`super::TraceRecorder`] ring buffer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankTrace {
+    pub rank: usize,
+    /// Ring capacity the stream was recorded under.
+    pub capacity: usize,
+    /// Events evicted because the ring was full (oldest-first). A nonzero
+    /// count means the stream is a suffix of the run, and whole-run
+    /// analyses (critical path) are best-effort.
+    pub dropped: u64,
+    /// Interned region paths; `TraceEvent::Region*` events index this.
+    pub paths: Vec<String>,
+    /// Events in capture (program) order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl RankTrace {
+    /// The interned path for `id` (empty string when out of range — only
+    /// possible for hand-built traces).
+    pub fn path(&self, id: u32) -> &str {
+        self.paths.get(id as usize).map(String::as_str).unwrap_or("")
+    }
+
+    /// Latest timestamp in the stream (0 for an empty trace).
+    pub fn end_time(&self) -> f64 {
+        self.events.iter().map(TraceEvent::t_end).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timestamps() {
+        let ev = TraceEvent::Wait {
+            n_reqs: 2,
+            t_start: 1.0,
+            t_end: 3.0,
+            wait: 1.5,
+            transfer: 0.5,
+        };
+        assert_eq!(ev.t(), 1.0);
+        assert_eq!(ev.t_end(), 3.0);
+        let ev = TraceEvent::RecvMatch {
+            src: 0,
+            tag: 1,
+            bytes: 8,
+            protocol: Protocol::Eager,
+            post_time: 0.0,
+            sender_ready: 0.5,
+            handshake: 0.0,
+            wire: 0.25,
+            arrival: 0.75,
+            wait_start: 0.0,
+        };
+        assert_eq!(ev.t(), 0.75);
+    }
+
+    #[test]
+    fn end_time_over_events() {
+        let tr = RankTrace {
+            rank: 0,
+            capacity: 16,
+            dropped: 0,
+            paths: vec!["main".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::Coll {
+                    kind: CollKind::Barrier,
+                    ctx: 0,
+                    seq: 0,
+                    comm_size: 2,
+                    bytes: 0,
+                    t_start: 1.0,
+                    sync: 2.0,
+                    t_end: 2.5,
+                },
+                TraceEvent::RegionExit { path: 0, t: 2.5 },
+            ],
+        };
+        assert_eq!(tr.end_time(), 2.5);
+        assert_eq!(tr.path(0), "main");
+        assert_eq!(tr.path(9), "");
+    }
+}

@@ -1,0 +1,177 @@
+//! ASCII Gantt timeline over a merged run trace: one lane per rank,
+//! sampled into terminal columns, with per-column state glyphs — the
+//! cross-rank view that makes late-sender/late-receiver pathologies
+//! visible at a glance (what Kousha et al.'s cross-layer timelines show
+//! with pixels).
+
+use super::event::TraceEvent;
+use super::merge::RunTrace;
+use crate::util::duration::fmt_duration;
+
+/// Per-column states, later-listed states win when a column mixes them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum LaneState {
+    /// Outside any recorded span: compute / local work.
+    Compute,
+    /// Inside a collective epoch after the sync point (the operation).
+    CollOp,
+    /// Inside a wait span's transfer portion.
+    Transfer,
+    /// Inside a collective epoch before the sync point (waiting).
+    CollWait,
+    /// Inside a wait span's blocked portion.
+    Wait,
+}
+
+impl LaneState {
+    fn glyph(self) -> char {
+        match self {
+            LaneState::Compute => '.',
+            LaneState::CollOp => 'c',
+            LaneState::Transfer => '=',
+            LaneState::CollWait => 'C',
+            LaneState::Wait => 'W',
+        }
+    }
+}
+
+/// Render the Gantt chart, `width` columns wide (clamped to ≥ 16).
+pub fn render(trace: &RunTrace, width: usize) -> String {
+    let width = width.max(16);
+    let t_end = trace.end_time();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace timeline — {} ranks, {} events, span {}{}\n",
+        trace.nranks(),
+        trace.n_events(),
+        fmt_duration(t_end),
+        if trace.dropped_events() > 0 {
+            format!(" ({} events DROPPED; raise trace.max-events-per-rank)", trace.dropped_events())
+        } else {
+            String::new()
+        }
+    ));
+    if t_end <= 0.0 || trace.nranks() == 0 {
+        out.push_str("(empty trace)\n");
+        return out;
+    }
+    let col_dt = t_end / width as f64;
+    for tr in &trace.ranks {
+        // Collect (start, end, state) spans for this rank.
+        let mut spans: Vec<(f64, f64, LaneState)> = Vec::new();
+        for ev in &tr.events {
+            match ev {
+                TraceEvent::Wait {
+                    t_start,
+                    t_end,
+                    wait,
+                    ..
+                } => {
+                    let split = t_start + wait;
+                    if *wait > 0.0 {
+                        spans.push((*t_start, split, LaneState::Wait));
+                    }
+                    if *t_end > split {
+                        spans.push((split, *t_end, LaneState::Transfer));
+                    }
+                }
+                TraceEvent::Coll {
+                    t_start,
+                    sync,
+                    t_end,
+                    ..
+                } => {
+                    if *sync > *t_start {
+                        spans.push((*t_start, *sync, LaneState::CollWait));
+                    }
+                    if *t_end > *sync {
+                        spans.push((*sync, *t_end, LaneState::CollOp));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut lane = String::with_capacity(width);
+        for c in 0..width {
+            let mid = (c as f64 + 0.5) * col_dt;
+            let state = spans
+                .iter()
+                .filter(|(a, b, _)| *a <= mid && mid < *b)
+                .map(|(_, _, s)| *s)
+                .max()
+                .unwrap_or(LaneState::Compute);
+            lane.push(state.glyph());
+        }
+        out.push_str(&format!("rank {:>4} |{}|\n", tr.rank, lane));
+    }
+    out.push_str(&format!(
+        "legend: '.' compute  'W' blocked wait  '=' transfer  \
+         'C' wait-at-collective  'c' collective op;  column = {}\n",
+        fmt_duration(col_dt)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::RankTrace;
+
+    #[test]
+    fn lanes_show_wait_and_transfer() {
+        let tr = RankTrace {
+            rank: 0,
+            capacity: 64,
+            dropped: 0,
+            paths: vec!["main".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::Wait {
+                    n_reqs: 1,
+                    t_start: 2.0,
+                    t_end: 8.0,
+                    wait: 4.0,
+                    transfer: 2.0,
+                },
+                TraceEvent::RegionExit { path: 0, t: 10.0 },
+            ],
+        };
+        let txt = render(&RunTrace::new(vec![tr]), 20);
+        assert!(txt.contains("rank    0 |"), "{}", txt);
+        assert!(txt.contains('W'), "{}", txt);
+        assert!(txt.contains('='), "{}", txt);
+        assert!(txt.contains("10.000s"), "span label: {}", txt);
+        // columns: [0,10) over 20 cols → 0.5s columns; wait spans [2,6)
+        let lane: String = txt
+            .lines()
+            .find(|l| l.starts_with("rank"))
+            .unwrap()
+            .chars()
+            .skip_while(|c| *c != '|')
+            .skip(1)
+            .take(20)
+            .collect();
+        assert_eq!(&lane[0..4], "....");
+        assert_eq!(&lane[4..12], "WWWWWWWW");
+        assert_eq!(&lane[12..16], "====");
+    }
+
+    #[test]
+    fn dropped_events_called_out() {
+        let tr = RankTrace {
+            rank: 0,
+            capacity: 2,
+            dropped: 9,
+            paths: vec![],
+            events: vec![TraceEvent::RegionEnter { path: 0, t: 1.0 }],
+        };
+        let txt = render(&RunTrace::new(vec![tr]), 16);
+        assert!(txt.contains("9 events DROPPED"), "{}", txt);
+    }
+
+    #[test]
+    fn empty_trace_renders_placeholder() {
+        let txt = render(&RunTrace::default(), 40);
+        assert!(txt.contains("(empty trace)"));
+    }
+}

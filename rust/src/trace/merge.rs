@@ -1,0 +1,212 @@
+//! Deterministic post-run merge of per-rank event streams into a global
+//! timeline, plus the per-rank region-interval index the analyses share.
+
+use super::event::{RankTrace, TraceEvent};
+use crate::caliper::TOPLEVEL;
+
+/// A whole run's trace: every rank's stream, rank-ordered. The unit the
+/// JSONL artifact serializes and the analyses consume.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunTrace {
+    pub ranks: Vec<RankTrace>,
+}
+
+impl RunTrace {
+    /// Assemble from per-rank streams (sorted by rank for determinism).
+    pub fn new(mut ranks: Vec<RankTrace>) -> RunTrace {
+        ranks.sort_by_key(|r| r.rank);
+        RunTrace { ranks }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Total events across ranks.
+    pub fn n_events(&self) -> usize {
+        self.ranks.iter().map(|r| r.events.len()).sum()
+    }
+
+    /// Total evicted events across ranks (0 = complete trace).
+    pub fn dropped_events(&self) -> u64 {
+        self.ranks.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Latest timestamp across every rank (the run's virtual end).
+    pub fn end_time(&self) -> f64 {
+        self.ranks.iter().map(RankTrace::end_time).fold(0.0, f64::max)
+    }
+
+    /// The globally merged timeline: `(rank, index-in-rank, event)` sorted
+    /// by `(time, rank, index)`. Virtual timestamps are deterministic, so
+    /// this order is bit-stable across runs and thread schedules.
+    pub fn merged(&self) -> Vec<(usize, usize, &TraceEvent)> {
+        let mut out: Vec<(usize, usize, &TraceEvent)> = Vec::with_capacity(self.n_events());
+        for tr in &self.ranks {
+            for (i, ev) in tr.events.iter().enumerate() {
+                out.push((tr.rank, i, ev));
+            }
+        }
+        out.sort_by(|a, b| {
+            a.2.t()
+                .total_cmp(&b.2.t())
+                .then(a.0.cmp(&b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        out
+    }
+
+    /// Region-interval index for one rank (by world rank id).
+    pub fn region_index(&self, rank: usize) -> RegionIndex {
+        self.ranks
+            .iter()
+            .find(|r| r.rank == rank)
+            .map(RegionIndex::build)
+            .unwrap_or_default()
+    }
+}
+
+/// Innermost-region lookup over one rank's timeline: a sorted list of
+/// `(time, innermost path)` state changes reconstructed from the stream's
+/// `RegionEnter`/`RegionExit` events. Times outside every region map to
+/// [`TOPLEVEL`].
+#[derive(Debug, Clone, Default)]
+pub struct RegionIndex {
+    /// (change time, innermost region path from that time on).
+    changes: Vec<(f64, String)>,
+}
+
+impl RegionIndex {
+    pub fn build(trace: &RankTrace) -> RegionIndex {
+        let mut stack: Vec<u32> = Vec::new();
+        let mut changes: Vec<(f64, String)> = vec![(f64::NEG_INFINITY, TOPLEVEL.to_string())];
+        for ev in &trace.events {
+            match ev {
+                TraceEvent::RegionEnter { path, t } => {
+                    stack.push(*path);
+                    changes.push((*t, trace.path(*path).to_string()));
+                }
+                TraceEvent::RegionExit { t, .. } => {
+                    stack.pop();
+                    let innermost = stack
+                        .last()
+                        .map(|p| trace.path(*p).to_string())
+                        .unwrap_or_else(|| TOPLEVEL.to_string());
+                    changes.push((*t, innermost));
+                }
+                _ => {}
+            }
+        }
+        RegionIndex { changes }
+    }
+
+    /// Innermost region active at time `t`.
+    pub fn innermost_at(&self, t: f64) -> &str {
+        match self.changes.partition_point(|(ct, _)| *ct <= t) {
+            0 => TOPLEVEL,
+            i => self.changes[i - 1].1.as_str(),
+        }
+    }
+
+    /// Split `[a, b]` at region changes: `(t0, t1, innermost path)` pieces
+    /// covering the interval exactly (empty when `b <= a`).
+    pub fn split(&self, a: f64, b: f64) -> Vec<(f64, f64, &str)> {
+        let mut out = Vec::new();
+        if b <= a {
+            return out;
+        }
+        let mut cur = a;
+        let mut i = self.changes.partition_point(|(ct, _)| *ct <= a);
+        while cur < b {
+            let seg_end = if i < self.changes.len() {
+                self.changes[i].0.min(b)
+            } else {
+                b
+            };
+            let path = if i == 0 {
+                TOPLEVEL
+            } else {
+                self.changes[i - 1].1.as_str()
+            };
+            if seg_end > cur {
+                out.push((cur, seg_end, path));
+            }
+            cur = seg_end;
+            i += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rank_trace(rank: usize, offset: f64) -> RankTrace {
+        RankTrace {
+            rank,
+            capacity: 64,
+            dropped: 0,
+            paths: vec!["main".into(), "main/halo".into()],
+            events: vec![
+                TraceEvent::RegionEnter { path: 0, t: offset },
+                TraceEvent::RegionEnter {
+                    path: 1,
+                    t: offset + 1.0,
+                },
+                TraceEvent::RegionExit {
+                    path: 1,
+                    t: offset + 2.0,
+                },
+                TraceEvent::RegionExit {
+                    path: 0,
+                    t: offset + 3.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn merged_order_is_time_then_rank() {
+        let rt = RunTrace::new(vec![rank_trace(1, 0.0), rank_trace(0, 0.0)]);
+        assert_eq!(rt.nranks(), 2);
+        assert_eq!(rt.ranks[0].rank, 0, "rank-sorted");
+        let m = rt.merged();
+        assert_eq!(m.len(), 8);
+        // same timestamp: rank 0 before rank 1
+        assert_eq!((m[0].0, m[1].0), (0, 1));
+        assert_eq!(rt.end_time(), 3.0);
+    }
+
+    #[test]
+    fn region_index_innermost_and_split() {
+        let rt = RunTrace::new(vec![rank_trace(0, 0.0)]);
+        let idx = rt.region_index(0);
+        assert_eq!(idx.innermost_at(-1.0), TOPLEVEL);
+        assert_eq!(idx.innermost_at(0.5), "main");
+        assert_eq!(idx.innermost_at(1.5), "main/halo");
+        assert_eq!(idx.innermost_at(2.5), "main");
+        assert_eq!(idx.innermost_at(9.0), TOPLEVEL);
+        let pieces = idx.split(0.5, 2.5);
+        assert_eq!(
+            pieces,
+            vec![
+                (0.5, 1.0, "main"),
+                (1.0, 2.0, "main/halo"),
+                (2.0, 2.5, "main"),
+            ]
+        );
+        // degenerate interval
+        assert!(idx.split(1.0, 1.0).is_empty());
+        // full cover sums to the interval length
+        let total: f64 = idx.split(-0.5, 4.0).iter().map(|(a, b, _)| b - a).sum();
+        assert!((total - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_rank_yields_toplevel_index() {
+        let rt = RunTrace::new(vec![rank_trace(0, 0.0)]);
+        let idx = rt.region_index(7);
+        assert_eq!(idx.innermost_at(1.0), TOPLEVEL);
+    }
+}

@@ -1,0 +1,114 @@
+//! `trace` — the event-level trace subsystem: per-rank timelines,
+//! wait-state classification, and critical-path analysis.
+//!
+//! The aggregate profiler (`caliper`) answers *how much* communication a
+//! region did; this layer answers *when* it happened and *which dependency
+//! chain bounds wall time* — the difference between a number and an
+//! explanation (ucTrace's multi-layer event traces and Kousha et al.'s
+//! cross-layer timelines are the references).
+//!
+//! Layers:
+//!
+//! 1. **Capture** — [`TraceRecorder`]: a per-rank bounded ring buffer fed
+//!    from the PMPI hook chain (`mpisim::hooks`) and the Caliper region
+//!    guards, recording typed events ([`TraceEvent`]) with virtual
+//!    timestamps, peers, tags, bytes, and protocol. Selected like any
+//!    other metric family via the `trace` channel spec
+//!    (`--channels ...,trace`, capacity option
+//!    `trace.max-events-per-rank=N`); when off, the hot path pays one
+//!    predictable branch.
+//! 2. **Merge + analysis** — [`RunTrace`] deterministically merges the
+//!    per-rank streams into a global timeline; [`waitstate::classify`]
+//!    derives Scalasca-style wait states (late sender, late receiver,
+//!    wait-at-collective) from matched send/recv pairs; and
+//!    [`critpath::critical_path`] walks the happens-before graph
+//!    (intra-rank program order + cross-rank message/collective edges)
+//!    backwards from the run's end, attributing every second of the
+//!    critical path to a Caliper region — the attribution partitions the
+//!    wall time exactly.
+//! 3. **Surfacing** — [`artifact`] serializes a versioned JSONL trace next
+//!    to the v2 profile, [`gantt`] renders the ASCII timeline, and
+//!    [`annotate_profile`] folds the per-region critical-path seconds and
+//!    wait-state counts into the [`RunProfile`] so figures, thicket stats,
+//!    and reports see them like any other channel payload.
+
+pub mod artifact;
+pub mod critpath;
+pub mod event;
+pub mod gantt;
+pub mod merge;
+pub mod recorder;
+pub mod waitstate;
+
+pub use artifact::{read_jsonl, write_jsonl, TRACE_SCHEMA_VERSION, TRACE_SUFFIX};
+pub use critpath::{critical_path, CritPath, CritSegment};
+pub use event::{RankTrace, TraceEvent};
+pub use merge::{RegionIndex, RunTrace};
+pub use recorder::{TraceRecorder, DEFAULT_CAPACITY};
+pub use waitstate::{classify, WaitKind, WaitState};
+
+use crate::caliper::profile::{RegionTraceStats, RunProfile};
+
+/// Fold a run's trace analyses into its aggregated profile: per-region
+/// critical-path seconds and wait-state counts land in each region's
+/// `trace` channel payload, and run-level totals are stamped into the
+/// metadata (`trace_events`, `trace_dropped`, `trace_late_senders`,
+/// `trace_critpath`, ...). Returns the extracted critical path.
+pub fn annotate_profile(run: &mut RunProfile, trace: &RunTrace) -> Option<CritPath> {
+    let states = waitstate::classify(trace);
+    let (late_snd, late_rcv, coll_wait) = waitstate::per_region_totals(&states);
+    let cp = critpath::critical_path(trace);
+    let mut attributed = 0.0;
+    for (path, reg) in run.regions.iter_mut() {
+        let mut ts = RegionTraceStats::default();
+        let mut any = false;
+        if let Some(cp) = &cp {
+            if let Some(secs) = cp.per_region.get(path) {
+                ts.critpath = *secs;
+                attributed += *secs;
+                any = true;
+            }
+        }
+        if let Some(v) = late_snd.get(path) {
+            ts.late_sender = *v;
+            any = true;
+        }
+        if let Some(v) = late_rcv.get(path) {
+            ts.late_receiver = *v;
+            any = true;
+        }
+        if let Some(v) = coll_wait.get(path) {
+            ts.wait_at_coll = *v;
+            any = true;
+        }
+        if any {
+            reg.trace = Some(ts);
+        }
+    }
+    let count = |k: WaitKind| states.iter().filter(|s| s.kind == k).count();
+    run.meta
+        .insert("trace_events".into(), trace.n_events().to_string());
+    run.meta
+        .insert("trace_dropped".into(), trace.dropped_events().to_string());
+    run.meta.insert(
+        "trace_late_senders".into(),
+        count(WaitKind::LateSender).to_string(),
+    );
+    run.meta.insert(
+        "trace_late_receivers".into(),
+        count(WaitKind::LateReceiver).to_string(),
+    );
+    run.meta.insert(
+        "trace_coll_waits".into(),
+        count(WaitKind::WaitAtCollective).to_string(),
+    );
+    if let Some(cp) = &cp {
+        run.meta
+            .insert("trace_critpath".into(), cp.total.to_string());
+        run.meta.insert(
+            "trace_critpath_unattributed".into(),
+            (cp.total - attributed).max(0.0).to_string(),
+        );
+    }
+    cp
+}

@@ -1,0 +1,247 @@
+//! The per-rank trace recorder: a bounded ring-buffer event sink fed from
+//! the PMPI hook chain and the Caliper region guards.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::event::{RankTrace, TraceEvent};
+use crate::mpisim::MpiEvent;
+
+/// Default ring capacity (events per rank) when the channel spec does not
+/// carry a `trace.max-events-per-rank=N` option.
+pub const DEFAULT_CAPACITY: usize = 1 << 20;
+
+/// Bounded per-rank event sink. When the ring is full the **oldest** event
+/// is evicted (flight-recorder semantics) and [`TraceRecorder::dropped`]
+/// counts it, so memory is bounded by `capacity` and truncation is always
+/// explicit — never silent growth, never silent loss.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    capacity: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    paths: Vec<String>,
+    path_ids: HashMap<String, u32>,
+}
+
+impl TraceRecorder {
+    pub fn new(capacity: usize) -> TraceRecorder {
+        TraceRecorder {
+            capacity: capacity.max(1),
+            events: VecDeque::new(),
+            dropped: 0,
+            paths: Vec::new(),
+            path_ids: HashMap::new(),
+        }
+    }
+
+    /// Events evicted so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn intern(&mut self, path: &str) -> u32 {
+        if let Some(id) = self.path_ids.get(path) {
+            return *id;
+        }
+        let id = self.paths.len() as u32;
+        self.paths.push(path.to_string());
+        self.path_ids.insert(path.to_string(), id);
+        id
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// Record a region boundary (full nesting path, absolute time).
+    pub fn region_event(&mut self, path: &str, enter: bool, t: f64) {
+        let path = self.intern(path);
+        self.push(if enter {
+            TraceEvent::RegionEnter { path, t }
+        } else {
+            TraceEvent::RegionExit { path, t }
+        });
+    }
+
+    /// Record one MPI event from the hook chain. Zero-duration per-message
+    /// `Recv` stamps and plain `Coll` events are skipped — the richer
+    /// `RecvMatch` / `CollEpoch` trace variants carry their information.
+    pub fn record(&mut self, ev: &MpiEvent) {
+        let mapped = match ev {
+            MpiEvent::Send {
+                dst,
+                tag,
+                bytes,
+                t_start,
+                t_end,
+            } => TraceEvent::SendPost {
+                dst: *dst,
+                tag: *tag,
+                bytes: *bytes,
+                t_start: *t_start,
+                t_end: *t_end,
+            },
+            MpiEvent::RecvPost { src, tag, t } => TraceEvent::RecvPost {
+                src: *src,
+                tag: *tag,
+                t: *t,
+            },
+            MpiEvent::RecvMatch {
+                src,
+                tag,
+                bytes,
+                protocol,
+                post_time,
+                sender_ready,
+                handshake,
+                wire,
+                arrival,
+                wait_start,
+            } => TraceEvent::RecvMatch {
+                src: *src,
+                tag: *tag,
+                bytes: *bytes,
+                protocol: *protocol,
+                post_time: *post_time,
+                sender_ready: *sender_ready,
+                handshake: *handshake,
+                wire: *wire,
+                arrival: *arrival,
+                wait_start: *wait_start,
+            },
+            MpiEvent::SendMatch {
+                dst,
+                tag,
+                bytes,
+                sender_ready,
+                handshake,
+                wire,
+                arrival,
+                wait_start,
+            } => TraceEvent::SendMatch {
+                dst: *dst,
+                tag: *tag,
+                bytes: *bytes,
+                sender_ready: *sender_ready,
+                handshake: *handshake,
+                wire: *wire,
+                arrival: *arrival,
+                wait_start: *wait_start,
+            },
+            MpiEvent::Wait {
+                n_reqs,
+                t_start,
+                t_end,
+                wait,
+                transfer,
+            } => TraceEvent::Wait {
+                n_reqs: *n_reqs,
+                t_start: *t_start,
+                t_end: *t_end,
+                wait: *wait,
+                transfer: *transfer,
+            },
+            MpiEvent::CollEpoch {
+                kind,
+                ctx,
+                seq,
+                comm_size,
+                bytes,
+                t_start,
+                sync,
+                t_end,
+            } => TraceEvent::Coll {
+                kind: *kind,
+                ctx: *ctx,
+                seq: *seq,
+                comm_size: *comm_size,
+                bytes: *bytes,
+                t_start: *t_start,
+                sync: *sync,
+                t_end: *t_end,
+            },
+            MpiEvent::Recv { .. } | MpiEvent::Coll { .. } => return,
+        };
+        self.push(mapped);
+    }
+
+    /// Seal the stream into a [`RankTrace`] (rank is stamped by the
+    /// caller, which knows it).
+    pub fn finish(self) -> RankTrace {
+        RankTrace {
+            rank: 0,
+            capacity: self.capacity,
+            dropped: self.dropped,
+            paths: self.paths,
+            events: self.events.into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn send(t: f64) -> MpiEvent {
+        MpiEvent::Send {
+            dst: 1,
+            tag: 0,
+            bytes: 8,
+            t_start: t,
+            t_end: t,
+        }
+    }
+
+    #[test]
+    fn records_and_interns() {
+        let mut r = TraceRecorder::new(64);
+        r.region_event("main", true, 0.0);
+        r.region_event("main/halo", true, 1.0);
+        r.record(&send(1.5));
+        r.region_event("main/halo", false, 2.0);
+        r.region_event("main", false, 3.0);
+        let tr = r.finish();
+        assert_eq!(tr.events.len(), 5);
+        assert_eq!(tr.paths, vec!["main".to_string(), "main/halo".to_string()]);
+        assert_eq!(tr.dropped, 0);
+        assert!(matches!(tr.events[2], TraceEvent::SendPost { .. }));
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = TraceRecorder::new(3);
+        for i in 0..5 {
+            r.record(&send(i as f64));
+        }
+        assert_eq!(r.dropped(), 2);
+        let tr = r.finish();
+        assert_eq!(tr.events.len(), 3);
+        assert_eq!(tr.dropped, 2);
+        // oldest evicted: first surviving event is t=2
+        assert!(matches!(tr.events[0], TraceEvent::SendPost { t_start, .. } if t_start == 2.0));
+    }
+
+    #[test]
+    fn zero_duration_stamps_skipped() {
+        let mut r = TraceRecorder::new(8);
+        r.record(&MpiEvent::Recv {
+            src: 0,
+            tag: 0,
+            bytes: 8,
+            t_start: 1.0,
+            t_end: 1.0,
+        });
+        r.record(&MpiEvent::Coll {
+            kind: crate::mpisim::CollKind::Barrier,
+            bytes: 0,
+            comm_size: 2,
+            t_start: 0.0,
+            t_end: 1.0,
+        });
+        assert_eq!(r.finish().events.len(), 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Scalasca-style wait-state classification over matched event pairs.
+//!
+//! Three pathologies, computed from the protocol timing the `RecvMatch` /
+//! `SendMatch` / `Coll` trace events carry:
+//!
+//! - **Late sender** — a receive was posted (and its wait entered) before
+//!   the partner finished injecting: the receiver idles for
+//!   `sender_ready - max(post_time, wait_start)` seconds.
+//! - **Late receiver** — a rendezvous send's wire transfer was gated by
+//!   the partner's late post: the *sender* idles for
+//!   `gate - max(sender_ready, wait_start)` seconds, where
+//!   `gate = arrival - wire - handshake` is when the RTS met the posted
+//!   receive.
+//! - **Wait at collective** — a rank entered a collective `sync - t_start`
+//!   seconds before its last member arrived.
+//!
+//! Each instance is attributed to the waiting rank and the innermost
+//! region active there, so the counts fold into the run profile alongside
+//! the other channel payloads.
+
+use std::collections::BTreeMap;
+
+use super::event::TraceEvent;
+use super::merge::RunTrace;
+use crate::mpisim::Protocol;
+
+/// Minimum idle seconds for an instance to be classified (absorbs float
+/// noise around simultaneous stamps).
+const EPS: f64 = 1e-12;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitKind {
+    LateSender,
+    LateReceiver,
+    WaitAtCollective,
+}
+
+impl WaitKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WaitKind::LateSender => "late-sender",
+            WaitKind::LateReceiver => "late-receiver",
+            WaitKind::WaitAtCollective => "wait-at-collective",
+        }
+    }
+}
+
+/// One classified wait instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WaitState {
+    pub kind: WaitKind,
+    /// The rank that idled.
+    pub rank: usize,
+    /// The partner whose lateness caused it (None for collectives).
+    pub peer: Option<usize>,
+    /// Innermost region active on the waiting rank.
+    pub region: String,
+    /// When the idling began (virtual seconds).
+    pub t: f64,
+    /// Idle seconds.
+    pub duration: f64,
+}
+
+/// Classify every wait state in the trace, in deterministic (rank, event)
+/// order.
+pub fn classify(trace: &RunTrace) -> Vec<WaitState> {
+    let mut out = Vec::new();
+    for tr in &trace.ranks {
+        let idx = trace.region_index(tr.rank);
+        for ev in &tr.events {
+            match ev {
+                TraceEvent::RecvMatch {
+                    src,
+                    protocol,
+                    post_time,
+                    sender_ready,
+                    arrival,
+                    wait_start,
+                    ..
+                } => {
+                    // The receiver only idles once both the post exists and
+                    // its wait call entered; the sender must still be the
+                    // binding side for it to be a LATE-SENDER wait.
+                    if *arrival <= wait_start + EPS {
+                        continue; // the message was ready before the wait
+                    }
+                    let recv_ready = post_time.max(*wait_start);
+                    let dur = sender_ready - recv_ready;
+                    let sender_gated = match protocol {
+                        Protocol::Eager => true,
+                        Protocol::Rendezvous => *sender_ready > *post_time,
+                    };
+                    // Attribute at the idle-START time: the completion can
+                    // share its timestamp with the enclosing region's exit
+                    // (guard drops the moment the wait returns), which
+                    // would mis-resolve to the parent region.
+                    if sender_gated && dur > EPS {
+                        out.push(WaitState {
+                            kind: WaitKind::LateSender,
+                            rank: tr.rank,
+                            peer: Some(*src),
+                            region: idx.innermost_at(recv_ready).to_string(),
+                            t: recv_ready,
+                            duration: dur,
+                        });
+                    }
+                }
+                TraceEvent::SendMatch {
+                    dst,
+                    sender_ready,
+                    handshake,
+                    wire,
+                    arrival,
+                    wait_start,
+                    ..
+                } => {
+                    if *arrival <= wait_start + EPS {
+                        continue;
+                    }
+                    let gate = arrival - wire - handshake;
+                    let idle_from = sender_ready.max(*wait_start);
+                    let dur = gate - idle_from;
+                    if dur > EPS {
+                        out.push(WaitState {
+                            kind: WaitKind::LateReceiver,
+                            rank: tr.rank,
+                            peer: Some(*dst),
+                            region: idx.innermost_at(idle_from).to_string(),
+                            t: idle_from,
+                            duration: dur,
+                        });
+                    }
+                }
+                TraceEvent::Coll { t_start, sync, .. } => {
+                    let dur = sync - t_start;
+                    if dur > EPS {
+                        out.push(WaitState {
+                            kind: WaitKind::WaitAtCollective,
+                            rank: tr.rank,
+                            peer: None,
+                            region: idx.innermost_at(*t_start).to_string(),
+                            t: *t_start,
+                            duration: dur,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Per-region `(instances, idle seconds)` totals for one wait-state kind.
+pub type RegionWaitTotals = BTreeMap<String, (u64, f64)>;
+
+/// Fold classified instances into per-region totals, one map per kind.
+pub fn per_region_totals(
+    states: &[WaitState],
+) -> (RegionWaitTotals, RegionWaitTotals, RegionWaitTotals) {
+    let mut late_snd = RegionWaitTotals::new();
+    let mut late_rcv = RegionWaitTotals::new();
+    let mut coll = RegionWaitTotals::new();
+    for ws in states {
+        let map = match ws.kind {
+            WaitKind::LateSender => &mut late_snd,
+            WaitKind::LateReceiver => &mut late_rcv,
+            WaitKind::WaitAtCollective => &mut coll,
+        };
+        let cell = map.entry(ws.region.clone()).or_insert((0, 0.0));
+        cell.0 += 1;
+        cell.1 += ws.duration;
+    }
+    (late_snd, late_rcv, coll)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::CollKind;
+    use crate::trace::event::RankTrace;
+
+    fn trace_with(rank: usize, events: Vec<TraceEvent>) -> RankTrace {
+        RankTrace {
+            rank,
+            capacity: 1024,
+            dropped: 0,
+            paths: vec!["main".into(), "main/halo".into()],
+            events,
+        }
+    }
+
+    #[test]
+    fn late_sender_classified_with_duration() {
+        // receiver (rank 1): posts at 0, waits from 0; sender ready at 1.0
+        let recv = trace_with(
+            1,
+            vec![
+                TraceEvent::RegionEnter { path: 0, t: 0.0 },
+                TraceEvent::RegionEnter { path: 1, t: 0.0 },
+                TraceEvent::RecvMatch {
+                    src: 0,
+                    tag: 0,
+                    bytes: 64,
+                    protocol: Protocol::Eager,
+                    post_time: 0.0,
+                    sender_ready: 1.0,
+                    handshake: 0.0,
+                    wire: 0.25,
+                    arrival: 1.25,
+                    wait_start: 0.0,
+                },
+                TraceEvent::RegionExit { path: 1, t: 1.5 },
+                TraceEvent::RegionExit { path: 0, t: 1.5 },
+            ],
+        );
+        let rt = RunTrace::new(vec![recv]);
+        let states = classify(&rt);
+        assert_eq!(states.len(), 1);
+        let ws = &states[0];
+        assert_eq!(ws.kind, WaitKind::LateSender);
+        assert_eq!(ws.rank, 1);
+        assert_eq!(ws.peer, Some(0));
+        assert_eq!(ws.region, "main/halo");
+        assert!((ws.duration - 1.0).abs() < 1e-12, "dur {}", ws.duration);
+    }
+
+    #[test]
+    fn early_message_is_not_a_wait_state() {
+        // arrival before the wait entered: no idling, nothing classified
+        let recv = trace_with(
+            1,
+            vec![TraceEvent::RecvMatch {
+                src: 0,
+                tag: 0,
+                bytes: 64,
+                protocol: Protocol::Eager,
+                post_time: 0.0,
+                sender_ready: 0.1,
+                handshake: 0.0,
+                wire: 0.1,
+                arrival: 0.2,
+                wait_start: 5.0,
+            }],
+        );
+        assert!(classify(&RunTrace::new(vec![recv])).is_empty());
+    }
+
+    #[test]
+    fn late_receiver_from_send_side() {
+        // sender ready at 0.5, receiver posted at 2.0 (gate), wire 0.25
+        let snd = trace_with(
+            0,
+            vec![TraceEvent::SendMatch {
+                dst: 1,
+                tag: 0,
+                bytes: 1 << 20,
+                sender_ready: 0.5,
+                handshake: 0.1,
+                wire: 0.25,
+                arrival: 2.35,
+                wait_start: 0.5,
+            }],
+        );
+        let states = classify(&RunTrace::new(vec![snd]));
+        assert_eq!(states.len(), 1);
+        assert_eq!(states[0].kind, WaitKind::LateReceiver);
+        assert_eq!(states[0].rank, 0);
+        assert!((states[0].duration - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_at_collective_and_totals() {
+        let early = trace_with(
+            0,
+            vec![TraceEvent::Coll {
+                kind: CollKind::Barrier,
+                ctx: 0,
+                seq: 0,
+                comm_size: 2,
+                bytes: 0,
+                t_start: 1.0,
+                sync: 3.0,
+                t_end: 3.1,
+            }],
+        );
+        let late = trace_with(
+            1,
+            vec![TraceEvent::Coll {
+                kind: CollKind::Barrier,
+                ctx: 0,
+                seq: 0,
+                comm_size: 2,
+                bytes: 0,
+                t_start: 3.0,
+                sync: 3.0,
+                t_end: 3.1,
+            }],
+        );
+        let states = classify(&RunTrace::new(vec![early, late]));
+        assert_eq!(states.len(), 1, "only the early rank waited");
+        assert_eq!(states[0].kind, WaitKind::WaitAtCollective);
+        assert!((states[0].duration - 2.0).abs() < 1e-12);
+        let (ls, lr, coll) = per_region_totals(&states);
+        assert!(ls.is_empty() && lr.is_empty());
+        assert_eq!(coll[crate::caliper::TOPLEVEL], (1, states[0].duration));
+    }
+}

@@ -1,0 +1,105 @@
+//! One human-readable duration formatter for every surface that prints a
+//! time span (timeline/Gantt labels, trace summaries, campaign progress).
+//!
+//! PR 3 fixed a `RecvTimeout` that rendered a 300 ms guard as a baffling
+//! "timed out after 0s" — the same rounding bug existed at every ad-hoc
+//! format site that wrote `{:.0}s`-style output. Routing them through
+//! [`fmt_duration`] makes sub-second (and sub-millisecond) spans legible
+//! everywhere at once.
+
+/// Format a duration in seconds with a unit that keeps 3–4 significant
+/// figures: `1h02m`, `2m05s`, `3.142s`, `245.1ms`, `12.40us`, `980ns`.
+/// Zero renders as `0s`; negatives are prefixed with `-`; non-finite
+/// inputs render as `?s`.
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "?s".to_string();
+    }
+    if secs < 0.0 {
+        return format!("-{}", fmt_duration(-secs));
+    }
+    if secs == 0.0 {
+        return "0s".to_string();
+    }
+    // Each branch rounds at its own precision; a value that rounds past
+    // its unit's cap is promoted to the next unit (3599.7 is "1h00m",
+    // not "60m00s"; 0.99996 is "1.000s", not "1000.0ms").
+    if secs >= 3600.0 {
+        let total_min = (secs / 60.0).round() as u64;
+        return format!("{}h{:02}m", total_min / 60, total_min % 60);
+    }
+    if secs >= 60.0 {
+        let total_s = secs.round() as u64;
+        if total_s >= 3600 {
+            return fmt_duration(total_s as f64);
+        }
+        return format!("{}m{:02}s", total_s / 60, total_s % 60);
+    }
+    if secs >= 1.0 {
+        let out = format!("{:.3}s", secs);
+        if out.starts_with("60.000") {
+            return fmt_duration(60.0);
+        }
+        return out;
+    }
+    if secs >= 1e-3 {
+        let out = format!("{:.1}ms", secs * 1e3);
+        if out.starts_with("1000.0") {
+            return fmt_duration(1.0);
+        }
+        return out;
+    }
+    if secs >= 1e-6 {
+        let out = format!("{:.2}us", secs * 1e6);
+        if out.starts_with("1000.00") {
+            return fmt_duration(1e-3);
+        }
+        return out;
+    }
+    let out = format!("{:.0}ns", secs * 1e9);
+    if out.starts_with("1000ns") {
+        return fmt_duration(1e-6);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fmt_duration;
+
+    #[test]
+    fn subsecond_durations_never_render_as_zero_seconds() {
+        // the PR 3 bug class: 300 ms must not print "0s"
+        assert_eq!(fmt_duration(0.3), "300.0ms");
+        assert_eq!(fmt_duration(0.000245), "245.00us");
+        assert_eq!(fmt_duration(4.2e-8), "42ns");
+        for s in [0.3, 1e-3, 2.5e-5, 9e-9] {
+            assert_ne!(fmt_duration(s), "0s", "{} collapsed to 0s", s);
+        }
+    }
+
+    #[test]
+    fn units_scale() {
+        assert_eq!(fmt_duration(0.0), "0s");
+        assert_eq!(fmt_duration(3.14159), "3.142s");
+        assert_eq!(fmt_duration(125.0), "2m05s");
+        assert_eq!(fmt_duration(3720.0), "1h02m");
+        assert_eq!(fmt_duration(-0.5), "-500.0ms");
+        assert_eq!(fmt_duration(f64::NAN), "?s");
+        assert_eq!(fmt_duration(f64::INFINITY), "?s");
+    }
+
+    #[test]
+    fn rounding_carries_promote_the_unit() {
+        // values that round past their unit's cap must not render as
+        // "60m00s" / "60.000s" / "1000.0ms" / "1000.00us" / "1000ns"
+        assert_eq!(fmt_duration(3599.7), "1h00m");
+        assert_eq!(fmt_duration(59.9996), "1m00s");
+        assert_eq!(fmt_duration(0.99996), "1.000s");
+        assert_eq!(fmt_duration(0.000999996), "1.0ms");
+        assert_eq!(fmt_duration(9.99996e-7), "1.00us");
+        // just below the carry threshold stays in its unit
+        assert_eq!(fmt_duration(59.4), "59.400s");
+        assert_eq!(fmt_duration(3500.0), "58m20s");
+    }
+}

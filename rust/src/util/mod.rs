@@ -6,6 +6,8 @@
 //!
 //! - [`json`]: a minimal JSON value model, writer, and recursive-descent parser
 //!   (profile serialization, artifact manifests).
+//! - [`duration`]: the shared human-readable duration formatter (no more
+//!   sub-second spans collapsing to "0s").
 //! - [`rng`]: deterministic SplitMix64 / xoshiro256** PRNGs (workload
 //!   generation, property-test inputs).
 //! - [`stats`]: streaming min/max/mean/variance accumulators and percentile
@@ -21,6 +23,7 @@
 pub mod benchutil;
 pub mod cache;
 pub mod cli;
+pub mod duration;
 pub mod json;
 pub mod plotascii;
 pub mod pool;

@@ -1,0 +1,360 @@
+//! The trace subsystem's acceptance contract:
+//!
+//! - **Critical-path invariant**: for every traced cell, the extracted
+//!   path length equals `RunProfile::wall_time` to float tolerance, and
+//!   the per-region attribution sums to the total.
+//! - **Wait-state classification**: a constructed late-sender exchange is
+//!   classified as such with the correct wait duration; a rendezvous
+//!   late-receiver exchange likewise.
+//! - **Bounded memory**: a tiny `trace.max-events-per-rank` drops events
+//!   with an explicit counter that reaches the artifact header and the
+//!   profile metadata — never silent growth, never silent loss.
+//! - **Artifact**: the JSONL trace round-trips losslessly and
+//!   byte-stably.
+
+use std::time::Duration;
+
+use commscope::benchpark::experiment::Scaling;
+use commscope::benchpark::runner::{run_cell_full, RunOptions};
+use commscope::benchpark::{AppKind, ExperimentSpec, SystemId};
+use commscope::caliper::{Caliper, ChannelConfig};
+use commscope::mpisim::{MachineModel, World, WorldConfig};
+use commscope::trace::{classify, critical_path, read_jsonl, write_jsonl, RunTrace, WaitKind};
+
+fn traced_opts() -> RunOptions {
+    RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+        channels: ChannelConfig::parse("comm-stats,mpi-time,trace").unwrap(),
+    }
+}
+
+/// Run a 2-rank world with tracing and hand back the merged run trace.
+fn run_traced_world<F>(n: usize, f: F) -> RunTrace
+where
+    F: Fn(&mut commscope::mpisim::Rank, &Caliper) + Sync,
+{
+    let cfg = WorldConfig::new(n, MachineModel::test_machine())
+        .with_timeout(Duration::from_secs(20));
+    let profiles = World::run(cfg, |rank| {
+        let cali = Caliper::attach_with(rank, "comm-stats,trace").unwrap();
+        f(rank, &cali);
+        cali.finish(rank)
+    });
+    RunTrace::new(
+        profiles
+            .into_iter()
+            .filter_map(|mut p| p.trace.take())
+            .collect(),
+    )
+}
+
+#[test]
+fn critical_path_matches_wall_time_for_traced_cells() {
+    for (app, system, nranks, scaling) in [
+        (AppKind::Amg2023, SystemId::Tioga, 8, Scaling::Weak),
+        (AppKind::Kripke, SystemId::Tioga, 8, Scaling::Weak),
+        (AppKind::Laghos, SystemId::Dane, 4, Scaling::Strong),
+        (AppKind::Zmodel, SystemId::Tioga, 8, Scaling::Weak),
+    ] {
+        let spec = ExperimentSpec {
+            app,
+            system,
+            scaling,
+            nranks,
+        };
+        let out = run_cell_full(&spec, &traced_opts()).unwrap();
+        let trace = out.trace.as_ref().unwrap_or_else(|| {
+            panic!("{}: trace channel enabled but no trace", app.name())
+        });
+        assert_eq!(trace.dropped_events(), 0, "{}: default ring too small", app.name());
+        let cp = critical_path(trace).expect("nonempty trace");
+        let wall = out.profile.wall_time();
+        assert!(
+            (cp.total - wall).abs() <= 1e-9 * wall.max(1.0),
+            "{}: critical path {} != wall time {}",
+            app.name(),
+            cp.total,
+            wall
+        );
+        let attributed: f64 = cp.per_region.values().sum();
+        assert!(
+            (attributed - cp.total).abs() <= 1e-9 * cp.total.max(1.0),
+            "{}: per-region attribution {} != total {}",
+            app.name(),
+            attributed,
+            cp.total
+        );
+        // the fold into the profile agrees with the analysis
+        assert_eq!(
+            out.profile.meta.get("trace_critpath").map(String::as_str),
+            Some(format!("{}", cp.total).as_str()),
+            "{}: meta stamp",
+            app.name()
+        );
+        let folded: f64 = out
+            .profile
+            .regions
+            .values()
+            .filter_map(|r| r.trace.as_ref().map(|t| t.critpath))
+            .sum();
+        let unattributed: f64 = out
+            .profile
+            .meta
+            .get("trace_critpath_unattributed")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.0);
+        assert!(
+            (folded + unattributed - cp.total).abs() <= 1e-6 * cp.total.max(1.0),
+            "{}: folded {} + unattributed {} != {}",
+            app.name(),
+            folded,
+            unattributed,
+            cp.total
+        );
+    }
+}
+
+#[test]
+fn constructed_late_sender_is_classified_with_correct_duration() {
+    let m = MachineModel::test_machine();
+    let delay = 1.0;
+    let trace = run_traced_world(2, |rank, cali| {
+        let world = rank.world();
+        let _main = cali.region("main");
+        if rank.rank == 0 {
+            // the late sender: busy for `delay` before sending
+            rank.advance(delay);
+            rank.send(&[1.0f64; 8], 1, 7, &world).unwrap();
+        } else {
+            let _halo = cali.comm_region("halo");
+            let (_data, _st) = rank.recv::<f64>(Some(0), 7, &world).unwrap();
+        }
+    });
+    let states = classify(&trace);
+    let late: Vec<_> = states
+        .iter()
+        .filter(|s| s.kind == WaitKind::LateSender)
+        .collect();
+    assert_eq!(late.len(), 1, "exactly one late-sender instance: {:?}", states);
+    let ws = late[0];
+    assert_eq!(ws.rank, 1, "the receiver idles");
+    assert_eq!(ws.peer, Some(0));
+    assert_eq!(ws.region, "main/halo", "attributed to the comm region");
+    // The receiver posted at ~0; the sender was ready at
+    // delay + send_overhead. Wait duration is exactly the gap.
+    let expect = delay + m.net.send_overhead;
+    assert!(
+        (ws.duration - expect).abs() < 1e-12,
+        "late-sender wait {} != {}",
+        ws.duration,
+        expect
+    );
+    // the idle span is also on the critical path through the sender
+    let cp = critical_path(&trace).unwrap();
+    assert_eq!(cp.hops, 1, "path hops through the message edge");
+    assert!(cp.segments.iter().any(|s| s.rank == 0), "sender is on the path");
+}
+
+#[test]
+fn constructed_late_receiver_is_classified_on_the_sender() {
+    // Above-threshold message: rendezvous. The receiver posts late, so
+    // the SENDER blocks in wait_send — a late-receiver wait state.
+    let mut m = MachineModel::test_machine();
+    m.net.eager_threshold = 1024;
+    let delay = 0.75;
+    let cfg = WorldConfig::new(2, m.clone()).with_timeout(Duration::from_secs(20));
+    let profiles = World::run(cfg, |rank| {
+        let cali = Caliper::attach_with(rank, "trace").unwrap();
+        let world = rank.world();
+        {
+            let _main = cali.region("main");
+            if rank.rank == 0 {
+                let _push = cali.comm_region("push");
+                let req = rank.isend(&vec![0u8; 4096], 1, 0, &world).unwrap();
+                rank.wait_send(req).unwrap();
+            } else {
+                rank.advance(delay);
+                let _ = rank.recv::<u8>(Some(0), 0, &world).unwrap();
+            }
+        }
+        cali.finish(rank)
+    });
+    let trace = RunTrace::new(
+        profiles
+            .into_iter()
+            .filter_map(|mut p| p.trace.take())
+            .collect(),
+    );
+    let states = classify(&trace);
+    let late: Vec<_> = states
+        .iter()
+        .filter(|s| s.kind == WaitKind::LateReceiver)
+        .collect();
+    assert_eq!(late.len(), 1, "one late-receiver instance: {:?}", states);
+    let ws = late[0];
+    assert_eq!(ws.rank, 0, "the sender idles");
+    assert_eq!(ws.peer, Some(1));
+    assert_eq!(ws.region, "main/push");
+    // gate = receiver's post time (delay); sender was ready at
+    // send_overhead — it idles for the difference.
+    let expect = delay - m.net.send_overhead;
+    assert!(
+        (ws.duration - expect).abs() < 1e-12,
+        "late-receiver wait {} != {}",
+        ws.duration,
+        expect
+    );
+}
+
+#[test]
+fn barrier_stagger_classifies_wait_at_collective() {
+    let trace = run_traced_world(4, |rank, cali| {
+        let world = rank.world();
+        let _main = cali.region("main");
+        rank.advance(rank.rank as f64); // rank 3 arrives last
+        rank.barrier(&world).unwrap();
+    });
+    let states = classify(&trace);
+    let coll: Vec<_> = states
+        .iter()
+        .filter(|s| s.kind == WaitKind::WaitAtCollective)
+        .collect();
+    assert_eq!(coll.len(), 3, "every rank but the laggard waited: {:?}", states);
+    for ws in &coll {
+        assert!(ws.rank < 3);
+        let expect = 3.0 - ws.rank as f64;
+        assert!(
+            (ws.duration - expect).abs() < 1e-12,
+            "rank {} waited {} != {}",
+            ws.rank,
+            ws.duration,
+            expect
+        );
+    }
+    // the critical path runs through the last entrant (rank 3)
+    let cp = critical_path(&trace).unwrap();
+    assert!(cp.segments.iter().any(|s| s.rank == 3));
+}
+
+#[test]
+fn tiny_ring_capacity_drops_events_with_explicit_counter() {
+    let cfg = WorldConfig::new(2, MachineModel::test_machine())
+        .with_timeout(Duration::from_secs(20));
+    let profiles = World::run(cfg, |rank| {
+        let cali = Caliper::attach_cfg(
+            rank,
+            ChannelConfig::parse("comm-stats,trace.max-events-per-rank=8").unwrap(),
+        );
+        let world = rank.world();
+        {
+            let _main = cali.region("main");
+            for i in 0..20 {
+                if rank.rank == 0 {
+                    rank.send(&[i as f64], 1, 0, &world).unwrap();
+                } else {
+                    let _ = rank.recv::<f64>(Some(0), 0, &world).unwrap();
+                }
+            }
+        }
+        cali.finish(rank)
+    });
+    let trace = RunTrace::new(
+        profiles
+            .into_iter()
+            .filter_map(|mut p| p.trace.take())
+            .collect(),
+    );
+    assert!(trace.dropped_events() > 0, "tiny ring must drop");
+    for tr in &trace.ranks {
+        assert!(tr.events.len() <= 8, "ring bounded at capacity");
+        assert_eq!(tr.capacity, 8);
+    }
+    // the drop counter survives into the artifact header
+    let text = write_jsonl(&trace);
+    let first = text.lines().next().unwrap();
+    assert!(
+        first.contains(&format!("\"dropped_events\":{}", trace.dropped_events())),
+        "header: {}",
+        first
+    );
+}
+
+#[test]
+fn run_cell_stamps_trace_meta_and_artifact_roundtrips() {
+    let spec = ExperimentSpec {
+        app: AppKind::Amg2023,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 8,
+    };
+    let out = run_cell_full(&spec, &traced_opts()).unwrap();
+    let trace = out.trace.expect("trace present");
+    assert_eq!(
+        out.profile.meta.get("trace_events").map(String::as_str),
+        Some(trace.n_events().to_string().as_str())
+    );
+    assert_eq!(
+        out.profile.meta.get("trace_dropped").map(String::as_str),
+        Some("0")
+    );
+    assert!(trace.n_events() > 0);
+    // AMG's tioga halo crosses the 4 KiB eager threshold → rendezvous →
+    // the run classifies real wait states.
+    let n_late: usize = out
+        .profile
+        .meta
+        .get("trace_late_senders")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let states = classify(&trace);
+    assert_eq!(
+        n_late,
+        states.iter().filter(|s| s.kind == WaitKind::LateSender).count(),
+        "meta count agrees with a fresh classification"
+    );
+    // artifact: lossless + byte-stable
+    let text = write_jsonl(&trace);
+    let back = read_jsonl(&text).expect("parses");
+    assert_eq!(back, trace);
+    assert_eq!(write_jsonl(&back), text);
+    // a profile region carries the trace payload after the fold
+    assert!(
+        out.profile
+            .regions
+            .values()
+            .any(|r| r.trace.map(|t| t.critpath > 0.0).unwrap_or(false)),
+        "some region owns critical-path time"
+    );
+    // profile JSON roundtrip preserves the trace payload
+    let j = out.profile.to_json();
+    let rp2 = commscope::caliper::RunProfile::from_json(&j).unwrap();
+    for (path, reg) in &out.profile.regions {
+        assert_eq!(
+            reg.trace, rp2.regions[path].trace,
+            "trace payload of '{}' survives profile JSON",
+            path
+        );
+    }
+}
+
+#[test]
+fn traces_are_deterministic_across_runs() {
+    let spec = ExperimentSpec {
+        app: AppKind::Kripke,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 8,
+    };
+    let a = run_cell_full(&spec, &traced_opts()).unwrap();
+    let b = run_cell_full(&spec, &traced_opts()).unwrap();
+    assert_eq!(
+        write_jsonl(a.trace.as_ref().unwrap()),
+        write_jsonl(b.trace.as_ref().unwrap()),
+        "identical cells must serialize byte-identical traces"
+    );
+    assert_eq!(
+        a.profile.to_json().to_string_pretty(),
+        b.profile.to_json().to_string_pretty()
+    );
+}
