@@ -7,7 +7,7 @@
 //! and closed when the returned guard drops — exit timestamps come from a
 //! shared virtual-clock handle, so no `&Rank` is needed at close:
 //!
-//! ```no_run
+//! ```
 //! use commscope::mpisim::{World, WorldConfig, MachineModel};
 //! use commscope::caliper::Caliper;
 //!
@@ -23,6 +23,7 @@
 //!     drop(_main);
 //!     cali.finish(rank)
 //! });
+//! assert!(profiles[0].regions["main/halo_exchange"].is_comm_region);
 //! ```
 //!
 //! The v1 paired calls (`begin`/`end`, `comm_region_begin`/`_end`) remain
@@ -73,6 +74,28 @@ impl Caliper {
     /// Like [`Caliper::attach`], with channels selected by a spec string —
     /// e.g. `"comm-stats,comm-matrix,msg-hist"`. See
     /// [`ChannelConfig::parse`] for the grammar.
+    ///
+    /// ```
+    /// use commscope::caliper::Caliper;
+    /// use commscope::mpisim::{MachineModel, World, WorldConfig};
+    ///
+    /// let cfg = WorldConfig::new(1, MachineModel::test_machine());
+    /// let profiles = World::run(cfg, |rank| {
+    ///     let cali = Caliper::attach_with(rank, "comm-stats,msg-hist").unwrap();
+    ///     {
+    ///         let _step = cali.region("step");
+    ///         rank.advance(0.25);
+    ///     }
+    ///     cali.finish(rank)
+    /// });
+    /// assert_eq!(profiles[0].regions["step"].visits, 1);
+    ///
+    /// // a bad spec is rejected, not silently ignored
+    /// let cfg = WorldConfig::new(1, MachineModel::test_machine());
+    /// World::run(cfg, |rank| {
+    ///     assert!(Caliper::attach_with(rank, "no-such-channel").is_err());
+    /// });
+    /// ```
     pub fn attach_with(rank: &mut Rank, spec: &str) -> Result<Caliper, ChannelSpecError> {
         Ok(Self::attach_cfg(rank, ChannelConfig::parse(spec)?))
     }
@@ -89,6 +112,27 @@ impl Caliper {
     }
 
     /// Enter a plain annotation region; it closes when the guard drops.
+    ///
+    /// Nesting is expressed by guard scopes — inner guards close first,
+    /// and the region path is the nesting path:
+    ///
+    /// ```
+    /// use commscope::caliper::Caliper;
+    /// use commscope::mpisim::{MachineModel, World, WorldConfig};
+    ///
+    /// let cfg = WorldConfig::new(1, MachineModel::test_machine());
+    /// let profiles = World::run(cfg, |rank| {
+    ///     let cali = Caliper::attach(rank);
+    ///     let _main = cali.region("main"); // closes when dropped
+    ///     {
+    ///         let _solve = cali.region("solve");
+    ///         rank.advance(1.0);
+    ///     } // "main/solve" closes here
+    ///     drop(_main);
+    ///     cali.finish(rank)
+    /// });
+    /// assert!(profiles[0].regions.contains_key("main/solve"));
+    /// ```
     pub fn region(&self, name: &str) -> RegionGuard<'_> {
         self.rec.borrow_mut().begin(name, false, self.clock.now());
         RegionGuard {

@@ -518,12 +518,33 @@ impl MetricChannel for MpiTime {
 /// the profiler at `finish` via [`MetricChannel::take_trace`].
 struct TraceChannel {
     rec: Option<crate::trace::TraceRecorder>,
+    /// Staged (already-mapped) events awaiting a batched flush into the
+    /// ring. Flushed at every region boundary, at `take_trace`, and when
+    /// the buffer reaches [`TRACE_STAGE_CAP`] — so memory is bounded and
+    /// flush order equals emission order, keeping the sealed trace
+    /// byte-identical to per-event recording.
+    pending: Vec<crate::trace::TraceEvent>,
 }
+
+/// Staged trace events before a forced flush (bounds staging memory
+/// between region boundaries).
+const TRACE_STAGE_CAP: usize = 256;
 
 impl TraceChannel {
     fn new(capacity: usize) -> TraceChannel {
         TraceChannel {
             rec: Some(crate::trace::TraceRecorder::new(capacity)),
+            pending: Vec::new(),
+        }
+    }
+
+    fn flush(&mut self) {
+        if let Some(rec) = self.rec.as_mut() {
+            for ev in self.pending.drain(..) {
+                rec.push(ev);
+            }
+        } else {
+            self.pending.clear();
         }
     }
 }
@@ -534,14 +555,22 @@ impl MetricChannel for TraceChannel {
     }
 
     fn on_event(&mut self, _stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
-        if let Some(rec) = &mut self.rec {
-            rec.record(ev);
+        // Map eagerly, stage locally; the ring (and its eviction
+        // accounting) is only touched at flush points.
+        if let Some(mapped) = crate::trace::TraceRecorder::map_event(ev) {
+            self.pending.push(mapped);
+            if self.pending.len() >= TRACE_STAGE_CAP {
+                self.flush();
+            }
         }
     }
 
     fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
 
     fn on_region_event(&mut self, path: &str, _is_comm: bool, enter: bool, t: f64) {
+        // Flush staged message events BEFORE the boundary event so ring
+        // order remains emission order.
+        self.flush();
         if let Some(rec) = &mut self.rec {
             rec.region_event(path, enter, t);
         }
@@ -552,6 +581,7 @@ impl MetricChannel for TraceChannel {
     }
 
     fn take_trace(&mut self) -> Option<crate::trace::RankTrace> {
+        self.flush();
         self.rec.take().map(crate::trace::TraceRecorder::finish)
     }
 }

@@ -1,0 +1,474 @@
+//! `repro bench` — the measured performance surface of the stack.
+//!
+//! Runs four workloads and writes a schema-versioned `BENCH_v1.json`
+//! trajectory so every optimization lands with numbers attached and CI can
+//! gate regressions (ucTrace's discipline: a profiler publishes its own
+//! overhead):
+//!
+//! 1. **Smoke-matrix cell throughput** — every ≤16-rank cell of the
+//!    Table III matrix, run end-to-end (`run_cell_full`, smoke fidelity),
+//!    several repetitions; reported as the median and p90 of the per-cell
+//!    cells/second distribution. This is the number the tentpole's ≥2×
+//!    target is judged by, and what the CI gate compares.
+//! 2. **Hook dispatch** — the `comm-stats` pipeline fed a realistic
+//!    event mix (same mix as the `hookpath` bench); ns per event.
+//! 3. **Trace capture** — the same mix with the `trace` channel on;
+//!    events/second through the ring.
+//! 4. **Allocations per message** — a 2-rank eager ping-pong measured
+//!    under the counting allocator (`util::alloc`, installed by the
+//!    `repro` binary only); heap allocations divided by messages sent.
+//!
+//! The JSON file is append-only: each run adds one labelled entry, so the
+//! committed file is a baseline→optimized trajectory, not a single point.
+//! `--check` compares the new median cell throughput against the last
+//! committed entry and fails on a >15% drop. See `docs/PERFORMANCE.md`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::benchpark::runner::{run_cell_full, table3_matrix, RunOptions};
+use crate::caliper::channel::ChannelConfig;
+use crate::caliper::comm_profiler::CommProfiler;
+use crate::mpisim::{CollKind, MachineModel, MpiEvent, MpiHook, World, WorldConfig};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// Schema tag stamped into the JSON file; bump on incompatible change.
+pub const BENCH_SCHEMA: &str = "BENCH_v1";
+
+/// Throughput-drop fraction the regression gate tolerates (`--check`):
+/// new median cell throughput must stay ≥ (1 - 0.15) × last committed.
+pub const REGRESSION_TOLERANCE: f64 = 0.15;
+
+/// Rank ceiling for the smoke-matrix section; keeps a bench run fast
+/// enough for per-PR CI while still covering every app × system pair.
+const SMOKE_MAX_RANKS: usize = 16;
+
+/// One measured bench entry (one run of the suite).
+#[derive(Debug, Clone)]
+pub struct BenchEntry {
+    pub label: String,
+    /// Median of the per-cell throughput distribution (cells/second).
+    pub smoke_cells_per_s_median: f64,
+    /// 90th percentile of the same distribution (the fast tail).
+    pub smoke_cells_per_s_p90: f64,
+    /// Cells in the smoke matrix × repetitions behind the distribution.
+    pub smoke_cells: usize,
+    pub smoke_reps: usize,
+    /// Events/second through the trace-enabled hook pipeline.
+    pub events_per_s: f64,
+    /// Nanoseconds per hook dispatch on the default `comm-stats` pipeline.
+    pub ns_per_hook_dispatch: f64,
+    /// Heap allocations per message in a 2-rank eager ping-pong
+    /// (0.0 when the counting allocator is not installed, e.g. in tests).
+    pub allocs_per_message: f64,
+}
+
+impl BenchEntry {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("label", self.label.as_str());
+        j.set("smoke_cells_per_s_median", self.smoke_cells_per_s_median);
+        j.set("smoke_cells_per_s_p90", self.smoke_cells_per_s_p90);
+        j.set("smoke_cells", self.smoke_cells);
+        j.set("smoke_reps", self.smoke_reps);
+        j.set("events_per_s", self.events_per_s);
+        j.set("ns_per_hook_dispatch", self.ns_per_hook_dispatch);
+        j.set("allocs_per_message", self.allocs_per_message);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Option<BenchEntry> {
+        Some(BenchEntry {
+            label: j.get("label")?.as_str()?.to_string(),
+            smoke_cells_per_s_median: j.get("smoke_cells_per_s_median")?.as_f64()?,
+            smoke_cells_per_s_p90: j.get("smoke_cells_per_s_p90")?.as_f64()?,
+            smoke_cells: j.get("smoke_cells")?.as_u64()? as usize,
+            smoke_reps: j.get("smoke_reps")?.as_u64()? as usize,
+            events_per_s: j.get("events_per_s")?.as_f64()?,
+            ns_per_hook_dispatch: j.get("ns_per_hook_dispatch")?.as_f64()?,
+            allocs_per_message: j.get("allocs_per_message")?.as_f64()?,
+        })
+    }
+}
+
+/// Parse the entries of a `BENCH_v1.json` document.
+pub fn parse_bench_file(text: &str) -> Result<Vec<BenchEntry>> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bench json: {}", e))?;
+    let schema = j.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+    if schema != BENCH_SCHEMA {
+        bail!("bench file schema '{}' != '{}'", schema, BENCH_SCHEMA);
+    }
+    let arr = j
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("bench file has no entries array"))?;
+    let mut out = Vec::new();
+    for (i, e) in arr.iter().enumerate() {
+        out.push(
+            BenchEntry::from_json(e)
+                .ok_or_else(|| anyhow::anyhow!("bench entry {} is malformed", i))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Serialize entries as a `BENCH_v1.json` document.
+pub fn render_bench_file(entries: &[BenchEntry]) -> String {
+    let mut j = Json::obj();
+    j.set("schema", BENCH_SCHEMA);
+    j.set(
+        "entries",
+        Json::Arr(entries.iter().map(|e| e.to_json()).collect()),
+    );
+    let mut s = j.to_string_pretty();
+    s.push('\n');
+    s
+}
+
+/// The ≤`SMOKE_MAX_RANKS` slice of the Table III matrix the throughput
+/// section runs. Apps whose smallest Table III cell already exceeds the
+/// cap (Laghos starts at 112 ranks) contribute one representative cell
+/// clamped to the cap, so the bench exercises every app's communication
+/// pattern.
+pub fn smoke_cells() -> Vec<crate::benchpark::ExperimentSpec> {
+    let matrix = table3_matrix();
+    let mut out: Vec<crate::benchpark::ExperimentSpec> = matrix
+        .iter()
+        .filter(|s| s.nranks <= SMOKE_MAX_RANKS)
+        .copied()
+        .collect();
+    for spec in &matrix {
+        if !out.iter().any(|s| s.app == spec.app) {
+            let mut small = *spec;
+            small.nranks = SMOKE_MAX_RANKS;
+            out.push(small);
+        }
+    }
+    out
+}
+
+/// Same realistic event mix as the `hookpath`/`tracepath` benches:
+/// halo-style sends/recvs over a few peers plus occasional collectives.
+fn event_mix(n: usize) -> Vec<MpiEvent> {
+    let mut evs = Vec::with_capacity(n);
+    for i in 0..n {
+        let peer = i % 6;
+        let bytes = 64 << (i % 7);
+        let t = i as f64 * 1e-6;
+        evs.push(match i % 8 {
+            0..=3 => MpiEvent::Send {
+                dst: peer,
+                tag: (i % 16) as i32,
+                bytes,
+                t_start: t,
+                t_end: t + 1e-7,
+            },
+            4..=6 => MpiEvent::Recv {
+                src: peer,
+                tag: (i % 16) as i32,
+                bytes,
+                t_start: t,
+                t_end: t + 2e-7,
+            },
+            _ => MpiEvent::Coll {
+                kind: CollKind::Allreduce,
+                bytes: 8,
+                comm_size: 8,
+                t_start: t,
+                t_end: t + 5e-7,
+            },
+        });
+    }
+    evs
+}
+
+/// Best-of-`reps` seconds per event for a channel spec.
+fn per_event_cost(spec: &str, events: &[MpiEvent], reps: usize) -> f64 {
+    let cfg = ChannelConfig::parse(spec).expect("valid spec");
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let mut p = CommProfiler::with_channels(0, cfg);
+        p.begin("main", false, 0.0);
+        p.begin("halo", true, 0.0);
+        let t0 = Instant::now();
+        for ev in events {
+            p.on_event(0, ev);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        p.end("halo", 1.0);
+        p.end("main", 1.0);
+        let prof = p.finish(1.0);
+        assert!(prof.regions["main/halo"].visits > 0, "pipeline recorded");
+        best = best.min(dt / events.len() as f64);
+    }
+    best
+}
+
+/// Per-cell wall-clock throughput over `reps` repetitions of the smoke
+/// matrix. Bypasses the campaign executor on purpose: its content-keyed
+/// dedup cache would serve repeat cells from memory and measure nothing.
+fn smoke_throughput(run: &RunOptions, reps: usize) -> Result<(f64, f64, usize)> {
+    let cells = smoke_cells();
+    if cells.is_empty() {
+        bail!("smoke matrix is empty");
+    }
+    // Warmup: one cheapest cell, so thread spawn + allocator are hot.
+    let _ = run_cell_full(&cells[0], run)?;
+    let mut samples = Vec::with_capacity(cells.len() * reps);
+    for _ in 0..reps {
+        for spec in &cells {
+            let t0 = Instant::now();
+            run_cell_full(spec, run)
+                .with_context(|| format!("bench cell {}", spec.id()))?;
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            samples.push(1.0 / dt);
+        }
+    }
+    Ok((
+        percentile(&samples, 50.0),
+        // p90 cell: the fast tail of the distribution (10th percentile of
+        // duration = 90th of throughput).
+        percentile(&samples, 90.0),
+        cells.len(),
+    ))
+}
+
+/// Allocations per message: 2-rank eager ping-pong under the counting
+/// allocator. Returns 0.0 when the allocator is not installed (library
+/// tests), because the counter never moves.
+fn allocs_per_message(rounds: usize) -> f64 {
+    let run = |rounds: usize| {
+        let cfg = WorldConfig::new(2, MachineModel::test_machine());
+        World::run(cfg, move |rank| {
+            let world = rank.world();
+            let peer = 1 - rank.rank;
+            let buf = [0.0f64; 64]; // 512 B — comfortably eager
+            for tag in 0..rounds as i32 {
+                if rank.rank == 0 {
+                    rank.send(&buf[..], peer, tag, &world).unwrap();
+                    let _ = rank.recv::<f64>(Some(peer), tag, &world).unwrap();
+                } else {
+                    let _ = rank.recv::<f64>(Some(peer), tag, &world).unwrap();
+                    rank.send(&buf[..], peer, tag, &world).unwrap();
+                }
+            }
+        });
+    };
+    run(rounds.min(64)); // warmup
+    let before = crate::util::alloc::allocation_count();
+    run(rounds);
+    let after = crate::util::alloc::allocation_count();
+    let messages = (2 * rounds) as f64;
+    (after - before) as f64 / messages
+}
+
+/// Run the full suite and return one entry. `full` switches the smoke
+/// matrix to non-shrunk fidelity (the nightly configuration).
+pub fn run_suite(label: &str, full: bool, reps: usize) -> Result<BenchEntry> {
+    let run = if full {
+        RunOptions::default()
+    } else {
+        RunOptions::smoke()
+    };
+    eprintln!(
+        "bench: smoke matrix ({} fidelity), {} reps...",
+        if full { "full" } else { "smoke" },
+        reps
+    );
+    let (median, p90, n_cells) = smoke_throughput(&run, reps)?;
+    eprintln!("bench: hook dispatch + trace capture...");
+    let events = event_mix(300_000);
+    let _ = per_event_cost("comm-stats", &events[..events.len() / 4], 1); // warmup
+    let hook_cost = per_event_cost("comm-stats", &events, 5);
+    let trace_cost = per_event_cost("comm-stats,trace", &events, 5);
+    eprintln!("bench: allocation counting ping-pong...");
+    let apm = allocs_per_message(2000);
+    Ok(BenchEntry {
+        label: label.to_string(),
+        smoke_cells_per_s_median: median,
+        smoke_cells_per_s_p90: p90,
+        smoke_cells: n_cells,
+        smoke_reps: reps,
+        events_per_s: 1.0 / trace_cost,
+        ns_per_hook_dispatch: hook_cost * 1e9,
+        allocs_per_message: apm,
+    })
+}
+
+/// Human-readable comparison of the trajectory (last entry vs. its
+/// predecessor when there is one).
+pub fn render_report(entries: &[BenchEntry]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<24} {:>14} {:>14} {:>12} {:>14} {:>12}\n",
+        "label", "cells/s med", "cells/s p90", "Mevents/s", "ns/dispatch", "allocs/msg"
+    ));
+    for e in entries {
+        out.push_str(&format!(
+            "{:<24} {:>14.3} {:>14.3} {:>12.2} {:>14.1} {:>12.1}\n",
+            e.label,
+            e.smoke_cells_per_s_median,
+            e.smoke_cells_per_s_p90,
+            e.events_per_s / 1e6,
+            e.ns_per_hook_dispatch,
+            e.allocs_per_message
+        ));
+    }
+    if entries.len() >= 2 {
+        let prev = &entries[entries.len() - 2];
+        let last = &entries[entries.len() - 1];
+        if prev.smoke_cells_per_s_median > 0.0 {
+            out.push_str(&format!(
+                "throughput: {:.2}x vs previous entry ('{}' -> '{}')\n",
+                last.smoke_cells_per_s_median / prev.smoke_cells_per_s_median,
+                prev.label,
+                last.label
+            ));
+        }
+    }
+    out
+}
+
+/// The `--check` gate: `fresh` must be within `REGRESSION_TOLERANCE` of
+/// `committed` (the last committed entry's median cell throughput).
+pub fn check_regression(committed: &BenchEntry, fresh: &BenchEntry) -> Result<()> {
+    let floor = committed.smoke_cells_per_s_median * (1.0 - REGRESSION_TOLERANCE);
+    if fresh.smoke_cells_per_s_median < floor {
+        bail!(
+            "perf regression: median cell throughput {:.3} cells/s is below the \
+             gate floor {:.3} ({}% drop tolerance vs committed '{}' = {:.3})",
+            fresh.smoke_cells_per_s_median,
+            floor,
+            (REGRESSION_TOLERANCE * 100.0) as u32,
+            committed.label,
+            committed.smoke_cells_per_s_median
+        );
+    }
+    Ok(())
+}
+
+/// Entry point for `repro bench`.
+///
+/// ```text
+/// repro bench [--json BENCH_v1.json] [--label L] [--append]
+///             [--check] [--report FILE] [--reps N] [--full]
+/// ```
+pub fn run_bench(args: &Args) -> Result<()> {
+    let json_path = args.get_or("json", "BENCH_v1.json").to_string();
+    let label = args.get_or("label", "current").to_string();
+    let reps = args.get_usize("reps", 3);
+    let full = args.has("full");
+
+    let mut entries: Vec<BenchEntry> = match std::fs::read_to_string(&json_path) {
+        Ok(text) => parse_bench_file(&text)
+            .with_context(|| format!("reading committed bench file {}", json_path))?,
+        Err(_) => Vec::new(),
+    };
+    let committed_last = entries.last().cloned();
+
+    let fresh = run_suite(&label, full, reps)?;
+    println!("{}", render_report(std::slice::from_ref(&fresh)));
+
+    if args.has("check") {
+        let committed = committed_last.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "--check needs a committed bench file with at least one entry ({})",
+                json_path
+            )
+        })?;
+        check_regression(committed, &fresh)?;
+        println!(
+            "perf gate OK: {:.3} cells/s vs committed {:.3} ('{}'), tolerance {}%",
+            fresh.smoke_cells_per_s_median,
+            committed.smoke_cells_per_s_median,
+            committed.label,
+            (REGRESSION_TOLERANCE * 100.0) as u32
+        );
+    }
+
+    if args.has("append") {
+        entries.push(fresh.clone());
+        std::fs::write(&json_path, render_bench_file(&entries))
+            .with_context(|| format!("writing {}", json_path))?;
+        println!("appended entry '{}' to {}", label, json_path);
+    }
+
+    if let Some(report_path) = args.get("report") {
+        let mut all = entries.clone();
+        if !args.has("append") {
+            all.push(fresh.clone());
+        }
+        std::fs::write(report_path, render_report(&all))
+            .with_context(|| format!("writing {}", report_path))?;
+        println!("comparison report written to {}", report_path);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(label: &str, median: f64) -> BenchEntry {
+        BenchEntry {
+            label: label.to_string(),
+            smoke_cells_per_s_median: median,
+            smoke_cells_per_s_p90: median * 1.2,
+            smoke_cells: 6,
+            smoke_reps: 3,
+            events_per_s: 1e7,
+            ns_per_hook_dispatch: 25.0,
+            allocs_per_message: 4.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries() {
+        let entries = vec![entry("baseline", 1.5), entry("pooled", 3.2)];
+        let text = render_bench_file(&entries);
+        let back = parse_bench_file(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].label, "baseline");
+        assert!((back[1].smoke_cells_per_s_median - 3.2).abs() < 1e-12);
+        assert_eq!(back[1].smoke_cells, 6);
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        assert!(parse_bench_file("{\"schema\":\"BENCH_v0\",\"entries\":[]}").is_err());
+        assert!(parse_bench_file("{\"entries\":[]}").is_err());
+    }
+
+    #[test]
+    fn regression_gate_triggers_past_tolerance() {
+        let base = entry("baseline", 10.0);
+        // 10% drop: within the 15% tolerance
+        assert!(check_regression(&base, &entry("pr", 9.0)).is_ok());
+        // 20% drop: gate fires
+        assert!(check_regression(&base, &entry("pr", 8.0)).is_err());
+    }
+
+    #[test]
+    fn smoke_matrix_selection_covers_apps_and_stays_small() {
+        let cells = smoke_cells();
+        assert!(!cells.is_empty());
+        assert!(cells.iter().all(|c| c.nranks <= SMOKE_MAX_RANKS));
+        // every app appears at least once in the bench slice
+        for app in [
+            crate::benchpark::AppKind::Amg2023,
+            crate::benchpark::AppKind::Kripke,
+            crate::benchpark::AppKind::Laghos,
+        ] {
+            assert!(cells.iter().any(|c| c.app == app), "{:?} missing", app);
+        }
+    }
+
+    #[test]
+    fn report_shows_trajectory_speedup() {
+        let txt = render_report(&[entry("baseline", 2.0), entry("opt", 5.0)]);
+        assert!(txt.contains("2.50x"), "{}", txt);
+    }
+}

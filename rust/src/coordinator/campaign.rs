@@ -386,6 +386,15 @@ pub fn run_campaign_report(
     report.cells_total += disk_cached;
     if opts.verbose {
         println!("campaign executor: {}", report.summary());
+        let elapsed = t0.elapsed().as_secs_f64();
+        if report.cells_executed > 0 && elapsed > 0.0 {
+            // the same cells/s metric `repro bench` gates (docs/PERFORMANCE.md)
+            println!(
+                "campaign throughput: {:.2} cells/s over {}",
+                report.cells_executed as f64 / elapsed,
+                crate::util::duration::fmt_duration(elapsed)
+            );
+        }
         for f in &report.failures {
             eprintln!("campaign cell FAILED: {}: {}", f.id, f.error);
         }

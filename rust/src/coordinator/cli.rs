@@ -47,6 +47,8 @@ USAGE:
   repro trace [--out results] [--cell ID] [--width N]
   repro run --app APP --system SYS --ranks N [--smoke] [--channels SPEC]
   repro report --profile FILE.json
+  repro bench [--json BENCH_v1.json] [--label L] [--append] [--check]
+              [--report FILE] [--reps N] [--full]
   repro help
 
 Profiles are cached under <out>/profiles; `campaign --force` reruns.
@@ -71,6 +73,11 @@ event-level JSONL trace under <out>/traces; `repro trace` renders its
 ASCII Gantt timeline, wait-state classification (late sender / late
 receiver / wait-at-collective), and region-attributed critical path, and
 `repro fig9` plots per-region critical-path share vs. rank count.
+`repro bench` runs the performance suite (smoke-matrix cell throughput,
+hook dispatch, trace capture, allocations per message) and maintains the
+schema-versioned BENCH_v1.json trajectory; `--check` is the CI perf gate
+(fails on a >15% median-throughput drop vs. the committed baseline),
+`--full` uses non-shrunk fidelity (the nightly configuration).
 APP ∈ {amg2023, kripke, laghos, zmodel}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
@@ -237,6 +244,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        Some("bench") => crate::coordinator::bench::run_bench(args),
         Some("report") => {
             let path = args
                 .get("profile")

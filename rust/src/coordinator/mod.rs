@@ -4,8 +4,13 @@
 //! [`campaign`] executes the Table III matrix (each cell = one simulated
 //! multi-rank job) and persists aggregated profiles; [`figures`] turns a
 //! [`crate::thicket::Thicket`] of profiles into the paper's tables/figures
-//! (text + CSV); [`cli`] is the `repro` command-line surface.
+//! (text + CSV); [`bench`] is the `repro bench` performance suite — it
+//! measures simulator cell throughput, hook-dispatch and trace-capture
+//! cost, and allocations per message, writes the schema-versioned
+//! `BENCH_v1.json` trajectory, and powers the CI regression gate
+//! (`--check`); [`cli`] is the `repro` command-line surface.
 
+pub mod bench;
 pub mod campaign;
 pub mod cli;
 pub mod figures;

@@ -1,6 +1,12 @@
 //! `repro` — the command-line entry point.
 //!
 //! Subcommands regenerate each table/figure of the paper; see `--help`.
+//!
+//! The binary installs the counting allocator so `repro bench` can report
+//! allocations per message; the library and its test harness do not.
+
+#[global_allocator]
+static ALLOC: commscope::util::alloc::CountingAlloc = commscope::util::alloc::CountingAlloc;
 
 fn main() {
     let args = commscope::util::cli::Args::from_env();

@@ -1,7 +1,8 @@
 //! Typed payload encoding for simulated messages.
 //!
 //! Real MPI ships raw bytes described by datatypes; we do the same: every
-//! message body is a `Box<[u8]>` and `MpiData` provides safe, alignment-free
+//! message body is a `Vec<u8>` (pooled and recycled by the p2p engine —
+//! see [`super::p2p`]) and `MpiData` provides safe, alignment-free
 //! encode/decode for the element types the applications use. Byte counts
 //! reported to the profiler are exactly `len * size_of::<T>()`, matching what
 //! Caliper's MPI wrappers compute from `count × MPI_Type_size`.
@@ -50,6 +51,17 @@ pub fn encode<T: MpiData>(data: &[T]) -> Box<[u8]> {
     out.into_boxed_slice()
 }
 
+/// Encode a slice into a caller-supplied buffer (cleared first). The
+/// p2p hot path uses this with pooled buffers — a recycled buffer with
+/// enough capacity makes the encode allocation-free.
+pub fn encode_into<T: MpiData>(data: &[T], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(data.len() * T::ELEM_SIZE);
+    for v in data {
+        v.write_le(out);
+    }
+}
+
 /// Decode bytes back to a typed vector.
 pub fn decode<T: MpiData>(bytes: &[u8]) -> Result<Vec<T>, MpiError> {
     if bytes.len() % T::ELEM_SIZE != 0 {
@@ -86,6 +98,18 @@ mod tests {
     fn roundtrip_u8() {
         let data: Vec<u8> = (0..=255).collect();
         assert_eq!(decode::<u8>(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn encode_into_reuses_capacity() {
+        let data = vec![1.0f64, 2.0, 3.0];
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&[0xFF; 10]); // stale content must vanish
+        let cap = buf.capacity();
+        encode_into(&data, &mut buf);
+        assert_eq!(buf.len(), 24);
+        assert_eq!(buf.capacity(), cap, "capacity reused, not reallocated");
+        assert_eq!(&buf[..], &encode(&data)[..]);
     }
 
     #[test]

@@ -32,6 +32,18 @@
 //!   Collectives synchronize participants to `max(entry clocks) + model
 //!   cost`. See [`netmodel`] for the Dane/Tioga parameterizations, eager
 //!   thresholds, and the statistical contention terms.
+//! - **Hot-path discipline** (`docs/PERFORMANCE.md` has the measured
+//!   numbers): payload buffers are recycled through per-mailbox freelists
+//!   ([`p2p::Mailbox::take_buffer`] / `recycle_buffer`) so steady-state
+//!   messaging reuses capacity instead of allocating; each mailbox is
+//!   **sharded** by source rank with a striped posted-receive table, so
+//!   concurrent senders to one receiver contend on different locks while
+//!   per-(source, tag) FIFO order is preserved by deposit sequence
+//!   numbers; and collective prices are **memoized** per
+//!   `(communicator, class, bytes)` in [`netmodel::CollCostCache`] —
+//!   bit-identical replay of the model, computed once per shape. None of
+//!   these change any virtual timestamp; `repro bench --check` gates the
+//!   throughput they buy.
 
 pub mod cart;
 pub mod clock;

@@ -20,14 +20,49 @@
 //! given source; ANY_SOURCE (`src = None`) matches the earliest-deposited
 //! envelope overall and is therefore only deterministic for applications
 //! whose matching is unambiguous (none of the apps here use it).
+//!
+//! # Hot-path layout
+//!
+//! The mailbox is sharded for the common halo pattern (several sender
+//! threads depositing into one receiver concurrently):
+//!
+//! - The unexpected-message queue is **sharded by source rank**
+//!   (`src % QUEUE_SHARDS`), so senders from different sources never
+//!   contend on one mutex and a concrete-source receive scans one short
+//!   queue. Every deposit is stamped with a mailbox-wide sequence number;
+//!   ANY_SOURCE matching locks all shards and picks the minimum stamp,
+//!   which reproduces the old single-queue earliest-deposit order exactly.
+//! - Sleeping receivers pair the condvar with a *deposit counter* mutex,
+//!   not the queue mutex: a receiver snapshots the counter, scans
+//!   lock-striped shards, and only sleeps if the counter is still
+//!   unchanged — a deposit that lands mid-scan is caught by the rescan, so
+//!   no wakeup can be missed.
+//! - The posted-receive table is **striped by matching key** hash; ids
+//!   carry the stripe in their low bits and an allocation-ordered counter
+//!   above, so `pending_posted_before` (post-order binding) still compares
+//!   ids across one stripe only.
+//! - A per-mailbox **payload buffer pool** recycles message buffers:
+//!   `isend` takes a buffer from the destination's pool, the receiver
+//!   returns it after decoding. Steady-state messaging allocates nothing.
 
 use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::error::MpiError;
 use super::request::{Protocol, SendCell};
 use super::ANY_TAG;
+
+/// Queue shards per mailbox (power of two; source ranks hash by modulo).
+pub const QUEUE_SHARDS: usize = 8;
+/// Posted-receive table stripes per mailbox (power of two).
+const POST_STRIPES: usize = 8;
+/// Bits reserved in a posted-receive id for the stripe index.
+const POST_STRIPE_BITS: u64 = 3;
+/// Recycled payload buffers kept per mailbox before excess is freed.
+const POOL_CAP: usize = 64;
 
 /// A message in flight (or queued unexpected).
 #[derive(Debug)]
@@ -36,7 +71,7 @@ pub struct Envelope {
     pub src: usize,
     pub tag: i32,
     pub ctx: u32,
-    pub payload: Box<[u8]>,
+    pub payload: Vec<u8>,
     /// Protocol the sender chose from the machine's eager threshold.
     pub protocol: Protocol,
     /// Virtual time the sender finished injecting the message.
@@ -63,6 +98,14 @@ impl Envelope {
     }
 }
 
+/// A queued envelope plus its mailbox-wide deposit stamp (what ANY_SOURCE
+/// uses to reproduce earliest-deposit order across shards).
+#[derive(Debug)]
+struct Queued {
+    seq: u64,
+    env: Envelope,
+}
+
 /// One entry of the posted-receive table: a receive that was posted
 /// (`irecv`) but not yet completed.
 #[derive(Debug, Clone)]
@@ -78,28 +121,89 @@ pub struct PostedRecv {
 
 #[derive(Debug, Default)]
 struct PostTable {
-    next_id: u64,
     entries: Vec<PostedRecv>,
+}
+
+/// Stripe index for a posted receive's exact matching key. All table
+/// operations use the *exact* key (including `None` / `ANY_TAG`
+/// wildcards), so a key always lands on the stripe it was posted to.
+fn post_stripe(src: Option<usize>, tag: i32, ctx: u32) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    (src, tag, ctx).hash(&mut h);
+    (h.finish() as usize) % POST_STRIPES
 }
 
 /// Per-rank mailbox: deposit-ordered queue of unexpected messages plus the
 /// rank's posted-receive table.
-#[derive(Default)]
 pub struct Mailbox {
-    queue: Mutex<VecDeque<Envelope>>,
+    /// Unexpected-message queues, sharded by `src % QUEUE_SHARDS`.
+    shards: Vec<Mutex<VecDeque<Queued>>>,
+    /// Mailbox-wide deposit stamp source (earliest-deposit order).
+    seq: AtomicU64,
+    /// Deposits so far; the condvar's paired mutex. See module docs for
+    /// the snapshot/rescan protocol that makes missed wakeups impossible.
+    deposits: Mutex<u64>,
     cv: Condvar,
-    posted: Mutex<PostTable>,
+    /// Posted-receive table, striped by matching-key hash.
+    posted: Vec<Mutex<PostTable>>,
+    /// Allocation-ordered id counter for posted receives (shifted left by
+    /// `POST_STRIPE_BITS`; the stripe index lives in the low bits).
+    post_ids: AtomicU64,
+    /// Recycled payload buffers for messages *to* this rank.
+    pool: Mutex<Vec<Vec<u8>>>,
+}
+
+impl Default for Mailbox {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Mailbox {
     pub fn new() -> Self {
-        Self::default()
+        Mailbox {
+            shards: (0..QUEUE_SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            seq: AtomicU64::new(0),
+            deposits: Mutex::new(0),
+            cv: Condvar::new(),
+            posted: (0..POST_STRIPES).map(|_| Mutex::new(PostTable::default())).collect(),
+            post_ids: AtomicU64::new(0),
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Take a recycled payload buffer (empty, capacity from a previous
+    /// message) or a fresh one. Called by *senders* targeting this rank.
+    pub fn take_buffer(&self) -> Vec<u8> {
+        self.pool.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a payload buffer to the pool once its message is decoded.
+    /// Cleared here; capacity is retained. The pool is bounded — excess
+    /// buffers are simply freed.
+    pub fn recycle_buffer(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(buf);
+        }
     }
 
     /// Deposit an envelope (called from the sender's thread).
     pub fn deposit(&self, env: Envelope) {
-        let mut q = self.queue.lock().unwrap();
-        q.push_back(env);
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut q = self.shards[env.src % QUEUE_SHARDS].lock().unwrap();
+            q.push_back(Queued { seq, env });
+        }
+        // Bump the deposit counter *after* the push: a receiver that
+        // scanned too early sees the changed counter and rescans.
+        let mut d = self.deposits.lock().unwrap();
+        *d += 1;
+        drop(d);
         // notify_all: multiple receivers only occur in tests; apps have one
         // receiving thread per mailbox by construction.
         self.cv.notify_all();
@@ -107,16 +211,18 @@ impl Mailbox {
 
     /// Number of queued (unmatched) envelopes — used by failure diagnostics.
     pub fn pending(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     /// Register a posted receive; returns the table id the
-    /// [`super::RecvRequest`] carries.
+    /// [`super::RecvRequest`] carries. Ids are allocation-ordered (a later
+    /// post always gets a numerically larger id) with the stripe index in
+    /// the low bits.
     pub fn post_recv(&self, src: Option<usize>, tag: i32, ctx: u32, post_time: f64) -> u64 {
-        let mut t = self.posted.lock().unwrap();
-        let id = t.next_id;
-        t.next_id += 1;
-        t.entries.push(PostedRecv {
+        let stripe = post_stripe(src, tag, ctx);
+        let id = (self.post_ids.fetch_add(1, Ordering::Relaxed) << POST_STRIPE_BITS)
+            | stripe as u64;
+        self.posted[stripe].lock().unwrap().entries.push(PostedRecv {
             id,
             src,
             tag,
@@ -128,22 +234,24 @@ impl Mailbox {
 
     /// Remove and return a posted entry at completion time.
     pub fn take_posted(&self, id: u64) -> Option<PostedRecv> {
-        let mut t = self.posted.lock().unwrap();
+        let stripe = (id & ((1 << POST_STRIPE_BITS) - 1)) as usize;
+        let mut t = self.posted[stripe].lock().unwrap();
         let idx = t.entries.iter().position(|e| e.id == id)?;
         Some(t.entries.swap_remove(idx))
     }
 
     /// Number of posted-but-uncompleted receives — failure diagnostics.
     pub fn posted_pending(&self) -> usize {
-        self.posted.lock().unwrap().entries.len()
+        self.posted.iter().map(|t| t.lock().unwrap().entries.len()).sum()
     }
 
     /// Still-pending posted receives with the exact same matching key that
     /// were posted before entry `id` (ids are allocation-ordered). This is
     /// how many queued envelopes are *not ours to take*: posted receives
-    /// bind messages in post order, as MPI requires.
+    /// bind messages in post order, as MPI requires. Same key ⇒ same
+    /// stripe, so one stripe lock suffices.
     pub fn pending_posted_before(&self, id: u64, src: Option<usize>, tag: i32, ctx: u32) -> usize {
-        let t = self.posted.lock().unwrap();
+        let t = self.posted[post_stripe(src, tag, ctx)].lock().unwrap();
         t.entries
             .iter()
             .filter(|e| e.id < id && e.src == src && e.tag == tag && e.ctx == ctx)
@@ -153,15 +261,23 @@ impl Mailbox {
     /// Nonblocking probe: is a matching envelope queued? (`MPI_Test` for
     /// receives — real-time dependent, same caveat class as ANY_SOURCE.)
     pub fn peek_match(&self, src: Option<usize>, tag: i32, ctx: u32) -> bool {
-        let q = self.queue.lock().unwrap();
-        Self::find_match(&q, src, tag, ctx).is_some()
+        match src {
+            Some(s) => {
+                let q = self.shards[s % QUEUE_SHARDS].lock().unwrap();
+                q.iter().any(|e| Self::matches(&e.env, Some(s), tag, ctx))
+            }
+            None => self.shards.iter().any(|sh| {
+                let q = sh.lock().unwrap();
+                q.iter().any(|e| Self::matches(&e.env, None, tag, ctx))
+            }),
+        }
     }
 
     /// Block until a new envelope is deposited or `slice` elapses — the
     /// progress wait of `waitany`.
     pub fn wait_deposit(&self, slice: Duration) {
-        let q = self.queue.lock().unwrap();
-        let (_guard, _res) = self.cv.wait_timeout(q, slice).unwrap();
+        let d = self.deposits.lock().unwrap();
+        let (_guard, _res) = self.cv.wait_timeout(d, slice).unwrap();
     }
 
     /// Block until an envelope matching (src, tag, ctx) is available and
@@ -192,10 +308,12 @@ impl Mailbox {
         timeout: Duration,
     ) -> Result<Envelope, MpiError> {
         let deadline = Instant::now() + timeout;
-        let mut q = self.queue.lock().unwrap();
         loop {
-            if let Some(idx) = Self::find_match_nth(&q, src, tag, ctx, skip) {
-                return Ok(q.remove(idx).unwrap());
+            // Snapshot-before-scan: any deposit that lands after this read
+            // bumps the counter, which the pre-sleep check below catches.
+            let snapshot = *self.deposits.lock().unwrap();
+            if let Some(env) = self.try_take(src, tag, ctx, skip) {
+                return Ok(env);
             }
             let now = Instant::now();
             if now >= deadline {
@@ -207,31 +325,53 @@ impl Mailbox {
                     millis: timeout.as_millis() as u64,
                 });
             }
-            let (guard, _res) = self.cv.wait_timeout(q, deadline - now).unwrap();
-            q = guard;
+            let d = self.deposits.lock().unwrap();
+            if *d != snapshot {
+                continue; // deposit raced the scan — rescan before sleeping
+            }
+            let (_guard, _res) = self.cv.wait_timeout(d, deadline - now).unwrap();
         }
     }
 
-    fn find_match(q: &VecDeque<Envelope>, src: Option<usize>, tag: i32, ctx: u32) -> Option<usize> {
-        Self::find_match_nth(q, src, tag, ctx, 0)
+    fn matches(e: &Envelope, src: Option<usize>, tag: i32, ctx: u32) -> bool {
+        e.ctx == ctx
+            && (tag == ANY_TAG || e.tag == tag)
+            && src.map(|s| e.src == s).unwrap_or(true)
     }
 
-    fn find_match_nth(
-        q: &VecDeque<Envelope>,
-        src: Option<usize>,
-        tag: i32,
-        ctx: u32,
-        skip: usize,
-    ) -> Option<usize> {
-        q.iter()
-            .enumerate()
-            .filter(|(_, e)| {
-                e.ctx == ctx
-                    && (tag == ANY_TAG || e.tag == tag)
-                    && src.map(|s| e.src == s).unwrap_or(true)
-            })
-            .map(|(i, _)| i)
-            .nth(skip)
+    /// Remove the `skip`-th matching envelope in deposit order, if queued.
+    fn try_take(&self, src: Option<usize>, tag: i32, ctx: u32, skip: usize) -> Option<Envelope> {
+        match src {
+            // Concrete source: one shard holds every candidate, and shard
+            // order for a single source is sender program order (FIFO).
+            Some(s) => {
+                let mut q = self.shards[s % QUEUE_SHARDS].lock().unwrap();
+                let idx = q
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| Self::matches(&e.env, Some(s), tag, ctx))
+                    .map(|(i, _)| i)
+                    .nth(skip)?;
+                Some(q.remove(idx).unwrap().env)
+            }
+            // ANY_SOURCE: hold every shard lock, order candidates by their
+            // deposit stamp — identical to the old single-queue scan.
+            None => {
+                let mut guards: Vec<_> =
+                    self.shards.iter().map(|sh| sh.lock().unwrap()).collect();
+                let mut cands: Vec<(u64, usize, usize)> = Vec::new();
+                for (si, q) in guards.iter().enumerate() {
+                    for (i, e) in q.iter().enumerate() {
+                        if Self::matches(&e.env, None, tag, ctx) {
+                            cands.push((e.seq, si, i));
+                        }
+                    }
+                }
+                cands.sort_unstable();
+                let &(_, si, i) = cands.get(skip)?;
+                Some(guards[si].remove(i).unwrap().env)
+            }
+        }
     }
 }
 
@@ -244,7 +384,7 @@ mod tests {
             src,
             tag,
             ctx,
-            payload: vec![0u8; 8].into_boxed_slice(),
+            payload: vec![0u8; 8],
             protocol: Protocol::Eager,
             sender_ready,
             wire: 0.0,
@@ -294,6 +434,44 @@ mod tests {
             .match_recv(0, Some(2), ANY_TAG, 0, Duration::from_secs(1))
             .unwrap();
         assert_eq!(e.tag, 5);
+    }
+
+    #[test]
+    fn any_source_matches_earliest_deposit_across_shards() {
+        let mb = Mailbox::new();
+        // sources that land on distinct shards; deposit order is the tie
+        mb.deposit(env(3, 1, 0, 30.0));
+        mb.deposit(env(1, 1, 0, 10.0));
+        mb.deposit(env(2, 1, 0, 20.0));
+        let e = mb
+            .match_recv(0, None, 1, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.src, 3, "earliest deposit wins, not lowest source");
+        let e = mb
+            .match_recv(0, None, ANY_TAG, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.src, 1);
+        assert_eq!(mb.pending(), 1);
+    }
+
+    #[test]
+    fn shard_collisions_keep_fifo_per_source() {
+        let mb = Mailbox::new();
+        // sources 1 and 1+QUEUE_SHARDS share a shard
+        mb.deposit(env(1, 7, 0, 1.0));
+        mb.deposit(env(1 + QUEUE_SHARDS, 7, 0, 5.0));
+        mb.deposit(env(1, 7, 0, 2.0));
+        let e = mb
+            .match_recv(0, Some(1 + QUEUE_SHARDS), 7, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(e.sender_ready, 5.0, "other source's messages skipped");
+        let a = mb
+            .match_recv(0, Some(1), 7, 0, Duration::from_secs(1))
+            .unwrap();
+        let b = mb
+            .match_recv(0, Some(1), 7, 0, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!((a.sender_ready, b.sender_ready), (1.0, 2.0));
     }
 
     #[test]
@@ -352,6 +530,19 @@ mod tests {
     }
 
     #[test]
+    fn posted_ids_are_allocation_ordered_across_stripes() {
+        let mb = Mailbox::new();
+        // different keys land on different stripes; later posts must still
+        // get larger ids (pending_posted_before relies on it)
+        let mut prev = mb.post_recv(Some(0), 0, 0, 0.0);
+        for i in 1..40 {
+            let id = mb.post_recv(Some(i % 5), (i % 11) as i32, (i % 3) as u32, i as f64);
+            assert!(id > prev, "id {} not above {}", id, prev);
+            prev = id;
+        }
+    }
+
+    #[test]
     fn match_recv_nth_skips_earlier_bindings() {
         let mb = Mailbox::new();
         mb.deposit(env(1, 7, 0, 1.0));
@@ -382,6 +573,22 @@ mod tests {
         assert!(mb.peek_match(None, ANY_TAG, 0));
         assert!(!mb.peek_match(Some(2), 7, 0));
         assert_eq!(mb.pending(), 1, "peek must not consume");
+    }
+
+    #[test]
+    fn buffer_pool_recycles_capacity() {
+        let mb = Mailbox::new();
+        let mut b = mb.take_buffer();
+        assert!(b.is_empty());
+        b.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = b.capacity();
+        mb.recycle_buffer(b);
+        let b2 = mb.take_buffer();
+        assert!(b2.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(b2.capacity(), cap, "capacity survives the round trip");
+        // zero-capacity buffers are not pooled
+        mb.recycle_buffer(Vec::new());
+        assert_eq!(mb.take_buffer().capacity(), 0);
     }
 
     #[test]

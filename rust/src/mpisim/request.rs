@@ -22,7 +22,10 @@
 //! ([`super::p2p::Mailbox::post_recv`]); the post **time** recorded there
 //! is what gates a rendezvous partner's transfer start. Completion happens
 //! at `wait`/`waitall` on the owning [`super::Rank`], which also provides
-//! `waitany` and a nonblocking `test`.
+//! `waitany` and a nonblocking `test`. Payload bytes ride pooled `Vec<u8>`
+//! buffers recycled through the destination mailbox's freelist
+//! ([`super::p2p::Mailbox::take_buffer`]), so a steady-state
+//! send/recv/wait cycle allocates nothing per message.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};

@@ -25,10 +25,10 @@ use std::time::{Duration, Instant};
 use super::clock::{Clock, ClockHandle};
 use super::collectives::{frame_concat, frame_split, CollBoard, ReduceOp};
 use super::comm::Comm;
-use super::datatype::{decode, encode, MpiData};
+use super::datatype::{decode, encode, encode_into, MpiData};
 use super::error::MpiError;
 use super::hooks::{CollKind, HookHandle, MpiEvent};
-use super::netmodel::{CollClass, GroupSpan, MachineModel};
+use super::netmodel::{CollClass, CollCostCache, GroupSpan, MachineModel};
 use super::p2p::{Envelope, Mailbox};
 use super::request::{Protocol, RecvRequest, Request, SendCell, SendRequest, SendState, Status};
 
@@ -182,6 +182,10 @@ pub struct Rank<'w> {
     /// computed once per communicator so every collective on it prices
     /// from the participants' actual node span, not the job-wide one.
     span_cache: HashMap<u32, GroupSpan>,
+    /// Memoized collective prices keyed by `(ctx, class, bytes)` — an
+    /// iterative solver's repeated same-shape collectives price once
+    /// (exact-byte keys, so replayed costs are bit-identical).
+    coll_costs: CollCostCache,
 }
 
 impl<'w> Rank<'w> {
@@ -195,6 +199,7 @@ impl<'w> Rank<'w> {
             coll_seq: HashMap::new(),
             split_seq: HashMap::new(),
             span_cache: HashMap::new(),
+            coll_costs: CollCostCache::new(),
         }
     }
 
@@ -299,7 +304,11 @@ impl<'w> Rank<'w> {
             });
         }
         let dst_world = comm.world_rank(dst);
-        let payload = encode(buf);
+        // Pooled payload buffer: taken from the DESTINATION mailbox's
+        // freelist (the receiver recycles it there after decoding), so
+        // steady-state messaging reuses capacity instead of allocating.
+        let mut payload = self.core.mailboxes[dst_world].take_buffer();
+        encode_into(buf, &mut payload);
         let bytes = payload.len();
         let t_start = self.clock.now();
         // Sender pays its injection overhead; the message cannot be on the
@@ -452,6 +461,29 @@ impl<'w> Rank<'w> {
     /// late, rendezvous handshake — and *transfer* is the rest (wire time
     /// plus completion overheads). Per-message `Recv` events are emitted
     /// zero-duration; the single [`MpiEvent::Wait`] carries the time.
+    ///
+    /// The canonical symmetric exchange — post receives first, then sends,
+    /// then one `waitall` (deadlock-free at any message size):
+    ///
+    /// ```
+    /// use commscope::mpisim::{MachineModel, Request, World, WorldConfig};
+    ///
+    /// let cfg = WorldConfig::new(2, MachineModel::test_machine());
+    /// let echoed = World::run(cfg, |rank| {
+    ///     let world = rank.world();
+    ///     let peer = 1 - rank.rank;
+    ///     let mut reqs: Vec<Request> = Vec::new();
+    ///     reqs.push(rank.irecv(Some(peer), 7, &world).unwrap().into());
+    ///     let face = [rank.rank as f64; 4];
+    ///     reqs.push(rank.isend(&face[..], peer, 7, &world).unwrap().into());
+    ///     let mut done = rank.waitall::<f64>(reqs).unwrap();
+    ///     assert!(done[1].is_none()); // sends yield None
+    ///     let (data, status) = done[0].take().unwrap();
+    ///     assert_eq!(status.src, peer);
+    ///     data[0]
+    /// });
+    /// assert_eq!(echoed, vec![1.0, 0.0]); // each rank got its peer's face
+    /// ```
     pub fn waitall<T: MpiData>(
         &mut self,
         reqs: Vec<Request>,
@@ -592,7 +624,12 @@ impl<'w> Rank<'w> {
                         tag: env.tag,
                         bytes: env.payload.len(),
                     };
-                    out.push(Some((decode::<T>(&env.payload)?, status)));
+                    let decoded = decode::<T>(&env.payload)?;
+                    // Payload buffers for messages to this rank live in
+                    // this rank's own mailbox pool; return the capacity
+                    // for the next sender targeting us.
+                    self.core.mailboxes[self.rank].recycle_buffer(env.payload);
+                    out.push(Some((decoded, status)));
                 }
                 None => out.push(None),
             }
@@ -774,11 +811,12 @@ impl<'w> Rank<'w> {
         };
         // Cost from the members' actual node span: a sub-communicator
         // confined to one node pays intra-node α/β regardless of how many
-        // nodes the job occupies.
+        // nodes the job occupies. Priced through the per-rank memo cache —
+        // repeated same-shape collectives (solver iterations) replay a
+        // bit-identical stored value instead of recomputing.
         let cost = self
-            .core
-            .machine
-            .collective_time_span(class, cost_bytes, &span);
+            .coll_costs
+            .price(&self.core.machine, comm.ctx, class, cost_bytes, &span);
         self.clock.sync_to(max_entry);
         self.clock.advance(cost);
         let t_end = self.clock.now();

@@ -140,7 +140,7 @@ mod tests {
         assert!(txt.contains("rank    0 |"), "{}", txt);
         assert!(txt.contains('W'), "{}", txt);
         assert!(txt.contains('='), "{}", txt);
-        assert!(txt.contains("10.000s"), "span label: {}", txt);
+        assert!(txt.contains("10.0s"), "span label: {}", txt);
         // columns: [0,10) over 20 cols → 0.5s columns; wait spans [2,6)
         let lane: String = txt
             .lines()

@@ -16,7 +16,11 @@
 //!    other metric family via the `trace` channel spec
 //!    (`--channels ...,trace`, capacity option
 //!    `trace.max-events-per-rank=N`); when off, the hot path pays one
-//!    predictable branch.
+//!    predictable branch. When on, the channel **batches**: hook events
+//!    are mapped eagerly ([`TraceRecorder::map_event`]) into a small
+//!    staging buffer and flushed into the ring at region boundaries (or
+//!    when the stage fills), keeping the per-event hook cost flat while
+//!    producing a ring byte-identical to per-event recording.
 //! 2. **Merge + analysis** — [`RunTrace`] deterministically merges the
 //!    per-rank streams into a global timeline; [`waitstate::classify`]
 //!    derives Scalasca-style wait states (late sender, late receiver,

@@ -49,7 +49,12 @@ impl TraceRecorder {
         id
     }
 
-    fn push(&mut self, ev: TraceEvent) {
+    /// Append one already-mapped event, evicting the oldest when full.
+    /// Public so batching sinks ([`TraceChannel`](crate::caliper) staging
+    /// buffers) can flush pre-mapped events without re-dispatching; order
+    /// of `push` calls is exactly ring order, so a staged-then-flushed
+    /// stream is byte-identical to per-event recording.
+    pub fn push(&mut self, ev: TraceEvent) {
         if self.events.len() >= self.capacity {
             self.events.pop_front();
             self.dropped += 1;
@@ -71,6 +76,16 @@ impl TraceRecorder {
     /// `Recv` stamps and plain `Coll` events are skipped — the richer
     /// `RecvMatch` / `CollEpoch` trace variants carry their information.
     pub fn record(&mut self, ev: &MpiEvent) {
+        if let Some(mapped) = Self::map_event(ev) {
+            self.push(mapped);
+        }
+    }
+
+    /// The hook-event → trace-event mapping `record` applies, exposed so
+    /// staging sinks can map eagerly and flush later. Returns `None` for
+    /// events the trace stream deliberately skips (zero-duration `Recv`
+    /// stamps, plain `Coll` — see [`TraceRecorder::record`]).
+    pub fn map_event(ev: &MpiEvent) -> Option<TraceEvent> {
         let mapped = match ev {
             MpiEvent::Send {
                 dst,
@@ -164,9 +179,9 @@ impl TraceRecorder {
                 sync: *sync,
                 t_end: *t_end,
             },
-            MpiEvent::Recv { .. } | MpiEvent::Coll { .. } => return,
+            MpiEvent::Recv { .. } | MpiEvent::Coll { .. } => return None,
         };
-        self.push(mapped);
+        Some(mapped)
     }
 
     /// Seal the stream into a [`RankTrace`] (rank is stamped by the

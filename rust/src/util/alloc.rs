@@ -1,0 +1,65 @@
+//! A counting global allocator for the bench harness.
+//!
+//! `repro bench` reports *allocations per message* — the metric the arena
+//! work in `mpisim` is judged by — which requires counting heap traffic
+//! from inside the process. [`CountingAlloc`] wraps the system allocator
+//! and bumps two relaxed atomics per call; the overhead is one fetch_add
+//! on the allocation path, cheap enough to leave installed in the `repro`
+//! binary unconditionally. The library (and its test harness) does not
+//! install it, so `cargo test` measures nothing and pays nothing.
+//!
+//! Counters are process-global and monotone; callers measure a workload by
+//! differencing [`allocation_count`] snapshots taken around it (see
+//! `coordinator::bench`). That makes concurrent allocation from worker
+//! threads attributable only to "the whole program between snapshots" —
+//! fine for the bench harness, which quiesces between sections.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Heap allocations since process start (counts `alloc`, `alloc_zeroed`,
+/// and the growth side of `realloc`; frees are not events).
+pub fn allocation_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested from the heap since process start.
+pub fn allocated_bytes() -> u64 {
+    BYTES.load(Ordering::Relaxed)
+}
+
+/// System-allocator wrapper that counts calls and bytes. Install with
+/// `#[global_allocator]` in a *binary* crate root:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: commscope::util::alloc::CountingAlloc = commscope::util::alloc::CountingAlloc;
+/// ```
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

@@ -8,9 +8,9 @@
 //! everywhere at once.
 
 /// Format a duration in seconds with a unit that keeps 3–4 significant
-/// figures: `1h02m`, `2m05s`, `3.142s`, `245.1ms`, `12.40us`, `980ns`.
-/// Zero renders as `0s`; negatives are prefixed with `-`; non-finite
-/// inputs render as `?s`.
+/// figures: `1h02m`, `2m05s`, `59.9s`, `3.142s`, `245.1ms`, `12.40us`,
+/// `980ns`. Zero renders as `0s`; negatives are prefixed with `-`;
+/// non-finite inputs render as `?s`.
 pub fn fmt_duration(secs: f64) -> String {
     if !secs.is_finite() {
         return "?s".to_string();
@@ -35,10 +35,20 @@ pub fn fmt_duration(secs: f64) -> String {
         }
         return format!("{}m{:02}s", total_s / 60, total_s % 60);
     }
+    if secs >= 10.0 {
+        // Tenths keep 3 significant figures here; a span that rounds to
+        // 60.0 s must carry into the minute unit ("1m00s", not the
+        // "60.0s" this branch used to leak for 59.95–60 s spans).
+        let out = format!("{:.1}s", secs);
+        if out.starts_with("60.0") {
+            return fmt_duration(60.0);
+        }
+        return out;
+    }
     if secs >= 1.0 {
         let out = format!("{:.3}s", secs);
-        if out.starts_with("60.000") {
-            return fmt_duration(60.0);
+        if out.starts_with("10.000") {
+            return fmt_duration(10.0);
         }
         return out;
     }
@@ -92,14 +102,36 @@ mod tests {
     #[test]
     fn rounding_carries_promote_the_unit() {
         // values that round past their unit's cap must not render as
-        // "60m00s" / "60.000s" / "1000.0ms" / "1000.00us" / "1000ns"
+        // "60m00s" / "60.0s" / "10.000s" / "1000.0ms" / "1000.00us" /
+        // "1000ns"
         assert_eq!(fmt_duration(3599.7), "1h00m");
         assert_eq!(fmt_duration(59.9996), "1m00s");
+        assert_eq!(fmt_duration(9.99996), "10.0s");
         assert_eq!(fmt_duration(0.99996), "1.000s");
         assert_eq!(fmt_duration(0.000999996), "1.0ms");
         assert_eq!(fmt_duration(9.99996e-7), "1.00us");
         // just below the carry threshold stays in its unit
-        assert_eq!(fmt_duration(59.4), "59.400s");
+        assert_eq!(fmt_duration(59.4), "59.4s");
+        assert_eq!(fmt_duration(9.42), "9.420s");
         assert_eq!(fmt_duration(3500.0), "58m20s");
+    }
+
+    #[test]
+    fn carry_boundaries_at_s_m_h() {
+        // the PR 6 bug: 59.95–60 s spans rendered as "60.0s" instead of
+        // carrying into the minute unit
+        assert_eq!(fmt_duration(59.95), "1m00s");
+        assert_eq!(fmt_duration(59.94), "59.9s");
+        assert_eq!(fmt_duration(60.0), "1m00s");
+        assert_eq!(fmt_duration(60.4), "1m00s");
+        // exact unit boundaries land in the larger unit cleanly
+        assert_eq!(fmt_duration(10.0), "10.0s");
+        assert_eq!(fmt_duration(1.0), "1.000s");
+        // minute → hour carry: 3599.5+ rounds to 60 minutes
+        assert_eq!(fmt_duration(3599.5), "1h00m");
+        assert_eq!(fmt_duration(3599.4), "59m59s");
+        assert_eq!(fmt_duration(3600.0), "1h00m");
+        // hour formatting keeps its own carry sane
+        assert_eq!(fmt_duration(3600.0 * 24.0 - 1.0), "24h00m");
     }
 }

@@ -20,6 +20,7 @@
 //! - [`cache`]: a content-keyed result cache with hit/miss accounting
 //!   (experiment-cell deduplication).
 
+pub mod alloc;
 pub mod benchutil;
 pub mod cache;
 pub mod cli;
