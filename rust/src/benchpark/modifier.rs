@@ -68,7 +68,10 @@ pub fn default_variant(spec: &ExperimentSpec) -> CaliperVariant {
 /// every input that reaches the simulation: app, system, scaling, rank
 /// count, profiling variant, both shrink factors, and the metric-channel
 /// spec (a profile without the comm matrix must not satisfy a request
-/// that needs it).
+/// that needs it). `opts.engine` is deliberately excluded: engines are
+/// profile-equivalent by contract (`tests/engine_equivalence.rs`), so a
+/// threaded-era artifact may serve an event-engine campaign and vice
+/// versa.
 pub fn cell_key(spec: &ExperimentSpec, opts: &super::runner::RunOptions) -> String {
     format!(
         "{}|{}|{}|{}|{}|is{}|ss{}|ch{}",

@@ -12,7 +12,7 @@ use crate::apps::laghos::{run_laghos, LaghosConfig};
 use crate::apps::zmodel::{run_zmodel, ZmodelConfig};
 use crate::caliper::aggregate::{aggregate, check_conservation};
 use crate::caliper::{ChannelConfig, ChannelKind, RunProfile};
-use crate::mpisim::WorldConfig;
+use crate::mpisim::{Engine, WorldConfig};
 use crate::trace::RunTrace;
 
 /// Per-run knobs: fidelity shrink factors and the Caliper metric channels.
@@ -25,6 +25,12 @@ pub struct RunOptions {
     /// Metric channels the apps' Caliper contexts collect
     /// (`--channels` on the CLI; default = region times + comm stats).
     pub channels: ChannelConfig,
+    /// Execution engine for each cell's world (`--engine` on the CLI).
+    /// Deliberately NOT stamped into profile metadata or the cell cache
+    /// key: profiles are byte-identical across engines (gated by
+    /// `tests/engine_equivalence.rs`), so an event-engine campaign may
+    /// serve and be served by threaded-engine artifacts.
+    pub engine: Engine,
 }
 
 impl Default for RunOptions {
@@ -33,6 +39,7 @@ impl Default for RunOptions {
             iter_shrink: 1,
             size_shrink: 1,
             channels: ChannelConfig::default(),
+            engine: Engine::Threaded,
         }
     }
 }
@@ -95,7 +102,7 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
 pub fn run_cell_full(spec: &ExperimentSpec, opts: &RunOptions) -> Result<CellOutput> {
     opts.validate()?;
     let machine = spec.system.machine();
-    let world = WorldConfig::new(spec.nranks, machine);
+    let world = WorldConfig::new(spec.nranks, machine).with_engine(opts.engine);
     let variant = default_variant(spec);
 
     let (profiles, extra): (Vec<crate::caliper::RankProfile>, Vec<(&str, String)>) = match spec.app
@@ -206,6 +213,9 @@ pub fn run_cell_full(spec: &ExperimentSpec, opts: &RunOptions) -> Result<CellOut
     extra.push(("iter_shrink", opts.iter_shrink.to_string()));
     extra.push(("size_shrink", opts.size_shrink.to_string()));
     extra.push(("channels", opts.channels.spec_string()));
+    // `opts.engine` is intentionally absent: it does not shape the profile
+    // (engine equivalence), so stamping it would split the disk cache and
+    // break byte-identity checks across engines.
     let meta = run_metadata(spec, variant, &extra);
     // Lift the per-rank event streams off the profiles before aggregation
     // and fold the trace analyses (critical path, wait states) back into

@@ -64,6 +64,11 @@ pub struct BenchEntry {
     /// Heap allocations per message in a 2-rank eager ping-pong
     /// (0.0 when the counting allocator is not installed, e.g. in tests).
     pub allocs_per_message: f64,
+    /// Ranks simulated per wall-clock second on one
+    /// [`EVENT_BENCH_RANKS`]-rank AMG2023/Tioga cell under the
+    /// discrete-event engine — the scale metric behind `--extend-ranks`
+    /// campaigns. 0.0 in entries recorded before the event engine existed.
+    pub event_ranks_per_s: f64,
 }
 
 impl BenchEntry {
@@ -77,6 +82,7 @@ impl BenchEntry {
         j.set("events_per_s", self.events_per_s);
         j.set("ns_per_hook_dispatch", self.ns_per_hook_dispatch);
         j.set("allocs_per_message", self.allocs_per_message);
+        j.set("event_ranks_per_s", self.event_ranks_per_s);
         j
     }
 
@@ -90,6 +96,11 @@ impl BenchEntry {
             events_per_s: j.get("events_per_s")?.as_f64()?,
             ns_per_hook_dispatch: j.get("ns_per_hook_dispatch")?.as_f64()?,
             allocs_per_message: j.get("allocs_per_message")?.as_f64()?,
+            // Absent from entries committed before the event engine landed.
+            event_ranks_per_s: j
+                .get("event_ranks_per_s")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
         })
     }
 }
@@ -265,6 +276,31 @@ fn allocs_per_message(rounds: usize) -> f64 {
     (after - before) as f64 / messages
 }
 
+/// Rank count of the event-engine scale cell. Far past the smoke slice's
+/// 16-rank cap — that is the point: thread-per-rank spends its time in
+/// spawn/context-switch overhead there, the event engine does not.
+pub const EVENT_BENCH_RANKS: usize = 256;
+
+/// Event-engine scale metric: ranks simulated per wall-clock second on a
+/// single [`EVENT_BENCH_RANKS`]-rank AMG2023/Tioga cell run under the
+/// discrete-event scheduler (one worker — the deterministic default).
+/// One cold run, spawn cost included: that is what an `--extend-ranks`
+/// campaign actually pays per cell.
+fn event_ranks_per_s(run: &RunOptions) -> Result<f64> {
+    use crate::benchpark::experiment::Scaling;
+    let spec = crate::benchpark::ExperimentSpec {
+        app: crate::benchpark::AppKind::Amg2023,
+        system: crate::benchpark::SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: EVENT_BENCH_RANKS,
+    };
+    let mut opts = *run;
+    opts.engine = crate::mpisim::Engine::event();
+    let t0 = Instant::now();
+    run_cell_full(&spec, &opts).context("event-engine bench cell")?;
+    Ok(EVENT_BENCH_RANKS as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+
 /// Run the full suite and return one entry. `full` switches the smoke
 /// matrix to non-shrunk fidelity (the nightly configuration).
 pub fn run_suite(label: &str, full: bool, reps: usize) -> Result<BenchEntry> {
@@ -286,6 +322,11 @@ pub fn run_suite(label: &str, full: bool, reps: usize) -> Result<BenchEntry> {
     let trace_cost = per_event_cost("comm-stats,trace", &events, 5);
     eprintln!("bench: allocation counting ping-pong...");
     let apm = allocs_per_message(2000);
+    eprintln!(
+        "bench: event-engine scale cell ({} ranks)...",
+        EVENT_BENCH_RANKS
+    );
+    let erps = event_ranks_per_s(&run)?;
     Ok(BenchEntry {
         label: label.to_string(),
         smoke_cells_per_s_median: median,
@@ -295,6 +336,7 @@ pub fn run_suite(label: &str, full: bool, reps: usize) -> Result<BenchEntry> {
         events_per_s: 1.0 / trace_cost,
         ns_per_hook_dispatch: hook_cost * 1e9,
         allocs_per_message: apm,
+        event_ranks_per_s: erps,
     })
 }
 
@@ -303,18 +345,19 @@ pub fn run_suite(label: &str, full: bool, reps: usize) -> Result<BenchEntry> {
 pub fn render_report(entries: &[BenchEntry]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<24} {:>14} {:>14} {:>12} {:>14} {:>12}\n",
-        "label", "cells/s med", "cells/s p90", "Mevents/s", "ns/dispatch", "allocs/msg"
+        "{:<24} {:>14} {:>14} {:>12} {:>14} {:>12} {:>13}\n",
+        "label", "cells/s med", "cells/s p90", "Mevents/s", "ns/dispatch", "allocs/msg", "evt ranks/s"
     ));
     for e in entries {
         out.push_str(&format!(
-            "{:<24} {:>14.3} {:>14.3} {:>12.2} {:>14.1} {:>12.1}\n",
+            "{:<24} {:>14.3} {:>14.3} {:>12.2} {:>14.1} {:>12.1} {:>13.1}\n",
             e.label,
             e.smoke_cells_per_s_median,
             e.smoke_cells_per_s_p90,
             e.events_per_s / 1e6,
             e.ns_per_hook_dispatch,
-            e.allocs_per_message
+            e.allocs_per_message,
+            e.event_ranks_per_s
         ));
     }
     if entries.len() >= 2 {
@@ -422,6 +465,7 @@ mod tests {
             events_per_s: 1e7,
             ns_per_hook_dispatch: 25.0,
             allocs_per_message: 4.0,
+            event_ranks_per_s: 900.0,
         }
     }
 
@@ -434,6 +478,23 @@ mod tests {
         assert_eq!(back[0].label, "baseline");
         assert!((back[1].smoke_cells_per_s_median - 3.2).abs() < 1e-12);
         assert_eq!(back[1].smoke_cells, 6);
+        assert!((back[0].event_ranks_per_s - 900.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pre_event_engine_entries_parse_with_zero_ranks_per_s() {
+        // Entries committed before the event engine have no
+        // event_ranks_per_s field; they must still parse.
+        let mut j = entry("old", 1.0).to_json();
+        let Json::Obj(map) = &mut j else { unreachable!() };
+        map.remove("event_ranks_per_s");
+        let text = format!(
+            "{{\"schema\":\"{}\",\"entries\":[{}]}}",
+            BENCH_SCHEMA,
+            j.to_string_pretty()
+        );
+        let back = parse_bench_file(&text).unwrap();
+        assert_eq!(back[0].event_ranks_per_s, 0.0);
     }
 
     #[test]

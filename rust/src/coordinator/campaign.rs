@@ -39,6 +39,13 @@ pub struct CampaignOptions {
     pub system: Option<SystemId>,
     /// Restrict to rank counts ≤ this (for quick passes).
     pub max_ranks: Option<usize>,
+    /// Extra rank counts appended per selected (app, system) group beyond
+    /// the paper matrix's top rung (`--extend-ranks 1024,4096`). Values not
+    /// above the group's largest surviving cell are ignored, and extension
+    /// cells are exempt from `max_ranks` — this is how event-engine
+    /// campaigns push the fig8/fig9 scaling curves past thread-per-rank
+    /// scale.
+    pub extend_ranks: Vec<usize>,
     pub verbose: bool,
     /// Worker threads for the campaign executor (`--jobs N`; 1 = serial).
     pub jobs: usize,
@@ -52,20 +59,52 @@ impl CampaignOptions {
             app: None,
             system: None,
             max_ranks: None,
+            extend_ranks: Vec::new(),
             verbose: true,
             jobs: 1,
         }
     }
 }
 
-/// Which cells survive the filters.
+/// Which cells survive the filters, plus any `extend_ranks` extension
+/// cells grafted above each (app, system) group's top rung.
 pub fn selected_cells(opts: &CampaignOptions) -> Vec<ExperimentSpec> {
-    table3_matrix()
+    let mut cells: Vec<ExperimentSpec> = table3_matrix()
         .into_iter()
         .filter(|s| opts.app.map(|a| s.app == a).unwrap_or(true))
         .filter(|s| opts.system.map(|m| s.system == m).unwrap_or(true))
         .filter(|s| opts.max_ranks.map(|m| s.nranks <= m).unwrap_or(true))
-        .collect()
+        .collect();
+    if !opts.extend_ranks.is_empty() {
+        // Representative cell + top rank count per surviving (app, system)
+        // group; an extension cell inherits everything but `nranks` from
+        // the group's largest paper cell.
+        let mut tops: Vec<(ExperimentSpec, usize)> = Vec::new();
+        for c in &cells {
+            match tops
+                .iter()
+                .position(|(r, _)| r.app == c.app && r.system == c.system)
+            {
+                Some(i) => {
+                    if c.nranks > tops[i].1 {
+                        tops[i] = (*c, c.nranks);
+                    }
+                }
+                None => tops.push((*c, c.nranks)),
+            }
+        }
+        let mut wanted = opts.extend_ranks.clone();
+        wanted.sort_unstable();
+        wanted.dedup();
+        for (rep, top) in tops {
+            for &n in &wanted {
+                if n > top {
+                    cells.push(ExperimentSpec { nranks: n, ..rep });
+                }
+            }
+        }
+    }
+    cells
 }
 
 /// One cell that did not produce a profile.
@@ -508,6 +547,31 @@ mod tests {
         assert!(cells.iter().all(|c| c.app == AppKind::Kripke));
         opts.max_ranks = Some(16);
         assert_eq!(selected_cells(&opts).len(), 2);
+    }
+
+    #[test]
+    fn extend_ranks_grafts_cells_above_group_top() {
+        let mut opts = CampaignOptions::new("/tmp/x");
+        opts.app = Some(AppKind::Amg2023);
+        opts.system = Some(SystemId::Tioga);
+        let base = selected_cells(&opts);
+        let top = base.iter().map(|c| c.nranks).max().unwrap();
+        // `top` itself is not above the group's top rung → ignored;
+        // duplicates collapse.
+        opts.extend_ranks = vec![top * 8, top * 2, top, top * 2];
+        let cells = selected_cells(&opts);
+        assert_eq!(cells.len(), base.len() + 2);
+        let ext: Vec<usize> = cells[base.len()..].iter().map(|c| c.nranks).collect();
+        assert_eq!(ext, vec![top * 2, top * 8]);
+        assert!(cells[base.len()..]
+            .iter()
+            .all(|c| c.app == AppKind::Amg2023 && c.system == SystemId::Tioga));
+        // Extension cells are exempt from max_ranks (which bounds the
+        // paper cells for quick passes).
+        opts.max_ranks = Some(top / 2);
+        let capped = selected_cells(&opts);
+        assert!(capped.iter().any(|c| c.nranks == top * 8));
+        assert!(capped.iter().any(|c| c.nranks == top * 2));
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! repro campaign [--out results] [--app X] [--system Y] [--max-ranks N]
-//!                [--smoke] [--force] [--jobs N] [--channels SPEC]
+//!                [--extend-ranks N,M] [--smoke] [--force] [--jobs N]
+//!                [--channels SPEC] [--engine E]
 //!                                           run the Table III matrix
 //!                                           (N worker threads; default 1)
 //! repro table1|table2|table3                print static tables
@@ -38,14 +39,15 @@ on the commscope simulated stack.
 
 USAGE:
   repro campaign [--out results] [--app APP] [--system SYS]
-                 [--max-ranks N] [--smoke] [--force] [--jobs N]
-                 [--channels SPEC]
+                 [--max-ranks N] [--extend-ranks N,M] [--smoke] [--force]
+                 [--jobs N] [--channels SPEC] [--engine E]
   repro table1 | table2 | table3
   repro table4 [--out results]
   repro fig1 | ... | fig9  [--out results]
   repro heatmap [--out results]
   repro trace [--out results] [--cell ID] [--width N]
   repro run --app APP --system SYS --ranks N [--smoke] [--channels SPEC]
+            [--engine E]
   repro report --profile FILE.json
   repro bench [--json BENCH_v1.json] [--label L] [--append] [--check]
               [--report FILE] [--reps N] [--full]
@@ -73,11 +75,24 @@ event-level JSONL trace under <out>/traces; `repro trace` renders its
 ASCII Gantt timeline, wait-state classification (late sender / late
 receiver / wait-at-collective), and region-attributed critical path, and
 `repro fig9` plots per-region critical-path share vs. rank count.
+`--engine E` picks the execution engine, E ∈ {threaded, event, event:N}:
+`threaded` (default) runs one OS thread per simulated rank; `event` runs
+the discrete-event scheduler (ranks park when they would block, a virtual-
+clock run queue multiplexes them over N workers — `event` alone means
+N=1). Profiles and traces are byte-identical across engines; the event
+engine exists to reach rank counts (4k–100k) where thread-per-rank dies,
+and turns hangs into exact deadlock reports (blocked-rank cycle) instead
+of wall-clock timeouts.
+`--extend-ranks N,M` (campaign) grafts extra rank counts above each
+selected (app, system) group's largest paper cell — e.g.
+`--engine event --extend-ranks 1024,4096` extends the fig8/fig9 scaling
+curves beyond the Table III matrix.
 `repro bench` runs the performance suite (smoke-matrix cell throughput,
-hook dispatch, trace capture, allocations per message) and maintains the
-schema-versioned BENCH_v1.json trajectory; `--check` is the CI perf gate
-(fails on a >15% median-throughput drop vs. the committed baseline),
-`--full` uses non-shrunk fidelity (the nightly configuration).
+event-engine ranks/s, hook dispatch, trace capture, allocations per
+message) and maintains the schema-versioned BENCH_v1.json trajectory;
+`--check` is the CI perf gate (fails on a >15% median-throughput drop vs.
+the committed baseline), `--full` uses non-shrunk fidelity (the nightly
+configuration).
 APP ∈ {amg2023, kripke, laghos, zmodel}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
@@ -100,6 +115,10 @@ fn run_options(args: &Args) -> anyhow::Result<RunOptions> {
     if let Some(spec) = args.get("channels") {
         opts.channels = crate::caliper::ChannelConfig::parse(spec)
             .map_err(|e| anyhow::anyhow!("--channels: {}", e))?;
+    }
+    if let Some(engine) = args.get("engine") {
+        opts.engine = crate::mpisim::Engine::parse(engine)
+            .ok_or_else(|| anyhow::anyhow!("--engine: '{}' (threaded|event|event:N)", engine))?;
     }
     Ok(opts)
 }
@@ -125,6 +144,15 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             }
             if let Some(m) = args.get("max-ranks") {
                 opts.max_ranks = Some(m.parse()?);
+            }
+            if let Some(list) = args.get("extend-ranks") {
+                for part in list.split(',') {
+                    let n: usize = part
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--extend-ranks: bad count '{}'", part))?;
+                    opts.extend_ranks.push(n);
+                }
             }
             let (t, report) = run_campaign_report(&opts, args.has("force"))?;
             println!(

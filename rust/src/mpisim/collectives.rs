@@ -65,6 +65,24 @@ struct CollSlot {
     max_entry: f64,
     contribs: Vec<Option<Box<[u8]>>>,
     result: Option<Arc<[u8]>>,
+    /// World ranks that entered before the last arriver — the event
+    /// engine's wake set (threaded members sleep on the board condvar and
+    /// ignore it).
+    waiters: Vec<usize>,
+}
+
+/// Outcome of a non-blocking collective entry ([`CollBoard::enter`]).
+pub enum Enter {
+    /// This caller was the last arriver: the reduction ran and the shared
+    /// result is final. `wake` holds the world ranks that entered earlier
+    /// and may be parked waiting on [`CollBoard::try_result`].
+    Done {
+        result: Arc<[u8]>,
+        max_entry: f64,
+        wake: Vec<usize>,
+    },
+    /// Contribution recorded; the slot still waits for other members.
+    Pending,
 }
 
 /// The process-wide board shared by all ranks of a `World`.
@@ -79,7 +97,102 @@ impl CollBoard {
         Self::default()
     }
 
-    /// Execute one collective instance from the calling rank's perspective.
+    /// Deposit one member's contribution without blocking. Both engines
+    /// are built on this single entry path — the threaded
+    /// [`CollBoard::run`] and the event engine's park/wake loop — so
+    /// mismatch detection and leave accounting are engine-invariant.
+    ///
+    /// The last arriver runs `finalize` inline, publishes the result,
+    /// counts its own leave, and receives the wake set; earlier arrivers
+    /// get [`Enter::Pending`] and must take the result later through
+    /// [`CollBoard::try_result`] (event engine) or the condvar wait in
+    /// [`CollBoard::run`] (threaded).
+    #[allow(clippy::too_many_arguments)]
+    pub fn enter(
+        &self,
+        key: (u32, u64),
+        kind: &'static str,
+        comm_size: usize,
+        my_idx: usize,
+        my_world_rank: usize,
+        entry_time: f64,
+        contrib: Box<[u8]>,
+        finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
+    ) -> Result<Enter, MpiError> {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = slots.entry(key).or_insert_with(|| CollSlot {
+            kind,
+            expected: comm_size,
+            arrived: 0,
+            left: 0,
+            max_entry: f64::NEG_INFINITY,
+            contribs: (0..comm_size).map(|_| None).collect(),
+            result: None,
+            waiters: Vec::new(),
+        });
+        if slot.kind != kind {
+            return Err(MpiError::CollectiveMismatch {
+                ctx: key.0,
+                seq: key.1,
+                rank: my_world_rank,
+                called: kind,
+                expected: slot.kind,
+            });
+        }
+        debug_assert!(slot.contribs[my_idx].is_none(), "rank entered twice");
+        slot.contribs[my_idx] = Some(contrib);
+        slot.arrived += 1;
+        if entry_time > slot.max_entry {
+            slot.max_entry = entry_time;
+        }
+        if slot.arrived < slot.expected {
+            slot.waiters.push(my_world_rank);
+            return Ok(Enter::Pending);
+        }
+        // Last arriver: reduce, publish, count our own leave.
+        let result: Arc<[u8]> = Arc::from(finalize(&mut slot.contribs));
+        slot.result = Some(result.clone());
+        let max_entry = slot.max_entry;
+        let wake = std::mem::take(&mut slot.waiters);
+        slot.left += 1;
+        if slot.left == slot.expected {
+            slots.remove(&key);
+        }
+        drop(slots);
+        // Threaded members sleep on the board condvar; event members are
+        // woken by the caller through the scheduler's wake set.
+        self.cv.notify_all();
+        Ok(Enter::Done {
+            result,
+            max_entry,
+            wake,
+        })
+    }
+
+    /// Nonblocking result take: `Some((result, max_entry))` once the slot
+    /// is finalized. One successful call = one member leaving; the last
+    /// leaver removes the slot. The event engine's poll-and-park probe.
+    pub fn try_result(&self, key: (u32, u64)) -> Option<(Arc<[u8]>, f64)> {
+        let mut slots = self.slots.lock().unwrap();
+        Self::take_result_locked(&mut slots, key)
+    }
+
+    fn take_result_locked(
+        slots: &mut HashMap<(u32, u64), CollSlot>,
+        key: (u32, u64),
+    ) -> Option<(Arc<[u8]>, f64)> {
+        let slot = slots.get_mut(&key)?;
+        let result = slot.result.clone()?;
+        let max_entry = slot.max_entry;
+        slot.left += 1;
+        if slot.left == slot.expected {
+            slots.remove(&key);
+        }
+        Some((result, max_entry))
+    }
+
+    /// Execute one collective instance from the calling rank's perspective
+    /// (threaded engine: condvar-blocking over [`CollBoard::enter`]).
     ///
     /// `finalize` runs exactly once (on the last-arriving rank) over all
     /// contributions (indexed by communicator rank) and produces the shared
@@ -98,55 +211,30 @@ impl CollBoard {
         timeout: Duration,
     ) -> Result<(Arc<[u8]>, f64), MpiError> {
         let deadline = Instant::now() + timeout;
-        let mut slots = self.slots.lock().unwrap();
-        {
-            let slot = slots.entry(key).or_insert_with(|| CollSlot {
-                kind,
-                expected: comm_size,
-                arrived: 0,
-                left: 0,
-                max_entry: f64::NEG_INFINITY,
-                contribs: (0..comm_size).map(|_| None).collect(),
-                result: None,
-            });
-            if slot.kind != kind {
-                return Err(MpiError::CollectiveMismatch {
-                    ctx: key.0,
-                    seq: key.1,
-                    rank: my_world_rank,
-                    called: kind,
-                    expected: slot.kind,
-                });
-            }
-            debug_assert!(slot.contribs[my_idx].is_none(), "rank entered twice");
-            slot.contribs[my_idx] = Some(contrib);
-            slot.arrived += 1;
-            if entry_time > slot.max_entry {
-                slot.max_entry = entry_time;
-            }
-            if slot.arrived == slot.expected {
-                let result = finalize(&mut slot.contribs);
-                slot.result = Some(Arc::from(result));
-                self.cv.notify_all();
-            }
+        match self.enter(
+            key,
+            kind,
+            comm_size,
+            my_idx,
+            my_world_rank,
+            entry_time,
+            contrib,
+            finalize,
+        )? {
+            Enter::Done {
+                result, max_entry, ..
+            } => return Ok((result, max_entry)),
+            Enter::Pending => {}
         }
-        // Wait for completion.
+        // Wait (real time, deadlock-guarded) for the last arriver.
+        let mut slots = self.slots.lock().unwrap();
         loop {
-            {
-                let slot = slots.get(&key).expect("collective slot vanished");
-                if let Some(result) = &slot.result {
-                    let out = (result.clone(), slot.max_entry);
-                    let slot = slots.get_mut(&key).unwrap();
-                    slot.left += 1;
-                    if slot.left == slot.expected {
-                        slots.remove(&key);
-                    }
-                    return Ok(out);
-                }
+            if let Some(out) = Self::take_result_locked(&mut slots, key) {
+                return Ok(out);
             }
             let now = Instant::now();
             if now >= deadline {
-                let slot = slots.get(&key).unwrap();
+                let slot = slots.get(&key).expect("collective slot vanished");
                 return Err(MpiError::CollectiveTimeout {
                     rank: my_world_rank,
                     kind,
@@ -321,6 +409,58 @@ mod tests {
             }
             other => panic!("unexpected {:?}", other),
         }
+    }
+
+    #[test]
+    fn enter_and_try_result_complete_without_blocking() {
+        let board = CollBoard::new();
+        assert!(board.try_result((0, 0)).is_none(), "no slot yet");
+        let e = board
+            .enter(
+                (0, 0),
+                "gather",
+                2,
+                0,
+                0,
+                1.0,
+                vec![1].into_boxed_slice(),
+                &frame_concat,
+            )
+            .unwrap();
+        assert!(matches!(e, Enter::Pending));
+        assert!(board.try_result((0, 0)).is_none(), "not finalized yet");
+        let e = board
+            .enter(
+                (0, 0),
+                "gather",
+                2,
+                1,
+                1,
+                3.0,
+                vec![2].into_boxed_slice(),
+                &frame_concat,
+            )
+            .unwrap();
+        let Enter::Done {
+            result,
+            max_entry,
+            wake,
+        } = e
+        else {
+            panic!("last arriver must finalize");
+        };
+        assert_eq!(max_entry, 3.0);
+        assert_eq!(wake, vec![0], "earlier arrivers form the wake set");
+        assert_eq!(frame_split(&result), vec![vec![1], vec![2]]);
+        // the parked member leaves through try_result; the slot cleans up
+        let (r2, m2) = board.try_result((0, 0)).unwrap();
+        assert_eq!(m2, 3.0);
+        assert_eq!(&*r2, &*result);
+        assert!(
+            board.try_result((0, 0)).is_none(),
+            "slot removed after the last leave"
+        );
+        assert!(board.slots.lock().unwrap().is_empty());
     }
 
     #[test]

@@ -52,6 +52,15 @@ pub enum MpiError {
         millis: u64,
     },
 
+    /// Exact deadlock, detected by the event engine: no task was runnable
+    /// and the run queue was empty while unfinished ranks remained, so no
+    /// future completion could exist. `summary` is the deterministic
+    /// report from `sched::deadlock` (every parked rank with its request
+    /// kind, plus the wait-for cycle). The threaded engine can only
+    /// approximate this with the wall-clock timeout variants above.
+    #[error("deadlock detected at rank {rank}: {summary}")]
+    Deadlock { rank: usize, summary: String },
+
     #[error("payload size {got} bytes does not decode to element type of size {elem}")]
     PayloadSizeMismatch { got: usize, elem: usize },
 

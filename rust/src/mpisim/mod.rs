@@ -44,6 +44,12 @@
 //!   bit-identical replay of the model, computed once per shape. None of
 //!   these change any virtual timestamp; `repro bench --check` gates the
 //!   throughput they buy.
+//! - **Two execution engines** ([`sched`]): the default `Threaded` engine
+//!   gives every rank a free-running OS thread; the `Event` engine
+//!   multiplexes rank tasks over a fixed worker pool in virtual-clock
+//!   order, scaling worlds to tens of thousands of ranks and detecting
+//!   deadlock exactly. Profiles and traces are byte-identical across
+//!   engines — select per world with `WorldConfig::with_engine`.
 
 pub mod cart;
 pub mod clock;
@@ -55,6 +61,7 @@ pub mod hooks;
 pub mod netmodel;
 pub mod p2p;
 pub mod request;
+pub mod sched;
 pub mod world;
 
 pub use cart::CartComm;
@@ -65,6 +72,7 @@ pub use error::MpiError;
 pub use hooks::{CollKind, MpiEvent, MpiHook};
 pub use netmodel::{ComputeParams, GroupSpan, MachineModel, NetParams};
 pub use request::{Protocol, RecvRequest, Request, SendRequest, Status};
+pub use sched::Engine;
 pub use world::{Rank, World, WorldConfig};
 
 /// Wildcard tag for receives.

@@ -333,6 +333,20 @@ impl Mailbox {
         }
     }
 
+    /// Nonblocking variant of [`Mailbox::match_recv_nth`]: remove and
+    /// return the `skip`-th matching envelope if one is queued, `None`
+    /// otherwise. The event engine's poll-and-park receive path — the
+    /// scheduler, not a condvar, decides when to retry.
+    pub fn try_match_nth(
+        &self,
+        src: Option<usize>,
+        tag: i32,
+        ctx: u32,
+        skip: usize,
+    ) -> Option<Envelope> {
+        self.try_take(src, tag, ctx, skip)
+    }
+
     fn matches(e: &Envelope, src: Option<usize>, tag: i32, ctx: u32) -> bool {
         e.ctx == ctx
             && (tag == ANY_TAG || e.tag == tag)
@@ -562,6 +576,20 @@ mod tests {
         assert_eq!(mb.pending_posted_before(b, Some(1), 7, 0), 1);
         assert_eq!(mb.pending_posted_before(a, Some(1), 7, 0), 0);
         assert_eq!(mb.pending_posted_before(c, Some(1), 8, 0), 0);
+    }
+
+    #[test]
+    fn try_match_nth_is_nonblocking() {
+        let mb = Mailbox::new();
+        assert!(mb.try_match_nth(Some(1), 7, 0, 0).is_none());
+        mb.deposit(env(1, 7, 0, 1.0));
+        mb.deposit(env(1, 7, 0, 2.0));
+        assert!(mb.try_match_nth(Some(1), 7, 0, 2).is_none(), "skip past end");
+        let e = mb.try_match_nth(Some(1), 7, 0, 1).unwrap();
+        assert_eq!(e.sender_ready, 2.0, "skip=1 takes the second match");
+        let e = mb.try_match_nth(Some(1), 7, 0, 0).unwrap();
+        assert_eq!(e.sender_ready, 1.0);
+        assert_eq!(mb.pending(), 0);
     }
 
     #[test]

@@ -70,9 +70,15 @@ impl SendCell {
         self.cv.notify_all();
     }
 
+    /// Nonblocking read of the completion time — the event engine's
+    /// poll-and-park probe (the scheduler decides when to retry).
+    pub fn poll(&self) -> Option<f64> {
+        *self.state.lock().unwrap()
+    }
+
     /// Nonblocking completion probe.
     pub fn is_complete(&self) -> bool {
-        self.state.lock().unwrap().is_some()
+        self.poll().is_some()
     }
 
     /// Block (real time) until completed; `None` on timeout (deadlock
@@ -219,8 +225,10 @@ mod tests {
         };
         assert_eq!(r.protocol(), Protocol::Rendezvous);
         assert!(!r.test(), "pending until the receiver matches");
+        assert_eq!(cell.poll(), None);
         cell.complete(2.5);
         assert!(r.test());
+        assert_eq!(cell.poll(), Some(2.5));
         assert_eq!(cell.wait(Duration::from_secs(1)), Some(2.5));
         // the first completion wins
         cell.complete(9.0);

@@ -1,0 +1,229 @@
+//! Exact deadlock detection for the event engine.
+//!
+//! The threaded engine can only *guess* at deadlock: every blocking site
+//! carries a wall-clock timeout (`SendTimeout`/`RecvTimeout`/
+//! `CollectiveTimeout`) and a stuck world burns the full guard interval
+//! before failing, with each rank blaming whatever it happened to be
+//! waiting on. The event engine *knows*: when no task is runnable and the
+//! run queue is empty while unfinished tasks remain, no future completion
+//! can possibly materialize — every parked task is waiting on an event
+//! that only another parked (or already finished) task could produce.
+//!
+//! This module renders that state as a deterministic report: every parked
+//! task in rank order with its request kind and peers, plus the wait-for
+//! cycle (or chain, when the dependence dead-ends in a rank that already
+//! exited) walked from the lowest blocked rank. The report is a pure
+//! function of the blocked set, so the same deadlock always produces the
+//! same string — assertable in tests, diffable across runs.
+
+use std::fmt;
+
+/// Why a task parked: the request it is blocked on, carried into the
+/// scheduler at park time and consumed by the deadlock report.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum BlockInfo {
+    /// Waiting for a matching envelope (`src = None` is ANY_SOURCE).
+    Recv {
+        src: Option<usize>,
+        tag: i32,
+        ctx: u32,
+    },
+    /// Rendezvous send waiting for `dst` to match a posted receive.
+    SendRdv { dst: usize, tag: i32, ctx: u32 },
+    /// Collective slot still waiting for members.
+    Coll {
+        kind: &'static str,
+        ctx: u32,
+        seq: u64,
+        comm_size: usize,
+    },
+    /// `waitany` progress wait over a mixed request set.
+    WaitAny { n_reqs: usize },
+}
+
+impl BlockInfo {
+    /// The single peer this wait depends on, when there is one — the
+    /// wait-for edge the cycle walk follows. Collectives and `waitany`
+    /// depend on sets, not a single rank, so they terminate the walk.
+    fn waits_on(&self) -> Option<usize> {
+        match self {
+            BlockInfo::Recv { src, .. } => *src,
+            BlockInfo::SendRdv { dst, .. } => Some(*dst),
+            BlockInfo::Coll { .. } | BlockInfo::WaitAny { .. } => None,
+        }
+    }
+}
+
+impl fmt::Display for BlockInfo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BlockInfo::Recv {
+                src: Some(s),
+                tag,
+                ctx,
+            } => write!(f, "recv(src={} tag={} ctx={})", s, tag, ctx),
+            BlockInfo::Recv {
+                src: None,
+                tag,
+                ctx,
+            } => write!(f, "recv(src=ANY tag={} ctx={})", tag, ctx),
+            BlockInfo::SendRdv { dst, tag, ctx } => {
+                write!(f, "rendezvous-send(dst={} tag={} ctx={})", dst, tag, ctx)
+            }
+            BlockInfo::Coll {
+                kind,
+                ctx,
+                seq,
+                comm_size,
+            } => write!(
+                f,
+                "collective {}(ctx={} seq={} comm_size={})",
+                kind, ctx, seq, comm_size
+            ),
+            BlockInfo::WaitAny { n_reqs } => write!(f, "waitany({} requests)", n_reqs),
+        }
+    }
+}
+
+/// Render the deterministic deadlock report over the parked set
+/// (`blocked[rank]` is `Some` iff `rank` is parked): every parked task in
+/// rank order, then the wait-for walk from the lowest blocked rank —
+/// labeled a *cycle* when it bites its own tail, a *chain* when it
+/// dead-ends (peer finished, or the wait has no single-peer edge).
+pub(crate) fn deadlock_report(blocked: &[Option<BlockInfo>]) -> String {
+    use std::fmt::Write;
+    let stuck: Vec<(usize, &BlockInfo)> = blocked
+        .iter()
+        .enumerate()
+        .filter_map(|(r, b)| b.as_ref().map(|b| (r, b)))
+        .collect();
+    let mut out = String::new();
+    let _ = write!(out, "{} task(s) parked with no runnable task", stuck.len());
+    for (r, b) in &stuck {
+        let _ = write!(out, "; rank {} blocked in {}", r, b);
+    }
+    let Some(&(start, _)) = stuck.first() else {
+        return out;
+    };
+    let mut chain = vec![start];
+    let mut cur = start;
+    loop {
+        let next = match blocked[cur].as_ref().and_then(|b| b.waits_on()) {
+            Some(n) if n < blocked.len() => n,
+            _ => break,
+        };
+        if let Some(pos) = chain.iter().position(|&r| r == next) {
+            let cycle: Vec<String> = chain[pos..].iter().map(|r| r.to_string()).collect();
+            let _ = write!(
+                out,
+                "; wait-for cycle: {} -> {}",
+                cycle.join(" -> "),
+                next
+            );
+            return out;
+        }
+        chain.push(next);
+        if blocked[next].is_none() {
+            let links: Vec<String> = chain.iter().map(|r| r.to_string()).collect();
+            let _ = write!(
+                out,
+                "; wait-for chain: {} (rank {} is not blocked)",
+                links.join(" -> "),
+                next
+            );
+            return out;
+        }
+        cur = next;
+    }
+    if chain.len() > 1 {
+        let links: Vec<String> = chain.iter().map(|r| r.to_string()).collect();
+        let _ = write!(out, "; wait-for chain: {}", links.join(" -> "));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_send_cycle_is_named() {
+        let blocked = vec![
+            Some(BlockInfo::SendRdv {
+                dst: 1,
+                tag: 0,
+                ctx: 0,
+            }),
+            Some(BlockInfo::SendRdv {
+                dst: 0,
+                tag: 0,
+                ctx: 0,
+            }),
+        ];
+        let r = deadlock_report(&blocked);
+        assert!(r.contains("2 task(s) parked"), "{}", r);
+        assert!(r.contains("rank 0 blocked in rendezvous-send(dst=1"), "{}", r);
+        assert!(r.contains("wait-for cycle: 0 -> 1 -> 0"), "{}", r);
+    }
+
+    #[test]
+    fn finished_partner_renders_as_chain() {
+        let blocked = vec![
+            None,
+            Some(BlockInfo::Recv {
+                src: Some(0),
+                tag: 9,
+                ctx: 0,
+            }),
+        ];
+        let r = deadlock_report(&blocked);
+        assert!(r.contains("rank 1 blocked in recv(src=0 tag=9"), "{}", r);
+        assert!(
+            r.contains("wait-for chain: 1 -> 0 (rank 0 is not blocked)"),
+            "{}",
+            r
+        );
+    }
+
+    #[test]
+    fn collective_waits_have_no_edge() {
+        let blocked = vec![
+            Some(BlockInfo::Coll {
+                kind: "barrier",
+                ctx: 0,
+                seq: 3,
+                comm_size: 4,
+            }),
+            Some(BlockInfo::WaitAny { n_reqs: 2 }),
+        ];
+        let r = deadlock_report(&blocked);
+        assert!(r.contains("collective barrier(ctx=0 seq=3 comm_size=4)"), "{}", r);
+        assert!(r.contains("waitany(2 requests)"), "{}", r);
+        assert!(!r.contains("cycle"), "{}", r);
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let blocked = vec![
+            Some(BlockInfo::Recv {
+                src: Some(2),
+                tag: 1,
+                ctx: 0,
+            }),
+            Some(BlockInfo::Recv {
+                src: Some(0),
+                tag: 1,
+                ctx: 0,
+            }),
+            Some(BlockInfo::Recv {
+                src: Some(1),
+                tag: 1,
+                ctx: 0,
+            }),
+        ];
+        let a = deadlock_report(&blocked);
+        let b = deadlock_report(&blocked);
+        assert_eq!(a, b);
+        assert!(a.contains("wait-for cycle: 0 -> 2 -> 1 -> 0"), "{}", a);
+    }
+}

@@ -1,0 +1,119 @@
+//! `sched` — the discrete-event rank scheduler (the event engine).
+//!
+//! The threaded engine gives every simulated rank a free-running OS thread;
+//! blocking operations sleep on condvars guarded by wall-clock timeouts.
+//! That is simple and fast at paper scale (tens to hundreds of ranks), but
+//! it caps campaigns at whatever thread count the host tolerates *running
+//! concurrently*, and it can only guess at deadlock.
+//!
+//! The event engine keeps one OS thread per rank as the task's *stack*, but
+//! hands control of execution to a central [`Scheduler`]: at most `workers`
+//! tasks run at any moment, dispatched from a virtual-clock-ordered run
+//! queue (earliest virtual time first, rank index breaking ties). A rank
+//! **parks** whenever it would block — an unmatched receive, a rendezvous
+//! handshake, a collective still waiting for members, a `waitany` with no
+//! completable request — and is re-enqueued when the completion it is
+//! waiting for materializes (a deposit into its mailbox, its rendezvous
+//! cell written, its collective finalized). Parked threads cost memory
+//! only, so worlds of tens of thousands of ranks fit on one box.
+//!
+//! Three properties make the engines interchangeable:
+//!
+//! - **Virtual stamps are schedule-independent.** Arrival math lives in the
+//!   mailbox/cell/board state (`p2p`, `request`, `collectives`), not in who
+//!   ran when; wake times only *order* the run queue. A profile or trace
+//!   produced under either engine — or any worker count — is byte-identical
+//!   (`rust/tests/engine_equivalence.rs` gates this across the smoke
+//!   matrix).
+//! - **No lost wakeups.** A wake targeting a running task sets a
+//!   pending-wake mark that the task's next park consumes (eventcount
+//!   protocol); a wake targeting a parked task re-enqueues it. Park callers
+//!   always re-check their condition in a loop, so spurious wakes are
+//!   harmless.
+//! - **Exact deadlock detection.** When no task is runnable and the run
+//!   queue is empty while tasks remain, *no future completion can exist* —
+//!   the scheduler builds a deterministic report (every parked task in rank
+//!   order plus the wait-for cycle) and fails every parked task with
+//!   `MpiError::Deadlock`, replacing the threaded engine's wall-clock
+//!   `SendTimeout`/`RecvTimeout` guesswork.
+//!
+//! Select the engine per world with `WorldConfig::with_engine`; the
+//! threaded path remains the default and the migration oracle.
+
+mod deadlock;
+mod queue;
+mod scheduler;
+
+pub(crate) use deadlock::BlockInfo;
+pub(crate) use scheduler::{Scheduler, TaskGuard, ABORT_SENTINEL};
+
+/// Execution engine for a `World`: how simulated ranks are multiplexed
+/// onto OS threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// One free-running OS thread per rank; blocking operations sleep on
+    /// condvars with wall-clock deadlock guards. The default, and the
+    /// migration oracle the event engine is validated against.
+    #[default]
+    Threaded,
+    /// Cooperative discrete-event scheduling: at most `workers` rank tasks
+    /// run concurrently, dispatched in virtual-clock order; blocked tasks
+    /// park until their completion materializes. Scales to tens of
+    /// thousands of ranks per world and detects deadlock exactly.
+    Event {
+        /// Concurrent task budget. `1` serializes the whole world into one
+        /// deterministic schedule; more workers add wall-clock parallelism
+        /// without changing any virtual result.
+        workers: usize,
+    },
+}
+
+impl Engine {
+    /// The event engine at its deterministic default (one worker).
+    pub fn event() -> Engine {
+        Engine::Event { workers: 1 }
+    }
+
+    /// Parse a CLI spelling: `threaded`, `event`, or `event:<workers>`.
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "threaded" => Some(Engine::Threaded),
+            "event" => Some(Engine::event()),
+            _ => {
+                let w = s.strip_prefix("event:")?.parse::<usize>().ok()?;
+                (w >= 1).then_some(Engine::Event { workers: w })
+            }
+        }
+    }
+
+    /// Canonical spelling (inverse of [`Engine::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Engine::Threaded => "threaded".to_string(),
+            Engine::Event { workers: 1 } => "event".to_string(),
+            Engine::Event { workers } => format!("event:{}", workers),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for s in ["threaded", "event", "event:4"] {
+            let e = Engine::parse(s).unwrap();
+            assert_eq!(e.name(), s);
+        }
+        assert_eq!(Engine::parse("event:1"), Some(Engine::event()));
+        assert!(Engine::parse("event:0").is_none(), "zero workers rejected");
+        assert!(Engine::parse("fibers").is_none());
+        assert!(Engine::parse("event:").is_none());
+    }
+
+    #[test]
+    fn default_is_threaded() {
+        assert_eq!(Engine::default(), Engine::Threaded);
+    }
+}

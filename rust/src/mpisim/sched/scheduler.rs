@@ -1,0 +1,510 @@
+//! The cooperative scheduler: admission control, park/wake, and the
+//! exactness check that turns "nothing can run" into a deadlock report.
+//!
+//! Each rank keeps its OS thread as its *stack* (rank bodies are plain
+//! synchronous Rust, deeply recursive app code included); the scheduler
+//! only controls *when* each thread runs. A task is in one of four states:
+//!
+//! ```text
+//!             dispatch                    park(info)
+//!   Queued ─────────────▶ Running ─────────────────────▶ Blocked
+//!     ▲                     │   ▲                           │
+//!     │                     │   └── pending-wake consumed ──┤
+//!     │                   finish                            │
+//!     │                     ▼                 wake(t)       │
+//!     └──────────────── Finished          (re-enqueue @ t) ─┘
+//! ```
+//!
+//! At most `workers` tasks are `Running`; the rest wait on their private
+//! slot condvar. `dispatch` fills free worker slots from the run queue in
+//! virtual-time order. Wakes never get lost: a wake for a `Running` task
+//! sets its pending-wake mark, which the task's next `park` consumes by
+//! returning immediately (the caller re-checks its condition in a loop).
+//!
+//! Lock order is strictly `inner` → `slot` (a slot is only ever signaled
+//! while holding `inner`, or lock-free of it in `abort`); a parking thread
+//! sleeps on its slot *after* releasing `inner`, so the two levels never
+//! deadlock against each other.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::super::error::MpiError;
+use super::deadlock::{deadlock_report, BlockInfo};
+use super::queue::RunQueue;
+
+/// Panic payload injected into tasks when a sibling rank panics: the world
+/// is tearing down, and these secondary unwinds must not be mistaken for
+/// the root cause (`World::run` prefers any non-sentinel panic message
+/// when it propagates).
+pub(crate) const ABORT_SENTINEL: &str = "__mpisim_event_abort__";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TaskState {
+    /// In the run queue, waiting for a worker slot.
+    Queued,
+    /// Admitted; its thread owns one of the `workers` slots.
+    Running,
+    /// Parked on a [`BlockInfo`]; not counted against the worker budget.
+    Blocked,
+    /// Returned; its slot is free forever.
+    Finished,
+}
+
+/// Per-task wake flag paired with a condvar: the only thing a descheduled
+/// thread blocks on.
+struct TaskSlot {
+    runnable: Mutex<bool>,
+    cv: Condvar,
+}
+
+struct Inner {
+    runq: RunQueue,
+    state: Vec<TaskState>,
+    /// `Some(info)` iff the task is `Blocked` — the deadlock report input.
+    blocked: Vec<Option<BlockInfo>>,
+    /// Wake arrived while the task was `Running`; its next `park` returns
+    /// immediately so the caller re-checks its condition.
+    pending_wake: Vec<bool>,
+    running: usize,
+    finished: usize,
+    aborted: bool,
+    /// Set once when the exactness check fires; every parked task returns
+    /// this shared report as `MpiError::Deadlock`.
+    deadlock: Option<Arc<String>>,
+}
+
+/// The event engine's scheduler: one per `World::run` on
+/// `Engine::Event`, shared by every rank task of that world.
+pub(crate) struct Scheduler {
+    size: usize,
+    workers: usize,
+    inner: Mutex<Inner>,
+    slots: Vec<TaskSlot>,
+}
+
+impl Scheduler {
+    /// Build the scheduler with every task enqueued at virtual time 0 and
+    /// the first `workers` already dispatched (their threads start running
+    /// the moment they call [`Scheduler::admit`]).
+    pub fn new(size: usize, workers: usize) -> Scheduler {
+        let workers = workers.max(1);
+        let mut runq = RunQueue::new();
+        for r in 0..size {
+            runq.push(0.0, r);
+        }
+        let sched = Scheduler {
+            size,
+            workers,
+            inner: Mutex::new(Inner {
+                runq,
+                state: vec![TaskState::Queued; size],
+                blocked: (0..size).map(|_| None).collect(),
+                pending_wake: vec![false; size],
+                running: 0,
+                finished: 0,
+                aborted: false,
+                deadlock: None,
+            }),
+            slots: (0..size)
+                .map(|_| TaskSlot {
+                    runnable: Mutex::new(false),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+        };
+        let mut inner = sched.inner.lock().unwrap();
+        sched.dispatch_locked(&mut inner);
+        drop(inner);
+        sched
+    }
+
+    /// Fill free worker slots from the run queue in virtual-time order.
+    fn dispatch_locked(&self, inner: &mut Inner) {
+        while inner.running < self.workers {
+            let Some(e) = inner.runq.pop() else { break };
+            debug_assert_eq!(inner.state[e.rank], TaskState::Queued);
+            inner.state[e.rank] = TaskState::Running;
+            inner.running += 1;
+            self.signal(e.rank);
+        }
+    }
+
+    /// Mark a task's slot runnable and wake its thread. Called with
+    /// `inner` held (dispatch, deadlock) or after it is released (abort) —
+    /// both respect the `inner` → `slot` lock order.
+    fn signal(&self, rank: usize) {
+        let mut g = self.slots[rank].runnable.lock().unwrap();
+        *g = true;
+        self.slots[rank].cv.notify_one();
+    }
+
+    /// Sleep until this task's slot is signaled; consumes the signal.
+    fn wait_runnable(&self, rank: usize) {
+        let slot = &self.slots[rank];
+        let mut g = slot.runnable.lock().unwrap();
+        while !*g {
+            g = slot.cv.wait(g).unwrap();
+        }
+        *g = false;
+    }
+
+    /// Block the calling thread until the scheduler first dispatches task
+    /// `rank`. Every task thread calls this exactly once, before running
+    /// any rank code.
+    pub fn admit(&self, rank: usize) {
+        self.wait_runnable(rank);
+        let aborted = self.inner.lock().unwrap().aborted;
+        if aborted {
+            panic!("{}", ABORT_SENTINEL);
+        }
+    }
+
+    /// Park the calling task because completing `info` would block.
+    /// Returns when progress may have been made — the caller MUST re-check
+    /// its condition in a loop (wakes are hints, not guarantees).
+    ///
+    /// Returns `Err(MpiError::Deadlock)` when the exactness check fired:
+    /// no task was runnable while unfinished tasks remained, so the parked
+    /// condition can never complete.
+    pub fn park(&self, rank: usize, info: BlockInfo) -> Result<(), MpiError> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.aborted {
+                drop(inner);
+                panic!("{}", ABORT_SENTINEL);
+            }
+            if let Some(report) = inner.deadlock.clone() {
+                return Err(MpiError::Deadlock {
+                    rank,
+                    summary: report.as_ref().clone(),
+                });
+            }
+            if inner.pending_wake[rank] {
+                // A completion landed while we were running: consume the
+                // mark and let the caller re-check before really parking.
+                inner.pending_wake[rank] = false;
+                return Ok(());
+            }
+            debug_assert_eq!(
+                inner.state[rank],
+                TaskState::Running,
+                "only a running task parks"
+            );
+            inner.state[rank] = TaskState::Blocked;
+            inner.blocked[rank] = Some(info);
+            inner.running -= 1;
+            self.dispatch_locked(&mut inner);
+            if inner.running == 0 && inner.runq.is_empty() && inner.finished < self.size {
+                self.declare_deadlock_locked(&mut inner);
+            }
+        }
+        self.wait_runnable(rank);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.aborted {
+            drop(inner);
+            panic!("{}", ABORT_SENTINEL);
+        }
+        // A wake that raced our wakeup would only ask for the re-check the
+        // caller is about to do anyway.
+        inner.pending_wake[rank] = false;
+        if let Some(report) = inner.deadlock.clone() {
+            return Err(MpiError::Deadlock {
+                rank,
+                summary: report.as_ref().clone(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Record that a completion for `rank` materialized at virtual time
+    /// `t`: a deposit into its mailbox, its rendezvous cell written, its
+    /// collective finalized. Re-enqueues a parked task at `t`; a running
+    /// task gets the pending-wake mark (no lost wakeups); a queued or
+    /// finished task needs nothing.
+    pub fn wake(&self, rank: usize, t: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.state[rank] {
+            TaskState::Blocked => {
+                inner.state[rank] = TaskState::Queued;
+                inner.blocked[rank] = None;
+                inner.runq.push(t, rank);
+                self.dispatch_locked(&mut inner);
+            }
+            TaskState::Running => inner.pending_wake[rank] = true,
+            TaskState::Queued | TaskState::Finished => {}
+        }
+    }
+
+    /// Mark the calling task complete and free its worker slot. Runs the
+    /// same exactness check as `park`: a world where some ranks exited
+    /// while the rest wait on them is deadlocked too.
+    pub fn finish(&self, rank: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert_eq!(
+            inner.state[rank],
+            TaskState::Running,
+            "only a running task finishes"
+        );
+        inner.state[rank] = TaskState::Finished;
+        inner.running -= 1;
+        inner.finished += 1;
+        self.dispatch_locked(&mut inner);
+        if !inner.aborted
+            && inner.deadlock.is_none()
+            && inner.running == 0
+            && inner.runq.is_empty()
+            && inner.finished < self.size
+        {
+            self.declare_deadlock_locked(&mut inner);
+        }
+    }
+
+    /// The exactness check fired: snapshot the report, then move every
+    /// parked task back to `Running` and wake it so it can return
+    /// `Err(MpiError::Deadlock)` out of its `park`.
+    fn declare_deadlock_locked(&self, inner: &mut Inner) {
+        let report = Arc::new(deadlock_report(&inner.blocked));
+        inner.deadlock = Some(report);
+        for r in 0..self.size {
+            if inner.state[r] == TaskState::Blocked {
+                inner.state[r] = TaskState::Running;
+                inner.blocked[r] = None;
+                inner.running += 1;
+                self.signal(r);
+            }
+        }
+    }
+
+    /// Tear the world down after a rank panicked: every thread — parked,
+    /// queued, or about to park — wakes and unwinds with the abort
+    /// sentinel instead of waiting on completions that will never come.
+    pub fn abort(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.aborted {
+            return;
+        }
+        inner.aborted = true;
+        drop(inner);
+        for slot in &self.slots {
+            let mut g = slot.runnable.lock().unwrap();
+            *g = true;
+            slot.cv.notify_one();
+        }
+    }
+}
+
+/// Per-task lifecycle guard: construction admits the calling thread as
+/// task `rank`; [`TaskGuard::complete`] records a normal return; dropping
+/// without completing (the rank closure unwound) aborts the world so
+/// sibling tasks are not stranded.
+pub(crate) struct TaskGuard<'a> {
+    sched: &'a Scheduler,
+    rank: usize,
+    done: bool,
+}
+
+impl<'a> TaskGuard<'a> {
+    pub fn new(sched: &'a Scheduler, rank: usize) -> Self {
+        sched.admit(rank);
+        TaskGuard {
+            sched,
+            rank,
+            done: false,
+        }
+    }
+
+    pub fn complete(mut self) {
+        self.done = true;
+        self.sched.finish(self.rank);
+    }
+}
+
+impl Drop for TaskGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.sched.abort();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the scheduler directly with bare threads (no World), so the
+    /// protocol is testable in isolation.
+    fn spawn_tasks<F>(size: usize, workers: usize, body: F) -> Vec<std::thread::JoinHandle<()>>
+    where
+        F: Fn(usize, &Scheduler) + Send + Sync + 'static,
+    {
+        let sched = Arc::new(Scheduler::new(size, workers));
+        let body = Arc::new(body);
+        (0..size)
+            .map(|r| {
+                let sched = sched.clone();
+                let body = body.clone();
+                std::thread::spawn(move || {
+                    sched.admit(r);
+                    body(r, &sched);
+                    sched.finish(r);
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_worker_runs_tasks_in_queue_order() {
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o2 = order.clone();
+        let handles = spawn_tasks(4, 1, move |r, _s| {
+            o2.lock().unwrap().push(r);
+        });
+        for h in handles {
+            h.join().unwrap();
+        }
+        // all enqueued at t=0: rank order
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn park_resumes_after_wake() {
+        let flag = Arc::new(Mutex::new(false));
+        let f2 = flag.clone();
+        let handles = spawn_tasks(2, 1, move |r, sched| {
+            if r == 0 {
+                loop {
+                    if *f2.lock().unwrap() {
+                        break;
+                    }
+                    sched
+                        .park(0, BlockInfo::WaitAny { n_reqs: 1 })
+                        .expect("no deadlock: task 1 will wake us");
+                }
+            } else {
+                *f2.lock().unwrap() = true;
+                sched.wake(0, 1.0);
+            }
+        });
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn wake_before_park_is_not_lost() {
+        let sched = Arc::new(Scheduler::new(1, 1));
+        let s2 = sched.clone();
+        let t = std::thread::spawn(move || {
+            s2.admit(0);
+            // Simulate a completion that landed while we were running:
+            // the pending-wake mark makes the park return immediately.
+            s2.wake(0, 0.5);
+            s2.park(0, BlockInfo::WaitAny { n_reqs: 1 })
+                .expect("pending wake consumed, not a deadlock");
+            s2.finish(0);
+        });
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn all_parked_is_exact_deadlock() {
+        let errs = Arc::new(Mutex::new(Vec::new()));
+        let e2 = errs.clone();
+        let handles = spawn_tasks(2, 2, move |r, sched| {
+            let peer = 1 - r;
+            let e = loop {
+                match sched.park(
+                    r,
+                    BlockInfo::Recv {
+                        src: Some(peer),
+                        tag: 0,
+                        ctx: 0,
+                    },
+                ) {
+                    Ok(()) => continue, // spurious: the condition never holds
+                    Err(e) => break e,
+                }
+            };
+            e2.lock().unwrap().push(e);
+        });
+        for h in handles {
+            h.join().unwrap();
+        }
+        let errs = errs.lock().unwrap();
+        assert_eq!(errs.len(), 2);
+        for e in errs.iter() {
+            match e {
+                MpiError::Deadlock { summary, .. } => {
+                    assert!(summary.contains("wait-for cycle"), "{}", summary);
+                }
+                other => panic!("expected Deadlock, got {:?}", other),
+            }
+        }
+    }
+
+    #[test]
+    fn finish_strands_blocked_peer_as_deadlock() {
+        let handles = spawn_tasks(2, 1, |r, sched| {
+            if r == 1 {
+                let e = sched
+                    .park(
+                        1,
+                        BlockInfo::Recv {
+                            src: Some(0),
+                            tag: 7,
+                            ctx: 0,
+                        },
+                    )
+                    .unwrap_err();
+                match e {
+                    MpiError::Deadlock { summary, .. } => {
+                        assert!(summary.contains("rank 0 is not blocked"), "{}", summary);
+                    }
+                    other => panic!("expected Deadlock, got {:?}", other),
+                }
+            }
+            // rank 0 finishes without ever waking rank 1
+        });
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn abort_releases_queued_and_parked_tasks() {
+        let sched = Arc::new(Scheduler::new(3, 1));
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                let sched = sched.clone();
+                std::thread::spawn(move || {
+                    // rank 0 runs and panics; 1 and 2 never get dispatched
+                    // before the abort and must unwind with the sentinel.
+                    sched.admit(r);
+                    if r == 0 {
+                        sched.abort();
+                        panic!("boom");
+                    }
+                    sched.finish(r);
+                })
+            })
+            .collect();
+        let mut sentinel = 0;
+        let mut root = 0;
+        for h in handles {
+            if let Err(e) = h.join() {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("");
+                if msg.contains(ABORT_SENTINEL) {
+                    sentinel += 1;
+                } else {
+                    root += 1;
+                }
+            }
+        }
+        assert_eq!(root, 1, "the real panic propagates");
+        assert_eq!(sentinel, 2, "stranded tasks unwind with the sentinel");
+    }
+}

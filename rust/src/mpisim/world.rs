@@ -31,6 +31,7 @@ use super::hooks::{CollKind, HookHandle, MpiEvent};
 use super::netmodel::{CollClass, CollCostCache, GroupSpan, MachineModel};
 use super::p2p::{Envelope, Mailbox};
 use super::request::{Protocol, RecvRequest, Request, SendCell, SendRequest, SendState, Status};
+use super::sched::{BlockInfo, Engine, Scheduler, TaskGuard, ABORT_SENTINEL};
 
 /// Internal tag for [`Rank::alltoallv`]'s pairwise exchanges. Any app tag
 /// may coexist: matching is per-(src, tag, ctx) FIFO, so the reserved tag
@@ -43,10 +44,15 @@ const ALLTOALLV_TAG: i32 = i32::MIN + 0xA2A;
 pub struct WorldConfig {
     pub size: usize,
     pub machine: MachineModel,
-    /// Real-time deadlock guard for blocking operations.
+    /// Real-time deadlock guard for blocking operations. Threaded engine
+    /// only — the event engine detects deadlock *exactly* (see
+    /// [`super::sched`]) and never arms wall-clock timers.
     pub timeout: Duration,
     /// Stack size per rank thread.
     pub stack_size: usize,
+    /// Execution engine: free-running threads (default) or the
+    /// discrete-event scheduler. Virtual results are identical either way.
+    pub engine: Engine,
 }
 
 impl WorldConfig {
@@ -56,11 +62,17 @@ impl WorldConfig {
             machine,
             timeout: Duration::from_secs(120),
             stack_size: 4 << 20,
+            engine: Engine::Threaded,
         }
     }
 
     pub fn with_timeout(mut self, t: Duration) -> Self {
         self.timeout = t;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
         self
     }
 }
@@ -72,6 +84,8 @@ pub(crate) struct WorldCore {
     pub timeout: Duration,
     mailboxes: Vec<Mailbox>,
     coll: CollBoard,
+    /// `Some` iff this world runs on the event engine.
+    sched: Option<Scheduler>,
 }
 
 /// Compile-time Send/Sync audit.
@@ -92,6 +106,7 @@ fn _send_sync_audit() {
     assert_send_sync::<Mailbox>();
     assert_send_sync::<CollBoard>();
     assert_send_sync::<Envelope>();
+    assert_send_sync::<Scheduler>();
 }
 
 /// How a collective's model cost is sized. `Fixed` is for operations whose
@@ -116,6 +131,12 @@ pub struct World;
 impl World {
     /// Run `f` on `cfg.size` ranks (one OS thread each) and collect each
     /// rank's return value in rank order. Panics in a rank propagate.
+    ///
+    /// Under [`Engine::Threaded`] every rank thread free-runs; under
+    /// [`Engine::Event`] each thread is a cooperative task admitted by the
+    /// world's [`Scheduler`] — at most `workers` execute at a time,
+    /// dispatched in virtual-clock order, parked threads costing memory
+    /// only. Virtual results are identical across engines.
     pub fn run<T, F>(cfg: WorldConfig, f: F) -> Vec<T>
     where
         T: Send,
@@ -127,6 +148,10 @@ impl World {
             timeout: cfg.timeout,
             mailboxes: (0..cfg.size).map(|_| Mailbox::new()).collect(),
             coll: CollBoard::new(),
+            sched: match cfg.engine {
+                Engine::Threaded => None,
+                Engine::Event { workers } => Some(Scheduler::new(cfg.size, workers)),
+            },
         };
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(cfg.size);
@@ -137,26 +162,50 @@ impl World {
                     .name(format!("rank-{}", r))
                     .stack_size(cfg.stack_size)
                     .spawn_scoped(scope, move || {
+                        // Event engine: block here until the scheduler
+                        // dispatches this task. Completing the guard frees
+                        // the worker slot; dropping it on unwind aborts the
+                        // world so sibling tasks are not stranded.
+                        let guard = core_ref.sched.as_ref().map(|s| TaskGuard::new(s, r));
                         let mut rank = Rank::new(core_ref, r);
-                        f_ref(&mut rank)
+                        let out = f_ref(&mut rank);
+                        if let Some(g) = guard {
+                            g.complete();
+                        }
+                        out
                     })
                     .expect("failed to spawn rank thread");
                 handles.push(h);
             }
-            handles
-                .into_iter()
-                .enumerate()
-                .map(|(r, h)| match h.join() {
-                    Ok(v) => v,
+            let mut out: Vec<Option<T>> = Vec::with_capacity(cfg.size);
+            let mut panics: Vec<(usize, String)> = Vec::new();
+            for (r, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(v) => out.push(Some(v)),
                     Err(e) => {
                         let msg = e
                             .downcast_ref::<String>()
                             .map(|s| s.as_str())
                             .or_else(|| e.downcast_ref::<&str>().copied())
-                            .unwrap_or("<non-string panic>");
-                        panic!("rank {} panicked: {}", r, msg)
+                            .unwrap_or("<non-string panic>")
+                            .to_string();
+                        panics.push((r, msg));
+                        out.push(None);
                     }
-                })
+                }
+            }
+            // Propagate the ROOT-CAUSE panic: under the event engine a
+            // panicking rank aborts its siblings, which unwind with the
+            // abort sentinel — blaming one of those would hide the cause.
+            if let Some((r, msg)) = panics
+                .iter()
+                .find(|(_, m)| !m.contains(ABORT_SENTINEL))
+                .or_else(|| panics.first())
+            {
+                panic!("rank {} panicked: {}", r, msg);
+            }
+            out.into_iter()
+                .map(|v| v.expect("every rank joined cleanly"))
                 .collect()
         })
     }
@@ -230,6 +279,13 @@ impl<'w> Rank<'w> {
     /// The world communicator.
     pub fn world(&self) -> Comm {
         Comm::world(self.rank, self.core.size)
+    }
+
+    /// The event-engine scheduler, when this world runs on one. Borrowed
+    /// through `core` (`&'w`), not `&self`, so a blocking loop can hold it
+    /// across `&mut self` completion calls.
+    fn sched(&self) -> Option<&'w Scheduler> {
+        self.core.sched.as_ref()
     }
 
     // ---- time -----------------------------------------------------------
@@ -347,6 +403,12 @@ impl<'w> Rank<'w> {
             handshake,
             reply,
         });
+        if let Some(sched) = self.sched() {
+            // The destination may be parked on a matching receive: this
+            // deposit is its completion, on the wire from `t_end` on. A
+            // self-send wake is a no-op-sized hint (pending-wake mark).
+            sched.wake(dst_world, t_end);
+        }
         self.emit(MpiEvent::Send {
             dst: dst_world,
             tag,
@@ -650,6 +712,18 @@ impl<'w> Rank<'w> {
         reqs: &mut Vec<Request>,
     ) -> Result<(usize, Option<(Vec<T>, Status)>), MpiError> {
         assert!(!reqs.is_empty(), "waitany on an empty request set");
+        if let Some(sched) = self.sched() {
+            // Event engine: park between probes; any completion targeting
+            // this rank (deposit, rendezvous cell) re-enqueues it.
+            loop {
+                if let Some(i) = reqs.iter().position(|r| self.test(r)) {
+                    let req = reqs.remove(i);
+                    let mut out = self.waitall::<T>(vec![req])?;
+                    return Ok((i, out.pop().unwrap()));
+                }
+                sched.park(self.rank, BlockInfo::WaitAny { n_reqs: reqs.len() })?;
+            }
+        }
         let deadline = Instant::now() + self.core.timeout;
         loop {
             if let Some(i) = reqs.iter().position(|r| self.test(r)) {
@@ -695,19 +769,41 @@ impl<'w> Rank<'w> {
         // that belong to older still-pending receives with the same
         // matching key are not ours to take.
         let skip = mailbox.pending_posted_before(req.post_id, req.src, req.tag, req.ctx);
-        let env = mailbox.match_recv_nth(
-            self.rank,
-            req.src,
-            req.tag,
-            req.ctx,
-            skip,
-            self.core.timeout,
-        )?;
+        let env = match self.sched() {
+            // Event engine: poll-and-park instead of condvar blocking.
+            // `skip` stays valid across parks — the earlier same-key posts
+            // it counts belong to THIS rank, which is parked right here.
+            Some(sched) => loop {
+                if let Some(env) = mailbox.try_match_nth(req.src, req.tag, req.ctx, skip) {
+                    break env;
+                }
+                sched.park(
+                    self.rank,
+                    BlockInfo::Recv {
+                        src: req.src,
+                        tag: req.tag,
+                        ctx: req.ctx,
+                    },
+                )?;
+            },
+            None => mailbox.match_recv_nth(
+                self.rank,
+                req.src,
+                req.tag,
+                req.ctx,
+                skip,
+                self.core.timeout,
+            )?,
+        };
         let at = env.arrival(post.post_time);
         if let Some(cell) = &env.reply {
             // Rendezvous: the sender's buffer is released when the
             // transfer completes.
             cell.complete(at);
+            if let Some(sched) = self.sched() {
+                // The sender may be parked on this very cell.
+                sched.wake(env.src, at);
+            }
         }
         let wire = env.wire;
         Ok((env, at, wire, post.post_time))
@@ -720,13 +816,30 @@ impl<'w> Rank<'w> {
         match &req.state {
             SendState::Eager => Ok(None),
             SendState::Rendezvous { cell, wire, .. } => {
-                let at = cell.wait(self.core.timeout).ok_or(MpiError::SendTimeout {
-                    rank: self.rank,
-                    dst: req.dst,
-                    tag: req.tag,
-                    ctx: req.ctx,
-                    millis: self.core.timeout.as_millis() as u64,
-                })?;
+                let at = match self.sched() {
+                    // Event engine: park until the receiver's completion
+                    // writes the cell (and wakes us), no wall-clock guard.
+                    Some(sched) => loop {
+                        if let Some(at) = cell.poll() {
+                            break at;
+                        }
+                        sched.park(
+                            self.rank,
+                            BlockInfo::SendRdv {
+                                dst: req.dst,
+                                tag: req.tag,
+                                ctx: req.ctx,
+                            },
+                        )?;
+                    },
+                    None => cell.wait(self.core.timeout).ok_or(MpiError::SendTimeout {
+                        rank: self.rank,
+                        dst: req.dst,
+                        tag: req.tag,
+                        ctx: req.ctx,
+                        millis: self.core.timeout.as_millis() as u64,
+                    })?,
+                };
                 Ok(Some((at, *wire)))
             }
         }
@@ -793,17 +906,59 @@ impl<'w> Rank<'w> {
         let span = self.comm_span(comm);
         let t_start = self.clock.now();
         let static_kind = kind.name();
-        let (result, max_entry) = self.core.coll.run(
-            (comm.ctx, seq),
-            static_kind,
-            comm.size(),
-            comm.rank,
-            self.rank,
-            t_start,
-            contrib,
-            finalize,
-            self.core.timeout,
-        )?;
+        let (result, max_entry) = match self.sched() {
+            Some(sched) => {
+                use super::collectives::Enter;
+                match self.core.coll.enter(
+                    (comm.ctx, seq),
+                    static_kind,
+                    comm.size(),
+                    comm.rank,
+                    self.rank,
+                    t_start,
+                    contrib,
+                    finalize,
+                )? {
+                    Enter::Done {
+                        result,
+                        max_entry,
+                        wake,
+                    } => {
+                        // Last arriver: finalize happened inside `enter`;
+                        // release every parked member at the sync point.
+                        for w in wake {
+                            sched.wake(w, max_entry);
+                        }
+                        (result, max_entry)
+                    }
+                    Enter::Pending => loop {
+                        if let Some(out) = self.core.coll.try_result((comm.ctx, seq)) {
+                            break out;
+                        }
+                        sched.park(
+                            self.rank,
+                            BlockInfo::Coll {
+                                kind: static_kind,
+                                ctx: comm.ctx,
+                                seq,
+                                comm_size: comm.size(),
+                            },
+                        )?;
+                    },
+                }
+            }
+            None => self.core.coll.run(
+                (comm.ctx, seq),
+                static_kind,
+                comm.size(),
+                comm.rank,
+                self.rank,
+                t_start,
+                contrib,
+                finalize,
+                self.core.timeout,
+            )?,
+        };
         let cost_bytes = match cost {
             CollCost::Fixed(b) => b,
             CollCost::ResultBytes => result.len(),
@@ -1643,5 +1798,158 @@ mod tests {
             let err = rank.send(&[0.0f64], 5, 0, &world).unwrap_err();
             assert!(matches!(err, MpiError::RankOutOfRange { rank: 5, size: 2 }));
         });
+    }
+
+    // ---- event engine ---------------------------------------------------
+
+    fn ecfg(n: usize) -> WorldConfig {
+        cfg(n).with_engine(Engine::event())
+    }
+
+    /// The stencil-ish app from `determinism_across_runs`, as a fn item so
+    /// both engines run literally the same code.
+    fn stencil_app(rank: &mut Rank<'_>) -> (f64, f64) {
+        let world = rank.world();
+        let left = (rank.rank + 7) % 8;
+        let right = (rank.rank + 1) % 8;
+        rank.compute(1e6, 1e5);
+        rank.send(&vec![rank.rank as f64; 100], right, 1, &world)
+            .unwrap();
+        let (d, _) = rank.recv::<f64>(Some(left), 1, &world).unwrap();
+        let s = rank.allreduce_f64(&[d[0]], ReduceOp::Sum, &world).unwrap();
+        (rank.now(), s[0])
+    }
+
+    #[test]
+    fn event_engine_matches_threaded_bitwise() {
+        let threaded = World::run(cfg(8), stencil_app);
+        let event = World::run(ecfg(8), stencil_app);
+        for (a, b) in threaded.iter().zip(&event) {
+            assert_eq!(
+                a.0.to_bits(),
+                b.0.to_bits(),
+                "virtual times must be bit-identical across engines"
+            );
+            assert_eq!(a.1, b.1);
+        }
+    }
+
+    #[test]
+    fn event_engine_rendezvous_matches_threaded() {
+        let mut m = MachineModel::test_machine();
+        m.net.eager_threshold = 1024;
+        let app = |rank: &mut Rank<'_>| {
+            let world = rank.world();
+            if rank.rank == 0 {
+                let req = rank.isend(&vec![0u8; 4096], 1, 0, &world).unwrap();
+                rank.wait_send(req).unwrap();
+            } else {
+                rank.advance(0.5); // receiver posts late: gated completion
+                let _ = rank.recv::<u8>(Some(0), 0, &world).unwrap();
+            }
+            rank.now()
+        };
+        let run = |engine: Engine| {
+            let c = WorldConfig::new(2, m.clone())
+                .with_timeout(Duration::from_secs(20))
+                .with_engine(engine);
+            World::run(c, app)
+        };
+        let t = run(Engine::Threaded);
+        let e = run(Engine::event());
+        for (a, b) in t.iter().zip(&e) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{} vs {}", a, b);
+        }
+    }
+
+    /// More workers add wall-clock parallelism only: virtual results stay
+    /// bit-identical because stamps are schedule-independent.
+    #[test]
+    fn event_engine_multiworker_is_bit_identical_to_single() {
+        let app = |rank: &mut Rank<'_>| {
+            let world = rank.world();
+            let n = rank.size();
+            let parts: Vec<Vec<u32>> = (0..n)
+                .map(|d| vec![(rank.rank * n + d) as u32; d + 1])
+                .collect();
+            let got = rank.alltoallv(&parts, &world).unwrap();
+            let s = rank
+                .allreduce_f64(&[got[0][0] as f64], ReduceOp::Sum, &world)
+                .unwrap();
+            rank.barrier(&world).unwrap();
+            (rank.now(), s[0])
+        };
+        let one = World::run(cfg(6).with_engine(Engine::event()), app);
+        let four = World::run(cfg(6).with_engine(Engine::Event { workers: 4 }), app);
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1, b.1);
+        }
+    }
+
+    /// The exact-deadlock satellite: two blocking rendezvous sends at each
+    /// other fail deterministically with the named cycle — no wall-clock
+    /// timeout involved.
+    #[test]
+    fn event_engine_reports_exact_send_send_deadlock() {
+        let mut m = MachineModel::test_machine();
+        m.net.eager_threshold = 64;
+        let c = WorldConfig::new(2, m).with_engine(Engine::event());
+        let errs = World::run(c, |rank| {
+            let world = rank.world();
+            let peer = 1 - rank.rank;
+            rank.send(&vec![0u8; 4096], peer, 0, &world).unwrap_err()
+        });
+        for e in errs {
+            let MpiError::Deadlock { summary, .. } = e else {
+                panic!("expected Deadlock, got {:?}", e);
+            };
+            assert!(summary.contains("rendezvous-send"), "{}", summary);
+            assert!(
+                summary.contains("wait-for cycle: 0 -> 1 -> 0"),
+                "{}",
+                summary
+            );
+        }
+    }
+
+    /// A rank that exits while its partner still waits on it is a deadlock
+    /// too — rendered as a chain ending in the finished rank.
+    #[test]
+    fn event_engine_detects_deadlock_on_finished_partner() {
+        let errs = World::run(ecfg(2), |rank| {
+            let world = rank.world();
+            if rank.rank == 1 {
+                Some(rank.recv::<f64>(Some(0), 9, &world).unwrap_err())
+            } else {
+                None // returns immediately, never sends
+            }
+        });
+        let e = errs[1].clone().expect("rank 1's recv must fail");
+        let MpiError::Deadlock { rank, summary } = e else {
+            panic!("expected Deadlock, got {:?}", errs[1]);
+        };
+        assert_eq!(rank, 1);
+        assert!(summary.contains("recv(src=0 tag=9"), "{}", summary);
+        assert!(summary.contains("rank 0 is not blocked"), "{}", summary);
+    }
+
+    #[test]
+    fn event_engine_reports_collective_straggler_deadlock() {
+        let errs = World::run(ecfg(3), |rank| {
+            let world = rank.world();
+            if rank.rank == 2 {
+                return None; // never enters the barrier
+            }
+            Some(rank.barrier(&world).unwrap_err())
+        });
+        for r in [0, 1] {
+            let e = errs[r].clone().expect("ranks 0/1 fail the barrier");
+            let MpiError::Deadlock { summary, .. } = e else {
+                panic!("expected Deadlock, got {:?}", errs[r]);
+            };
+            assert!(summary.contains("collective barrier"), "{}", summary);
+            assert!(summary.contains("comm_size=3"), "{}", summary);
+        }
     }
 }

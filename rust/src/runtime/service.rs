@@ -3,10 +3,13 @@
 //! [`ComputeHandle`].
 //!
 //! The indirection exists because the `xla` crate's client types are
-//! `Rc`-based (not `Send`), while our ranks are OS threads. It also mirrors
-//! the deployment reality the paper's Tioga runs have — many ranks feeding
-//! shared accelerator queues. Requests are serialized per service thread;
-//! for the small canonical artifact shapes this is not a bottleneck
+//! `Rc`-based (not `Send`), while our ranks are OS threads — under either
+//! execution engine ([`crate::mpisim::Engine`]): the event engine also
+//! keeps one OS thread per rank (as a parked coroutine stack), so the
+//! handoff story is engine-independent. It also mirrors the deployment
+//! reality the paper's Tioga runs have — many ranks feeding shared
+//! accelerator queues. Requests are serialized per service thread; for
+//! the small canonical artifact shapes this is not a bottleneck
 //! (measured in EXPERIMENTS.md §Perf).
 
 use std::sync::mpsc;

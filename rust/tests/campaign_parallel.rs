@@ -147,6 +147,7 @@ fn trace_artifacts_byte_identical_across_jobs_widths() {
         iter_shrink: 10,
         size_shrink: 8,
         channels: ChannelConfig::parse("comm-stats,trace").unwrap(),
+        ..Default::default()
     };
     let base = std::env::temp_dir().join(format!("trace_par_{}", std::process::id()));
     let dir_serial = base.join("serial");

@@ -207,6 +207,7 @@ fn v2_roundtrip_byte_identical_through_cell_runner() {
         iter_shrink: 10,
         size_shrink: 8,
         channels: ChannelConfig::parse("all").unwrap(),
+        ..Default::default()
     };
     let run = run_cell(&spec, &opts).unwrap();
     let all_spec = ChannelConfig::parse("all").unwrap().spec_string();

@@ -1,0 +1,169 @@
+//! Engine-equivalence gate: the discrete-event scheduler must be an
+//! indistinguishable drop-in for the thread-per-rank engine.
+//!
+//! The migration contract (docs/ARCHITECTURE.md, "Execution engines") is
+//! byte-identity of every artifact: same profile JSON, same trace JSONL,
+//! across `Engine::Threaded`, `Engine::Event { workers: 1 }`, and
+//! multi-worker event runs. Virtual timestamps are schedule-independent
+//! by construction, so any divergence here is an engine bug, not noise —
+//! which is what lets the event engine carry 4k+-rank campaigns that the
+//! threaded engine cannot, while the threaded engine stays on as the
+//! oracle at small scale.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell, run_cell_full, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::caliper::ChannelConfig;
+use commscope::coordinator::bench::smoke_cells;
+use commscope::mpisim::{Engine, MachineModel, Rank, ReduceOp, World, WorldConfig};
+use commscope::trace::write_jsonl;
+
+fn with_engine(base: &RunOptions, engine: Engine) -> RunOptions {
+    RunOptions { engine, ..*base }
+}
+
+/// Every ≤16-rank cell of the full matrix (all four apps — including
+/// zmodel's dense alltoallv, the pattern most unlike the halo apps) must
+/// produce the same profile bytes on both engines.
+#[test]
+fn smoke_matrix_profiles_byte_identical_across_engines() {
+    let base = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+        ..Default::default()
+    };
+    let cells = smoke_cells();
+    for app in [
+        AppKind::Amg2023,
+        AppKind::Kripke,
+        AppKind::Laghos,
+        AppKind::Zmodel,
+    ] {
+        assert!(
+            cells.iter().any(|c| c.app == app),
+            "{:?} missing from the smoke matrix",
+            app
+        );
+    }
+    for spec in &cells {
+        let threaded = run_cell(spec, &base).unwrap();
+        let event = run_cell(spec, &with_engine(&base, Engine::event())).unwrap();
+        assert_eq!(
+            threaded.to_json().to_string_pretty(),
+            event.to_json().to_string_pretty(),
+            "profile bytes diverge across engines for cell {}",
+            spec.id()
+        );
+    }
+}
+
+/// Full-fidelity AMG on tioga keeps large halo exchanges above the eager
+/// threshold, so this cell exercises the rendezvous park/wake path end to
+/// end. Both the profile and the event-level trace artifact must match
+/// byte for byte.
+#[test]
+fn rendezvous_cell_trace_bytes_identical_across_engines() {
+    let spec = ExperimentSpec {
+        app: AppKind::Amg2023,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 8,
+    };
+    let base = RunOptions {
+        iter_shrink: 1,
+        size_shrink: 1,
+        channels: ChannelConfig::parse("comm-stats,mpi-time,trace").unwrap(),
+        ..Default::default()
+    };
+    let threaded = run_cell_full(&spec, &base).unwrap();
+    let event = run_cell_full(&spec, &with_engine(&base, Engine::event())).unwrap();
+    assert_eq!(
+        threaded.profile.to_json().to_string_pretty(),
+        event.profile.to_json().to_string_pretty(),
+        "rendezvous profile diverges across engines"
+    );
+    let t_trace = threaded.trace.as_ref().expect("threaded trace artifact");
+    let e_trace = event.trace.as_ref().expect("event trace artifact");
+    assert_eq!(
+        write_jsonl(t_trace),
+        write_jsonl(e_trace),
+        "trace JSONL diverges across engines"
+    );
+}
+
+/// Worker count is wall-clock parallelism only: an `event:4` run must
+/// produce the same bytes as `event:1` (and therefore as threaded).
+#[test]
+fn multi_worker_event_run_matches_single_worker() {
+    let spec = ExperimentSpec {
+        app: AppKind::Kripke,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 16,
+    };
+    let base = RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+        channels: ChannelConfig::parse("comm-stats,trace").unwrap(),
+        ..Default::default()
+    };
+    let one = run_cell_full(&spec, &with_engine(&base, Engine::event())).unwrap();
+    let four =
+        run_cell_full(&spec, &with_engine(&base, Engine::parse("event:4").unwrap())).unwrap();
+    assert_eq!(
+        one.profile.to_json().to_string_pretty(),
+        four.profile.to_json().to_string_pretty()
+    );
+    assert_eq!(
+        write_jsonl(one.trace.as_ref().unwrap()),
+        write_jsonl(four.trace.as_ref().unwrap())
+    );
+}
+
+/// The payoff case: a 4096-rank world — far past where thread-per-rank
+/// scheduling is usable for real campaigns — runs a ring exchange plus an
+/// allreduce on the event engine and produces the exact deterministic
+/// reduction.
+#[test]
+fn event_engine_runs_4096_rank_world() {
+    const N: usize = 4096;
+    let cfg = WorldConfig::new(N, MachineModel::test_machine()).with_engine(Engine::event());
+    let out = World::run(cfg, |rank: &mut Rank<'_>| {
+        let world = rank.world();
+        let right = (rank.rank + 1) % N;
+        let left = (rank.rank + N - 1) % N;
+        rank.send(&[rank.rank as f64], right, 0, &world).unwrap();
+        let (d, _) = rank.recv::<f64>(Some(left), 0, &world).unwrap();
+        let s = rank.allreduce_f64(&[d[0]], ReduceOp::Sum, &world).unwrap();
+        s[0]
+    });
+    let expected = (N * (N - 1) / 2) as f64;
+    assert_eq!(out.len(), N);
+    for s in out {
+        assert_eq!(s, expected);
+    }
+}
+
+/// The acceptance cell: a 4096-rank AMG2023/tioga campaign cell completes
+/// on the event engine with both artifacts. CI runs this through
+/// `repro campaign --engine event --extend-ranks 4096`; this test is the
+/// same cell as a one-shot for local runs (`cargo test -- --ignored`).
+#[test]
+#[ignore = "multi-minute: 4096-rank AMG cell"]
+fn amg_4096_rank_cell_completes_on_event_engine() {
+    let spec = ExperimentSpec {
+        app: AppKind::Amg2023,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 4096,
+    };
+    let opts = RunOptions {
+        engine: Engine::event(),
+        channels: ChannelConfig::parse("comm-stats,mpi-time,trace").unwrap(),
+        ..RunOptions::smoke()
+    };
+    let out = run_cell_full(&spec, &opts).unwrap();
+    assert_eq!(out.profile.meta_usize("ranks"), Some(4096));
+    let trace = out.trace.expect("trace artifact for the acceptance cell");
+    assert!(!write_jsonl(&trace).is_empty());
+}

@@ -26,6 +26,7 @@ fn traced_opts() -> RunOptions {
         iter_shrink: 10,
         size_shrink: 8,
         channels: ChannelConfig::parse("comm-stats,mpi-time,trace").unwrap(),
+        ..Default::default()
     }
 }
 
