@@ -1,0 +1,32 @@
+//! Loom models for the simulator's wake protocols (docs/DETERMINISM.md).
+//!
+//! The modules below are *the real sources* from `rust/src`, mounted via
+//! `#[path]` and compiled with `--cfg loom`, which flips the
+//! `crate::util::sync` facade from `std::sync` to loom's model-checked
+//! primitives. The `#[cfg(test)] mod models` then explores every
+//! interleaving (up to the preemption bound) of:
+//!
+//! 1. mailbox deposit vs. the matcher's snapshot/rescan sleep (`Notify`)
+//! 2. the scheduler's `pending_wake` mark racing a `Running` task
+//! 3. the rendezvous `SendCell` complete vs. poll/wait (`OneShot`)
+//! 4. the collective board's last-arriver wake set (`Monitor`)
+//!
+//! plus the two ordering regressions from the sharded-mailbox redesign:
+//! ANY_SOURCE min-seq selection across shards, and
+//! `pending_posted_before` under concurrent posts.
+
+#![cfg_attr(loom, allow(dead_code))]
+
+#[cfg(not(loom))]
+compile_error!(
+    "loom-models must be built with RUSTFLAGS=\"--cfg loom\" — \
+     without it the facade re-exports std primitives and the models \
+     would silently check nothing"
+);
+
+pub mod util;
+
+pub mod mpisim;
+
+#[cfg(test)]
+mod models;

@@ -1,0 +1,261 @@
+//! The wake-protocol models. Each `#[test]` wraps one `loom::model` that
+//! explores every thread interleaving (bounded by `LOOM_MAX_PREEMPTIONS`)
+//! of a protocol the threaded engine relies on for liveness or the
+//! determinism contract relies on for ordering. A lost wakeup shows up as
+//! a loom-detected deadlock; an ordering violation as an assert.
+
+use std::time::Duration;
+
+use loom::thread;
+
+use crate::mpisim::collectives::{CollBoard, Enter};
+use crate::mpisim::p2p::{Envelope, Mailbox};
+use crate::mpisim::request::{Protocol, SendCell};
+use crate::mpisim::sched::deadlock::BlockInfo;
+use crate::mpisim::sched::scheduler::Scheduler;
+use crate::util::sync::{Arc, AtomicBool, Deadline, Notify, OneShot, Ordering};
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+fn env(src: usize, tag: i32, ctx: u32) -> Envelope {
+    Envelope {
+        src,
+        tag,
+        ctx,
+        payload: Vec::new(),
+        protocol: Protocol::Eager,
+        sender_ready: 0.0,
+        wire: 0.0,
+        handshake: 0.0,
+        reply: None,
+    }
+}
+
+/// Protocol 1 (`Notify`): a publisher storing state then notifying can
+/// never be missed by a waiter that snapshots, scans, and sleeps — the
+/// pre-sleep counter check closes the scan-to-sleep window.
+#[test]
+fn notify_never_misses_a_publication() {
+    loom::model(|| {
+        let n = Arc::new(Notify::new());
+        let published = Arc::new(AtomicBool::new(false));
+        let (n2, p2) = (n.clone(), published.clone());
+        let t = thread::spawn(move || {
+            p2.store(true, Ordering::Release);
+            n2.notify();
+        });
+        let deadline = Deadline::after(TIMEOUT);
+        loop {
+            let snapshot = n.snapshot();
+            if published.load(Ordering::Acquire) {
+                break;
+            }
+            n.wait_changed(snapshot, &deadline);
+        }
+        t.join().unwrap();
+    });
+}
+
+/// Protocol 1 applied: a mailbox deposit racing a blocking match — the
+/// matcher always takes the envelope, in every interleaving of the
+/// deposit's shard push / counter bump with the matcher's scan / sleep.
+#[test]
+fn mailbox_deposit_wakes_matcher() {
+    loom::model(|| {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let t = thread::spawn(move || mb2.deposit(env(1, 7, 0)));
+        let got = mb.match_recv(0, Some(1), 7, 0, TIMEOUT).unwrap();
+        assert_eq!((got.src, got.tag), (1, 7));
+        t.join().unwrap();
+    });
+}
+
+/// Sharded-mailbox ordering: ANY_SOURCE must reproduce earliest-deposit
+/// order across shards. Two deposits land in *different* shards; the
+/// blocking ANY matcher must always take them in deposit (seq) order, no
+/// matter where its shard scan interleaves with the pushes.
+#[test]
+fn any_source_takes_min_seq_across_shards() {
+    loom::model(|| {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let t = thread::spawn(move || {
+            mb2.deposit(env(0, 7, 0)); // seq 0 -> shard 0
+            mb2.deposit(env(1, 7, 0)); // seq 1 -> shard 1
+        });
+        let first = mb.match_recv(9, None, 7, 0, TIMEOUT).unwrap();
+        assert_eq!(first.src, 0, "ANY_SOURCE must see deposit order");
+        let second = mb.match_recv(9, None, 7, 0, TIMEOUT).unwrap();
+        assert_eq!(second.src, 1);
+        t.join().unwrap();
+    });
+}
+
+/// Sharded-mailbox ordering: ids from concurrent same-key posts are
+/// distinct and allocation-ordered, and `pending_posted_before` agrees —
+/// exactly one post sees the other as pending-before.
+#[test]
+fn posted_receive_order_under_concurrent_posts() {
+    loom::model(|| {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let t = thread::spawn(move || mb2.post_recv(Some(2), 5, 0, 0.0));
+        let id_a = mb.post_recv(Some(2), 5, 0, 0.0);
+        let id_b = t.join().unwrap();
+        assert_ne!(id_a, id_b);
+        let before_a = mb.pending_posted_before(id_a, Some(2), 5, 0);
+        let before_b = mb.pending_posted_before(id_b, Some(2), 5, 0);
+        assert_eq!(
+            before_a + before_b,
+            1,
+            "exactly one post is first in binding order"
+        );
+        assert_eq!(id_a < id_b, before_a == 0, "binding order follows ids");
+    });
+}
+
+/// Protocol 3 (`OneShot`): the receiver completing a rendezvous cell
+/// always wakes a sender blocked in `wait`, and `poll` agrees afterward.
+#[test]
+fn sendcell_complete_wakes_waiter() {
+    loom::model(|| {
+        let cell = Arc::new(SendCell::default());
+        let c2 = cell.clone();
+        let t = thread::spawn(move || c2.complete(2.5));
+        assert_eq!(cell.wait(TIMEOUT), Some(2.5));
+        t.join().unwrap();
+        assert_eq!(cell.poll(), Some(2.5));
+        assert!(cell.is_complete());
+    });
+}
+
+/// Protocol 3, write-once edge: two racing completions — exactly one
+/// wins, and every later read observes the winner's value.
+#[test]
+fn oneshot_first_completion_wins() {
+    loom::model(|| {
+        let cell: Arc<OneShot<f64>> = Arc::new(OneShot::new());
+        let c2 = cell.clone();
+        let t = thread::spawn(move || c2.complete(1.0));
+        let main_won = cell.complete(2.0);
+        let thread_won = t.join().unwrap();
+        assert!(main_won ^ thread_won, "exactly one completion wins");
+        let v = cell.poll().unwrap();
+        assert_eq!(v, if main_won { 2.0 } else { 1.0 });
+        assert_eq!(cell.wait(TIMEOUT), Some(v), "value never changes");
+    });
+}
+
+/// Protocol 2 (`SignalSlot` + `pending_wake`): a wake targeting a task
+/// that is currently Running must not be lost — the task's next `park`
+/// returns immediately and it re-checks its condition. Without the
+/// pending-wake mark the parked task would sleep forever and loom would
+/// report the deadlock.
+#[test]
+fn scheduler_wake_races_running_task() {
+    loom::model(|| {
+        let sched = Arc::new(Scheduler::new(2, 2));
+        let flag = Arc::new(AtomicBool::new(false));
+        let (s0, f0) = (sched.clone(), flag.clone());
+        let t0 = thread::spawn(move || {
+            s0.admit(0);
+            while !f0.load(Ordering::Acquire) {
+                s0.park(0, BlockInfo::WaitAny { n_reqs: 1 }).unwrap();
+            }
+            s0.finish(0);
+        });
+        let (s1, f1) = (sched.clone(), flag.clone());
+        let t1 = thread::spawn(move || {
+            s1.admit(1);
+            f1.store(true, Ordering::Release);
+            s1.wake(0, 1.0);
+            s1.finish(1);
+        });
+        t0.join().unwrap();
+        t1.join().unwrap();
+    });
+}
+
+fn sum_finalize(contribs: &mut [Option<Box<[u8]>>]) -> Box<[u8]> {
+    let s: u8 = contribs
+        .iter()
+        .map(|c| c.as_ref().expect("all members contributed")[0])
+        .sum();
+    Box::from([s])
+}
+
+/// Protocol 4 (`Monitor` board, nonblocking entry): whichever of two
+/// racing members arrives last runs the reduction; its wake set is
+/// exactly the earlier arriver; the pending member's `try_result` take
+/// drains the slot.
+#[test]
+fn collective_last_arriver_owns_wake_set() {
+    loom::model(|| {
+        let board = Arc::new(CollBoard::new());
+        let key = (0u32, 1u64);
+        let b2 = board.clone();
+        let t = thread::spawn(move || {
+            match b2
+                .enter(key, "allreduce", 2, 0, 10, 1.0, Box::from([3u8]), &sum_finalize)
+                .unwrap()
+            {
+                Enter::Done {
+                    result,
+                    max_entry,
+                    wake,
+                } => Some((result, max_entry, wake)),
+                Enter::Pending => None,
+            }
+        });
+        let mine = match board
+            .enter(key, "allreduce", 2, 1, 11, 2.0, Box::from([4u8]), &sum_finalize)
+            .unwrap()
+        {
+            Enter::Done {
+                result,
+                max_entry,
+                wake,
+            } => Some((result, max_entry, wake)),
+            Enter::Pending => None,
+        };
+        let theirs = t.join().unwrap();
+        let (done, pending_rank) = match (&mine, &theirs) {
+            (Some(d), None) => (d, 10),
+            (None, Some(d)) => (d, 11),
+            _ => panic!("exactly one member is the last arriver"),
+        };
+        assert_eq!(&done.0[..], &[7u8], "reduction saw both contributions");
+        assert_eq!(done.1, 2.0, "max entry time spans both members");
+        assert_eq!(done.2, vec![pending_rank], "wake set = earlier arrivers");
+        // The pending member's take: result present exactly once, then the
+        // fully-left slot is gone.
+        let (result, max_entry) = board.try_result(key).expect("published result");
+        assert_eq!(&result[..], &[7u8]);
+        assert_eq!(max_entry, 2.0);
+        assert!(board.try_result(key).is_none(), "slot drained after last leave");
+    });
+}
+
+/// Protocol 4, blocking edge: both members in the threaded engine's
+/// condvar-waiting `run` — the pending member always wakes and returns
+/// the published result.
+#[test]
+fn collective_run_wakes_condvar_waiter() {
+    loom::model(|| {
+        let board = Arc::new(CollBoard::new());
+        let key = (0u32, 2u64);
+        let b2 = board.clone();
+        let t = thread::spawn(move || {
+            b2.run(key, "allreduce", 2, 0, 10, 1.0, Box::from([3u8]), &sum_finalize, TIMEOUT)
+                .unwrap()
+        });
+        let (mine, my_max) = board
+            .run(key, "allreduce", 2, 1, 11, 2.0, Box::from([4u8]), &sum_finalize, TIMEOUT)
+            .unwrap();
+        let (theirs, their_max) = t.join().unwrap();
+        assert_eq!(&mine[..], &[7u8]);
+        assert_eq!(&theirs[..], &[7u8]);
+        assert_eq!((my_max, their_max), (2.0, 2.0));
+    });
+}

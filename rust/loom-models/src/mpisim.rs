@@ -1,0 +1,22 @@
+//! Mounts the simulator modules under model check. Only the items the
+//! mounted files pull from `super::` are declared here; everything else
+//! (world, topology, netmodel…) stays out of the loom build.
+
+/// Wildcard tag (mirrors `commscope::mpisim::ANY_TAG` — the mounted
+/// `p2p.rs` imports it via `super::ANY_TAG`).
+pub const ANY_TAG: i32 = -1;
+
+#[path = "../../src/mpisim/error.rs"]
+pub mod error;
+
+#[path = "../../src/mpisim/request.rs"]
+pub mod request;
+
+#[path = "../../src/mpisim/p2p.rs"]
+pub mod p2p;
+
+#[path = "../../src/mpisim/collectives.rs"]
+pub mod collectives;
+
+#[path = "mpisim/sched.rs"]
+pub mod sched;

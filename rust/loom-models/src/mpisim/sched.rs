@@ -1,0 +1,11 @@
+//! Mounts the event scheduler (`super::super::error` resolves to the
+//! mounted `mpisim::error`).
+
+#[path = "../../../src/mpisim/sched/queue.rs"]
+pub mod queue;
+
+#[path = "../../../src/mpisim/sched/deadlock.rs"]
+pub mod deadlock;
+
+#[path = "../../../src/mpisim/sched/scheduler.rs"]
+pub mod scheduler;

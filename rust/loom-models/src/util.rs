@@ -1,0 +1,5 @@
+//! Mounts the concurrency facade so the mounted simulator sources resolve
+//! `crate::util::sync` exactly as they do inside `commscope`.
+
+#[path = "../../src/util/sync.rs"]
+pub mod sync;

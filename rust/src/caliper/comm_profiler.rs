@@ -9,7 +9,7 @@
 //! region exit from the rank's virtual clock. What gets recorded per event
 //! is decided by the attached [`MetricChannel`]s.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::channel::{ChannelConfig, MetricChannel};
 use super::profile::{RankProfile, RegionStats};
@@ -28,7 +28,9 @@ struct Frame {
 pub struct CommProfiler {
     rank: usize,
     stack: Vec<Frame>,
-    regions: HashMap<String, RegionStats>,
+    // Ordered map: region iteration order feeds the artifact directly,
+    // so it must not depend on hash state (determinism contract).
+    regions: BTreeMap<String, RegionStats>,
     /// Index in `stack` of the innermost active comm region, lazily
     /// maintained (indices of comm frames, in stack order).
     comm_frames: Vec<usize>,
@@ -61,7 +63,7 @@ impl CommProfiler {
         let mut p = CommProfiler {
             rank,
             stack: Vec::new(),
-            regions: HashMap::new(),
+            regions: BTreeMap::new(),
             comm_frames: Vec::new(),
             attr_path: String::new(),
             attr_is_comm: false,
@@ -163,7 +165,7 @@ impl CommProfiler {
             regions: Default::default(),
             trace: None,
         };
-        for (path, stats) in self.regions.drain() {
+        for (path, stats) in std::mem::take(&mut self.regions) {
             // Buckets pre-created for the hot path that never saw an event
             // or an exit are bookkeeping, not data.
             if !stats.is_untouched() {

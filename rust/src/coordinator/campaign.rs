@@ -13,9 +13,9 @@
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+use crate::util::sync::{Arc, AtomicUsize, Mutex, Ordering};
 
 use anyhow::{bail, Context, Result};
 

@@ -10,8 +10,9 @@
 //! entry time (the synchronization point from which the cost model extends).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::util::sync::{Arc, Deadline, Monitor};
 
 use super::error::MpiError;
 
@@ -86,10 +87,13 @@ pub enum Enter {
 }
 
 /// The process-wide board shared by all ranks of a `World`.
+///
+/// The slot table is keyed by runtime identity and *never iterated* —
+/// every access is a point lookup by `(ctx, seq)` — so its hash order
+/// cannot reach an artifact.
 #[derive(Default)]
 pub struct CollBoard {
-    slots: Mutex<HashMap<(u32, u64), CollSlot>>,
-    cv: Condvar,
+    slots: Monitor<HashMap<(u32, u64), CollSlot>>,
 }
 
 impl CollBoard {
@@ -119,7 +123,7 @@ impl CollBoard {
         contrib: Box<[u8]>,
         finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
     ) -> Result<Enter, MpiError> {
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = self.slots.lock();
         let slot = slots.entry(key).or_insert_with(|| CollSlot {
             kind,
             expected: comm_size,
@@ -159,9 +163,9 @@ impl CollBoard {
             slots.remove(&key);
         }
         drop(slots);
-        // Threaded members sleep on the board condvar; event members are
+        // Threaded members sleep on the board monitor; event members are
         // woken by the caller through the scheduler's wake set.
-        self.cv.notify_all();
+        self.slots.notify_all();
         Ok(Enter::Done {
             result,
             max_entry,
@@ -173,7 +177,7 @@ impl CollBoard {
     /// is finalized. One successful call = one member leaving; the last
     /// leaver removes the slot. The event engine's poll-and-park probe.
     pub fn try_result(&self, key: (u32, u64)) -> Option<(Arc<[u8]>, f64)> {
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = self.slots.lock();
         Self::take_result_locked(&mut slots, key)
     }
 
@@ -210,7 +214,7 @@ impl CollBoard {
         finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
         timeout: Duration,
     ) -> Result<(Arc<[u8]>, f64), MpiError> {
-        let deadline = Instant::now() + timeout;
+        let deadline = Deadline::after(timeout);
         match self.enter(
             key,
             kind,
@@ -227,13 +231,12 @@ impl CollBoard {
             Enter::Pending => {}
         }
         // Wait (real time, deadlock-guarded) for the last arriver.
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = self.slots.lock();
         loop {
             if let Some(out) = Self::take_result_locked(&mut slots, key) {
                 return Ok(out);
             }
-            let now = Instant::now();
-            if now >= deadline {
+            if deadline.expired() {
                 let slot = slots.get(&key).expect("collective slot vanished");
                 return Err(MpiError::CollectiveTimeout {
                     rank: my_world_rank,
@@ -244,8 +247,7 @@ impl CollBoard {
                     millis: timeout.as_millis() as u64,
                 });
             }
-            let (guard, _r) = self.cv.wait_timeout(slots, deadline - now).unwrap();
-            slots = guard;
+            slots = self.slots.wait_timeout(slots, &deadline);
         }
     }
 }
@@ -275,10 +277,12 @@ pub fn frame_split(bytes: &[u8]) -> Vec<Vec<u8>> {
     out
 }
 
-#[cfg(test)]
+// not(loom): real threads and sleeps; `rust/loom-models` replaces these
+// under loom with exhaustive interleaving models.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
-    use std::sync::Arc as StdArc;
+    use crate::util::sync::Arc as StdArc;
 
     #[test]
     fn framing_roundtrip() {
@@ -334,7 +338,7 @@ mod tests {
             assert_eq!(max_t, 7.0);
         }
         // slot cleaned up
-        assert!(board.slots.lock().unwrap().is_empty());
+        assert!(board.slots.lock().is_empty());
     }
 
     #[test]
@@ -460,7 +464,7 @@ mod tests {
             board.try_result((0, 0)).is_none(),
             "slot removed after the last leave"
         );
-        assert!(board.slots.lock().unwrap().is_empty());
+        assert!(board.slots.lock().is_empty());
     }
 
     #[test]

@@ -71,7 +71,7 @@ pub enum MpiError {
     BadCartDims { dims: Vec<usize>, size: usize },
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

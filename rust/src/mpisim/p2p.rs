@@ -47,9 +47,9 @@
 
 use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::util::sync::{Arc, AtomicU64, Deadline, Mutex, Notify, Ordering};
 
 use super::error::MpiError;
 use super::request::{Protocol, SendCell};
@@ -140,10 +140,10 @@ pub struct Mailbox {
     shards: Vec<Mutex<VecDeque<Queued>>>,
     /// Mailbox-wide deposit stamp source (earliest-deposit order).
     seq: AtomicU64,
-    /// Deposits so far; the condvar's paired mutex. See module docs for
-    /// the snapshot/rescan protocol that makes missed wakeups impossible.
-    deposits: Mutex<u64>,
-    cv: Condvar,
+    /// Deposit event counter + condvar. See module docs for the
+    /// snapshot/rescan protocol that makes missed wakeups impossible;
+    /// [`Notify`] owns the blocking edge of it.
+    notify: Notify,
     /// Posted-receive table, striped by matching-key hash.
     posted: Vec<Mutex<PostTable>>,
     /// Allocation-ordered id counter for posted receives (shifted left by
@@ -164,8 +164,7 @@ impl Mailbox {
         Mailbox {
             shards: (0..QUEUE_SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
             seq: AtomicU64::new(0),
-            deposits: Mutex::new(0),
-            cv: Condvar::new(),
+            notify: Notify::new(),
             posted: (0..POST_STRIPES).map(|_| Mutex::new(PostTable::default())).collect(),
             post_ids: AtomicU64::new(0),
             pool: Mutex::new(Vec::new()),
@@ -201,12 +200,7 @@ impl Mailbox {
         }
         // Bump the deposit counter *after* the push: a receiver that
         // scanned too early sees the changed counter and rescans.
-        let mut d = self.deposits.lock().unwrap();
-        *d += 1;
-        drop(d);
-        // notify_all: multiple receivers only occur in tests; apps have one
-        // receiving thread per mailbox by construction.
-        self.cv.notify_all();
+        self.notify.notify();
     }
 
     /// Number of queued (unmatched) envelopes — used by failure diagnostics.
@@ -276,8 +270,7 @@ impl Mailbox {
     /// Block until a new envelope is deposited or `slice` elapses — the
     /// progress wait of `waitany`.
     pub fn wait_deposit(&self, slice: Duration) {
-        let d = self.deposits.lock().unwrap();
-        let (_guard, _res) = self.cv.wait_timeout(d, slice).unwrap();
+        self.notify.wait_brief(slice);
     }
 
     /// Block until an envelope matching (src, tag, ctx) is available and
@@ -307,16 +300,16 @@ impl Mailbox {
         skip: usize,
         timeout: Duration,
     ) -> Result<Envelope, MpiError> {
-        let deadline = Instant::now() + timeout;
+        let deadline = Deadline::after(timeout);
         loop {
             // Snapshot-before-scan: any deposit that lands after this read
-            // bumps the counter, which the pre-sleep check below catches.
-            let snapshot = *self.deposits.lock().unwrap();
+            // bumps the counter, which `Notify::wait_changed` catches
+            // before it would sleep.
+            let snapshot = self.notify.snapshot();
             if let Some(env) = self.try_take(src, tag, ctx, skip) {
                 return Ok(env);
             }
-            let now = Instant::now();
-            if now >= deadline {
+            if deadline.expired() {
                 return Err(MpiError::RecvTimeout {
                     rank: my_rank,
                     src,
@@ -325,11 +318,7 @@ impl Mailbox {
                     millis: timeout.as_millis() as u64,
                 });
             }
-            let d = self.deposits.lock().unwrap();
-            if *d != snapshot {
-                continue; // deposit raced the scan — rescan before sleeping
-            }
-            let (_guard, _res) = self.cv.wait_timeout(d, deadline - now).unwrap();
+            self.notify.wait_changed(snapshot, &deadline);
         }
     }
 
@@ -389,7 +378,9 @@ impl Mailbox {
     }
 }
 
-#[cfg(test)]
+// not(loom): these tests drive real std threads and sleeps; under loom the
+// file is mounted into `rust/loom-models`, whose models replace them.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -27,8 +27,9 @@
 //! ([`super::p2p::Mailbox::take_buffer`]), so a steady-state
 //! send/recv/wait cycle allocates nothing per message.
 
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::util::sync::{Arc, OneShot};
 
 /// Completion status of a receive.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,48 +56,31 @@ pub enum Protocol {
 /// envelope; the sender's `wait` blocks (real time) until then.
 #[derive(Debug, Default)]
 pub struct SendCell {
-    state: Mutex<Option<f64>>,
-    cv: Condvar,
+    cell: OneShot<f64>,
 }
 
 impl SendCell {
     /// Record the transfer's virtual completion time and wake the sender.
+    /// First match wins; a cell is only ever completed once per message.
     pub fn complete(&self, t: f64) {
-        let mut s = self.state.lock().unwrap();
-        // First match wins; a cell is only ever completed once per message.
-        if s.is_none() {
-            *s = Some(t);
-        }
-        self.cv.notify_all();
+        self.cell.complete(t);
     }
 
     /// Nonblocking read of the completion time — the event engine's
     /// poll-and-park probe (the scheduler decides when to retry).
     pub fn poll(&self) -> Option<f64> {
-        *self.state.lock().unwrap()
+        self.cell.poll()
     }
 
     /// Nonblocking completion probe.
     pub fn is_complete(&self) -> bool {
-        self.poll().is_some()
+        self.cell.is_complete()
     }
 
     /// Block (real time) until completed; `None` on timeout (deadlock
     /// guard — the receiver never matched).
     pub fn wait(&self, timeout: Duration) -> Option<f64> {
-        let deadline = Instant::now() + timeout;
-        let mut s = self.state.lock().unwrap();
-        loop {
-            if let Some(t) = *s {
-                return Some(t);
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _res) = self.cv.wait_timeout(s, deadline - now).unwrap();
-            s = guard;
-        }
+        self.cell.wait(timeout)
     }
 }
 
@@ -190,7 +174,9 @@ impl From<RecvRequest> for Request {
     }
 }
 
-#[cfg(test)]
+// not(loom): real threads and sleeps; `rust/loom-models` replaces these
+// under loom with exhaustive interleaving models.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

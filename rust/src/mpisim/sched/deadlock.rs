@@ -142,7 +142,7 @@ pub(crate) fn deadlock_report(blocked: &[Option<BlockInfo>]) -> String {
     out
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -70,7 +70,7 @@ impl RunQueue {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

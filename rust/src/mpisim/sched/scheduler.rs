@@ -26,7 +26,7 @@
 //! sleeps on its slot *after* releasing `inner`, so the two levels never
 //! deadlock against each other.
 
-use std::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::{Arc, Mutex, SignalSlot};
 
 use super::super::error::MpiError;
 use super::deadlock::{deadlock_report, BlockInfo};
@@ -48,13 +48,6 @@ enum TaskState {
     Blocked,
     /// Returned; its slot is free forever.
     Finished,
-}
-
-/// Per-task wake flag paired with a condvar: the only thing a descheduled
-/// thread blocks on.
-struct TaskSlot {
-    runnable: Mutex<bool>,
-    cv: Condvar,
 }
 
 struct Inner {
@@ -79,7 +72,9 @@ pub(crate) struct Scheduler {
     size: usize,
     workers: usize,
     inner: Mutex<Inner>,
-    slots: Vec<TaskSlot>,
+    /// Per-task consumable wake flag + condvar — the only thing a
+    /// descheduled thread blocks on ([`SignalSlot`]).
+    slots: Vec<SignalSlot>,
 }
 
 impl Scheduler {
@@ -105,12 +100,7 @@ impl Scheduler {
                 aborted: false,
                 deadlock: None,
             }),
-            slots: (0..size)
-                .map(|_| TaskSlot {
-                    runnable: Mutex::new(false),
-                    cv: Condvar::new(),
-                })
-                .collect(),
+            slots: (0..size).map(|_| SignalSlot::new()).collect(),
         };
         let mut inner = sched.inner.lock().unwrap();
         sched.dispatch_locked(&mut inner);
@@ -133,19 +123,12 @@ impl Scheduler {
     /// `inner` held (dispatch, deadlock) or after it is released (abort) —
     /// both respect the `inner` → `slot` lock order.
     fn signal(&self, rank: usize) {
-        let mut g = self.slots[rank].runnable.lock().unwrap();
-        *g = true;
-        self.slots[rank].cv.notify_one();
+        self.slots[rank].signal();
     }
 
     /// Sleep until this task's slot is signaled; consumes the signal.
     fn wait_runnable(&self, rank: usize) {
-        let slot = &self.slots[rank];
-        let mut g = slot.runnable.lock().unwrap();
-        while !*g {
-            g = slot.cv.wait(g).unwrap();
-        }
-        *g = false;
+        self.slots[rank].await_signal();
     }
 
     /// Block the calling thread until the scheduler first dispatches task
@@ -286,9 +269,7 @@ impl Scheduler {
         inner.aborted = true;
         drop(inner);
         for slot in &self.slots {
-            let mut g = slot.runnable.lock().unwrap();
-            *g = true;
-            slot.cv.notify_one();
+            slot.signal();
         }
     }
 }
@@ -327,7 +308,9 @@ impl Drop for TaskGuard<'_> {
     }
 }
 
-#[cfg(test)]
+// not(loom): real threads; `rust/loom-models` drives the same scheduler
+// under loom with exhaustive interleaving models.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -19,8 +19,9 @@
 //! ```
 
 use std::collections::HashMap;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::util::sync::{Arc, Deadline};
 
 use super::clock::{Clock, ClockHandle};
 use super::collectives::{frame_concat, frame_split, CollBoard, ReduceOp};
@@ -724,14 +725,14 @@ impl<'w> Rank<'w> {
                 sched.park(self.rank, BlockInfo::WaitAny { n_reqs: reqs.len() })?;
             }
         }
-        let deadline = Instant::now() + self.core.timeout;
+        let deadline = Deadline::after(self.core.timeout);
         loop {
             if let Some(i) = reqs.iter().position(|r| self.test(r)) {
                 let req = reqs.remove(i);
                 let mut out = self.waitall::<T>(vec![req])?;
                 return Ok((i, out.pop().unwrap()));
             }
-            if Instant::now() >= deadline {
+            if deadline.expired() {
                 // Blame a request that is actually stuck, not whatever
                 // happens to sit at index 0.
                 let stuck = reqs.iter().position(|r| !self.test(r)).unwrap_or(0);
@@ -901,7 +902,7 @@ impl<'w> Rank<'w> {
         contrib: Box<[u8]>,
         cost: CollCost,
         finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
-    ) -> Result<std::sync::Arc<[u8]>, MpiError> {
+    ) -> Result<Arc<[u8]>, MpiError> {
         let seq = self.next_coll_seq(comm.ctx);
         let span = self.comm_span(comm);
         let t_start = self.clock.now();

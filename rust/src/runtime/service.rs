@@ -12,8 +12,7 @@
 //! the small canonical artifact shapes this is not a bottleneck
 //! (measured in EXPERIMENTS.md §Perf).
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use crate::util::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
@@ -23,10 +22,10 @@ enum Request {
     Execute {
         name: String,
         inputs: Vec<Vec<f32>>,
-        reply: mpsc::Sender<Result<Vec<Vec<f32>>, String>>,
+        reply: mpsc::SyncSender<Result<Vec<Vec<f32>>, String>>,
     },
     Platform {
-        reply: mpsc::Sender<String>,
+        reply: mpsc::SyncSender<String>,
     },
     Shutdown,
 }
@@ -34,13 +33,13 @@ enum Request {
 /// Cloneable, `Send` handle used by rank threads.
 #[derive(Clone)]
 pub struct ComputeHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
 }
 
 impl ComputeHandle {
     /// Execute a compiled model; blocks until the service replies.
     pub fn execute(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Request::Execute {
                 name: name.to_string(),
@@ -54,7 +53,7 @@ impl ComputeHandle {
     }
 
     pub fn platform(&self) -> Result<String> {
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Request::Platform { reply })
             .map_err(|_| anyhow!("compute service is down"))?;
@@ -64,7 +63,7 @@ impl ComputeHandle {
 
 /// The owning side: spawns the service thread, shuts it down on drop.
 pub struct ComputeService {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -73,8 +72,10 @@ impl ComputeService {
     /// artifacts are missing or won't compile.
     pub fn start(dir: impl Into<std::path::PathBuf>) -> Result<ComputeService> {
         let dir = dir.into();
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        // Bounded queue: backpressure instead of unbounded memory if
+        // ranks outrun the accelerator thread.
+        let (tx, rx) = mpsc::sync_channel::<Request>(64);
+        let (init_tx, init_rx) = mpsc::sync_channel::<Result<(), String>>(1);
         let join = std::thread::Builder::new()
             .name("pjrt-compute".to_string())
             .spawn(move || {

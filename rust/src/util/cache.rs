@@ -7,8 +7,8 @@
 //! Values are stored behind `Arc` so duplicate cells share one allocation.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+
+use crate::util::sync::{Arc, AtomicU64, Mutex, Ordering};
 
 /// Cache observability counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]

@@ -19,6 +19,10 @@
 //!   `rayon`) — the campaign executor's substrate.
 //! - [`cache`]: a content-keyed result cache with hit/miss accounting
 //!   (experiment-cell deduplication).
+//! - [`sync`]: the concurrency facade — `cfg(loom)`-switchable re-exports
+//!   of every sanctioned sync primitive plus the wake-protocol building
+//!   blocks (`Notify`, `OneShot`, `Monitor`, `SignalSlot`, `Deadline`).
+//!   The `raw-sync` lint rule (`cargo xtask lint`) forbids bypassing it.
 
 pub mod alloc;
 pub mod benchutil;
@@ -30,4 +34,5 @@ pub mod plotascii;
 pub mod pool;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

@@ -12,8 +12,8 @@
 //! parallel batches deterministic for downstream consumers.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+
+use crate::util::sync::{AtomicU64, Mutex, Ordering};
 
 /// Observability for one batch: how the work actually spread.
 #[derive(Debug, Clone, Copy, Default)]
@@ -114,8 +114,8 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::sync::AtomicUsize;
     use std::collections::BTreeSet;
-    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn results_in_input_order() {

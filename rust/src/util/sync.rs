@@ -1,0 +1,506 @@
+//! The concurrency facade: every synchronization primitive the stack is
+//! allowed to use, from one file.
+//!
+//! This module exists for two reasons, both enforced mechanically:
+//!
+//! 1. **`cargo xtask lint` (`raw-sync`)** forbids constructing
+//!    `std::sync` blocking primitives anywhere else in `rust/src`. All
+//!    `Mutex`/`Condvar`/atomic types flow through these re-exports, so
+//!    the whole tree switches substrate in one place.
+//! 2. **`cfg(loom)`** swaps the re-exports for [loom]'s model-checked
+//!    primitives. The `rust/loom-models` crate (workspace-excluded, so
+//!    the offline tier-1 build never resolves the `loom` dependency)
+//!    mounts the real `mpisim` sources via `#[path]` and explores every
+//!    interleaving of the wake protocols documented in
+//!    `docs/DETERMINISM.md`. Normal builds never set `--cfg loom`, so
+//!    the loom branches below are compiled out and cost nothing.
+//!
+//! Beyond the re-exports, the module owns the small set of *wake-protocol
+//! primitives* (`Notify`, `OneShot`, `Monitor`, `SignalSlot`) plus the
+//! [`Deadline`] wall-clock guard. Concentrating them here keeps every
+//! `Instant`/`wait_timeout` out of `mpisim` (the `wall-clock` lint rule):
+//! simulator code expresses *what* it waits for; only this file knows
+//! real time exists. Under loom, deadlines never expire — the models
+//! drive protocols that are guaranteed to complete, and loom itself
+//! bounds the exploration.
+//!
+//! [loom]: https://docs.rs/loom
+//!
+//! # Which primitive to reach for
+//!
+//! | primitive | protocol | adopted by |
+//! |---|---|---|
+//! | [`Notify`] | counter + condvar, snapshot/rescan (no missed wakeups) | `mpisim/p2p.rs` mailbox deposits |
+//! | [`OneShot`] | write-once cell, complete-vs-poll-vs-wait | `mpisim/request.rs` rendezvous back-channel |
+//! | [`Monitor`] | state + condvar, wait-with-deadline | `mpisim/collectives.rs` board |
+//! | [`SignalSlot`] | consumable runnable flag | `mpisim/sched/scheduler.rs` task slots |
+//! | [`Deadline`] | monotonic wall-clock guard | every real-time timeout |
+
+use std::time::Duration;
+
+// `Arc` is pure data sharing — no interleaving to explore — so the std
+// type is used under loom too. That keeps unsized coercions
+// (`Arc<[u8]>`, `Arc<str>`) working in mounted sources; loom's own `Arc`
+// does not support them.
+pub use std::sync::Arc;
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Bounded message channels. Deliberately re-exports only the
+/// `sync_channel` family: the `unbounded-channel` lint rule forbids
+/// `mpsc::channel()` tree-wide, so an unbounded queue cannot be built
+/// without tripping the lint *and* bypassing this facade. Absent under
+/// loom (loom does not model mpsc; no mounted source uses channels).
+#[cfg(not(loom))]
+pub mod mpsc {
+    pub use std::sync::mpsc::{sync_channel, Receiver, RecvError, SyncSender, TrySendError};
+}
+
+/// A monotonic real-time deadline: the only sanctioned way to bound a
+/// blocking wait by wall-clock time. Simulator code holds a `Deadline`
+/// and asks it questions; it never sees an `Instant`.
+///
+/// Under `cfg(loom)` a deadline never expires and `remaining()` is a
+/// large constant — loom models check wake protocols whose completion
+/// is guaranteed by the model itself, and loom bounds the exploration.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    #[cfg(not(loom))]
+    at: std::time::Instant,
+}
+
+impl Deadline {
+    /// A deadline `timeout` from now.
+    #[cfg(not(loom))]
+    pub fn after(timeout: Duration) -> Deadline {
+        Deadline {
+            at: std::time::Instant::now() + timeout,
+        }
+    }
+
+    /// A deadline `timeout` from now (loom: never expires).
+    #[cfg(loom)]
+    pub fn after(timeout: Duration) -> Deadline {
+        let _ = timeout;
+        Deadline {}
+    }
+
+    /// Has the deadline passed?
+    #[cfg(not(loom))]
+    pub fn expired(&self) -> bool {
+        std::time::Instant::now() >= self.at
+    }
+
+    /// Has the deadline passed? (loom: never.)
+    #[cfg(loom)]
+    pub fn expired(&self) -> bool {
+        false
+    }
+
+    /// Time left until the deadline (zero once expired).
+    #[cfg(not(loom))]
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(std::time::Instant::now())
+    }
+
+    /// Time left until the deadline (loom: a large constant).
+    #[cfg(loom)]
+    pub fn remaining(&self) -> Duration {
+        Duration::from_secs(3600)
+    }
+}
+
+/// An event counter paired with a condvar: the missed-wakeup-free
+/// publication protocol of the mailbox (`mpisim/p2p.rs`).
+///
+/// Protocol: a waiter takes [`Notify::snapshot`], *then* scans whatever
+/// shared structure it is waiting on, and only sleeps in
+/// [`Notify::wait_changed`] — which refuses to block if the counter
+/// moved since the snapshot. A publisher updates the structure first and
+/// calls [`Notify::notify`] last. Any publication that lands between
+/// snapshot and sleep is therefore caught by the pre-sleep counter
+/// check; one that lands during the scan is caught by the rescan. The
+/// loom model `mailbox_deposit_wakes_matcher` explores every
+/// interleaving of this dance.
+pub struct Notify {
+    count: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notify {
+    pub fn new() -> Notify {
+        Notify {
+            count: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Current event count. Take this *before* scanning shared state.
+    pub fn snapshot(&self) -> u64 {
+        *self.count.lock().unwrap()
+    }
+
+    /// Record one event and wake all waiters. Call *after* the shared
+    /// state is updated.
+    pub fn notify(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c += 1;
+        drop(c);
+        self.cv.notify_all();
+    }
+
+    /// Sleep until the count moves past `snapshot` or `deadline` passes.
+    /// Returns immediately (without sleeping) if the count already
+    /// moved — the caller's cue to rescan. Returns `true` iff the count
+    /// changed.
+    #[cfg(not(loom))]
+    pub fn wait_changed(&self, snapshot: u64, deadline: &Deadline) -> bool {
+        let mut c = self.count.lock().unwrap();
+        while *c == snapshot {
+            if deadline.expired() {
+                return false;
+            }
+            let (guard, _res) = self.cv.wait_timeout(c, deadline.remaining()).unwrap();
+            c = guard;
+        }
+        true
+    }
+
+    /// Sleep until the count moves past `snapshot` (loom: no timeout —
+    /// the model guarantees a publisher).
+    #[cfg(loom)]
+    pub fn wait_changed(&self, snapshot: u64, _deadline: &Deadline) -> bool {
+        let mut c = self.count.lock().unwrap();
+        while *c == snapshot {
+            c = self.cv.wait(c).unwrap();
+        }
+        true
+    }
+
+    /// Bounded nap until any event arrives or `slice` elapses — the
+    /// polling wait of `waitany`'s threaded path. Deliberately does not
+    /// loop: the caller rechecks its own condition.
+    #[cfg(not(loom))]
+    pub fn wait_brief(&self, slice: Duration) {
+        let c = self.count.lock().unwrap();
+        let (_guard, _res) = self.cv.wait_timeout(c, slice).unwrap();
+    }
+
+    /// Bounded nap (loom: waits for the next event).
+    #[cfg(loom)]
+    pub fn wait_brief(&self, _slice: Duration) {
+        let c = self.count.lock().unwrap();
+        let _guard = self.cv.wait(c).unwrap();
+    }
+}
+
+impl Default for Notify {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Notify {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Notify { .. }")
+    }
+}
+
+/// A write-once cell with complete/poll/wait: the rendezvous send
+/// back-channel (`mpisim/request.rs`). The first [`OneShot::complete`]
+/// wins; later completions are ignored. [`OneShot::poll`] is the event
+/// engine's nonblocking probe; [`OneShot::wait`] is the threaded
+/// engine's deadline-bounded block. The loom model
+/// `sendcell_complete_wakes_waiter` explores complete racing both.
+pub struct OneShot<T> {
+    state: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+impl<T: Copy> OneShot<T> {
+    pub fn new() -> OneShot<T> {
+        OneShot {
+            state: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Publish the value and wake waiters. First completion wins;
+    /// returns `false` if the cell was already complete.
+    pub fn complete(&self, value: T) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let won = s.is_none();
+        if won {
+            *s = Some(value);
+        }
+        drop(s);
+        self.cv.notify_all();
+        won
+    }
+
+    /// Nonblocking read of the completed value.
+    pub fn poll(&self) -> Option<T> {
+        *self.state.lock().unwrap()
+    }
+
+    /// Nonblocking completion probe.
+    pub fn is_complete(&self) -> bool {
+        self.poll().is_some()
+    }
+
+    /// Block until completed; `None` if `timeout` elapses first.
+    #[cfg(not(loom))]
+    pub fn wait(&self, timeout: Duration) -> Option<T> {
+        let deadline = Deadline::after(timeout);
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = *s {
+                return Some(v);
+            }
+            if deadline.expired() {
+                return None;
+            }
+            let (guard, _res) = self.cv.wait_timeout(s, deadline.remaining()).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Block until completed (loom: no timeout — the model guarantees a
+    /// completer).
+    #[cfg(loom)]
+    pub fn wait(&self, _timeout: Duration) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = *s {
+                return Some(v);
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+}
+
+impl<T: Copy> Default for OneShot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> std::fmt::Debug for OneShot<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("OneShot { .. }")
+    }
+}
+
+/// Shared state guarded by a mutex with an attached condvar — the
+/// classic monitor. The collective board (`mpisim/collectives.rs`) keys
+/// its whole slot table through one of these. [`Monitor::lock`] exposes
+/// the guard so callers keep their multi-step locked sections explicit;
+/// [`Monitor::wait_timeout`] is the only blocking edge.
+pub struct Monitor<S> {
+    state: Mutex<S>,
+    cv: Condvar,
+}
+
+impl<S> Monitor<S> {
+    pub fn new(state: S) -> Monitor<S> {
+        Monitor {
+            state: Mutex::new(state),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Lock the state.
+    pub fn lock(&self) -> MutexGuard<'_, S> {
+        self.state.lock().unwrap()
+    }
+
+    /// Wake every thread blocked in [`Monitor::wait_timeout`].
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+
+    /// Atomically release `guard`, sleep until a notify or until
+    /// `deadline`, and reacquire. Spurious wakeups are allowed — callers
+    /// re-check their predicate in a loop.
+    #[cfg(not(loom))]
+    pub fn wait_timeout<'a>(
+        &'a self,
+        guard: MutexGuard<'a, S>,
+        deadline: &Deadline,
+    ) -> MutexGuard<'a, S> {
+        let (guard, _res) = self.cv.wait_timeout(guard, deadline.remaining()).unwrap();
+        guard
+    }
+
+    /// Atomically release `guard`, sleep until a notify, reacquire
+    /// (loom: deadlines never expire).
+    #[cfg(loom)]
+    pub fn wait_timeout<'a>(
+        &'a self,
+        guard: MutexGuard<'a, S>,
+        _deadline: &Deadline,
+    ) -> MutexGuard<'a, S> {
+        self.cv.wait(guard).unwrap()
+    }
+}
+
+impl<S: Default> Default for Monitor<S> {
+    fn default() -> Self {
+        Monitor::new(S::default())
+    }
+}
+
+impl<S> std::fmt::Debug for Monitor<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Monitor { .. }")
+    }
+}
+
+/// A consumable per-thread wake flag: the event scheduler's task slot
+/// (`mpisim/sched/scheduler.rs`). [`SignalSlot::signal`] is sticky —
+/// a signal delivered before [`SignalSlot::await_signal`] is not lost —
+/// and `await_signal` consumes exactly one signal. The loom model
+/// `scheduler_wake_races_running_task` drives this together with the
+/// scheduler's `pending_wake` mark.
+pub struct SignalSlot {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl SignalSlot {
+    pub fn new() -> SignalSlot {
+        SignalSlot {
+            flag: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Raise the flag and wake the (single) waiter.
+    pub fn signal(&self) {
+        let mut g = self.flag.lock().unwrap();
+        *g = true;
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Sleep until the flag is raised, then consume it.
+    pub fn await_signal(&self) {
+        let mut g = self.flag.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g = false;
+    }
+}
+
+impl Default for SignalSlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for SignalSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SignalSlot { .. }")
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after(Duration::from_millis(0));
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        let far = Deadline::after(Duration::from_secs(3600));
+        assert!(!far.expired());
+        assert!(far.remaining() > Duration::from_secs(3500));
+    }
+
+    #[test]
+    fn notify_snapshot_rescan() {
+        let n = Notify::new();
+        let snap = n.snapshot();
+        n.notify();
+        // count moved after the snapshot: wait_changed returns without
+        // sleeping, reporting the change
+        assert!(n.wait_changed(snap, &Deadline::after(Duration::from_secs(5))));
+        // fresh snapshot + no event: times out
+        let snap = n.snapshot();
+        assert!(!n.wait_changed(snap, &Deadline::after(Duration::from_millis(10))));
+    }
+
+    #[test]
+    fn notify_cross_thread() {
+        let n = Arc::new(Notify::new());
+        let n2 = n.clone();
+        let snap = n.snapshot();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            n2.notify();
+        });
+        assert!(n.wait_changed(snap, &Deadline::after(Duration::from_secs(5))));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn oneshot_first_completion_wins() {
+        let c: OneShot<f64> = OneShot::new();
+        assert_eq!(c.poll(), None);
+        assert!(!c.is_complete());
+        assert!(c.complete(1.5));
+        assert!(!c.complete(9.0), "second completion loses");
+        assert_eq!(c.poll(), Some(1.5));
+        assert_eq!(c.wait(Duration::from_secs(1)), Some(1.5));
+    }
+
+    #[test]
+    fn oneshot_wait_times_out() {
+        let c: OneShot<u64> = OneShot::new();
+        assert_eq!(c.wait(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn monitor_wait_and_notify() {
+        let m = Arc::new(Monitor::new(0u32));
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            *m2.lock() = 7;
+            m2.notify_all();
+        });
+        let deadline = Deadline::after(Duration::from_secs(5));
+        let mut g = m.lock();
+        while *g != 7 {
+            assert!(!deadline.expired(), "timed out waiting for the writer");
+            g = m.wait_timeout(g, &deadline);
+        }
+        drop(g);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn signal_slot_is_sticky_and_consumed() {
+        let s = SignalSlot::new();
+        s.signal();
+        s.await_signal(); // consumes the pre-delivered signal, no block
+        let s = Arc::new(s);
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.signal();
+        });
+        s.await_signal();
+        t.join().unwrap();
+    }
+}

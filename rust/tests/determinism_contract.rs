@@ -1,0 +1,75 @@
+//! Determinism-contract regression gate (docs/DETERMINISM.md): repeated
+//! runs of the same cell are *byte-stable* — profile JSON and trace JSONL
+//! never vary across invocations, on either engine.
+//!
+//! This is the artifact-level teeth behind the `hash-iter-artifact` lint
+//! rule: a hash-ordered container leaking into an artifact path typically
+//! still passes a single engine-equivalence comparison (both sides iterate
+//! the same map state) but flickers across *process-internal repetitions*
+//! as the maps' insertion histories and capacities drift. Ten repetitions
+//! with fresh state each time catch exactly that class.
+
+use commscope::benchpark::experiment::{ExperimentSpec, Scaling};
+use commscope::benchpark::runner::{run_cell_full, RunOptions};
+use commscope::benchpark::{AppKind, SystemId};
+use commscope::caliper::ChannelConfig;
+use commscope::mpisim::Engine;
+use commscope::trace::write_jsonl;
+
+const REPS: usize = 10;
+
+fn spec() -> ExperimentSpec {
+    ExperimentSpec {
+        app: AppKind::Amg2023,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 8,
+    }
+}
+
+fn opts(engine: Engine) -> RunOptions {
+    RunOptions {
+        engine,
+        iter_shrink: 1,
+        size_shrink: 1,
+        channels: ChannelConfig::parse("comm-stats,mpi-time,trace").unwrap(),
+        ..Default::default()
+    }
+}
+
+fn artifacts(engine: Engine) -> (String, String) {
+    let out = run_cell_full(&spec(), &opts(engine)).unwrap();
+    let profile = out.profile.to_json().to_string_pretty();
+    let trace = write_jsonl(out.trace.as_ref().expect("trace artifact"));
+    (profile, trace)
+}
+
+fn assert_byte_stable(engine: Engine, label: &str) {
+    let (profile0, trace0) = artifacts(engine);
+    assert!(!profile0.is_empty() && !trace0.is_empty());
+    for rep in 1..REPS {
+        let (profile, trace) = artifacts(engine);
+        assert_eq!(
+            profile0, profile,
+            "{label}: profile bytes drifted on repetition {rep}"
+        );
+        assert_eq!(
+            trace0, trace,
+            "{label}: trace bytes drifted on repetition {rep}"
+        );
+    }
+}
+
+/// Threaded engine: 10 repeated runs of the rendezvous-heavy AMG cell
+/// produce identical artifact bytes.
+#[test]
+fn threaded_artifacts_byte_stable_across_runs() {
+    assert_byte_stable(Engine::Threaded, "threaded");
+}
+
+/// Event engine with 2 workers — real scheduling nondeterminism in wall
+/// time, none allowed in the artifacts.
+#[test]
+fn event_artifacts_byte_stable_across_runs() {
+    assert_byte_stable(Engine::parse("event:2").unwrap(), "event:2");
+}

@@ -1,0 +1,46 @@
+// Fixture: a file the lint must pass untouched, exercising every masking
+// and scoping path at once. Not compiled — exercised by tests/fixtures.rs.
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::sync::{Arc, Deadline, Mutex, Notify};
+
+pub struct Clean<'a> {
+    name: &'a str,
+    regions: BTreeMap<String, f64>,
+    notify: Arc<Notify>,
+    guard: Mutex<u64>,
+}
+
+impl<'a> Clean<'a> {
+    pub fn wait(&self, timeout: Duration) -> bool {
+        let deadline = Deadline::after(timeout);
+        let snapshot = self.notify.snapshot();
+        if deadline.expired() {
+            return false;
+        }
+        self.notify.wait_changed(snapshot, &deadline)
+    }
+
+    pub fn doc(&self) -> String {
+        // Instantiate (word-boundary check: must not match `Instant`).
+        let raw = r#"Instant SystemTime HashMap "std::sync::Mutex""#;
+        let plain = "thread::sleep inside a string is fine";
+        let ch = 'x';
+        let _ = *self.guard.lock().unwrap();
+        format!("{} {raw} {plain} {ch} {:?}", self.name, self.regions.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn timed_in_tests_is_fine() {
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+    }
+}

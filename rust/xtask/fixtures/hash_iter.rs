@@ -1,0 +1,21 @@
+// Fixture: trips `hash-iter-artifact` (linted under a virtual caliper/
+// path). Not compiled — exercised by tests/fixtures.rs only.
+use std::collections::HashMap;
+
+pub struct Report {
+    // finding: hash order would reach the artifact through `emit`
+    regions: HashMap<String, f64>,
+    // lint:allow(hash-iter-artifact): lookup-only index, never iterated.
+    index: std::collections::HashMap<String, u32>,
+}
+
+impl Report {
+    pub fn emit(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.regions {
+            out.push_str(&format!("{k}={v}\n"));
+        }
+        let _ = self.index.len();
+        out
+    }
+}

@@ -1,0 +1,32 @@
+// Fixture: trips `panic-in-drop` (any src/ path).
+// Not compiled — exercised by tests/fixtures.rs only.
+pub struct Guard {
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        // finding: a panic here aborts the process mid-unwind
+        self.handle.take().unwrap().join().expect("worker died");
+    }
+}
+
+pub struct Quiet {
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Quiet {
+    fn drop(&mut self) {
+        // Clean: degrades gracefully, no panic path.
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Guard {
+    pub fn finish(mut self) {
+        // Outside `fn drop`: unwrap is allowed here.
+        self.handle.take().unwrap().join().unwrap();
+    }
+}

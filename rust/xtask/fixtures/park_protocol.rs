@@ -1,0 +1,16 @@
+// Fixture: trips `park-protocol` (linted under a virtual mpisim/ path).
+// Not compiled — exercised by tests/fixtures.rs only.
+use std::time::Duration;
+
+pub fn spin_wait(ready: &dyn Fn() -> bool) {
+    while !ready() {
+        std::thread::sleep(Duration::from_micros(50)); // finding
+    }
+}
+
+pub fn busy_wait(ready: &dyn Fn() -> bool) {
+    while !ready() {
+        std::thread::yield_now(); // finding
+        std::hint::spin_loop(); // finding
+    }
+}

@@ -1,0 +1,18 @@
+// Fixture: trips `raw-sync` (any src/ path outside util/sync.rs).
+// Not compiled — exercised by tests/fixtures.rs only.
+use std::sync::{Condvar, Mutex};
+
+pub struct Gate {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+pub fn atomics() -> u64 {
+    // finding: atomics must come through the facade too
+    let c = std::sync::atomic::AtomicU64::new(0);
+    c.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+// The string/comment forms must NOT trip the lint:
+pub const DOC: &str = "std::sync::Mutex is banned outside the facade";
+// std::sync::Mutex (comment mention)

@@ -1,0 +1,15 @@
+// Fixture: trips `unbounded-channel` (any src/ path outside util/sync.rs).
+// Not compiled — exercised by tests/fixtures.rs only.
+use crate::util::sync::mpsc;
+
+pub fn queue() {
+    let (tx, rx) = mpsc::channel::<u64>(); // finding: unbounded
+    tx.send(1).unwrap();
+    let _ = rx.recv();
+}
+
+pub fn bounded_is_fine() {
+    let (tx, rx) = mpsc::sync_channel::<u64>(8);
+    tx.send(1).unwrap();
+    let _ = rx.recv();
+}

@@ -1,0 +1,24 @@
+// Fixture: trips `wall-clock` (linted under a virtual mpisim/ path).
+// Not compiled — exercised by tests/fixtures.rs only.
+use std::time::Instant;
+
+pub fn now_seconds() -> f64 {
+    let t0 = Instant::now(); // finding: wall clock in virtual-time code
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn stamp() -> u64 {
+    let t = std::time::SystemTime::now(); // finding
+    t.elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    // Exempt: tests may measure real time.
+    use std::time::Instant;
+
+    #[test]
+    fn timed() {
+        let _ = Instant::now();
+    }
+}

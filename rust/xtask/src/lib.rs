@@ -1,0 +1,698 @@
+//! The determinism-contract lint (`cargo xtask lint`).
+//!
+//! The simulator's headline guarantee — byte-identical artifacts for the
+//! same cell across engines, worker counts, and repeated runs — is easy to
+//! break with one innocent-looking line: an `Instant::now()` folded into
+//! virtual time, a `HashMap` iterated into a report, a hand-rolled
+//! `Condvar` wait with a lost-wakeup window. This lint makes those
+//! regressions mechanical to catch. It is a *lexical* scanner (strings and
+//! comments are masked, `#[cfg(test)]` items are skipped, token matches are
+//! word-bounded) rather than a full parser, so it has zero dependencies and
+//! runs on the offline vendored toolchain.
+//!
+//! Rules (see `docs/DETERMINISM.md` for the invariant each one guards):
+//!
+//! | id | scope | bans |
+//! |----|-------|------|
+//! | `wall-clock` | `mpisim/`, `trace/`, `caliper/` | `Instant`, `SystemTime`, `thread::sleep` |
+//! | `hash-iter-artifact` | `caliper/`, `trace/`, `thicket/`, `coordinator/`, `benchpark/` | `HashMap`, `HashSet` |
+//! | `raw-sync` | all of `src/` except `util/sync.rs` | `std::sync::*`, `loom::*` |
+//! | `park-protocol` | `mpisim/` | `thread::sleep`, `yield_now`, `spin_loop` |
+//! | `unbounded-channel` | all of `src/` except `util/sync.rs` | `mpsc::channel` |
+//! | `panic-in-drop` | all of `src/` | `panic!`/`unwrap(`/`expect(`/`assert…!` inside `fn drop` of an `impl Drop` |
+//!
+//! A violation that is genuinely intended (e.g. a lookup-only intern table)
+//! is suppressed with a comment on the same line or the comment block
+//! immediately above it:
+//!
+//! ```text
+//! // lint:allow(hash-iter-artifact): lookup-only intern table.
+//! path_ids: HashMap<String, u32>,
+//! ```
+//!
+//! Every suppression must carry a rationale after the colon; the directive
+//! is scoped to one following code line, so it cannot rot into a
+//! file-wide opt-out.
+
+use std::fmt;
+use std::path::Path;
+
+/// One lint violation, formatted as `file:line: [rule] message — fix: …`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    pub fix: &'static str,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {} — fix: {}",
+            self.file, self.line, self.rule, self.message, self.fix
+        )
+    }
+}
+
+/// The rule identifiers, in reporting order.
+pub const RULES: [&str; 6] = [
+    "wall-clock",
+    "hash-iter-artifact",
+    "raw-sync",
+    "park-protocol",
+    "unbounded-channel",
+    "panic-in-drop",
+];
+
+// ---------------------------------------------------------------------------
+// Source masking
+// ---------------------------------------------------------------------------
+
+/// Per-line scan state derived from one pass over the raw text.
+struct Masked {
+    /// Source with comment and string-literal *contents* replaced by
+    /// spaces; newlines and code structure (braces, `;`) preserved.
+    code: String,
+    /// Comment text gathered per line (0-based), for directive extraction.
+    comments: Vec<String>,
+}
+
+/// Mask comments and string/char literals so token scans can't be fooled
+/// by text. Handles line + nested block comments, plain/byte/raw strings,
+/// and distinguishes char literals from lifetimes.
+fn mask(text: &str) -> Masked {
+    let bytes: Vec<char> = text.chars().collect();
+    let mut code = String::with_capacity(text.len());
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut line = 0usize;
+    let mut i = 0usize;
+
+    let push_masked = |code: &mut String, c: char| {
+        code.push(if c == '\n' { '\n' } else { ' ' });
+    };
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c == '\n' {
+            code.push('\n');
+            comments.push(String::new());
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && bytes.get(i + 1) == Some(&'/') {
+            while i < bytes.len() && bytes[i] != '\n' {
+                comments[line].push(bytes[i]);
+                code.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nesting, possibly multi-line).
+        if c == '/' && bytes.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < bytes.len() {
+                if bytes[i] == '/' && bytes.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    comments[line].push_str("/*");
+                    code.push_str("  ");
+                    i += 2;
+                } else if bytes[i] == '*' && bytes.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    comments[line].push_str("*/");
+                    code.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if bytes[i] == '\n' {
+                        code.push('\n');
+                        comments.push(String::new());
+                        line += 1;
+                    } else {
+                        comments[line].push(bytes[i]);
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: r"…", r#"…"#, br"…" etc.
+        if (c == 'r' || (c == 'b' && bytes.get(i + 1) == Some(&'r')))
+            && !prev_is_ident(&bytes, i)
+        {
+            let start = if c == 'b' { i + 1 } else { i };
+            let mut j = start + 1;
+            let mut hashes = 0usize;
+            while bytes.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if bytes.get(j) == Some(&'"') {
+                // Emit the opener masked, then consume to the closer.
+                while i <= j {
+                    push_masked(&mut code, bytes[i]);
+                    if bytes[i] == '\n' {
+                        comments.push(String::new());
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                loop {
+                    if i >= bytes.len() {
+                        break;
+                    }
+                    if bytes[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && bytes.get(i + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                code.push(' ');
+                                i += 1;
+                            }
+                            break;
+                        }
+                    }
+                    if bytes[i] == '\n' {
+                        code.push('\n');
+                        comments.push(String::new());
+                        line += 1;
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Plain / byte string.
+        if c == '"' || (c == 'b' && bytes.get(i + 1) == Some(&'"') && !prev_is_ident(&bytes, i)) {
+            if c == 'b' {
+                code.push(' ');
+                i += 1;
+            }
+            code.push(' ');
+            i += 1; // opening quote
+            while i < bytes.len() {
+                if bytes[i] == '\\' {
+                    code.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if bytes[i] == '"' {
+                    code.push(' ');
+                    i += 1;
+                    break;
+                }
+                if bytes[i] == '\n' {
+                    code.push('\n');
+                    comments.push(String::new());
+                    line += 1;
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let is_char = match bytes.get(i + 1) {
+                Some('\\') => true,
+                Some(_) => bytes.get(i + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char {
+                code.push(' ');
+                i += 1;
+                while i < bytes.len() && bytes[i] != '\'' {
+                    if bytes[i] == '\\' {
+                        code.push(' ');
+                        i += 1;
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+                code.push(' ');
+                i += 1;
+                continue;
+            }
+        }
+        code.push(c);
+        i += 1;
+    }
+    Masked { code, comments }
+}
+
+fn prev_is_ident(bytes: &[char], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_alphanumeric() || bytes[i - 1] == '_')
+}
+
+// ---------------------------------------------------------------------------
+// Directives and test-item skipping
+// ---------------------------------------------------------------------------
+
+/// `lint:allow(rule)` directives resolved to the code lines they cover.
+/// A directive covers its own line (trailing-comment form) and, when the
+/// directive line has no code, the first following line that does.
+fn allowed_lines(masked: &Masked) -> Vec<(usize, String)> {
+    let code_lines: Vec<&str> = masked.code.lines().collect();
+    let has_code = |idx: usize| {
+        code_lines
+            .get(idx)
+            .map(|l| !l.trim().is_empty())
+            .unwrap_or(false)
+    };
+    let mut out = Vec::new();
+    for (idx, comment) in masked.comments.iter().enumerate() {
+        let mut rest = comment.as_str();
+        while let Some(pos) = rest.find("lint:allow(") {
+            rest = &rest[pos + "lint:allow(".len()..];
+            if let Some(end) = rest.find(')') {
+                let rule = rest[..end].trim().to_string();
+                let mut target = idx;
+                if !has_code(idx) {
+                    // Walk down past further comment/blank lines to the
+                    // first code line; that single line is covered.
+                    let mut j = idx + 1;
+                    while j < code_lines.len() && !has_code(j) {
+                        j += 1;
+                    }
+                    target = j;
+                }
+                out.push((target, rule));
+                rest = &rest[end..];
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Mark lines belonging to `#[cfg(test)]` / `#[cfg(all(test, …))]` items
+/// (and the attribute line itself) so test-only code is exempt. Handles
+/// both `mod … { … }` blocks and single-line items ending in `;`.
+fn test_skip_lines(code: &str) -> Vec<bool> {
+    let n_lines = code.lines().count();
+    let mut skip = vec![false; n_lines];
+    let chars: Vec<char> = code.chars().collect();
+    let line_of = build_line_index(&chars);
+
+    let mut i = 0usize;
+    while let Some(pos) = code[i..].find("#[cfg(") {
+        let start = i + pos;
+        // The attribute runs to its matching `]`.
+        let attr_end = match find_matching(&chars, start + 1, '[', ']') {
+            Some(e) => e,
+            None => break,
+        };
+        let attr: String = chars[start..=attr_end].iter().collect();
+        let is_test = contains_token(&attr, "test") && !attr.contains("not(test");
+        i = attr_end + 1;
+        if !is_test {
+            continue;
+        }
+        // Skip to the end of the following item: first `{` (brace-match)
+        // or `;` at attribute depth.
+        let mut j = attr_end + 1;
+        let mut end = None;
+        while j < chars.len() {
+            match chars[j] {
+                '{' => {
+                    end = find_matching(&chars, j, '{', '}');
+                    break;
+                }
+                ';' => {
+                    end = Some(j);
+                    break;
+                }
+                _ => j += 1,
+            }
+        }
+        let end = match end {
+            Some(e) => e,
+            None => chars.len() - 1,
+        };
+        for l in line_of[start]..=line_of[end] {
+            if l < n_lines {
+                skip[l] = true;
+            }
+        }
+        i = end + 1;
+    }
+    skip
+}
+
+/// 0-based line number for each char index.
+fn build_line_index(chars: &[char]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(chars.len());
+    let mut line = 0usize;
+    for &c in chars {
+        out.push(line);
+        if c == '\n' {
+            line += 1;
+        }
+    }
+    out
+}
+
+/// Index of the delimiter matching `open` at `chars[start]`.
+fn find_matching(chars: &[char], start: usize, open: char, close: char) -> Option<usize> {
+    let mut depth = 0i64;
+    for (off, &c) in chars[start..].iter().enumerate() {
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some(start + off);
+            }
+        }
+    }
+    None
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Word-bounded containment: `needle` present and not embedded in a longer
+/// identifier (so `Instant` does not match `Instantiate`). `needle` may
+/// contain `::` path separators and trailing `!`/`(` punctuation.
+fn contains_token(haystack: &str, needle: &str) -> bool {
+    let h: Vec<char> = haystack.chars().collect();
+    let n: Vec<char> = needle.chars().collect();
+    if n.is_empty() || h.len() < n.len() {
+        return false;
+    }
+    'outer: for start in 0..=(h.len() - n.len()) {
+        for (k, &nc) in n.iter().enumerate() {
+            if h[start + k] != nc {
+                continue 'outer;
+            }
+        }
+        let before_ok = start == 0 || !is_ident_char(h[start - 1]) || !is_ident_char(n[0]);
+        let last = n[n.len() - 1];
+        let after = h.get(start + n.len());
+        let after_ok = !is_ident_char(last) || after.map(|&c| !is_ident_char(c)).unwrap_or(true);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+struct TokenRule {
+    id: &'static str,
+    /// Directory names (under `src/`) the rule applies to; empty = all.
+    dirs: &'static [&'static str],
+    /// Files exempt even inside the scope (the facade itself).
+    exempt_files: &'static [&'static str],
+    tokens: &'static [&'static str],
+    message: &'static str,
+    fix: &'static str,
+}
+
+const TOKEN_RULES: [TokenRule; 5] = [
+    TokenRule {
+        id: "wall-clock",
+        dirs: &["mpisim", "trace", "caliper"],
+        exempt_files: &[],
+        tokens: &["Instant", "SystemTime", "thread::sleep"],
+        message: "wall-clock primitive in a virtual-time module",
+        fix: "use util::sync::Deadline for real-time bounds; virtual time comes from the clock model",
+    },
+    TokenRule {
+        id: "hash-iter-artifact",
+        dirs: &["caliper", "trace", "thicket", "coordinator", "benchpark"],
+        exempt_files: &[],
+        tokens: &["HashMap", "HashSet"],
+        message: "hash-ordered container on an artifact-producing path",
+        fix: "use BTreeMap/BTreeSet (or sort before emitting); lint:allow with a rationale if lookup-only",
+    },
+    TokenRule {
+        id: "raw-sync",
+        dirs: &[],
+        exempt_files: &["util/sync.rs"],
+        tokens: &["std::sync", "loom::"],
+        message: "raw synchronization primitive outside the sync facade",
+        fix: "import it from crate::util::sync (the loom-checked facade; Arc is re-exported there)",
+    },
+    TokenRule {
+        id: "park-protocol",
+        dirs: &["mpisim"],
+        exempt_files: &[],
+        tokens: &["thread::sleep", "yield_now", "spin_loop"],
+        message: "ad-hoc blocking in the simulator core",
+        fix: "block only via Scheduler::park or a facade wait (Notify/OneShot/Monitor)",
+    },
+    TokenRule {
+        id: "unbounded-channel",
+        dirs: &[],
+        exempt_files: &["util/sync.rs"],
+        tokens: &["mpsc::channel"],
+        message: "unbounded channel constructor",
+        fix: "use util::sync::mpsc::sync_channel(cap) so queues apply backpressure",
+    },
+];
+
+/// `true` when `path` (normalized, `/`-separated) lies under `dir` —
+/// matching a path segment, not a substring.
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.split('/').any(|seg| seg == dir)
+}
+
+fn path_ends_with(path: &str, suffix: &str) -> bool {
+    path == suffix || path.ends_with(&format!("/{suffix}"))
+}
+
+/// Lint one file's source text under a virtual path (real linting goes
+/// through [`lint_tree`]; this entry point is what the fixture tests use).
+pub fn lint_source(virtual_path: &str, text: &str) -> Vec<Finding> {
+    let norm = virtual_path.replace('\\', "/");
+    let masked = mask(text);
+    let skip = test_skip_lines(&masked.code);
+    let allowed = allowed_lines(&masked);
+    let is_allowed =
+        |line0: usize, rule: &str| allowed.iter().any(|(l, r)| *l == line0 && r == rule);
+
+    let mut findings = Vec::new();
+    for rule in &TOKEN_RULES {
+        if !rule.dirs.is_empty() && !rule.dirs.iter().any(|d| in_dir(&norm, d)) {
+            continue;
+        }
+        if rule.exempt_files.iter().any(|f| path_ends_with(&norm, f)) {
+            continue;
+        }
+        for (line0, line) in masked.code.lines().enumerate() {
+            if skip.get(line0).copied().unwrap_or(false) || is_allowed(line0, rule.id) {
+                continue;
+            }
+            for tok in rule.tokens {
+                if contains_token(line, tok) {
+                    findings.push(Finding {
+                        file: norm.clone(),
+                        line: line0 + 1,
+                        rule: rule.id,
+                        message: format!("{} (`{}`)", rule.message, tok),
+                        fix: rule.fix,
+                    });
+                    break;
+                }
+            }
+        }
+    }
+    findings.extend(panic_in_drop(&norm, &masked, &skip, &is_allowed));
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// The `panic-in-drop` rule: a `Drop` impl that panics aborts the process
+/// during unwinding — in the simulator that turns a clean per-rank error
+/// into a hang of every other rank. Scan `fn drop` bodies inside
+/// `impl … Drop` blocks for panic-capable tokens.
+fn panic_in_drop(
+    norm: &str,
+    masked: &Masked,
+    skip: &[bool],
+    is_allowed: &dyn Fn(usize, &str) -> bool,
+) -> Vec<Finding> {
+    const PANICKY: [&str; 6] = [
+        "panic!",
+        "unwrap(",
+        "expect(",
+        "assert!",
+        "assert_eq!",
+        "assert_ne!",
+    ];
+    let chars: Vec<char> = masked.code.chars().collect();
+    let line_of = build_line_index(&chars);
+    let mut findings = Vec::new();
+
+    let mut i = 0usize;
+    while let Some(pos) = masked.code[i..].find("impl") {
+        let start = i + pos;
+        i = start + 4;
+        // Word boundary + `Drop` appearing in the impl header.
+        if (start > 0 && is_ident_char(chars[start - 1]))
+            || chars.get(start + 4).map(|&c| is_ident_char(c)).unwrap_or(true)
+        {
+            continue;
+        }
+        let brace = match masked.code[start..].find('{') {
+            Some(b) => start + b,
+            None => continue,
+        };
+        let header: String = chars[start..brace].iter().collect();
+        if !contains_token(&header, "Drop") {
+            continue;
+        }
+        let end = match find_matching(&chars, brace, '{', '}') {
+            Some(e) => e,
+            None => continue,
+        };
+        // Locate `fn drop` bodies inside the impl block.
+        let body: String = chars[brace..=end].iter().collect();
+        let mut j = 0usize;
+        while let Some(fp) = body[j..].find("fn drop") {
+            let fstart = brace + j + fp;
+            j += fp + 7;
+            if chars.get(fstart + 7).map(|&c| is_ident_char(c)).unwrap_or(true) {
+                continue;
+            }
+            let fbrace = match masked.code[fstart..].find('{') {
+                Some(b) => fstart + b,
+                None => continue,
+            };
+            let fend = match find_matching(&chars, fbrace, '{', '}') {
+                Some(e) => e,
+                None => continue,
+            };
+            for l in line_of[fbrace]..=line_of[fend] {
+                if skip.get(l).copied().unwrap_or(false) || is_allowed(l, "panic-in-drop") {
+                    continue;
+                }
+                let line = masked.code.lines().nth(l).unwrap_or("");
+                for tok in PANICKY {
+                    if contains_token(line, tok) {
+                        findings.push(Finding {
+                            file: norm.to_string(),
+                            line: l + 1,
+                            rule: "panic-in-drop",
+                            message: format!(
+                                "possible panic in Drop (`{}`) would abort mid-unwind",
+                                tok
+                            ),
+                            fix: "degrade gracefully (let _ = …, if let) — Drop must never panic",
+                        });
+                        break;
+                    }
+                }
+            }
+        }
+        i = end + 1;
+    }
+    findings
+}
+
+/// Lint every `.rs` file under `root` (deterministic order), returning all
+/// findings. Paths in findings are relative to `root`'s parent so they
+/// read like repo paths.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in files {
+        let text = std::fs::read_to_string(&f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        // Re-anchor under `src/` so dir scoping sees the module path.
+        findings.extend(lint_source(&format!("src/{rel}"), &text));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_matching_is_word_bounded() {
+        assert!(contains_token("let t = Instant::now();", "Instant"));
+        assert!(!contains_token("/// Instantiate the pipeline", "Instant"));
+        assert!(!contains_token("let reinstant = 3;", "Instant"));
+        assert!(contains_token("use std::sync::{Arc, Mutex};", "std::sync"));
+        assert!(contains_token("x.unwrap()", "unwrap("));
+    }
+
+    #[test]
+    fn strings_and_comments_are_masked() {
+        let src = "fn f() { let s = \"Instant\"; } // Instant\n/* SystemTime */\n";
+        let m = mask(src);
+        assert!(!m.code.contains("Instant"));
+        assert!(!m.code.contains("SystemTime"));
+        assert_eq!(m.code.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "use x;\n#[cfg(test)]\nmod tests {\n    use std::time::Instant;\n}\n";
+        let f = lint_source("src/mpisim/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn allow_directive_covers_next_code_line_only() {
+        let src = "// lint:allow(hash-iter-artifact): lookup-only\n// intern table.\nuse std::collections::HashMap;\ntype T = HashMap<u32, u32>;\n";
+        let f = lint_source("src/trace/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn raw_string_with_hashes_is_masked() {
+        let src = "let s = r#\"std::sync::Mutex \"inner\" HashMap\"#;\n";
+        let f = lint_source("src/caliper/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn lifetimes_do_not_open_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nuse std::sync::Mutex;\n";
+        let f = lint_source("src/util/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "raw-sync");
+        assert_eq!(f[0].line, 2);
+    }
+}

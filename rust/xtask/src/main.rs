@@ -1,0 +1,50 @@
+//! `cargo xtask lint` — run the determinism-contract lint over `rust/src`.
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => {
+            let root = args
+                .get(1)
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src"));
+            lint(&root)
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint [SRC_ROOT]");
+            eprintln!();
+            eprintln!("Runs the determinism-contract lint (docs/DETERMINISM.md) over the");
+            eprintln!("simulator sources. Rules: {}", xtask::RULES.join(", "));
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint(root: &std::path::Path) -> ExitCode {
+    let findings = match xtask::lint_tree(root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask lint: cannot read {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!(
+            "determinism lint: clean ({} rules active over {})",
+            xtask::RULES.len(),
+            root.display()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!("determinism lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,152 @@
+//! Every lint rule is demonstrated by a fixture that trips it and guarded
+//! by a clean fixture that must stay silent. The fixtures live under
+//! `fixtures/` and are linted under *virtual* paths so the directory
+//! scoping is exercised without polluting `rust/src`.
+
+use xtask::{lint_source, Finding};
+
+fn rules_hit(findings: &[Finding]) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> = findings.iter().map(|f| f.rule).collect();
+    rules.dedup();
+    rules
+}
+
+fn count(findings: &[Finding], rule: &str) -> usize {
+    findings.iter().filter(|f| f.rule == rule).count()
+}
+
+#[test]
+fn wall_clock_fixture_trips() {
+    let f = lint_source(
+        "src/mpisim/clock.rs",
+        include_str!("../fixtures/wall_clock.rs"),
+    );
+    assert_eq!(count(&f, "wall-clock"), 3, "{f:#?}");
+    assert_eq!(rules_hit(&f), ["wall-clock"]);
+    // The test module's Instant must NOT be flagged.
+    assert!(f.iter().all(|x| x.line < 15), "{f:#?}");
+}
+
+#[test]
+fn wall_clock_fixture_is_scope_gated() {
+    // The same source under a non-virtual-time path is clean.
+    let f = lint_source(
+        "src/benchutil/clock.rs",
+        include_str!("../fixtures/wall_clock.rs"),
+    );
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn hash_iter_fixture_trips_and_allow_suppresses() {
+    let f = lint_source(
+        "src/caliper/report.rs",
+        include_str!("../fixtures/hash_iter.rs"),
+    );
+    assert_eq!(count(&f, "hash-iter-artifact"), 2, "{f:#?}");
+    // The lint:allow'd intern-table line (9) is not among the findings.
+    assert!(f.iter().all(|x| x.line != 9), "{f:#?}");
+}
+
+#[test]
+fn raw_sync_fixture_trips() {
+    let f = lint_source(
+        "src/runtime/gate.rs",
+        include_str!("../fixtures/raw_sync.rs"),
+    );
+    assert_eq!(count(&f, "raw-sync"), 3, "{f:#?}");
+    assert_eq!(rules_hit(&f), ["raw-sync"]);
+}
+
+#[test]
+fn raw_sync_facade_file_is_exempt() {
+    let f = lint_source(
+        "src/util/sync.rs",
+        include_str!("../fixtures/raw_sync.rs"),
+    );
+    assert!(f.is_empty(), "the facade itself may name std::sync: {f:#?}");
+}
+
+#[test]
+fn park_protocol_fixture_trips() {
+    let f = lint_source(
+        "src/mpisim/poll.rs",
+        include_str!("../fixtures/park_protocol.rs"),
+    );
+    assert_eq!(count(&f, "park-protocol"), 3, "{f:#?}");
+    // thread::sleep double-reports as wall-clock in mpisim — intended.
+    assert_eq!(count(&f, "wall-clock"), 1, "{f:#?}");
+}
+
+#[test]
+fn unbounded_channel_fixture_trips() {
+    let f = lint_source(
+        "src/coordinator/queue.rs",
+        include_str!("../fixtures/unbounded_channel.rs"),
+    );
+    assert_eq!(count(&f, "unbounded-channel"), 1, "{f:#?}");
+    assert_eq!(rules_hit(&f), ["unbounded-channel"]);
+}
+
+#[test]
+fn panic_in_drop_fixture_trips() {
+    let f = lint_source(
+        "src/util/guard.rs",
+        include_str!("../fixtures/panic_in_drop.rs"),
+    );
+    assert_eq!(count(&f, "panic-in-drop"), 1, "{f:#?}");
+    assert_eq!(rules_hit(&f), ["panic-in-drop"]);
+    // Quiet's graceful drop and the non-drop unwraps stay silent.
+    assert_eq!(f[0].line, 10, "{f:#?}");
+}
+
+#[test]
+fn clean_fixture_is_clean_under_strictest_scope() {
+    let f = lint_source("src/caliper/clean.rs", include_str!("../fixtures/clean.rs"));
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn every_rule_has_a_tripping_fixture() {
+    // The acceptance bar: >= 6 active rules, each demonstrated by a
+    // fixture that fails it.
+    let all = [
+        lint_source(
+            "src/mpisim/clock.rs",
+            include_str!("../fixtures/wall_clock.rs"),
+        ),
+        lint_source(
+            "src/caliper/report.rs",
+            include_str!("../fixtures/hash_iter.rs"),
+        ),
+        lint_source(
+            "src/runtime/gate.rs",
+            include_str!("../fixtures/raw_sync.rs"),
+        ),
+        lint_source(
+            "src/mpisim/poll.rs",
+            include_str!("../fixtures/park_protocol.rs"),
+        ),
+        lint_source(
+            "src/coordinator/queue.rs",
+            include_str!("../fixtures/unbounded_channel.rs"),
+        ),
+        lint_source(
+            "src/util/guard.rs",
+            include_str!("../fixtures/panic_in_drop.rs"),
+        ),
+    ];
+    for rule in xtask::RULES {
+        assert!(
+            all.iter().any(|f| f.iter().any(|x| x.rule == rule)),
+            "rule {rule} has no tripping fixture"
+        );
+    }
+    for f in all.iter().flatten() {
+        // Reporting contract: file:line, rule id, and a fix hint.
+        let s = f.to_string();
+        assert!(s.contains(&format!(":{}:", f.line)), "{s}");
+        assert!(s.contains(&format!("[{}]", f.rule)), "{s}");
+        assert!(s.contains("fix:"), "{s}");
+    }
+}

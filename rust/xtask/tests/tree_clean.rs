@@ -1,0 +1,21 @@
+//! The real tree must satisfy the determinism contract: linting
+//! `rust/src` produces zero findings. This makes `cargo test` fail the
+//! moment a raw primitive, wall clock, hash-ordered artifact, or
+//! unbounded queue sneaks back in — the same gate CI runs as
+//! `cargo xtask lint`.
+
+use std::path::PathBuf;
+
+#[test]
+fn determinism_lint_is_clean_on_the_tree() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let findings = xtask::lint_tree(&root).expect("rust/src is readable");
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    assert!(
+        findings.is_empty(),
+        "determinism lint found {} violation(s) in rust/src — see stderr",
+        findings.len()
+    );
+}
