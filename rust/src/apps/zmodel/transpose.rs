@@ -95,6 +95,7 @@ pub fn to_pencils(
     assert_eq!(widths.len(), comm.size());
     assert_eq!(widths[comm.rank], cols, "my width disagrees with the plan");
     let parts = pack_row_slabs(data, rows, cols, comm.size());
+    // lint:allow(comm-region) -- callers hold the transpose region guard.
     let received = rank.alltoallv(&parts, comm)?;
     let my_rows = block_sizes(rows, comm.size())[comm.rank];
     Ok((unpack_col_blocks(&received, my_rows, widths), my_rows))
@@ -112,6 +113,7 @@ pub fn from_pencils(
 ) -> Result<Vec<f64>, MpiError> {
     assert_eq!(widths.len(), comm.size());
     let parts = pack_col_slabs(pencil, my_rows, widths);
+    // lint:allow(comm-region) -- callers hold the transpose region guard.
     let received = rank.alltoallv(&parts, comm)?;
     let heights = block_sizes(rows, comm.size());
     Ok(unpack_row_blocks(&received, &heights, widths[comm.rank]))

@@ -31,6 +31,12 @@ pub struct RunOptions {
     /// `tests/engine_equivalence.rs`), so an event-engine campaign may
     /// serve and be served by threaded-engine artifacts.
     pub engine: Engine,
+    /// Strict conformance mode (`--verify` on the CLI): run the MPI
+    /// conformance analyzer ([`crate::mpisim::verify`]) and fail the cell
+    /// on any diagnostic. Implies the `verify` channel — call
+    /// [`RunOptions::normalized`] (the runner and campaign both do) so
+    /// the channel spec, metadata stamp, and cache key stay consistent.
+    pub verify: bool,
 }
 
 impl Default for RunOptions {
@@ -40,6 +46,7 @@ impl Default for RunOptions {
             size_shrink: 1,
             channels: ChannelConfig::default(),
             engine: Engine::Threaded,
+            verify: false,
         }
     }
 }
@@ -65,6 +72,19 @@ impl RunOptions {
             bail!("RunOptions::size_shrink must be >= 1 (got 0)");
         }
         Ok(())
+    }
+
+    /// Make the option set self-consistent: strict verification requires
+    /// the `verify` channel, so enable it whenever `verify` is set. Both
+    /// the runner and the campaign normalize at entry, which keeps the
+    /// channel spec stamped into metadata identical to the one used in
+    /// cache keys.
+    #[must_use]
+    pub fn normalized(mut self) -> Self {
+        if self.verify {
+            self.channels = self.channels.with(ChannelKind::Verify);
+        }
+        self
     }
 
     fn shrink_dims3(&self, d: [usize; 3]) -> [usize; 3] {
@@ -101,6 +121,7 @@ pub fn run_cell(spec: &ExperimentSpec, opts: &RunOptions) -> Result<RunProfile> 
 /// payloads and metadata before it is returned.
 pub fn run_cell_full(spec: &ExperimentSpec, opts: &RunOptions) -> Result<CellOutput> {
     opts.validate()?;
+    let opts = &opts.normalized();
     let machine = spec.system.machine();
     let world = WorldConfig::new(spec.nranks, machine).with_engine(opts.engine);
     let variant = default_variant(spec);
@@ -225,6 +246,13 @@ pub fn run_cell_full(spec: &ExperimentSpec, opts: &RunOptions) -> Result<CellOut
         .iter_mut()
         .filter_map(|p| p.trace.take())
         .collect();
+    // Same lift for the conformance payloads: per-rank stream results come
+    // off the rank profiles, the cross-rank checks run over the merge, and
+    // only the combined RunVerify reaches the serialized profile.
+    let rank_verify: Vec<crate::mpisim::verify::RankVerify> = profiles
+        .iter_mut()
+        .filter_map(|p| p.verify.take())
+        .collect();
     let mut run = aggregate(meta, &profiles);
     let trace = if opts.channels.enabled(ChannelKind::Trace) && !rank_traces.is_empty() {
         let rt = RunTrace::new(rank_traces);
@@ -233,6 +261,13 @@ pub fn run_cell_full(spec: &ExperimentSpec, opts: &RunOptions) -> Result<CellOut
     } else {
         None
     };
+    if opts.channels.enabled(ChannelKind::Verify) && !rank_verify.is_empty() {
+        let rv = crate::mpisim::verify::check_run(&rank_verify);
+        if opts.verify && !rv.clean() {
+            bail!("conformance verification failed for {}:\n{}", spec.id(), rv.render());
+        }
+        run.verify = Some(rv);
+    }
     Ok(CellOutput { profile: run, trace })
 }
 
@@ -281,6 +316,29 @@ mod tests {
             let (bytes, sends) = run.comm_totals();
             assert!(bytes > 0.0 && sends > 0.0, "{}: no traffic", app.name());
         }
+    }
+
+    #[test]
+    fn verify_strict_passes_on_clean_app_and_attaches_payload() {
+        let opts = RunOptions {
+            iter_shrink: 10,
+            size_shrink: 8,
+            verify: true,
+            ..Default::default()
+        };
+        let spec = ExperimentSpec {
+            app: AppKind::Kripke,
+            system: SystemId::Tioga,
+            scaling: Scaling::Weak,
+            nranks: 8,
+        };
+        let run = run_cell(&spec, &opts).unwrap();
+        let rv = run.verify.as_ref().expect("verify payload attached");
+        assert!(rv.clean(), "{}", rv.render());
+        assert_eq!(rv.ranks, 8);
+        assert!(rv.sends > 0 && rv.colls > 0, "coverage counters populated");
+        // normalization stamped the verify channel into the metadata
+        assert!(run.meta["channels"].contains("verify"), "{}", run.meta["channels"]);
     }
 
     #[test]

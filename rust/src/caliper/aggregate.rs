@@ -13,6 +13,7 @@ pub fn aggregate(meta: BTreeMap<String, String>, ranks: &[RankProfile]) -> RunPr
     let mut run = RunProfile {
         meta,
         regions: BTreeMap::new(),
+        verify: None,
     };
     for rp in ranks {
         for (path, s) in &rp.regions {

@@ -58,11 +58,17 @@ pub enum ChannelKind {
     /// wait-state, and critical-path analyses. Ring capacity is set with
     /// the spec option `trace.max-events-per-rank=N`.
     Trace,
+    /// MPI conformance verification ([`crate::mpisim::verify`]): the
+    /// per-rank request-lifecycle automaton plus the send/recv/collective
+    /// records the cross-rank checks consume. Like `trace`, requesting it
+    /// turns on the verify-only hook events, so it must be asked for by
+    /// name — it never rides along with `all`.
+    Verify,
 }
 
 impl ChannelKind {
     /// Every channel, in canonical spec order.
-    pub const ALL: [ChannelKind; 7] = [
+    pub const ALL: [ChannelKind; 8] = [
         ChannelKind::RegionTimes,
         ChannelKind::CommStats,
         ChannelKind::CommMatrix,
@@ -70,6 +76,7 @@ impl ChannelKind {
         ChannelKind::CollBreakdown,
         ChannelKind::MpiTime,
         ChannelKind::Trace,
+        ChannelKind::Verify,
     ];
 
     /// The spec-string name of the channel.
@@ -82,6 +89,7 @@ impl ChannelKind {
             ChannelKind::CollBreakdown => "coll-breakdown",
             ChannelKind::MpiTime => "mpi-time",
             ChannelKind::Trace => "trace",
+            ChannelKind::Verify => "verify",
         }
     }
 
@@ -94,6 +102,7 @@ impl ChannelKind {
             ChannelKind::CollBreakdown => 1 << 4,
             ChannelKind::MpiTime => 1 << 5,
             ChannelKind::Trace => 1 << 6,
+            ChannelKind::Verify => 1 << 7,
         }
     }
 }
@@ -154,14 +163,15 @@ impl ChannelConfig {
         }
     }
 
-    /// Every *aggregate* channel on. The event-level `trace` channel is
-    /// deliberately excluded: it allocates a per-rank event ring and emits
-    /// a separate artifact, so it must be requested by name
-    /// (`--channels ...,trace`) rather than riding along with `all`.
+    /// Every *aggregate* channel on. The event-level `trace` and `verify`
+    /// channels are deliberately excluded: each turns on extra hook
+    /// events and emits a separate artifact, so they must be requested by
+    /// name (`--channels ...,trace` / `...,verify`) rather than riding
+    /// along with `all`.
     pub fn all() -> ChannelConfig {
         let mut c = ChannelConfig::empty();
         for k in ChannelKind::ALL {
-            if k != ChannelKind::Trace {
+            if k != ChannelKind::Trace && k != ChannelKind::Verify {
                 c = c.with(k);
             }
         }
@@ -293,6 +303,9 @@ impl ChannelConfig {
         if self.enabled(ChannelKind::Trace) {
             out.push(Box::new(TraceChannel::new(self.trace_capacity())));
         }
+        if self.enabled(ChannelKind::Verify) {
+            out.push(Box::new(VerifyChannel::new()));
+        }
         out
     }
 }
@@ -371,6 +384,19 @@ pub trait MetricChannel {
     /// Hand over the captured event stream, if this channel records one.
     /// Called once by the profiler at `finish`.
     fn take_trace(&mut self) -> Option<crate::trace::RankTrace> {
+        None
+    }
+
+    /// True when this channel consumes the verify-only MPI event variants
+    /// (forwarded to [`crate::mpisim::MpiHook::wants_verify_events`]).
+    fn wants_verify_events(&self) -> bool {
+        false
+    }
+
+    /// Hand over the rank's verification payload, if this channel runs
+    /// the conformance automaton. Called once by the profiler at
+    /// `finish`; the profiler stamps the world rank afterwards.
+    fn take_verify(&mut self) -> Option<crate::mpisim::verify::RankVerify> {
         None
     }
 }
@@ -586,6 +612,60 @@ impl MetricChannel for TraceChannel {
     }
 }
 
+/// MPI conformance capture: feeds every hook event to the per-rank
+/// [`crate::mpisim::verify::StreamVerifier`], stamping each record with
+/// the rank's current region path. Writes nothing into `RegionStats` —
+/// its output is the rank's [`crate::mpisim::verify::RankVerify`]
+/// payload, handed to the profiler at `finish` via
+/// [`MetricChannel::take_verify`] (which stamps the world rank).
+struct VerifyChannel {
+    verifier: Option<crate::mpisim::verify::StreamVerifier>,
+    /// Stack of full region paths; the top is the attribution path for
+    /// every record/diagnostic emitted while inside it.
+    paths: Vec<String>,
+}
+
+impl VerifyChannel {
+    fn new() -> VerifyChannel {
+        VerifyChannel {
+            verifier: Some(crate::mpisim::verify::StreamVerifier::new()),
+            paths: Vec::new(),
+        }
+    }
+}
+
+impl MetricChannel for VerifyChannel {
+    fn kind(&self) -> ChannelKind {
+        ChannelKind::Verify
+    }
+
+    fn on_event(&mut self, _stats: &mut RegionStats, _comm: bool, ev: &MpiEvent) {
+        if let Some(v) = self.verifier.as_mut() {
+            let region = self.paths.last().map(String::as_str).unwrap_or("");
+            v.on_event(ev, region);
+        }
+    }
+
+    fn on_region_exit(&mut self, _stats: &mut RegionStats, _is_comm: bool, _dt: f64) {}
+
+    fn on_region_event(&mut self, path: &str, _is_comm: bool, enter: bool, _t: f64) {
+        if enter {
+            self.paths.push(path.to_string());
+        } else {
+            self.paths.pop();
+        }
+    }
+
+    fn wants_verify_events(&self) -> bool {
+        true
+    }
+
+    fn take_verify(&mut self) -> Option<crate::mpisim::verify::RankVerify> {
+        // Rank 0 placeholder; the profiler stamps the world rank.
+        self.verifier.take().map(|v| v.finish(0))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -628,13 +708,26 @@ mod tests {
     fn all_enables_every_aggregate_channel_but_not_trace() {
         let cfg = ChannelConfig::parse("all").unwrap();
         for k in ChannelKind::ALL {
-            if k == ChannelKind::Trace {
-                assert!(!cfg.enabled(k), "trace must be explicit, not in 'all'");
+            if k == ChannelKind::Trace || k == ChannelKind::Verify {
+                assert!(!cfg.enabled(k), "{:?} must be explicit, not in 'all'", k);
             } else {
                 assert!(cfg.enabled(k), "{:?}", k);
             }
         }
-        assert_eq!(cfg.build_channels().len(), ChannelKind::ALL.len() - 1);
+        assert_eq!(cfg.build_channels().len(), ChannelKind::ALL.len() - 2);
+    }
+
+    #[test]
+    fn verify_spec_roundtrips_and_is_explicit() {
+        let cfg = ChannelConfig::parse("comm-stats,verify").unwrap();
+        assert!(cfg.enabled(ChannelKind::Verify));
+        assert_eq!(cfg.spec_string(), "region-times,comm-stats,verify");
+        assert_eq!(ChannelConfig::parse(&cfg.spec_string()).unwrap(), cfg);
+        // the channel pipeline includes the verifier, and only it wants
+        // the verify-only hook events
+        let chans = cfg.build_channels();
+        assert_eq!(chans.iter().filter(|c| c.wants_verify_events()).count(), 1);
+        assert!(!ChannelConfig::parse("all").unwrap().enabled(ChannelKind::Verify));
     }
 
     #[test]

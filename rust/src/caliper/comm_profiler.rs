@@ -48,6 +48,10 @@ pub struct CommProfiler {
     /// construction; forwarded to the rank's hook chain so trace event
     /// emission is skipped entirely when tracing is off).
     wants_trace: bool,
+    /// Cached: some channel consumes verify-only events (same contract as
+    /// `wants_trace` — with no verifier attached the rank never emits
+    /// them, keeping the verify-off hot path unchanged).
+    wants_verify: bool,
 }
 
 impl CommProfiler {
@@ -60,6 +64,7 @@ impl CommProfiler {
     pub fn with_channels(rank: usize, config: ChannelConfig) -> Self {
         let channels = config.build_channels();
         let wants_trace = channels.iter().any(|c| c.wants_trace_events());
+        let wants_verify = channels.iter().any(|c| c.wants_verify_events());
         let mut p = CommProfiler {
             rank,
             stack: Vec::new(),
@@ -69,6 +74,7 @@ impl CommProfiler {
             attr_is_comm: false,
             channels,
             wants_trace,
+            wants_verify,
         };
         p.refresh_attr();
         p
@@ -164,6 +170,7 @@ impl CommProfiler {
             rank: self.rank,
             regions: Default::default(),
             trace: None,
+            verify: None,
         };
         for (path, stats) in std::mem::take(&mut self.regions) {
             // Buckets pre-created for the hot path that never saw an event
@@ -173,11 +180,19 @@ impl CommProfiler {
             }
         }
         // Event-level capture (the `trace` channel) rides out on the rank
-        // profile, stamped with the owning rank.
+        // profile, stamped with the owning rank. The `verify` channel's
+        // payload rides the same way.
         for ch in &mut self.channels {
             if let Some(mut tr) = ch.take_trace() {
                 tr.rank = self.rank;
                 profile.trace = Some(tr);
+            }
+            if let Some(mut rv) = ch.take_verify() {
+                rv.rank = self.rank;
+                for d in &mut rv.diagnostics {
+                    d.rank = self.rank;
+                }
+                profile.verify = Some(rv);
             }
         }
         profile
@@ -187,6 +202,10 @@ impl CommProfiler {
 impl MpiHook for CommProfiler {
     fn wants_trace_events(&self) -> bool {
         self.wants_trace
+    }
+
+    fn wants_verify_events(&self) -> bool {
+        self.wants_verify
     }
 
     fn on_event(&mut self, _rank: usize, ev: &MpiEvent) {
@@ -389,6 +408,45 @@ mod tests {
         assert!((mt.total - 1.5).abs() < 1e-12, "Wait owns the span");
         assert!((mt.wait - 1.0).abs() < 1e-12);
         assert!((mt.transfer - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn verify_channel_captures_stream_with_region_paths() {
+        let cfg = ChannelConfig::parse("verify").unwrap();
+        let mut p = CommProfiler::with_channels(3, cfg);
+        assert!(MpiHook::wants_verify_events(&p));
+        p.begin("main", false, 0.0);
+        p.begin("halo", true, 0.0);
+        p.on_event(
+            3,
+            &MpiEvent::VerifySendPost {
+                vid: 1,
+                dst: 1,
+                tag: 0,
+                ctx: 0,
+                bytes: 64,
+                t: 0.1,
+            },
+        );
+        p.end("halo", 1.0);
+        p.end("main", 2.0);
+        let prof = p.finish(2.0);
+        let rv = prof.verify.expect("verify payload lifted at finish");
+        assert_eq!(rv.rank, 3);
+        assert_eq!(rv.sends.len(), 1);
+        assert_eq!(rv.sends[0].region, "main/halo");
+        // the send was never completed: V001, stamped with the world rank
+        // and the post-site region path
+        assert_eq!(rv.diagnostics.len(), 1);
+        assert_eq!(rv.diagnostics[0].code, "V001");
+        assert_eq!(rv.diagnostics[0].rank, 3);
+        assert_eq!(rv.diagnostics[0].region, "main/halo");
+    }
+
+    #[test]
+    fn verify_off_means_no_verify_events_wanted() {
+        let p = CommProfiler::new(0);
+        assert!(!MpiHook::wants_verify_events(&p));
     }
 
     #[test]

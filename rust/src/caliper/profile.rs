@@ -267,6 +267,12 @@ pub struct RankProfile {
     /// NOT part of the profile JSON — the runner lifts it into the run's
     /// [`crate::trace::RunTrace`] and the separate JSONL trace artifact.
     pub trace: Option<crate::trace::RankTrace>,
+    /// The `verify` channel's conformance payload for this rank, when
+    /// enabled. NOT part of the profile JSON — the runner lifts every
+    /// rank's payload, runs the cross-rank checks
+    /// ([`crate::mpisim::verify::check_run`]), and attaches the merged
+    /// [`crate::mpisim::verify::RunVerify`] to the run profile.
+    pub verify: Option<crate::mpisim::verify::RankVerify>,
 }
 
 impl RankProfile {
@@ -725,6 +731,10 @@ pub struct RunProfile {
     /// Free-form metadata: app, system, ranks, scaling, problem, ...
     pub meta: BTreeMap<String, String>,
     pub regions: BTreeMap<String, AggRegion>,
+    /// Merged conformance results (`verify` channel): per-rank stream
+    /// diagnostics plus the cross-rank checks. Serialized as an optional
+    /// top-level `"verify"` key — no schema bump, old profiles read fine.
+    pub verify: Option<crate::mpisim::verify::RunVerify>,
 }
 
 impl RunProfile {
@@ -832,6 +842,9 @@ impl RunProfile {
         out.set("schema", SCHEMA_VERSION)
             .set("meta", meta)
             .set("regions", regions);
+        if let Some(v) = &self.verify {
+            out.set("verify", v.to_json());
+        }
         out
     }
 
@@ -881,6 +894,11 @@ impl RunProfile {
                 }
             }
             p.regions.insert(path.clone(), r);
+        }
+        // `verify` payload: absent in profiles recorded without the
+        // verify channel — optional by design, like the trace payloads.
+        if let Some(v) = j.get("verify") {
+            p.verify = crate::mpisim::verify::RunVerify::from_json(v);
         }
         Some(p)
     }

@@ -321,6 +321,13 @@ pub fn run_campaign_report(
     opts: &CampaignOptions,
     force: bool,
 ) -> Result<(Thicket, CampaignReport)> {
+    // Normalize once so cache keys, disk staleness checks, and the
+    // executed cells all see the same channel set (`--verify` implies the
+    // verify channel).
+    let opts = &CampaignOptions {
+        run: opts.run.normalized(),
+        ..opts.clone()
+    };
     let profile_dir = opts.out_dir.join("profiles");
     std::fs::create_dir_all(&profile_dir).context("creating profile dir")?;
     let trace_enabled = opts.run.channels.enabled(ChannelKind::Trace);

@@ -3,7 +3,7 @@
 //! ```text
 //! repro campaign [--out results] [--app X] [--system Y] [--max-ranks N]
 //!                [--extend-ranks N,M] [--smoke] [--force] [--jobs N]
-//!                [--channels SPEC] [--engine E]
+//!                [--channels SPEC] [--engine E] [--verify]
 //!                                           run the Table III matrix
 //!                                           (N worker threads; default 1)
 //! repro table1|table2|table3                print static tables
@@ -15,7 +15,10 @@
 //!                                           critical path from a cell's
 //!                                           trace artifact
 //! repro run --app kripke --system dane --ranks 64 [--smoke]
-//!           [--channels SPEC]               run one cell, print reports
+//!           [--channels SPEC] [--verify]    run one cell, print reports
+//! repro verify [--app X] [--system Y] [--max-ranks N] [--engine E]
+//!                                           MPI conformance analysis over
+//!                                           the smoke matrix, both engines
 //! repro report --profile results/profiles/kripke_dane_64.json
 //! ```
 
@@ -40,14 +43,15 @@ on the commscope simulated stack.
 USAGE:
   repro campaign [--out results] [--app APP] [--system SYS]
                  [--max-ranks N] [--extend-ranks N,M] [--smoke] [--force]
-                 [--jobs N] [--channels SPEC] [--engine E]
+                 [--jobs N] [--channels SPEC] [--engine E] [--verify]
   repro table1 | table2 | table3
   repro table4 [--out results]
   repro fig1 | ... | fig9  [--out results]
   repro heatmap [--out results]
   repro trace [--out results] [--cell ID] [--width N]
   repro run --app APP --system SYS --ranks N [--smoke] [--channels SPEC]
-            [--engine E]
+            [--engine E] [--verify]
+  repro verify [--app APP] [--system SYS] [--max-ranks N] [--engine E]
   repro report --profile FILE.json
   repro bench [--json BENCH_v1.json] [--label L] [--append] [--check]
               [--report FILE] [--reps N] [--full]
@@ -87,6 +91,15 @@ of wall-clock timeouts.
 selected (app, system) group's largest paper cell — e.g.
 `--engine event --extend-ranks 1024,4096` extends the fig8/fig9 scaling
 curves beyond the Table III matrix.
+`--verify` (run/campaign) turns on the MPI conformance analyzer in strict
+mode: every rank's call stream is checked by a MUST-style request-lifecycle
+automaton, collective sequences are matched across ranks, and the
+comm-matrix conservation invariant is enforced; any diagnostic (stable
+codes V001..V008, see docs/VERIFICATION.md) fails the cell. Results also
+ride the profile JSON as an optional top-level `verify` payload.
+`repro verify` sweeps the smoke matrix (filters: --app/--system/
+--max-ranks, default max-ranks 8) on BOTH engines — or one, with
+--engine — and exits nonzero on any diagnostic.
 `repro bench` runs the performance suite (smoke-matrix cell throughput,
 event-engine ranks/s, hook dispatch, trace capture, allocations per
 message) and maintains the schema-versioned BENCH_v1.json trajectory;
@@ -119,6 +132,10 @@ fn run_options(args: &Args) -> anyhow::Result<RunOptions> {
     if let Some(engine) = args.get("engine") {
         opts.engine = crate::mpisim::Engine::parse(engine)
             .ok_or_else(|| anyhow::anyhow!("--engine: '{}' (threaded|event|event:N)", engine))?;
+    }
+    if args.has("verify") {
+        opts.verify = true;
+        opts = opts.normalized();
     }
     Ok(opts)
 }
@@ -266,10 +283,97 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             let out = run_cell_full(&spec, &run_options(args)?)?;
             println!("{}", runtime_report(&out.profile));
             println!("{}", comm_report(&out.profile));
+            if let Some(rv) = &out.profile.verify {
+                println!("{}", rv.render());
+            }
             if let Some(trace) = &out.trace {
                 println!("{}", figures::trace_gantt(trace, 96));
                 println!("{}", figures::trace_report(trace));
             }
+            Ok(())
+        }
+        Some("verify") => {
+            // The conformance sweep: the smallest cell of every
+            // (app, system) group in the matrix — so all four apps are
+            // covered, including laghos whose smallest paper cell is 112
+            // ranks — at smoke fidelity, on both engines (or the one
+            // named with --engine). Any diagnostic fails the sweep.
+            let mut smallest: std::collections::BTreeMap<String, ExperimentSpec> =
+                std::collections::BTreeMap::new();
+            for spec in crate::benchpark::runner::table3_matrix() {
+                if let Some(app) = args.get("app") {
+                    if AppKind::parse(app) != Some(spec.app) {
+                        continue;
+                    }
+                }
+                if let Some(sys) = args.get("system") {
+                    if SystemId::parse(sys) != Some(spec.system) {
+                        continue;
+                    }
+                }
+                if let Some(m) = args.get("max-ranks") {
+                    if spec.nranks > m.parse()? {
+                        continue;
+                    }
+                }
+                let key = format!("{}_{}", spec.app.name(), spec.system.name());
+                match smallest.get(&key) {
+                    Some(prev) if prev.nranks <= spec.nranks => {}
+                    _ => {
+                        smallest.insert(key, spec);
+                    }
+                }
+            }
+            if smallest.is_empty() {
+                anyhow::bail!("no matrix cells match the given filters");
+            }
+            let engines: Vec<crate::mpisim::Engine> = match args.get("engine") {
+                Some(e) => vec![crate::mpisim::Engine::parse(e).ok_or_else(|| {
+                    anyhow::anyhow!("--engine: '{}' (threaded|event|event:N)", e)
+                })?],
+                None => vec![crate::mpisim::Engine::Threaded, crate::mpisim::Engine::event()],
+            };
+            let base = RunOptions {
+                verify: true,
+                ..RunOptions::smoke()
+            }
+            .normalized();
+            let mut failed = 0usize;
+            for spec in smallest.values() {
+                for engine in &engines {
+                    let opts = RunOptions {
+                        engine: *engine,
+                        ..base
+                    };
+                    match run_cell_full(spec, &opts) {
+                        Ok(out) => {
+                            let line = out
+                                .profile
+                                .verify
+                                .as_ref()
+                                .map(|rv| rv.render())
+                                .unwrap_or_else(|| "verify: no payload".to_string());
+                            println!("{} [{}]: {}", spec.id(), engine.name(), line);
+                        }
+                        Err(e) => {
+                            failed += 1;
+                            println!("{} [{}]: FAILED\n{:#}", spec.id(), engine.name(), e);
+                        }
+                    }
+                }
+            }
+            if failed > 0 {
+                anyhow::bail!("conformance verification failed for {} cell run(s)", failed);
+            }
+            println!(
+                "verify: all {} cell(s) clean on {}",
+                smallest.len(),
+                engines
+                    .iter()
+                    .map(|e| e.name())
+                    .collect::<Vec<_>>()
+                    .join(" and ")
+            );
             Ok(())
         }
         Some("bench") => crate::coordinator::bench::run_bench(args),

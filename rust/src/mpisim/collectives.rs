@@ -56,6 +56,16 @@ impl ReduceOp {
             ReduceOp::Max => 0,
         }
     }
+
+    /// Stable operator name, as recorded in verify events and compared by
+    /// the cross-rank collective matcher (`V007`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Min => "min",
+            ReduceOp::Max => "max",
+        }
+    }
 }
 
 struct CollSlot {

@@ -61,6 +61,14 @@ pub enum MpiError {
     #[error("deadlock detected at rank {rank}: {summary}")]
     Deadlock { rank: usize, summary: String },
 
+    /// `waitany` was handed a request list with no active request (every
+    /// slot already completed or [`super::Request::Null`]). Real MPI
+    /// returns `MPI_UNDEFINED` here; parking would wait on a completion
+    /// that can never arrive, so the simulator surfaces it as an error the
+    /// verifier also reports (diagnostic `V003`).
+    #[error("waitany on {n_reqs} inactive request(s) at rank {rank}: no completion can ever arrive")]
+    WaitOnInactive { rank: usize, n_reqs: usize },
+
     #[error("payload size {got} bytes does not decode to element type of size {elem}")]
     PayloadSizeMismatch { got: usize, elem: usize },
 

@@ -173,6 +173,61 @@ pub enum MpiEvent {
         sync: f64,
         t_end: f64,
     },
+    /// Verify-only: a nonblocking send was posted (`isend`/`send`). `vid`
+    /// is the rank-local request id the matching [`MpiEvent::VerifySendDone`]
+    /// completes. Only emitted when a hook declares
+    /// [`MpiHook::wants_verify_events`] — same disabled-path contract as
+    /// the trace-only variants.
+    VerifySendPost {
+        vid: u64,
+        dst: usize,
+        tag: i32,
+        ctx: u32,
+        bytes: usize,
+        t: f64,
+    },
+    /// Verify-only: a nonblocking receive was posted.
+    VerifyRecvPost {
+        vid: u64,
+        /// Source world rank, or `None` for ANY_SOURCE.
+        src: Option<usize>,
+        tag: i32,
+        ctx: u32,
+        t: f64,
+    },
+    /// Verify-only: a posted send completed inside a wait call.
+    VerifySendDone { vid: u64, t: f64 },
+    /// Verify-only: a posted receive matched and delivered. `bytes` is the
+    /// wire payload, `elem` the destination element size — the truncation
+    /// check (`V005`) divides one by the other.
+    VerifyRecvDone {
+        vid: u64,
+        src: usize,
+        tag: i32,
+        ctx: u32,
+        bytes: usize,
+        elem: usize,
+        t: f64,
+    },
+    /// Verify-only: a wait call was invoked over a request list with no
+    /// active request (diagnostic `V003`).
+    VerifyWaitInactive { n_reqs: usize, t: f64 },
+    /// Verify-only: one collective call with the arguments the cross-rank
+    /// sequence matcher compares (`V007`): kind, root (rooted collectives),
+    /// reduction operator name, and contributed bytes. Emitted on entry,
+    /// before the collective can fail — a diverged rank still records the
+    /// call that diverged.
+    VerifyColl {
+        kind: CollKind,
+        ctx: u32,
+        /// Root world rank for rooted collectives (`Bcast`, `Reduce`).
+        root: Option<usize>,
+        /// Reduction operator name (`"sum"`/`"min"`/`"max"`) for reductions.
+        op: Option<&'static str>,
+        bytes: usize,
+        comm_size: usize,
+        t: f64,
+    },
 }
 
 impl MpiEvent {
@@ -189,7 +244,13 @@ impl MpiEvent {
             MpiEvent::RecvPost { .. }
             | MpiEvent::RecvMatch { .. }
             | MpiEvent::SendMatch { .. }
-            | MpiEvent::CollEpoch { .. } => 0.0,
+            | MpiEvent::CollEpoch { .. }
+            | MpiEvent::VerifySendPost { .. }
+            | MpiEvent::VerifyRecvPost { .. }
+            | MpiEvent::VerifySendDone { .. }
+            | MpiEvent::VerifyRecvDone { .. }
+            | MpiEvent::VerifyWaitInactive { .. }
+            | MpiEvent::VerifyColl { .. } => 0.0,
         }
     }
 }
@@ -204,6 +265,16 @@ pub trait MpiHook {
     /// emitting them entirely unless some attached hook opts in, keeping
     /// the hot path free of trace overhead when tracing is disabled.
     fn wants_trace_events(&self) -> bool {
+        false
+    }
+
+    /// True when this hook consumes the verify-only event variants
+    /// (`VerifySendPost`/`VerifyRecvPost`/`VerifySendDone`/
+    /// `VerifyRecvDone`/`VerifyWaitInactive`/`VerifyColl`). Same contract
+    /// as [`MpiHook::wants_trace_events`]: unless some attached hook opts
+    /// in, the rank never constructs these events — the verify-off hot
+    /// path is a single boolean branch.
+    fn wants_verify_events(&self) -> bool {
         false
     }
 }

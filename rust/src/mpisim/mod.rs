@@ -62,6 +62,7 @@ pub mod netmodel;
 pub mod p2p;
 pub mod request;
 pub mod sched;
+pub mod verify;
 pub mod world;
 
 pub use cart::CartComm;
@@ -73,6 +74,7 @@ pub use hooks::{CollKind, MpiEvent, MpiHook};
 pub use netmodel::{ComputeParams, GroupSpan, MachineModel, NetParams};
 pub use request::{Protocol, RecvRequest, Request, SendRequest, Status};
 pub use sched::Engine;
+pub use verify::{Diagnostic, RankVerify, RunVerify, StreamVerifier};
 pub use world::{Rank, World, WorldConfig};
 
 /// Wildcard tag for receives.

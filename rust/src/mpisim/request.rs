@@ -113,6 +113,9 @@ pub struct SendRequest {
     pub(crate) ctx: u32,
     pub(crate) bytes: usize,
     pub(crate) state: SendState,
+    /// Rank-local verify id pairing this post with its completion event
+    /// (0 when no verifier is attached — ids start at 1).
+    pub(crate) vid: u64,
 }
 
 impl SendRequest {
@@ -151,6 +154,8 @@ pub struct RecvRequest {
     pub(crate) ctx: u32,
     /// Entry id in the posted-receive table ([`super::p2p::Mailbox`]).
     pub(crate) post_id: u64,
+    /// Rank-local verify id (see [`SendRequest::vid`]).
+    pub(crate) vid: u64,
 }
 
 /// Unified nonblocking handle, the element type of
@@ -160,6 +165,23 @@ pub struct RecvRequest {
 pub enum Request {
     Send(SendRequest),
     Recv(RecvRequest),
+    /// `MPI_REQUEST_NULL`: an inactive slot. `waitall` skips it, `test`
+    /// reports it incomplete-never, and `waitany` over a list that is
+    /// all-null returns [`super::MpiError::WaitOnInactive`] instead of
+    /// parking on a completion that cannot arrive.
+    Null,
+}
+
+impl Request {
+    /// An inactive request (`MPI_REQUEST_NULL`).
+    pub fn null() -> Request {
+        Request::Null
+    }
+
+    /// True for the inactive [`Request::Null`] slot.
+    pub fn is_null(&self) -> bool {
+        matches!(self, Request::Null)
+    }
 }
 
 impl From<SendRequest> for Request {
@@ -188,6 +210,7 @@ mod tests {
             ctx: 0,
             bytes: 64,
             state: SendState::Eager,
+            vid: 0,
         };
         assert!(r.test());
         assert_eq!(r.protocol(), Protocol::Eager);
@@ -208,6 +231,7 @@ mod tests {
                 ready: 0.5,
                 handshake: 2e-6,
             },
+            vid: 0,
         };
         assert_eq!(r.protocol(), Protocol::Rendezvous);
         assert!(!r.test(), "pending until the receiver matches");
@@ -238,6 +262,22 @@ mod tests {
         });
         assert_eq!(cell.wait(Duration::from_secs(5)), Some(7.0));
         t.join().unwrap();
+    }
+
+    #[test]
+    fn null_request_is_inactive() {
+        let r = Request::null();
+        assert!(r.is_null());
+        let live: Request = SendRequest {
+            dst: 0,
+            tag: 0,
+            ctx: 0,
+            bytes: 1,
+            state: SendState::Eager,
+            vid: 0,
+        }
+        .into();
+        assert!(!live.is_null());
     }
 
     #[test]

@@ -1,0 +1,888 @@
+//! MUST-style MPI conformance analyzer, fed from the PMPI hook chain.
+//!
+//! The paper's comm-region figures are only trustworthy if the MPI traffic
+//! they annotate is well-formed: a leaked request or a rank-divergent
+//! collective sequence silently corrupts every comm-stats / comm-matrix /
+//! wait-state figure downstream. This module gives the *simulated
+//! programs* a conformance contract, layered exactly like runtime MPI
+//! correctness tools (MUST, Umpire): the checks live beside the profiler,
+//! at the hook layer, and cost nothing when disabled
+//! ([`crate::mpisim::MpiHook::wants_verify_events`] — one predictable
+//! branch, same pattern as `wants_trace_events`).
+//!
+//! Two layers of checking:
+//!
+//! 1. **Per-rank stream checks** ([`StreamVerifier`]): a request-lifecycle
+//!    automaton over the verify-only event variants — leaked / never-waited
+//!    requests at finalize (`V001`), double-wait (`V002`), wait on an
+//!    all-inactive request list (`V003`), user tags outside the valid range
+//!    (`V004`), and count/datatype truncation on delivered receives
+//!    (`V005`).
+//! 2. **Cross-rank checks** ([`cross_rank`]), after the deterministic
+//!    per-rank merge: unmatched sends / unconsumed mailbox messages at
+//!    finalize (`V006`), collective call-sequence matching per communicator
+//!    — op kind, root, reduce operator, byte compatibility, reported as the
+//!    exact divergence point (`V007`) — and comm-matrix conservation,
+//!    promoted from a test helper into a verifier diagnostic (`V008`).
+//!
+//! Every [`Diagnostic`] carries the offending rank, the virtual timestamp,
+//! the enclosing Caliper region path, and a stable code. Results surface as
+//! the `verify` channel payload in the v2 profile, the `repro verify` CLI
+//! verb, and strict mode (`--verify`) on run/campaign. The catalog, the
+//! architecture, and the add-a-check recipe live in `docs/VERIFICATION.md`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::Json;
+
+use super::hooks::{CollKind, MpiEvent};
+use super::world::ALLTOALLV_TAG;
+use super::ANY_TAG;
+
+/// Largest valid user tag (MPI guarantees at least `32767` for
+/// `MPI_TAG_UB`; the simulator adopts the floor as its contract).
+pub const MAX_TAG: i32 = 32767;
+
+/// The diagnostic catalog: stable code → one-line description. Codes are
+/// append-only — retired checks keep their number (docs/VERIFICATION.md is
+/// the authoritative catalog).
+pub const CODES: [(&str, &str); 8] = [
+    ("V001", "leaked request: posted but never completed at finalize"),
+    ("V002", "double wait: request completed more than once"),
+    ("V003", "wait on an all-inactive request list"),
+    ("V004", "tag outside the valid user range 0..=32767"),
+    ("V005", "count/datatype truncation on a delivered receive"),
+    ("V006", "unmatched send: message never consumed by a receive"),
+    ("V007", "collective call-sequence divergence across ranks"),
+    ("V008", "comm-matrix conservation violation"),
+];
+
+fn code_static(name: &str) -> Option<&'static str> {
+    CODES.iter().find(|(c, _)| *c == name).map(|(c, _)| *c)
+}
+
+/// One conformance finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable catalog code (`V001`…).
+    pub code: &'static str,
+    /// World rank the finding is attributed to.
+    pub rank: usize,
+    /// Virtual timestamp of the offending operation (seconds).
+    pub t: f64,
+    /// Enclosing Caliper region path at the offending operation (empty
+    /// when the operation ran outside every region).
+    pub region: String,
+    /// Human-readable detail, including the exact divergence point for
+    /// cross-rank findings.
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}] rank {} @ {:.6}s in '{}': {}",
+            self.code, self.rank, self.t, self.region, self.message
+        )
+    }
+}
+
+/// One send, as recorded at post time (`isend`/`send`).
+#[derive(Debug, Clone)]
+pub struct SendRec {
+    pub vid: u64,
+    /// Destination world rank.
+    pub dst: usize,
+    pub tag: i32,
+    pub ctx: u32,
+    pub bytes: usize,
+    pub t: f64,
+    pub region: String,
+}
+
+/// One delivered receive, as recorded at completion.
+#[derive(Debug, Clone)]
+pub struct RecvRec {
+    pub vid: u64,
+    /// Source world rank (concrete — resolved by the match).
+    pub src: usize,
+    pub tag: i32,
+    pub ctx: u32,
+    pub bytes: usize,
+    pub t: f64,
+    pub region: String,
+}
+
+/// One collective call, as recorded on entry.
+#[derive(Debug, Clone)]
+pub struct CollRec {
+    pub kind: CollKind,
+    pub ctx: u32,
+    /// Communicator-relative root for rooted collectives.
+    pub root: Option<usize>,
+    /// Reduction operator name for reductions.
+    pub op: Option<&'static str>,
+    /// Bytes contributed by this rank.
+    pub bytes: usize,
+    pub comm_size: usize,
+    pub t: f64,
+    pub region: String,
+}
+
+impl CollRec {
+    /// `Allreduce(op=sum)` / `Bcast(root=3)` / `Barrier` — the rendering
+    /// used in `V007` divergence reports.
+    pub fn describe(&self) -> String {
+        let base = self
+            .kind
+            .name()
+            .strip_prefix("MPI_")
+            .unwrap_or(self.kind.name());
+        match (self.root, self.op) {
+            (Some(r), Some(op)) => format!("{}(root={}, op={})", base, r, op),
+            (Some(r), None) => format!("{}(root={})", base, r),
+            (None, Some(op)) => format!("{}(op={})", base, op),
+            (None, None) => base.to_string(),
+        }
+    }
+}
+
+/// Compatibility for one sequence slot: kind, root, operator, and
+/// communicator size must agree; fixed-contribution collectives
+/// (`Allreduce`) must also contribute identical byte counts.
+fn coll_compatible(a: &CollRec, b: &CollRec) -> bool {
+    a.kind == b.kind
+        && a.root == b.root
+        && a.op == b.op
+        && a.comm_size == b.comm_size
+        && (a.kind != CollKind::Allreduce || a.bytes == b.bytes)
+}
+
+/// What one open (posted, not yet completed) request looked like at post
+/// time — the payload of a `V001` leak report.
+#[derive(Debug, Clone)]
+struct OpenReq {
+    desc: String,
+    t: f64,
+    region: String,
+}
+
+/// Per-rank request-lifecycle automaton. Feed it every [`MpiEvent`] a rank
+/// emits (non-verify variants are ignored) along with the rank's current
+/// region path, then [`StreamVerifier::finish`] it at finalize.
+#[derive(Debug, Default)]
+pub struct StreamVerifier {
+    open: BTreeMap<u64, OpenReq>,
+    completed: BTreeSet<u64>,
+    diagnostics: Vec<Diagnostic>,
+    sends: Vec<SendRec>,
+    recvs: Vec<RecvRec>,
+    colls: Vec<CollRec>,
+}
+
+impl StreamVerifier {
+    pub fn new() -> StreamVerifier {
+        StreamVerifier::default()
+    }
+
+    fn diag(&mut self, code: &'static str, t: f64, region: &str, message: String) {
+        self.diagnostics.push(Diagnostic {
+            code,
+            rank: 0, // stamped by finish()
+            t,
+            region: region.to_string(),
+            message,
+        });
+    }
+
+    /// Tag-range check (`V004`). `ALLTOALLV_TAG` is the simulator's own
+    /// reserved internal tag; `ANY_TAG` is only legal on receives.
+    fn check_tag(&mut self, tag: i32, recv: bool, t: f64, region: &str, what: &str) {
+        let ok = (0..=MAX_TAG).contains(&tag) || tag == ALLTOALLV_TAG || (recv && tag == ANY_TAG);
+        if !ok {
+            self.diag(
+                "V004",
+                t,
+                region,
+                format!("{} uses tag {} outside the valid range 0..={}", what, tag, MAX_TAG),
+            );
+        }
+    }
+
+    fn close(&mut self, vid: u64, t: f64, region: &str) {
+        if vid == 0 {
+            return; // no verifier was attached when the request was posted
+        }
+        if self.open.remove(&vid).is_some() {
+            self.completed.insert(vid);
+        } else if self.completed.contains(&vid) {
+            self.diag(
+                "V002",
+                t,
+                region,
+                format!("request #{} completed more than once", vid),
+            );
+        }
+    }
+
+    /// Consume one hook event. `region` is the rank's current Caliper
+    /// region path (`"a/b/c"`, empty outside all regions).
+    pub fn on_event(&mut self, ev: &MpiEvent, region: &str) {
+        match ev {
+            MpiEvent::VerifySendPost {
+                vid,
+                dst,
+                tag,
+                ctx,
+                bytes,
+                t,
+            } => {
+                self.check_tag(*tag, false, *t, region, "send");
+                self.sends.push(SendRec {
+                    vid: *vid,
+                    dst: *dst,
+                    tag: *tag,
+                    ctx: *ctx,
+                    bytes: *bytes,
+                    t: *t,
+                    region: region.to_string(),
+                });
+                if *vid != 0 {
+                    self.open.insert(
+                        *vid,
+                        OpenReq {
+                            desc: format!("isend(dst={}, tag={}, ctx={}, {} bytes)", dst, tag, ctx, bytes),
+                            t: *t,
+                            region: region.to_string(),
+                        },
+                    );
+                }
+            }
+            MpiEvent::VerifyRecvPost { vid, src, tag, ctx, t } => {
+                self.check_tag(*tag, true, *t, region, "receive");
+                if *vid != 0 {
+                    let src_desc = match src {
+                        Some(s) => s.to_string(),
+                        None => "ANY".to_string(),
+                    };
+                    self.open.insert(
+                        *vid,
+                        OpenReq {
+                            desc: format!("irecv(src={}, tag={}, ctx={})", src_desc, tag, ctx),
+                            t: *t,
+                            region: region.to_string(),
+                        },
+                    );
+                }
+            }
+            MpiEvent::VerifySendDone { vid, t } => self.close(*vid, *t, region),
+            MpiEvent::VerifyRecvDone {
+                vid,
+                src,
+                tag,
+                ctx,
+                bytes,
+                elem,
+                t,
+            } => {
+                self.close(*vid, *t, region);
+                self.recvs.push(RecvRec {
+                    vid: *vid,
+                    src: *src,
+                    tag: *tag,
+                    ctx: *ctx,
+                    bytes: *bytes,
+                    t: *t,
+                    region: region.to_string(),
+                });
+                if *elem > 1 && bytes % elem != 0 {
+                    self.diag(
+                        "V005",
+                        *t,
+                        region,
+                        format!(
+                            "receive from rank {} (tag {}) delivered {} bytes, \
+                             not a multiple of the {}-byte element type",
+                            src, tag, bytes, elem
+                        ),
+                    );
+                }
+            }
+            MpiEvent::VerifyWaitInactive { n_reqs, t } => {
+                self.diag(
+                    "V003",
+                    *t,
+                    region,
+                    format!("waitany over {} request(s), none active", n_reqs),
+                );
+            }
+            MpiEvent::VerifyColl {
+                kind,
+                ctx,
+                root,
+                op,
+                bytes,
+                comm_size,
+                t,
+            } => {
+                self.colls.push(CollRec {
+                    kind: *kind,
+                    ctx: *ctx,
+                    root: *root,
+                    op: *op,
+                    bytes: *bytes,
+                    comm_size: *comm_size,
+                    t: *t,
+                    region: region.to_string(),
+                });
+            }
+            _ => {}
+        }
+    }
+
+    /// Finalize the stream: every still-open request is a leak (`V001`),
+    /// attributed to its *post* site. Returns the rank's verification
+    /// payload with `rank` stamped into every diagnostic.
+    pub fn finish(mut self, rank: usize) -> RankVerify {
+        let leaks: Vec<OpenReq> = std::mem::take(&mut self.open).into_values().collect();
+        for o in leaks {
+            self.diag(
+                "V001",
+                o.t,
+                &o.region,
+                format!("{} posted but never completed before finalize", o.desc),
+            );
+        }
+        for d in &mut self.diagnostics {
+            d.rank = rank;
+        }
+        RankVerify {
+            rank,
+            diagnostics: self.diagnostics,
+            sends: self.sends,
+            recvs: self.recvs,
+            colls: self.colls,
+        }
+    }
+}
+
+/// One rank's verification payload: its stream diagnostics plus the
+/// send/receive/collective records the cross-rank checks consume. Lifted
+/// off `RankProfile` by the runner before aggregation (never serialized
+/// per-rank — only the merged [`RunVerify`] reaches the profile JSON).
+#[derive(Debug, Clone, Default)]
+pub struct RankVerify {
+    pub rank: usize,
+    pub diagnostics: Vec<Diagnostic>,
+    pub sends: Vec<SendRec>,
+    pub recvs: Vec<RecvRec>,
+    pub colls: Vec<CollRec>,
+}
+
+/// Cross-rank checks over the deterministic merge of every rank's records:
+/// unmatched sends (`V006`), per-communicator collective sequence matching
+/// (`V007`), and pairwise byte conservation (`V008`).
+pub fn cross_rank(ranks: &[RankVerify]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // V006: per (src, dst, tag, ctx) FIFO channel, every send must be
+    // consumed by a receive. ANY_SOURCE/ANY_TAG receives record their
+    // *matched* concrete key, so the channels line up exactly.
+    let mut sends: BTreeMap<(usize, usize, i32, u32), Vec<&SendRec>> = BTreeMap::new();
+    let mut recv_counts: BTreeMap<(usize, usize, i32, u32), usize> = BTreeMap::new();
+    for r in ranks {
+        for s in &r.sends {
+            sends.entry((r.rank, s.dst, s.tag, s.ctx)).or_default().push(s);
+        }
+        for v in &r.recvs {
+            *recv_counts.entry((v.src, r.rank, v.tag, v.ctx)).or_default() += 1;
+        }
+    }
+    for ((src, dst, tag, ctx), posted) in &sends {
+        let consumed = recv_counts.get(&(*src, *dst, *tag, *ctx)).copied().unwrap_or(0);
+        if posted.len() > consumed {
+            // FIFO matching: the first unmatched send is `posted[consumed]`.
+            let first = posted[consumed];
+            out.push(Diagnostic {
+                code: "V006",
+                rank: *src,
+                t: first.t,
+                region: first.region.clone(),
+                message: format!(
+                    "{} send(s) from rank {} to rank {} (tag {}, ctx {}) never received; \
+                     first unmatched: {} bytes at t={:.6}s",
+                    posted.len() - consumed,
+                    src,
+                    dst,
+                    tag,
+                    ctx,
+                    first.bytes,
+                    first.t
+                ),
+            });
+        }
+    }
+
+    // V007: per communicator context, every participating rank must issue
+    // the same collective sequence — same kind, root, operator, size, and
+    // (for fixed-contribution collectives) byte count, in the same order.
+    let ctxs: BTreeSet<u32> = ranks
+        .iter()
+        .flat_map(|r| r.colls.iter().map(|c| c.ctx))
+        .collect();
+    for ctx in ctxs {
+        let parts: Vec<(usize, Vec<&CollRec>)> = ranks
+            .iter()
+            .filter_map(|r| {
+                let seq: Vec<&CollRec> = r.colls.iter().filter(|c| c.ctx == ctx).collect();
+                if seq.is_empty() {
+                    None // not a member of this communicator
+                } else {
+                    Some((r.rank, seq))
+                }
+            })
+            .collect();
+        if parts.len() < 2 {
+            continue;
+        }
+        let (ref_rank, ref_seq) = (&parts[0].0, &parts[0].1);
+        for (rk, seq) in &parts[1..] {
+            for k in 0..ref_seq.len().max(seq.len()) {
+                let (a, b) = (ref_seq.get(k), seq.get(k));
+                let (diverged, t, region, msg) = match (a, b) {
+                    (Some(a), Some(b)) if coll_compatible(a, b) => continue,
+                    (Some(a), Some(b)) => (
+                        true,
+                        b.t,
+                        b.region.clone(),
+                        format!(
+                            "rank {} call #{} on ctx {}: {} vs rank {}: {}",
+                            rk,
+                            k,
+                            ctx,
+                            b.describe(),
+                            ref_rank,
+                            a.describe()
+                        ),
+                    ),
+                    (Some(a), None) => (
+                        true,
+                        a.t,
+                        a.region.clone(),
+                        format!(
+                            "rank {} stopped after {} call(s) on ctx {}; rank {} call #{} is {}",
+                            rk,
+                            seq.len(),
+                            ctx,
+                            ref_rank,
+                            k,
+                            a.describe()
+                        ),
+                    ),
+                    (None, Some(b)) => (
+                        true,
+                        b.t,
+                        b.region.clone(),
+                        format!(
+                            "rank {} call #{} on ctx {}: {} has no counterpart on rank {}",
+                            rk,
+                            k,
+                            ctx,
+                            b.describe(),
+                            ref_rank
+                        ),
+                    ),
+                    (None, None) => unreachable!("k bounded by max(len)"),
+                };
+                if diverged {
+                    out.push(Diagnostic {
+                        code: "V007",
+                        rank: *rk,
+                        t,
+                        region,
+                        message: msg,
+                    });
+                    break; // first divergence point per rank pair
+                }
+            }
+        }
+    }
+
+    // V008: pairwise conservation — total bytes rank i sent to rank j must
+    // equal the bytes j received from i (the comm-matrix invariant the
+    // aggregate tests check, promoted to a verifier diagnostic). Count
+    // surpluses already reported as V006 are excluded: this catches pure
+    // byte divergence (equal message counts, unequal bytes).
+    let mut sent: BTreeMap<(usize, usize), (usize, u64)> = BTreeMap::new();
+    let mut recvd: BTreeMap<(usize, usize), (usize, u64)> = BTreeMap::new();
+    for r in ranks {
+        for s in &r.sends {
+            let e = sent.entry((r.rank, s.dst)).or_default();
+            e.0 += 1;
+            e.1 += s.bytes as u64;
+        }
+        for v in &r.recvs {
+            let e = recvd.entry((v.src, r.rank)).or_default();
+            e.0 += 1;
+            e.1 += v.bytes as u64;
+        }
+    }
+    let pairs: BTreeSet<(usize, usize)> = sent.keys().chain(recvd.keys()).copied().collect();
+    for (src, dst) in pairs {
+        let (sc, sb) = sent.get(&(src, dst)).copied().unwrap_or((0, 0));
+        let (rc, rb) = recvd.get(&(src, dst)).copied().unwrap_or((0, 0));
+        if sc == rc && sb != rb {
+            out.push(Diagnostic {
+                code: "V008",
+                rank: src,
+                t: 0.0,
+                region: String::new(),
+                message: format!(
+                    "rank {} sent {} bytes in {} message(s) to rank {}, \
+                     but rank {} received {} bytes",
+                    src, sb, sc, dst, dst, rb
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Merge per-rank diagnostics with the cross-rank checks into the run's
+/// verification payload, in deterministic (code, rank, time) order.
+pub fn check_run(ranks: &[RankVerify]) -> RunVerify {
+    let mut diagnostics: Vec<Diagnostic> = ranks
+        .iter()
+        .flat_map(|r| r.diagnostics.iter().cloned())
+        .collect();
+    diagnostics.extend(cross_rank(ranks));
+    diagnostics.sort_by(|a, b| {
+        (a.code, a.rank)
+            .cmp(&(b.code, b.rank))
+            .then(a.t.total_cmp(&b.t))
+            .then(a.message.cmp(&b.message))
+    });
+    RunVerify {
+        diagnostics,
+        ranks: ranks.len(),
+        sends: ranks.iter().map(|r| r.sends.len()).sum(),
+        recvs: ranks.iter().map(|r| r.recvs.len()).sum(),
+        colls: ranks.iter().map(|r| r.colls.len()).sum(),
+    }
+}
+
+/// The run-level verification payload: every diagnostic (per-rank stream
+/// checks + cross-rank checks) plus coverage counters. Serialized as the
+/// optional top-level `verify` key of the v2 profile JSON — no schema
+/// bump, same trick as the `mpi-time` channel payloads.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunVerify {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Ranks whose streams were checked.
+    pub ranks: usize,
+    /// Send / receive / collective records checked.
+    pub sends: usize,
+    pub recvs: usize,
+    pub colls: usize,
+}
+
+impl RunVerify {
+    /// True when every check passed.
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// One line per diagnostic, ready for CLI/report output.
+    pub fn render(&self) -> String {
+        if self.clean() {
+            return format!(
+                "verify: clean ({} ranks, {} sends, {} recvs, {} colls checked)",
+                self.ranks, self.sends, self.recvs, self.colls
+            );
+        }
+        let mut s = format!("verify: {} diagnostic(s)\n", self.diagnostics.len());
+        for d in &self.diagnostics {
+            s.push_str(&format!("  {}\n", d));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("ranks", self.ranks);
+        j.set("sends", self.sends);
+        j.set("recvs", self.recvs);
+        j.set("colls", self.colls);
+        let diags: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                let mut o = Json::obj();
+                o.set("code", d.code);
+                o.set("rank", d.rank);
+                o.set("t", d.t);
+                o.set("region", d.region.as_str());
+                o.set("message", d.message.as_str());
+                o
+            })
+            .collect();
+        j.set("diagnostics", Json::Arr(diags));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Option<RunVerify> {
+        let count = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0) as usize;
+        let diagnostics = j
+            .get("diagnostics")?
+            .as_arr()?
+            .iter()
+            .filter_map(|d| {
+                Some(Diagnostic {
+                    code: code_static(d.get("code")?.as_str()?)?,
+                    rank: d.get("rank")?.as_u64()? as usize,
+                    t: d.get("t")?.as_f64()?,
+                    region: d.get("region")?.as_str()?.to_string(),
+                    message: d.get("message")?.as_str()?.to_string(),
+                })
+            })
+            .collect();
+        Some(RunVerify {
+            diagnostics,
+            ranks: count("ranks"),
+            sends: count("sends"),
+            recvs: count("recvs"),
+            colls: count("colls"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn send_post(vid: u64, dst: usize, tag: i32, bytes: usize, t: f64) -> MpiEvent {
+        MpiEvent::VerifySendPost {
+            vid,
+            dst,
+            tag,
+            ctx: 0,
+            bytes,
+            t,
+        }
+    }
+
+    #[test]
+    fn clean_stream_is_clean() {
+        let mut v = StreamVerifier::new();
+        v.on_event(&send_post(1, 1, 7, 64, 0.1), "solve/halo");
+        v.on_event(&MpiEvent::VerifySendDone { vid: 1, t: 0.2 }, "solve/halo");
+        let rv = v.finish(3);
+        assert!(rv.diagnostics.is_empty(), "{:?}", rv.diagnostics);
+        assert_eq!(rv.sends.len(), 1);
+        assert_eq!(rv.rank, 3);
+    }
+
+    #[test]
+    fn leak_reports_v001_at_post_site() {
+        let mut v = StreamVerifier::new();
+        v.on_event(&send_post(1, 2, 7, 64, 0.5), "solve/halo");
+        let rv = v.finish(1);
+        assert_eq!(rv.diagnostics.len(), 1);
+        let d = &rv.diagnostics[0];
+        assert_eq!(d.code, "V001");
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.region, "solve/halo");
+        assert!((d.t - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn double_wait_reports_v002() {
+        let mut v = StreamVerifier::new();
+        v.on_event(&send_post(1, 1, 0, 8, 0.0), "");
+        v.on_event(&MpiEvent::VerifySendDone { vid: 1, t: 0.1 }, "");
+        v.on_event(&MpiEvent::VerifySendDone { vid: 1, t: 0.2 }, "w");
+        let rv = v.finish(0);
+        assert_eq!(rv.diagnostics.len(), 1);
+        assert_eq!(rv.diagnostics[0].code, "V002");
+        assert_eq!(rv.diagnostics[0].region, "w");
+    }
+
+    #[test]
+    fn bad_tag_reports_v004_but_internal_tags_pass() {
+        let mut v = StreamVerifier::new();
+        v.on_event(&send_post(1, 1, 40_000, 8, 0.0), "r");
+        v.on_event(&MpiEvent::VerifySendDone { vid: 1, t: 0.1 }, "r");
+        // internal alltoallv tag and ANY_TAG receive are both exempt
+        v.on_event(&send_post(2, 1, ALLTOALLV_TAG, 8, 0.2), "r");
+        v.on_event(&MpiEvent::VerifySendDone { vid: 2, t: 0.3 }, "r");
+        v.on_event(
+            &MpiEvent::VerifyRecvPost {
+                vid: 3,
+                src: None,
+                tag: ANY_TAG,
+                ctx: 0,
+                t: 0.4,
+            },
+            "r",
+        );
+        v.on_event(
+            &MpiEvent::VerifyRecvDone {
+                vid: 3,
+                src: 1,
+                tag: 0,
+                ctx: 0,
+                bytes: 8,
+                elem: 8,
+                t: 0.5,
+            },
+            "r",
+        );
+        let rv = v.finish(0);
+        let codes: Vec<&str> = rv.diagnostics.iter().map(|d| d.code).collect();
+        assert_eq!(codes, ["V004"]);
+    }
+
+    #[test]
+    fn truncation_reports_v005() {
+        let mut v = StreamVerifier::new();
+        v.on_event(
+            &MpiEvent::VerifyRecvDone {
+                vid: 0,
+                src: 2,
+                tag: 5,
+                ctx: 0,
+                bytes: 12, // not a multiple of 8
+                elem: 8,
+                t: 1.0,
+            },
+            "recv",
+        );
+        let rv = v.finish(4);
+        assert_eq!(rv.diagnostics.len(), 1);
+        assert_eq!(rv.diagnostics[0].code, "V005");
+        assert_eq!(rv.diagnostics[0].rank, 4);
+    }
+
+    #[test]
+    fn unmatched_send_reports_v006_on_sender() {
+        let sender = RankVerify {
+            rank: 0,
+            sends: vec![SendRec {
+                vid: 1,
+                dst: 1,
+                tag: 9,
+                ctx: 0,
+                bytes: 128,
+                t: 0.25,
+                region: "exchange".into(),
+            }],
+            ..Default::default()
+        };
+        let receiver = RankVerify {
+            rank: 1,
+            ..Default::default()
+        };
+        let diags = cross_rank(&[sender, receiver]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, "V006");
+        assert_eq!(diags[0].rank, 0);
+        assert_eq!(diags[0].region, "exchange");
+    }
+
+    #[test]
+    fn collective_divergence_reports_v007_with_exact_point() {
+        let mk = |op: &'static str| RankVerify {
+            colls: vec![CollRec {
+                kind: CollKind::Allreduce,
+                ctx: 0,
+                root: None,
+                op: Some(op),
+                bytes: 8,
+                comm_size: 2,
+                t: 1.0,
+                region: "reduce".into(),
+            }],
+            ..Default::default()
+        };
+        let mut a = mk("sum");
+        a.rank = 0;
+        let mut b = mk("max");
+        b.rank = 1;
+        let diags = cross_rank(&[a, b]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, "V007");
+        assert_eq!(diags[0].rank, 1);
+        assert!(diags[0].message.contains("call #0"), "{}", diags[0].message);
+        assert!(diags[0].message.contains("op=max"), "{}", diags[0].message);
+        assert!(diags[0].message.contains("op=sum"), "{}", diags[0].message);
+    }
+
+    #[test]
+    fn conservation_violation_reports_v008() {
+        let sender = RankVerify {
+            rank: 0,
+            sends: vec![SendRec {
+                vid: 1,
+                dst: 1,
+                tag: 0,
+                ctx: 0,
+                bytes: 100,
+                t: 0.0,
+                region: String::new(),
+            }],
+            ..Default::default()
+        };
+        let receiver = RankVerify {
+            rank: 1,
+            recvs: vec![RecvRec {
+                vid: 1,
+                src: 0,
+                tag: 0,
+                ctx: 0,
+                bytes: 64, // lost 36 bytes on the wire
+                t: 0.1,
+                region: String::new(),
+            }],
+            ..Default::default()
+        };
+        let diags = cross_rank(&[sender, receiver]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, "V008");
+    }
+
+    #[test]
+    fn run_verify_json_roundtrip() {
+        let rv = check_run(&[RankVerify {
+            rank: 0,
+            sends: vec![SendRec {
+                vid: 1,
+                dst: 1,
+                tag: 0,
+                ctx: 0,
+                bytes: 100,
+                t: 0.5,
+                region: "a/b".into(),
+            }],
+            ..Default::default()
+        }]);
+        // single rank, no receiver record → the send stays unmatched only
+        // across ranks; with one rank the receiver is absent entirely
+        let j = rv.to_json();
+        let back = RunVerify::from_json(&j).unwrap();
+        assert_eq!(rv, back);
+        assert_eq!(back.sends, 1);
+    }
+
+    #[test]
+    fn catalog_codes_are_unique_and_resolvable() {
+        let mut names: Vec<&str> = CODES.iter().map(|(c, _)| *c).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), CODES.len());
+        for (c, _) in CODES {
+            assert_eq!(code_static(c), Some(c));
+        }
+        assert_eq!(code_static("V999"), None);
+    }
+}

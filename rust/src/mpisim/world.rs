@@ -37,8 +37,10 @@ use super::sched::{BlockInfo, Engine, Scheduler, TaskGuard, ABORT_SENTINEL};
 /// Internal tag for [`Rank::alltoallv`]'s pairwise exchanges. Any app tag
 /// may coexist: matching is per-(src, tag, ctx) FIFO, so the reserved tag
 /// only has to avoid [`super::ANY_TAG`] and collisions are impossible
-/// unless an application deliberately posts this value.
-const ALLTOALLV_TAG: i32 = i32::MIN + 0xA2A;
+/// unless an application deliberately posts this value. `pub(crate)` so
+/// the conformance analyzer ([`super::verify`]) can exempt it from the
+/// user tag-range check (`V004`).
+pub(crate) const ALLTOALLV_TAG: i32 = i32::MIN + 0xA2A;
 
 /// Configuration for one simulated job.
 #[derive(Clone)]
@@ -224,6 +226,13 @@ pub struct Rank<'w> {
     /// false, [`Rank::emit_trace`] is a single branch — the tracing
     /// subsystem costs the disabled hot path one predictable-false test.
     trace_events: bool,
+    /// Same contract for verify-only events
+    /// ([`MpiHook::wants_verify_events`]): when false, [`Rank::emit_verify`]
+    /// is one predictable-false branch and no verify event is constructed.
+    verify_events: bool,
+    /// Rank-local request id counter for verify events (ids start at 1;
+    /// 0 marks "no verifier attached" on a request).
+    verify_seq: u64,
     /// Per-context collective sequence numbers (this rank's call count).
     coll_seq: HashMap<u32, u64>,
     /// Per-context comm_split call count (derives child contexts).
@@ -246,6 +255,8 @@ impl<'w> Rank<'w> {
             clock: Clock::new(),
             hooks: Vec::new(),
             trace_events: false,
+            verify_events: false,
+            verify_seq: 0,
             coll_seq: HashMap::new(),
             split_seq: HashMap::new(),
             span_cache: HashMap::new(),
@@ -306,7 +317,11 @@ impl<'w> Rank<'w> {
 
     /// Attach a PMPI-style hook (e.g. the Caliper comm profiler).
     pub fn add_hook(&mut self, hook: HookHandle) {
-        self.trace_events |= hook.borrow().wants_trace_events();
+        {
+            let h = hook.borrow();
+            self.trace_events |= h.wants_trace_events();
+            self.verify_events |= h.wants_verify_events();
+        }
         self.hooks.push(hook);
     }
 
@@ -322,6 +337,25 @@ impl<'w> Rank<'w> {
     fn emit_trace(&self, ev: MpiEvent) {
         if self.trace_events {
             self.emit(ev);
+        }
+    }
+
+    /// Emit a verify-only event — same disabled-path contract as
+    /// [`Rank::emit_trace`].
+    fn emit_verify(&self, ev: MpiEvent) {
+        if self.verify_events {
+            self.emit(ev);
+        }
+    }
+
+    /// Next verify request id (1-based; only advanced when a verifier is
+    /// attached, so the verify-off path never touches the counter).
+    fn next_vid(&mut self) -> u64 {
+        if self.verify_events {
+            self.verify_seq += 1;
+            self.verify_seq
+        } else {
+            0
         }
     }
 
@@ -417,12 +451,22 @@ impl<'w> Rank<'w> {
             t_start,
             t_end,
         });
+        let vid = self.next_vid();
+        self.emit_verify(MpiEvent::VerifySendPost {
+            vid,
+            dst: dst_world,
+            tag,
+            ctx: comm.ctx,
+            bytes,
+            t: t_end,
+        });
         Ok(SendRequest {
             dst: dst_world,
             tag,
             ctx: comm.ctx,
             bytes,
             state,
+            vid,
         })
     }
 
@@ -468,11 +512,20 @@ impl<'w> Rank<'w> {
             tag,
             t: post_time,
         });
+        let vid = self.next_vid();
+        self.emit_verify(MpiEvent::VerifyRecvPost {
+            vid,
+            src: src_world,
+            tag,
+            ctx: comm.ctx,
+            t: post_time,
+        });
         Ok(RecvRequest {
             src: src_world,
             tag,
             ctx: comm.ctx,
             post_id,
+            vid,
         })
     }
 
@@ -566,6 +619,10 @@ impl<'w> Rank<'w> {
         // rendezvous partner's send — if receives queued behind this
         // rank's own pending sends, two ranks waiting on [isend, irecv]
         // sets would block on each other's unmatched sends and deadlock.
+        // Per-slot verify ids (receives) and the send ids completed by
+        // this call — only populated when a verifier is attached.
+        let mut recv_vids: Vec<u64> = Vec::with_capacity(n_reqs);
+        let mut send_vids: Vec<u64> = Vec::new();
         for req in reqs {
             match req {
                 Request::Recv(r) => {
@@ -573,6 +630,7 @@ impl<'w> Rank<'w> {
                     envs.push(Some(env));
                     comps.push(Some((at, wire)));
                     posts.push(post_time);
+                    recv_vids.push(r.vid);
                     n_recv += 1;
                 }
                 Request::Send(s) => {
@@ -580,9 +638,18 @@ impl<'w> Rank<'w> {
                     envs.push(None);
                     comps.push(None);
                     posts.push(0.0);
+                    recv_vids.push(0);
+                    send_vids.push(s.vid);
                     if !matches!(s.state, SendState::Eager) {
                         pending_sends.push((idx, s));
                     }
+                }
+                // MPI_REQUEST_NULL: inactive slot, completes to nothing.
+                Request::Null => {
+                    envs.push(None);
+                    comps.push(None);
+                    posts.push(0.0);
+                    recv_vids.push(0);
                 }
             }
         }
@@ -666,11 +733,19 @@ impl<'w> Rank<'w> {
                 transfer: (t_end - t0) - wait,
             });
         }
+        // Verify-only completion stamps: every send this call completed
+        // (eager sends complete here too — their post/done pair is what
+        // clears the leak check), then one per delivered receive.
+        if self.verify_events {
+            for vid in &send_vids {
+                self.emit(MpiEvent::VerifySendDone { vid: *vid, t: t_end });
+            }
+        }
         // Zero-duration per-message Recv events carry bytes/peers for the
         // comm-stats/matrix/histogram channels without double-counting the
         // span the Wait event owns.
         let mut out = Vec::with_capacity(n_reqs);
-        for (env, comp) in envs.into_iter().zip(comps) {
+        for ((env, comp), vid) in envs.into_iter().zip(comps).zip(recv_vids) {
             match env {
                 Some(env) => {
                     let (at, _) = comp.expect("every receive has a completion");
@@ -681,6 +756,18 @@ impl<'w> Rank<'w> {
                         bytes: env.payload.len(),
                         t_start: stamp,
                         t_end: stamp,
+                    });
+                    // Emitted BEFORE the decode below so a truncation
+                    // diagnostic (V005) survives the PayloadSizeMismatch
+                    // error the decode returns.
+                    self.emit_verify(MpiEvent::VerifyRecvDone {
+                        vid,
+                        src: env.src,
+                        tag: env.tag,
+                        ctx: env.ctx,
+                        bytes: env.payload.len(),
+                        elem: std::mem::size_of::<T>(),
+                        t: t_end,
                     });
                     let status = Status {
                         src: env.src,
@@ -713,6 +800,21 @@ impl<'w> Rank<'w> {
         reqs: &mut Vec<Request>,
     ) -> Result<(usize, Option<(Vec<T>, Status)>), MpiError> {
         assert!(!reqs.is_empty(), "waitany on an empty request set");
+        // All-inactive list (every slot MPI_REQUEST_NULL): no completion
+        // can ever arrive, so parking would hang forever (threaded: until
+        // the wall-clock guard; event engine: a phantom deadlock). Real
+        // MPI returns MPI_UNDEFINED here — surface it as an error before
+        // touching either engine's blocking path.
+        if reqs.iter().all(|r| r.is_null()) {
+            self.emit_verify(MpiEvent::VerifyWaitInactive {
+                n_reqs: reqs.len(),
+                t: self.clock.now(),
+            });
+            return Err(MpiError::WaitOnInactive {
+                rank: self.rank,
+                n_reqs: reqs.len(),
+            });
+        }
         if let Some(sched) = self.sched() {
             // Event engine: park between probes; any completion targeting
             // this rank (deposit, rendezvous cell) re-enqueues it.
@@ -734,8 +836,12 @@ impl<'w> Rank<'w> {
             }
             if deadline.expired() {
                 // Blame a request that is actually stuck, not whatever
-                // happens to sit at index 0.
-                let stuck = reqs.iter().position(|r| !self.test(r)).unwrap_or(0);
+                // happens to sit at index 0 (and never a Null slot, which
+                // is inactive rather than stuck).
+                let stuck = reqs
+                    .iter()
+                    .position(|r| !r.is_null() && !self.test(r))
+                    .unwrap_or(0);
                 return Err(self.pending_timeout(&reqs[stuck]));
             }
             self.core.mailboxes[self.rank].wait_deposit(Duration::from_micros(200));
@@ -750,6 +856,9 @@ impl<'w> Rank<'w> {
         match req {
             Request::Send(s) => s.test(),
             Request::Recv(r) => self.core.mailboxes[self.rank].peek_match(r.src, r.tag, r.ctx),
+            // A null request is inactive: completing it would not block,
+            // but it can never become the "ready" request `waitany` picks.
+            Request::Null => false,
         }
     }
 
@@ -864,6 +973,12 @@ impl<'w> Rank<'w> {
                 ctx: r.ctx,
                 millis,
             },
+            // Unreachable from waitany (null slots are never selected as
+            // "stuck"), kept for match exhaustiveness.
+            Request::Null => MpiError::WaitOnInactive {
+                rank: self.rank,
+                n_reqs: 1,
+            },
         }
     }
 
@@ -899,6 +1014,12 @@ impl<'w> Rank<'w> {
         comm: &Comm,
         kind: CollKind,
         class: CollClass,
+        // root: communicator-relative root for rooted collectives;
+        // op: reduction operator name. Recorded in the verify event so the
+        // cross-rank matcher can catch root/op divergence the board's
+        // kind-name matching is blind to.
+        root: Option<usize>,
+        op: Option<&'static str>,
         contrib: Box<[u8]>,
         cost: CollCost,
         finalize: &dyn Fn(&mut [Option<Box<[u8]>>]) -> Box<[u8]>,
@@ -907,6 +1028,17 @@ impl<'w> Rank<'w> {
         let span = self.comm_span(comm);
         let t_start = self.clock.now();
         let static_kind = kind.name();
+        // Verify events record the call on ENTRY, before the board can
+        // fail it — a diverged rank still records the call that diverged.
+        self.emit_verify(MpiEvent::VerifyColl {
+            kind,
+            ctx: comm.ctx,
+            root,
+            op,
+            bytes: contrib.len(),
+            comm_size: comm.size(),
+            t: t_start,
+        });
         let (result, max_entry) = match self.sched() {
             Some(sched) => {
                 use super::collectives::Enter;
@@ -1002,6 +1134,8 @@ impl<'w> Rank<'w> {
             comm,
             CollKind::Barrier,
             CollClass::Barrier,
+            None,
+            None,
             Box::from(&[][..]),
             CollCost::Fixed(0),
             &|_| Box::from(&[][..]),
@@ -1030,6 +1164,8 @@ impl<'w> Rank<'w> {
             comm,
             CollKind::Bcast,
             CollClass::Bcast,
+            Some(root),
+            None,
             contrib,
             CollCost::ResultBytes,
             &move |parts| parts[root].take().expect("root contribution missing"),
@@ -1050,6 +1186,8 @@ impl<'w> Rank<'w> {
             comm,
             CollKind::Allreduce,
             CollClass::Allreduce,
+            None,
+            Some(op.name()),
             contrib,
             CollCost::Fixed(n * 8),
             &move |parts| reduce_lanes_f64(parts, n, op),
@@ -1071,6 +1209,8 @@ impl<'w> Rank<'w> {
             comm,
             CollKind::Allreduce,
             CollClass::Allreduce,
+            None,
+            Some(op.name()),
             contrib,
             CollCost::Fixed(n * 8),
             &move |parts| reduce_lanes_u64(parts, n, op),
@@ -1092,6 +1232,8 @@ impl<'w> Rank<'w> {
             comm,
             CollKind::Reduce,
             CollClass::Reduce,
+            Some(root),
+            Some(op.name()),
             contrib,
             CollCost::ResultBytes,
             &move |parts| reduce_lanes_f64(parts, n, op),
@@ -1118,6 +1260,8 @@ impl<'w> Rank<'w> {
             comm,
             CollKind::Allgatherv,
             CollClass::Allgather,
+            None,
+            None,
             contrib,
             CollCost::ResultBytesPerMember,
             &|parts| frame_concat(parts),
@@ -1170,6 +1314,18 @@ impl<'w> Rank<'w> {
             t_start: t_marker,
             t_end: t_marker,
         });
+        // Zero-byte verify record too: alltoallv bypasses the board, but
+        // the cross-rank matcher still sequences it per communicator (the
+        // pairwise exchanges book their own send/recv records).
+        self.emit_verify(MpiEvent::VerifyColl {
+            kind: CollKind::Alltoallv,
+            ctx: comm.ctx,
+            root: None,
+            op: None,
+            bytes: 0,
+            comm_size: p,
+            t: t_marker,
+        });
         // Round k: send to (me + k), receive from (me - k). All receives
         // are posted before any send and completion happens in one
         // waitall, so the exchange cannot deadlock even when parts exceed
@@ -1217,6 +1373,8 @@ impl<'w> Rank<'w> {
             comm,
             CollKind::CommSplit,
             CollClass::Allgather,
+            None,
+            None,
             contrib,
             CollCost::Fixed(24),
             &|parts| frame_concat(parts),

@@ -1,7 +1,7 @@
 //! The per-rank trace recorder: a bounded ring-buffer event sink fed from
 //! the PMPI hook chain and the Caliper region guards.
 
-// lint:allow(hash-iter-artifact): lookup-only intern table; artifact
+// lint:allow(hash-iter-artifact) -- lookup-only intern table; artifact
 // order is carried by the insertion-ordered `paths` Vec, never by map
 // iteration.
 use std::collections::{HashMap, VecDeque};
@@ -23,7 +23,7 @@ pub struct TraceRecorder {
     events: VecDeque<TraceEvent>,
     dropped: u64,
     paths: Vec<String>,
-    // lint:allow(hash-iter-artifact): never iterated — ids come from
+    // lint:allow(hash-iter-artifact) -- never iterated; ids come from
     // `paths` insertion order.
     path_ids: HashMap<String, u32>,
 }
@@ -35,7 +35,7 @@ impl TraceRecorder {
             events: VecDeque::new(),
             dropped: 0,
             paths: Vec::new(),
-            // lint:allow(hash-iter-artifact): lookup-only intern table.
+            // lint:allow(hash-iter-artifact) -- lookup-only intern table.
             path_ids: HashMap::new(),
         }
     }

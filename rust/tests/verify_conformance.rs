@@ -1,0 +1,300 @@
+//! The MPI conformance analyzer end to end: one constructed erroneous
+//! program per diagnostic code (asserting the exact code, rank, and
+//! enclosing region path), the waitany-on-all-inactive bugfix on both
+//! engines, and verify-clean assertions for every shipped app.
+//!
+//! V002 (double wait) and V008 (byte conservation) cannot be produced
+//! through the safe API — a waited request degrades to `Request::Null`
+//! (whose re-wait is V003), and the transport records both sides of a
+//! message from the same envelope — so those two feed the verifier
+//! synthesized streams/records, which is exactly the layer `check_run`
+//! consumes.
+
+use std::time::Duration;
+
+use commscope::benchpark::runner::{run_cell_full, RunOptions};
+use commscope::benchpark::{AppKind, ExperimentSpec, Scaling, SystemId};
+use commscope::caliper::Caliper;
+use commscope::mpisim::collectives::ReduceOp;
+use commscope::mpisim::verify::{check_run, RecvRec, SendRec};
+use commscope::mpisim::{
+    Engine, MachineModel, MpiError, MpiEvent, Rank, RankVerify, Request, RunVerify,
+    StreamVerifier, World, WorldConfig,
+};
+
+fn cfg(n: usize) -> WorldConfig {
+    WorldConfig::new(n, MachineModel::test_machine()).with_timeout(Duration::from_secs(20))
+}
+
+/// Run `f` on `n` ranks with the `verify` channel attached, inside a
+/// `main` region, and return the cross-rank verification result.
+fn run_verified<F>(n: usize, f: F) -> RunVerify
+where
+    F: Fn(&mut Rank, &Caliper) + Sync,
+{
+    let profiles = World::run(cfg(n), |rank| {
+        let cali = Caliper::attach_with(rank, "verify").unwrap();
+        {
+            let _main = cali.region("main");
+            f(rank, &cali);
+        }
+        cali.finish(rank)
+    });
+    let rvs: Vec<RankVerify> = profiles
+        .into_iter()
+        .filter_map(|mut p| p.verify.take())
+        .collect();
+    assert_eq!(rvs.len(), n, "every rank carries a verify payload");
+    check_run(&rvs)
+}
+
+#[test]
+fn v001_leaked_request_attributed_to_post_site() {
+    let rv = run_verified(2, |rank, cali| {
+        let world = rank.world();
+        let _halo = cali.comm_region("halo");
+        if rank.rank == 0 {
+            // posted, never waited, never matched — leaks at finish
+            let _req = rank.irecv(Some(1), 5, &world).unwrap();
+        }
+    });
+    assert_eq!(rv.diagnostics.len(), 1, "{}", rv.render());
+    let d = &rv.diagnostics[0];
+    assert_eq!(d.code, "V001");
+    assert_eq!(d.rank, 0);
+    assert_eq!(d.region, "main/halo");
+}
+
+#[test]
+fn v002_double_wait_via_synthesized_stream() {
+    let mut v = StreamVerifier::new();
+    v.on_event(
+        &MpiEvent::VerifySendPost {
+            vid: 1,
+            dst: 1,
+            tag: 0,
+            ctx: 0,
+            bytes: 8,
+            t: 0.0,
+        },
+        "main/halo",
+    );
+    v.on_event(&MpiEvent::VerifySendDone { vid: 1, t: 1.0 }, "main/halo");
+    v.on_event(&MpiEvent::VerifySendDone { vid: 1, t: 2.0 }, "main/halo");
+    let rv = check_run(&[v.finish(3)]);
+    assert_eq!(rv.diagnostics.len(), 1, "{}", rv.render());
+    let d = &rv.diagnostics[0];
+    assert_eq!(d.code, "V002");
+    assert_eq!(d.rank, 3);
+    assert_eq!(d.region, "main/halo");
+}
+
+#[test]
+fn v003_wait_on_inactive_reported_with_region() {
+    let rv = run_verified(1, |rank, cali| {
+        let _w = cali.comm_region("drain");
+        let mut reqs = vec![Request::null(), Request::null()];
+        let err = rank.waitany::<u8>(&mut reqs).unwrap_err();
+        assert!(
+            matches!(err, MpiError::WaitOnInactive { rank: 0, n_reqs: 2 }),
+            "{err:?}"
+        );
+    });
+    assert_eq!(rv.diagnostics.len(), 1, "{}", rv.render());
+    let d = &rv.diagnostics[0];
+    assert_eq!(d.code, "V003");
+    assert_eq!(d.rank, 0);
+    assert_eq!(d.region, "main/drain");
+}
+
+/// The bugfix itself, independent of the analyzer: an all-`MPI_REQUEST_NULL`
+/// waitany must return `WaitOnInactive` instead of parking until the
+/// wall-clock guard (threaded) or a phantom deadlock (event engine).
+#[test]
+fn waitany_all_inactive_errors_on_both_engines() {
+    for engine in [Engine::Threaded, Engine::event()] {
+        World::run(cfg(1).with_engine(engine), |rank| {
+            let mut reqs = vec![Request::null()];
+            let err = rank.waitany::<u8>(&mut reqs).unwrap_err();
+            assert!(
+                matches!(err, MpiError::WaitOnInactive { rank: 0, n_reqs: 1 }),
+                "engine {}: {err:?}",
+                engine.name()
+            );
+            // The rank is still usable after the error.
+            let mut live = vec![Request::null()];
+            live.push(Request::null());
+            assert!(rank.waitany::<u8>(&mut live).is_err());
+        });
+    }
+}
+
+#[test]
+fn v004_tag_out_of_range_on_both_sides() {
+    let rv = run_verified(2, |rank, cali| {
+        let world = rank.world();
+        let _t = cali.comm_region("tags");
+        if rank.rank == 0 {
+            rank.send(&[1.0f64], 1, 40_000, &world).unwrap();
+        } else {
+            rank.recv::<f64>(Some(0), 40_000, &world).unwrap();
+        }
+    });
+    // The bad tag is diagnosed at the send post AND the receive post.
+    assert_eq!(rv.diagnostics.len(), 2, "{}", rv.render());
+    for (d, rank) in rv.diagnostics.iter().zip([0usize, 1]) {
+        assert_eq!(d.code, "V004");
+        assert_eq!(d.rank, rank);
+        assert_eq!(d.region, "main/tags");
+    }
+}
+
+#[test]
+fn v005_truncation_on_the_receiver() {
+    let rv = run_verified(2, |rank, cali| {
+        let world = rank.world();
+        let _x = cali.comm_region("xfer");
+        if rank.rank == 0 {
+            // 12 bytes into an f64 receive: 12 % 8 != 0
+            rank.send(&[0u8; 12], 1, 3, &world).unwrap();
+        } else {
+            // The decode fails with PayloadSizeMismatch — the diagnostic
+            // is recorded before the error surfaces.
+            assert!(rank.recv::<f64>(Some(0), 3, &world).is_err());
+        }
+    });
+    assert_eq!(rv.diagnostics.len(), 1, "{}", rv.render());
+    let d = &rv.diagnostics[0];
+    assert_eq!(d.code, "V005");
+    assert_eq!(d.rank, 1);
+    assert_eq!(d.region, "main/xfer");
+}
+
+#[test]
+fn v006_unmatched_send_attributed_to_sender() {
+    let rv = run_verified(2, |rank, cali| {
+        let world = rank.world();
+        let _s = cali.comm_region("sends");
+        if rank.rank == 0 {
+            // eager: completes locally; the receiver never posts
+            rank.send(&[7u8; 8], 1, 9, &world).unwrap();
+        }
+    });
+    assert_eq!(rv.diagnostics.len(), 1, "{}", rv.render());
+    let d = &rv.diagnostics[0];
+    assert_eq!(d.code, "V006");
+    assert_eq!(d.rank, 0);
+    assert_eq!(d.region, "main/sends");
+}
+
+#[test]
+fn v007_collective_op_divergence_names_the_exact_call() {
+    // Same kind, same sequence slot, different reduction operator: the
+    // collective board is blind to this (it matches kind names only), so
+    // the run completes — only the analyzer catches it.
+    let rv = run_verified(2, |rank, cali| {
+        let world = rank.world();
+        let _r = cali.comm_region("reduce");
+        let op = if rank.rank == 0 {
+            ReduceOp::Min
+        } else {
+            ReduceOp::Max
+        };
+        rank.allreduce_f64(&[1.0], op, &world).unwrap();
+    });
+    assert_eq!(rv.diagnostics.len(), 1, "{}", rv.render());
+    let d = &rv.diagnostics[0];
+    assert_eq!(d.code, "V007");
+    assert_eq!(d.rank, 1, "divergence is blamed on the non-reference rank");
+    assert_eq!(d.region, "main/reduce");
+    assert!(d.message.contains("call #"), "{}", d.message);
+    assert!(
+        d.message.contains("op=min") && d.message.contains("op=max"),
+        "{}",
+        d.message
+    );
+}
+
+#[test]
+fn v008_byte_conservation_via_synthesized_records() {
+    // Count-matched but byte-mismatched send/recv pair: impossible through
+    // the real transport (both sides record the same envelope), so feed
+    // the cross-rank checker records directly.
+    let a = RankVerify {
+        rank: 0,
+        sends: vec![SendRec {
+            vid: 1,
+            dst: 1,
+            tag: 0,
+            ctx: 0,
+            bytes: 100,
+            t: 0.5,
+            region: "main".into(),
+        }],
+        ..Default::default()
+    };
+    let b = RankVerify {
+        rank: 1,
+        recvs: vec![RecvRec {
+            vid: 1,
+            src: 0,
+            tag: 0,
+            ctx: 0,
+            bytes: 60,
+            t: 0.5,
+            region: "main".into(),
+        }],
+        ..Default::default()
+    };
+    let rv = check_run(&[a, b]);
+    assert_eq!(rv.diagnostics.len(), 1, "{}", rv.render());
+    let d = &rv.diagnostics[0];
+    assert_eq!(d.code, "V008");
+    assert_eq!(d.rank, 0);
+    assert!(
+        d.message.contains("100") && d.message.contains("60"),
+        "{}",
+        d.message
+    );
+}
+
+/// Every shipped app, on its smallest paper cell, is verify-clean on both
+/// engines — the acceptance bar for `repro verify` and the CI verify job.
+/// Laghos has no Tioga cells in the paper, so its smallest cell is
+/// dane/112; the grid apps use tioga/8.
+#[test]
+fn all_shipped_apps_are_verify_clean_on_both_engines() {
+    let cells = [
+        (AppKind::Amg2023, SystemId::Tioga, 8, Scaling::Weak),
+        (AppKind::Kripke, SystemId::Tioga, 8, Scaling::Weak),
+        (AppKind::Zmodel, SystemId::Tioga, 8, Scaling::Weak),
+        (AppKind::Laghos, SystemId::Dane, 112, Scaling::Strong),
+    ];
+    for engine in [Engine::Threaded, Engine::event()] {
+        for &(app, system, nranks, scaling) in &cells {
+            let spec = ExperimentSpec {
+                app,
+                system,
+                scaling,
+                nranks,
+            };
+            let opts = RunOptions {
+                iter_shrink: 10,
+                size_shrink: 8,
+                verify: true, // strict: any diagnostic fails the cell
+                engine,
+                ..Default::default()
+            };
+            let out = run_cell_full(&spec, &opts)
+                .unwrap_or_else(|e| panic!("{} [{}]: {e:#}", spec.id(), engine.name()));
+            let rv = out
+                .profile
+                .verify
+                .as_ref()
+                .unwrap_or_else(|| panic!("{}: verify payload missing", spec.id()));
+            assert!(rv.clean(), "{} [{}]: {}", spec.id(), engine.name(), rv.render());
+            assert_eq!(rv.ranks, nranks);
+            assert!(rv.sends > 0 && rv.colls > 0, "{}", rv.render());
+        }
+    }
+}

@@ -1,0 +1,8 @@
+// Fixture: a `lint:allow` without a `-- rationale` still suppresses the
+// underlying finding but is itself reported as `bare-allow`.
+
+// lint:allow(hash-iter-artifact)
+pub type Bare = std::collections::HashMap<u32, u32>;
+
+// lint:allow(hash-iter-artifact) -- lookup-only; the sanctioned form.
+pub type Annotated = std::collections::HashMap<u32, u32>;

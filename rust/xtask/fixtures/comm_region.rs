@@ -1,0 +1,15 @@
+// Fixture: the comm-region contract — every simulated-MPI call in apps/
+// must sit lexically inside a `region`/`comm_region` guard scope.
+
+pub fn step(rank: &mut Rank, cali: &Caliper) {
+    {
+        let _g = cali.comm_region("halo");
+        rank.barrier(); // guarded: clean
+    }
+    rank.barrier(); // finding: the guard died with its scope
+}
+
+pub fn helper(rank: &mut Rank) {
+    // lint:allow(comm-region) -- callers hold the region guard.
+    rank.barrier();
+}

@@ -1,0 +1,15 @@
+// Fixture: halo ordering — receives post before sends; a wait-family
+// call retires the posted sends and re-arms the check.
+
+pub fn exchange(rank: &mut Rank, cali: &Caliper) {
+    let _g = cali.comm_region("halo");
+    for p in peers() {
+        rank.irecv(p, 0); // clean: receives first
+    }
+    for p in peers() {
+        rank.isend(p, 0);
+    }
+    rank.irecv(0, 1); // finding: the unretired isend escaped the loop scope
+    rank.waitall(reqs);
+    rank.irecv(0, 2); // clean: the wait retired the sends
+}

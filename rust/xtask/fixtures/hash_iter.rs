@@ -5,7 +5,7 @@ use std::collections::HashMap;
 pub struct Report {
     // finding: hash order would reach the artifact through `emit`
     regions: HashMap<String, f64>,
-    // lint:allow(hash-iter-artifact): lookup-only index, never iterated.
+    // lint:allow(hash-iter-artifact) -- lookup-only index, never iterated.
     index: std::collections::HashMap<String, u32>,
 }
 

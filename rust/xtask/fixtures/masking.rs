@@ -1,0 +1,29 @@
+// Fixture: masking + skipping edge cases — hashed and multi-line raw
+// strings, a `\`-continued plain string (regression: the masker once
+// swallowed the escaped newline and shifted every later finding up a
+// line), and `#[cfg(all(test, …))]` / `#[cfg(any(test, …))]` items.
+// Exactly one line below may be reported, on its true line number.
+
+pub const DOC: &str = r#"Instant SystemTime "quoted" std::sync::Mutex"#;
+
+pub const MULTI: &str = r##"
+thread::sleep HashMap
+"##;
+
+pub const CONT: &str = "a continued \
+    string literal";
+
+pub fn real() -> u64 {
+    // the one true finding, on its true line
+    std::time::Instant::now().elapsed().as_nanos() as u64
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use std::time::Instant;
+}
+
+#[cfg(any(test, loom))]
+mod loom_tests {
+    use std::time::SystemTime;
+}

@@ -20,19 +20,24 @@
 //! | `park-protocol` | `mpisim/` | `thread::sleep`, `yield_now`, `spin_loop` |
 //! | `unbounded-channel` | all of `src/` except `util/sync.rs` | `mpsc::channel` |
 //! | `panic-in-drop` | all of `src/` | `panic!`/`unwrap(`/`expect(`/`assert…!` inside `fn drop` of an `impl Drop` |
+//! | `bare-allow` | all of `src/` | `lint:allow(rule)` without a `-- rationale` |
+//! | `comm-region` | `apps/` | MPI call sites lexically outside a `region`/`comm_region` guard scope |
+//! | `halo-order` | `apps/` | `.irecv(` after an unretired `.isend(` in the same scope (post receives first) |
 //!
 //! A violation that is genuinely intended (e.g. a lookup-only intern table)
 //! is suppressed with a comment on the same line or the comment block
 //! immediately above it:
 //!
 //! ```text
-//! // lint:allow(hash-iter-artifact): lookup-only intern table.
+//! // lint:allow(hash-iter-artifact) -- lookup-only intern table.
 //! path_ids: HashMap<String, u32>,
 //! ```
 //!
-//! Every suppression must carry a rationale after the colon; the directive
-//! is scoped to one following code line, so it cannot rot into a
-//! file-wide opt-out.
+//! Every suppression must carry a rationale after `--`; a bare
+//! `lint:allow(rule)` still suppresses (so an un-annotated allow cannot
+//! hide a second finding under itself) but is reported as `bare-allow` at
+//! the directive line. The directive is scoped to one following code line,
+//! so it cannot rot into a file-wide opt-out.
 
 use std::fmt;
 use std::path::Path;
@@ -59,13 +64,16 @@ impl fmt::Display for Finding {
 }
 
 /// The rule identifiers, in reporting order.
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 9] = [
     "wall-clock",
     "hash-iter-artifact",
     "raw-sync",
     "park-protocol",
     "unbounded-channel",
     "panic-in-drop",
+    "bare-allow",
+    "comm-region",
+    "halo-order",
 ];
 
 // ---------------------------------------------------------------------------
@@ -204,7 +212,17 @@ fn mask(text: &str) -> Masked {
             i += 1; // opening quote
             while i < bytes.len() {
                 if bytes[i] == '\\' {
-                    code.push_str("  ");
+                    // An escaped newline (line-continuation) must still
+                    // advance the line bookkeeping or every later finding
+                    // in the file is reported one line early.
+                    if bytes.get(i + 1) == Some(&'\n') {
+                        code.push(' ');
+                        code.push('\n');
+                        comments.push(String::new());
+                        line += 1;
+                    } else {
+                        code.push_str("  ");
+                    }
                     i += 2;
                     continue;
                 }
@@ -261,10 +279,23 @@ fn prev_is_ident(bytes: &[char], i: usize) -> bool {
 // Directives and test-item skipping
 // ---------------------------------------------------------------------------
 
-/// `lint:allow(rule)` directives resolved to the code lines they cover.
-/// A directive covers its own line (trailing-comment form) and, when the
-/// directive line has no code, the first following line that does.
-fn allowed_lines(masked: &Masked) -> Vec<(usize, String)> {
+/// One parsed `lint:allow(rule)` directive.
+struct Allow {
+    /// 0-based code line the directive covers.
+    target: usize,
+    /// 0-based line the directive itself sits on (for `bare-allow`).
+    directive_line: usize,
+    rule: String,
+    /// `true` when a non-empty `-- rationale` follows the closing paren.
+    rationale: bool,
+}
+
+/// `lint:allow(rule) -- rationale` directives resolved to the code lines
+/// they cover. A directive covers its own line (trailing-comment form)
+/// and, when the directive line has no code, the first following line that
+/// does. A directive without a rationale still suppresses — and is itself
+/// reported by the `bare-allow` rule.
+fn allowed_lines(masked: &Masked) -> Vec<Allow> {
     let code_lines: Vec<&str> = masked.code.lines().collect();
     let has_code = |idx: usize| {
         code_lines
@@ -279,6 +310,11 @@ fn allowed_lines(masked: &Masked) -> Vec<(usize, String)> {
             rest = &rest[pos + "lint:allow(".len()..];
             if let Some(end) = rest.find(')') {
                 let rule = rest[..end].trim().to_string();
+                let after = rest[end + 1..].trim_start();
+                let rationale = after
+                    .strip_prefix("--")
+                    .map(|r| !r.trim().is_empty())
+                    .unwrap_or(false);
                 let mut target = idx;
                 if !has_code(idx) {
                     // Walk down past further comment/blank lines to the
@@ -289,7 +325,12 @@ fn allowed_lines(masked: &Masked) -> Vec<(usize, String)> {
                     }
                     target = j;
                 }
-                out.push((target, rule));
+                out.push(Allow {
+                    target,
+                    directive_line: idx,
+                    rule,
+                    rationale,
+                });
                 rest = &rest[end..];
             } else {
                 break;
@@ -488,9 +529,24 @@ pub fn lint_source(virtual_path: &str, text: &str) -> Vec<Finding> {
     let skip = test_skip_lines(&masked.code);
     let allowed = allowed_lines(&masked);
     let is_allowed =
-        |line0: usize, rule: &str| allowed.iter().any(|(l, r)| *l == line0 && r == rule);
+        |line0: usize, rule: &str| allowed.iter().any(|a| a.target == line0 && a.rule == rule);
 
     let mut findings = Vec::new();
+    for a in &allowed {
+        if a.rationale
+            || skip.get(a.directive_line).copied().unwrap_or(false)
+            || is_allowed(a.directive_line, "bare-allow")
+        {
+            continue;
+        }
+        findings.push(Finding {
+            file: norm.clone(),
+            line: a.directive_line + 1,
+            rule: "bare-allow",
+            message: format!("suppression `lint:allow({})` carries no rationale", a.rule),
+            fix: "append ` -- <why this violation is intended>` to the directive",
+        });
+    }
     for rule in &TOKEN_RULES {
         if !rule.dirs.is_empty() && !rule.dirs.iter().any(|d| in_dir(&norm, d)) {
             continue;
@@ -517,7 +573,176 @@ pub fn lint_source(virtual_path: &str, text: &str) -> Vec<Finding> {
         }
     }
     findings.extend(panic_in_drop(&norm, &masked, &skip, &is_allowed));
+    findings.extend(comm_contract(&norm, &masked, &skip, &is_allowed));
     findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// The `comm-region` / `halo-order` rules: the comm-region contract over
+/// `src/apps`. Every simulated-MPI call site must sit lexically inside a
+/// scope that opened a Caliper guard (`.region(` / `.comm_region(`), so
+/// the paper's per-region communication attribution (Table I) can never
+/// silently lose traffic to an unannotated call. Within one guard scope,
+/// receives must be posted before sends (`.irecv(` before `.isend(`) —
+/// the rendezvous-safe halo idiom; a wait-family call retires the posted
+/// sends and re-arms the check.
+///
+/// Tracking is lexical: a brace stack where each scope inherits
+/// `guarded` / `seen_isend` from its parent, and a closing brace merges
+/// `seen_isend` back up (a helper block cannot hide an unretired send).
+/// Helper functions whose *callers* hold the guard suppress with
+/// `lint:allow(comm-region) -- callers hold the region guard`.
+fn comm_contract(
+    norm: &str,
+    masked: &Masked,
+    skip: &[bool],
+    is_allowed: &dyn Fn(usize, &str) -> bool,
+) -> Vec<Finding> {
+    if !in_dir(norm, "apps") {
+        return Vec::new();
+    }
+    // Simulated-MPI call tokens (dotted method calls on a `Rank`).
+    const MPI_TOKENS: [&str; 17] = [
+        ".isend(",
+        ".irecv(",
+        ".send(",
+        ".recv(",
+        ".waitall(",
+        ".waitall_recv(",
+        ".wait_recv(",
+        ".wait_send(",
+        ".waitany(",
+        ".barrier(",
+        ".bcast(",
+        ".allreduce_f64(",
+        ".allreduce_u64(",
+        ".reduce_f64(",
+        ".allgatherv(",
+        ".alltoallv(",
+        ".comm_split(",
+    ];
+    const GUARD_TOKENS: [&str; 2] = [".comm_region(", ".region("];
+    const WAIT_TOKENS: [&str; 5] = [
+        ".waitall(",
+        ".waitall_recv(",
+        ".wait_send(",
+        ".wait_recv(",
+        ".waitany(",
+    ];
+
+    #[derive(Clone, Copy)]
+    struct Scope {
+        guarded: bool,
+        seen_isend: bool,
+    }
+    #[derive(Clone, Copy, PartialEq)]
+    enum Ev {
+        Open,
+        Close,
+        Guard,
+        Mpi(usize), // index into MPI_TOKENS
+    }
+
+    let mut stack = vec![Scope {
+        guarded: false,
+        seen_isend: false,
+    }];
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut last_unguarded_line = usize::MAX;
+    let mut last_order_line = usize::MAX;
+
+    for (line0, line) in masked.code.lines().enumerate() {
+        // Gather this line's events in column order. Braces and tokens
+        // never overlap, and the MPI/guard token sets are prefix-free, so
+        // plain substring positions are unambiguous.
+        let mut evs: Vec<(usize, Ev)> = Vec::new();
+        for (col, c) in line.char_indices() {
+            match c {
+                '{' => evs.push((col, Ev::Open)),
+                '}' => evs.push((col, Ev::Close)),
+                _ => {}
+            }
+        }
+        for g in GUARD_TOKENS {
+            for (col, _) in line.match_indices(g) {
+                evs.push((col, Ev::Guard));
+            }
+        }
+        for (ti, t) in MPI_TOKENS.iter().enumerate() {
+            for (col, _) in line.match_indices(t) {
+                evs.push((col, Ev::Mpi(ti)));
+            }
+        }
+        evs.sort_by_key(|&(col, _)| col);
+
+        let suppressed = skip.get(line0).copied().unwrap_or(false);
+        for (_, ev) in evs {
+            match ev {
+                Ev::Open => {
+                    let top = *stack.last().expect("root scope");
+                    stack.push(top);
+                }
+                Ev::Close => {
+                    if stack.len() > 1 {
+                        let s = stack.pop().expect("non-root scope");
+                        // An unretired isend escapes into the parent.
+                        stack.last_mut().expect("root scope").seen_isend |= s.seen_isend;
+                    }
+                }
+                Ev::Guard => {
+                    let top = stack.last_mut().expect("root scope");
+                    top.guarded = true;
+                    top.seen_isend = false;
+                }
+                Ev::Mpi(ti) => {
+                    let tok = MPI_TOKENS[ti];
+                    let guarded = stack.last().expect("root scope").guarded;
+                    if !guarded
+                        && !suppressed
+                        && !is_allowed(line0, "comm-region")
+                        && last_unguarded_line != line0
+                    {
+                        last_unguarded_line = line0;
+                        findings.push(Finding {
+                            file: norm.to_string(),
+                            line: line0 + 1,
+                            rule: "comm-region",
+                            message: format!(
+                                "MPI call (`{}`) outside a region/comm_region guard scope",
+                                tok
+                            ),
+                            fix: "open `let _g = cali.comm_region(\"…\");` in this scope, or \
+                                  lint:allow(comm-region) -- callers hold the region guard",
+                        });
+                    }
+                    if WAIT_TOKENS.contains(&tok) {
+                        stack.last_mut().expect("root scope").seen_isend = false;
+                    } else if tok == ".isend(" {
+                        stack.last_mut().expect("root scope").seen_isend = true;
+                    } else if tok == ".irecv(" {
+                        let top = stack.last().expect("root scope");
+                        if top.seen_isend
+                            && !suppressed
+                            && !is_allowed(line0, "halo-order")
+                            && last_order_line != line0
+                        {
+                            last_order_line = line0;
+                            findings.push(Finding {
+                                file: norm.to_string(),
+                                line: line0 + 1,
+                                rule: "halo-order",
+                                message: "receive posted after an unretired isend in the same \
+                                          scope"
+                                    .to_string(),
+                                fix: "post all irecvs before the isends (rendezvous-safe halo \
+                                      idiom), or retire the sends with a wait first",
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
     findings
 }
 
@@ -674,10 +899,64 @@ mod tests {
 
     #[test]
     fn allow_directive_covers_next_code_line_only() {
-        let src = "// lint:allow(hash-iter-artifact): lookup-only\n// intern table.\nuse std::collections::HashMap;\ntype T = HashMap<u32, u32>;\n";
+        let src = "// lint:allow(hash-iter-artifact) -- lookup-only\n// intern table.\nuse std::collections::HashMap;\ntype T = HashMap<u32, u32>;\n";
         let f = lint_source("src/trace/x.rs", src);
         assert_eq!(f.len(), 1, "{f:?}");
         assert_eq!(f[0].line, 4);
+        assert_eq!(f[0].rule, "hash-iter-artifact");
+    }
+
+    #[test]
+    fn bare_allow_suppresses_but_is_reported() {
+        // Old colon-form rationale no longer counts as a rationale.
+        let src = "// lint:allow(hash-iter-artifact): legacy rationale\nuse std::collections::HashMap;\n";
+        let f = lint_source("src/trace/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "bare-allow");
+        assert_eq!(f[0].line, 1);
+        // The underlying finding stays suppressed — a bare allow is one
+        // finding, not two.
+        assert!(f.iter().all(|x| x.rule != "hash-iter-artifact"), "{f:?}");
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_line_numbers() {
+        // A `\`-continued string spans two physical lines; the finding
+        // after it must land on its true line.
+        let src = "fn f() -> &'static str {\n    \"one \\\n     two\"\n}\nuse std::time::Instant;\n";
+        let f = lint_source("src/mpisim/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "wall-clock");
+        assert_eq!(f[0].line, 5, "{f:?}");
+    }
+
+    #[test]
+    fn comm_region_requires_guard_in_apps_only() {
+        let src = "fn halo(rank: &Rank) {\n    rank.barrier();\n}\n";
+        let f = lint_source("src/apps/toy/driver.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "comm-region");
+        assert_eq!(f[0].line, 2);
+        // The same source outside apps/ is not the lint's business.
+        assert!(lint_source("src/mpisim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn guard_scope_covers_nested_blocks_and_resets_on_close() {
+        let src = "fn step(rank: &Rank, cali: &C) {\n    {\n        let _g = cali.comm_region(\"halo\");\n        for p in peers {\n            rank.irecv(p, 0);\n        }\n    }\n    rank.barrier();\n}\n";
+        let f = lint_source("src/apps/toy/driver.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "comm-region");
+        assert_eq!(f[0].line, 8, "guard must not leak out of its scope: {f:?}");
+    }
+
+    #[test]
+    fn halo_order_flags_irecv_after_isend_until_wait_retires() {
+        let src = "fn bad(rank: &Rank, cali: &C) {\n    let _g = cali.comm_region(\"halo\");\n    rank.isend(1, 0, 8);\n    rank.irecv(1, 0);\n    rank.waitall(&mut reqs);\n    rank.irecv(1, 0);\n}\n";
+        let f = lint_source("src/apps/toy/driver.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "halo-order");
+        assert_eq!(f[0].line, 4, "the post-wait irecv is re-armed: {f:?}");
     }
 
     #[test]

@@ -101,6 +101,65 @@ fn panic_in_drop_fixture_trips() {
 }
 
 #[test]
+fn bare_allow_fixture_trips_without_unsuppressing() {
+    let f = lint_source("src/trace/bare.rs", include_str!("../fixtures/bare_allow.rs"));
+    assert_eq!(count(&f, "bare-allow"), 1, "{f:#?}");
+    assert_eq!(f[0].line, 4, "{f:#?}");
+    // Both HashMaps stay suppressed — a bare allow is one finding (the
+    // missing rationale), never two.
+    assert_eq!(rules_hit(&f), ["bare-allow"], "{f:#?}");
+}
+
+#[test]
+fn comm_region_fixture_trips_on_the_unguarded_call_only() {
+    let f = lint_source(
+        "src/apps/fixture/driver.rs",
+        include_str!("../fixtures/comm_region.rs"),
+    );
+    assert_eq!(count(&f, "comm-region"), 1, "{f:#?}");
+    assert_eq!(rules_hit(&f), ["comm-region"], "{f:#?}");
+    // Line 9: the call after the guard's scope closed. The guarded call
+    // (7) and the allow'd helper (14) stay silent.
+    assert_eq!(f[0].line, 9, "{f:#?}");
+}
+
+#[test]
+fn comm_region_fixture_is_scope_gated_to_apps() {
+    let f = lint_source(
+        "src/benchutil/driver.rs",
+        include_str!("../fixtures/comm_region.rs"),
+    );
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn halo_order_fixture_trips_after_scope_escape_until_wait_retires() {
+    let f = lint_source(
+        "src/apps/fixture/halo.rs",
+        include_str!("../fixtures/halo_order.rs"),
+    );
+    assert_eq!(count(&f, "halo-order"), 1, "{f:#?}");
+    assert_eq!(rules_hit(&f), ["halo-order"], "{f:#?}");
+    // Line 12: the isend escaped its loop scope; the post-waitall irecv
+    // (14) is re-armed and clean.
+    assert_eq!(f[0].line, 12, "{f:#?}");
+}
+
+#[test]
+fn masking_fixture_reports_one_finding_on_its_true_line() {
+    // Raw strings (hashed + multi-line), a `\`-continued string, and
+    // cfg(all/any(test)) items must all stay silent — and must not shift
+    // the line number of the one real finding below them.
+    let f = lint_source(
+        "src/mpisim/masked.rs",
+        include_str!("../fixtures/masking.rs"),
+    );
+    assert_eq!(count(&f, "wall-clock"), 1, "{f:#?}");
+    assert_eq!(rules_hit(&f), ["wall-clock"], "{f:#?}");
+    assert_eq!(f[0].line, 18, "{f:#?}");
+}
+
+#[test]
 fn clean_fixture_is_clean_under_strictest_scope() {
     let f = lint_source("src/caliper/clean.rs", include_str!("../fixtures/clean.rs"));
     assert!(f.is_empty(), "{f:#?}");
@@ -108,8 +167,8 @@ fn clean_fixture_is_clean_under_strictest_scope() {
 
 #[test]
 fn every_rule_has_a_tripping_fixture() {
-    // The acceptance bar: >= 6 active rules, each demonstrated by a
-    // fixture that fails it.
+    // The acceptance bar: every active rule is demonstrated by a fixture
+    // that fails it.
     let all = [
         lint_source(
             "src/mpisim/clock.rs",
@@ -134,6 +193,15 @@ fn every_rule_has_a_tripping_fixture() {
         lint_source(
             "src/util/guard.rs",
             include_str!("../fixtures/panic_in_drop.rs"),
+        ),
+        lint_source("src/trace/bare.rs", include_str!("../fixtures/bare_allow.rs")),
+        lint_source(
+            "src/apps/fixture/driver.rs",
+            include_str!("../fixtures/comm_region.rs"),
+        ),
+        lint_source(
+            "src/apps/fixture/halo.rs",
+            include_str!("../fixtures/halo_order.rs"),
         ),
     ];
     for rule in xtask::RULES {
