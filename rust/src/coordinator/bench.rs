@@ -20,8 +20,12 @@
 //!
 //! The JSON file is append-only: each run adds one labelled entry, so the
 //! committed file is a baseline→optimized trajectory, not a single point.
-//! `--check` compares the new median cell throughput against the last
-//! committed entry and fails on a >15% drop. See `docs/PERFORMANCE.md`.
+//! `--check` compares the new throughput distribution against the last
+//! committed entry with Welch's t-test over the stored moments (the same
+//! significance machinery as `repro diff`, see [`crate::store::diff`]) and
+//! fails only on a statistically significant drop past the tolerance;
+//! entries committed before the moments existed fall back to the old
+//! median heuristic. See `docs/PERFORMANCE.md`.
 
 use std::time::Instant;
 
@@ -31,9 +35,10 @@ use crate::benchpark::runner::{run_cell_full, table3_matrix, RunOptions};
 use crate::caliper::channel::ChannelConfig;
 use crate::caliper::comm_profiler::CommProfiler;
 use crate::mpisim::{CollKind, MachineModel, MpiEvent, MpiHook, World, WorldConfig};
+use crate::store::diff::{welch_from_moments, DiffVerdict};
 use crate::util::cli::Args;
 use crate::util::json::Json;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, OnlineStats};
 
 /// Schema tag stamped into the JSON file; bump on incompatible change.
 pub const BENCH_SCHEMA: &str = "BENCH_v1";
@@ -69,6 +74,20 @@ pub struct BenchEntry {
     /// discrete-event engine — the scale metric behind `--extend-ranks`
     /// campaigns. 0.0 in entries recorded before the event engine existed.
     pub event_ranks_per_s: f64,
+    /// Samples behind the throughput distribution (cells × reps). 0 in
+    /// entries committed before the Welch gate landed — those fall back
+    /// to the median heuristic in [`gate_verdict`].
+    pub smoke_samples: usize,
+    /// Mean of the per-cell throughput distribution (cells/second).
+    pub smoke_cells_per_s_mean: f64,
+    /// Sum of squared deviations (M2) of the same distribution — with
+    /// `smoke_samples` and the mean, exactly the moments Welch's t-test
+    /// consumes.
+    pub smoke_cells_per_s_m2: f64,
+    /// Gate verdict vs. the committed baseline at record time
+    /// ("no-change" | "improved" | "regressed"; empty when there was no
+    /// baseline to compare against).
+    pub gate_verdict: String,
 }
 
 impl BenchEntry {
@@ -83,6 +102,10 @@ impl BenchEntry {
         j.set("ns_per_hook_dispatch", self.ns_per_hook_dispatch);
         j.set("allocs_per_message", self.allocs_per_message);
         j.set("event_ranks_per_s", self.event_ranks_per_s);
+        j.set("smoke_samples", self.smoke_samples);
+        j.set("smoke_cells_per_s_mean", self.smoke_cells_per_s_mean);
+        j.set("smoke_cells_per_s_m2", self.smoke_cells_per_s_m2);
+        j.set("gate_verdict", self.gate_verdict.as_str());
         j
     }
 
@@ -101,6 +124,26 @@ impl BenchEntry {
                 .get("event_ranks_per_s")
                 .and_then(|v| v.as_f64())
                 .unwrap_or(0.0),
+            // Moment fields are absent from entries committed before the
+            // Welch gate; zeros route gate_verdict to the median fallback,
+            // so old BENCH_v1.json files keep parsing (no schema break).
+            smoke_samples: j
+                .get("smoke_samples")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0) as usize,
+            smoke_cells_per_s_mean: j
+                .get("smoke_cells_per_s_mean")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            smoke_cells_per_s_m2: j
+                .get("smoke_cells_per_s_m2")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            gate_verdict: j
+                .get("gate_verdict")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
         })
     }
 }
@@ -221,7 +264,7 @@ fn per_event_cost(spec: &str, events: &[MpiEvent], reps: usize) -> f64 {
 /// Per-cell wall-clock throughput over `reps` repetitions of the smoke
 /// matrix. Bypasses the campaign executor on purpose: its content-keyed
 /// dedup cache would serve repeat cells from memory and measure nothing.
-fn smoke_throughput(run: &RunOptions, reps: usize) -> Result<(f64, f64, usize)> {
+fn smoke_throughput(run: &RunOptions, reps: usize) -> Result<(f64, f64, usize, OnlineStats)> {
     let cells = smoke_cells();
     if cells.is_empty() {
         bail!("smoke matrix is empty");
@@ -229,6 +272,7 @@ fn smoke_throughput(run: &RunOptions, reps: usize) -> Result<(f64, f64, usize)> 
     // Warmup: one cheapest cell, so thread spawn + allocator are hot.
     let _ = run_cell_full(&cells[0], run)?;
     let mut samples = Vec::with_capacity(cells.len() * reps);
+    let mut moments = OnlineStats::new();
     for _ in 0..reps {
         for spec in &cells {
             let t0 = Instant::now();
@@ -236,6 +280,7 @@ fn smoke_throughput(run: &RunOptions, reps: usize) -> Result<(f64, f64, usize)> 
                 .with_context(|| format!("bench cell {}", spec.id()))?;
             let dt = t0.elapsed().as_secs_f64().max(1e-9);
             samples.push(1.0 / dt);
+            moments.push(1.0 / dt);
         }
     }
     Ok((
@@ -244,6 +289,7 @@ fn smoke_throughput(run: &RunOptions, reps: usize) -> Result<(f64, f64, usize)> 
         // duration = 90th of throughput).
         percentile(&samples, 90.0),
         cells.len(),
+        moments,
     ))
 }
 
@@ -314,7 +360,7 @@ pub fn run_suite(label: &str, full: bool, reps: usize) -> Result<BenchEntry> {
         if full { "full" } else { "smoke" },
         reps
     );
-    let (median, p90, n_cells) = smoke_throughput(&run, reps)?;
+    let (median, p90, n_cells, moments) = smoke_throughput(&run, reps)?;
     eprintln!("bench: hook dispatch + trace capture...");
     let events = event_mix(300_000);
     let _ = per_event_cost("comm-stats", &events[..events.len() / 4], 1); // warmup
@@ -337,6 +383,10 @@ pub fn run_suite(label: &str, full: bool, reps: usize) -> Result<BenchEntry> {
         ns_per_hook_dispatch: hook_cost * 1e9,
         allocs_per_message: apm,
         event_ranks_per_s: erps,
+        smoke_samples: moments.count() as usize,
+        smoke_cells_per_s_mean: moments.mean(),
+        smoke_cells_per_s_m2: moments.m2(),
+        gate_verdict: String::new(),
     })
 }
 
@@ -375,22 +425,88 @@ pub fn render_report(entries: &[BenchEntry]) -> String {
     out
 }
 
-/// The `--check` gate: `fresh` must be within `REGRESSION_TOLERANCE` of
-/// `committed` (the last committed entry's median cell throughput).
-pub fn check_regression(committed: &BenchEntry, fresh: &BenchEntry) -> Result<()> {
+/// The gate decision for a fresh run vs. the committed baseline.
+///
+/// When both entries carry throughput moments, the drop/gain must be
+/// **statistically significant** under Welch's t-test (the same test
+/// `repro diff` applies to profile metrics) before the verdict moves off
+/// `NoChange` — a noisy CI runner no longer trips the gate on an
+/// insignificant wobble, and a real significant drop is flagged even
+/// when the median heuristic would have let it slide. `Regressed`
+/// additionally requires the mean to fall past the
+/// [`REGRESSION_TOLERANCE`] floor. Entries committed before the moments
+/// existed (zero `smoke_samples`) fall back to the original median
+/// heuristic.
+pub fn gate_verdict(committed: &BenchEntry, fresh: &BenchEntry) -> DiffVerdict {
+    if committed.smoke_samples >= 2 && fresh.smoke_samples >= 2 {
+        let sig = welch_from_moments(
+            committed.smoke_samples as u64,
+            committed.smoke_cells_per_s_mean,
+            committed.smoke_cells_per_s_m2,
+            fresh.smoke_samples as u64,
+            fresh.smoke_cells_per_s_mean,
+            fresh.smoke_cells_per_s_m2,
+        );
+        if !sig.significant {
+            return DiffVerdict::NoChange;
+        }
+        let floor = committed.smoke_cells_per_s_mean * (1.0 - REGRESSION_TOLERANCE);
+        if fresh.smoke_cells_per_s_mean < floor {
+            return DiffVerdict::Regressed;
+        }
+        if fresh.smoke_cells_per_s_mean > committed.smoke_cells_per_s_mean {
+            return DiffVerdict::Improved;
+        }
+        return DiffVerdict::NoChange;
+    }
+    // Median heuristic for moment-less baselines.
     let floor = committed.smoke_cells_per_s_median * (1.0 - REGRESSION_TOLERANCE);
+    let ceil = committed.smoke_cells_per_s_median * (1.0 + REGRESSION_TOLERANCE);
     if fresh.smoke_cells_per_s_median < floor {
+        DiffVerdict::Regressed
+    } else if fresh.smoke_cells_per_s_median > ceil {
+        DiffVerdict::Improved
+    } else {
+        DiffVerdict::NoChange
+    }
+}
+
+/// The `--check` gate: fails (nonzero exit) exactly when [`gate_verdict`]
+/// says `Regressed`.
+pub fn check_regression(committed: &BenchEntry, fresh: &BenchEntry) -> Result<()> {
+    if gate_verdict(committed, fresh) != DiffVerdict::Regressed {
+        return Ok(());
+    }
+    if committed.smoke_samples >= 2 && fresh.smoke_samples >= 2 {
+        let sig = welch_from_moments(
+            committed.smoke_samples as u64,
+            committed.smoke_cells_per_s_mean,
+            committed.smoke_cells_per_s_m2,
+            fresh.smoke_samples as u64,
+            fresh.smoke_cells_per_s_mean,
+            fresh.smoke_cells_per_s_m2,
+        );
         bail!(
-            "perf regression: median cell throughput {:.3} cells/s is below the \
-             gate floor {:.3} ({}% drop tolerance vs committed '{}' = {:.3})",
-            fresh.smoke_cells_per_s_median,
-            floor,
-            (REGRESSION_TOLERANCE * 100.0) as u32,
+            "perf regression: mean cell throughput {:.3} cells/s fell significantly \
+             below committed '{}' = {:.3} (Welch t = {:.2}, df = {:.1}, \
+             {}% drop tolerance)",
+            fresh.smoke_cells_per_s_mean,
             committed.label,
-            committed.smoke_cells_per_s_median
+            committed.smoke_cells_per_s_mean,
+            sig.t,
+            sig.df,
+            (REGRESSION_TOLERANCE * 100.0) as u32
         );
     }
-    Ok(())
+    bail!(
+        "perf regression: median cell throughput {:.3} cells/s is below the \
+         gate floor {:.3} ({}% drop tolerance vs committed '{}' = {:.3})",
+        fresh.smoke_cells_per_s_median,
+        committed.smoke_cells_per_s_median * (1.0 - REGRESSION_TOLERANCE),
+        (REGRESSION_TOLERANCE * 100.0) as u32,
+        committed.label,
+        committed.smoke_cells_per_s_median
+    );
 }
 
 /// Entry point for `repro bench`.
@@ -412,7 +528,17 @@ pub fn run_bench(args: &Args) -> Result<()> {
     };
     let committed_last = entries.last().cloned();
 
-    let fresh = run_suite(&label, full, reps)?;
+    let mut fresh = run_suite(&label, full, reps)?;
+    if let Some(committed) = &committed_last {
+        // Stamp the verdict into the entry, so the appended trajectory
+        // records how each run compared to its baseline — and so
+        // `repro diff --bench` can re-render the decision later.
+        fresh.gate_verdict = gate_verdict(committed, &fresh).name().to_string();
+        println!(
+            "bench gate verdict vs committed '{}': {}",
+            committed.label, fresh.gate_verdict
+        );
+    }
     println!("{}", render_report(std::slice::from_ref(&fresh)));
 
     if args.has("check") {
@@ -466,12 +592,28 @@ mod tests {
             ns_per_hook_dispatch: 25.0,
             allocs_per_message: 4.0,
             event_ranks_per_s: 900.0,
+            // moment-less: routes gate_verdict to the median fallback
+            smoke_samples: 0,
+            smoke_cells_per_s_mean: median,
+            smoke_cells_per_s_m2: 0.0,
+            gate_verdict: String::new(),
         }
+    }
+
+    /// An entry carrying Welch moments: `n` samples, the given mean and M2.
+    fn moments(label: &str, mean: f64, m2: f64, n: usize) -> BenchEntry {
+        let mut e = entry(label, mean);
+        e.smoke_samples = n;
+        e.smoke_cells_per_s_mean = mean;
+        e.smoke_cells_per_s_m2 = m2;
+        e
     }
 
     #[test]
     fn json_roundtrip_preserves_entries() {
-        let entries = vec![entry("baseline", 1.5), entry("pooled", 3.2)];
+        let mut second = moments("pooled", 3.2, 0.25, 36);
+        second.gate_verdict = "improved".to_string();
+        let entries = vec![entry("baseline", 1.5), second];
         let text = render_bench_file(&entries);
         let back = parse_bench_file(&text).unwrap();
         assert_eq!(back.len(), 2);
@@ -479,6 +621,14 @@ mod tests {
         assert!((back[1].smoke_cells_per_s_median - 3.2).abs() < 1e-12);
         assert_eq!(back[1].smoke_cells, 6);
         assert!((back[0].event_ranks_per_s - 900.0).abs() < 1e-12);
+        // Welch moments + verdict survive the roundtrip.
+        assert_eq!(back[1].smoke_samples, 36);
+        assert!((back[1].smoke_cells_per_s_m2 - 0.25).abs() < 1e-12);
+        assert_eq!(back[1].gate_verdict, "improved");
+        // Entries written before the moments existed parse with zeros
+        // (same tolerance as event_ranks_per_s below).
+        assert_eq!(back[0].smoke_samples, 0);
+        assert_eq!(back[0].gate_verdict, "");
     }
 
     #[test]
@@ -505,11 +655,45 @@ mod tests {
 
     #[test]
     fn regression_gate_triggers_past_tolerance() {
+        // Moment-less entries: the original median heuristic.
         let base = entry("baseline", 10.0);
         // 10% drop: within the 15% tolerance
         assert!(check_regression(&base, &entry("pr", 9.0)).is_ok());
+        assert_eq!(gate_verdict(&base, &entry("pr", 9.0)), DiffVerdict::NoChange);
         // 20% drop: gate fires
         assert!(check_regression(&base, &entry("pr", 8.0)).is_err());
+        assert_eq!(gate_verdict(&base, &entry("pr", 8.0)), DiffVerdict::Regressed);
+        // 20% gain: reported as improved (exit code 3, still passing)
+        assert_eq!(gate_verdict(&base, &entry("pr", 12.0)), DiffVerdict::Improved);
+    }
+
+    #[test]
+    fn welch_gate_flags_a_significant_drop() {
+        // Tight distributions (variance 0.01 over 12 samples): a halving
+        // is unambiguous.
+        let base = moments("baseline", 10.0, 0.11, 12);
+        let fresh = moments("pr", 5.0, 0.11, 12);
+        assert_eq!(gate_verdict(&base, &fresh), DiffVerdict::Regressed);
+        let err = format!("{:#}", check_regression(&base, &fresh).unwrap_err());
+        assert!(err.contains("Welch t ="), "{}", err);
+        // ...and a significant gain is improvement, not regression.
+        let faster = moments("pr", 20.0, 0.11, 12);
+        assert_eq!(gate_verdict(&base, &faster), DiffVerdict::Improved);
+    }
+
+    #[test]
+    fn welch_gate_passes_noise_the_median_heuristic_would_fail() {
+        // Wide distributions (variance 100 over 12 samples): a 20% mean
+        // drop is indistinguishable from noise (t ≈ 0.49). The old
+        // median-only gate would have failed this run; the Welch gate
+        // correctly reports no change.
+        let base = moments("baseline", 10.0, 1100.0, 12);
+        let fresh = moments("pr", 8.0, 1100.0, 12);
+        assert_eq!(gate_verdict(&base, &fresh), DiffVerdict::NoChange);
+        assert!(check_regression(&base, &fresh).is_ok());
+        // The same medians without moments DO fail — the fallback is the
+        // old behavior, bit for bit.
+        assert!(check_regression(&entry("baseline", 10.0), &entry("pr", 8.0)).is_err());
     }
 
     #[test]

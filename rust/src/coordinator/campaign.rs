@@ -26,7 +26,6 @@ use crate::caliper::channel::ChannelKind;
 use crate::benchpark::{table3_matrix, AppKind, SystemId};
 use crate::thicket::Thicket;
 use crate::util::cache::{CacheStats, ResultCache};
-use crate::util::json::Json;
 use crate::util::pool::run_batch;
 
 /// Campaign options.
@@ -328,13 +327,10 @@ pub fn run_campaign_report(
         run: opts.run.normalized(),
         ..opts.clone()
     };
-    let profile_dir = opts.out_dir.join("profiles");
-    std::fs::create_dir_all(&profile_dir).context("creating profile dir")?;
+    // Artifact paths and layout come from the store layer — the single
+    // source of truth shared with `repro serve` (see `crate::store`).
     let trace_enabled = opts.run.channels.enabled(ChannelKind::Trace);
-    let trace_dir = opts.out_dir.join("traces");
-    if trace_enabled {
-        std::fs::create_dir_all(&trace_dir).context("creating trace dir")?;
-    }
+    crate::store::ensure_layout(&opts.out_dir, trace_enabled)?;
     let cells = selected_cells(opts);
     let total = cells.len();
 
@@ -347,12 +343,10 @@ pub fn run_campaign_report(
     let mut fresh: Vec<ExperimentSpec> = Vec::new();
     let mut disk_cached = 0usize;
     for spec in &cells {
-        let path = profile_dir.join(format!("{}.json", spec.id()));
-        let trace_ok = !trace_enabled
-            || trace_dir
-                .join(format!("{}{}", spec.id(), crate::trace::TRACE_SUFFIX))
-                .is_file();
-        if !force && trace_ok && disk_profile_matches(&path, &opts.run) {
+        let path = crate::store::profile_path(&opts.out_dir, &spec.id());
+        let trace_ok =
+            !trace_enabled || crate::store::trace_path(&opts.out_dir, &spec.id()).is_file();
+        if !force && trace_ok && crate::store::disk_profile_matches(&path, &opts.run) {
             disk_cached += 1;
             if opts.verbose {
                 println!("[{}/{}] {} — cached on disk", disk_cached, total, spec.id());
@@ -371,8 +365,8 @@ pub fn run_campaign_report(
     let io_errors: Mutex<Vec<CellFailure>> = Mutex::new(Vec::new());
     let mut report = executor.execute_with(&fresh, |spec, out| {
         let run = &out.profile;
-        let path = profile_dir.join(format!("{}.json", spec.id()));
-        if let Err(e) = std::fs::write(&path, run.to_json().to_string_pretty()) {
+        let path = crate::store::profile_path(&opts.out_dir, &spec.id());
+        if let Err(e) = crate::store::write_atomic(&path, &run.to_json().to_string_pretty()) {
             io_errors.lock().unwrap().push(CellFailure {
                 id: spec.id(),
                 error: format!("writing {}: {}", path.display(), e),
@@ -380,9 +374,8 @@ pub fn run_campaign_report(
             return;
         }
         if let Some(trace) = &out.trace {
-            let tpath =
-                trace_dir.join(format!("{}{}", spec.id(), crate::trace::TRACE_SUFFIX));
-            if let Err(e) = std::fs::write(&tpath, crate::trace::write_jsonl(trace)) {
+            let tpath = crate::store::trace_path(&opts.out_dir, &spec.id());
+            if let Err(e) = crate::store::write_atomic(&tpath, &crate::trace::write_jsonl(trace)) {
                 io_errors.lock().unwrap().push(CellFailure {
                     id: spec.id(),
                     error: format!("writing {}: {}", tpath.display(), e),
@@ -471,12 +464,12 @@ pub fn run_campaign(opts: &CampaignOptions, force: bool) -> Result<Thicket> {
 
 /// Load previously-written campaign profiles.
 pub fn load_profiles(out_dir: impl AsRef<Path>) -> Result<Thicket> {
-    Thicket::load_dir(out_dir.as_ref().join("profiles"))
+    Thicket::load_dir(crate::store::profiles_dir(out_dir.as_ref()))
 }
 
 /// Cell ids with a trace artifact under `<out>/traces`, sorted.
 pub fn list_traces(out_dir: impl AsRef<Path>) -> Vec<String> {
-    let dir = out_dir.as_ref().join("traces");
+    let dir = crate::store::traces_dir(out_dir.as_ref());
     let mut ids: Vec<String> = std::fs::read_dir(dir)
         .map(|entries| {
             entries
@@ -496,48 +489,11 @@ pub fn list_traces(out_dir: impl AsRef<Path>) -> Vec<String> {
 
 /// Load one cell's trace artifact from `<out>/traces/<cell>.trace.jsonl`.
 pub fn load_trace(out_dir: impl AsRef<Path>, cell_id: &str) -> Result<crate::trace::RunTrace> {
-    let path = out_dir
-        .as_ref()
-        .join("traces")
-        .join(format!("{}{}", cell_id, crate::trace::TRACE_SUFFIX));
+    let path = crate::store::trace_path(out_dir.as_ref(), cell_id);
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("reading {}", path.display()))?;
     crate::trace::read_jsonl(&text)
         .ok_or_else(|| anyhow::anyhow!("{}: not a commscope trace artifact", path.display()))
-}
-
-/// True when a profile file exists AND its stamped run options — shrink
-/// factors and metric-channel spec — match the requested ones.
-/// Unreadable/unparseable files and profiles from before the options were
-/// stamped count as stale (re-run, overwrite).
-///
-/// This parses the file that `load_profiles` will parse again at the end
-/// of the campaign — accepted: profiles are small, the matrix is ≤20
-/// cells, and keeping `load_dir` the single source of thicket assembly
-/// beats caching parsed profiles across the two passes.
-fn disk_profile_matches(path: &Path, run: &RunOptions) -> bool {
-    let text = match std::fs::read_to_string(path) {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let parsed = match Json::parse(&text) {
-        Ok(j) => j,
-        Err(_) => return false,
-    };
-    // Only the two stamped meta fields matter here — skip the full
-    // RunProfile reconstruction (regions, per-rank aggregates).
-    let meta = match parsed.get("meta") {
-        Some(m) => m,
-        None => return false,
-    };
-    let field = |k: &str| {
-        meta.get(k)
-            .and_then(Json::as_str)
-            .and_then(|s| s.parse::<usize>().ok())
-    };
-    field("iter_shrink") == Some(run.iter_shrink)
-        && field("size_shrink") == Some(run.size_shrink)
-        && meta.get("channels").and_then(Json::as_str) == Some(run.channels.spec_string().as_str())
 }
 
 #[cfg(test)]

@@ -20,9 +20,18 @@
 //!                                           MPI conformance analysis over
 //!                                           the smoke matrix, both engines
 //! repro report --profile results/profiles/kripke_dane_64.json
+//! repro serve   [--out results] [--socket PATH] [--jobs N] [...]
+//!                                           campaign service daemon (or,
+//!                                           with --submit/--status/
+//!                                           --result/--diff/--shutdown,
+//!                                           a client of one)
+//! repro diff    A B [--csv FILE] [--report FILE] | --bench BENCH_v1.json
+//!                                           deterministic profile/campaign
+//!                                           diff; exit 0/3/4 =
+//!                                           no-change/improved/regressed
 //! ```
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::benchpark::experiment::{ExperimentSpec, Scaling};
 use crate::benchpark::runner::{run_cell_full, RunOptions};
@@ -55,6 +64,13 @@ USAGE:
   repro report --profile FILE.json
   repro bench [--json BENCH_v1.json] [--label L] [--append] [--check]
               [--report FILE] [--reps N] [--full]
+  repro serve [--out results] [--socket PATH] [--jobs N] [--smoke]
+              [--channels SPEC] [--engine E] [--verify] [--verbose]
+  repro serve --socket PATH --submit --app APP --system SYS --ranks N
+              [--force]  |  --status  |  --result CELL
+              |  --diff CELL_A,CELL_B  |  --shutdown
+  repro diff A B [--csv FILE] [--report FILE]
+  repro diff --bench BENCH_v1.json
   repro help
 
 Profiles are cached under <out>/profiles; `campaign --force` reruns.
@@ -103,13 +119,38 @@ ride the profile JSON as an optional top-level `verify` payload.
 `repro bench` runs the performance suite (smoke-matrix cell throughput,
 event-engine ranks/s, hook dispatch, trace capture, allocations per
 message) and maintains the schema-versioned BENCH_v1.json trajectory;
-`--check` is the CI perf gate (fails on a >15% median-throughput drop vs.
-the committed baseline), `--full` uses non-shrunk fidelity (the nightly
-configuration).
+`--check` is the CI perf gate — a Welch t-test over the stored throughput
+moments; only a statistically significant drop past the 15% tolerance
+fails — `--full` uses non-shrunk fidelity (the nightly configuration).
+`repro serve` runs the campaign service daemon: it binds a Unix socket
+(default <out>/repro.sock), answers line-delimited JSON requests
+(docs/SERVICE.md), schedules submitted cells on the work-stealing
+executor, and persists artifacts to the content-addressed store under
+<out> — the same bytes, paths, and staleness rules as batch
+`repro campaign`, so batch and daemon outputs are interchangeable. With a
+client action flag (--submit/--status/--result/--diff/--shutdown) the
+same verb is a client instead: it prints each event line as JSON.
+`repro diff` compares two profile JSON files, or two campaign output
+directories cell by cell: regions aligned by Caliper path, per-channel
+metric deltas with Welch significance from the stored lossless moments,
+byte-stable text/CSV reports. `--bench FILE` compares the last two
+entries of a bench trajectory instead. The exit code is the verdict —
+0 no significant change, 3 improved, 4 regressed — so CI can gate on 4.
 APP ∈ {amg2023, kripke, laghos, zmodel}; SYS ∈ {dane, tioga}.";
 
 /// Entry point used by `main`; returns the process exit code.
 pub fn dispatch(args: &Args) -> i32 {
+    // `diff` owns its exit code (the 0/3/4 verdict contract), so it is
+    // routed around the Ok-means-zero mapping below.
+    if args.subcommand() == Some("diff") {
+        return match run_diff(args) {
+            Ok(code) => code,
+            Err(e) => {
+                eprintln!("repro: {:#}", e);
+                1
+            }
+        };
+    }
     match dispatch_inner(args) {
         Ok(()) => 0,
         Err(e) => {
@@ -117,6 +158,99 @@ pub fn dispatch(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `repro diff` — compare two profile files, two campaign directories, or
+/// the last two entries of a bench trajectory. Returns the verdict's exit
+/// code: 0 no significant change, 3 improved, 4 regressed.
+fn run_diff(args: &Args) -> anyhow::Result<i32> {
+    use crate::store::diff::{CampaignDiff, ProfileDiff};
+    if let Some(bench_path) = args.get("bench") {
+        let text = std::fs::read_to_string(bench_path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {}", bench_path, e))?;
+        let entries = crate::coordinator::bench::parse_bench_file(&text)?;
+        if entries.len() < 2 {
+            println!(
+                "bench diff: {} has {} entr{} — nothing to compare; verdict: no-change (exit code 0)",
+                bench_path,
+                entries.len(),
+                if entries.len() == 1 { "y" } else { "ies" }
+            );
+            return Ok(0);
+        }
+        let committed = &entries[entries.len() - 2];
+        let fresh = &entries[entries.len() - 1];
+        let verdict = crate::coordinator::bench::gate_verdict(committed, fresh);
+        println!(
+            "bench diff: '{}' -> '{}': mean {:.3} -> {:.3} cells/s \
+             (median {:.3} -> {:.3}, {} -> {} samples)",
+            committed.label,
+            fresh.label,
+            committed.smoke_cells_per_s_mean,
+            fresh.smoke_cells_per_s_mean,
+            committed.smoke_cells_per_s_median,
+            fresh.smoke_cells_per_s_median,
+            committed.smoke_samples,
+            fresh.smoke_samples,
+        );
+        println!("verdict: {} (exit code {})", verdict.name(), verdict.exit_code());
+        return Ok(verdict.exit_code());
+    }
+    let (a, b) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(a), Some(b)) => (a.as_str(), b.as_str()),
+        _ => anyhow::bail!(
+            "usage: repro diff A B (two profile .json files or two campaign \
+             directories), or repro diff --bench BENCH_v1.json"
+        ),
+    };
+    let (pa, pb) = (Path::new(a), Path::new(b));
+    let (text, csv, verdict) = if pa.is_dir() && pb.is_dir() {
+        let d = CampaignDiff::compute(&diff_thicket(pa)?, &diff_thicket(pb)?, a, b);
+        (d.render_text(), d.render_csv(), d.verdict())
+    } else if pa.is_file() && pb.is_file() {
+        let d = ProfileDiff::compute(&diff_profile(pa)?, &diff_profile(pb)?, a, b);
+        (d.render_text(), d.render_csv(), d.verdict())
+    } else {
+        anyhow::bail!(
+            "diff needs two profile files or two campaign directories \
+             (got '{}' and '{}')",
+            a,
+            b
+        )
+    };
+    print!("{}", text);
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, &csv).map_err(|e| anyhow::anyhow!("writing {}: {}", path, e))?;
+        println!("csv written to {}", path);
+    }
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, &text).map_err(|e| anyhow::anyhow!("writing {}: {}", path, e))?;
+        println!("report written to {}", path);
+    }
+    Ok(verdict.exit_code())
+}
+
+/// A campaign side of `repro diff`: accepts either a campaign out-dir
+/// (containing `profiles/`) or a bare profiles directory.
+fn diff_thicket(dir: &Path) -> anyhow::Result<Thicket> {
+    let profiles = crate::store::profiles_dir(dir);
+    let t = if profiles.is_dir() {
+        Thicket::load_dir(&profiles)?
+    } else {
+        Thicket::load_dir(dir)?
+    };
+    if t.is_empty() {
+        anyhow::bail!("no profiles under {}", dir.display());
+    }
+    Ok(t)
+}
+
+fn diff_profile(path: &Path) -> anyhow::Result<RunProfile> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {}", path.display(), e))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))?;
+    RunProfile::from_json(&j)
+        .ok_or_else(|| anyhow::anyhow!("{}: not a RunProfile json", path.display()))
 }
 
 fn run_options(args: &Args) -> anyhow::Result<RunOptions> {
@@ -179,10 +313,14 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
                 report.summary()
             );
             // drop the inventory, failure list, + all figures alongside
+            // (paths from the store layer, same as the daemon's)
             let fig_dir = Path::new(&out_dir);
-            crate::thicket::export::write_inventory_csv(fig_dir.join("inventory.csv"), &t)?;
+            crate::thicket::export::write_inventory_csv(
+                crate::store::inventory_path(fig_dir),
+                &t,
+            )?;
             crate::thicket::export::write_failures_csv(
-                fig_dir.join("failures.csv"),
+                crate::store::failures_path(fig_dir),
                 report.failures.iter().map(|f| (f.id.as_str(), f.error.as_str())),
             )?;
             let all = figures::render_all(&t, Some(fig_dir))?;
@@ -377,6 +515,7 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         Some("bench") => crate::coordinator::bench::run_bench(args),
+        Some("serve") => run_serve(args, &out_dir),
         Some("report") => {
             let path = args
                 .get("profile")
@@ -393,6 +532,76 @@ fn dispatch_inner(args: &Args) -> anyhow::Result<()> {
             anyhow::bail!("unknown subcommand '{}'; try `repro help`", other)
         }
     }
+}
+
+/// `repro serve`: the daemon by default; a protocol client when any of
+/// the client action flags (`--submit`, `--status`, `--result`, `--diff`,
+/// `--shutdown`) is present. The client prints every event — progress and
+/// terminal — as one compact JSON line, so scripts and CI can grep the
+/// stream (e.g. for `"cache":"hit"`).
+fn run_serve(args: &Args, out_dir: &str) -> anyhow::Result<()> {
+    use crate::serve::protocol::{Client, Request};
+    let socket: PathBuf = args
+        .get("socket")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(out_dir).join("repro.sock"));
+    let client_mode = args.has("submit")
+        || args.has("status")
+        || args.has("shutdown")
+        || args.get("result").is_some()
+        || args.get("diff").is_some();
+    if !client_mode {
+        let opts = crate::serve::ServeOptions {
+            socket,
+            out_dir: PathBuf::from(out_dir),
+            jobs: args.get_usize("jobs", 1),
+            run: run_options(args)?,
+            verbose: args.has("verbose"),
+        };
+        crate::serve::serve(&opts)?;
+        return Ok(());
+    }
+    let mut requests: Vec<Request> = Vec::new();
+    if args.has("submit") {
+        requests.push(Request::Submit {
+            app: args.get_or("app", "amg2023").to_string(),
+            system: args.get_or("system", "tioga").to_string(),
+            ranks: args.get_usize("ranks", 8),
+            force: args.has("force"),
+        });
+    }
+    if args.has("status") {
+        requests.push(Request::Status);
+    }
+    if let Some(cell) = args.get("result") {
+        requests.push(Request::Result { cell: cell.to_string() });
+    }
+    if let Some(pair) = args.get("diff") {
+        let (a, b) = pair
+            .split_once(',')
+            .ok_or_else(|| anyhow::anyhow!("--diff expects CELL_A,CELL_B"))?;
+        requests.push(Request::Diff {
+            cell_a: a.trim().to_string(),
+            cell_b: b.trim().to_string(),
+        });
+    }
+    if args.has("shutdown") {
+        requests.push(Request::Shutdown);
+    }
+    let mut client = Client::connect_retry(&socket, std::time::Duration::from_secs(10))?;
+    for req in &requests {
+        let terminal = client.roundtrip(req, |event| {
+            println!("{}", event.to_string_compact());
+        })?;
+        println!("{}", terminal.to_string_compact());
+        if terminal.get("event").and_then(Json::as_str) == Some("error") {
+            anyhow::bail!(
+                "daemon error: {}",
+                terminal.get("message").and_then(Json::as_str).unwrap_or("?")
+            );
+        }
+    }
+    Ok(())
 }
 
 fn need_profiles(out_dir: &str) -> anyhow::Result<Thicket> {

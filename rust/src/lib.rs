@@ -31,7 +31,11 @@
 //!
 //! The experiment matrix is executed by the batched, work-stealing
 //! [`coordinator::campaign::CampaignExecutor`] (cells are independent
-//! simulated worlds, so campaigns parallelize with `--jobs N`).
+//! simulated worlds, so campaigns parallelize with `--jobs N`). Around the
+//! batch path sit two service layers: [`store`], the content-addressed
+//! artifact store with deterministic profile diffing (`repro diff`), and
+//! [`serve`], the campaign service daemon (`repro serve`) answering cell
+//! requests over a Unix socket — see `docs/SERVICE.md`.
 
 // CI gates on `cargo clippy -- -D warnings`. The style/complexity lints
 // below are deliberate idioms of this codebase, allowed once here rather
@@ -54,6 +58,8 @@ pub mod caliper;
 pub mod coordinator;
 pub mod mpisim;
 pub mod runtime;
+pub mod serve;
+pub mod store;
 pub mod thicket;
 pub mod trace;
 pub mod util;

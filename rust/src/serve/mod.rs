@@ -1,0 +1,421 @@
+//! `serve` — the campaign service daemon behind `repro serve`.
+//!
+//! A long-running process that answers cell requests over a local Unix
+//! socket with the line-delimited JSON protocol of [`protocol`]
+//! (`submit`, `status`, `result`, `diff`, `shutdown` — grammar in
+//! `docs/SERVICE.md`). Distinct from the PJRT-style
+//! `runtime::service`: that one serves compiled kernels, this one serves
+//! campaign artifacts.
+//!
+//! Architecture per request:
+//!
+//! - every accepted connection gets its own handler thread, which reads
+//!   request lines sequentially;
+//! - a `submit` runs through
+//!   [`crate::store::ArtifactStore::get_or_compute`]: a store hit is
+//!   answered immediately (`"cache":"hit"` in the result event — the
+//!   observable cache), a miss elects this request the single-flight
+//!   leader and schedules the cell on the shared work-stealing
+//!   [`CampaignExecutor`];
+//! - progress events flow from the compute path to the connection
+//!   writer through a **bounded** channel
+//!   (`util::sync::mpsc::sync_channel`), so a slow client applies
+//!   backpressure instead of growing an unbounded queue — the PR-8 lint
+//!   rules (`raw-sync`, `unbounded-channel`) hold in this module;
+//! - `shutdown` acknowledges, raises the stop flag, and self-connects
+//!   once to unblock the accept loop; the daemon then joins every
+//!   handler and removes its socket file.
+//!
+//! Artifacts land in the daemon's store with the same serializers and
+//! paths as batch `repro campaign`, so daemon output is byte-identical
+//! to batch output.
+
+pub mod protocol;
+
+use std::io::BufRead;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::benchpark::experiment::{ExperimentSpec, Scaling};
+use crate::benchpark::runner::{run_cell_full, CellOutput, RunOptions};
+use crate::benchpark::{AppKind, SystemId};
+use crate::caliper::channel::ChannelKind;
+use crate::caliper::RunProfile;
+use crate::coordinator::campaign::CampaignExecutor;
+use crate::store::diff::ProfileDiff;
+use crate::store::{ArtifactStore, StoreOutcome};
+use crate::util::json::Json;
+use crate::util::sync::{mpsc, Arc, AtomicBool, AtomicU64, Mutex, Ordering};
+
+use protocol::{error_event, write_event, Request};
+
+/// Progress-event queue depth per in-flight submit. Small on purpose:
+/// a stalled client throttles its own cell's event producer, nothing
+/// else.
+const EVENT_QUEUE_CAP: usize = 64;
+
+/// Daemon configuration (CLI: `repro serve`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Unix socket path the daemon binds.
+    pub socket: PathBuf,
+    /// Store root (batch-campaign layout: `profiles/`, `traces/`).
+    pub out_dir: PathBuf,
+    /// Worker threads of the shared campaign executor.
+    pub jobs: usize,
+    /// Fidelity/channels/engine every submitted cell runs under (the
+    /// daemon owns the run options; clients name cells).
+    pub run: RunOptions,
+    pub verbose: bool,
+}
+
+/// Lifetime counters, returned when the daemon shuts down.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub submits: u64,
+    /// Submits served straight from the artifact store.
+    pub served_hits: u64,
+    /// Submits this daemon computed (and persisted).
+    pub computed: u64,
+}
+
+struct ServerState {
+    store: ArtifactStore,
+    executor: CampaignExecutor,
+    run: RunOptions,
+    socket: PathBuf,
+    verbose: bool,
+    stop: AtomicBool,
+    requests: AtomicU64,
+    submits: AtomicU64,
+    served_hits: AtomicU64,
+    computed: AtomicU64,
+}
+
+/// Build the experiment spec a client named. Scaling mirrors the matrix:
+/// Laghos strong-scales, everything else weak-scales (same rule as
+/// `repro run`).
+pub fn spec_for(app: &str, system: &str, ranks: usize) -> Result<ExperimentSpec> {
+    let app = AppKind::parse(app)
+        .ok_or_else(|| anyhow::anyhow!("bad app '{}' (amg2023|kripke|laghos|zmodel)", app))?;
+    let system = SystemId::parse(system)
+        .ok_or_else(|| anyhow::anyhow!("bad system '{}' (dane|tioga)", system))?;
+    Ok(ExperimentSpec {
+        app,
+        system,
+        scaling: if app == AppKind::Laghos {
+            Scaling::Strong
+        } else {
+            Scaling::Weak
+        },
+        nranks: ranks,
+    })
+}
+
+/// Run the daemon until a `shutdown` request. Binds `opts.socket`
+/// (replacing a stale socket file), serves connections on handler
+/// threads, and returns the lifetime counters after a clean drain.
+pub fn serve(opts: &ServeOptions) -> Result<ServeStats> {
+    let run = opts.run.normalized();
+    run.validate().context("invalid serve run options")?;
+    let state = Arc::new(ServerState {
+        store: ArtifactStore::open(&opts.out_dir)?,
+        executor: CampaignExecutor::new(opts.jobs, run)?,
+        run,
+        socket: opts.socket.clone(),
+        verbose: opts.verbose,
+        stop: AtomicBool::new(false),
+        requests: AtomicU64::new(0),
+        submits: AtomicU64::new(0),
+        served_hits: AtomicU64::new(0),
+        computed: AtomicU64::new(0),
+    });
+    if opts.socket.exists() {
+        std::fs::remove_file(&opts.socket)
+            .with_context(|| format!("removing stale socket {}", opts.socket.display()))?;
+    }
+    if let Some(parent) = opts.socket.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let listener = UnixListener::bind(&opts.socket)
+        .with_context(|| format!("binding {}", opts.socket.display()))?;
+    println!(
+        "repro serve: listening on {} (store {}, jobs {})",
+        opts.socket.display(),
+        opts.out_dir.display(),
+        opts.jobs.max(1),
+    );
+    let mut handlers = Vec::new();
+    loop {
+        let (stream, _addr) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) => {
+                if state.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("repro serve: accept failed: {}", e);
+                continue;
+            }
+        };
+        if state.stop.load(Ordering::SeqCst) {
+            // The shutdown handler's self-connect, or a late client —
+            // either way the daemon is draining.
+            break;
+        }
+        let conn_state = Arc::clone(&state);
+        handlers.push(std::thread::spawn(move || {
+            if let Err(e) = handle_connection(stream, &conn_state) {
+                if conn_state.verbose {
+                    eprintln!("repro serve: connection ended: {:#}", e);
+                }
+            }
+        }));
+    }
+    drop(listener);
+    for handle in handlers {
+        let _ = handle.join();
+    }
+    std::fs::remove_file(&opts.socket).ok();
+    let stats = ServeStats {
+        requests: state.requests.load(Ordering::Relaxed),
+        submits: state.submits.load(Ordering::Relaxed),
+        served_hits: state.served_hits.load(Ordering::Relaxed),
+        computed: state.computed.load(Ordering::Relaxed),
+    };
+    println!(
+        "repro serve: shut down after {} request(s) ({} submit(s): {} store hit(s), {} computed)",
+        stats.requests, stats.submits, stats.served_hits, stats.computed,
+    );
+    Ok(stats)
+}
+
+fn handle_connection(stream: UnixStream, state: &Arc<ServerState>) -> Result<()> {
+    let reader = std::io::BufReader::new(stream.try_clone().context("cloning connection")?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        state.requests.fetch_add(1, Ordering::Relaxed);
+        let request = match Request::decode(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                write_event(&mut writer, &error_event(&format!("{:#}", e)))?;
+                continue;
+            }
+        };
+        match request {
+            Request::Submit {
+                app,
+                system,
+                ranks,
+                force,
+            } => handle_submit(&mut writer, state, &app, &system, ranks, force)?,
+            Request::Status => write_event(&mut writer, &status_event(state))?,
+            Request::Result { cell } => {
+                let event = match load_profile_json(state, &cell) {
+                    Ok(profile) => {
+                        let mut j = Json::obj();
+                        j.set("event", "profile")
+                            .set("cell", cell.as_str())
+                            .set("profile", profile);
+                        j
+                    }
+                    Err(e) => error_event(&format!("{:#}", e)),
+                };
+                write_event(&mut writer, &event)?;
+            }
+            Request::Diff { cell_a, cell_b } => {
+                let event = match handle_diff(state, &cell_a, &cell_b) {
+                    Ok(j) => j,
+                    Err(e) => error_event(&format!("{:#}", e)),
+                };
+                write_event(&mut writer, &event)?;
+            }
+            Request::Shutdown => {
+                let mut ack = Json::obj();
+                ack.set("event", "ok").set("message", "shutting down");
+                write_event(&mut writer, &ack)?;
+                state.stop.store(true, Ordering::SeqCst);
+                // Unblock the accept loop so it observes the flag.
+                let _ = UnixStream::connect(&state.socket);
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn status_event(state: &ServerState) -> Json {
+    let store = state.store.stats();
+    let cache = state.executor.cache_stats();
+    let mut j = Json::obj();
+    j.set("event", "status")
+        .set("requests", state.requests.load(Ordering::Relaxed))
+        .set("submits", state.submits.load(Ordering::Relaxed))
+        .set("served_hits", state.served_hits.load(Ordering::Relaxed))
+        .set("computed", state.computed.load(Ordering::Relaxed))
+        .set("store_hits", store.hits)
+        .set("store_misses", store.misses)
+        .set("store_puts", store.puts)
+        .set("cells_indexed", store.indexed)
+        .set("executor_cache_entries", cache.entries)
+        .set("channels", state.run.channels.spec_string());
+    j
+}
+
+fn load_profile_json(state: &ServerState, cell: &str) -> Result<Json> {
+    let path = crate::store::profile_path(state.store.root(), cell);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no stored profile for cell '{}'", cell))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))?;
+    // Validate before serving — a stored artifact must stay a profile.
+    RunProfile::from_json(&j)
+        .ok_or_else(|| anyhow::anyhow!("{}: not a RunProfile artifact", path.display()))?;
+    Ok(j)
+}
+
+fn load_profile(state: &ServerState, cell: &str) -> Result<RunProfile> {
+    let j = load_profile_json(state, cell)?;
+    RunProfile::from_json(&j).ok_or_else(|| anyhow::anyhow!("cell '{}': bad profile", cell))
+}
+
+fn handle_diff(state: &ServerState, cell_a: &str, cell_b: &str) -> Result<Json> {
+    let a = load_profile(state, cell_a)?;
+    let b = load_profile(state, cell_b)?;
+    let diff = ProfileDiff::compute(&a, &b, cell_a, cell_b);
+    let verdict = diff.verdict();
+    let mut j = Json::obj();
+    j.set("event", "diff")
+        .set("a", cell_a)
+        .set("b", cell_b)
+        .set("verdict", verdict.name())
+        .set("significant", diff.significant_count())
+        .set("exit_code", verdict.exit_code() as u64)
+        .set("report", diff.render_text());
+    Ok(j)
+}
+
+fn handle_submit(
+    writer: &mut UnixStream,
+    state: &Arc<ServerState>,
+    app: &str,
+    system: &str,
+    ranks: usize,
+    force: bool,
+) -> Result<()> {
+    state.submits.fetch_add(1, Ordering::Relaxed);
+    let spec = match spec_for(app, system, ranks) {
+        Ok(s) => s,
+        Err(e) => {
+            write_event(writer, &error_event(&format!("{:#}", e)))?;
+            return Ok(());
+        }
+    };
+    let key = state.store.key(&spec, &state.run);
+    let mut accepted = Json::obj();
+    accepted
+        .set("event", "accepted")
+        .set("cell", spec.id())
+        .set("key", key.as_str());
+    write_event(writer, &accepted)?;
+
+    // Progress and the terminal event flow through a bounded channel:
+    // the compute side (worker pool included) produces, this connection
+    // thread drains to the socket.
+    let (tx, rx) = mpsc::sync_channel::<Json>(EVENT_QUEUE_CAP);
+    let worker_state = Arc::clone(state);
+    let worker = std::thread::spawn(move || {
+        let id = spec.id();
+        let progress = |stage: &str| {
+            let mut j = Json::obj();
+            j.set("event", "progress")
+                .set("cell", id.as_str())
+                .set("stage", stage);
+            j
+        };
+        let sink_tx = Mutex::new(tx.clone());
+        let outcome = worker_state.store.get_or_compute(&spec, &worker_state.run, force, || {
+            let _ = tx.send(progress("computing"));
+            let captured: Mutex<Option<CellOutput>> = Mutex::new(None);
+            let report = worker_state.executor.execute_with(&[spec], |_, out| {
+                let _ = sink_tx.lock().unwrap().send(progress("simulated"));
+                *captured.lock().unwrap() = Some(out.clone());
+            });
+            if let Some(failure) = report.failures.first() {
+                anyhow::bail!("cell {} failed: {}", failure.id, failure.error);
+            }
+            match captured.into_inner().unwrap() {
+                Some(out) => Ok(out),
+                // The executor's in-memory cache answered (its cached
+                // copy drops the trace); re-simulate when the store
+                // needs the trace artifact, otherwise take the profile.
+                None if worker_state.run.channels.enabled(ChannelKind::Trace) => {
+                    run_cell_full(&spec, &worker_state.run)
+                }
+                None => match report.runs.first() {
+                    Some(run) => Ok((**run).clone()),
+                    None => anyhow::bail!("executor returned no output for {}", id),
+                },
+            }
+        });
+        let terminal = match outcome {
+            Ok((out, source)) => {
+                match source {
+                    StoreOutcome::Hit => worker_state.served_hits.fetch_add(1, Ordering::Relaxed),
+                    StoreOutcome::Miss => worker_state.computed.fetch_add(1, Ordering::Relaxed),
+                };
+                let (bytes, sends) = out.profile.comm_totals();
+                let mut j = Json::obj();
+                j.set("event", "result")
+                    .set("cell", id.as_str())
+                    .set("cache", source.name())
+                    .set("wall_time", out.profile.wall_time())
+                    .set("bytes", bytes)
+                    .set("sends", sends)
+                    .set("regions", out.profile.regions.len())
+                    .set("trace", out.trace.is_some());
+                j
+            }
+            Err(e) => error_event(&format!("{:#}", e)),
+        };
+        let _ = tx.send(terminal);
+    });
+    for event in rx {
+        write_event(writer, &event)?;
+    }
+    worker
+        .join()
+        .map_err(|_| anyhow::anyhow!("submit worker panicked"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_for_maps_scaling_like_the_run_verb() {
+        let amg = spec_for("amg2023", "tioga", 8).unwrap();
+        assert_eq!(amg.scaling, Scaling::Weak);
+        assert_eq!(amg.id(), "amg2023_tioga_8");
+        let laghos = spec_for("laghos", "dane", 112).unwrap();
+        assert_eq!(laghos.scaling, Scaling::Strong);
+        assert!(spec_for("warp", "tioga", 8).is_err());
+        assert!(spec_for("amg2023", "summit", 8).is_err());
+    }
+
+    #[test]
+    fn status_event_is_a_terminal_event() {
+        let mut j = Json::obj();
+        j.set("event", "status");
+        assert!(protocol::is_terminal(&j));
+    }
+}

@@ -1,0 +1,275 @@
+//! The `repro serve` wire protocol: line-delimited JSON over a local
+//! Unix socket.
+//!
+//! Grammar (one compact-JSON object per line, both directions; see
+//! `docs/SERVICE.md` for the full catalog):
+//!
+//! ```text
+//! request  := submit | status | result | diff | shutdown
+//! submit   := {"op":"submit","app":A,"system":S,"ranks":N[,"force":true]}
+//! status   := {"op":"status"}
+//! result   := {"op":"result","cell":ID}
+//! diff     := {"op":"diff","a":ID,"b":ID}
+//! shutdown := {"op":"shutdown"}
+//! ```
+//!
+//! A request is answered by zero or more *progress* events
+//! (`accepted`, `progress`) followed by exactly one *terminal* event
+//! (`result`, `status`, `profile`, `diff`, `ok`, or `error`). One
+//! connection may issue many requests sequentially.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::sync::Deadline;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Submit {
+        app: String,
+        system: String,
+        ranks: usize,
+        /// Recompute and overwrite even when the store has the cell.
+        force: bool,
+    },
+    Status,
+    Result {
+        cell: String,
+    },
+    Diff {
+        cell_a: String,
+        cell_b: String,
+    },
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            Request::Submit {
+                app,
+                system,
+                ranks,
+                force,
+            } => {
+                j.set("op", "submit")
+                    .set("app", app.as_str())
+                    .set("system", system.as_str())
+                    .set("ranks", *ranks);
+                if *force {
+                    j.set("force", true);
+                }
+            }
+            Request::Status => {
+                j.set("op", "status");
+            }
+            Request::Result { cell } => {
+                j.set("op", "result").set("cell", cell.as_str());
+            }
+            Request::Diff { cell_a, cell_b } => {
+                j.set("op", "diff")
+                    .set("a", cell_a.as_str())
+                    .set("b", cell_b.as_str());
+            }
+            Request::Shutdown => {
+                j.set("op", "shutdown");
+            }
+        }
+        j
+    }
+
+    /// Parse one request line.
+    pub fn decode(line: &str) -> Result<Request> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {}", e))?;
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("request has no `op`"))?;
+        let need_str = |key: &str| -> Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("`{}` requires string `{}`", op, key))?
+                .to_string())
+        };
+        match op {
+            "submit" => Ok(Request::Submit {
+                app: need_str("app")?,
+                system: need_str("system")?,
+                ranks: j
+                    .get("ranks")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("`submit` requires numeric `ranks`"))?
+                    as usize,
+                force: matches!(j.get("force"), Some(Json::Bool(true))),
+            }),
+            "status" => Ok(Request::Status),
+            "result" => Ok(Request::Result { cell: need_str("cell")? }),
+            "diff" => Ok(Request::Diff {
+                cell_a: need_str("a")?,
+                cell_b: need_str("b")?,
+            }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown op '{}'", other),
+        }
+    }
+
+    /// Compact single-line encoding, newline-terminated.
+    pub fn encode(&self) -> String {
+        let mut line = self.to_json().to_string_compact();
+        line.push('\n');
+        line
+    }
+}
+
+/// Event kinds that end a request's event stream.
+pub const TERMINAL_EVENTS: [&str; 6] = ["result", "status", "profile", "diff", "ok", "error"];
+
+/// True when an event line completes its request.
+pub fn is_terminal(event: &Json) -> bool {
+    event
+        .get("event")
+        .and_then(Json::as_str)
+        .map(|kind| TERMINAL_EVENTS.contains(&kind))
+        .unwrap_or(true)
+}
+
+/// Build an error event.
+pub fn error_event(message: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "error").set("message", message);
+    j
+}
+
+/// Write one event line (compact JSON + `\n`) and flush.
+pub fn write_event(w: &mut impl Write, event: &Json) -> std::io::Result<()> {
+    w.write_all(event.to_string_compact().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// A blocking protocol client over one Unix-socket connection.
+pub struct Client {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl Client {
+    /// Connect to a listening daemon.
+    pub fn connect(socket: &Path) -> Result<Client> {
+        let stream = UnixStream::connect(socket)
+            .with_context(|| format!("connecting to {}", socket.display()))?;
+        let reader = BufReader::new(stream.try_clone().context("cloning socket stream")?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Connect, retrying until the daemon binds its socket or `timeout`
+    /// elapses (for tests and scripts that race daemon startup).
+    pub fn connect_retry(socket: &Path, timeout: Duration) -> Result<Client> {
+        let deadline = Deadline::after(timeout);
+        loop {
+            match Self::connect(socket) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if deadline.expired() {
+                        return Err(e.context("daemon did not come up in time"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    /// Send one request line.
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        self.writer
+            .write_all(req.encode().as_bytes())
+            .context("writing request")?;
+        self.writer.flush().context("flushing request")?;
+        Ok(())
+    }
+
+    /// Read the next event line. EOF before a line is an error (the
+    /// daemon always terminates a request's stream with a terminal
+    /// event).
+    pub fn next_event(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading event")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        Json::parse(line.trim_end())
+            .map_err(|e| anyhow::anyhow!("bad event json '{}': {}", line.trim_end(), e))
+    }
+
+    /// Send `req`, stream progress events through `on_event`, and return
+    /// the terminal event.
+    pub fn roundtrip(&mut self, req: &Request, mut on_event: impl FnMut(&Json)) -> Result<Json> {
+        self.send(req)?;
+        loop {
+            let event = self.next_event()?;
+            if is_terminal(&event) {
+                return Ok(event);
+            }
+            on_event(&event);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_roundtrip_through_the_wire_encoding() {
+        let reqs = [
+            Request::Submit {
+                app: "amg2023".into(),
+                system: "tioga".into(),
+                ranks: 8,
+                force: true,
+            },
+            Request::Status,
+            Request::Result { cell: "amg2023_tioga_8".into() },
+            Request::Diff {
+                cell_a: "amg2023_tioga_8".into(),
+                cell_b: "amg2023_tioga_16".into(),
+            },
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = req.encode();
+            assert!(line.ends_with('\n') && !line.trim_end().contains('\n'));
+            assert_eq!(Request::decode(line.trim_end()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_with_context() {
+        assert!(Request::decode("not json").is_err());
+        assert!(Request::decode("{}").is_err());
+        assert!(Request::decode("{\"op\":\"warp\"}").is_err());
+        assert!(Request::decode("{\"op\":\"submit\",\"app\":\"amg2023\"}").is_err());
+    }
+
+    #[test]
+    fn terminal_classification_matches_the_catalog() {
+        for kind in TERMINAL_EVENTS {
+            let mut j = Json::obj();
+            j.set("event", kind);
+            assert!(is_terminal(&j), "{kind}");
+        }
+        let mut progress = Json::obj();
+        progress.set("event", "progress");
+        assert!(!is_terminal(&progress));
+        let mut accepted = Json::obj();
+        accepted.set("event", "accepted");
+        assert!(!is_terminal(&accepted));
+    }
+}

@@ -1,0 +1,842 @@
+//! Deterministic structural diff of v2 profiles and whole campaigns.
+//!
+//! The paper's analysis is comparative — the same cell across systems,
+//! scales, or code versions. This module turns two
+//! [`RunProfile`]s into a per-region, per-channel delta report with
+//! statistical significance, so "something changed" becomes "the halo's
+//! Waitall wait time grew 2.3×, t = 41.7":
+//!
+//! - **Alignment.** Regions are aligned by their Caliper path (the
+//!   `BTreeMap` key), so the report walks the union of both region trees
+//!   in one canonical order; regions present on only one side are listed
+//!   structurally.
+//! - **Distribution metrics.** Every [`AggMetric`] stores lossless
+//!   `OnlineStats` moments (count/mean/M2) in the v2 schema, which is
+//!   exactly what Welch's unequal-variance t-test needs — no raw samples
+//!   required. [`welch_from_moments`] computes `t`, the
+//!   Welch–Satterthwaite degrees of freedom, and significance at
+//!   two-sided α = 0.05.
+//! - **Scalar channels.** Trace critical-path and wait-state seconds are
+//!   single numbers per region, not distributions; they use an exact
+//!   comparison with a tiny relative guard ([`REL_EPSILON`]) instead of a
+//!   t-test — the simulator is deterministic, so any real delta is
+//!   meaningful.
+//! - **Verdict.** Time-like metrics (region time, mpi-time/wait/transfer,
+//!   trace critical path and wait seconds) drive a three-way verdict:
+//!   any significant increase ⇒ [`DiffVerdict::Regressed`], else any
+//!   significant decrease ⇒ [`DiffVerdict::Improved`], else
+//!   [`DiffVerdict::NoChange`]. Workload-shape metrics (sends, bytes,
+//!   comm-matrix cells) are reported but do not move the verdict. The
+//!   verdict maps to the process exit codes `repro diff` gates CI with:
+//!   0 / 3 / 4.
+//!
+//! Rendering is byte-stable: fixed float formatting, canonical region
+//! order, no timestamps — two runs (on either engine) of the same inputs
+//! produce identical text and CSV bytes.
+
+use std::collections::BTreeSet;
+
+use crate::caliper::profile::{AggMetric, AggRegion, RunProfile};
+use crate::thicket::Thicket;
+
+/// Two-sided significance level of the Welch test.
+pub const ALPHA: f64 = 0.05;
+
+/// Relative guard for degenerate (zero-variance or single-sample)
+/// comparisons: a delta below this fraction of the larger magnitude is
+/// floating-point noise, not a change.
+pub const REL_EPSILON: f64 = 1e-9;
+
+// ---------------------------------------------------------------------------
+// Welch's t-test from stored moments
+// ---------------------------------------------------------------------------
+
+/// A significance decision for one metric pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Significance {
+    /// Welch's t statistic (0 when degenerate and unchanged; ±∞ when the
+    /// pooled standard error is zero but the means differ).
+    pub t: f64,
+    /// Welch–Satterthwaite degrees of freedom (0 when degenerate).
+    pub df: f64,
+    pub significant: bool,
+}
+
+/// Student-t two-sided 97.5% quantiles, interpolated linearly in `1/df`.
+/// (A fixed table keeps the computation dependency-free and byte-stable.)
+const T_CRIT_975: [(f64, f64); 16] = [
+    (1.0, 12.706),
+    (2.0, 4.303),
+    (3.0, 3.182),
+    (4.0, 2.776),
+    (5.0, 2.571),
+    (6.0, 2.447),
+    (7.0, 2.365),
+    (8.0, 2.306),
+    (9.0, 2.262),
+    (10.0, 2.228),
+    (12.0, 2.179),
+    (15.0, 2.131),
+    (20.0, 2.086),
+    (30.0, 2.042),
+    (60.0, 2.000),
+    (120.0, 1.980),
+];
+
+/// Critical |t| for two-sided α = 0.05 at `df` degrees of freedom.
+pub fn t_critical(df: f64) -> f64 {
+    if df <= T_CRIT_975[0].0 {
+        return T_CRIT_975[0].1;
+    }
+    let (last_df, last_t) = T_CRIT_975[T_CRIT_975.len() - 1];
+    if df >= last_df {
+        // Interpolate in 1/df toward the normal quantile 1.960 at df → ∞.
+        let x = 1.0 / df;
+        let x0 = 1.0 / last_df;
+        return 1.960 + (last_t - 1.960) * (x / x0);
+    }
+    for w in T_CRIT_975.windows(2) {
+        let (d0, t0) = w[0];
+        let (d1, t1) = w[1];
+        if df <= d1 {
+            let x = 1.0 / df;
+            let (x0, x1) = (1.0 / d0, 1.0 / d1);
+            return t1 + (t0 - t1) * (x - x1) / (x0 - x1);
+        }
+    }
+    1.960
+}
+
+/// True when `a → b` is more than floating-point noise, relative to the
+/// larger magnitude.
+fn beyond_noise(a: f64, b: f64) -> bool {
+    (b - a).abs() > REL_EPSILON * a.abs().max(b.abs())
+}
+
+/// Welch's unequal-variance t-test straight from stored `OnlineStats`
+/// moments (`n`, `mean`, `M2` — variance is `M2/(n-1)`).
+///
+/// Degenerate inputs (a side with fewer than two samples, or both
+/// variances zero) fall back to an exact comparison under
+/// [`REL_EPSILON`]: the simulator is deterministic, so identical inputs
+/// give a delta of exactly zero, and any surviving delta is a real
+/// change (reported with `t = ±∞`, `df = 0`).
+pub fn welch_from_moments(
+    n1: u64,
+    mean1: f64,
+    m2_1: f64,
+    n2: u64,
+    mean2: f64,
+    m2_2: f64,
+) -> Significance {
+    let degenerate = |a: f64, b: f64| {
+        if beyond_noise(a, b) {
+            Significance {
+                t: if b > a { f64::INFINITY } else { f64::NEG_INFINITY },
+                df: 0.0,
+                significant: true,
+            }
+        } else {
+            Significance {
+                t: 0.0,
+                df: 0.0,
+                significant: false,
+            }
+        }
+    };
+    if n1 < 2 || n2 < 2 {
+        return degenerate(mean1, mean2);
+    }
+    let v1 = m2_1 / (n1 - 1) as f64;
+    let v2 = m2_2 / (n2 - 1) as f64;
+    let se2 = v1 / n1 as f64 + v2 / n2 as f64;
+    if se2 <= 0.0 {
+        return degenerate(mean1, mean2);
+    }
+    let t = (mean2 - mean1) / se2.sqrt();
+    // Welch–Satterthwaite effective degrees of freedom.
+    let a = v1 / n1 as f64;
+    let b = v2 / n2 as f64;
+    let denom = a * a / (n1 - 1) as f64 + b * b / (n2 - 1) as f64;
+    let df = if denom > 0.0 { se2 * se2 / denom } else { (n1 + n2 - 2) as f64 };
+    Significance {
+        t,
+        df,
+        significant: t.abs() > t_critical(df) && beyond_noise(mean1, mean2),
+    }
+}
+
+fn agg_significance(a: &AggMetric, b: &AggMetric) -> Significance {
+    welch_from_moments(
+        a.stats.count(),
+        a.stats.mean(),
+        a.stats.m2(),
+        b.stats.count(),
+        b.stats.mean(),
+        b.stats.m2(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Diff model
+// ---------------------------------------------------------------------------
+
+/// The three-way outcome `repro diff` turns into a process exit code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DiffVerdict {
+    NoChange,
+    Improved,
+    Regressed,
+}
+
+impl DiffVerdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DiffVerdict::NoChange => "no-change",
+            DiffVerdict::Improved => "improved",
+            DiffVerdict::Regressed => "regressed",
+        }
+    }
+
+    /// Exit-code contract: 0 = no significant change, 3 = improved,
+    /// 4 = regressed. CI gates on 4 only; 3 keeps improvements visible
+    /// without failing the build.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            DiffVerdict::NoChange => 0,
+            DiffVerdict::Improved => 3,
+            DiffVerdict::Regressed => 4,
+        }
+    }
+
+    /// The worse of two verdicts (`Regressed` dominates).
+    pub fn merge(self, other: DiffVerdict) -> DiffVerdict {
+        self.max(other)
+    }
+}
+
+/// One metric compared across the two sides of a region.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    /// Channel the metric rides in (`region-times`, `comm-stats`,
+    /// `mpi-time`, `trace`).
+    pub channel: &'static str,
+    pub metric: &'static str,
+    /// Lower-is-better second/wait metrics — these drive the verdict.
+    pub time_like: bool,
+    pub a_n: u64,
+    pub a_mean: f64,
+    pub b_n: u64,
+    pub b_mean: f64,
+    /// `b_mean - a_mean`.
+    pub delta: f64,
+    pub sig: Significance,
+}
+
+/// Structural delta of the rank×rank traffic matrices.
+#[derive(Debug, Clone)]
+pub struct MatrixDelta {
+    pub cells_a: usize,
+    pub cells_b: usize,
+    /// (src, dst) cells whose (messages, bytes) differ, including cells
+    /// present on one side only.
+    pub cells_changed: usize,
+    pub bytes_a: f64,
+    pub bytes_b: f64,
+}
+
+/// One aligned region (or a region present on one side only).
+#[derive(Debug, Clone)]
+pub struct RegionDiff {
+    pub path: String,
+    /// `Some("a")`/`Some("b")` when the region exists on one side only.
+    pub only_in: Option<&'static str>,
+    pub deltas: Vec<MetricDelta>,
+    pub matrix: Option<MatrixDelta>,
+    /// Channels present on one side only (spec change, not a metric
+    /// delta) and similar structural notes.
+    pub notes: Vec<String>,
+}
+
+/// The diff of two profiles of (usually) the same cell.
+#[derive(Debug, Clone)]
+pub struct ProfileDiff {
+    pub label_a: String,
+    pub label_b: String,
+    /// Meta keys whose stamped values differ: (key, a, b).
+    pub meta_changes: Vec<(String, String, String)>,
+    pub regions: Vec<RegionDiff>,
+}
+
+impl ProfileDiff {
+    /// Align two profiles by region path and compare every channel both
+    /// sides carry. Deterministic: same inputs, same output, field by
+    /// field.
+    pub fn compute(a: &RunProfile, b: &RunProfile, label_a: &str, label_b: &str) -> ProfileDiff {
+        let mut meta_changes = Vec::new();
+        let meta_keys: BTreeSet<&String> = a.meta.keys().chain(b.meta.keys()).collect();
+        for key in meta_keys {
+            let va = a.meta.get(key.as_str()).map(String::as_str).unwrap_or("");
+            let vb = b.meta.get(key.as_str()).map(String::as_str).unwrap_or("");
+            if va != vb {
+                meta_changes.push((key.to_string(), va.to_string(), vb.to_string()));
+            }
+        }
+        let paths: BTreeSet<&String> = a.regions.keys().chain(b.regions.keys()).collect();
+        let regions = paths
+            .into_iter()
+            .map(|path| match (a.regions.get(path.as_str()), b.regions.get(path.as_str())) {
+                (Some(ra), Some(rb)) => diff_region(path, ra, rb),
+                (Some(_), None) => only_region(path, "a"),
+                _ => only_region(path, "b"),
+            })
+            .collect();
+        ProfileDiff {
+            label_a: label_a.to_string(),
+            label_b: label_b.to_string(),
+            meta_changes,
+            regions,
+        }
+    }
+
+    /// Number of significant metric deltas across all regions.
+    pub fn significant_count(&self) -> usize {
+        self.regions
+            .iter()
+            .flat_map(|r| r.deltas.iter())
+            .filter(|d| d.sig.significant)
+            .count()
+    }
+
+    /// Verdict from the time-like metrics (see the module docs).
+    pub fn verdict(&self) -> DiffVerdict {
+        let mut verdict = DiffVerdict::NoChange;
+        for d in self.regions.iter().flat_map(|r| r.deltas.iter()) {
+            if !(d.sig.significant && d.time_like) {
+                continue;
+            }
+            verdict = verdict.merge(if d.delta > 0.0 {
+                DiffVerdict::Regressed
+            } else {
+                DiffVerdict::Improved
+            });
+        }
+        verdict
+    }
+
+    /// Byte-stable text report: significant deltas plus structural notes,
+    /// then the verdict line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("profile diff: {} -> {}\n", self.label_a, self.label_b));
+        for (key, va, vb) in &self.meta_changes {
+            out.push_str(&format!("  meta {}: '{}' -> '{}'\n", key, va, vb));
+        }
+        for region in &self.regions {
+            render_region_text(&mut out, region);
+        }
+        let verdict = self.verdict();
+        out.push_str(&format!(
+            "verdict: {} ({} significant delta(s), exit code {})\n",
+            verdict.name(),
+            self.significant_count(),
+            verdict.exit_code()
+        ));
+        out
+    }
+
+    /// Byte-stable CSV: every compared metric (significant or not), one
+    /// row each — the machine-readable companion of the text report.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::from(CSV_HEADER);
+        for region in &self.regions {
+            render_region_csv(&mut out, "", region);
+        }
+        out
+    }
+}
+
+/// One cell of a campaign-level diff.
+#[derive(Debug, Clone)]
+pub struct CellDiff {
+    pub cell: String,
+    pub diff: ProfileDiff,
+}
+
+/// The diff of two campaign output directories, aligned by cell id.
+#[derive(Debug, Clone)]
+pub struct CampaignDiff {
+    pub label_a: String,
+    pub label_b: String,
+    pub cells: Vec<CellDiff>,
+    pub only_in_a: Vec<String>,
+    pub only_in_b: Vec<String>,
+}
+
+impl CampaignDiff {
+    /// Align two thickets on the campaign cell id
+    /// (`<app>_<system>_<ranks>`, via [`crate::thicket::cell_id`]).
+    pub fn compute(a: &Thicket, b: &Thicket, label_a: &str, label_b: &str) -> CampaignDiff {
+        let ids_a: BTreeSet<String> = a.runs.iter().map(crate::thicket::cell_id).collect();
+        let ids_b: BTreeSet<String> = b.runs.iter().map(crate::thicket::cell_id).collect();
+        let cells = ids_a
+            .intersection(&ids_b)
+            .map(|id| {
+                let pa = a.find_cell(id).expect("id from a");
+                let pb = b.find_cell(id).expect("id from b");
+                CellDiff {
+                    cell: id.clone(),
+                    diff: ProfileDiff::compute(
+                        pa,
+                        pb,
+                        &format!("{}/{}", label_a, id),
+                        &format!("{}/{}", label_b, id),
+                    ),
+                }
+            })
+            .collect();
+        CampaignDiff {
+            label_a: label_a.to_string(),
+            label_b: label_b.to_string(),
+            cells,
+            only_in_a: ids_a.difference(&ids_b).cloned().collect(),
+            only_in_b: ids_b.difference(&ids_a).cloned().collect(),
+        }
+    }
+
+    pub fn significant_count(&self) -> usize {
+        self.cells.iter().map(|c| c.diff.significant_count()).sum()
+    }
+
+    /// Worst verdict over the aligned cells.
+    pub fn verdict(&self) -> DiffVerdict {
+        self.cells
+            .iter()
+            .fold(DiffVerdict::NoChange, |v, c| v.merge(c.diff.verdict()))
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "campaign diff: {} -> {} ({} common cell(s))\n",
+            self.label_a,
+            self.label_b,
+            self.cells.len()
+        ));
+        for id in &self.only_in_a {
+            out.push_str(&format!("  cell only in {}: {}\n", self.label_a, id));
+        }
+        for id in &self.only_in_b {
+            out.push_str(&format!("  cell only in {}: {}\n", self.label_b, id));
+        }
+        for cell in &self.cells {
+            out.push_str(&cell.diff.render_text());
+        }
+        let verdict = self.verdict();
+        out.push_str(&format!(
+            "campaign verdict: {} ({} significant delta(s), exit code {})\n",
+            verdict.name(),
+            self.significant_count(),
+            verdict.exit_code()
+        ));
+        out
+    }
+
+    pub fn render_csv(&self) -> String {
+        let mut out = String::from(CSV_HEADER);
+        for cell in &self.cells {
+            for region in &cell.diff.regions {
+                render_region_csv(&mut out, &cell.cell, region);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Region comparison
+// ---------------------------------------------------------------------------
+
+fn only_region(path: &str, side: &'static str) -> RegionDiff {
+    RegionDiff {
+        path: path.to_string(),
+        only_in: Some(side),
+        deltas: Vec::new(),
+        matrix: None,
+        notes: Vec::new(),
+    }
+}
+
+fn agg_row(
+    channel: &'static str,
+    metric: &'static str,
+    time_like: bool,
+    a: &AggMetric,
+    b: &AggMetric,
+) -> MetricDelta {
+    MetricDelta {
+        channel,
+        metric,
+        time_like,
+        a_n: a.stats.count(),
+        a_mean: a.stats.mean(),
+        b_n: b.stats.count(),
+        b_mean: b.stats.mean(),
+        delta: b.stats.mean() - a.stats.mean(),
+        sig: agg_significance(a, b),
+    }
+}
+
+fn scalar_row(
+    channel: &'static str,
+    metric: &'static str,
+    time_like: bool,
+    a: f64,
+    b: f64,
+) -> MetricDelta {
+    MetricDelta {
+        channel,
+        metric,
+        time_like,
+        a_n: 1,
+        a_mean: a,
+        b_n: 1,
+        b_mean: b,
+        delta: b - a,
+        sig: welch_from_moments(1, a, 0.0, 1, b, 0.0),
+    }
+}
+
+fn diff_region(path: &str, a: &AggRegion, b: &AggRegion) -> RegionDiff {
+    let mut deltas = vec![
+        agg_row("region-times", "time", true, &a.time, &b.time),
+        agg_row("comm-stats", "sends", false, &a.sends, &b.sends),
+        agg_row("comm-stats", "recvs", false, &a.recvs, &b.recvs),
+        agg_row("comm-stats", "bytes_sent", false, &a.bytes_sent, &b.bytes_sent),
+        agg_row("comm-stats", "bytes_recv", false, &a.bytes_recv, &b.bytes_recv),
+        agg_row("comm-stats", "colls", false, &a.colls, &b.colls),
+    ];
+    let mut notes = Vec::new();
+    let mut optional = |name: &'static str,
+                        time_like: bool,
+                        ma: &Option<AggMetric>,
+                        mb: &Option<AggMetric>,
+                        deltas: &mut Vec<MetricDelta>,
+                        notes: &mut Vec<String>| {
+        match (ma, mb) {
+            (Some(xa), Some(xb)) => deltas.push(agg_row("mpi-time", name, time_like, xa, xb)),
+            (Some(_), None) => notes.push(format!("channel metric {} only in a", name)),
+            (None, Some(_)) => notes.push(format!("channel metric {} only in b", name)),
+            (None, None) => {}
+        }
+    };
+    optional("mpi_time", true, &a.mpi_time, &b.mpi_time, &mut deltas, &mut notes);
+    optional("mpi_wait", true, &a.mpi_wait, &b.mpi_wait, &mut deltas, &mut notes);
+    optional(
+        "mpi_transfer",
+        true,
+        &a.mpi_transfer,
+        &b.mpi_transfer,
+        &mut deltas,
+        &mut notes,
+    );
+    match (&a.trace, &b.trace) {
+        (Some(ta), Some(tb)) => {
+            deltas.push(scalar_row("trace", "critpath", true, ta.critpath, tb.critpath));
+            deltas.push(scalar_row(
+                "trace",
+                "late_sender_wait",
+                true,
+                ta.late_sender.1,
+                tb.late_sender.1,
+            ));
+            deltas.push(scalar_row(
+                "trace",
+                "late_receiver_wait",
+                true,
+                ta.late_receiver.1,
+                tb.late_receiver.1,
+            ));
+            deltas.push(scalar_row(
+                "trace",
+                "wait_at_coll_wait",
+                true,
+                ta.wait_at_coll.1,
+                tb.wait_at_coll.1,
+            ));
+            deltas.push(scalar_row(
+                "trace",
+                "late_sender_count",
+                false,
+                ta.late_sender.0 as f64,
+                tb.late_sender.0 as f64,
+            ));
+            deltas.push(scalar_row(
+                "trace",
+                "late_receiver_count",
+                false,
+                ta.late_receiver.0 as f64,
+                tb.late_receiver.0 as f64,
+            ));
+            deltas.push(scalar_row(
+                "trace",
+                "wait_at_coll_count",
+                false,
+                ta.wait_at_coll.0 as f64,
+                tb.wait_at_coll.0 as f64,
+            ));
+        }
+        (Some(_), None) => notes.push("channel trace only in a".to_string()),
+        (None, Some(_)) => notes.push("channel trace only in b".to_string()),
+        (None, None) => {}
+    }
+    let matrix = match (&a.comm_matrix, &b.comm_matrix) {
+        (Some(ma), Some(mb)) => {
+            let keys: BTreeSet<&(usize, usize)> = ma.sent.keys().chain(mb.sent.keys()).collect();
+            let cells_changed = keys
+                .into_iter()
+                .filter(|k| ma.sent.get(*k) != mb.sent.get(*k))
+                .count();
+            let bytes = |m: &crate::caliper::profile::AggCommMatrix| {
+                m.sent.values().map(|(_, b)| *b as f64).sum::<f64>()
+            };
+            Some(MatrixDelta {
+                cells_a: ma.sent.len(),
+                cells_b: mb.sent.len(),
+                cells_changed,
+                bytes_a: bytes(ma),
+                bytes_b: bytes(mb),
+            })
+        }
+        (Some(_), None) => {
+            notes.push("channel comm-matrix only in a".to_string());
+            None
+        }
+        (None, Some(_)) => {
+            notes.push("channel comm-matrix only in b".to_string());
+            None
+        }
+        (None, None) => None,
+    };
+    RegionDiff {
+        path: path.to_string(),
+        only_in: None,
+        deltas,
+        matrix,
+        notes,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------------
+
+const CSV_HEADER: &str =
+    "cell,region,channel,metric,a_n,a_mean,b_n,b_mean,delta,t,df,significant,time_like\n";
+
+/// Fixed-width scientific float formatting — the byte-stability anchor.
+fn num(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.is_infinite() {
+        if x > 0.0 { "inf".to_string() } else { "-inf".to_string() }
+    } else {
+        format!("{:.6e}", x)
+    }
+}
+
+fn render_region_text(out: &mut String, region: &RegionDiff) {
+    if let Some(side) = region.only_in {
+        out.push_str(&format!("  region {} only in {}\n", region.path, side));
+        return;
+    }
+    let significant: Vec<&MetricDelta> =
+        region.deltas.iter().filter(|d| d.sig.significant).collect();
+    let has_matrix_delta = region
+        .matrix
+        .as_ref()
+        .map(|m| m.cells_changed > 0)
+        .unwrap_or(false);
+    if significant.is_empty() && region.notes.is_empty() && !has_matrix_delta {
+        return;
+    }
+    out.push_str(&format!("  region {}\n", region.path));
+    for note in &region.notes {
+        out.push_str(&format!("    note: {}\n", note));
+    }
+    for d in significant {
+        out.push_str(&format!(
+            "    [{}] {}: {} -> {} (delta {}, t {}, df {})\n",
+            d.channel,
+            d.metric,
+            num(d.a_mean),
+            num(d.b_mean),
+            num(d.delta),
+            num(d.sig.t),
+            num(d.sig.df),
+        ));
+    }
+    if let Some(m) = &region.matrix {
+        if m.cells_changed > 0 {
+            out.push_str(&format!(
+                "    [comm-matrix] {} of {} -> {} cells changed, bytes {} -> {}\n",
+                m.cells_changed,
+                m.cells_a,
+                m.cells_b,
+                num(m.bytes_a),
+                num(m.bytes_b),
+            ));
+        }
+    }
+}
+
+fn render_region_csv(out: &mut String, cell: &str, region: &RegionDiff) {
+    for d in &region.deltas {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            cell,
+            region.path,
+            d.channel,
+            d.metric,
+            d.a_n,
+            num(d.a_mean),
+            d.b_n,
+            num(d.b_mean),
+            num(d.delta),
+            num(d.sig.t),
+            num(d.sig.df),
+            d.sig.significant,
+            d.time_like,
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::OnlineStats;
+
+    fn metric(samples: &[f64]) -> AggMetric {
+        let mut stats = OnlineStats::new();
+        for s in samples {
+            stats.push(*s);
+        }
+        AggMetric { stats }
+    }
+
+    #[test]
+    fn t_critical_is_monotone_toward_the_normal_quantile() {
+        assert!(t_critical(1.0) > t_critical(2.0));
+        assert!(t_critical(10.0) > t_critical(30.0));
+        assert!(t_critical(240.0) > 1.960);
+        assert!(t_critical(240.0) < 1.980);
+        assert!((t_critical(8.0) - 2.306).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welch_flags_a_clear_shift_and_not_noise() {
+        let clear = welch_from_moments(12, 10.0, 0.11, 12, 5.0, 0.11);
+        assert!(clear.significant);
+        assert!(clear.t < 0.0, "mean dropped: {:?}", clear);
+        let noisy = welch_from_moments(12, 10.0, 1100.0, 12, 8.0, 1100.0);
+        assert!(!noisy.significant, "{:?}", noisy);
+    }
+
+    #[test]
+    fn welch_degenerate_cases_use_the_exact_comparison() {
+        let same = welch_from_moments(1, 3.5, 0.0, 1, 3.5, 0.0);
+        assert!(!same.significant);
+        let moved = welch_from_moments(1, 3.5, 0.0, 1, 7.0, 0.0);
+        assert!(moved.significant);
+        assert!(moved.t.is_infinite() && moved.t > 0.0);
+        // Zero variance on both sides, many samples, different means.
+        let det = welch_from_moments(8, 1.0, 0.0, 8, 2.0, 0.0);
+        assert!(det.significant);
+    }
+
+    #[test]
+    fn self_diff_is_empty_and_stable() {
+        let mut p = RunProfile::default();
+        p.meta.insert("app".into(), "kripke".into());
+        let region = AggRegion {
+            time: metric(&[1.0, 1.5, 2.0]),
+            sends: metric(&[4.0, 4.0, 4.0]),
+            ..AggRegion::default()
+        };
+        p.regions.insert("main/solve".into(), region);
+        let d = ProfileDiff::compute(&p, &p, "a", "b");
+        assert_eq!(d.significant_count(), 0);
+        assert_eq!(d.verdict(), DiffVerdict::NoChange);
+        assert_eq!(d.verdict().exit_code(), 0);
+        assert!(d.meta_changes.is_empty());
+        assert_eq!(d.render_text(), d.render_text());
+        assert_eq!(d.render_csv(), d.render_csv());
+    }
+
+    #[test]
+    fn time_increase_regresses_and_decrease_improves() {
+        let mut a = RunProfile::default();
+        let mut b = RunProfile::default();
+        a.regions.insert(
+            "main/halo".into(),
+            AggRegion {
+                time: metric(&[1.0, 1.1, 0.9, 1.0]),
+                ..AggRegion::default()
+            },
+        );
+        b.regions.insert(
+            "main/halo".into(),
+            AggRegion {
+                time: metric(&[9.0, 9.1, 8.9, 9.0]),
+                ..AggRegion::default()
+            },
+        );
+        let worse = ProfileDiff::compute(&a, &b, "a", "b");
+        assert_eq!(worse.verdict(), DiffVerdict::Regressed);
+        assert_eq!(worse.verdict().exit_code(), 4);
+        let better = ProfileDiff::compute(&b, &a, "b", "a");
+        assert_eq!(better.verdict(), DiffVerdict::Improved);
+        assert_eq!(better.verdict().exit_code(), 3);
+        // Shape-only changes (sends) never move the verdict.
+        let mut c = RunProfile::default();
+        c.regions.insert(
+            "main/halo".into(),
+            AggRegion {
+                time: metric(&[1.0, 1.1, 0.9, 1.0]),
+                sends: metric(&[100.0, 100.0, 100.0, 100.0]),
+                ..AggRegion::default()
+            },
+        );
+        let shape = ProfileDiff::compute(&a, &c, "a", "c");
+        assert!(shape.significant_count() > 0);
+        assert_eq!(shape.verdict(), DiffVerdict::NoChange);
+    }
+
+    #[test]
+    fn region_union_reports_one_sided_regions() {
+        let mut a = RunProfile::default();
+        let mut b = RunProfile::default();
+        a.regions.insert("main/old".into(), AggRegion::default());
+        b.regions.insert("main/new".into(), AggRegion::default());
+        let d = ProfileDiff::compute(&a, &b, "a", "b");
+        let sides: Vec<(&str, Option<&'static str>)> = d
+            .regions
+            .iter()
+            .map(|r| (r.path.as_str(), r.only_in))
+            .collect();
+        assert_eq!(sides, vec![("main/new", Some("b")), ("main/old", Some("a"))]);
+    }
+
+    #[test]
+    fn csv_has_a_row_per_metric_and_header() {
+        let mut a = RunProfile::default();
+        a.regions.insert("main".into(), AggRegion::default());
+        let d = ProfileDiff::compute(&a, &a, "x", "y");
+        let csv = d.render_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], CSV_HEADER.trim_end());
+        // 6 unconditional metric rows for a channel-less region.
+        assert_eq!(lines.len(), 1 + 6);
+        assert!(lines[1].starts_with(",main,region-times,time,"));
+    }
+}

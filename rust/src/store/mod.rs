@@ -1,0 +1,513 @@
+//! `store` — the persistent content-addressed artifact store.
+//!
+//! Batch campaigns already persist one profile (and optionally one trace
+//! JSONL) per cell under `<out>/profiles` / `<out>/traces`, stamped with
+//! the run options that produced them. This module promotes that layout
+//! into a first-class store shared by the batch path
+//! ([`crate::coordinator::campaign`]) and the service daemon
+//! ([`crate::serve`]):
+//!
+//! - **One source of path truth.** Every artifact path — profile, trace,
+//!   `failures.csv`, `inventory.csv` — is derived here, so the campaign
+//!   writer, the trace sink, the CLI and the daemon can never disagree on
+//!   layout. Daemon-written artifacts are byte-identical to batch output
+//!   because they are literally the same serializers writing to the same
+//!   paths.
+//! - **Content addressing.** Entries are keyed by
+//!   [`crate::benchpark::modifier::cell_key`] — app × system × scaling ×
+//!   ranks × variant × shrink factors × channel spec. The engine is
+//!   deliberately absent from the key (profiles are byte-identical across
+//!   engines), so an event-engine daemon serves threaded-engine artifacts
+//!   and vice versa.
+//! - **Staleness.** A file only counts as cached when its stamped
+//!   `iter_shrink` / `size_shrink` / `channels` metadata matches the
+//!   requested [`RunOptions`] ([`disk_profile_matches`], moved here from
+//!   the campaign layer), and — when the `trace` channel is on — its
+//!   trace artifact is present too.
+//! - **Atomic writes.** Artifacts and the index land via tmp+rename
+//!   ([`write_atomic`]), so a crashed or killed writer can never leave a
+//!   half-written profile that a later lookup would trust.
+//! - **Single flight.** Concurrent [`ArtifactStore::get_or_compute`]
+//!   calls for the same cell key elect one leader to compute; followers
+//!   block on a [`Monitor`] and are served from the store when the leader
+//!   lands the artifact.
+//!
+//! An `index.json` (`STORE_v1`) at the store root records every key the
+//! store has produced or adopted. It is an observability surface and a
+//! rebuildable cache — lookups always re-validate against the stamped
+//! artifact itself, so deleting the index loses nothing.
+
+pub mod diff;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::benchpark::experiment::ExperimentSpec;
+use crate::benchpark::modifier::cell_key;
+use crate::benchpark::runner::{CellOutput, RunOptions};
+use crate::caliper::channel::ChannelKind;
+use crate::caliper::RunProfile;
+use crate::util::json::Json;
+use crate::util::sync::{AtomicU64, Deadline, Monitor, Mutex, Ordering};
+
+/// Schema tag of the store index file.
+pub const STORE_SCHEMA: &str = "STORE_v1";
+
+/// Index file name at the store root.
+pub const INDEX_FILE: &str = "index.json";
+
+/// How long a single-flight follower waits for the leader before giving
+/// up. Generous: full-fidelity laghos cells run minutes, not hours.
+const SINGLE_FLIGHT_TIMEOUT: Duration = Duration::from_secs(600);
+
+// ---------------------------------------------------------------------------
+// Path derivation — the one place artifact layout is defined.
+// ---------------------------------------------------------------------------
+
+/// `<out>/profiles` — one `<cell id>.json` per cell.
+pub fn profiles_dir(out_dir: &Path) -> PathBuf {
+    out_dir.join("profiles")
+}
+
+/// `<out>/traces` — one `<cell id>.trace.jsonl` per traced cell.
+pub fn traces_dir(out_dir: &Path) -> PathBuf {
+    out_dir.join("traces")
+}
+
+/// Per-cell profile artifact path.
+pub fn profile_path(out_dir: &Path, cell_id: &str) -> PathBuf {
+    profiles_dir(out_dir).join(format!("{}.json", cell_id))
+}
+
+/// Per-cell trace artifact path.
+pub fn trace_path(out_dir: &Path, cell_id: &str) -> PathBuf {
+    traces_dir(out_dir).join(format!("{}{}", cell_id, crate::trace::TRACE_SUFFIX))
+}
+
+/// The campaign failure list.
+pub fn failures_path(out_dir: &Path) -> PathBuf {
+    out_dir.join("failures.csv")
+}
+
+/// The campaign inventory.
+pub fn inventory_path(out_dir: &Path) -> PathBuf {
+    out_dir.join("inventory.csv")
+}
+
+/// Create the store/campaign directory layout (`profiles/`, and `traces/`
+/// when the run collects traces).
+pub fn ensure_layout(out_dir: &Path, traces: bool) -> Result<()> {
+    std::fs::create_dir_all(profiles_dir(out_dir)).context("creating profile dir")?;
+    if traces {
+        std::fs::create_dir_all(traces_dir(out_dir)).context("creating trace dir")?;
+    }
+    Ok(())
+}
+
+/// Write `contents` to `path` atomically: write a `.tmp` sibling, then
+/// rename over the target. Readers either see the old bytes or the new
+/// bytes, never a torn file. (Concurrent writers of the *same* path are
+/// excluded by the store's single-flight discipline; distinct cells write
+/// distinct paths.)
+pub fn write_atomic(path: &Path, contents: &str) -> std::io::Result<()> {
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("artifact");
+    let tmp = path.with_file_name(format!("{}.tmp", file_name));
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// True when a profile file exists AND its stamped run options — shrink
+/// factors and metric-channel spec — match the requested ones.
+/// Unreadable/unparseable files and profiles from before the options were
+/// stamped count as stale (re-run, overwrite).
+pub fn disk_profile_matches(path: &Path, run: &RunOptions) -> bool {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return false,
+    };
+    let parsed = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(_) => return false,
+    };
+    // Only the stamped meta fields matter here — skip the full RunProfile
+    // reconstruction (regions, per-rank aggregates).
+    let meta = match parsed.get("meta") {
+        Some(m) => m,
+        None => return false,
+    };
+    let field = |k: &str| {
+        meta.get(k)
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse::<usize>().ok())
+    };
+    field("iter_shrink") == Some(run.iter_shrink)
+        && field("size_shrink") == Some(run.size_shrink)
+        && meta.get("channels").and_then(Json::as_str) == Some(run.channels.spec_string().as_str())
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Where a [`ArtifactStore::get_or_compute`] result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOutcome {
+    /// Served from a stamped, staleness-checked artifact on disk.
+    Hit,
+    /// Computed by this call (and persisted before returning).
+    Miss,
+}
+
+impl StoreOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreOutcome::Hit => "hit",
+            StoreOutcome::Miss => "miss",
+        }
+    }
+}
+
+/// One indexed cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexEntry {
+    /// The cell's artifact file stem (`kripke_dane_64`).
+    pub id: String,
+    /// Whether a trace artifact rides alongside the profile.
+    pub has_trace: bool,
+}
+
+/// Counters accumulated over the store's lifetime (process-local).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub puts: u64,
+    /// Cells currently in the index (persisted or adopted).
+    pub indexed: usize,
+}
+
+/// The persistent content-addressed artifact store. See the module docs
+/// for keying, staleness, atomicity and single-flight semantics.
+pub struct ArtifactStore {
+    root: PathBuf,
+    index: Mutex<BTreeMap<String, IndexEntry>>,
+    /// Cell keys whose leader is currently computing.
+    inflight: Monitor<BTreeSet<String>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    puts: AtomicU64,
+}
+
+/// Removes the flight entry and wakes followers on every exit path from
+/// the leader's critical section — including an `Err` from compute.
+struct FlightGuard<'a> {
+    store: &'a ArtifactStore,
+    key: &'a str,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        let mut inflight = self.store.inflight.lock();
+        inflight.remove(self.key);
+        drop(inflight);
+        self.store.inflight.notify_all();
+    }
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `root`. The root uses
+    /// the exact batch-campaign layout, so opening a store over an
+    /// existing `repro campaign --out` directory adopts its artifacts.
+    pub fn open(root: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let root = root.into();
+        ensure_layout(&root, true)?;
+        let index = load_index(&root.join(INDEX_FILE));
+        Ok(ArtifactStore {
+            root,
+            index: Mutex::new(index),
+            inflight: Monitor::new(BTreeSet::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            puts: self.puts.load(Ordering::Relaxed),
+            indexed: self.index.lock().unwrap().len(),
+        }
+    }
+
+    /// The content key this store files `spec` under for `opts`.
+    pub fn key(&self, spec: &ExperimentSpec, opts: &RunOptions) -> String {
+        cell_key(spec, &opts.normalized())
+    }
+
+    /// Sorted snapshot of the index.
+    pub fn index_snapshot(&self) -> Vec<(String, IndexEntry)> {
+        self.index
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Staleness-checked lookup: returns the cell's output only when the
+    /// on-disk profile carries the exact fidelity/channel stamp of `opts`
+    /// (and, for trace-collecting options, its trace artifact parses).
+    /// Counts a hit or a miss.
+    pub fn lookup(&self, spec: &ExperimentSpec, opts: &RunOptions) -> Option<CellOutput> {
+        let run = opts.normalized();
+        match self.lookup_inner(spec, &run) {
+            Some(out) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(out)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn lookup_inner(&self, spec: &ExperimentSpec, run: &RunOptions) -> Option<CellOutput> {
+        let id = spec.id();
+        let path = profile_path(&self.root, &id);
+        if !disk_profile_matches(&path, run) {
+            return None;
+        }
+        let text = std::fs::read_to_string(&path).ok()?;
+        let profile = RunProfile::from_json(&Json::parse(&text).ok()?)?;
+        let trace = if run.channels.enabled(ChannelKind::Trace) {
+            let tpath = trace_path(&self.root, &id);
+            let ttext = std::fs::read_to_string(&tpath).ok()?;
+            Some(crate::trace::read_jsonl(&ttext)?)
+        } else {
+            None
+        };
+        // Adopt batch-written artifacts into the index as they are served.
+        self.index_record(cell_key(spec, run), id, trace.is_some());
+        Some(CellOutput { profile, trace })
+    }
+
+    /// Persist one cell's artifacts atomically and index them. The
+    /// profile must carry `opts`' stamp (anything produced by
+    /// [`crate::benchpark::runner::run_cell_full`] does) or later lookups
+    /// will treat it as stale.
+    pub fn put(&self, spec: &ExperimentSpec, opts: &RunOptions, out: &CellOutput) -> Result<()> {
+        let run = opts.normalized();
+        self.put_with_key(spec, &cell_key(spec, &run), out)
+    }
+
+    fn put_with_key(&self, spec: &ExperimentSpec, key: &str, out: &CellOutput) -> Result<()> {
+        let id = spec.id();
+        let path = profile_path(&self.root, &id);
+        write_atomic(&path, &out.profile.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        if let Some(trace) = &out.trace {
+            let tpath = trace_path(&self.root, &id);
+            write_atomic(&tpath, &crate::trace::write_jsonl(trace))
+                .with_context(|| format!("writing {}", tpath.display()))?;
+        }
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.index_record(key.to_string(), id, out.trace.is_some());
+        Ok(())
+    }
+
+    /// The single-flight entry point: serve `spec` from the store, or
+    /// elect this call the leader, run `compute`, persist, and return.
+    /// Concurrent calls for the same cell key compute exactly once —
+    /// followers block until the leader lands the artifact, then read it
+    /// back from disk. `force` skips the lookup (recompute + overwrite)
+    /// but still takes the single-flight lock.
+    pub fn get_or_compute<F>(
+        &self,
+        spec: &ExperimentSpec,
+        opts: &RunOptions,
+        force: bool,
+        compute: F,
+    ) -> Result<(CellOutput, StoreOutcome)>
+    where
+        F: FnOnce() -> Result<CellOutput>,
+    {
+        let run = opts.normalized();
+        let key = cell_key(spec, &run);
+        loop {
+            if !force {
+                if let Some(out) = self.lookup(spec, &run) {
+                    return Ok((out, StoreOutcome::Hit));
+                }
+            }
+            // Claim leadership for this key, or wait out the current
+            // leader and re-check the store.
+            let claimed = self.inflight.lock().insert(key.clone());
+            if claimed {
+                break;
+            }
+            let deadline = Deadline::after(SINGLE_FLIGHT_TIMEOUT);
+            let mut inflight = self.inflight.lock();
+            while inflight.contains(&key) {
+                if deadline.expired() {
+                    bail!("single-flight wait for cell `{}` timed out", key);
+                }
+                inflight = self.inflight.wait_timeout(inflight, &deadline);
+            }
+        }
+        let _flight = FlightGuard { store: self, key: &key };
+        let out = compute()?;
+        self.put_with_key(spec, &key, &out)?;
+        Ok((out, StoreOutcome::Miss))
+    }
+
+    fn index_record(&self, key: String, id: String, has_trace: bool) {
+        let entry = IndexEntry { id, has_trace };
+        let mut index = self.index.lock().unwrap();
+        if index.get(&key) == Some(&entry) {
+            return;
+        }
+        index.insert(key, entry);
+        // The index is a rebuildable cache over the stamped artifacts, so
+        // a failed persist is not worth failing a lookup/put over.
+        let _ = persist_index(&self.root.join(INDEX_FILE), &index);
+    }
+}
+
+fn load_index(path: &Path) -> BTreeMap<String, IndexEntry> {
+    let mut out = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return out;
+    };
+    let Ok(j) = Json::parse(&text) else {
+        return out;
+    };
+    if j.get("schema").and_then(Json::as_str) != Some(STORE_SCHEMA) {
+        return out;
+    }
+    let Some(cells) = j.get("cells").and_then(Json::as_obj) else {
+        return out;
+    };
+    for (key, v) in cells {
+        let Some(id) = v.get("id").and_then(Json::as_str) else {
+            continue;
+        };
+        let has_trace = matches!(v.get("trace"), Some(Json::Bool(true)));
+        out.insert(
+            key.clone(),
+            IndexEntry {
+                id: id.to_string(),
+                has_trace,
+            },
+        );
+    }
+    out
+}
+
+fn persist_index(path: &Path, index: &BTreeMap<String, IndexEntry>) -> std::io::Result<()> {
+    let mut cells = Json::obj();
+    for (key, entry) in index {
+        let mut cell = Json::obj();
+        cell.set("id", entry.id.as_str()).set("trace", entry.has_trace);
+        cells.set(key, cell);
+    }
+    let mut j = Json::obj();
+    j.set("schema", STORE_SCHEMA).set("cells", cells);
+    write_atomic(path, &(j.to_string_pretty() + "\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchpark::{AppKind, Scaling, SystemId};
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec {
+            app: AppKind::Kripke,
+            system: SystemId::Tioga,
+            scaling: Scaling::Weak,
+            nranks: 8,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("commscope_store_{}_{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn paths_match_the_batch_campaign_layout() {
+        let out = Path::new("results");
+        assert_eq!(
+            profile_path(out, "kripke_dane_64"),
+            Path::new("results/profiles/kripke_dane_64.json")
+        );
+        assert_eq!(
+            trace_path(out, "kripke_dane_64"),
+            Path::new("results/traces/kripke_dane_64.trace.jsonl")
+        );
+        assert_eq!(failures_path(out), Path::new("results/failures.csv"));
+        assert_eq!(inventory_path(out), Path::new("results/inventory.csv"));
+    }
+
+    #[test]
+    fn write_atomic_leaves_no_tmp_behind() {
+        let dir = tmp("atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.json");
+        write_atomic(&path, "{}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{}");
+        assert!(!dir.join("a.json.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn index_roundtrips_and_bad_index_is_ignored() {
+        let dir = tmp("index");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut index = BTreeMap::new();
+        index.insert(
+            "k1".to_string(),
+            IndexEntry {
+                id: "kripke_tioga_8".to_string(),
+                has_trace: true,
+            },
+        );
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(INDEX_FILE);
+        persist_index(&path, &index).unwrap();
+        assert_eq!(load_index(&path), index);
+        std::fs::write(&path, "not json").unwrap();
+        assert!(load_index(&path).is_empty());
+        std::fs::write(&path, "{\"schema\":\"STORE_v99\",\"cells\":{}}").unwrap();
+        assert!(load_index(&path).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_key_folds_in_fidelity_and_channels_not_engine() {
+        let dir = tmp("key");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ArtifactStore::open(&dir).unwrap();
+        let smoke = RunOptions::smoke();
+        let full = RunOptions::default();
+        assert_ne!(store.key(&spec(), &smoke), store.key(&spec(), &full));
+        let event = RunOptions {
+            engine: crate::mpisim::Engine::event(),
+            ..smoke
+        };
+        assert_eq!(store.key(&spec(), &smoke), store.key(&spec(), &event));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

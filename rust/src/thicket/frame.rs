@@ -14,6 +14,18 @@ pub struct Thicket {
     pub runs: Vec<RunProfile>,
 }
 
+/// The campaign cell id (`<app>_<system>_<ranks>`) a profile was written
+/// under — reassembled from the same stamped metadata the campaign
+/// writer stamped from the spec.
+pub fn cell_id(run: &RunProfile) -> String {
+    format!(
+        "{}_{}_{}",
+        run.meta.get("app").map(String::as_str).unwrap_or("?"),
+        run.meta.get("system").map(String::as_str).unwrap_or("?"),
+        run.meta.get("ranks").map(String::as_str).unwrap_or("?"),
+    )
+}
+
 impl Thicket {
     pub fn new(runs: Vec<RunProfile>) -> Thicket {
         Thicket { runs }
@@ -66,6 +78,13 @@ impl Thicket {
             }
         }
         Ok(Thicket { runs })
+    }
+
+    /// Find the run written under a campaign cell id
+    /// (`<app>_<system>_<ranks>`) — the join key [`crate::store::diff`]
+    /// aligns campaigns on.
+    pub fn find_cell(&self, id: &str) -> Option<&RunProfile> {
+        self.runs.iter().find(|r| cell_id(r) == id)
     }
 
     /// Select runs matching all (key, value) metadata filters.

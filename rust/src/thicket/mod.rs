@@ -12,4 +12,4 @@ pub mod export;
 pub mod frame;
 pub mod stats;
 
-pub use frame::Thicket;
+pub use frame::{cell_id, Thicket};

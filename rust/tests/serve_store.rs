@@ -1,0 +1,361 @@
+//! Contract of the service tier (PR: `repro serve` / `repro diff`):
+//!
+//! - the artifact store round-trips cells byte-identically to the batch
+//!   campaign layout, and its staleness rules reuse the same stamping;
+//! - concurrent submits of one cell compute exactly once (single-flight);
+//! - the daemon answers submit → progress → result over a real Unix
+//!   socket, with the second submit observably served from the store;
+//! - the diff engine reports an empty self-diff, flags significant
+//!   deltas across fidelities, and renders byte-stably across runs and
+//!   engines;
+//! - `repro diff` exits with the verdict code (0/3/4) so CI can gate.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use commscope::benchpark::runner::RunOptions;
+use commscope::benchpark::{run_cell_full, AppKind, ExperimentSpec, Scaling, SystemId};
+use commscope::coordinator::bench::{render_bench_file, BenchEntry};
+use commscope::coordinator::campaign::{run_campaign_report, selected_cells, CampaignOptions};
+use commscope::coordinator::cli::dispatch;
+use commscope::serve::protocol::{Client, Request};
+use commscope::serve::{serve, ServeOptions};
+use commscope::store::diff::{DiffVerdict, ProfileDiff};
+use commscope::store::{profile_path, ArtifactStore, StoreOutcome};
+use commscope::util::cli::Args;
+use commscope::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("{}_{}", name, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Fast full-fidelity-shaped options (same shrink factors as the other
+/// integration suites use to keep cells sub-second).
+fn fast() -> RunOptions {
+    RunOptions {
+        iter_shrink: 10,
+        size_shrink: 8,
+        ..Default::default()
+    }
+}
+
+fn amg8() -> ExperimentSpec {
+    ExperimentSpec {
+        app: AppKind::Amg2023,
+        system: SystemId::Tioga,
+        scaling: Scaling::Weak,
+        nranks: 8,
+    }
+}
+
+fn args(line: &str) -> Args {
+    Args::parse(line.split_whitespace().map(|s| s.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Store
+// ---------------------------------------------------------------------------
+
+#[test]
+fn store_artifacts_are_byte_identical_to_the_batch_campaign() {
+    let batch_dir = tmp("ss_batch");
+    let store_dir = tmp("ss_store");
+
+    // Batch side: the ≤8-rank matrix through `repro campaign`'s writer.
+    let mut opts = CampaignOptions::new(&batch_dir);
+    opts.run = fast();
+    opts.max_ranks = Some(8);
+    let (thicket, report) = run_campaign_report(&opts, false).unwrap();
+    assert!(report.failures.is_empty());
+    assert!(!thicket.is_empty());
+
+    // Store side: the same cells through the daemon's store.
+    let store = ArtifactStore::open(&store_dir).unwrap();
+    let run = fast();
+    for spec in selected_cells(&opts) {
+        let (_, outcome) = store
+            .get_or_compute(&spec, &run, false, || run_cell_full(&spec, &run))
+            .unwrap();
+        assert_eq!(outcome, StoreOutcome::Miss, "{}", spec.id());
+        let batch_bytes = std::fs::read(profile_path(&batch_dir, &spec.id())).unwrap();
+        let store_bytes = std::fs::read(profile_path(&store_dir, &spec.id())).unwrap();
+        assert_eq!(batch_bytes, store_bytes, "{} artifact diverged", spec.id());
+        // Second request: served from the store, not recomputed.
+        let (_, again) = store
+            .get_or_compute(&spec, &run, false, || panic!("must not recompute"))
+            .unwrap();
+        assert_eq!(again, StoreOutcome::Hit);
+    }
+    let stats = store.stats();
+    assert!(stats.hits >= 3 && stats.puts >= 3, "{:?}", stats);
+
+    let _ = std::fs::remove_dir_all(&batch_dir);
+    let _ = std::fs::remove_dir_all(&store_dir);
+}
+
+#[test]
+fn store_staleness_tracks_fidelity_and_channel_stamps() {
+    let dir = tmp("ss_stale");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let spec = amg8();
+    let run = fast();
+    let out = run_cell_full(&spec, &run).unwrap();
+    store.put(&spec, &run, &out).unwrap();
+
+    assert!(store.lookup(&spec, &run).is_some(), "same options must hit");
+    // Different fidelity: the stamped iter/size shrinks no longer match.
+    assert!(store.lookup(&spec, &RunOptions::smoke()).is_none());
+    // Different channel spec: stale even at the same fidelity.
+    let mut wider = run;
+    wider.channels =
+        commscope::caliper::ChannelConfig::parse("region-times,comm-stats,comm-matrix").unwrap();
+    assert!(store.lookup(&spec, &wider).is_none());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn single_flight_computes_a_contested_cell_exactly_once() {
+    let dir = tmp("ss_flight");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let spec = amg8();
+    let run = fast();
+    let computes = AtomicUsize::new(0);
+    let (hits, misses) = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(scope.spawn(|| {
+                let (_, outcome) = store
+                    .get_or_compute(&spec, &run, false, || {
+                        computes.fetch_add(1, Ordering::SeqCst);
+                        run_cell_full(&spec, &run)
+                    })
+                    .unwrap();
+                outcome
+            }));
+        }
+        let mut hits = 0;
+        let mut misses = 0;
+        for h in handles {
+            match h.join().unwrap() {
+                StoreOutcome::Hit => hits += 1,
+                StoreOutcome::Miss => misses += 1,
+            }
+        }
+        (hits, misses)
+    });
+    assert_eq!(computes.load(Ordering::SeqCst), 1, "leader computes once");
+    assert_eq!(misses, 1);
+    assert_eq!(hits, 3);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Daemon
+// ---------------------------------------------------------------------------
+
+#[test]
+fn daemon_serves_submits_over_a_unix_socket_with_observable_cache() {
+    let dir = tmp("ss_daemon");
+    let socket = dir.join("repro.sock");
+    let opts = ServeOptions {
+        socket: socket.clone(),
+        out_dir: dir.clone(),
+        jobs: 2,
+        run: fast(),
+        verbose: false,
+    };
+    let daemon = std::thread::spawn(move || serve(&opts).unwrap());
+    let mut client = Client::connect_retry(&socket, Duration::from_secs(30)).unwrap();
+
+    let submit = Request::Submit {
+        app: "amg2023".into(),
+        system: "tioga".into(),
+        ranks: 8,
+        force: false,
+    };
+    // First submit: accepted → progress → result, computed fresh.
+    let mut stages = Vec::new();
+    let result = client
+        .roundtrip(&submit, |ev| {
+            stages.push(
+                ev.get("event").and_then(Json::as_str).unwrap_or("?").to_string(),
+            );
+        })
+        .unwrap();
+    assert_eq!(result.get("event").and_then(Json::as_str), Some("result"));
+    assert_eq!(result.get("cell").and_then(Json::as_str), Some("amg2023_tioga_8"));
+    assert_eq!(result.get("cache").and_then(Json::as_str), Some("miss"));
+    assert!(stages.contains(&"accepted".to_string()), "{:?}", stages);
+    assert!(stages.contains(&"progress".to_string()), "{:?}", stages);
+    assert!(profile_path(&dir, "amg2023_tioga_8").is_file());
+
+    // Second submit: the observable store hit.
+    let result = client.roundtrip(&submit, |_| {}).unwrap();
+    assert_eq!(result.get("cache").and_then(Json::as_str), Some("hit"));
+
+    let status = client.roundtrip(&Request::Status, |_| {}).unwrap();
+    assert_eq!(status.get("submits").and_then(Json::as_u64), Some(2));
+    assert_eq!(status.get("served_hits").and_then(Json::as_u64), Some(1));
+    assert_eq!(status.get("computed").and_then(Json::as_u64), Some(1));
+
+    // The stored artifact comes back over the wire...
+    let profile = client
+        .roundtrip(&Request::Result { cell: "amg2023_tioga_8".into() }, |_| {})
+        .unwrap();
+    assert_eq!(profile.get("event").and_then(Json::as_str), Some("profile"));
+    assert!(profile.get("profile").is_some());
+    // ...and a bad cell id is an error event, not a dead connection.
+    let missing = client
+        .roundtrip(&Request::Result { cell: "nope_tioga_8".into() }, |_| {})
+        .unwrap();
+    assert_eq!(missing.get("event").and_then(Json::as_str), Some("error"));
+
+    // Self-diff through the daemon: no change, exit code 0.
+    let diff = client
+        .roundtrip(
+            &Request::Diff {
+                cell_a: "amg2023_tioga_8".into(),
+                cell_b: "amg2023_tioga_8".into(),
+            },
+            |_| {},
+        )
+        .unwrap();
+    assert_eq!(diff.get("verdict").and_then(Json::as_str), Some("no-change"));
+    assert_eq!(diff.get("exit_code").and_then(Json::as_u64), Some(0));
+
+    let bye = client.roundtrip(&Request::Shutdown, |_| {}).unwrap();
+    assert_eq!(bye.get("event").and_then(Json::as_str), Some("ok"));
+    let stats = daemon.join().unwrap();
+    assert_eq!(stats.submits, 2);
+    assert_eq!(stats.served_hits, 1);
+    assert_eq!(stats.computed, 1);
+    assert!(!socket.exists(), "socket file removed on shutdown");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Diff engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn self_diff_is_empty_and_fidelity_diff_is_significant() {
+    let spec = amg8();
+    let full = run_cell_full(&spec, &fast()).unwrap().profile;
+    let full_again = run_cell_full(&spec, &fast()).unwrap().profile;
+    let shrunk = run_cell_full(&spec, &RunOptions::smoke()).unwrap().profile;
+
+    // Determinism end to end: the self-diff is empty.
+    let same = ProfileDiff::compute(&full, &full_again, "a", "b");
+    assert_eq!(same.verdict(), DiffVerdict::NoChange);
+    assert_eq!(same.significant_count(), 0);
+    assert!(same.meta_changes.is_empty());
+
+    // Shrunk fidelity: stamped meta differs and real deltas are flagged.
+    let diff = ProfileDiff::compute(&full, &shrunk, "full", "smoke");
+    assert!(diff.meta_changes.iter().any(|(k, _, _)| k == "iter_shrink"));
+    assert!(diff.significant_count() > 0, "{}", diff.render_text());
+    assert_ne!(diff.verdict(), DiffVerdict::NoChange);
+    let report = diff.render_text();
+    assert!(report.contains("verdict:"), "{}", report);
+}
+
+#[test]
+fn diff_reports_are_byte_stable_across_runs_and_engines() {
+    let spec = amg8();
+    let threaded = fast();
+    let event = RunOptions {
+        engine: commscope::mpisim::Engine::event(),
+        ..fast()
+    };
+    let a = run_cell_full(&spec, &threaded).unwrap().profile;
+    let b = run_cell_full(&spec, &RunOptions::smoke()).unwrap().profile;
+    let a_event = run_cell_full(&spec, &event).unwrap().profile;
+
+    let text_1 = ProfileDiff::compute(&a, &b, "full", "smoke").render_text();
+    let text_2 = ProfileDiff::compute(&a, &b, "full", "smoke").render_text();
+    assert_eq!(text_1, text_2, "same inputs, same bytes");
+    // Engine equivalence carries through the diff: swapping the threaded
+    // profile for the event-engine one changes nothing.
+    let text_3 = ProfileDiff::compute(&a_event, &b, "full", "smoke").render_text();
+    assert_eq!(text_1, text_3, "engines must not leak into reports");
+    let csv_1 = ProfileDiff::compute(&a, &b, "full", "smoke").render_csv();
+    let csv_2 = ProfileDiff::compute(&a_event, &b, "full", "smoke").render_csv();
+    assert_eq!(csv_1, csv_2);
+    assert!(csv_1.starts_with("cell,region,channel,metric,"), "{}", csv_1);
+}
+
+// ---------------------------------------------------------------------------
+// CLI exit codes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repro_diff_exit_codes_follow_the_verdict_contract() {
+    let dir = tmp("ss_cli");
+    let spec = amg8();
+    let full = run_cell_full(&spec, &fast()).unwrap().profile;
+    let shrunk = run_cell_full(&spec, &RunOptions::smoke()).unwrap().profile;
+    let a = dir.join("a.json");
+    let b = dir.join("b.json");
+    std::fs::write(&a, full.to_json().to_string_pretty()).unwrap();
+    std::fs::write(&b, shrunk.to_json().to_string_pretty()).unwrap();
+
+    // Self-diff: exit 0.
+    assert_eq!(dispatch(&args(&format!("diff {} {}", a.display(), a.display()))), 0);
+    // Cross-fidelity: improved (3) or regressed (4), never silent.
+    let code = dispatch(&args(&format!("diff {} {}", a.display(), b.display())));
+    assert!(code == 3 || code == 4, "got {}", code);
+    // Campaign-directory form: a dir with profiles/ diffed against itself.
+    let camp = dir.join("camp");
+    std::fs::create_dir_all(camp.join("profiles")).unwrap();
+    std::fs::write(camp.join("profiles").join(format!("{}.json", spec.id())),
+        full.to_json().to_string_pretty()).unwrap();
+    assert_eq!(dispatch(&args(&format!("diff {} {}", camp.display(), camp.display()))), 0);
+    // Usage / IO errors stay on the generic failure code 1.
+    assert_eq!(dispatch(&args("diff")), 1);
+    assert_eq!(dispatch(&args("diff /nonexistent/x /nonexistent/y")), 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn repro_diff_bench_mode_gates_on_the_welch_verdict() {
+    let dir = tmp("ss_bench_diff");
+    let entry = |label: &str, mean: f64, m2: f64| BenchEntry {
+        label: label.to_string(),
+        smoke_cells_per_s_median: mean,
+        smoke_cells_per_s_p90: mean * 1.2,
+        smoke_cells: 6,
+        smoke_reps: 2,
+        events_per_s: 1e7,
+        ns_per_hook_dispatch: 25.0,
+        allocs_per_message: 4.0,
+        event_ranks_per_s: 900.0,
+        smoke_samples: 12,
+        smoke_cells_per_s_mean: mean,
+        smoke_cells_per_s_m2: m2,
+        gate_verdict: String::new(),
+    };
+    // A clear halving with tight variance: regressed, exit 4.
+    let path = dir.join("bench_regressed.json");
+    std::fs::write(&path, render_bench_file(&[entry("base", 10.0, 0.11), entry("pr", 5.0, 0.11)]))
+        .unwrap();
+    assert_eq!(dispatch(&args(&format!("diff --bench {}", path.display()))), 4);
+    // The same drop inside huge variance: statistically nothing, exit 0.
+    let path = dir.join("bench_noise.json");
+    std::fs::write(&path, render_bench_file(&[entry("base", 10.0, 1100.0), entry("pr", 8.0, 1100.0)]))
+        .unwrap();
+    assert_eq!(dispatch(&args(&format!("diff --bench {}", path.display()))), 0);
+    // One entry: nothing to compare, exit 0.
+    let path = dir.join("bench_single.json");
+    std::fs::write(&path, render_bench_file(&[entry("base", 10.0, 0.11)])).unwrap();
+    assert_eq!(dispatch(&args(&format!("diff --bench {}", path.display()))), 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,15 @@
+//! Fixture: artifact-determinism coverage for the store/serve subsystem.
+//! Under `src/store/` or `src/serve/` the hash-ordered containers below
+//! trip `hash-iter-artifact`; the raw channel line trips `raw-sync` and
+//! `unbounded-channel` everywhere.
+
+use std::collections::HashMap;
+
+pub struct Index {
+    entries: HashMap<String, u64>,
+}
+
+pub fn queue() {
+    let (tx, rx) = std::sync::mpsc::channel::<u64>();
+    let _ = (tx, rx);
+}

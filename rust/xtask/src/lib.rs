@@ -15,7 +15,7 @@
 //! | id | scope | bans |
 //! |----|-------|------|
 //! | `wall-clock` | `mpisim/`, `trace/`, `caliper/` | `Instant`, `SystemTime`, `thread::sleep` |
-//! | `hash-iter-artifact` | `caliper/`, `trace/`, `thicket/`, `coordinator/`, `benchpark/` | `HashMap`, `HashSet` |
+//! | `hash-iter-artifact` | `caliper/`, `trace/`, `thicket/`, `coordinator/`, `benchpark/`, `store/`, `serve/` | `HashMap`, `HashSet` |
 //! | `raw-sync` | all of `src/` except `util/sync.rs` | `std::sync::*`, `loom::*` |
 //! | `park-protocol` | `mpisim/` | `thread::sleep`, `yield_now`, `spin_loop` |
 //! | `unbounded-channel` | all of `src/` except `util/sync.rs` | `mpsc::channel` |
@@ -479,7 +479,7 @@ const TOKEN_RULES: [TokenRule; 5] = [
     },
     TokenRule {
         id: "hash-iter-artifact",
-        dirs: &["caliper", "trace", "thicket", "coordinator", "benchpark"],
+        dirs: &["caliper", "trace", "thicket", "coordinator", "benchpark", "store", "serve"],
         exempt_files: &[],
         tokens: &["HashMap", "HashSet"],
         message: "hash-ordered container on an artifact-producing path",

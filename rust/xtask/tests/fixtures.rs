@@ -146,6 +146,27 @@ fn halo_order_fixture_trips_after_scope_escape_until_wait_retires() {
 }
 
 #[test]
+fn store_serve_fixture_trips_the_new_coverage() {
+    // The service PR extended hash-iter-artifact to `store/` and `serve/`;
+    // the tree-wide sync rules must keep holding there too.
+    for path in ["src/store/index.rs", "src/serve/conn.rs"] {
+        let f = lint_source(path, include_str!("../fixtures/store_serve.rs"));
+        assert_eq!(count(&f, "hash-iter-artifact"), 2, "{path}: {f:#?}");
+        assert_eq!(count(&f, "raw-sync"), 1, "{path}: {f:#?}");
+        assert_eq!(count(&f, "unbounded-channel"), 1, "{path}: {f:#?}");
+    }
+    // Outside store/serve the artifact-order scope does not apply, but
+    // raw-sync and unbounded-channel are tree-wide.
+    let f = lint_source(
+        "src/runtime/queue.rs",
+        include_str!("../fixtures/store_serve.rs"),
+    );
+    assert_eq!(count(&f, "hash-iter-artifact"), 0, "{f:#?}");
+    assert_eq!(count(&f, "raw-sync"), 1, "{f:#?}");
+    assert_eq!(count(&f, "unbounded-channel"), 1, "{f:#?}");
+}
+
+#[test]
 fn masking_fixture_reports_one_finding_on_its_true_line() {
     // Raw strings (hashed + multi-line), a `\`-continued string, and
     // cfg(all/any(test)) items must all stay silent — and must not shift
@@ -202,6 +223,10 @@ fn every_rule_has_a_tripping_fixture() {
         lint_source(
             "src/apps/fixture/halo.rs",
             include_str!("../fixtures/halo_order.rs"),
+        ),
+        lint_source(
+            "src/store/index.rs",
+            include_str!("../fixtures/store_serve.rs"),
         ),
     ];
     for rule in xtask::RULES {
